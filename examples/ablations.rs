@@ -1,0 +1,131 @@
+//! Ablations of the design choices DESIGN.md calls out: how sensitive
+//! is the PG-SEP result to (1) the weight-prefetch window, (2) the
+//! sector granularity, (3) the multi-port penalty assumptions, and
+//! (4) the fixed-point value widths?
+//!
+//! Run: `cargo run --release --example ablations`
+
+use capstore::accel::systolic::{ArrayConfig, SystolicSim};
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::analysis::requirements::RequirementsAnalysis;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::memsim::cacti::Technology;
+use capstore::report::table::Table;
+use capstore::util::units::{fmt_bytes, fmt_energy_uj};
+
+fn pg_sep_energy(model: &EnergyModel, banks: u64, sectors: u64) -> (f64, f64) {
+    let arch = CapStoreArch::build(
+        Organization::Sep { gated: true },
+        &model.req,
+        &model.tech,
+        banks,
+        sectors,
+    )
+    .unwrap();
+    let e = model.evaluate_arch(&arch);
+    (e.onchip_pj, e.area_mm2)
+}
+
+fn main() {
+    let cfg = CapsNetConfig::mnist();
+
+    // ---- 1. weight-prefetch window (sizes streaming working sets) ------
+    let mut t = Table::new(
+        "ablation: DRAM prefetch window vs worst-case weight memory",
+        &["prefetch cycles", "weight worst case", "on-chip worst case"],
+    );
+    for pf in [512, 1024, 2048, 4096, 8192] {
+        let array = ArrayConfig { prefetch_cycles: pf, ..Default::default() };
+        let req = RequirementsAnalysis::analyze(&cfg, &array);
+        t.row(vec![
+            pf.to_string(),
+            fmt_bytes(req.max_components().weight),
+            fmt_bytes(req.max_total()),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // ---- 2. sector granularity -----------------------------------------
+    let model = EnergyModel::new(cfg.clone());
+    let mut t = Table::new(
+        "ablation: PG-SEP sector count (banks=16)",
+        &["sectors", "energy/inf", "area mm2"],
+    );
+    for s in [1, 4, 16, 64, 256, 1024] {
+        let (e, a) = pg_sep_energy(&model, 16, s);
+        t.row(vec![
+            s.to_string(),
+            fmt_energy_uj(e),
+            format!("{a:.3}"),
+        ]);
+    }
+    t.print();
+    println!("(finer sectors gate closer to the utilization curve but pay\n control-wire area; the knee is where the paper's Table 1 sits)\n");
+
+    // ---- 3. multi-port penalty assumptions -------------------------------
+    let mut t = Table::new(
+        "ablation: port penalty factors vs SMP/SEP gap",
+        &["port area factor", "port energy factor", "SEP / SMP energy"],
+    );
+    for (pa, pe) in [(0.45, 0.35), (0.6, 0.4), (0.8, 0.5), (1.0, 0.6)] {
+        let mut model = EnergyModel::new(cfg.clone());
+        model.tech = Technology {
+            port_area_factor: pa,
+            port_energy_factor: pe,
+            ..Technology::default()
+        };
+        let smp = CapStoreArch::build_default(
+            Organization::Smp { gated: false },
+            &model.req,
+            &model.tech,
+        )
+        .unwrap();
+        let sep = CapStoreArch::build_default(
+            Organization::Sep { gated: false },
+            &model.req,
+            &model.tech,
+        )
+        .unwrap();
+        let r = model.evaluate_arch(&sep).onchip_pj
+            / model.evaluate_arch(&smp).onchip_pj;
+        t.row(vec![
+            format!("{pa:.2}"),
+            format!("{pe:.2}"),
+            format!("{r:.3}"),
+        ]);
+    }
+    t.print();
+    println!("(SEP wins under every plausible penalty; the paper's 0.46\n ratio needs the stronger penalties — see EXPERIMENTS.md)\n");
+
+    // ---- 4. value widths --------------------------------------------------
+    let mut t = Table::new(
+        "ablation: fixed-point widths vs worst-case memory",
+        &["data B", "accum B", "on-chip worst case", "PG-SEP energy"],
+    );
+    for (db, ab) in [(1, 2), (1, 4), (2, 4), (4, 4)] {
+        let array = ArrayConfig {
+            data_bytes: db,
+            accum_bytes: ab,
+            ..Default::default()
+        };
+        let req = RequirementsAnalysis::analyze(&cfg, &array);
+        let mut model = EnergyModel::new(cfg.clone());
+        model.sim = SystolicSim::new(array);
+        model.req = req.clone();
+        let arch = CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &req,
+            &model.tech,
+        )
+        .unwrap();
+        t.row(vec![
+            db.to_string(),
+            ab.to_string(),
+            fmt_bytes(req.max_total()),
+            fmt_energy_uj(model.evaluate_arch(&arch).onchip_pj),
+        ]);
+    }
+    t.print();
+}

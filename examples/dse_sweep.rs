@@ -1,0 +1,82 @@
+//! Design-space exploration demo (§4.2 of the paper): sweep organization
+//! × banks × sectors, print the Pareto front and the sensitivity of the
+//! winner to each axis.
+//!
+//! Run: `cargo run --release --example dse_sweep`
+
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::Organization;
+use capstore::dse::{Explorer, SweepSpace};
+use capstore::report::table::Table;
+use capstore::util::units::{fmt_bytes, fmt_energy_uj};
+
+fn main() -> capstore::Result<()> {
+    let mut ex = Explorer::new(CapsNetConfig::mnist());
+    ex.space = SweepSpace {
+        banks: vec![4, 8, 16, 32],
+        sectors: vec![8, 16, 32, 64, 128, 256],
+        organizations: Organization::all().to_vec(),
+    };
+
+    let points = ex.sweep()?;
+    println!("explored {} design points", points.len());
+
+    let front = Explorer::pareto(&points);
+    let mut t = Table::new(
+        "Pareto front (energy vs area)",
+        &["org", "banks", "sectors", "energy/inf", "area mm2", "capacity"],
+    );
+    for p in &front {
+        t.row(vec![
+            p.organization.label().into(),
+            p.banks.to_string(),
+            p.sectors.to_string(),
+            fmt_energy_uj(p.onchip_energy_pj),
+            format!("{:.3}", p.area_mm2),
+            fmt_bytes(p.capacity_bytes),
+        ]);
+    }
+    t.print();
+
+    let best = Explorer::best_energy(&points).unwrap();
+    println!(
+        "\nwinner: {} banks={} sectors={} -> {}",
+        best.organization.label(),
+        best.banks,
+        best.sectors,
+        fmt_energy_uj(best.onchip_energy_pj)
+    );
+
+    // sensitivity: energy of the winning organization across sector counts
+    let mut t = Table::new(
+        "PG-SEP sector-count sensitivity (banks=16)",
+        &["sectors", "energy/inf", "area mm2"],
+    );
+    for p in &points {
+        if p.organization == best.organization && p.banks == 16 {
+            t.row(vec![
+                p.sectors.to_string(),
+                fmt_energy_uj(p.onchip_energy_pj),
+                format!("{:.3}", p.area_mm2),
+            ]);
+        }
+    }
+    t.print();
+
+    // and across bank counts at the winning sector count
+    let mut t = Table::new(
+        "PG-SEP bank-count sensitivity",
+        &["banks", "energy/inf", "area mm2"],
+    );
+    for p in &points {
+        if p.organization == best.organization && p.sectors == best.sectors {
+            t.row(vec![
+                p.banks.to_string(),
+                fmt_energy_uj(p.onchip_energy_pj),
+                format!("{:.3}", p.area_mm2),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

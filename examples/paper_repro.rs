@@ -1,0 +1,194 @@
+//! Full paper reproduction in one run: every table and figure of the
+//! evaluation, with measured-vs-paper deltas — the program behind
+//! EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example paper_repro`
+
+use capstore::accel::systolic::SystolicSim;
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::analysis::offchip::OffChipTraffic;
+use capstore::analysis::requirements::RequirementsAnalysis;
+use capstore::capsnet::{CapsNetConfig, OpKind, Operation, OP_SEQUENCE};
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::report::paper::PaperReference;
+use capstore::report::table::Table;
+use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
+
+fn main() -> capstore::Result<()> {
+    let cfg = CapsNetConfig::mnist();
+    let sim = SystolicSim::default();
+    let model = EnergyModel::new(cfg.clone());
+    let paper = PaperReference::new();
+
+    println!("################ CapStore reproduction ################\n");
+
+    // ---------- Fig 4 ----------
+    let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+    let cap = req.max_total();
+    let mut t = Table::new(
+        "Fig 4a/4c — requirements per op (bytes)",
+        &["op", "data", "weight", "accum", "total", "util%"],
+    );
+    for o in &req.per_op {
+        t.row(vec![
+            o.kind.label().into(),
+            o.req.data.to_string(),
+            o.req.weight.to_string(),
+            o.req.accum.to_string(),
+            o.req.total().to_string(),
+            format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
+        ]);
+    }
+    t.print();
+    println!("worst case {} (paper: PrimaryCaps sets it — ours too)\n", fmt_bytes(cap));
+
+    let mut t = Table::new(
+        "Fig 4b/4d/4e — cycles + accesses per op",
+        &["op", "cycles", "data R/W", "weight R/W", "accum R/W"],
+    );
+    for op in Operation::all_kinds(&cfg) {
+        let p = sim.profile(&op);
+        t.row(vec![
+            op.kind.label().into(),
+            fmt_si(p.cycles),
+            format!("{}/{}", fmt_si(p.data_reads), fmt_si(p.data_writes)),
+            format!("{}/{}", fmt_si(p.weight_reads), fmt_si(p.weight_writes)),
+            format!("{}/{}", fmt_si(p.accum_reads), fmt_si(p.accum_writes)),
+        ]);
+    }
+    t.print();
+    println!(
+        "off-chip per inference (Eq 1/2): {}\n",
+        fmt_bytes(OffChipTraffic::total_bytes(&cfg, &sim))
+    );
+
+    // ---------- Tables 1 + 2, Fig 10 ----------
+    let archs = CapStoreArch::all_default(&model.req, &model.tech)?;
+    let evals = model.evaluate_all()?;
+    let smp = evals.iter().find(|e| e.organization.label() == "SMP").unwrap();
+
+    let mut t = Table::new(
+        "Tables 1+2 — geometry, area, energy",
+        &["org", "capacity", "area mm2", "energy/inf", "vs SMP", "paper"],
+    );
+    for e in &evals {
+        t.row(vec![
+            e.organization.label().into(),
+            fmt_bytes(e.capacity_bytes),
+            format!("{:.3}", e.area_mm2),
+            fmt_energy_uj(e.onchip_pj),
+            format!("{:.3}", e.onchip_pj / smp.onchip_pj),
+            paper
+                .energy_vs_smp(e.organization.label())
+                .map(|r| format!("{r:.3}"))
+                .unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    println!();
+
+    let mut t = Table::new(
+        "Fig 10c — dynamic vs static",
+        &["org", "dynamic", "static", "wakeup"],
+    );
+    for e in &evals {
+        let d: f64 = e.per_macro.iter().map(|b| b.dynamic_pj).sum();
+        let s: f64 = e.per_macro.iter().map(|b| b.static_pj).sum();
+        let w: f64 = e.per_macro.iter().map(|b| b.wakeup_pj).sum();
+        t.row(vec![
+            e.organization.label().into(),
+            fmt_energy_uj(d),
+            fmt_energy_uj(s),
+            fmt_energy_uj(w),
+        ]);
+    }
+    t.print();
+    println!();
+
+    let mut t = Table::new(
+        "Fig 10d — energy per operation",
+        &["org", "C1", "PC", "CC-FC", "SS", "US"],
+    );
+    for e in &evals {
+        let f = |k: OpKind| -> String {
+            fmt_energy_uj(
+                e.per_op_pj.iter().filter(|(x, _)| *x == k).map(|(_, v)| v).sum(),
+            )
+        };
+        let mut row = vec![e.organization.label().to_string()];
+        row.extend(OP_SEQUENCE.iter().map(|k| f(*k)));
+        t.row(row);
+    }
+    t.print();
+
+    // ---------- Fig 5 + Fig 11 ----------
+    let a = model.all_onchip_baseline()?;
+    let b = model.system_energy(
+        &CapStoreArch::build_default(
+            Organization::Smp { gated: false },
+            &model.req,
+            &model.tech,
+        )?,
+    );
+    let c = model.system_energy(
+        &CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &model.req,
+            &model.tech,
+        )?,
+    );
+    println!("\n== Fig 5 + Fig 11 — whole systems ==");
+    for sys in [&a, &b, &c] {
+        println!(
+            "{:18} accel {:>10} onchip {:>10} offchip {:>10} total {:>10} (mem {:.1}%)",
+            sys.label,
+            fmt_energy_uj(sys.accel_pj),
+            fmt_energy_uj(sys.onchip_pj),
+            fmt_energy_uj(sys.offchip_pj),
+            fmt_energy_uj(sys.total_pj()),
+            100.0 * sys.memory_share(),
+        );
+    }
+
+    println!("\n== headline claims, measured vs paper ==");
+    for (name, measured, paper_v) in [
+        (
+            "memory share of total energy (a)",
+            a.memory_share(),
+            PaperReference::MEMORY_SHARE,
+        ),
+        (
+            "hierarchy saving (b vs a)",
+            1.0 - b.total_pj() / a.total_pj(),
+            PaperReference::HIERARCHY_SAVING,
+        ),
+        (
+            "PG-SEP on-chip saving vs (b)",
+            1.0 - c.onchip_pj / b.onchip_pj,
+            PaperReference::PG_SEP_ONCHIP_SAVING,
+        ),
+        (
+            "PG-SEP total saving vs (a)",
+            1.0 - c.total_pj() / a.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_A,
+        ),
+        (
+            "PG-SEP total saving vs (b)",
+            1.0 - c.total_pj() / b.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_B,
+        ),
+    ] {
+        println!("{}", PaperReference::delta_line(name, measured, paper_v));
+    }
+
+    let winner = evals
+        .iter()
+        .min_by(|x, y| x.onchip_pj.partial_cmp(&y.onchip_pj).unwrap())
+        .unwrap();
+    println!(
+        "\nselected organization: {} (paper selects PG-SEP) -> {}",
+        winner.organization.label(),
+        if winner.organization.label() == "PG-SEP" { "MATCH" } else { "MISMATCH" }
+    );
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT-compiled CapsuleNet, classify one synthetic
+//! digit through the PJRT runtime, and print the energy the selected
+//! CapStore memory would spend on that inference.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use std::path::PathBuf;
+
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::Organization;
+use capstore::coordinator::energy_account::EnergyAccountant;
+use capstore::runtime::engine::InferenceEngine;
+use capstore::testing::SplitMix64;
+use capstore::util::units::fmt_energy_uj;
+
+fn main() -> capstore::Result<()> {
+    let dir = PathBuf::from("artifacts");
+
+    // 1. bring up the engine (compiles the HLO artifacts once)
+    let engine = InferenceEngine::load(&dir, "small")?;
+    println!(
+        "engine up: platform={}, batch sizes {:?}",
+        engine.platform(),
+        engine.batch_sizes()
+    );
+
+    // 2. one synthetic digit through the real model
+    let mut rng = SplitMix64::new(7);
+    let image: Vec<f32> = (0..784).map(|_| rng.f64() as f32).collect();
+    let out = &engine.infer(&[image])?[0];
+    println!("class lengths: {:?}", out.lengths);
+    println!("predicted class: {}", out.predicted);
+
+    // 3. what would that inference cost on the paper's winning memory?
+    let mut acc = EnergyAccountant::new(
+        &CapsNetConfig::small(),
+        Organization::Sep { gated: true },
+    )?;
+    let pj = acc.charge(1);
+    println!(
+        "simulated energy per inference on PG-SEP: {} \
+         (on-chip {}, off-chip {}, accelerator {})",
+        fmt_energy_uj(pj),
+        fmt_energy_uj(acc.onchip_pj_per_inference),
+        fmt_energy_uj(acc.offchip_pj_per_inference),
+        fmt_energy_uj(acc.accel_pj_per_inference),
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT compile path: lower the JAX CapsuleNet to HLO *text* artifacts.
+
+This is the only place Python touches the pipeline; `make artifacts` runs
+it once and the Rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+
+  capsnet_<cfg>_b<B>.hlo.txt   whole-model forward, batch B
+  ops_<cfg>/<op>.hlo.txt       per-operation modules (conv1, primarycaps,
+                               classcaps_fc, routing) for the staged
+                               pipeline driver
+  weights_<cfg>.bin            CAPW container (weights.py)
+  train_log_small.json         loss curve of the build-time training demo
+  manifest.json                everything the Rust side needs to know
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, weights
+from .config import CapsNetConfig, by_name
+
+FULL_BATCHES = (1, 2, 4, 8)
+SMALL_BATCHES = (1, 4)
+OPS = ("conv1", "primarycaps", "classcaps_fc", "routing")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(cfg: CapsNetConfig, batch: int) -> str:
+    """Whole-model artifact: params + images -> class capsules."""
+    def fn(conv1_w, conv1_b, pc_w, pc_b, cc_w, xs):
+        params = model.params_dict((conv1_w, conv1_b, pc_w, pc_b, cc_w))
+        return (model.forward(cfg, params, xs),)
+
+    args = (
+        spec(cfg.conv1_w_shape), spec((cfg.conv1_channels,)),
+        spec(cfg.pc_w_shape), spec((cfg.pc_channels,)),
+        spec(cfg.cc_w_shape),
+        spec((batch, cfg.image_hw, cfg.image_hw, cfg.in_channels)),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_op(cfg: CapsNetConfig, op: str) -> str:
+    """Per-operation artifact (batch 1), staged-pipeline interface."""
+    hw1 = cfg.conv1_out_hw
+    if op == "conv1":
+        fn = lambda x, w, b: (model.op_conv1(cfg, x, w, b),)
+        args = (spec((cfg.image_hw, cfg.image_hw, cfg.in_channels)),
+                spec(cfg.conv1_w_shape), spec((cfg.conv1_channels,)))
+    elif op == "primarycaps":
+        fn = lambda h, w, b: (model.op_primarycaps(cfg, h, w, b),)
+        args = (spec((hw1, hw1, cfg.conv1_channels)),
+                spec(cfg.pc_w_shape), spec((cfg.pc_channels,)))
+    elif op == "classcaps_fc":
+        fn = lambda u, w: (model.op_classcaps_fc(cfg, u, w),)
+        args = (spec((cfg.num_primary_caps, cfg.caps_dim)),
+                spec(cfg.cc_w_shape))
+    elif op == "routing":
+        fn = lambda u_hat: (model.op_routing(cfg, u_hat),)
+        args = (spec((cfg.num_primary_caps, cfg.num_classes,
+                      cfg.class_dim)),)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build(out_dir: str, train_steps: int = 120, skip_full: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "param_order": list(model.PARAM_ORDER),
+        "configs": {},
+    }
+
+    jobs = [("small", by_name("small"), SMALL_BATCHES)]
+    if not skip_full:
+        jobs.append(("mnist", by_name("mnist"), FULL_BATCHES))
+
+    # Build-time training demo on the small config (loss curve -> json).
+    t0 = time.time()
+    small_cfg = by_name("small")
+    trained, log = weights.train_demo(small_cfg, steps=train_steps)
+    acc = weights.eval_accuracy(small_cfg, trained)
+    weights.save_train_log(os.path.join(out_dir, "train_log_small.json"),
+                           log, acc)
+    print(f"[aot] train demo: {train_steps} steps, "
+          f"loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f}, "
+          f"acc {acc:.2f} ({time.time() - t0:.1f}s)")
+
+    for name, cfg, batches in jobs:
+        entry = {
+            "config": json.loads(cfg.to_json()),
+            "batches": list(batches),
+            "ops": {},
+            "model": {},
+            "geometry": {
+                "conv1_out_hw": cfg.conv1_out_hw,
+                "pc_out_hw": cfg.pc_out_hw,
+                "num_primary_caps": cfg.num_primary_caps,
+                "num_params": cfg.num_params,
+            },
+        }
+        params = trained if name == "small" else model.init_params(cfg)
+        wpath = f"weights_{name}.bin"
+        weights.save_weights(os.path.join(out_dir, wpath), params)
+        entry["weights"] = wpath
+
+        for b in batches:
+            t0 = time.time()
+            text = lower_model(cfg, b)
+            fname = f"capsnet_{name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["model"][str(b)] = fname
+            print(f"[aot] {fname}: {len(text) / 1e6:.2f} MB "
+                  f"({time.time() - t0:.1f}s)")
+
+        opdir = os.path.join(out_dir, f"ops_{name}")
+        os.makedirs(opdir, exist_ok=True)
+        for op in OPS:
+            t0 = time.time()
+            text = lower_op(cfg, op)
+            rel = f"ops_{name}/{op}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(text)
+            entry["ops"][op] = rel
+            print(f"[aot] {rel}: {len(text) / 1e6:.2f} MB "
+                  f"({time.time() - t0:.1f}s)")
+
+        manifest["configs"][name] = entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest.json written to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=120)
+    ap.add_argument("--skip-full", action="store_true",
+                    help="only build the small config (fast CI)")
+    args = ap.parse_args()
+    build(args.out_dir, train_steps=args.train_steps,
+          skip_full=args.skip_full)
+
+
+if __name__ == "__main__":
+    main()

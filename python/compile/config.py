@@ -1,0 +1,96 @@
+"""CapsuleNet configuration shared by the model, AOT and tests.
+
+`mnist()` is the exact architecture the CapStore paper analyzes
+(Sabour et al. 2017).  `small()` is a reduced variant used to keep
+pytest and the build-time training demo fast — same operation structure,
+smaller channel counts, so every code path is exercised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsNetConfig:
+    name: str = "mnist"
+    image_hw: int = 28
+    in_channels: int = 1
+    conv1_kernel: int = 9
+    conv1_channels: int = 256
+    pc_kernel: int = 9
+    pc_stride: int = 2
+    pc_channels: int = 256       # = pc_caps_types * caps_dim
+    caps_dim: int = 8            # primary capsule dimensionality
+    num_classes: int = 10
+    class_dim: int = 16          # class capsule dimensionality
+    routing_iters: int = 3
+
+    # ----- derived geometry -------------------------------------------------
+    @property
+    def conv1_out_hw(self) -> int:
+        return self.image_hw - self.conv1_kernel + 1
+
+    @property
+    def pc_out_hw(self) -> int:
+        return (self.conv1_out_hw - self.pc_kernel) // self.pc_stride + 1
+
+    @property
+    def pc_caps_types(self) -> int:
+        return self.pc_channels // self.caps_dim
+
+    @property
+    def num_primary_caps(self) -> int:
+        """Total primary capsules I (1152 for MNIST)."""
+        return self.pc_out_hw * self.pc_out_hw * self.pc_caps_types
+
+    # ----- parameter shapes -------------------------------------------------
+    @property
+    def conv1_w_shape(self):
+        return (self.conv1_kernel, self.conv1_kernel,
+                self.in_channels, self.conv1_channels)
+
+    @property
+    def pc_w_shape(self):
+        return (self.pc_kernel, self.pc_kernel,
+                self.conv1_channels, self.pc_channels)
+
+    @property
+    def cc_w_shape(self):
+        return (self.num_primary_caps, self.num_classes,
+                self.caps_dim, self.class_dim)
+
+    @property
+    def num_params(self) -> int:
+        import math
+        return (math.prod(self.conv1_w_shape) + self.conv1_channels
+                + math.prod(self.pc_w_shape) + self.pc_channels
+                + math.prod(self.cc_w_shape))
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+def mnist() -> CapsNetConfig:
+    """The paper's workload: MNIST CapsuleNet, 6.8M parameters."""
+    return CapsNetConfig()
+
+
+def small() -> CapsNetConfig:
+    """Reduced network for fast tests / the training demo (same ops)."""
+    return CapsNetConfig(
+        name="small",
+        conv1_channels=32,
+        pc_channels=32,
+        caps_dim=8,
+        class_dim=16,
+    )
+
+
+def by_name(name: str) -> CapsNetConfig:
+    if name == "mnist":
+        return mnist()
+    if name == "small":
+        return small()
+    raise ValueError(f"unknown config {name!r}")

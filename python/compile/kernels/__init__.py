@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) for the CapsuleNet inference hot-spots.
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis pin
+the numerics at build time.  All kernels run with interpret=True (CPU
+image); see DESIGN.md §2 for the TPU hardware-adaptation notes.
+"""
+
+from . import caps_matmul, conv2d, gemm, ref, routing, squash  # noqa: F401

@@ -1,0 +1,71 @@
+"""Pallas kernel for the ClassCaps prediction vectors (CC-FC operation).
+
+u_hat[i, j, :] = u[i, :] @ W[i, j, :, :]
+
+with u[I, D] (I=1152 primary capsules, D=8) and W[I, J, D, E]
+(J=10 classes, E=16).  This is the third operation of the paper's Fig 4
+and the one with the largest *weight* traffic (1.47 M weights, no reuse
+across i), which is why the paper's SEP organization gives the weight
+memory its own single-port SRAM.
+
+Grid layout: (I/TILE_I, J).  Per step the kernel holds a block of TILE_I
+capsules' inputs and their weights for one class j in VMEM and contracts
+the D axis.  VMEM footprint at TILE_I=128, f32:
+  W  128*16*8*4  = 64 KiB
+  u  128*8*4     =  4 KiB
+  out 128*16*4   =  8 KiB        (DESIGN.md §8)
+The per-capsule contraction (8 -> 16) would underfill an MXU on its own;
+batching TILE_I capsules into one einsum keeps the occupancy at 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_I = 128
+
+
+def _caps_matmul_kernel(u_ref, w_ref, o_ref):
+    """o[t, e] = sum_d u[t, d] * w[t, d, e] for one (i-block, class) step."""
+    w = w_ref[...][:, 0]  # [ti, d, e] — squeeze the 1-wide class block
+    out = jnp.einsum(
+        "td,tde->te", u_ref[...], w,
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+    o_ref[...] = out[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_i",))
+def caps_matmul(u: jax.Array, w: jax.Array, tile_i: int = TILE_I) -> jax.Array:
+    """u[I,D], w[I,J,D,E] -> u_hat[I,J,E] via the Pallas kernel.
+
+    I is padded up to a multiple of tile_i (zero capsules produce zero
+    predictions and are sliced off).
+    """
+    i_caps, d = u.shape
+    i2, j_caps, d2, e = w.shape
+    assert i_caps == i2 and d == d2, f"shape mismatch: {u.shape} vs {w.shape}"
+    ti = min(tile_i, i_caps)
+    pad = (-i_caps) % ti
+    if pad:
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    ip = i_caps + pad
+    grid = (ip // ti, j_caps)
+
+    out = pl.pallas_call(
+        _caps_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((ti, 1, d, e), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ti, 1, e), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((ip, j_caps, e), u.dtype),
+        interpret=True,
+    )(u, w)
+    return out[:i_caps]

@@ -1,0 +1,46 @@
+"""Conv layers as the accelerator computes them: im2col + tiled Pallas GEMM.
+
+CapsAcc maps Conv1 and PrimaryCaps onto the 16x16 systolic array by
+streaming im2col patches as GEMM rows (weight-stationary).  We mirror that
+exactly: patch extraction is a gather (the data-buffer address generator),
+and the contraction runs through kernels.gemm — so the HLO the Rust
+runtime executes has the same block structure the memory simulator models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import gemm as gemm_mod
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """x[H,W,C] -> patches [OH*OW, kh*kw*C] (row = one output pixel)."""
+    h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    rows = (jnp.arange(oh) * stride)[:, None] + jnp.arange(kh)[None, :]  # [oh,kh]
+    cols = (jnp.arange(ow) * stride)[:, None] + jnp.arange(kw)[None, :]  # [ow,kw]
+    patches = x[rows[:, None, :, None], cols[None, :, None, :], :]
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, stride: int) -> jax.Array:
+    """x[H,W,Cin], w[kh,kw,Cin,Cout], b[Cout] -> [OH,OW,Cout]."""
+    kh, kw, cin, cout = w.shape
+    h, wd, _ = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    cols = im2col(x, kh, kw, stride)
+    wm = w.reshape(kh * kw * cin, cout)
+    out = gemm_mod.gemm_bias(cols, wm, b)
+    return out.reshape(oh, ow, cout)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    """Conv1's activation (computed by CapsAcc's activation unit)."""
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,101 @@
+"""Tiled GEMM Pallas kernel — the 16x16-systolic-array primitive.
+
+CapsAcc computes every CapsuleNet operation as weight-stationary GEMM
+tiles on a 16x16 PE array.  This kernel expresses the *same* HBM<->VMEM
+schedule with Pallas BlockSpecs: the grid walks (M/bm, N/bn, K/bk) and a
+VMEM scratch accumulator plays the role of the accelerator's accumulator
+SRAM.  Tile sizes are multiples of the 16-wide PE array so the Rust
+access-trace generator (rust/src/accel) and this kernel describe the same
+traffic.
+
+Hardware adaptation (see DESIGN.md §2): the paper's ASIC tiles map to
+BlockSpec blocks; the PE-array MAC maps to jnp.dot (MXU-shaped); the
+accumulator SRAM maps to VMEM scratch.  interpret=True on this CPU image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes: multiples of the 16x16 PE array of CapsAcc.
+# 64/128 keep the VMEM footprint small (see DESIGN.md §8) while giving the
+# MXU a saturated contraction dimension.
+TILE_M = 64
+TILE_N = 64
+TILE_K = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (m, n, k) grid step: acc += A[m,k] @ B[k,n]; flush at last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a: jax.Array, b: jax.Array,
+         bm: int = TILE_M, bn: int = TILE_N, bk: int = TILE_K) -> jax.Array:
+    """a[M,K] @ b[K,N] -> [M,N] via the tiled Pallas kernel.
+
+    Arbitrary M/N/K are handled by zero-padding up to the tile grid and
+    slicing the result back — zero rows/cols contribute nothing to the
+    accumulation, matching what CapsAcc's control unit does with partial
+    edge tiles.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = min(bm, _ceil_mult(m, 16))
+    bn = min(bn, _ceil_mult(n, 16))
+    bk = min(bk, _ceil_mult(k, 16))
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def gemm_bias(a: jax.Array, b: jax.Array, bias: jax.Array, **kw) -> jax.Array:
+    """GEMM + broadcast bias add (the accumulator's final pass)."""
+    return gemm(a, b, **kw) + bias[None, :]

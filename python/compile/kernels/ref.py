@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+Each function here is the *semantic definition* of the corresponding Pallas
+kernel; pytest asserts allclose between the two on randomized shapes
+(hypothesis).  The Rust side never sees this module — it exists only to
+pin down correctness at build time.
+
+Shapes follow the MNIST CapsuleNet of Sabour et al. (2017), which is the
+workload the CapStore paper analyzes:
+
+  conv1        : 28x28x1  --9x9 s1-->  20x20x256   (ReLU)
+  primarycaps  : 20x20x256 --9x9 s2--> 6x6x256 = 1152 capsules x 8-D (squash)
+  classcaps FC : u[1152,8] x W[1152,10,8,16] -> u_hat[1152,10,16]
+  routing      : 3 iterations of (softmax, weighted sum, squash, agreement)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-7
+
+
+# ---------------------------------------------------------------------------
+# GEMM — the systolic-array primitive everything else maps onto
+# ---------------------------------------------------------------------------
+
+def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul: a[M,K] @ b[K,N] -> [M,N] in f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Convolution (as the accelerator computes it: im2col + GEMM)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Extract patches: x[H,W,C] -> [out_h*out_w, kh*kw*C].
+
+    Mirrors the data-buffer layout CapsAcc streams into the 16x16 array —
+    each output pixel becomes one GEMM row.
+    """
+    h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    ih = jnp.arange(oh) * stride             # [oh]
+    iw = jnp.arange(ow) * stride             # [ow]
+    rows = ih[:, None] + jnp.arange(kh)[None, :]      # [oh, kh]
+    cols = iw[:, None] + jnp.arange(kw)[None, :]      # [ow, kw]
+    # patches[oh, ow, kh, kw, c]
+    patches = x[rows[:, None, :, None], cols[None, :, None, :], :]
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, stride: int) -> jax.Array:
+    """x[H,W,Cin], w[kh,kw,Cin,Cout], b[Cout] -> [OH,OW,Cout]."""
+    kh, kw, cin, cout = w.shape
+    h, wdim, _ = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (wdim - kw) // stride + 1
+    cols = im2col(x, kh, kw, stride)                # [oh*ow, kh*kw*cin]
+    wm = w.reshape(kh * kw * cin, cout)             # [K, Cout]
+    out = gemm(cols, wm) + b[None, :]
+    return out.reshape(oh, ow, cout)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Capsule primitives
+# ---------------------------------------------------------------------------
+
+def squash(s: jax.Array, axis: int = -1) -> jax.Array:
+    """v = (|s|^2 / (1+|s|^2)) * s/|s|, the capsule non-linearity."""
+    sq = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    return (sq / (1.0 + sq)) * s / jnp.sqrt(sq + EPS)
+
+
+def caps_matmul(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Prediction vectors u_hat[i,j,:] = u[i,:] @ W[i,j,:,:].
+
+    u[I,D_in], w[I,J,D_in,D_out] -> [I,J,D_out].  This is the CC-FC
+    operation of the paper (third operation of Fig 4).
+    """
+    return jnp.einsum("id,ijde->ije", u, w)
+
+
+def routing_softmax(b: jax.Array) -> jax.Array:
+    """c[i,:] = softmax over classes j of the routing logits b[I,J]."""
+    m = jnp.max(b, axis=1, keepdims=True)
+    e = jnp.exp(b - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def weighted_sum(c: jax.Array, u_hat: jax.Array) -> jax.Array:
+    """s[j,:] = sum_i c[i,j] * u_hat[i,j,:]  (the Sum of Sum+Squash)."""
+    return jnp.einsum("ij,ije->je", c, u_hat)
+
+
+def agreement(u_hat: jax.Array, v: jax.Array) -> jax.Array:
+    """a[i,j] = u_hat[i,j,:] . v[j,:]  (the Update of Update+Sum)."""
+    return jnp.einsum("ije,je->ij", u_hat, v)
+
+
+def routing(u_hat: jax.Array, iters: int = 3) -> jax.Array:
+    """Dynamic routing-by-agreement (Sabour et al., Procedure 1).
+
+    u_hat[I,J,E] -> v[J,E].  This is the feedback loop the paper
+    highlights in Fig 2: Sum+Squash then Update+Sum, `iters` times.
+    """
+    i_caps, j_caps, _ = u_hat.shape
+    b = jnp.zeros((i_caps, j_caps), dtype=u_hat.dtype)
+    v = None
+    for it in range(iters):
+        c = routing_softmax(b)
+        s = weighted_sum(c, u_hat)
+        v = squash(s)
+        if it != iters - 1:
+            b = b + agreement(u_hat, v)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Full-network reference forward (single image)
+# ---------------------------------------------------------------------------
+
+def capsnet_forward(params: dict, x: jax.Array, caps_dim: int = 8,
+                    routing_iters: int = 3) -> jax.Array:
+    """x[28,28,1] -> class capsule vectors v[J,E]; lengths are the logits."""
+    h = relu(conv2d(x, params["conv1_w"], params["conv1_b"], stride=1))
+    pc = conv2d(h, params["pc_w"], params["pc_b"], stride=2)
+    oh, ow, cc = pc.shape
+    u = squash(pc.reshape(oh * ow * (cc // caps_dim), caps_dim))
+    u_hat = caps_matmul(u, params["cc_w"])
+    return routing(u_hat, iters=routing_iters)
+
+
+def class_lengths(v: jax.Array) -> jax.Array:
+    """||v_j|| per class — the classification output."""
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=-1) + EPS)
+
+
+def margin_loss(v: jax.Array, label_onehot: jax.Array,
+                m_pos: float = 0.9, m_neg: float = 0.1,
+                lam: float = 0.5) -> jax.Array:
+    """Margin loss of Sabour et al. for a single image."""
+    lengths = class_lengths(v)
+    pos = label_onehot * jnp.square(jnp.maximum(0.0, m_pos - lengths))
+    neg = (1.0 - label_onehot) * jnp.square(jnp.maximum(0.0, lengths - m_neg))
+    return jnp.sum(pos + lam * neg)

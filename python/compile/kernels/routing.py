@@ -1,0 +1,145 @@
+"""Pallas kernels for the routing-by-agreement inner operations.
+
+The paper splits each routing iteration into the two operations it
+profiles in Fig 4:
+
+  Sum+Squash  : s[j,:] = sum_i c[i,j] * u_hat[i,j,:] ;  v = squash(s)
+  Update+Sum  : b[i,j] += u_hat[i,j,:] . v[j,:] ;       c = softmax_j(b)
+
+Both contract the 1152-long primary-capsule axis, so the kernels grid
+over i-blocks and accumulate in a VMEM scratch — exactly the role the
+accumulator SRAM plays in CapsAcc (this is the feedback loop of Fig 2
+that prevents full pipelining).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import squash as squash_mod
+
+TILE_I = 128
+EPS = 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Sum (weighted) — s[j,e] = sum_i c[i,j] u_hat[i,j,e]
+# ---------------------------------------------------------------------------
+
+def _weighted_sum_kernel(c_ref, u_ref, o_ref, acc_ref, *, i_steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.einsum(
+        "ij,ije->je", c_ref[...], u_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == i_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_i",))
+def weighted_sum(c: jax.Array, u_hat: jax.Array,
+                 tile_i: int = TILE_I) -> jax.Array:
+    """c[I,J], u_hat[I,J,E] -> s[J,E]."""
+    i_caps, j_caps = c.shape
+    i2, j2, e = u_hat.shape
+    assert (i_caps, j_caps) == (i2, j2)
+    ti = min(tile_i, i_caps)
+    pad = (-i_caps) % ti
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        u_hat = jnp.pad(u_hat, ((0, pad), (0, 0), (0, 0)))
+    steps = (i_caps + pad) // ti
+    return pl.pallas_call(
+        functools.partial(_weighted_sum_kernel, i_steps=steps),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((ti, j_caps), lambda i: (i, 0)),
+            pl.BlockSpec((ti, j_caps, e), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((j_caps, e), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((j_caps, e), u_hat.dtype),
+        scratch_shapes=[pltpu.VMEM((j_caps, e), jnp.float32)],
+        interpret=True,
+    )(c, u_hat)
+
+
+# ---------------------------------------------------------------------------
+# Agreement — a[i,j] = u_hat[i,j,:] . v[j,:]
+# ---------------------------------------------------------------------------
+
+def _agreement_kernel(u_ref, v_ref, o_ref):
+    o_ref[...] = jnp.einsum(
+        "ije,je->ij", u_ref[...], v_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_i",))
+def agreement(u_hat: jax.Array, v: jax.Array,
+              tile_i: int = TILE_I) -> jax.Array:
+    """u_hat[I,J,E], v[J,E] -> a[I,J]."""
+    i_caps, j_caps, e = u_hat.shape
+    ti = min(tile_i, i_caps)
+    pad = (-i_caps) % ti
+    if pad:
+        u_hat = jnp.pad(u_hat, ((0, pad), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _agreement_kernel,
+        grid=((i_caps + pad) // ti,),
+        in_specs=[
+            pl.BlockSpec((ti, j_caps, e), lambda i: (i, 0, 0)),
+            pl.BlockSpec((j_caps, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ti, j_caps), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_caps + pad, j_caps), u_hat.dtype),
+        interpret=True,
+    )(u_hat, v)
+    return out[:i_caps]
+
+
+# ---------------------------------------------------------------------------
+# Whole routing loop (matches ref.routing)
+# ---------------------------------------------------------------------------
+
+def routing_softmax(b: jax.Array) -> jax.Array:
+    """Softmax over the class axis of the routing logits (plain jnp —
+    [I,10] is far below the tiling threshold; XLA fuses it)."""
+    m = jnp.max(b, axis=1, keepdims=True)
+    e = jnp.exp(b - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def sum_squash(c: jax.Array, u_hat: jax.Array) -> jax.Array:
+    """The paper's Sum+Squash operation: one fused step."""
+    s = weighted_sum(c, u_hat)
+    return squash_mod.squash(s)
+
+
+def update_sum(b: jax.Array, u_hat: jax.Array, v: jax.Array) -> tuple:
+    """The paper's Update+Sum operation: logits update + new couplings."""
+    b = b + agreement(u_hat, v)
+    return b, routing_softmax(b)
+
+
+def routing(u_hat: jax.Array, iters: int = 3) -> jax.Array:
+    """Dynamic routing via the Pallas kernels; semantics == ref.routing."""
+    i_caps, j_caps, _ = u_hat.shape
+    b = jnp.zeros((i_caps, j_caps), dtype=u_hat.dtype)
+    c = routing_softmax(b)
+    v = sum_squash(c, u_hat)
+    for _ in range(iters - 1):
+        b, c = update_sum(b, u_hat, v)
+        v = sum_squash(c, u_hat)
+    return v

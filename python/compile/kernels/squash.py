@@ -1,0 +1,45 @@
+"""Pallas kernel for the squash non-linearity.
+
+v = (|s|^2 / (1 + |s|^2)) * s / |s|
+
+applied per capsule vector (last axis).  CapsAcc computes this in the
+activation unit right after the accumulator drains; here it is a
+grid-over-capsule-blocks elementwise kernel whose VMEM block is one tile
+of capsule vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-7
+TILE = 256
+
+
+def _squash_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    sq = jnp.sum(jnp.square(s), axis=-1, keepdims=True)
+    o_ref[...] = ((sq / (1.0 + sq)) * s / jnp.sqrt(sq + EPS)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def squash(s: jax.Array, tile: int = TILE) -> jax.Array:
+    """s[N, D] -> squashed [N, D] (vector norm shrunk below 1)."""
+    n, d = s.shape
+    t = min(tile, n)
+    pad = (-n) % t
+    if pad:
+        s = jnp.pad(s, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _squash_kernel,
+        grid=((n + pad) // t,),
+        in_specs=[pl.BlockSpec((t, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, d), s.dtype),
+        interpret=True,
+    )(s)
+    return out[:n]

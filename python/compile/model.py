@@ -1,0 +1,129 @@
+"""L2: the CapsuleNet inference graph in JAX, calling the L1 Pallas kernels.
+
+The five operations match the paper's Fig 4 profile exactly:
+
+  C1          conv2d(9x9, s1) + ReLU          -> kernels.conv2d / gemm
+  PC          conv2d(9x9, s2) + squash        -> kernels.conv2d / squash
+  CC-FC       u_hat = W . u                   -> kernels.caps_matmul
+  Sum+Squash  s = sum_i c*u_hat; v = squash   -> kernels.routing (x iters)
+  Update+Sum  b += u_hat.v; c = softmax       -> kernels.routing (x iters-1)
+
+`forward` is the whole-model function that aot.py lowers to HLO; the
+`op_*` functions are lowered separately so the Rust coordinator can drive
+the per-operation pipeline (and the memory simulator can attribute
+energy per operation on real executions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import CapsNetConfig
+from .kernels import caps_matmul as cm
+from .kernels import conv2d as cv
+from .kernels import routing as rt
+from .kernels import squash as sq
+
+PARAM_ORDER = ("conv1_w", "conv1_b", "pc_w", "pc_b", "cc_w")
+
+
+def init_params(cfg: CapsNetConfig, seed: int = 0) -> dict:
+    """Deterministic Glorot-ish init (fan-in scaled)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+
+    def glorot(key, shape, fan_in):
+        return (jax.random.normal(key, shape, dtype=jnp.float32)
+                / jnp.sqrt(jnp.float32(fan_in)))
+
+    k2 = cfg.conv1_kernel * cfg.conv1_kernel
+    return {
+        "conv1_w": glorot(keys[0], cfg.conv1_w_shape, k2 * cfg.in_channels),
+        "conv1_b": jnp.zeros((cfg.conv1_channels,), jnp.float32),
+        "pc_w": glorot(keys[1], cfg.pc_w_shape,
+                       cfg.pc_kernel * cfg.pc_kernel * cfg.conv1_channels),
+        "pc_b": jnp.zeros((cfg.pc_channels,), jnp.float32),
+        "cc_w": glorot(keys[2], cfg.cc_w_shape, cfg.caps_dim),
+    }
+
+
+def params_tuple(params: dict) -> tuple:
+    return tuple(params[k] for k in PARAM_ORDER)
+
+
+def params_dict(flat: tuple) -> dict:
+    return dict(zip(PARAM_ORDER, flat))
+
+
+# ---------------------------------------------------------------------------
+# Per-operation functions (each is AOT-lowered on its own)
+# ---------------------------------------------------------------------------
+
+def op_conv1(cfg: CapsNetConfig, x: jax.Array, w: jax.Array,
+             b: jax.Array) -> jax.Array:
+    """C1: x[28,28,1] -> relu(conv) [20,20,256]."""
+    return cv.relu(cv.conv2d(x, w, b, stride=1))
+
+
+def op_primarycaps(cfg: CapsNetConfig, h: jax.Array, w: jax.Array,
+                   b: jax.Array) -> jax.Array:
+    """PC: [20,20,256] -> squashed primary capsules u[1152, 8]."""
+    pc = cv.conv2d(h, w, b, stride=cfg.pc_stride)
+    u = pc.reshape(cfg.num_primary_caps, cfg.caps_dim)
+    return sq.squash(u)
+
+
+def op_classcaps_fc(cfg: CapsNetConfig, u: jax.Array,
+                    w: jax.Array) -> jax.Array:
+    """CC-FC: prediction vectors u_hat[1152, 10, 16]."""
+    return cm.caps_matmul(u, w)
+
+
+def op_routing(cfg: CapsNetConfig, u_hat: jax.Array) -> jax.Array:
+    """Sum+Squash / Update+Sum loop -> class capsules v[10, 16]."""
+    return rt.routing(u_hat, iters=cfg.routing_iters)
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+def forward_single(cfg: CapsNetConfig, params: dict, x: jax.Array) -> jax.Array:
+    """x[H,W,1] -> v[10,16] through the five operations."""
+    h = op_conv1(cfg, x, params["conv1_w"], params["conv1_b"])
+    u = op_primarycaps(cfg, h, params["pc_w"], params["pc_b"])
+    u_hat = op_classcaps_fc(cfg, u, params["cc_w"])
+    return op_routing(cfg, u_hat)
+
+
+def forward(cfg: CapsNetConfig, params: dict, xs: jax.Array) -> jax.Array:
+    """Batched forward: xs[B,H,W,1] -> v[B,10,16].
+
+    The batch is unrolled (B is static at lowering time — one artifact per
+    batch size, mirroring one CapsAcc pass per image).  XLA CSEs the
+    shared weight loads across the unrolled images.
+    """
+    return jnp.stack([forward_single(cfg, params, xs[i])
+                      for i in range(xs.shape[0])])
+
+
+def forward_ref(cfg: CapsNetConfig, params: dict, xs: jax.Array) -> jax.Array:
+    """Batched forward through the pure-jnp oracle (differentiable; the
+    Pallas kernels define no VJP, so training uses this path — pytest
+    pins forward == forward_ref)."""
+    from .kernels import ref
+    return jax.vmap(lambda x: ref.capsnet_forward(
+        params, x, caps_dim=cfg.caps_dim,
+        routing_iters=cfg.routing_iters))(xs)
+
+
+def lengths(v: jax.Array) -> jax.Array:
+    """Class scores ||v_j|| (batched or not)."""
+    return jnp.sqrt(jnp.sum(jnp.square(v), axis=-1) + 1e-7)
+
+
+def predict(cfg: CapsNetConfig, params: dict, xs: jax.Array) -> jax.Array:
+    """Batched forward returning (lengths, argmax)."""
+    v = forward(cfg, params, xs)
+    el = lengths(v)
+    return el, jnp.argmax(el, axis=-1)

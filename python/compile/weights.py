@@ -1,0 +1,154 @@
+"""Weight production + serialization for the Rust runtime.
+
+Two jobs:
+
+1. `train_demo` — a short synthetic-digit training run of the *small*
+   CapsNet (margin loss, SGD+momentum) that logs a loss curve.  This is
+   the end-to-end training validation recorded in EXPERIMENTS.md: it
+   proves L1 kernels + L2 graph differentiate and learn.  The full-size
+   MNIST network's weights stay at the seeded init — the CapStore memory
+   analysis is shape-driven, not value-driven (DESIGN.md §3).
+
+2. `save_weights` — dump params to `artifacts/*.bin` in a tiny custom
+   container (CAPW format) the Rust loader parses:
+
+     magic  b"CAPW"            u32  version (1)
+     u32    tensor count
+     per tensor:
+       u32  name length, name bytes (utf-8)
+       u32  ndim, u64 x ndim dims
+       u8   dtype (0 = f32 little-endian)
+       raw  data
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .config import CapsNetConfig
+from .kernels import ref
+
+MAGIC = b"CAPW"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+# ---------------------------------------------------------------------------
+# CAPW container
+# ---------------------------------------------------------------------------
+
+def save_weights(path: str, params: dict) -> None:
+    """Serialize params (name -> f32 array) in PARAM_ORDER."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", VERSION))
+        f.write(struct.pack("<I", len(model.PARAM_ORDER)))
+        for name in model.PARAM_ORDER:
+            arr = np.asarray(params[name], dtype="<f4")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<B", DTYPE_F32))
+            f.write(arr.tobytes())
+
+
+def load_weights(path: str) -> dict:
+    """Inverse of save_weights (used by round-trip tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (ver,) = struct.unpack("<I", f.read(4))
+        assert ver == VERSION
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            (dt,) = struct.unpack("<B", f.read(1))
+            assert dt == DTYPE_F32
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = jnp.asarray(data)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic digit workload (no MNIST download in this image)
+# ---------------------------------------------------------------------------
+
+def synthetic_digits(key: jax.Array, n: int, hw: int = 28,
+                     classes: int = 10) -> tuple:
+    """Procedural 'digits': each class is a fixed band+blob template with
+    additive noise.  Linearly separable enough to show a real loss curve,
+    shaped exactly like MNIST so it exercises the true code path."""
+    kt, kn, kl = jax.random.split(key, 3)
+    labels = jax.random.randint(kl, (n,), 0, classes)
+    templates = jax.random.uniform(kt, (classes, hw, hw, 1)) * 0.5
+    # give each class a distinct bright stripe
+    rows = (jnp.arange(classes) * hw // classes)[:, None]
+    stripe = (jnp.abs(jnp.arange(hw)[None, :] - rows) < 2).astype(jnp.float32)
+    templates = templates + stripe[:, :, None, None] * 0.8
+    noise = jax.random.normal(kn, (n, hw, hw, 1)) * 0.15
+    xs = jnp.clip(templates[labels] + noise, 0.0, 1.0)
+    return xs, labels
+
+
+def batch_margin_loss(cfg: CapsNetConfig, params: dict, xs: jax.Array,
+                      labels: jax.Array) -> jax.Array:
+    # forward_ref: differentiable pure-jnp path (Pallas kernels define no
+    # VJP); pytest pins forward == forward_ref so the trained weights are
+    # valid for the Pallas/AOT serving path.
+    vs = model.forward_ref(cfg, params, xs)
+    onehot = jax.nn.one_hot(labels, cfg.num_classes, dtype=jnp.float32)
+    return jnp.mean(jax.vmap(ref.margin_loss)(vs, onehot))
+
+
+def train_demo(cfg: CapsNetConfig, steps: int = 120, batch: int = 8,
+               lr: float = 0.05, momentum: float = 0.9,
+               seed: int = 0, log_every: int = 10) -> tuple:
+    """Short SGD run on synthetic digits; returns (params, log)."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(cfg, seed=seed)
+    vel = jax.tree.map(jnp.zeros_like, params)
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, xs, ys: batch_margin_loss(cfg, p, xs, ys)))
+
+    @jax.jit
+    def sgd(p, v, g):
+        v = jax.tree.map(lambda vi, gi: momentum * vi - lr * gi, v, g)
+        p = jax.tree.map(lambda pi, vi: pi + vi, p, v)
+        return p, v
+
+    log = []
+    for step in range(steps):
+        key, kb = jax.random.split(key)
+        xs, ys = synthetic_digits(kb, batch, hw=cfg.image_hw,
+                                  classes=cfg.num_classes)
+        loss, grads = loss_grad(params, xs, ys)
+        params, vel = sgd(params, vel, grads)
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+    return params, log
+
+
+def eval_accuracy(cfg: CapsNetConfig, params: dict, n: int = 64,
+                  seed: int = 123) -> float:
+    xs, ys = synthetic_digits(jax.random.PRNGKey(seed), n, hw=cfg.image_hw,
+                              classes=cfg.num_classes)
+    _, pred = model.predict(cfg, params, xs)
+    return float(jnp.mean((pred == ys).astype(jnp.float32)))
+
+
+def save_train_log(path: str, log: list, accuracy: float) -> None:
+    with open(path, "w") as f:
+        json.dump({"loss_curve": log, "eval_accuracy": accuracy}, f, indent=2)

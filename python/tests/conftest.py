@@ -1,0 +1,20 @@
+"""Shared pytest fixtures + hypothesis profile for the kernel suite."""
+
+import jax
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Kernel calls in interpret mode are slow-ish; keep example counts modest
+# and disable deadlines (first call pays JIT compilation).
+settings.register_profile(
+    "kernels",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

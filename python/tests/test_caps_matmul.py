@@ -1,0 +1,72 @@
+"""CC-FC prediction-vector kernel vs oracle + algebraic properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import caps_matmul, ref
+
+
+@given(
+    i=st.integers(1, 300),
+    j=st.integers(1, 12),
+    d=st.sampled_from([4, 8]),
+    e=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_caps_matmul_matches_ref(i, j, d, e, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k0, (i, d))
+    w = jax.random.normal(k1, (i, j, d, e))
+    np.testing.assert_allclose(
+        caps_matmul.caps_matmul(u, w), ref.caps_matmul(u, w),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_caps_matmul_mnist_shape():
+    """The exact CC-FC shape of the paper: 1152x10x8x16."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(1))
+    u = jax.random.normal(k0, (1152, 8))
+    w = jax.random.normal(k1, (1152, 10, 8, 16))
+    out = caps_matmul.caps_matmul(u, w)
+    assert out.shape == (1152, 10, 16)
+    np.testing.assert_allclose(out, ref.caps_matmul(u, w), rtol=2e-5, atol=2e-5)
+
+
+def test_caps_matmul_linearity():
+    """u_hat is linear in u: f(a*u) == a*f(u)."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(2))
+    u = jax.random.normal(k0, (64, 8))
+    w = jax.random.normal(k1, (64, 10, 8, 16))
+    np.testing.assert_allclose(
+        caps_matmul.caps_matmul(2.5 * u, w),
+        2.5 * caps_matmul.caps_matmul(u, w),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_caps_matmul_per_capsule_independence():
+    """Zeroing capsule i zeroes exactly row i of the predictions."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(3))
+    u = jax.random.normal(k0, (40, 8))
+    w = jax.random.normal(k1, (40, 5, 8, 16))
+    u0 = u.at[7].set(0.0)
+    out = caps_matmul.caps_matmul(u0, w)
+    np.testing.assert_allclose(out[7], jnp.zeros((5, 16)), atol=1e-7)
+    np.testing.assert_allclose(
+        jnp.delete(out, 7, axis=0),
+        jnp.delete(caps_matmul.caps_matmul(u, w), 7, axis=0),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_caps_matmul_small_tile():
+    k0, k1 = jax.random.split(jax.random.PRNGKey(4))
+    u = jax.random.normal(k0, (10, 8))
+    w = jax.random.normal(k1, (10, 3, 8, 16))
+    np.testing.assert_allclose(
+        caps_matmul.caps_matmul(u, w, tile_i=4), ref.caps_matmul(u, w),
+        rtol=2e-5, atol=2e-5,
+    )

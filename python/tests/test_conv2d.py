@@ -1,0 +1,79 @@
+"""im2col + Pallas-GEMM convolution vs the oracle AND vs lax.conv."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import conv2d, ref
+
+
+def _lax_conv(x, w, b, stride):
+    """Independent second oracle: XLA's native convolution."""
+    out = jax.lax.conv_general_dilated(
+        x[None], w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return out + b[None, None, :]
+
+
+@given(
+    hw=st.integers(9, 24),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([4, 16]),
+    kk=st.sampled_from([3, 5, 9]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_both_oracles(hw, cin, cout, kk, stride, seed):
+    if hw < kk:
+        return
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k0, (hw, hw, cin))
+    w = jax.random.normal(k1, (kk, kk, cin, cout)) * 0.2
+    b = jax.random.normal(k2, (cout,))
+    got = conv2d.conv2d(x, w, b, stride=stride)
+    np.testing.assert_allclose(got, ref.conv2d(x, w, b, stride=stride),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(got, _lax_conv(x, w, b, stride),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_conv1_geometry():
+    """C1: 28x28x1 -> 20x20xC with a 9x9 stride-1 kernel."""
+    x = jnp.zeros((28, 28, 1))
+    w = jnp.zeros((9, 9, 1, 32))
+    b = jnp.zeros((32,))
+    assert conv2d.conv2d(x, w, b, stride=1).shape == (20, 20, 32)
+
+
+def test_primarycaps_geometry():
+    """PC: 20x20xC -> 6x6xC' with a 9x9 stride-2 kernel."""
+    x = jnp.zeros((20, 20, 16))
+    w = jnp.zeros((9, 9, 16, 32))
+    b = jnp.zeros((32,))
+    assert conv2d.conv2d(x, w, b, stride=2).shape == (6, 6, 32)
+
+
+def test_im2col_identity_kernel():
+    """1x1 patches at stride 1 are just the flattened image."""
+    x = jnp.arange(5 * 5 * 3, dtype=jnp.float32).reshape(5, 5, 3)
+    cols = conv2d.im2col(x, 1, 1, 1)
+    np.testing.assert_allclose(cols, x.reshape(25, 3))
+
+
+def test_im2col_stride_skips_pixels():
+    x = jnp.arange(6 * 6, dtype=jnp.float32).reshape(6, 6, 1)
+    cols = conv2d.im2col(x, 2, 2, 2)
+    assert cols.shape == (9, 4)
+    # first patch is rows 0-1, cols 0-1
+    np.testing.assert_allclose(cols[0], jnp.asarray([0.0, 1.0, 6.0, 7.0]))
+    # second patch starts at column 2
+    np.testing.assert_allclose(cols[1], jnp.asarray([2.0, 3.0, 8.0, 9.0]))
+
+
+def test_relu():
+    x = jnp.asarray([-1.0, 0.0, 2.0])
+    np.testing.assert_allclose(conv2d.relu(x), [0.0, 0.0, 2.0])

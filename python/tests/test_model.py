@@ -1,0 +1,99 @@
+"""Whole-model L2 graph: pallas path == jnp reference path, geometry,
+and end-to-end classification plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import by_name, mnist, small
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = small()
+    params = model.init_params(cfg, seed=0)
+    xs = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    return cfg, params, xs
+
+
+def test_config_geometry_mnist():
+    cfg = mnist()
+    assert cfg.conv1_out_hw == 20
+    assert cfg.pc_out_hw == 6
+    assert cfg.num_primary_caps == 1152
+    assert cfg.cc_w_shape == (1152, 10, 8, 16)
+    # 20992 + 5308672 + 1474560 = 6804224 params
+    assert cfg.num_params == 6_804_224
+
+
+def test_config_by_name_roundtrip():
+    assert by_name("mnist") == mnist()
+    assert by_name("small") == small()
+    with pytest.raises(ValueError):
+        by_name("nope")
+
+
+def test_forward_shapes(small_setup):
+    cfg, params, xs = small_setup
+    v = model.forward(cfg, params, xs)
+    assert v.shape == (2, cfg.num_classes, cfg.class_dim)
+
+
+def test_forward_equals_reference(small_setup):
+    """THE correctness gate: the Pallas-kernel graph that gets AOT-lowered
+    must equal the differentiable pure-jnp oracle."""
+    cfg, params, xs = small_setup
+    np.testing.assert_allclose(
+        model.forward(cfg, params, xs),
+        model.forward_ref(cfg, params, xs),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_forward_single_matches_batched(small_setup):
+    cfg, params, xs = small_setup
+    v0 = model.forward_single(cfg, params, xs[0])
+    vb = model.forward(cfg, params, xs)
+    np.testing.assert_allclose(v0, vb[0], rtol=1e-5, atol=1e-5)
+
+
+def test_predict_outputs(small_setup):
+    cfg, params, xs = small_setup
+    lengths, pred = model.predict(cfg, params, xs)
+    assert lengths.shape == (2, cfg.num_classes)
+    assert pred.shape == (2,)
+    assert bool(jnp.all(lengths > 0)) and bool(jnp.all(lengths < 1.0))
+    np.testing.assert_array_equal(pred, jnp.argmax(lengths, axis=-1))
+
+
+def test_params_tuple_roundtrip(small_setup):
+    cfg, params, _ = small_setup
+    flat = model.params_tuple(params)
+    assert len(flat) == len(model.PARAM_ORDER)
+    back = model.params_dict(flat)
+    for k in model.PARAM_ORDER:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_init_params_deterministic():
+    cfg = small()
+    a = model.init_params(cfg, seed=42)
+    b = model.init_params(cfg, seed=42)
+    c = model.init_params(cfg, seed=43)
+    np.testing.assert_array_equal(a["cc_w"], b["cc_w"])
+    assert not np.allclose(a["cc_w"], c["cc_w"])
+
+
+def test_op_pipeline_equals_forward(small_setup):
+    """Running the four per-op functions in sequence (the staged pipeline
+    the Rust coordinator drives) equals the fused whole-model forward."""
+    cfg, params, xs = small_setup
+    h = model.op_conv1(cfg, xs[0], params["conv1_w"], params["conv1_b"])
+    u = model.op_primarycaps(cfg, h, params["pc_w"], params["pc_b"])
+    u_hat = model.op_classcaps_fc(cfg, u, params["cc_w"])
+    v = model.op_routing(cfg, u_hat)
+    np.testing.assert_allclose(
+        v, model.forward_single(cfg, params, xs[0]), rtol=1e-5, atol=1e-5
+    )

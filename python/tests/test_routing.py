@@ -1,0 +1,118 @@
+"""Routing-by-agreement kernels vs oracle + routing invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, routing
+
+
+@given(
+    i=st.integers(1, 200),
+    j=st.integers(2, 12),
+    e=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_weighted_sum_matches_ref(i, j, e, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    c = jax.random.uniform(k0, (i, j))
+    u_hat = jax.random.normal(k1, (i, j, e))
+    np.testing.assert_allclose(
+        routing.weighted_sum(c, u_hat), ref.weighted_sum(c, u_hat),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@given(
+    i=st.integers(1, 200),
+    j=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_agreement_matches_ref(i, j, seed):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    u_hat = jax.random.normal(k0, (i, j, 16))
+    v = jax.random.normal(k1, (j, 16))
+    np.testing.assert_allclose(
+        routing.agreement(u_hat, v), ref.agreement(u_hat, v),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+@given(
+    iters=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routing_matches_ref(iters, seed):
+    u_hat = jax.random.normal(jax.random.PRNGKey(seed), (96, 10, 16))
+    np.testing.assert_allclose(
+        routing.routing(u_hat, iters=iters), ref.routing(u_hat, iters=iters),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_routing_mnist_shape():
+    u_hat = jax.random.normal(jax.random.PRNGKey(5), (1152, 10, 16))
+    v = routing.routing(u_hat, iters=3)
+    assert v.shape == (10, 16)
+    np.testing.assert_allclose(v, ref.routing(u_hat, iters=3),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_softmax_rows_sum_to_one():
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 10)) * 5.0
+    c = routing.routing_softmax(b)
+    np.testing.assert_allclose(jnp.sum(c, axis=1), jnp.ones(64), rtol=1e-5)
+    assert bool(jnp.all(c >= 0))
+
+
+def test_first_iteration_uniform_coupling():
+    """With b=0 the first couplings are uniform 1/J (Procedure 1, line 2)."""
+    b = jnp.zeros((32, 10))
+    c = routing.routing_softmax(b)
+    np.testing.assert_allclose(c, jnp.full((32, 10), 0.1), rtol=1e-6)
+
+
+def test_routing_output_norm_below_one():
+    u_hat = jax.random.normal(jax.random.PRNGKey(2), (128, 10, 16)) * 4.0
+    v = routing.routing(u_hat, iters=3)
+    assert bool(jnp.all(jnp.linalg.norm(v, axis=-1) < 1.0 + 1e-5))
+
+
+def test_routing_concentrates_on_agreeing_cluster():
+    """If most capsules agree on one direction for class 0, iterating
+    routing must sharpen v_0 towards that direction (the algorithm's
+    whole point)."""
+    key = jax.random.PRNGKey(3)
+    target = jnp.ones((16,)) / 4.0
+    u_hat = jax.random.normal(key, (100, 4, 16)) * 0.05
+    u_hat = u_hat.at[:80, 0, :].add(target)
+    v1 = routing.routing(u_hat, iters=1)
+    v3 = routing.routing(u_hat, iters=3)
+    cos1 = jnp.dot(v1[0], target) / (jnp.linalg.norm(v1[0]) * jnp.linalg.norm(target))
+    cos3 = jnp.dot(v3[0], target) / (jnp.linalg.norm(v3[0]) * jnp.linalg.norm(target))
+    assert float(jnp.linalg.norm(v3[0])) > float(jnp.linalg.norm(v1[0])) * 0.99
+    assert float(cos3) > 0.95 and float(cos1) > 0.9
+
+
+def test_sum_squash_equals_refs_composition():
+    k0, k1 = jax.random.split(jax.random.PRNGKey(4))
+    c = jax.random.uniform(k0, (64, 10))
+    u_hat = jax.random.normal(k1, (64, 10, 16))
+    np.testing.assert_allclose(
+        routing.sum_squash(c, u_hat),
+        ref.squash(ref.weighted_sum(c, u_hat)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_update_sum_equals_refs_composition():
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(6), 3)
+    b = jax.random.normal(k0, (64, 10))
+    u_hat = jax.random.normal(k1, (64, 10, 16))
+    v = jax.random.normal(k2, (10, 16))
+    b2, c2 = routing.update_sum(b, u_hat, v)
+    np.testing.assert_allclose(b2, b + ref.agreement(u_hat, v),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(c2, ref.routing_softmax(np.asarray(b2)),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,72 @@
+"""Squash kernel vs oracle + the properties the routing loop relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, squash
+
+
+@given(
+    n=st.integers(1, 400),
+    d=st.sampled_from([4, 8, 16]),
+    scale=st.floats(0.01, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_squash_matches_ref(n, d, scale, seed):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+    np.testing.assert_allclose(
+        squash.squash(s), ref.squash(s), rtol=2e-5, atol=2e-5
+    )
+
+
+@given(
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_squash_norm_below_one(n, seed):
+    """|squash(s)| < 1 for all inputs — the capsule 'probability' bound."""
+    s = jax.random.normal(jax.random.PRNGKey(seed), (n, 8)) * 10.0
+    v = squash.squash(s)
+    norms = jnp.linalg.norm(v, axis=-1)
+    assert bool(jnp.all(norms < 1.0 + 1e-5))
+
+
+def test_squash_preserves_direction():
+    s = jax.random.normal(jax.random.PRNGKey(0), (50, 16))
+    v = squash.squash(s)
+    cos = jnp.sum(s * v, axis=-1) / (
+        jnp.linalg.norm(s, axis=-1) * jnp.linalg.norm(v, axis=-1)
+    )
+    np.testing.assert_allclose(cos, jnp.ones_like(cos), rtol=1e-4)
+
+
+def test_squash_monotone_in_norm():
+    """Longer inputs squash to longer outputs (same direction)."""
+    direction = jnp.ones((1, 8)) / jnp.sqrt(8.0)
+    scales = jnp.asarray([0.1, 0.5, 1.0, 2.0, 10.0])[:, None]
+    v = squash.squash(direction * scales)
+    norms = jnp.linalg.norm(v, axis=-1)
+    assert bool(jnp.all(jnp.diff(norms) > 0))
+
+
+def test_squash_small_vector_quadratic():
+    """For |s| << 1, squash(s) ~ |s| * s — vanishes quadratically."""
+    s = jnp.full((1, 8), 1e-4)
+    v = squash.squash(s)
+    assert float(jnp.linalg.norm(v)) < 1e-6
+
+
+def test_squash_zero_is_safe():
+    """No NaN at exactly zero (the EPS guard)."""
+    v = squash.squash(jnp.zeros((3, 8)))
+    assert not bool(jnp.any(jnp.isnan(v)))
+    np.testing.assert_allclose(v, jnp.zeros((3, 8)), atol=1e-7)
+
+
+def test_squash_odd_n_padding():
+    s = jax.random.normal(jax.random.PRNGKey(9), (257, 8))
+    np.testing.assert_allclose(
+        squash.squash(s, tile=64), ref.squash(s), rtol=2e-5, atol=2e-5
+    )

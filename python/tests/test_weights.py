@@ -1,0 +1,71 @@
+"""CAPW weight container round-trip, synthetic workload, training demo."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, weights
+from compile.config import small
+
+
+def test_capw_roundtrip(tmp_path):
+    cfg = small()
+    params = model.init_params(cfg, seed=3)
+    path = os.path.join(tmp_path, "w.bin")
+    weights.save_weights(path, params)
+    back = weights.load_weights(path)
+    assert set(back) == set(model.PARAM_ORDER)
+    for k in model.PARAM_ORDER:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_capw_header_layout(tmp_path):
+    """The Rust loader depends on this exact byte layout."""
+    cfg = small()
+    params = model.init_params(cfg)
+    path = os.path.join(tmp_path, "w.bin")
+    weights.save_weights(path, params)
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"CAPW"
+    assert int.from_bytes(raw[4:8], "little") == 1       # version
+    assert int.from_bytes(raw[8:12], "little") == 5      # tensor count
+    # first tensor record: name length + name
+    nlen = int.from_bytes(raw[12:16], "little")
+    assert raw[16:16 + nlen].decode() == model.PARAM_ORDER[0]
+
+
+def test_synthetic_digits_shapes_and_range():
+    xs, ys = weights.synthetic_digits(jax.random.PRNGKey(0), 16)
+    assert xs.shape == (16, 28, 28, 1)
+    assert ys.shape == (16,)
+    assert bool(jnp.all((xs >= 0) & (xs <= 1)))
+    assert bool(jnp.all((ys >= 0) & (ys < 10)))
+
+
+def test_synthetic_digits_class_separability():
+    """Different classes must have distinct templates (stripe position)."""
+    xs, ys = weights.synthetic_digits(jax.random.PRNGKey(1), 200)
+    xs0 = xs[ys == 0].mean(axis=0)
+    xs5 = xs[ys == 5].mean(axis=0)
+    assert float(jnp.abs(xs0 - xs5).max()) > 0.3
+
+
+def test_train_demo_reduces_loss():
+    """A short run must actually learn (loss down vs the first step)."""
+    cfg = small()
+    _, log = weights.train_demo(cfg, steps=30, batch=8, lr=0.02, log_every=5)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    assert last < first, f"loss did not decrease: {first} -> {last}"
+
+
+def test_margin_loss_prefers_correct_class():
+    cfg = small()
+    v = jnp.zeros((cfg.num_classes, cfg.class_dim))
+    v = v.at[3].set(jnp.ones(cfg.class_dim) * 0.25)  # |v_3| = 1.0-ish
+    onehot_right = jax.nn.one_hot(3, cfg.num_classes)
+    onehot_wrong = jax.nn.one_hot(4, cfg.num_classes)
+    from compile.kernels import ref
+    assert float(ref.margin_loss(v, onehot_right)) < float(
+        ref.margin_loss(v, onehot_wrong))

@@ -1,0 +1,80 @@
+//! Bench: end-to-end serving — batched synthetic-digit inference through
+//! the PJRT runtime with the PG-SEP energy accountant attached.  Reports
+//! latency/throughput (real) and µJ/inference (simulated memory model).
+//!
+//! This is the "ours" row of the experiment index: the paper has no
+//! serving experiment, but the reproduction must prove all three layers
+//! compose on a real workload.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use capstore::capstore::arch::Organization;
+use capstore::coordinator::batcher::BatchPolicy;
+use capstore::coordinator::server::{InferenceServer, ServerConfig};
+use capstore::testing::SplitMix64;
+use capstore::util::units::fmt_energy_uj;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_serving SKIPPED (run `make artifacts` first)");
+        return;
+    }
+
+    // small config keeps the bench tight; the mnist config runs the same
+    // path (see examples/serve_inference.rs for the full-size run)
+    for (model, requests, clients) in [("small", 64usize, 4usize), ("mnist", 16, 2)]
+    {
+        let server = InferenceServer::start(
+            dir.clone(),
+            model.into(),
+            ServerConfig {
+                queue_depth: 64,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                },
+                organization: Organization::Sep { gated: true },
+            },
+        )
+        .expect("server start");
+
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = server.handle();
+            let n = requests / clients;
+            joins.push(std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(42 + c as u64);
+                for _ in 0..n {
+                    let img: Vec<f32> =
+                        (0..784).map(|_| rng.f64() as f32).collect();
+                    h.infer(img).expect("infer");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+
+        let lat = m.latency.summary().expect("latencies recorded");
+        println!(
+            "[bench] e2e[{model}]: {} reqs in {wall:.2}s -> {:.1} inf/s; \
+             latency median {:.2} ms p95 {:.2} ms; occupancy {:.2}; \
+             sim energy {} total, {:.2} µJ/inf (PG-SEP)",
+            m.requests,
+            m.requests as f64 / wall,
+            lat.median,
+            lat.p95,
+            m.mean_occupancy(),
+            fmt_energy_uj(m.sim_energy_pj),
+            m.energy_uj_per_inference(),
+        );
+        assert_eq!(m.requests as usize, (requests / clients) * clients);
+        assert!(m.energy_uj_per_inference() > 0.0);
+    }
+    println!("e2e_serving OK");
+}

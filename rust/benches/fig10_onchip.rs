@@ -1,0 +1,131 @@
+//! Bench: regenerate the paper's Fig 10 (a-d) — area breakdown per
+//! memory component, energy breakdown per component, dynamic-vs-static
+//! split, and energy per CapsuleNet operation, for all six CapStore
+//! organizations.
+//!
+//! Shape checks (§5.1):
+//!   * SMP→SEP cuts dynamic energy; SEP→PG-SEP cuts static energy
+//!   * wakeup energy is negligible
+//!   * PC consumes the largest memory energy of any operation
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::bench;
+use capstore::capsnet::{CapsNetConfig, OpKind, OP_SEQUENCE};
+use capstore::capstore::arch::CapStoreArch;
+use capstore::report::table::Table;
+use capstore::util::units::fmt_energy_uj;
+
+fn main() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let archs = CapStoreArch::all_default(&model.req, &model.tech).unwrap();
+
+    bench::bench("fig10: per-macro + per-op breakdowns", 2, 10, || {
+        for a in &archs {
+            std::hint::black_box(model.evaluate_arch(a).onchip_pj);
+        }
+    });
+
+    // ---- Fig 10a: area breakdown ----------------------------------------
+    let mut t = Table::new(
+        "Fig 10a — area per memory component (mm2)",
+        &["org", "macro", "array", "power-gating", "total"],
+    );
+    for a in &archs {
+        for m in &a.macros {
+            t.row(vec![
+                a.organization.label().into(),
+                m.role.label().into(),
+                format!("{:.3}", m.costs.area_mm2),
+                format!("{:.3}", m.pg_area_mm2),
+                format!("{:.3}", m.area_mm2()),
+            ]);
+        }
+    }
+    t.print();
+    println!();
+
+    // ---- Fig 10b/10c: energy per component, dynamic vs static -----------
+    let mut t = Table::new(
+        "Fig 10b/10c — energy per component (per inference)",
+        &["org", "macro", "dynamic", "static", "wakeup", "total"],
+    );
+    let mut fig10c: Vec<(String, f64, f64, f64)> = Vec::new();
+    for a in &archs {
+        let e = model.evaluate_arch(a);
+        let mut dyn_sum = 0.0;
+        let mut stat_sum = 0.0;
+        let mut wake_sum = 0.0;
+        for (m, b) in a.macros.iter().zip(&e.per_macro) {
+            dyn_sum += b.dynamic_pj;
+            stat_sum += b.static_pj;
+            wake_sum += b.wakeup_pj;
+            t.row(vec![
+                a.organization.label().into(),
+                m.role.label().into(),
+                fmt_energy_uj(b.dynamic_pj),
+                fmt_energy_uj(b.static_pj),
+                fmt_energy_uj(b.wakeup_pj),
+                fmt_energy_uj(b.total_pj()),
+            ]);
+        }
+        fig10c.push((
+            a.organization.label().to_string(),
+            dyn_sum,
+            stat_sum,
+            wake_sum,
+        ));
+    }
+    t.print();
+    println!();
+
+    let mut t = Table::new(
+        "Fig 10c — dynamic vs static per organization",
+        &["org", "dynamic", "static", "wakeup"],
+    );
+    for (l, d, s, w) in &fig10c {
+        t.row(vec![
+            l.clone(),
+            fmt_energy_uj(*d),
+            fmt_energy_uj(*s),
+            fmt_energy_uj(*w),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // ---- Fig 10d: energy per operation -----------------------------------
+    let mut t = Table::new(
+        "Fig 10d — on-chip energy per operation",
+        &["org", "C1", "PC", "CC-FC", "Sum+Squash", "Update+Sum"],
+    );
+    for a in &archs {
+        let e = model.evaluate_arch(a);
+        let sum_for = |k: OpKind| -> f64 {
+            e.per_op_pj.iter().filter(|(x, _)| *x == k).map(|(_, v)| v).sum()
+        };
+        let cells: Vec<String> = OP_SEQUENCE
+            .iter()
+            .map(|k| fmt_energy_uj(sum_for(*k)))
+            .collect();
+        let mut row = vec![a.organization.label().to_string()];
+        row.extend(cells);
+        t.row(row);
+        // paper: PC dominates the per-op split in every organization
+        let pc = sum_for(OpKind::PrimaryCaps);
+        for k in OP_SEQUENCE {
+            assert!(pc >= sum_for(k) * 0.99, "{}: PC not max", a.organization.label());
+        }
+    }
+    t.print();
+
+    // ---- shape assertions on Fig 10c --------------------------------------
+    let find = |l: &str| fig10c.iter().find(|x| x.0 == l).unwrap();
+    assert!(find("SEP").1 < 0.75 * find("SMP").1, "SMP->SEP dynamic cut");
+    assert!(find("PG-SEP").2 < 0.45 * find("SEP").2, "SEP->PG-SEP static cut");
+    let pg_sep = find("PG-SEP");
+    assert!(
+        pg_sep.3 < 0.02 * (pg_sep.1 + pg_sep.2),
+        "wakeup must be negligible"
+    );
+    println!("fig10_onchip OK");
+}

@@ -1,0 +1,98 @@
+//! Bench: regenerate the paper's Fig 11 — energy and area breakdown of
+//! the COMPLETE accelerator with the selected PG-SEP memory — and check
+//! the paper's §5.2 headline reductions:
+//!   * total energy −78% vs version (a) (all on-chip)
+//!   * on-chip energy −86% vs version (b) (SMP hierarchy)   [ours ~−69%]
+//!   * total energy −46% vs version (b)
+//!   * accelerator contributes only a few % of energy and area
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::report::paper::PaperReference;
+use capstore::util::units::fmt_energy_uj;
+
+fn main() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let smp = CapStoreArch::build_default(
+        Organization::Smp { gated: false },
+        &model.req,
+        &model.tech,
+    )
+    .unwrap();
+    let pg_sep = CapStoreArch::build_default(
+        Organization::Sep { gated: true },
+        &model.req,
+        &model.tech,
+    )
+    .unwrap();
+
+    bench::bench("fig11: three whole-system evaluations", 2, 10, || {
+        let a = model.all_onchip_baseline().unwrap();
+        let b = model.system_energy(&smp);
+        let c = model.system_energy(&pg_sep);
+        std::hint::black_box((a.total_pj(), b.total_pj(), c.total_pj()));
+    });
+
+    let a = model.all_onchip_baseline().unwrap();
+    let b = model.system_energy(&smp);
+    let c = model.system_energy(&pg_sep);
+
+    println!("\n== Fig 11a — energy breakdown (PG-SEP complete system) ==");
+    let tot = c.total_pj();
+    println!(
+        "accelerator {:>10} ({:4.1}%)   on-chip {:>10} ({:4.1}%)   off-chip {:>10} ({:4.1}%)",
+        fmt_energy_uj(c.accel_pj),
+        100.0 * c.accel_pj / tot,
+        fmt_energy_uj(c.onchip_pj),
+        100.0 * c.onchip_pj / tot,
+        fmt_energy_uj(c.offchip_pj),
+        100.0 * c.offchip_pj / tot,
+    );
+
+    println!("\n== Fig 11b — area breakdown (on-chip, mm²) ==");
+    let accel_area = model.accel.area_mm2();
+    let mem_area = pg_sep.area_mm2();
+    println!(
+        "accelerator {accel_area:.2}   PG-SEP memory {mem_area:.2}   \
+         (all-on-chip [11] memory would be {:.2})",
+        model.all_onchip_area_mm2().unwrap()
+    );
+
+    let vs_a = 1.0 - c.total_pj() / a.total_pj();
+    let vs_b_onchip = 1.0 - c.onchip_pj / b.onchip_pj;
+    let vs_b_total = 1.0 - c.total_pj() / b.total_pj();
+    println!();
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "total vs (a)",
+            vs_a,
+            PaperReference::PG_SEP_TOTAL_VS_A
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "on-chip vs (b)",
+            vs_b_onchip,
+            PaperReference::PG_SEP_ONCHIP_SAVING
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "total vs (b)",
+            vs_b_total,
+            PaperReference::PG_SEP_TOTAL_VS_B
+        )
+    );
+
+    assert!(vs_a > 0.70 && vs_a < 0.92, "total vs (a): {vs_a}");
+    assert!(vs_b_onchip > 0.60, "on-chip vs (b): {vs_b_onchip}");
+    assert!(vs_b_total > 0.30 && vs_b_total < 0.60, "total vs (b): {vs_b_total}");
+    // paper: accelerator is 4-5% of total
+    assert!(c.accel_pj / tot < 0.25, "accel share {}", c.accel_pj / tot);
+    println!("fig11_complete OK");
+}

@@ -1,0 +1,97 @@
+//! Bench: regenerate the paper's Fig 4 (a-e) + Eqs 1/2 — the per-op
+//! memory requirement, cycle, access, and off-chip analysis — and time
+//! the analysis pipeline itself.
+//!
+//! Shape checks asserted here (the paper's claims):
+//!   * PrimaryCaps sets the overall on-chip worst case (Fig 4a)
+//!   * routing ops have zero off-chip traffic (Eq 1/2)
+//!   * weight memory idle during routing (Fig 4c)
+
+use capstore::accel::systolic::SystolicSim;
+use capstore::analysis::offchip::OffChipTraffic;
+use capstore::analysis::requirements::RequirementsAnalysis;
+use capstore::bench;
+use capstore::capsnet::{CapsNetConfig, OpKind, Operation};
+use capstore::report::table::Table;
+use capstore::util::units::{fmt_bytes, fmt_si};
+
+fn main() {
+    let cfg = CapsNetConfig::mnist();
+    let sim = SystolicSim::default();
+
+    // ---- timing: the full §3 analysis pipeline -------------------------
+    bench::bench("fig4: requirements+profiles+offchip", 3, 20, || {
+        let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+        let profiles = sim.profile_all(&cfg);
+        let off = OffChipTraffic::from_profiles(&cfg, &profiles);
+        std::hint::black_box((req.max_total(), off.len()));
+    });
+
+    // ---- Fig 4a/4c ------------------------------------------------------
+    let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+    let cap = req.max_total();
+    let mut t = Table::new(
+        "Fig 4a/4c — per-op requirements (bytes)",
+        &["op", "data", "weight", "accum", "total", "util%"],
+    );
+    for o in &req.per_op {
+        t.row(vec![
+            o.kind.label().into(),
+            o.req.data.to_string(),
+            o.req.weight.to_string(),
+            o.req.accum.to_string(),
+            o.req.total().to_string(),
+            format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
+        ]);
+    }
+    t.print();
+    println!("worst case: {}", fmt_bytes(cap));
+
+    // paper claim: PC is the worst case
+    assert_eq!(req.get(OpKind::PrimaryCaps).total(), cap, "PC must set the max");
+
+    // ---- Fig 4b ----------------------------------------------------------
+    let mut t = Table::new("Fig 4b — cycles", &["op", "cycles"]);
+    for op in Operation::all_kinds(&cfg) {
+        t.row(vec![op.kind.label().into(), fmt_si(sim.profile(&op).cycles)]);
+    }
+    t.print();
+
+    // ---- Fig 4d/4e -------------------------------------------------------
+    let mut t = Table::new(
+        "Fig 4d/4e — accesses",
+        &["op", "data R", "data W", "wt R", "wt W", "acc R", "acc W"],
+    );
+    for op in Operation::all_kinds(&cfg) {
+        let p = sim.profile(&op);
+        if matches!(op.kind, OpKind::SumSquash | OpKind::UpdateSum) {
+            assert_eq!(p.weight_reads + p.weight_writes, 0);
+        }
+        t.row(vec![
+            op.kind.label().into(),
+            fmt_si(p.data_reads),
+            fmt_si(p.data_writes),
+            fmt_si(p.weight_reads),
+            fmt_si(p.weight_writes),
+            fmt_si(p.accum_reads),
+            fmt_si(p.accum_writes),
+        ]);
+    }
+    t.print();
+
+    // ---- Eq 1/2 ----------------------------------------------------------
+    let mut t =
+        Table::new("Eq (1)/(2) — off-chip accesses", &["op", "reads", "writes"]);
+    for tr in OffChipTraffic::analyze(&cfg, &sim) {
+        if matches!(tr.kind, OpKind::SumSquash | OpKind::UpdateSum) {
+            assert_eq!((tr.reads, tr.writes), (0, 0));
+        }
+        t.row(vec![
+            tr.kind.label().into(),
+            fmt_si(tr.reads),
+            fmt_si(tr.writes),
+        ]);
+    }
+    t.print();
+    println!("fig4_resources OK");
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerate the paper's Fig 5 — energy breakdown of (a) the
+//! all-on-chip CapsAcc baseline vs (b) the on-chip/off-chip hierarchy —
+//! and check the two headline claims of §3.2/§3.3:
+//!   * the hierarchy saves about two thirds of total energy (paper: 66%)
+//!   * memory dominates total energy (paper: 96%)
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::report::paper::PaperReference;
+use capstore::util::units::fmt_energy_uj;
+
+fn main() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let smp = CapStoreArch::build_default(
+        Organization::Smp { gated: false },
+        &model.req,
+        &model.tech,
+    )
+    .unwrap();
+
+    bench::bench("fig5: both system evaluations", 3, 20, || {
+        let a = model.all_onchip_baseline().unwrap();
+        let b = model.system_energy(&smp);
+        std::hint::black_box((a.total_pj(), b.total_pj()));
+    });
+
+    let a = model.all_onchip_baseline().unwrap();
+    let b = model.system_energy(&smp);
+
+    println!("\n== Fig 5 — energy breakdown per inference ==");
+    for sys in [&a, &b] {
+        let tot = sys.total_pj();
+        println!(
+            "{:18} accel {:>10} ({:4.1}%)  onchip {:>10} ({:4.1}%)  offchip {:>10} ({:4.1}%)  total {}",
+            sys.label,
+            fmt_energy_uj(sys.accel_pj),
+            100.0 * sys.accel_pj / tot,
+            fmt_energy_uj(sys.onchip_pj),
+            100.0 * sys.onchip_pj / tot,
+            fmt_energy_uj(sys.offchip_pj),
+            100.0 * sys.offchip_pj / tot,
+            fmt_energy_uj(tot),
+        );
+    }
+
+    let saving = 1.0 - b.total_pj() / a.total_pj();
+    println!(
+        "\n{}",
+        PaperReference::delta_line(
+            "hierarchy saving",
+            saving,
+            PaperReference::HIERARCHY_SAVING
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "memory share (a)",
+            a.memory_share(),
+            PaperReference::MEMORY_SHARE
+        )
+    );
+
+    assert!(saving > 0.45 && saving < 0.85, "saving {saving}");
+    assert!(a.memory_share() > 0.85 && b.memory_share() > 0.80);
+    println!("fig5_breakdown OK");
+}

@@ -1,0 +1,93 @@
+//! Bench: regenerate the paper's Table 1 (organization geometries) and
+//! Table 2 (area + energy per organization), printing measured-vs-paper
+//! energy ratios normalized to SMP.
+//!
+//! Shape checks (Table 2 / §5.1):
+//!   * SEP beats SMP on energy; PG-SEP is the overall winner
+//!   * SEP has more capacity but less area than SMP (single- vs 3-port)
+//!   * every PG- variant adds area (sleep transistors) and saves energy
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::CapStoreArch;
+use capstore::report::paper::PaperReference;
+use capstore::report::table::Table;
+use capstore::util::units::{fmt_bytes, fmt_energy_uj};
+
+fn main() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let paper = PaperReference::new();
+
+    bench::bench("table2: evaluate all six organizations", 2, 10, || {
+        std::hint::black_box(model.evaluate_all().unwrap().len());
+    });
+
+    let archs = CapStoreArch::all_default(&model.req, &model.tech).unwrap();
+    let evals = model.evaluate_all().unwrap();
+
+    let mut t1 = Table::new(
+        "Table 1 — geometry",
+        &["org", "macro", "size", "banks", "sectors", "ports"],
+    );
+    for arch in &archs {
+        for m in &arch.macros {
+            t1.row(vec![
+                arch.organization.label().into(),
+                m.role.label().into(),
+                m.sram.size_bytes.to_string(),
+                m.sram.banks.to_string(),
+                m.sram.sectors.to_string(),
+                m.sram.ports.to_string(),
+            ]);
+        }
+    }
+    t1.print();
+    println!();
+
+    let smp = evals
+        .iter()
+        .find(|e| e.organization.label() == "SMP")
+        .unwrap()
+        .onchip_pj;
+    let mut t2 = Table::new(
+        "Table 2 — area + energy",
+        &["org", "capacity", "area mm2", "energy/inf", "vs SMP", "paper vs SMP"],
+    );
+    for e in &evals {
+        let ours = e.onchip_pj / smp;
+        let theirs = paper
+            .energy_vs_smp(e.organization.label())
+            .map(|r| format!("{r:.3}"))
+            .unwrap_or_default();
+        t2.row(vec![
+            e.organization.label().into(),
+            fmt_bytes(e.capacity_bytes),
+            format!("{:.3}", e.area_mm2),
+            fmt_energy_uj(e.onchip_pj),
+            format!("{ours:.3}"),
+            theirs,
+        ]);
+    }
+    t2.print();
+
+    // ---- shape assertions ------------------------------------------------
+    let get = |l: &str| evals.iter().find(|e| e.organization.label() == l).unwrap();
+    assert!(get("SEP").onchip_pj < get("SMP").onchip_pj);
+    let winner = evals
+        .iter()
+        .min_by(|a, b| a.onchip_pj.partial_cmp(&b.onchip_pj).unwrap())
+        .unwrap();
+    assert_eq!(winner.organization.label(), "PG-SEP", "paper §5.2 winner");
+    let sep_arch = &archs[2];
+    let smp_arch = &archs[0];
+    assert!(sep_arch.capacity() >= smp_arch.capacity());
+    assert!(sep_arch.area_mm2() < smp_arch.area_mm2());
+    for pair in archs.chunks(2) {
+        assert!(pair[1].area_mm2() > pair[0].area_mm2(), "PG adds area");
+    }
+    for (plain, gated) in [("SMP", "PG-SMP"), ("SEP", "PG-SEP"), ("HY", "PG-HY")] {
+        assert!(get(gated).onchip_pj < get(plain).onchip_pj, "{gated}");
+    }
+    println!("table2_capstore OK");
+}

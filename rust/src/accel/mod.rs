@@ -1,0 +1,17 @@
+//! CapsAcc accelerator simulator (Marchisio et al., DATE'19 — ref [11] of
+//! the CapStore paper).
+//!
+//! A 16x16 weight-stationary systolic array with accumulator and
+//! activation units.  The simulator is *analytical*: it derives, per
+//! CapsuleNet operation, the cycle count (Fig 4b) and the per-component
+//! SRAM access counts (Figs 4d/4e) from the tile schedule, instead of
+//! replaying every MAC.  An optional event-level trace ([`trace`])
+//! cross-checks the closed forms on small shapes.
+
+pub mod power;
+pub mod systolic;
+pub mod trace;
+
+pub use power::AccelPower;
+pub use systolic::{ArrayConfig, OpProfile, SystolicSim};
+pub use trace::TileTracer;

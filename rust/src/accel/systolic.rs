@@ -1,0 +1,418 @@
+//! Analytical weight-stationary systolic-array model.
+//!
+//! ## Dataflow (CapsAcc, ref [11])
+//!
+//! For a GEMM `M x K x N` the 16x16 array iterates over weight tiles
+//! `(K/16) x (N/16)`.  Per tile:
+//!
+//! 1. load 16x16 weights column-by-column (16 cycles, overlapped with the
+//!    previous tile's drain when double-buffered PE registers exist);
+//! 2. stream the M data rows through (M cycles) plus array fill+drain
+//!    (~2 x 16 cycles);
+//! 3. partial sums for the current N-tile accumulate in the accumulator
+//!    SRAM (read-modify-write per k-tile beyond the first).
+//!
+//! For CC-FC there is **no weight reuse across rows** (each `W_ij` serves
+//! exactly one capsule `u_i`), so the schedule is weight-load bound: the
+//! array streams new weights every row, which is precisely why the
+//! paper's Fig 4c/d shows the weight memory dominating that operation.
+//!
+//! ## Value widths
+//!
+//! CapsAcc is an 8-bit fixed-point accelerator with wide partial sums;
+//! we model data/weights at 1 byte and accumulator entries at 4 bytes
+//! (25-bit sums rounded up to a word).  These constants are explicit in
+//! [`ArrayConfig`] so the DSE can sweep them.
+
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
+use crate::util::units::ceil_div;
+
+/// Systolic-array geometry and value widths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayConfig {
+    /// PE rows (the K direction). CapsAcc: 16.
+    pub rows: u64,
+    /// PE columns (the N direction). CapsAcc: 16.
+    pub cols: u64,
+    /// Clock frequency in Hz (energy model converts cycles to seconds).
+    pub clock_hz: f64,
+    /// Bytes per data (activation) value — 16-bit fixed point.
+    pub data_bytes: u64,
+    /// Bytes per weight value.
+    pub weight_bytes: u64,
+    /// Bytes per accumulator entry (partial sums).
+    pub accum_bytes: u64,
+    /// DRAM burst latency the weight prefetcher must hide, in cycles —
+    /// sizes the streaming weight working set (bandwidth x latency).
+    pub prefetch_cycles: u64,
+}
+
+impl Default for ArrayConfig {
+    fn default() -> Self {
+        ArrayConfig {
+            rows: 16,
+            cols: 16,
+            clock_hz: 1.0e9,
+            data_bytes: 2,
+            weight_bytes: 1,
+            accum_bytes: 4,
+            prefetch_cycles: 2048,
+        }
+    }
+}
+
+/// Total û values a routing op reads from the accumulator memory.
+///
+/// SumSquash contracts û over I (m=J, k=I, n=E → I·J·E values);
+/// UpdateSum dots û against v (m=I, k=E, n=J → I·E·J values).  Both
+/// equal the full û volume once per execution.
+fn cfg_uhat_reads(op: &Operation) -> u64 {
+    op.m * op.k * op.n
+}
+
+/// Per-operation profile: cycles + SRAM traffic (the raw material of the
+/// paper's Figs 4b/4d/4e) for ONE execution of the op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpProfile {
+    pub kind: OpKind,
+    pub cycles: u64,
+    // on-chip SRAM accesses (counted in *accesses of one value*)
+    pub data_reads: u64,
+    pub data_writes: u64,
+    pub weight_reads: u64,
+    pub weight_writes: u64,
+    pub accum_reads: u64,
+    pub accum_writes: u64,
+    /// MACs actually performed (for utilization metrics).
+    pub macs: u64,
+}
+
+impl OpProfile {
+    pub fn total_accesses(&self) -> u64 {
+        self.data_reads
+            + self.data_writes
+            + self.weight_reads
+            + self.weight_writes
+            + self.accum_reads
+            + self.accum_writes
+    }
+
+    /// PE-array utilization: MACs / (PEs x cycles).
+    pub fn utilization(&self, array: &ArrayConfig) -> f64 {
+        self.macs as f64
+            / (array.rows * array.cols * self.cycles).max(1) as f64
+    }
+}
+
+/// The analytical simulator.
+#[derive(Debug, Clone, Default)]
+pub struct SystolicSim {
+    pub array: ArrayConfig,
+}
+
+impl SystolicSim {
+    pub fn new(array: ArrayConfig) -> Self {
+        SystolicSim { array }
+    }
+
+    /// Profile one execution of `op`.
+    pub fn profile(&self, op: &Operation) -> OpProfile {
+        match op.kind {
+            OpKind::Conv1 | OpKind::PrimaryCaps => self.profile_conv(op),
+            OpKind::ClassCapsFc => self.profile_ccfc(op),
+            OpKind::SumSquash => self.profile_sum_squash(op),
+            OpKind::UpdateSum => self.profile_update_sum(op),
+        }
+    }
+
+    /// Conv-as-GEMM on the array.  Cycle count is a two-term roofline:
+    /// compute-bound (MACs / PEs — CapsAcc picks the mapping, weight- or
+    /// data-stationary, that keeps the array busy; see `trace::TileTracer`
+    /// for the naive weight-stationary schedule, which upper-bounds this)
+    /// or weight-stream-bound (weights enter at `cols` values/cycle).
+    fn profile_conv(&self, op: &Operation) -> OpProfile {
+        let a = &self.array;
+        let k_tiles = ceil_div(op.k, a.rows);
+        let n_tiles = ceil_div(op.n, a.cols);
+        let fill_drain = a.rows + a.cols;
+        let pes = a.rows * a.cols;
+        let cycles = ceil_div(op.macs(), pes)
+            .max(ceil_div(op.weight_values, a.cols))
+            + fill_drain;
+
+        // data: the data buffer (CapsAcc's dedicated buffer between the
+        // data SRAM and the array) holds the current im2col rows and
+        // rotates them across all N tiles, so each im2col element is
+        // read from the data SRAM exactly once.
+        let data_reads = op.m * op.k;
+        // inputs arrive from off-chip once (Eq 2 of the paper)
+        let data_writes = op.input_values;
+
+        // weights: each weight enters the array exactly once (perfect
+        // weight reuse across M); the weight SRAM is filled from DRAM.
+        let weight_reads = op.weight_values;
+        let weight_writes = op.weight_values;
+
+        // accumulator: partial sums chain along the PE columns (the
+        // systolic reduction), so the accumulator SRAM sees one write
+        // per output partial per k-tile group and one read-modify merge
+        // per k-tile beyond the first, both amortized by the in-array
+        // chain depth (`rows`), plus the final activation read-out.
+        let partials = op.m * op.n;
+        let spills = partials * (k_tiles - 1).div_ceil(a.rows);
+        let accum_writes = partials + spills;
+        let accum_reads = partials + spills;
+        let _ = n_tiles;
+
+        OpProfile {
+            kind: op.kind,
+            cycles,
+            data_reads,
+            data_writes,
+            weight_reads,
+            weight_writes,
+            accum_reads,
+            accum_writes,
+            macs: op.macs(),
+        }
+    }
+
+    /// CC-FC: per-capsule matmul, weight-load bound (no weight reuse).
+    /// Each capsule i needs J*D*E fresh weights; with a `rows x cols`
+    /// array loading one column per cycle, streaming the weights is the
+    /// bottleneck: cycles ~ total_weights / cols.
+    fn profile_ccfc(&self, op: &Operation) -> OpProfile {
+        let a = &self.array;
+        let pes = a.rows * a.cols;
+        // weights streamed through the array at cols values/cycle — the
+        // binding constraint (1.47M single-use weights)
+        let weight_stream = ceil_div(op.weight_values, a.cols);
+        let cycles = weight_stream.max(ceil_div(op.macs(), pes))
+            + a.rows
+            + a.cols;
+
+        // each u_i is read once and buffered across all J classes
+        // ("data reuse is efficient")
+        let data_reads = op.m * op.k;
+        // u staged into the data SRAM from off-chip (Eq 2)
+        let data_writes = op.input_values;
+        let weight_reads = op.weight_values;
+        let weight_writes = op.weight_values; // streamed in from DRAM
+        // û goes straight to the accumulator memory (it is the partial
+        // state of the routing loop): one write per value; no merge reads.
+        let accum_writes = op.output_values;
+        let accum_reads = 0;
+
+        OpProfile {
+            kind: op.kind,
+            cycles,
+            data_reads,
+            data_writes,
+            weight_reads,
+            weight_writes,
+            accum_reads,
+            accum_writes,
+            macs: op.macs(),
+        }
+    }
+
+    /// Sum+Squash: s_j = Σ_i c_ij û_j|i then squash.  Fully on-chip:
+    /// û read from the accumulator memory, c from the data memory.
+    fn profile_sum_squash(&self, op: &Operation) -> OpProfile {
+        let a = &self.array;
+        let pes = a.rows * a.cols;
+        let macs = op.macs(); // J * I * E
+        // reduction runs at full PE width; squash adds ~4 passes over
+        // the J*E outputs in the activation unit
+        let cycles = ceil_div(macs, pes) + 4 * op.output_values + a.rows;
+
+        // s_j partial merges: J*E entries, one spill per i-tile chain
+        let s_merges = op.m * op.n * ceil_div(op.k, a.rows * a.cols);
+        OpProfile {
+            kind: op.kind,
+            cycles,
+            // logits b read once per coupling (c derived in the
+            // activation unit row-by-row)
+            data_reads: op.weight_values,
+            // v_j written back for the next Update+Sum
+            data_writes: op.output_values,
+            weight_reads: 0,
+            weight_writes: 0,
+            // û read in full from the accumulator + s merges
+            accum_reads: cfg_uhat_reads(op) + s_merges,
+            accum_writes: s_merges + op.output_values,
+            macs,
+        }
+    }
+
+    /// Update+Sum: b_ij += û_j|i · v_j ; c = softmax_j(b).
+    fn profile_update_sum(&self, op: &Operation) -> OpProfile {
+        let a = &self.array;
+        let pes = a.rows * a.cols;
+        let macs = op.macs(); // I * E * J
+        // dot products at full width + softmax (exp LUT + normalize):
+        // ~3 passes over the I*J couplings in the activation unit
+        let cycles = ceil_div(macs, pes) + 3 * op.output_values + a.rows;
+
+        // dot-product tile partials: one spill per coupling group
+        let dot_merges = op.m * op.n / a.rows.max(1);
+        OpProfile {
+            kind: op.kind,
+            cycles,
+            // b read, v broadcast read
+            data_reads: op.output_values + op.weight_values,
+            // updated b written back
+            data_writes: op.output_values,
+            weight_reads: 0,
+            weight_writes: 0,
+            // û re-read in full from the accumulator + partial merges
+            accum_reads: cfg_uhat_reads(op) + dot_merges,
+            accum_writes: dot_merges,
+            macs,
+        }
+    }
+
+    /// Profile every op kind once (Fig 4's x-axis).
+    ///
+    /// (free function below: û volume read per routing op)
+    pub fn profile_all(&self, cfg: &CapsNetConfig) -> Vec<OpProfile> {
+        Operation::all_kinds(cfg)
+            .iter()
+            .map(|op| self.profile(op))
+            .collect()
+    }
+
+    /// Profile the full inference schedule (routing expanded) and return
+    /// (profiles, total_cycles).
+    pub fn profile_schedule(
+        &self,
+        cfg: &CapsNetConfig,
+    ) -> (Vec<OpProfile>, u64) {
+        let profiles: Vec<OpProfile> = Operation::schedule(cfg)
+            .iter()
+            .map(|op| self.profile(op))
+            .collect();
+        let total = profiles.iter().map(|p| p.cycles).sum();
+        (profiles, total)
+    }
+
+    /// Wall-clock seconds for one inference.
+    pub fn inference_seconds(&self, cfg: &CapsNetConfig) -> f64 {
+        let (_, cycles) = self.profile_schedule(cfg);
+        cycles as f64 / self.array.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SystolicSim {
+        SystolicSim::new(ArrayConfig::default())
+    }
+
+    fn mnist() -> CapsNetConfig {
+        CapsNetConfig::mnist()
+    }
+
+    #[test]
+    fn conv1_cycles_closed_form() {
+        let op = Operation::new(OpKind::Conv1, &mnist());
+        let p = sim().profile(&op);
+        // compute-bound: 400*81*256 MACs / 256 PEs + 32 fill/drain
+        assert_eq!(p.cycles, 32_400 + 32);
+        assert_eq!(p.weight_reads, 20_992);
+        assert_eq!(p.data_writes, 784);
+    }
+
+    #[test]
+    fn primarycaps_is_compute_bound_not_stream_bound() {
+        let op = Operation::new(OpKind::PrimaryCaps, &mnist());
+        let p = sim().profile(&op);
+        // macs/PEs = 36*20736*256/256 = 746496 > weights/16 = 331792
+        assert_eq!(p.cycles, 746_496 + 32);
+    }
+
+    #[test]
+    fn primarycaps_dominates_cycles() {
+        let s = sim();
+        let profiles = s.profile_all(&mnist());
+        let pc = profiles
+            .iter()
+            .find(|p| p.kind == OpKind::PrimaryCaps)
+            .unwrap();
+        for p in &profiles {
+            assert!(pc.cycles >= p.cycles, "{:?} out-cycles PC", p.kind);
+        }
+    }
+
+    #[test]
+    fn ccfc_is_weight_bound() {
+        let op = Operation::new(OpKind::ClassCapsFc, &mnist());
+        let p = sim().profile(&op);
+        // dominated by streaming 1.47M weights at 16/cycle
+        assert_eq!(p.cycles, 1_474_560 / 16 + 32);
+        assert_eq!(p.weight_reads, 1_474_560);
+    }
+
+    #[test]
+    fn routing_ops_touch_no_weight_memory() {
+        let s = sim();
+        for kind in [OpKind::SumSquash, OpKind::UpdateSum] {
+            let p = s.profile(&Operation::new(kind, &mnist()));
+            assert_eq!(p.weight_reads, 0, "{kind:?}");
+            assert_eq!(p.weight_writes, 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn utilization_is_sane() {
+        let s = sim();
+        for p in s.profile_all(&mnist()) {
+            let u = p.utilization(&s.array);
+            assert!(u > 0.0 && u <= 1.0, "{:?} utilization {u}", p.kind);
+        }
+    }
+
+    #[test]
+    fn schedule_total_is_sum_of_ops() {
+        let s = sim();
+        let (profiles, total) = s.profile_schedule(&mnist());
+        assert_eq!(profiles.len(), 8);
+        assert_eq!(total, profiles.iter().map(|p| p.cycles).sum::<u64>());
+        // ~1 GHz, expect single-digit ms per inference
+        let secs = s.inference_seconds(&mnist());
+        assert!(secs > 1e-4 && secs < 1e-1, "inference {secs}s");
+    }
+
+    #[test]
+    fn accum_rmw_accounting_conv() {
+        // C1: k_tiles = 6, chain depth 16 -> one spill round beyond the
+        // in-array reduction; each partial written once + one spill,
+        // read once (activation) + one merge
+        let op = Operation::new(OpKind::Conv1, &mnist());
+        let p = sim().profile(&op);
+        let partials = 400 * 256;
+        assert_eq!(p.accum_writes, partials * 2);
+        assert_eq!(p.accum_reads, partials * 2);
+    }
+
+    #[test]
+    fn conv_data_buffer_reads_each_element_once() {
+        // the data buffer rotates im2col rows across N tiles: data-SRAM
+        // reads = M*K exactly
+        let op = Operation::new(OpKind::Conv1, &mnist());
+        let p = sim().profile(&op);
+        assert_eq!(p.data_reads, 400 * 81);
+    }
+
+    #[test]
+    fn routing_ops_reread_uhat_fully() {
+        // each routing op streams the whole û (184320 values) from the
+        // accumulator memory — the feedback loop's cost
+        for kind in [OpKind::SumSquash, OpKind::UpdateSum] {
+            let p = sim().profile(&Operation::new(kind, &mnist()));
+            assert!(p.accum_reads >= 184_320, "{kind:?}: {}", p.accum_reads);
+        }
+    }
+}

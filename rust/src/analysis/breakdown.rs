@@ -1,0 +1,468 @@
+//! Energy integration — the numbers behind the paper's Fig 5, Table 2,
+//! Fig 10 and Fig 11.
+//!
+//! For one inference on a given CapStore architecture we combine:
+//!
+//! * **dynamic SRAM energy** — per-op access counts ([`accel`]) × the
+//!   per-byte access energies of the macro each traffic class maps to;
+//! * **static SRAM energy** — leakage power × op duration, scaled by the
+//!   PMU's ON fraction for gated organizations (+ residual OFF leakage);
+//! * **wakeup energy** — per OFF→ON transition of the gating plan;
+//! * **off-chip DRAM energy** — Eq 1/2 traffic × the DRAM model;
+//! * **accelerator energy** — the compute-side model ([`accel::power`]).
+
+use crate::accel::power::AccelPower;
+use crate::accel::systolic::{OpProfile, SystolicSim};
+use crate::analysis::offchip::OffChipTraffic;
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
+use crate::capstore::arch::{CapStoreArch, MemoryRole, Organization};
+use crate::capstore::pmu::GatingSchedule;
+use crate::error::Result;
+use crate::memsim::cacti::{self, SramConfig, Technology};
+use crate::memsim::dram::DramModel;
+
+/// Energy of one memory macro over one inference, pJ.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub dynamic_pj: f64,
+    pub static_pj: f64,
+    pub wakeup_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.dynamic_pj + self.static_pj + self.wakeup_pj
+    }
+}
+
+/// Per-architecture result: per-macro and per-op energies (Table 2,
+/// Fig 10b/c/d).
+#[derive(Debug, Clone)]
+pub struct ArchitectureEnergy {
+    pub organization: Organization,
+    /// Parallel to `arch.macros`: per-macro breakdown.
+    pub per_macro: Vec<EnergyBreakdown>,
+    /// Per-op (schedule order, routing expanded) on-chip energy, pJ.
+    pub per_op_pj: Vec<(OpKind, f64)>,
+    /// Total on-chip memory energy, pJ.
+    pub onchip_pj: f64,
+    pub area_mm2: f64,
+    pub capacity_bytes: u64,
+}
+
+/// Whole-system energy (Fig 5 / Fig 11): accelerator + on-chip + off-chip.
+#[derive(Debug, Clone)]
+pub struct SystemEnergy {
+    pub label: String,
+    pub accel_pj: f64,
+    pub onchip_pj: f64,
+    pub offchip_pj: f64,
+}
+
+impl SystemEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.accel_pj + self.onchip_pj + self.offchip_pj
+    }
+
+    /// Memory share of total (the paper's 96% claim).
+    pub fn memory_share(&self) -> f64 {
+        (self.onchip_pj + self.offchip_pj) / self.total_pj()
+    }
+}
+
+/// The evaluator tying every model together.
+pub struct EnergyModel {
+    pub cfg: CapsNetConfig,
+    pub sim: SystolicSim,
+    pub tech: Technology,
+    pub dram: DramModel,
+    pub accel: AccelPower,
+    pub req: RequirementsAnalysis,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: CapsNetConfig) -> Self {
+        let sim = SystolicSim::default();
+        let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+        EnergyModel {
+            cfg,
+            sim,
+            tech: Technology::default(),
+            dram: DramModel::default(),
+            accel: AccelPower::default(),
+            req,
+        }
+    }
+
+    /// Bytes moved per traffic class for one op execution.
+    fn traffic_bytes(&self, p: &OpProfile) -> [(MemoryRole, u64, u64); 3] {
+        let a = &self.sim.array;
+        [
+            (
+                MemoryRole::Data,
+                p.data_reads * a.data_bytes,
+                p.data_writes * a.data_bytes,
+            ),
+            (
+                MemoryRole::Weight,
+                p.weight_reads * a.weight_bytes,
+                p.weight_writes * a.weight_bytes,
+            ),
+            (
+                MemoryRole::Accumulator,
+                // û traffic during routing is 2-byte; live partials 4-byte.
+                // The profile counts *accesses*; charge the accumulator's
+                // word width.
+                p.accum_reads * a.accum_bytes,
+                p.accum_writes * a.accum_bytes,
+            ),
+        ]
+    }
+
+    /// Evaluate one architecture over the full inference schedule.
+    pub fn evaluate_arch(&self, arch: &CapStoreArch) -> ArchitectureEnergy {
+        let schedule = Operation::schedule(&self.cfg);
+        let profiles: Vec<OpProfile> =
+            schedule.iter().map(|op| self.sim.profile(op)).collect();
+        let op_cycles: Vec<u64> = profiles.iter().map(|p| p.cycles).collect();
+        let plan = GatingSchedule::plan(arch, &self.req, &self.cfg);
+
+        let nmac = arch.macros.len();
+        let mut per_macro = vec![EnergyBreakdown::default(); nmac];
+        let mut per_op_pj: Vec<(OpKind, f64)> = Vec::new();
+
+        // ---- dynamic: route each op's traffic to the serving macro ----
+        for (op, p) in schedule.iter().zip(&profiles) {
+            let need = self.req.get(op.kind);
+            let mut op_dyn = 0.0;
+            for (role, rbytes, wbytes) in self.traffic_bytes(p) {
+                let comp_need = match role {
+                    MemoryRole::Data => need.data,
+                    MemoryRole::Weight => need.weight,
+                    MemoryRole::Accumulator => need.accum,
+                    MemoryRole::Shared => 0,
+                };
+                let (ded_f, shared_f) = arch.hy_split(role, comp_need);
+                for (frac, target_role) in
+                    [(ded_f, role), (shared_f, MemoryRole::Shared)]
+                {
+                    if frac <= 0.0 {
+                        continue;
+                    }
+                    // find the serving macro's index
+                    let idx = arch
+                        .macros
+                        .iter()
+                        .position(|m| m.role == target_role)
+                        .or_else(|| {
+                            arch.macros
+                                .iter()
+                                .position(|m| m.role == MemoryRole::Shared)
+                        })
+                        .expect("no serving macro");
+                    let c = &arch.macros[idx].costs;
+                    let e = frac
+                        * (rbytes as f64 * c.read_pj_per_byte
+                            + wbytes as f64 * c.write_pj_per_byte);
+                    per_macro[idx].dynamic_pj += e;
+                    op_dyn += e;
+                }
+            }
+            per_op_pj.push((op.kind, op_dyn));
+        }
+
+        // ---- static: leakage x time x ON fraction -----------------------
+        let total_cycles: u64 = op_cycles.iter().sum();
+        let secs = total_cycles as f64 / self.sim.array.clock_hz;
+        for (i, m) in arch.macros.iter().enumerate() {
+            let static_pj = if arch.organization.gated() {
+                let on_f = plan.on_fraction(i, &op_cycles);
+                let off_f = 1.0 - on_f;
+                let eff_mw = m.costs.leakage_mw
+                    * (on_f
+                        + off_f * arch.pg_model.off_leakage_fraction);
+                eff_mw * 1.0e-3 * secs * 1.0e12
+            } else {
+                m.costs.leakage_mw * 1.0e-3 * secs * 1.0e12
+            };
+            per_macro[i].static_pj = static_pj;
+        }
+
+        // distribute static energy into the per-op view by cycle share
+        for (j, (_, e)) in per_op_pj.iter_mut().enumerate() {
+            let share = op_cycles[j] as f64 / total_cycles as f64;
+            let static_total: f64 =
+                per_macro.iter().map(|b| b.static_pj).sum();
+            *e += static_total * share;
+        }
+
+        // ---- wakeup ------------------------------------------------------
+        if arch.organization.gated() {
+            let total_wakeup = plan.wakeup_energy_pj(&arch.pg_model);
+            // attribute to macros by their wakeup counts
+            let count_sum: u64 = plan.wakeups.iter().sum();
+            for (i, b) in per_macro.iter_mut().enumerate() {
+                if count_sum > 0 {
+                    b.wakeup_pj = total_wakeup * plan.wakeups[i] as f64
+                        / count_sum as f64;
+                }
+            }
+        }
+
+        let onchip_pj = per_macro.iter().map(|b| b.total_pj()).sum();
+        ArchitectureEnergy {
+            organization: arch.organization,
+            per_macro,
+            per_op_pj,
+            onchip_pj,
+            area_mm2: arch.area_mm2(),
+            capacity_bytes: arch.capacity(),
+        }
+    }
+
+    /// Off-chip DRAM energy for one inference (Eq 1/2 traffic + standby).
+    pub fn offchip_pj(&self) -> f64 {
+        let bytes = OffChipTraffic::total_bytes(&self.cfg, &self.sim);
+        let secs = self.sim.inference_seconds(&self.cfg);
+        self.dram.transfer_pj(bytes) + self.dram.standby_pj(secs)
+    }
+
+    /// Accelerator (compute) energy for one inference.
+    pub fn accel_pj(&self) -> f64 {
+        let (profiles, _) = self.sim.profile_schedule(&self.cfg);
+        profiles
+            .iter()
+            .map(|p| self.accel.op_energy_pj(p, &self.sim.array))
+            .sum()
+    }
+
+    /// The CapsAcc [11] all-on-chip memories of the paper's Fig 3a:
+    /// a 4 MB weight memory and a 4 MB data memory (8 MB total, lightly
+    /// banked monolithic macros), accumulator traffic folded into the
+    /// data memory.  No DRAM traffic at all.
+    fn baseline_srams(&self) -> (SramConfig, SramConfig) {
+        (
+            SramConfig::new(4 << 20, 4, 1, 1), // weight
+            SramConfig::new(4 << 20, 4, 1, 2), // data + accumulator (RMW)
+        )
+    }
+
+    /// Version (a) of the paper's Fig 5: the all-on-chip baseline.
+    pub fn all_onchip_baseline(&self) -> Result<SystemEnergy> {
+        let (wcfg, dcfg) = self.baseline_srams();
+        let wcosts = cacti::evaluate(&wcfg, &self.tech)?;
+        let dcosts = cacti::evaluate(&dcfg, &self.tech)?;
+
+        let schedule = Operation::schedule(&self.cfg);
+        let mut dynamic = 0.0;
+        let mut cycles = 0u64;
+        for op in &schedule {
+            let p = self.sim.profile(op);
+            for (role, r, w) in self.traffic_bytes(&p) {
+                let c = if role == MemoryRole::Weight {
+                    &wcosts
+                } else {
+                    &dcosts
+                };
+                dynamic += r as f64 * c.read_pj_per_byte
+                    + w as f64 * c.write_pj_per_byte;
+            }
+            cycles += p.cycles;
+        }
+        let secs = cycles as f64 / self.sim.array.clock_hz;
+        let static_pj = (wcosts.leakage_mw + dcosts.leakage_mw)
+            * 1.0e-3
+            * secs
+            * 1.0e12;
+
+        Ok(SystemEnergy {
+            label: "All On-Chip [11]".into(),
+            accel_pj: self.accel_pj(),
+            onchip_pj: dynamic + static_pj,
+            offchip_pj: 0.0,
+        })
+    }
+
+    /// Area of the all-on-chip baseline memories, mm².
+    pub fn all_onchip_area_mm2(&self) -> Result<f64> {
+        let (wcfg, dcfg) = self.baseline_srams();
+        Ok(cacti::evaluate(&wcfg, &self.tech)?.area_mm2
+            + cacti::evaluate(&dcfg, &self.tech)?.area_mm2)
+    }
+
+    /// Whole-system energy for one CapStore architecture (version (b)
+    /// baseline when `arch` = SMP; Fig 11 when `arch` = PG-SEP).
+    pub fn system_energy(&self, arch: &CapStoreArch) -> SystemEnergy {
+        let ae = self.evaluate_arch(arch);
+        SystemEnergy {
+            label: arch.organization.label().into(),
+            accel_pj: self.accel_pj(),
+            onchip_pj: ae.onchip_pj,
+            offchip_pj: self.offchip_pj(),
+        }
+    }
+
+    /// Evaluate all six Table-1/2 organizations.
+    pub fn evaluate_all(&self) -> Result<Vec<ArchitectureEnergy>> {
+        let archs = CapStoreArch::all_default(&self.req, &self.tech)?;
+        Ok(archs.iter().map(|a| self.evaluate_arch(a)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(CapsNetConfig::mnist())
+    }
+
+    fn by_label<'a>(
+        v: &'a [ArchitectureEnergy],
+        l: &str,
+    ) -> &'a ArchitectureEnergy {
+        v.iter().find(|a| a.organization.label() == l).unwrap()
+    }
+
+    #[test]
+    fn sep_beats_smp_on_energy() {
+        // Fig 10b: "SEP and PG-SEP are more energy efficient ... due to
+        // having single-ports"
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        assert!(by_label(&all, "SEP").onchip_pj < by_label(&all, "SMP").onchip_pj);
+    }
+
+    #[test]
+    fn power_gating_helps_every_organization() {
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        for (plain, gated) in
+            [("SMP", "PG-SMP"), ("SEP", "PG-SEP"), ("HY", "PG-HY")]
+        {
+            assert!(
+                by_label(&all, gated).onchip_pj
+                    < by_label(&all, plain).onchip_pj,
+                "{gated} !< {plain}"
+            );
+        }
+    }
+
+    #[test]
+    fn pg_sep_is_the_winner() {
+        // §5.2: "we select the CapStore PG-SEP architecture, as it is the
+        // most efficient organization in terms of energy consumption"
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        let winner = all
+            .iter()
+            .min_by(|a, b| a.onchip_pj.partial_cmp(&b.onchip_pj).unwrap())
+            .unwrap();
+        assert_eq!(winner.organization.label(), "PG-SEP");
+    }
+
+    #[test]
+    fn pg_sep_saves_close_to_paper_ratio_vs_smp() {
+        // paper: on-chip energy reduced by 86% vs version (b) (SMP)
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        let saving = 1.0
+            - by_label(&all, "PG-SEP").onchip_pj
+                / by_label(&all, "SMP").onchip_pj;
+        assert!(
+            saving > 0.60 && saving < 0.95,
+            "PG-SEP saving vs SMP = {saving:.3} (paper: 0.86, ours ~0.69)"
+        );
+    }
+
+    #[test]
+    fn smp_to_sep_cuts_dynamic_sep_to_pgsep_cuts_static() {
+        // Fig 10c's two observations
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        let dyn_of = |l: &str| -> f64 {
+            by_label(&all, l).per_macro.iter().map(|b| b.dynamic_pj).sum()
+        };
+        let stat_of = |l: &str| -> f64 {
+            by_label(&all, l).per_macro.iter().map(|b| b.static_pj).sum()
+        };
+        assert!(dyn_of("SEP") < 0.75 * dyn_of("SMP"));
+        assert!(stat_of("PG-SEP") < 0.45 * stat_of("SEP"));
+    }
+
+    #[test]
+    fn wakeup_energy_negligible() {
+        // §5.1: wakeup overhead negligible vs static savings
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        let pg_sep = by_label(&all, "PG-SEP");
+        let wake: f64 = pg_sep.per_macro.iter().map(|b| b.wakeup_pj).sum();
+        assert!(wake < 0.01 * pg_sep.onchip_pj, "wakeup {wake}");
+    }
+
+    #[test]
+    fn hierarchy_saves_majority_vs_all_onchip() {
+        // Fig 5: "we can already save 66% of the total energy" (version b
+        // = SMP hierarchy vs version a = all on-chip)
+        let m = model();
+        let req = &m.req;
+        let smp = CapStoreArch::build_default(
+            Organization::Smp { gated: false },
+            req,
+            &m.tech,
+        )
+        .unwrap();
+        let a = m.all_onchip_baseline().unwrap();
+        let b = m.system_energy(&smp);
+        let saving = 1.0 - b.total_pj() / a.total_pj();
+        assert!(
+            saving > 0.45 && saving < 0.85,
+            "hierarchy saving {saving:.3} (paper: 0.66)"
+        );
+    }
+
+    #[test]
+    fn memory_dominates_total_energy() {
+        // §1: "memory energy ... contributes to 96% of the total"
+        let m = model();
+        let smp = CapStoreArch::build_default(
+            Organization::Smp { gated: false },
+            &m.req,
+            &m.tech,
+        )
+        .unwrap();
+        let sys = m.system_energy(&smp);
+        assert!(sys.memory_share() > 0.85, "share {}", sys.memory_share());
+        // and the accelerator stays a small slice (paper: 4-5%)
+        assert!(sys.accel_pj / sys.total_pj() < 0.15);
+    }
+
+    #[test]
+    fn pc_consumes_the_most_memory_energy() {
+        // Fig 10d: PC dominates the per-operation energy split
+        let m = model();
+        let all = m.evaluate_all().unwrap();
+        for arch in &all {
+            let pc: f64 = arch
+                .per_op_pj
+                .iter()
+                .filter(|(k, _)| *k == OpKind::PrimaryCaps)
+                .map(|(_, e)| *e)
+                .sum();
+            for kind in crate::capsnet::OP_SEQUENCE {
+                let e: f64 = arch
+                    .per_op_pj
+                    .iter()
+                    .filter(|(k, _)| *k == kind)
+                    .map(|(_, e)| *e)
+                    .sum();
+                assert!(
+                    pc >= e * 0.99,
+                    "{}: {kind:?} {e} > PC {pc}",
+                    arch.organization.label()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's §3 analysis pipeline: per-operation memory requirements,
+//! access counts, off-chip traffic (Eqs 1–2), and the energy breakdowns
+//! behind Figs 5, 10 and 11.
+
+pub mod breakdown;
+pub mod offchip;
+pub mod requirements;
+
+pub use breakdown::{ArchitectureEnergy, EnergyBreakdown, SystemEnergy};
+pub use offchip::OffChipTraffic;
+pub use requirements::{ComponentReq, OpRequirements, RequirementsAnalysis};

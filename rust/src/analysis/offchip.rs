@@ -1,0 +1,133 @@
+//! Off-chip access counts — Equations (1) and (2) of the paper.
+//!
+//! For the first three operations (C1, PC, CC-FC):
+//!
+//! ```text
+//! (#Reads_offchip)_i  = (#Writes_weightmem + #Writes_datamem)_i      (1)
+//! (#Writes_offchip)_i = (#Reads_datamem)_{i+1}'s input load            (2)
+//! ```
+//!
+//! i.e. everything written into the on-chip weight/data memories was read
+//! from DRAM, and an operation's outputs are written back to DRAM exactly
+//! once to be re-fetched as the next op's input.  The last two operations
+//! (Sum+Squash, Update+Sum) never touch DRAM: all routing state stays
+//! on-chip (the û/c/b residency modeled in `requirements`).
+
+use crate::accel::systolic::{OpProfile, SystolicSim};
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
+
+/// Off-chip reads/writes per operation (values, not bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OffChipTraffic {
+    pub kind: OpKind,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl OffChipTraffic {
+    /// Apply Eqs (1)/(2) to the profiled schedule.
+    ///
+    /// `profiles` must be per-kind profiles (one entry per op kind in
+    /// OP_SEQUENCE order), as produced by `SystolicSim::profile_all`.
+    pub fn from_profiles(
+        cfg: &CapsNetConfig,
+        profiles: &[OpProfile],
+    ) -> Vec<OffChipTraffic> {
+        let ops = Operation::all_kinds(cfg);
+        profiles
+            .iter()
+            .zip(ops.iter())
+            .map(|(p, op)| {
+                if op.on_chip_only {
+                    // Eq 1/2 only hold for the first three operations
+                    OffChipTraffic { kind: p.kind, reads: 0, writes: 0 }
+                } else {
+                    // Eq (1): every on-chip weight/data write came from DRAM
+                    let reads = p.weight_writes + p.data_writes;
+                    // Eq (2): outputs spilled for the next op's input load
+                    // (CC-FC's û stays on-chip, so no write-back)
+                    let writes = if p.kind == OpKind::ClassCapsFc {
+                        0
+                    } else {
+                        op.output_values
+                    };
+                    OffChipTraffic { kind: p.kind, reads, writes }
+                }
+            })
+            .collect()
+    }
+
+    /// Convenience: full analysis for a config.
+    pub fn analyze(cfg: &CapsNetConfig, sim: &SystolicSim) -> Vec<OffChipTraffic> {
+        Self::from_profiles(cfg, &sim.profile_all(cfg))
+    }
+
+    /// Total DRAM bytes moved in one inference (weights 1B, data 1B),
+    /// with routing-op repetitions applied (they're zero anyway).
+    pub fn total_bytes(cfg: &CapsNetConfig, sim: &SystolicSim) -> u64 {
+        Self::analyze(cfg, sim)
+            .iter()
+            .map(|t| {
+                let kind_reps = t.kind.executions(cfg);
+                (t.reads + t.writes) * kind_reps
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist_traffic() -> Vec<OffChipTraffic> {
+        OffChipTraffic::analyze(&CapsNetConfig::mnist(), &SystolicSim::default())
+    }
+
+    #[test]
+    fn routing_ops_have_zero_offchip_traffic() {
+        // the paper: "In the last two operations, the off-chip memory is
+        // not accessed"
+        for t in mnist_traffic() {
+            if matches!(t.kind, OpKind::SumSquash | OpKind::UpdateSum) {
+                assert_eq!((t.reads, t.writes), (0, 0), "{:?}", t.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn eq1_conv1() {
+        // C1 reads its 784 input values + 20992 weights from DRAM
+        let t = &mnist_traffic()[0];
+        assert_eq!(t.kind, OpKind::Conv1);
+        assert_eq!(t.reads, 784 + 20_992);
+        // Eq 2: C1's 102400 outputs spill to DRAM for PC
+        assert_eq!(t.writes, 102_400);
+    }
+
+    #[test]
+    fn eq2_chain_consistency() {
+        // op_i's off-chip writes == op_{i+1}'s data-memory input loads
+        let cfg = CapsNetConfig::mnist();
+        let sim = SystolicSim::default();
+        let profiles = sim.profile_all(&cfg);
+        let traffic = OffChipTraffic::from_profiles(&cfg, &profiles);
+        // C1 -> PC
+        assert_eq!(traffic[0].writes, profiles[1].data_writes);
+        // PC -> CC-FC
+        assert_eq!(traffic[1].writes, profiles[2].data_writes);
+    }
+
+    #[test]
+    fn weights_dominate_offchip_reads() {
+        // PC streams 5.3M weight values — the largest DRAM burden
+        let t = mnist_traffic();
+        let pc = t.iter().find(|x| x.kind == OpKind::PrimaryCaps).unwrap();
+        assert!(pc.reads > 5_000_000);
+        let total = OffChipTraffic::total_bytes(
+            &CapsNetConfig::mnist(),
+            &SystolicSim::default(),
+        );
+        // ~7M of weights + ~0.2M of activations
+        assert!(total > 6_900_000 && total < 8_000_000, "{total}");
+    }
+}

@@ -1,0 +1,358 @@
+//! Per-operation on-chip memory requirements — the paper's Figs 4a/4c.
+//!
+//! Sizing policy (§2.2 of the paper): minimize off-chip accesses, keep
+//! the all-on-chip throughput, minimize on-chip size.  Value widths are
+//! CapsAcc's fixed-point formats: 1-byte weights, 2-byte activations
+//! (and prediction vectors û), 4-byte routing logits and accumulator
+//! words.  Per operation each memory component must hold:
+//!
+//! * **data memory** — the op's streaming input, double-buffered when it
+//!   ping-pongs with off-chip DRAM (C1/PC), plus the routing state the
+//!   paper keeps on-chip across the feedback loop: û from CC-FC until
+//!   routing converges and the logits b during the routing ops.  This is
+//!   what makes the last two operations off-chip-free (Eq 1/2) and it
+//!   makes the data memory the *largest* component overall — consistent
+//!   with Table 1 of the paper (data 460 800 > accum 110 592 > weight
+//!   25 600 for SEP).
+//! * **weight memory** — the full weight set when it fits under a reuse-
+//!   friendly schedule (C1, 21 KB), otherwise a streaming working set
+//!   sized to hide DRAM latency: consumption bandwidth × prefetch
+//!   window (PC, CC-FC).  CC-FC has *no* weight reuse, hence the highest
+//!   consumption rate and the largest weight working set (the paper's
+//!   "weight reuse is more efficient in the last two operations, as
+//!   compared to the third one").
+//! * **accumulator memory** — "the temporary partial sums of different
+//!   output feature maps" (§3.1): for the convolutions, the 16 output
+//!   maps in flight (M × cols words, double-buffered, n-tile-sequential
+//!   schedule); from CC-FC onward, the prediction vectors û — the
+//!   routing loop's accumulation state — stay resident here until
+//!   routing converges, which is what makes the last two operations
+//!   off-chip-free (Eq 1/2) and makes the accumulator the architecture's
+//!   largest *energy* consumer (the paper's Table 2: SEP accumulator
+//!   3.16 mJ of 4.04 mJ total).  It is 2-ported (read-modify-write every
+//!   cycle), hence also the largest *area* per byte.
+//!
+//! Note: the paper's prose and tables are not fully mutually consistent
+//! (e.g. Fig 4c's "accumulator higher than data and weight for each
+//! operation" vs Table 1's data 460 800 > accum 110 592); we reproduce
+//! the energy shape of Table 2 and the sizing claims of §3.1/§4.2,
+//! recording the tensions in EXPERIMENTS.md.
+
+use crate::accel::systolic::ArrayConfig;
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
+use crate::util::units::ceil_div;
+
+/// Requirement of one memory component for one operation, bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ComponentReq {
+    pub data: u64,
+    pub weight: u64,
+    pub accum: u64,
+}
+
+impl ComponentReq {
+    pub fn total(&self) -> u64 {
+        self.data + self.weight + self.accum
+    }
+}
+
+/// Requirements of one operation (Fig 4c row) + its label.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpRequirements {
+    pub kind: OpKind,
+    pub req: ComponentReq,
+}
+
+/// The full Fig 4a/4c analysis for a network + array configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequirementsAnalysis {
+    pub per_op: Vec<OpRequirements>,
+}
+
+impl RequirementsAnalysis {
+    /// Run the analysis.
+    pub fn analyze(cfg: &CapsNetConfig, array: &ArrayConfig) -> Self {
+        let per_op = Operation::all_kinds(cfg)
+            .iter()
+            .map(|op| OpRequirements {
+                kind: op.kind,
+                req: Self::op_requirements(op, cfg, array),
+            })
+            .collect();
+        RequirementsAnalysis { per_op }
+    }
+
+    fn op_requirements(
+        op: &Operation,
+        cfg: &CapsNetConfig,
+        a: &ArrayConfig,
+    ) -> ComponentReq {
+        let db = a.data_bytes; // activation width (2B)
+        let wb = a.weight_bytes; // weight width (1B)
+        let ab = a.accum_bytes; // accumulator word (4B)
+        // û is the routing loop's accumulation state: it is produced BY
+        // the accumulator during CC-FC and re-read from it every routing
+        // iteration (2-byte entries after re-quantization).
+        let uhat_bytes = db * cfg.u_hat_values();
+        // routing logits b, one 4-byte word per coupling, in data memory
+        let logits_bytes = ab * cfg.coupling_values();
+
+        match op.kind {
+            OpKind::Conv1 => ComponentReq {
+                // input image, double-buffered against DRAM
+                data: 2 * op.input_values * db,
+                // 21KB of filters fit on-chip outright (perfect reuse)
+                weight: op.weight_values * wb,
+                // n-tile-sequential schedule: partial sums of the 16
+                // output feature maps in flight (M x cols words, double-
+                // buffered) — the paper's "partial sums of different
+                // output feature maps"
+                accum: 2 * op.m * a.cols * ab,
+            },
+            OpKind::PrimaryCaps => ComponentReq {
+                // 400KB double-buffered input feature map — the largest
+                // single tenant of the data memory and the op that sizes
+                // the whole on-chip memory (Fig 4a)
+                data: 2 * op.input_values * db,
+                // 5.3MB of weights stream: working set = consumption
+                // rate x DRAM prefetch window
+                weight: Self::stream_ws(op, a) * wb,
+                accum: 2 * op.m * a.cols * ab,
+            },
+            OpKind::ClassCapsFc => ComponentReq {
+                // u in (reused across all 10 classes — "data reuse is
+                // efficient", so the data footprint is small)
+                data: op.input_values * db,
+                // highest streaming rate of the net (no weight reuse)
+                weight: Self::stream_ws(op, a) * wb,
+                // û accumulates here and stays resident for routing
+                accum: uhat_bytes + 2 * a.rows * a.cols * ab,
+            },
+            OpKind::SumSquash => ComponentReq {
+                // logits b (couplings c_i derived row-by-row in the
+                // activation unit) + v staging
+                data: logits_bytes + cfg.class_out_values() * db,
+                weight: 0,
+                // û resident + s_j partials (double-buffered)
+                accum: uhat_bytes + 2 * cfg.class_out_values() * ab,
+            },
+            OpKind::UpdateSum => ComponentReq {
+                // b being updated + v broadcast copy
+                data: logits_bytes + cfg.class_out_values() * db,
+                weight: 0,
+                // û resident + agreement dot-product tile partials
+                accum: uhat_bytes + 2 * a.rows * a.cols * ab,
+            },
+        }
+    }
+
+    /// Streaming-weight working set (values): the array consumes
+    /// `rows*cols` weights per tile streak; the prefetcher must cover
+    /// `prefetch_cycles` of that rate to hide DRAM latency (the window
+    /// doubles as the ping-pong buffer).
+    fn stream_ws(op: &Operation, a: &ArrayConfig) -> u64 {
+        let tile_weights = a.rows * a.cols;
+        let streak = if op.weight_reuse {
+            // weights sit for a whole M-streak
+            op.m + a.rows + a.cols
+        } else {
+            // CC-FC: new weights every row — load-rate bound
+            a.rows + 1
+        };
+        let rate_per_cycle = tile_weights as f64 / streak as f64;
+        let ws = (rate_per_cycle * a.prefetch_cycles as f64).ceil() as u64;
+        // never less than one tile, never more than the whole weight set
+        ws.clamp(tile_weights, op.weight_values)
+    }
+
+    /// Worst-case total requirement (Fig 4a dashed line) — sizes SMP.
+    pub fn max_total(&self) -> u64 {
+        self.per_op.iter().map(|o| o.req.total()).max().unwrap_or(0)
+    }
+
+    /// Per-component worst case (sizes SEP).
+    pub fn max_components(&self) -> ComponentReq {
+        ComponentReq {
+            data: self.per_op.iter().map(|o| o.req.data).max().unwrap_or(0),
+            weight: self.per_op.iter().map(|o| o.req.weight).max().unwrap_or(0),
+            accum: self.per_op.iter().map(|o| o.req.accum).max().unwrap_or(0),
+        }
+    }
+
+    /// Per-component minimum *nonzero* requirement over ops (sizes HY's
+    /// dedicated memories — "the minimum utilization of the memory in
+    /// Figure 4c suggests the sizes of the separated memories in the HY
+    /// architecture", §4.2).
+    pub fn min_components(&self) -> ComponentReq {
+        let min_nz = |f: fn(&ComponentReq) -> u64| {
+            self.per_op
+                .iter()
+                .map(|o| f(&o.req))
+                .filter(|&v| v > 0)
+                .min()
+                .unwrap_or(0)
+        };
+        ComponentReq {
+            data: min_nz(|r| r.data),
+            weight: min_nz(|r| r.weight),
+            accum: min_nz(|r| r.accum),
+        }
+    }
+
+    /// Utilization of a memory of `capacity` bytes during op `kind`
+    /// (Fig 4a percentages / the PMU's gating driver).
+    pub fn utilization(&self, kind: OpKind, capacity: u64) -> f64 {
+        let req = self
+            .per_op
+            .iter()
+            .find(|o| o.kind == kind)
+            .map(|o| o.req.total())
+            .unwrap_or(0);
+        (req as f64 / capacity.max(1) as f64).min(1.0)
+    }
+
+    /// Look up one op's requirements.
+    pub fn get(&self, kind: OpKind) -> ComponentReq {
+        self.per_op
+            .iter()
+            .find(|o| o.kind == kind)
+            .map(|o| o.req)
+            .unwrap_or_default()
+    }
+
+    /// Round a size up to a bankable capacity (divisible by banks*sectors).
+    pub fn bankable(size: u64, banks: u64, sectors: u64) -> u64 {
+        let quantum = banks * sectors;
+        ceil_div(size.max(1), quantum) * quantum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analysis() -> RequirementsAnalysis {
+        RequirementsAnalysis::analyze(
+            &CapsNetConfig::mnist(),
+            &ArrayConfig::default(),
+        )
+    }
+
+    #[test]
+    fn primarycaps_is_the_worst_case_total() {
+        // Fig 4a: "The overall size is determined by ... PrimaryCaps"
+        let a = analysis();
+        let pc = a.get(OpKind::PrimaryCaps).total();
+        assert_eq!(a.max_total(), pc);
+        for o in &a.per_op {
+            assert!(o.req.total() <= pc, "{:?} exceeds PC", o.kind);
+        }
+    }
+
+    #[test]
+    fn conv_weight_requirements_are_low() {
+        // Fig 4c: "in the first two layers the weight memory requirements
+        // are quite low ... weight reuse"
+        let a = analysis();
+        let c1 = a.get(OpKind::Conv1);
+        let pc = a.get(OpKind::PrimaryCaps);
+        let cc = a.get(OpKind::ClassCapsFc);
+        assert!(c1.weight < cc.weight);
+        assert!(pc.weight < cc.weight, "pc {} cc {}", pc.weight, cc.weight);
+    }
+
+    #[test]
+    fn classcaps_input_footprint_is_low() {
+        // Fig 4c's point: CC-FC's *input* working set (u, 9216 values,
+        // each reused across all 10 classes) is tiny compared to PC's
+        // streamed feature map — data reuse is efficient.  (Our data
+        // memory for CC-FC additionally hosts the û routing state, so
+        // the comparison is on the input footprint.)
+        let cfg = CapsNetConfig::mnist();
+        let ops = crate::capsnet::Operation::all_kinds(&cfg);
+        let cc = &ops[2];
+        let pc = &ops[1];
+        assert!(cc.input_values < pc.input_values / 10);
+    }
+
+    #[test]
+    fn routing_ops_need_no_weight_memory() {
+        let a = analysis();
+        assert_eq!(a.get(OpKind::SumSquash).weight, 0);
+        assert_eq!(a.get(OpKind::UpdateSum).weight, 0);
+    }
+
+    #[test]
+    fn accumulator_dominates_routing_ops() {
+        // û (the routing loop's accumulation state) lives in the
+        // accumulator SRAM from CC-FC until routing converges — which
+        // is why Table 2 shows the accumulator as SEP's biggest energy
+        // consumer
+        let a = analysis();
+        for kind in [OpKind::ClassCapsFc, OpKind::SumSquash, OpKind::UpdateSum]
+        {
+            let r = a.get(kind);
+            assert!(r.accum > r.data && r.accum > r.weight, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn component_maxima_have_table1_ordering() {
+        // data worst >= accum worst > weight worst (the paper's Table 1
+        // ordering: data 460800 > accum 110592 > weight 25600); the data
+        // maximum should land in the paper's ballpark
+        let m = analysis().max_components();
+        assert!(m.data >= m.accum && m.accum > m.weight, "{m:?}");
+        assert!(m.data > 230_000 && m.data < 920_000, "data {}", m.data);
+        assert!(m.weight > 12_000 && m.weight < 64_000, "weight {}", m.weight);
+    }
+
+    #[test]
+    fn accumulator_dominates_conv_ops() {
+        // §3.1's per-op claim, valid for the convolutions: the full
+        // output-fmap partials out-size the (banded/streamed) inputs
+        let a = analysis();
+        let c1 = a.get(OpKind::Conv1);
+        assert!(c1.accum > c1.data && c1.accum > c1.weight, "{c1:?}");
+    }
+
+    #[test]
+    fn utilization_varies_across_ops() {
+        // the power-gating opportunity of Fig 4a: utilization is well
+        // below 100% for at least one operation
+        let a = analysis();
+        let cap = a.max_total();
+        let min_util = crate::capsnet::OP_SEQUENCE
+            .iter()
+            .map(|k| a.utilization(*k, cap))
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_util < 0.5, "min utilization {min_util}");
+        assert!((a.utilization(OpKind::PrimaryCaps, cap) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn component_maxima_exceed_overall_max() {
+        // SEP capacity (sum of per-component maxima) >= SMP capacity —
+        // the paper's observation that SEP has "higher memory size"
+        let a = analysis();
+        let m = a.max_components();
+        assert!(m.data + m.weight + m.accum >= a.max_total());
+    }
+
+    #[test]
+    fn bankable_rounding() {
+        assert_eq!(RequirementsAnalysis::bankable(100, 16, 1), 112);
+        assert_eq!(RequirementsAnalysis::bankable(112, 16, 1), 112);
+        assert_eq!(RequirementsAnalysis::bankable(1, 16, 8), 128);
+    }
+
+    #[test]
+    fn small_config_analyzable() {
+        let a = RequirementsAnalysis::analyze(
+            &CapsNetConfig::small(),
+            &ArrayConfig::default(),
+        );
+        assert!(a.max_total() > 0);
+        assert_eq!(a.per_op.len(), 5);
+    }
+}

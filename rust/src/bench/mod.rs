@@ -1,0 +1,55 @@
+//! Tiny timing harness used by `benches/*.rs` (criterion is not in the
+//! offline image).  `cargo bench` runs those files with `harness = false`.
+//!
+//! Each paper table/figure bench is a small program that (1) times its
+//! analysis with warmup + median-of-N, and (2) prints the same rows or
+//! series the paper reports, with measured-vs-paper deltas.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs;
+/// returns per-run milliseconds.
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1.0e3);
+    }
+    Summary::from_samples(&samples).expect("iters > 0")
+}
+
+/// Standard bench banner + timing line.
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "[bench] {name}: median {:.3} ms (p95 {:.3}, n={})",
+        s.median, s.p95, s.n
+    );
+}
+
+/// Run + report in one call; returns the summary for assertions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Summary {
+    let s = time_ms(warmup, iters, f);
+    report(name, &s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_work() {
+        let s = time_ms(1, 5, || {
+            std::hint::black_box((0..10_000u64).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.median >= 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+}

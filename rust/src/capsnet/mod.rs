@@ -1,0 +1,12 @@
+//! Topology model of the CapsuleNet workload (Sabour et al. 2017, MNIST),
+//! mirrored from `python/compile/config.py`.
+//!
+//! Everything the analysis and the accelerator simulator need is *shape
+//! information*: layer geometry, parameter counts, and the five inference
+//! operations the paper profiles in Fig 4.
+
+pub mod network;
+pub mod ops;
+
+pub use network::CapsNetConfig;
+pub use ops::{OpKind, Operation, OP_SEQUENCE};

@@ -1,0 +1,176 @@
+//! CapsuleNet geometry — the Rust mirror of `python/compile/config.py`.
+
+/// Static description of a CapsuleNet (the paper's MNIST case study by
+/// default).  All derived getters are pure shape arithmetic; the runtime
+/// cross-checks these against `artifacts/manifest.json` at load time so
+/// the simulator and the executed model can never drift apart.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapsNetConfig {
+    pub name: &'static str,
+    pub image_hw: u64,
+    pub in_channels: u64,
+    pub conv1_kernel: u64,
+    pub conv1_channels: u64,
+    pub pc_kernel: u64,
+    pub pc_stride: u64,
+    pub pc_channels: u64,
+    /// Primary-capsule dimensionality (8 for MNIST).
+    pub caps_dim: u64,
+    pub num_classes: u64,
+    /// Class-capsule dimensionality (16 for MNIST).
+    pub class_dim: u64,
+    pub routing_iters: u64,
+}
+
+impl CapsNetConfig {
+    /// The paper's workload: MNIST CapsuleNet (6.8 M parameters).
+    pub fn mnist() -> Self {
+        CapsNetConfig {
+            name: "mnist",
+            image_hw: 28,
+            in_channels: 1,
+            conv1_kernel: 9,
+            conv1_channels: 256,
+            pc_kernel: 9,
+            pc_stride: 2,
+            pc_channels: 256,
+            caps_dim: 8,
+            num_classes: 10,
+            class_dim: 16,
+            routing_iters: 3,
+        }
+    }
+
+    /// Reduced variant matching `config.small()` on the Python side
+    /// (used by fast tests and the build-time training demo).
+    pub fn small() -> Self {
+        CapsNetConfig {
+            name: "small",
+            conv1_channels: 32,
+            pc_channels: 32,
+            ..Self::mnist()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "mnist" => Some(Self::mnist()),
+            "small" => Some(Self::small()),
+            _ => None,
+        }
+    }
+
+    // ----- derived geometry --------------------------------------------
+
+    /// Conv1 output height/width (20 for MNIST).
+    pub fn conv1_out_hw(&self) -> u64 {
+        self.image_hw - self.conv1_kernel + 1
+    }
+
+    /// PrimaryCaps output height/width (6 for MNIST).
+    pub fn pc_out_hw(&self) -> u64 {
+        (self.conv1_out_hw() - self.pc_kernel) / self.pc_stride + 1
+    }
+
+    /// Number of primary-capsule types (32 for MNIST).
+    pub fn pc_caps_types(&self) -> u64 {
+        self.pc_channels / self.caps_dim
+    }
+
+    /// Total primary capsules I (1152 for MNIST).
+    pub fn num_primary_caps(&self) -> u64 {
+        self.pc_out_hw() * self.pc_out_hw() * self.pc_caps_types()
+    }
+
+    // ----- parameter counts --------------------------------------------
+
+    pub fn conv1_weights(&self) -> u64 {
+        self.conv1_kernel * self.conv1_kernel * self.in_channels
+            * self.conv1_channels
+            + self.conv1_channels
+    }
+
+    pub fn pc_weights(&self) -> u64 {
+        self.pc_kernel * self.pc_kernel * self.conv1_channels
+            * self.pc_channels
+            + self.pc_channels
+    }
+
+    pub fn cc_weights(&self) -> u64 {
+        self.num_primary_caps() * self.num_classes * self.caps_dim
+            * self.class_dim
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.conv1_weights() + self.pc_weights() + self.cc_weights()
+    }
+
+    // ----- activation counts -------------------------------------------
+
+    /// Input image values.
+    pub fn input_values(&self) -> u64 {
+        self.image_hw * self.image_hw * self.in_channels
+    }
+
+    /// Conv1 output values (20*20*256 = 102 400 for MNIST).
+    pub fn conv1_out_values(&self) -> u64 {
+        self.conv1_out_hw() * self.conv1_out_hw() * self.conv1_channels
+    }
+
+    /// PrimaryCaps output values == u (1152*8 = 9 216 for MNIST).
+    pub fn pc_out_values(&self) -> u64 {
+        self.num_primary_caps() * self.caps_dim
+    }
+
+    /// Prediction-vector values û (1152*10*16 = 184 320 for MNIST).
+    pub fn u_hat_values(&self) -> u64 {
+        self.num_primary_caps() * self.num_classes * self.class_dim
+    }
+
+    /// Coupling-coefficient values c (or logits b): I×J.
+    pub fn coupling_values(&self) -> u64 {
+        self.num_primary_caps() * self.num_classes
+    }
+
+    /// Class-capsule output values (10*16 = 160 for MNIST).
+    pub fn class_out_values(&self) -> u64 {
+        self.num_classes * self.class_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_geometry_matches_paper() {
+        let c = CapsNetConfig::mnist();
+        assert_eq!(c.conv1_out_hw(), 20);
+        assert_eq!(c.pc_out_hw(), 6);
+        assert_eq!(c.pc_caps_types(), 32);
+        assert_eq!(c.num_primary_caps(), 1152);
+        assert_eq!(c.u_hat_values(), 184_320);
+        assert_eq!(c.coupling_values(), 11_520);
+    }
+
+    #[test]
+    fn mnist_param_count_matches_python() {
+        // pinned against compile/config.py::num_params
+        assert_eq!(CapsNetConfig::mnist().total_params(), 6_804_224);
+    }
+
+    #[test]
+    fn small_config_is_consistent() {
+        let c = CapsNetConfig::small();
+        assert_eq!(c.pc_caps_types(), 4);
+        assert_eq!(c.num_primary_caps(), 144);
+        assert_eq!(c.conv1_out_hw(), 20);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(CapsNetConfig::by_name("mnist"), Some(CapsNetConfig::mnist()));
+        assert_eq!(CapsNetConfig::by_name("small"), Some(CapsNetConfig::small()));
+        assert_eq!(CapsNetConfig::by_name("bogus"), None);
+    }
+}

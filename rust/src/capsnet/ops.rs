@@ -1,0 +1,262 @@
+//! The five CapsuleNet inference operations the paper profiles (Fig 4),
+//! each described as the GEMM the 16x16 systolic array executes.
+
+use super::network::CapsNetConfig;
+
+/// The operation kinds of the paper's Fig 4, in execution order.
+///
+/// `SumSquash` and `UpdateSum` execute once per routing iteration (the
+/// red feedback loop of Fig 2); the final iteration needs no Update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// C1 — 9x9 stride-1 convolution + ReLU.
+    Conv1,
+    /// PC — 9x9 stride-2 convolution + per-capsule squash.
+    PrimaryCaps,
+    /// CC-FC — prediction vectors û = W·u.
+    ClassCapsFc,
+    /// Sum+Squash — s_j = Σ_i c_ij û_j|i ; v_j = squash(s_j).
+    SumSquash,
+    /// Update+Sum — b_ij += û·v ; c = softmax(b).
+    UpdateSum,
+}
+
+/// Canonical execution order (one entry per *kind*; repetition across
+/// routing iterations is expanded by [`Operation::schedule`]).
+pub const OP_SEQUENCE: [OpKind; 5] = [
+    OpKind::Conv1,
+    OpKind::PrimaryCaps,
+    OpKind::ClassCapsFc,
+    OpKind::SumSquash,
+    OpKind::UpdateSum,
+];
+
+impl OpKind {
+    /// Short label used in the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Conv1 => "C1",
+            OpKind::PrimaryCaps => "PC",
+            OpKind::ClassCapsFc => "CC-FC",
+            OpKind::SumSquash => "Sum+Squash",
+            OpKind::UpdateSum => "Update+Sum",
+        }
+    }
+
+    /// How many times this op runs in one inference.
+    pub fn executions(&self, cfg: &CapsNetConfig) -> u64 {
+        match self {
+            OpKind::SumSquash => cfg.routing_iters,
+            // no Update after the last iteration
+            OpKind::UpdateSum => cfg.routing_iters.saturating_sub(1),
+            _ => 1,
+        }
+    }
+}
+
+/// One operation instantiated against a concrete network: the GEMM shape
+/// the systolic array runs plus the value traffic around it.
+///
+/// GEMM convention: `M` data rows stream against a stationary `K x N`
+/// weight tile grid (K = reduction depth, N = output channels).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Operation {
+    pub kind: OpKind,
+    /// Data rows streamed through the array.
+    pub m: u64,
+    /// Reduction (dot-product) depth.
+    pub k: u64,
+    /// Output channels.
+    pub n: u64,
+    /// Total weight values this op consumes from the weight memory.
+    /// (For routing ops these are the coupling coefficients / v vectors,
+    /// which the paper keeps on-chip.)
+    pub weight_values: u64,
+    /// Unique input values fetched into the data memory (from off-chip,
+    /// per Eq. 2 of the paper — 0 for the routing ops).
+    pub input_values: u64,
+    /// Output values produced (written off-chip per Eq. 2, except for
+    /// CC-FC and routing ops whose outputs stay on-chip).
+    pub output_values: u64,
+    /// Does the weight set stay resident across M (true convs) or is it
+    /// single-use per row (CC-FC, where each W_ij serves exactly one u_i)?
+    pub weight_reuse: bool,
+    /// True if inputs/outputs stay on-chip (routing loop ops).
+    pub on_chip_only: bool,
+}
+
+impl Operation {
+    /// Instantiate one op kind against a network config.
+    pub fn new(kind: OpKind, cfg: &CapsNetConfig) -> Operation {
+        let hw1 = cfg.conv1_out_hw();
+        let i = cfg.num_primary_caps();
+        let j = cfg.num_classes;
+        let e = cfg.class_dim;
+        match kind {
+            OpKind::Conv1 => Operation {
+                kind,
+                m: hw1 * hw1,
+                k: cfg.conv1_kernel * cfg.conv1_kernel * cfg.in_channels,
+                n: cfg.conv1_channels,
+                weight_values: cfg.conv1_weights(),
+                input_values: cfg.input_values(),
+                output_values: cfg.conv1_out_values(),
+                weight_reuse: true,
+                on_chip_only: false,
+            },
+            OpKind::PrimaryCaps => Operation {
+                kind,
+                m: cfg.pc_out_hw() * cfg.pc_out_hw(),
+                k: cfg.pc_kernel * cfg.pc_kernel * cfg.conv1_channels,
+                n: cfg.pc_channels,
+                weight_values: cfg.pc_weights(),
+                input_values: cfg.conv1_out_values(),
+                output_values: cfg.pc_out_values(),
+                weight_reuse: true,
+                on_chip_only: false,
+            },
+            OpKind::ClassCapsFc => Operation {
+                kind,
+                // per-capsule matmuls: I rows of depth D producing J*E
+                m: i,
+                k: cfg.caps_dim,
+                n: j * e,
+                weight_values: cfg.cc_weights(),
+                input_values: cfg.pc_out_values(),
+                // û stays on-chip for the routing loop
+                output_values: cfg.u_hat_values(),
+                weight_reuse: false,
+                on_chip_only: false,
+            },
+            OpKind::SumSquash => Operation {
+                kind,
+                // reduce I capsules into J class sums of width E
+                m: j,
+                k: i,
+                n: e,
+                // "weights" are the coupling coefficients c_ij (on-chip)
+                weight_values: cfg.coupling_values(),
+                input_values: 0,
+                output_values: cfg.class_out_values(),
+                weight_reuse: true,
+                on_chip_only: true,
+            },
+            OpKind::UpdateSum => Operation {
+                kind,
+                // agreement dot products: I*J dots of depth E
+                m: i,
+                k: e,
+                n: j,
+                // "weights" are the v vectors (J*E values, on-chip)
+                weight_values: cfg.class_out_values(),
+                input_values: 0,
+                output_values: cfg.coupling_values(),
+                weight_reuse: true,
+                on_chip_only: true,
+            },
+        }
+    }
+
+    /// Multiply-accumulate count of one execution of this op.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            // each u_hat element is a D-deep dot: I*J*E*D
+            OpKind::ClassCapsFc => self.m * self.k * self.n,
+            _ => self.m * self.k * self.n,
+        }
+    }
+
+    /// The full inference schedule: operations in execution order with
+    /// routing repetition expanded (C1, PC, CC-FC, then
+    /// [SumSquash, UpdateSum] x (iters-1), SumSquash).
+    pub fn schedule(cfg: &CapsNetConfig) -> Vec<Operation> {
+        let mut out = vec![
+            Operation::new(OpKind::Conv1, cfg),
+            Operation::new(OpKind::PrimaryCaps, cfg),
+            Operation::new(OpKind::ClassCapsFc, cfg),
+        ];
+        for it in 0..cfg.routing_iters {
+            out.push(Operation::new(OpKind::SumSquash, cfg));
+            if it != cfg.routing_iters - 1 {
+                out.push(Operation::new(OpKind::UpdateSum, cfg));
+            }
+        }
+        out
+    }
+
+    /// One op of each kind (the paper's Fig 4 x-axis).
+    pub fn all_kinds(cfg: &CapsNetConfig) -> Vec<Operation> {
+        OP_SEQUENCE.iter().map(|k| Operation::new(*k, cfg)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist_op(kind: OpKind) -> Operation {
+        Operation::new(kind, &CapsNetConfig::mnist())
+    }
+
+    #[test]
+    fn conv1_gemm_shape() {
+        let op = mnist_op(OpKind::Conv1);
+        assert_eq!((op.m, op.k, op.n), (400, 81, 256));
+        assert_eq!(op.macs(), 400 * 81 * 256);
+        assert_eq!(op.input_values, 784);
+        assert_eq!(op.output_values, 102_400);
+    }
+
+    #[test]
+    fn primarycaps_gemm_shape() {
+        let op = mnist_op(OpKind::PrimaryCaps);
+        assert_eq!((op.m, op.k, op.n), (36, 20_736, 256));
+        assert_eq!(op.input_values, 102_400);
+        assert_eq!(op.output_values, 9_216);
+    }
+
+    #[test]
+    fn classcaps_has_no_weight_reuse() {
+        let op = mnist_op(OpKind::ClassCapsFc);
+        assert!(!op.weight_reuse);
+        assert_eq!(op.weight_values, 1_474_560);
+        assert_eq!(op.macs(), 1152 * 8 * 160);
+    }
+
+    #[test]
+    fn routing_ops_are_on_chip_only() {
+        assert!(mnist_op(OpKind::SumSquash).on_chip_only);
+        assert!(mnist_op(OpKind::UpdateSum).on_chip_only);
+        // Eq 1/2 of the paper: no off-chip traffic for the last two ops
+        assert_eq!(mnist_op(OpKind::SumSquash).input_values, 0);
+    }
+
+    #[test]
+    fn schedule_expands_routing_iterations() {
+        let cfg = CapsNetConfig::mnist();
+        let sched = Operation::schedule(&cfg);
+        // C1, PC, CC-FC, SS, US, SS, US, SS  (3 iters)
+        assert_eq!(sched.len(), 8);
+        assert_eq!(sched[0].kind, OpKind::Conv1);
+        assert_eq!(
+            sched.iter().filter(|o| o.kind == OpKind::SumSquash).count(),
+            3
+        );
+        assert_eq!(
+            sched.iter().filter(|o| o.kind == OpKind::UpdateSum).count(),
+            2
+        );
+        assert_eq!(sched.last().unwrap().kind, OpKind::SumSquash);
+    }
+
+    #[test]
+    fn executions_match_schedule() {
+        let cfg = CapsNetConfig::mnist();
+        let sched = Operation::schedule(&cfg);
+        for kind in OP_SEQUENCE {
+            let in_sched =
+                sched.iter().filter(|o| o.kind == kind).count() as u64;
+            assert_eq!(in_sched, kind.executions(&cfg), "{kind:?}");
+        }
+    }
+}

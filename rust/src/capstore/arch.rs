@@ -1,0 +1,348 @@
+//! The six CapStore memory organizations (the paper's Table 1) and their
+//! CACTI-level evaluation (Table 2).
+//!
+//! * **SMP** — one shared multi-port memory (3 ports: weight, data,
+//!   accumulator traffic share the array).
+//! * **SEP** — three dedicated single-port memories sized at each
+//!   component's own worst case.
+//! * **HY** — hybrid: three small dedicated memories sized at each
+//!   component's *minimum* requirement, plus a shared 3-port overflow
+//!   memory covering the worst-case remainder.
+//!
+//! Each comes with or without sector-level power gating (`PG-` prefix).
+//! Banks follow the systolic array's parallelism (16); sector counts are
+//! chosen so the gating granularity tracks the utilization steps of
+//! Fig 4a/4c (the DSE sweeps them).
+
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::error::Result;
+use crate::memsim::cacti::{self, SramConfig, SramCosts, Technology};
+use crate::memsim::powergate::PowerGateModel;
+
+/// Which traffic class a macro serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoryRole {
+    /// Shared multi-port macro carrying all three traffic classes.
+    Shared,
+    Weight,
+    Data,
+    Accumulator,
+}
+
+impl MemoryRole {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemoryRole::Shared => "Shared",
+            MemoryRole::Weight => "Weight",
+            MemoryRole::Data => "Data",
+            MemoryRole::Accumulator => "Accum",
+        }
+    }
+}
+
+/// The organization axis of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Organization {
+    Smp { gated: bool },
+    Sep { gated: bool },
+    Hy { gated: bool },
+}
+
+impl Organization {
+    pub fn all() -> [Organization; 6] {
+        [
+            Organization::Smp { gated: false },
+            Organization::Smp { gated: true },
+            Organization::Sep { gated: false },
+            Organization::Sep { gated: true },
+            Organization::Hy { gated: false },
+            Organization::Hy { gated: true },
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Organization::Smp { gated: false } => "SMP",
+            Organization::Smp { gated: true } => "PG-SMP",
+            Organization::Sep { gated: false } => "SEP",
+            Organization::Sep { gated: true } => "PG-SEP",
+            Organization::Hy { gated: false } => "HY",
+            Organization::Hy { gated: true } => "PG-HY",
+        }
+    }
+
+    pub fn gated(&self) -> bool {
+        match self {
+            Organization::Smp { gated }
+            | Organization::Sep { gated }
+            | Organization::Hy { gated } => *gated,
+        }
+    }
+}
+
+/// One physical SRAM macro of an organization, with its evaluated costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryMacro {
+    pub role: MemoryRole,
+    pub sram: SramConfig,
+    pub costs: SramCosts,
+    /// Power-gating area overhead for this macro, mm² (0 when ungated).
+    pub pg_area_mm2: f64,
+}
+
+impl MemoryMacro {
+    /// Total area including gating circuitry.
+    pub fn area_mm2(&self) -> f64 {
+        self.costs.area_mm2 + self.pg_area_mm2
+    }
+}
+
+/// A fully-instantiated CapStore memory architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapStoreArch {
+    pub organization: Organization,
+    pub macros: Vec<MemoryMacro>,
+    pub pg_model: PowerGateModel,
+}
+
+/// Default bank count: the 16-wide systolic array (paper §4.2:
+/// "the parallelism ... suggests to employ 16 banks").
+pub const DEFAULT_BANKS: u64 = 16;
+/// Default sector count for gated organizations (DSE sweeps this).
+pub const DEFAULT_SECTORS: u64 = 64;
+
+impl CapStoreArch {
+    /// Build an organization from the requirements analysis (the paper's
+    /// §4.2 application-aware sizing rules), with explicit bank/sector
+    /// counts so the DSE can sweep them.
+    pub fn build(
+        org: Organization,
+        req: &RequirementsAnalysis,
+        tech: &Technology,
+        banks: u64,
+        sectors: u64,
+    ) -> Result<CapStoreArch> {
+        let pg = PowerGateModel::default();
+        let sectors = if org.gated() { sectors } else { 1 };
+        let maxc = req.max_components();
+        let minc = req.min_components();
+
+        let mut specs: Vec<(MemoryRole, u64, u64)> = Vec::new(); // role, size, ports
+        match org {
+            Organization::Smp { .. } => {
+                // worst-case simultaneous total, one 3-port macro
+                specs.push((MemoryRole::Shared, req.max_total(), 3));
+            }
+            Organization::Sep { .. } => {
+                // per-component worst case; weight/data single-port, the
+                // accumulator 2-ported (read-modify-write every cycle)
+                specs.push((MemoryRole::Weight, maxc.weight, 1));
+                specs.push((MemoryRole::Data, maxc.data, 1));
+                specs.push((MemoryRole::Accumulator, maxc.accum, 2));
+            }
+            Organization::Hy { .. } => {
+                // dedicated minima (minimum *nonzero* utilization of
+                // Fig 4c — a macro sized 0 would be pointless) + shared
+                // overflow for the worst-case remainder
+                let dedicated = minc.data + minc.weight + minc.accum;
+                let shared = req.max_total().saturating_sub(dedicated);
+                specs.push((MemoryRole::Shared, shared, 3));
+                specs.push((MemoryRole::Weight, minc.weight.max(1), 1));
+                specs.push((MemoryRole::Data, minc.data.max(1), 1));
+                specs.push((MemoryRole::Accumulator, minc.accum.max(1), 2));
+            }
+        }
+
+        let mut macros = Vec::new();
+        for (role, want, ports) in specs {
+            let size = RequirementsAnalysis::bankable(want, banks, sectors);
+            let sram = SramConfig::new(size, banks, sectors, ports);
+            let costs = cacti::evaluate(&sram, tech)?;
+            let pg_area = if org.gated() {
+                pg.area_overhead_mm2(size, sectors)
+            } else {
+                0.0
+            };
+            macros.push(MemoryMacro { role, sram, costs, pg_area_mm2: pg_area });
+        }
+
+        Ok(CapStoreArch { organization: org, macros, pg_model: pg })
+    }
+
+    /// Build with the paper's defaults (16 banks; 64 sectors when gated).
+    pub fn build_default(
+        org: Organization,
+        req: &RequirementsAnalysis,
+        tech: &Technology,
+    ) -> Result<CapStoreArch> {
+        Self::build(org, req, tech, DEFAULT_BANKS, DEFAULT_SECTORS)
+    }
+
+    /// All six Table-1 organizations.
+    pub fn all_default(
+        req: &RequirementsAnalysis,
+        tech: &Technology,
+    ) -> Result<Vec<CapStoreArch>> {
+        Organization::all()
+            .iter()
+            .map(|o| Self::build_default(*o, req, tech))
+            .collect()
+    }
+
+    /// Total capacity, bytes.
+    pub fn capacity(&self) -> u64 {
+        self.macros.iter().map(|m| m.sram.size_bytes).sum()
+    }
+
+    /// Total area including gating, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.macros.iter().map(|m| m.area_mm2()).sum()
+    }
+
+    /// Find the macro serving a role; Shared serves everything in SMP.
+    pub fn macro_for(&self, role: MemoryRole) -> &MemoryMacro {
+        self.macros
+            .iter()
+            .find(|m| m.role == role)
+            .or_else(|| {
+                self.macros.iter().find(|m| m.role == MemoryRole::Shared)
+            })
+            .expect("organization has no macro for role")
+    }
+
+    /// In HY, traffic for a component splits between its dedicated macro
+    /// (up to its capacity share) and the shared overflow macro.  Returns
+    /// (dedicated_fraction, shared_fraction) of the component's bytes
+    /// given the per-op requirement `need` for that component.
+    pub fn hy_split(&self, role: MemoryRole, need: u64) -> (f64, f64) {
+        debug_assert_ne!(role, MemoryRole::Shared);
+        match self.organization {
+            Organization::Smp { .. } => (0.0, 1.0),
+            Organization::Sep { .. } => (1.0, 0.0),
+            Organization::Hy { .. } => {
+                let ded = self
+                    .macros
+                    .iter()
+                    .find(|m| m.role == role)
+                    .map(|m| m.sram.size_bytes)
+                    .unwrap_or(0);
+                if need == 0 {
+                    (1.0, 0.0)
+                } else {
+                    let f = (ded as f64 / need as f64).min(1.0);
+                    (f, 1.0 - f)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::systolic::ArrayConfig;
+    use crate::capsnet::CapsNetConfig;
+
+    fn req() -> RequirementsAnalysis {
+        RequirementsAnalysis::analyze(
+            &CapsNetConfig::mnist(),
+            &ArrayConfig::default(),
+        )
+    }
+
+    fn all() -> Vec<CapStoreArch> {
+        CapStoreArch::all_default(&req(), &Technology::default()).unwrap()
+    }
+
+    #[test]
+    fn six_organizations_build() {
+        let archs = all();
+        assert_eq!(archs.len(), 6);
+        let labels: Vec<&str> =
+            archs.iter().map(|a| a.organization.label()).collect();
+        assert_eq!(labels, ["SMP", "PG-SMP", "SEP", "PG-SEP", "HY", "PG-HY"]);
+    }
+
+    #[test]
+    fn smp_has_one_3port_macro() {
+        let archs = all();
+        let smp = &archs[0];
+        assert_eq!(smp.macros.len(), 1);
+        assert_eq!(smp.macros[0].sram.ports, 3);
+        assert_eq!(smp.macros[0].sram.banks, 16);
+        assert_eq!(smp.macros[0].sram.sectors, 1); // ungated -> 1 sector
+    }
+
+    #[test]
+    fn sep_has_dedicated_macros_with_rmw_accumulator() {
+        let archs = all();
+        let sep = &archs[2];
+        assert_eq!(sep.macros.len(), 3);
+        for m in &sep.macros {
+            match m.role {
+                MemoryRole::Accumulator => assert_eq!(m.sram.ports, 2),
+                _ => assert_eq!(m.sram.ports, 1),
+            }
+        }
+    }
+
+    #[test]
+    fn sep_capacity_exceeds_smp_but_area_is_lower() {
+        // Table 2 / Fig 10a: "SEP ... higher memory size ... the area
+        // occupied is significantly lower" (single- vs 3-port)
+        let archs = all();
+        let smp = &archs[0];
+        let sep = &archs[2];
+        assert!(sep.capacity() >= smp.capacity());
+        assert!(sep.area_mm2() < smp.area_mm2());
+    }
+
+    #[test]
+    fn gated_variants_cost_area() {
+        // Table 2: PG-SMP area >> SMP area (sleep-transistor overhead)
+        let archs = all();
+        for pair in archs.chunks(2) {
+            assert!(
+                pair[1].area_mm2() > pair[0].area_mm2(),
+                "{} !> {}",
+                pair[1].organization.label(),
+                pair[0].organization.label()
+            );
+            assert!(pair[1].organization.gated());
+        }
+    }
+
+    #[test]
+    fn hy_shared_plus_dedicated_covers_worst_case() {
+        let r = req();
+        let archs = all();
+        let hy = &archs[4];
+        assert_eq!(hy.macros.len(), 4);
+        assert!(hy.capacity() >= r.max_total());
+    }
+
+    #[test]
+    fn capacities_are_bankable() {
+        for a in all() {
+            for m in &a.macros {
+                assert_eq!(m.sram.size_bytes % (m.sram.banks * m.sram.sectors), 0);
+                m.sram.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn hy_split_fractions_sum_to_one() {
+        let archs = all();
+        let hy = &archs[4];
+        let (d, s) = hy.hy_split(MemoryRole::Data, 200_000);
+        assert!((d + s - 1.0).abs() < 1e-12);
+        assert!(d > 0.0 && s > 0.0);
+        // SEP puts everything in the dedicated macro
+        let sep = &archs[2];
+        assert_eq!(sep.hy_split(MemoryRole::Data, 200_000), (1.0, 0.0));
+        // SMP puts everything in the shared macro
+        let smp = &archs[0];
+        assert_eq!(smp.hy_split(MemoryRole::Data, 200_000), (0.0, 1.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! The CapStore on-chip memory: organizations, sector layout, and the
+//! application-aware power-management unit (the paper's §4).
+
+pub mod arch;
+pub mod eventsim;
+pub mod pmu;
+
+pub use arch::{CapStoreArch, MemoryMacro, MemoryRole, Organization};
+pub use eventsim::{EventSim, EventSimResult};
+pub use pmu::{GatingSchedule, Pmu, PmuEvent, PmuState};

@@ -1,0 +1,339 @@
+//! Application-aware Power Management Unit (the paper's §4.3).
+//!
+//! The PMU knows the CapsuleNet's processing flow (Fig 4a/4c utilization
+//! per operation) and drives the sleep transistors through a 2-way
+//! req/ack handshake (Fig 8), turning OFF every sector that the next
+//! operation will not touch and waking sectors *ahead* of the operation
+//! boundary so the wakeup latency (Fig 9) never stalls the array.
+//!
+//! Two pieces:
+//! * [`Pmu`] — the handshake FSM for one gating domain, stepped in
+//!   cycles; reproduces the Fig 9 timing diagram and is the model the
+//!   coordinator embeds.
+//! * [`GatingSchedule`] — the application-aware plan: for each operation
+//!   of the inference, how many sectors of each macro are ON, derived
+//!   from the requirements analysis; it also accounts transitions so the
+//!   energy model can charge wakeup costs.
+
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
+use crate::capstore::arch::{CapStoreArch, MemoryRole};
+use crate::memsim::powergate::PowerGateModel;
+
+/// Sleep FSM states for one gating domain (ON/OFF plus the handshake
+/// transitions of Fig 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PmuState {
+    On,
+    /// sleep_req asserted, waiting for ack + discharge.
+    Sleeping { remaining: u64 },
+    Off,
+    /// wake_req asserted, virtual ground recharging.
+    Waking { remaining: u64 },
+}
+
+/// Events emitted by the FSM (for the trace/test harness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PmuEvent {
+    SleepRequested,
+    SleepAcked,
+    WakeRequested,
+    WakeAcked,
+}
+
+/// Handshake FSM for one gating domain.
+#[derive(Debug, Clone)]
+pub struct Pmu {
+    pub state: PmuState,
+    model: PowerGateModel,
+    /// completed OFF→ON transitions (wakeup-energy accounting)
+    pub wakeups: u64,
+    pub sleeps: u64,
+}
+
+impl Pmu {
+    pub fn new(model: PowerGateModel) -> Self {
+        Pmu { state: PmuState::On, model, wakeups: 0, sleeps: 0 }
+    }
+
+    /// Request the domain to sleep.  No-op unless fully ON (the paper's
+    /// protocol forbids overlapping transitions).
+    pub fn request_sleep(&mut self) -> Option<PmuEvent> {
+        if self.state == PmuState::On {
+            self.state =
+                PmuState::Sleeping { remaining: self.model.sleep_cycles };
+            Some(PmuEvent::SleepRequested)
+        } else {
+            None
+        }
+    }
+
+    /// Request wakeup.  No-op unless fully OFF.
+    pub fn request_wake(&mut self) -> Option<PmuEvent> {
+        if self.state == PmuState::Off {
+            self.state =
+                PmuState::Waking { remaining: self.model.wakeup_cycles };
+            Some(PmuEvent::WakeRequested)
+        } else {
+            None
+        }
+    }
+
+    /// Advance `cycles`; returns the ack event if a transition completed.
+    pub fn step(&mut self, cycles: u64) -> Option<PmuEvent> {
+        match self.state {
+            PmuState::Sleeping { remaining } => {
+                if cycles >= remaining {
+                    self.state = PmuState::Off;
+                    self.sleeps += 1;
+                    Some(PmuEvent::SleepAcked)
+                } else {
+                    self.state =
+                        PmuState::Sleeping { remaining: remaining - cycles };
+                    None
+                }
+            }
+            PmuState::Waking { remaining } => {
+                if cycles >= remaining {
+                    self.state = PmuState::On;
+                    self.wakeups += 1;
+                    Some(PmuEvent::WakeAcked)
+                } else {
+                    self.state =
+                        PmuState::Waking { remaining: remaining - cycles };
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Is the domain usable (full swing)?
+    pub fn usable(&self) -> bool {
+        self.state == PmuState::On
+    }
+}
+
+/// Per-operation gating plan for one architecture: for every op in the
+/// inference schedule, the ON-sector count per macro.
+#[derive(Debug, Clone)]
+pub struct GatingSchedule {
+    /// (op kind, per-macro ON sectors) in schedule order.
+    pub steps: Vec<(OpKind, Vec<u64>)>,
+    /// per-macro total sector count.
+    pub total_sectors: Vec<u64>,
+    /// per-macro number of OFF→ON transitions over the whole inference.
+    pub wakeups: Vec<u64>,
+    /// per-macro gated bytes per sector.
+    pub sector_bytes: Vec<u64>,
+}
+
+impl GatingSchedule {
+    /// Derive the application-aware plan: sectors needed = ceil(need /
+    /// sector_capacity) per macro per op.  Ungated organizations keep
+    /// everything ON.
+    pub fn plan(
+        arch: &CapStoreArch,
+        req: &RequirementsAnalysis,
+        cfg: &CapsNetConfig,
+    ) -> GatingSchedule {
+        let schedule = Operation::schedule(cfg);
+        let gated = arch.organization.gated();
+
+        let total_sectors: Vec<u64> =
+            arch.macros.iter().map(|m| m.sram.sectors).collect();
+        let sector_bytes: Vec<u64> = arch
+            .macros
+            .iter()
+            .map(|m| m.sram.size_bytes / m.sram.sectors)
+            .collect();
+
+        let mut steps = Vec::new();
+        for op in &schedule {
+            let need = req.get(op.kind);
+            let on: Vec<u64> = arch
+                .macros
+                .iter()
+                .zip(&total_sectors)
+                .zip(&sector_bytes)
+                .map(|((m, &total), &sbytes)| {
+                    if !gated {
+                        return total;
+                    }
+                    let want = match m.role {
+                        MemoryRole::Shared => {
+                            // shared macro absorbs whatever the dedicated
+                            // macros (if any) don't cover
+                            let ded: u64 = arch
+                                .macros
+                                .iter()
+                                .filter(|d| d.role != MemoryRole::Shared)
+                                .map(|d| d.sram.size_bytes)
+                                .sum();
+                            need.total().saturating_sub(ded)
+                        }
+                        MemoryRole::Weight => need.weight,
+                        MemoryRole::Data => need.data,
+                        MemoryRole::Accumulator => need.accum,
+                    };
+                    want.div_ceil(sbytes.max(1)).min(total)
+                })
+                .collect();
+            steps.push((op.kind, on));
+        }
+
+        // transitions: a wakeup whenever a macro's ON count rises between
+        // consecutive ops (and the initial power-on of the first op)
+        let nmac = arch.macros.len();
+        let mut wakeups = vec![0u64; nmac];
+        let mut prev = vec![0u64; nmac];
+        for (_, on) in &steps {
+            for i in 0..nmac {
+                wakeups[i] += on[i].saturating_sub(prev[i]);
+                prev[i] = on[i];
+            }
+        }
+
+        GatingSchedule { steps, total_sectors, wakeups, sector_bytes }
+    }
+
+    /// Average ON fraction of macro `i` weighted by op cycle counts.
+    pub fn on_fraction(&self, mac: usize, op_cycles: &[u64]) -> f64 {
+        assert_eq!(op_cycles.len(), self.steps.len());
+        let total: u64 = op_cycles.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let weighted: f64 = self
+            .steps
+            .iter()
+            .zip(op_cycles)
+            .map(|((_, on), &cy)| {
+                on[mac] as f64 / self.total_sectors[mac].max(1) as f64
+                    * cy as f64
+            })
+            .sum();
+        weighted / total as f64
+    }
+
+    /// Total wakeup energy for the whole inference, pJ.
+    pub fn wakeup_energy_pj(&self, pg: &PowerGateModel) -> f64 {
+        self.wakeups
+            .iter()
+            .zip(&self.sector_bytes)
+            .map(|(&w, &sb)| w as f64 * pg.wakeup_energy_pj(sb))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::systolic::ArrayConfig;
+    use crate::capstore::arch::Organization;
+    use crate::memsim::cacti::Technology;
+
+    fn setup(org: Organization) -> (CapStoreArch, RequirementsAnalysis, CapsNetConfig) {
+        let cfg = CapsNetConfig::mnist();
+        let req =
+            RequirementsAnalysis::analyze(&cfg, &ArrayConfig::default());
+        let arch =
+            CapStoreArch::build_default(org, &req, &Technology::default())
+                .unwrap();
+        (arch, req, cfg)
+    }
+
+    #[test]
+    fn fsm_full_sleep_cycle_matches_fig9() {
+        let model = PowerGateModel::default();
+        let mut pmu = Pmu::new(model.clone());
+        assert!(pmu.usable());
+
+        assert_eq!(pmu.request_sleep(), Some(PmuEvent::SleepRequested));
+        assert!(!pmu.usable());
+        // ack arrives only after the sleep latency
+        assert_eq!(pmu.step(model.sleep_cycles - 1), None);
+        assert_eq!(pmu.step(1), Some(PmuEvent::SleepAcked));
+        assert_eq!(pmu.state, PmuState::Off);
+
+        assert_eq!(pmu.request_wake(), Some(PmuEvent::WakeRequested));
+        assert_eq!(pmu.step(model.wakeup_cycles), Some(PmuEvent::WakeAcked));
+        assert!(pmu.usable());
+        assert_eq!(pmu.wakeups, 1);
+        assert_eq!(pmu.sleeps, 1);
+    }
+
+    #[test]
+    fn fsm_rejects_overlapping_transitions() {
+        let mut pmu = Pmu::new(PowerGateModel::default());
+        pmu.request_sleep().unwrap();
+        assert_eq!(pmu.request_sleep(), None);
+        assert_eq!(pmu.request_wake(), None); // can't wake mid-sleep
+    }
+
+    #[test]
+    fn ungated_schedule_keeps_everything_on() {
+        let (arch, req, cfg) = setup(Organization::Sep { gated: false });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        for (_, on) in &plan.steps {
+            assert_eq!(on, &plan.total_sectors);
+        }
+    }
+
+    #[test]
+    fn gated_sep_turns_sectors_off() {
+        let (arch, req, cfg) = setup(Organization::Sep { gated: true });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        // during the routing ops the weight memory must be fully gated
+        let widx = arch
+            .macros
+            .iter()
+            .position(|m| m.role == MemoryRole::Weight)
+            .unwrap();
+        let ss = plan
+            .steps
+            .iter()
+            .find(|(k, _)| *k == OpKind::SumSquash)
+            .unwrap();
+        assert_eq!(ss.1[widx], 0, "weight mem should be gated in routing");
+        // and at least one macro is partially gated somewhere
+        let any_partial = plan.steps.iter().any(|(_, on)| {
+            on.iter().zip(&plan.total_sectors).any(|(a, t)| a < t)
+        });
+        assert!(any_partial);
+    }
+
+    #[test]
+    fn transitions_are_rare() {
+        // §5.1: wakeups only happen at operation boundaries — bounded by
+        // ops x sectors
+        let (arch, req, cfg) = setup(Organization::Sep { gated: true });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        let total_wakeups: u64 = plan.wakeups.iter().sum();
+        let bound: u64 = plan.total_sectors.iter().sum::<u64>()
+            * plan.steps.len() as u64;
+        assert!(total_wakeups > 0);
+        assert!(total_wakeups < bound / 4, "{total_wakeups} vs {bound}");
+    }
+
+    #[test]
+    fn on_fraction_bounds() {
+        let (arch, req, cfg) = setup(Organization::Sep { gated: true });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        let cycles = vec![1000u64; plan.steps.len()];
+        for mac in 0..arch.macros.len() {
+            let f = plan.on_fraction(mac, &cycles);
+            assert!((0.0..=1.0).contains(&f), "macro {mac}: {f}");
+        }
+    }
+
+    #[test]
+    fn wakeup_energy_is_negligible_vs_inference_scale() {
+        // §5.1: "the wakeup energy overhead is negligible"
+        let (arch, req, cfg) = setup(Organization::Sep { gated: true });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        let e = plan.wakeup_energy_pj(&arch.pg_model);
+        // well under a µJ while inference energy is hundreds of µJ
+        assert!(e < 1.0e6, "{e} pJ");
+    }
+}

@@ -1,0 +1,13 @@
+//! Config system: a dependency-free mini-TOML parser plus the typed
+//! run configuration the CLI and launcher consume.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! string / integer / float / bool values, `#` comments.  That covers
+//! everything a deployment of this system needs; the shipped presets in
+//! [`schema::presets`] mirror the paper's Table 1 organizations.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{presets, RunConfig};
+pub use toml::TomlDoc;

@@ -1,0 +1,166 @@
+//! Typed run configuration consumed by the CLI / launcher, parsed from
+//! the mini-TOML documents, plus shipped presets for the paper's six
+//! Table-1 organizations.
+
+use std::time::Duration;
+
+use crate::capstore::arch::Organization;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::ServerConfig;
+use crate::error::{Error, Result};
+
+use super::toml::TomlDoc;
+
+/// Everything a `capstore serve`/`analyze` run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Network config name ("mnist" or "small").
+    pub model: String,
+    pub organization: Organization,
+    pub banks: u64,
+    pub sectors: u64,
+    pub queue_depth: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub artifact_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "mnist".into(),
+            organization: Organization::Sep { gated: true },
+            banks: 16,
+            sectors: 64,
+            queue_depth: 64,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Parse an organization label ("SMP", "PG-SEP", ...).
+pub fn parse_organization(label: &str) -> Result<Organization> {
+    Organization::all()
+        .into_iter()
+        .find(|o| o.label().eq_ignore_ascii_case(label))
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown organization {label:?} (want one of SMP, PG-SMP, \
+                 SEP, PG-SEP, HY, PG-HY)"
+            ))
+        })
+}
+
+impl RunConfig {
+    /// Build from a parsed TOML document (missing keys -> defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let organization = parse_organization(doc.str_or(
+            "memory",
+            "organization",
+            d.organization.label(),
+        ))?;
+        Ok(RunConfig {
+            model: doc.str_or("", "model", &d.model).to_string(),
+            organization,
+            banks: doc.u64_or("memory", "banks", d.banks),
+            sectors: doc.u64_or("memory", "sectors", d.sectors),
+            queue_depth: doc.u64_or("server", "queue_depth", d.queue_depth as u64)
+                as usize,
+            max_batch: doc.u64_or("server", "max_batch", d.max_batch as u64)
+                as usize,
+            max_wait: Duration::from_secs_f64(
+                doc.f64_or(
+                    "server",
+                    "max_wait_ms",
+                    d.max_wait.as_secs_f64() * 1.0e3,
+                ) / 1.0e3,
+            ),
+            artifact_dir: doc
+                .str_or("", "artifact_dir", &d.artifact_dir)
+                .to_string(),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&TomlDoc::parse(&text)?)
+    }
+
+    /// Lower into the coordinator's server config.
+    pub fn server_config(&self) -> ServerConfig {
+        ServerConfig {
+            queue_depth: self.queue_depth,
+            batch: BatchPolicy {
+                max_batch: self.max_batch,
+                max_wait: self.max_wait,
+            },
+            organization: self.organization,
+        }
+    }
+}
+
+/// The six shipped presets (one per Table-1 organization).
+pub fn presets() -> Vec<(String, RunConfig)> {
+    Organization::all()
+        .into_iter()
+        .map(|o| {
+            (
+                o.label().to_string(),
+                RunConfig { organization: o, ..RunConfig::default() },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_papers_winner() {
+        let d = RunConfig::default();
+        assert_eq!(d.organization.label(), "PG-SEP");
+        assert_eq!(d.banks, 16);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let doc = TomlDoc::parse(
+            "model = \"small\"\n[memory]\norganization = \"smp\"\nbanks = 8\n\
+             [server]\nmax_batch = 4\nmax_wait_ms = 10\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.organization.label(), "SMP");
+        assert_eq!(c.banks, 8);
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_wait, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn bad_organization_is_an_error() {
+        let doc =
+            TomlDoc::parse("[memory]\norganization = \"XXL\"\n").unwrap();
+        assert!(RunConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn presets_cover_all_six() {
+        let p = presets();
+        assert_eq!(p.len(), 6);
+        assert!(p.iter().any(|(n, _)| n == "PG-HY"));
+    }
+
+    #[test]
+    fn server_config_lowering() {
+        let c = RunConfig::default();
+        let s = c.server_config();
+        assert_eq!(s.batch.max_batch, 8);
+        assert_eq!(s.organization.label(), "PG-SEP");
+    }
+}

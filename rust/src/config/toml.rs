@@ -1,0 +1,203 @@
+//! Mini-TOML parser: sections, scalar key/values, comments.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A scalar TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section -> key -> value.  Keys before any section
+/// header live in the "" section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section", lineno + 1))
+                })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let value = parse_value(v.trim()).map_err(|e| {
+                    Error::Config(format!("line {}: {e}", lineno + 1))
+                })?;
+                doc.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), value);
+            } else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value` or `[section]`",
+                    lineno + 1
+                )));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Typed getter with default.
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(TomlValue::as_u64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(
+        &'a self,
+        section: &str,
+        key: &str,
+        default: &'a str,
+    ) -> &'a str {
+        self.get(section, key).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> std::result::Result<TomlValue, String> {
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {v:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # capstore run config
+            model = "mnist"
+
+            [memory]
+            organization = "PG-SEP"  # the paper's winner
+            banks = 16
+            sectors = 64
+
+            [server]
+            max_wait_ms = 2.5
+            gated = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "model", "?"), "mnist");
+        assert_eq!(doc.str_or("memory", "organization", "?"), "PG-SEP");
+        assert_eq!(doc.u64_or("memory", "banks", 0), 16);
+        assert_eq!(doc.f64_or("server", "max_wait_ms", 0.0), 2.5);
+        assert!(doc.bool_or("server", "gated", false));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.u64_or("a", "y", 7), 7);
+        assert_eq!(doc.str_or("b", "z", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("just words\n").is_err());
+        assert!(TomlDoc::parse("k = @bogus\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = TomlDoc::parse("a = -3\nb = 2.75\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(-3)));
+        assert_eq!(doc.f64_or("", "b", 0.0), 2.75);
+        // negative ints don't coerce to u64
+        assert_eq!(doc.u64_or("", "a", 99), 99);
+    }
+}

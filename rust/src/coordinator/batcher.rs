@@ -1,0 +1,138 @@
+//! Dynamic batcher: groups queued requests into batches matching the
+//! compiled executable sizes, trading latency (wait for more requests)
+//! against throughput (bigger batches amortize dispatch overhead).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Largest batch the engine has an executable for.
+    pub max_batch: usize,
+    /// How long the batcher may hold the first request of a batch while
+    /// waiting for companions.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates items into batches under the policy.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Add an item; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// Returns the pending batch if the wait trigger fired.
+    pub fn poll(&mut self) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.policy.max_wait
+                && !self.pending.is_empty() =>
+            {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// Drain whatever is pending (shutdown path).
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.oldest = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Time remaining until the wait trigger would fire.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest.map(|t| {
+            self.policy.max_wait.saturating_sub(t.elapsed())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn size_trigger_fires_at_max_batch() {
+        let mut b = Batcher::new(policy(3, 1000));
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn wait_trigger_fires_after_deadline() {
+        let mut b = Batcher::new(policy(100, 5));
+        b.push("x");
+        assert!(b.poll().is_none(), "too early");
+        std::thread::sleep(Duration::from_millis(8));
+        assert_eq!(b.poll().unwrap(), vec!["x"]);
+    }
+
+    #[test]
+    fn empty_batcher_never_fires() {
+        let mut b: Batcher<u32> = Batcher::new(policy(2, 0));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.poll().is_none());
+        assert!(b.take().is_none());
+    }
+
+    #[test]
+    fn take_drains_for_shutdown() {
+        let mut b = Batcher::new(policy(10, 1000));
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.take().unwrap(), vec![1, 2]);
+        assert!(b.take().is_none());
+    }
+
+    #[test]
+    fn deadline_countdown_monotone() {
+        let mut b = Batcher::new(policy(10, 50));
+        b.push(());
+        let d1 = b.time_to_deadline().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let d2 = b.time_to_deadline().unwrap();
+        assert!(d2 <= d1);
+    }
+}

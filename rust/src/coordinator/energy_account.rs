@@ -1,0 +1,102 @@
+//! Energy accountant: attributes, per served inference, the memory
+//! energy the selected CapStore organization would consume — the bridge
+//! between the real PJRT execution and the simulated accelerator.
+//!
+//! The per-inference energy of an architecture is precomputed once
+//! (the analysis is workload-static) and multiplied by the number of
+//! inferences served; the accountant also tracks the per-operation split
+//! so the server can report a Fig-10d-style view of what it served.
+
+use crate::analysis::breakdown::{ArchitectureEnergy, EnergyModel};
+use crate::capsnet::{CapsNetConfig, OpKind};
+use crate::capstore::arch::{CapStoreArch, Organization};
+use crate::error::Result;
+use crate::memsim::cacti::Technology;
+
+/// Precomputed per-inference energy for one organization.
+#[derive(Debug, Clone)]
+pub struct EnergyAccountant {
+    pub organization: Organization,
+    pub onchip_pj_per_inference: f64,
+    pub offchip_pj_per_inference: f64,
+    pub accel_pj_per_inference: f64,
+    pub per_op_pj: Vec<(OpKind, f64)>,
+    inferences: u64,
+}
+
+impl EnergyAccountant {
+    /// Build the accountant for a network + organization.
+    pub fn new(cfg: &CapsNetConfig, org: Organization) -> Result<Self> {
+        let model = EnergyModel::new(cfg.clone());
+        let arch =
+            CapStoreArch::build_default(org, &model.req, &Technology::default())?;
+        let ae: ArchitectureEnergy = model.evaluate_arch(&arch);
+        Ok(EnergyAccountant {
+            organization: org,
+            onchip_pj_per_inference: ae.onchip_pj,
+            offchip_pj_per_inference: model.offchip_pj(),
+            accel_pj_per_inference: model.accel_pj(),
+            per_op_pj: ae.per_op_pj,
+            inferences: 0,
+        })
+    }
+
+    /// Record `n` served inferences; returns the energy charged (pJ).
+    pub fn charge(&mut self, n: u64) -> f64 {
+        self.inferences += n;
+        n as f64 * self.total_pj_per_inference()
+    }
+
+    pub fn total_pj_per_inference(&self) -> f64 {
+        self.onchip_pj_per_inference
+            + self.offchip_pj_per_inference
+            + self.accel_pj_per_inference
+    }
+
+    pub fn inferences(&self) -> u64 {
+        self.inferences
+    }
+
+    /// Total simulated energy so far, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.inferences as f64 * self.total_pj_per_inference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_accumulates() {
+        let cfg = CapsNetConfig::mnist();
+        let mut acc =
+            EnergyAccountant::new(&cfg, Organization::Sep { gated: true })
+                .unwrap();
+        let e1 = acc.charge(3);
+        let e2 = acc.charge(2);
+        assert!(e1 > 0.0);
+        assert!((e1 / 3.0 - e2 / 2.0).abs() < 1e-6);
+        assert_eq!(acc.inferences(), 5);
+        assert!((acc.total_pj() - e1 - e2).abs() < 1.0);
+    }
+
+    #[test]
+    fn pg_sep_charges_less_than_smp() {
+        let cfg = CapsNetConfig::mnist();
+        let sep =
+            EnergyAccountant::new(&cfg, Organization::Sep { gated: true })
+                .unwrap();
+        let smp =
+            EnergyAccountant::new(&cfg, Organization::Smp { gated: false })
+                .unwrap();
+        assert!(
+            sep.onchip_pj_per_inference < smp.onchip_pj_per_inference
+        );
+        // off-chip and accel are organization-independent
+        assert_eq!(
+            sep.offchip_pj_per_inference,
+            smp.offchip_pj_per_inference
+        );
+    }
+}

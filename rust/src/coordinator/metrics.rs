@@ -1,0 +1,100 @@
+//! Serving metrics: per-request latency, batch occupancy, throughput.
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Collects latency samples (milliseconds).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1.0e3);
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::from_samples(&self.samples_ms)
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+}
+
+/// Aggregated server-side counters, snapshotted at shutdown.
+#[derive(Debug, Default, Clone)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_occupancy_sum: u64,
+    pub wall_seconds: f64,
+    pub latency: LatencyRecorder,
+    /// simulated memory energy attributed to served inferences, pJ
+    pub sim_energy_pj: f64,
+}
+
+impl ServerMetrics {
+    /// Mean images per dispatched batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum as f64 / self.batches as f64
+        }
+    }
+
+    /// Served inferences per wall second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_seconds
+        }
+    }
+
+    /// Simulated µJ per inference.
+    pub fn energy_uj_per_inference(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.sim_energy_pj / 1.0e6 / self.requests as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_throughput() {
+        let mut m = ServerMetrics::default();
+        m.requests = 10;
+        m.batches = 4;
+        m.batch_occupancy_sum = 10;
+        m.wall_seconds = 2.0;
+        assert_eq!(m.mean_occupancy(), 2.5);
+        assert_eq!(m.throughput(), 5.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.mean_occupancy(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.energy_uj_per_inference(), 0.0);
+    }
+
+    #[test]
+    fn latency_summary() {
+        let mut r = LatencyRecorder::default();
+        r.record(Duration::from_millis(10));
+        r.record(Duration::from_millis(20));
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert!(s.min >= 10.0 && s.max <= 20.1);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the serving loop around the PJRT runtime.
+//!
+//! A bounded request queue feeds a dynamic batcher; a worker thread
+//! drains batches through the [`crate::runtime::InferenceEngine`] while
+//! the energy accountant attributes, per executed inference, the memory
+//! energy the selected CapStore organization would consume (the
+//! simulated-hardware counterpart of the real execution).
+//!
+//! std-only (threads + channels): tokio is not available in this offline
+//! image, and the workload — CPU-bound batched inference — doesn't need
+//! an async reactor.
+
+pub mod batcher;
+pub mod energy_account;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use energy_account::EnergyAccountant;
+pub use metrics::{LatencyRecorder, ServerMetrics};
+pub use server::{InferenceServer, Request, Response, ServerConfig};

@@ -1,0 +1,342 @@
+//! The inference server: bounded queue → dynamic batcher → worker thread
+//! driving the PJRT engine, with latency metrics and simulated-energy
+//! accounting per request.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::capstore::arch::Organization;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::energy_account::EnergyAccountant;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::error::{Error, Result};
+use crate::runtime::engine::{InferenceEngine, InferenceOutput};
+
+/// One inference request: an image plus the reply channel.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    reply: SyncSender<Result<Response>>,
+}
+
+/// Reply to a request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub output: InferenceOutput,
+    pub queue_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Server construction knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub queue_depth: usize,
+    pub batch: BatchPolicy,
+    /// CapStore organization used for the energy accounting.
+    pub organization: Organization,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_depth: 64,
+            batch: BatchPolicy::default(),
+            organization: Organization::Sep { gated: true },
+        }
+    }
+}
+
+/// Handle to submit requests; cloneable across client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+}
+
+impl ServerHandle {
+    /// Submit one image and wait for the result (blocking client API).
+    pub fn infer(&self, image: Vec<f32>) -> Result<Response> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Request { image, submitted: Instant::now(), reply: reply_tx })
+            .map_err(|_| Error::Coordinator("server is shut down".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped reply".into()))?
+    }
+}
+
+/// The running server: owns the worker thread.
+pub struct InferenceServer {
+    handle: ServerHandle,
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+}
+
+impl InferenceServer {
+    /// Start the worker, loading artifacts for `config_name` from
+    /// `artifact_dir` *inside* the worker thread — the xla crate's PJRT
+    /// handles are not `Send`, so the engine must live where it runs.
+    /// Blocks until the engine is loaded (or failed to).
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        config_name: String,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) =
+            sync_channel(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+
+        let stop_w = stop.clone();
+        let metrics_w = metrics.clone();
+        let batch_cfg = cfg.batch.clone();
+        let organization = cfg.organization;
+
+        let worker = std::thread::Builder::new()
+            .name("capstore-worker".into())
+            .spawn(move || {
+                // ---- engine + accountant construction (thread-local) ----
+                let engine = match InferenceEngine::load(
+                    &artifact_dir,
+                    &config_name,
+                ) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut accountant =
+                    match EnergyAccountant::new(&engine.cfg, organization) {
+                        Ok(a) => a,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                let mut batcher: Batcher<Request> =
+                    Batcher::new(BatchPolicy {
+                        max_batch: batch_cfg.max_batch.min(
+                            *engine.batch_sizes().last().unwrap_or(&1)
+                                as usize,
+                        ),
+                        ..batch_cfg
+                    });
+                let _ = ready_tx.send(Ok(()));
+
+                let started = Instant::now();
+                loop {
+                    // wait bounded by the batch deadline so poll() fires
+                    let timeout = batcher
+                        .time_to_deadline()
+                        .unwrap_or(Duration::from_millis(5));
+                    match rx.recv_timeout(timeout) {
+                        Ok(req) => {
+                            if let Some(batch) = batcher.push(req) {
+                                Self::run_batch(
+                                    &engine,
+                                    batch,
+                                    &mut accountant,
+                                    &metrics_w,
+                                );
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            if let Some(batch) = batcher.poll() {
+                                Self::run_batch(
+                                    &engine,
+                                    batch,
+                                    &mut accountant,
+                                    &metrics_w,
+                                );
+                            }
+                            if stop_w.load(Ordering::Acquire) {
+                                break;
+                            }
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // drain on shutdown
+                if let Some(batch) = batcher.take() {
+                    Self::run_batch(&engine, batch, &mut accountant, &metrics_w);
+                }
+                let mut m = metrics_w.lock().expect("metrics poisoned");
+                m.wall_seconds = started.elapsed().as_secs_f64();
+                m.sim_energy_pj = accountant.total_pj();
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn failed: {e}")))?;
+
+        // wait for the engine to come up (or surface the load error)
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = worker.join();
+                return Err(Error::Coordinator(
+                    "worker died during startup".into(),
+                ));
+            }
+        }
+
+        Ok(InferenceServer {
+            handle: ServerHandle { tx },
+            stop,
+            worker: Some(worker),
+            metrics,
+        })
+    }
+
+    fn run_batch(
+        engine: &InferenceEngine,
+        mut batch: Vec<Request>,
+        accountant: &mut EnergyAccountant,
+        metrics: &Arc<Mutex<ServerMetrics>>,
+    ) {
+        let n = batch.len();
+        // take, don't clone: the image is only needed once, for packing
+        // into the PJRT input literal (perf pass, EXPERIMENTS.md #Perf)
+        let images: Vec<Vec<f32>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
+        let result = engine.infer(&images);
+        accountant.charge(n as u64);
+
+        {
+            let mut m = metrics.lock().expect("metrics poisoned");
+            m.requests += n as u64;
+            m.batches += 1;
+            m.batch_occupancy_sum += n as u64;
+        }
+
+        match result {
+            Ok(outputs) => {
+                for (req, output) in batch.into_iter().zip(outputs) {
+                    let queue_ms =
+                        req.submitted.elapsed().as_secs_f64() * 1.0e3;
+                    {
+                        let mut m =
+                            metrics.lock().expect("metrics poisoned");
+                        m.latency.record(req.submitted.elapsed());
+                    }
+                    let _ = req.reply.send(Ok(Response {
+                        output,
+                        queue_ms,
+                        batch_size: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for req in batch {
+                    let _ = req
+                        .reply
+                        .send(Err(Error::Coordinator(msg.clone())));
+                }
+            }
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the worker and return the final metrics.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.stop.store(true, Ordering::Release);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let m = self.metrics.lock().expect("metrics poisoned");
+        m.clone()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn serve_roundtrip_small() {
+        let Some(dir) = artifacts() else { return };
+        let server =
+            InferenceServer::start(dir, "small".into(), ServerConfig::default()).unwrap();
+        let h = server.handle();
+
+        let resp = h.infer(vec![0.3f32; 784]).unwrap();
+        assert_eq!(resp.output.lengths.len(), 10);
+        assert!(resp.batch_size >= 1);
+
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+        assert!(m.sim_energy_pj > 0.0);
+        assert!(m.latency.count() == 1);
+    }
+
+    #[test]
+    fn concurrent_clients_batch_together() {
+        let Some(dir) = artifacts() else { return };
+        let server = InferenceServer::start(
+            dir,
+            "small".into(),
+            ServerConfig {
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(20),
+                },
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            let h = server.handle();
+            joins.push(std::thread::spawn(move || {
+                h.infer(vec![i as f32 / 8.0; 784]).unwrap()
+            }));
+        }
+        let responses: Vec<Response> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(responses.len(), 8);
+
+        let m = server.shutdown();
+        assert_eq!(m.requests, 8);
+        // batching must have grouped at least some requests
+        assert!(m.batches < 8, "batches {}", m.batches);
+        assert!(m.mean_occupancy() > 1.0);
+        assert!(m.energy_uj_per_inference() > 0.0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let Some(dir) = artifacts() else { return };
+        let server =
+            InferenceServer::start(dir, "small".into(), ServerConfig::default()).unwrap();
+        let h = server.handle();
+        let _ = server.shutdown();
+        assert!(h.infer(vec![0.0; 784]).is_err());
+    }
+}

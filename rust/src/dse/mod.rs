@@ -1,0 +1,181 @@
+//! Design-space exploration (the paper's §4.2).
+//!
+//! Sweeps organization × bank count × sector count, evaluates each point
+//! with the full energy model, and reports the Pareto front over
+//! (energy, area).  The paper's Table 1 points are one slice of this
+//! space; `capstore dse` prints the sweep and the winner.
+
+use crate::analysis::breakdown::EnergyModel;
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::{CapStoreArch, Organization};
+use crate::error::Result;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub organization: Organization,
+    pub banks: u64,
+    pub sectors: u64,
+    pub onchip_energy_pj: f64,
+    pub area_mm2: f64,
+    pub capacity_bytes: u64,
+}
+
+impl DesignPoint {
+    /// Weak Pareto dominance on (energy, area): self dominates other.
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        self.onchip_energy_pj <= other.onchip_energy_pj
+            && self.area_mm2 <= other.area_mm2
+            && (self.onchip_energy_pj < other.onchip_energy_pj
+                || self.area_mm2 < other.area_mm2)
+    }
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepSpace {
+    pub banks: Vec<u64>,
+    pub sectors: Vec<u64>,
+    pub organizations: Vec<Organization>,
+}
+
+impl Default for SweepSpace {
+    fn default() -> Self {
+        SweepSpace {
+            banks: vec![4, 8, 16, 32],
+            sectors: vec![8, 16, 32, 64, 128],
+            organizations: Organization::all().to_vec(),
+        }
+    }
+}
+
+/// Run the exploration for a network config.
+pub struct Explorer {
+    pub model: EnergyModel,
+    pub space: SweepSpace,
+}
+
+impl Explorer {
+    pub fn new(cfg: CapsNetConfig) -> Self {
+        Explorer { model: EnergyModel::new(cfg), space: SweepSpace::default() }
+    }
+
+    /// Evaluate every point in the space.  Ungated organizations ignore
+    /// the sector axis (deduplicated to one point per bank count).
+    pub fn sweep(&self) -> Result<Vec<DesignPoint>> {
+        let mut out = Vec::new();
+        for &org in &self.space.organizations {
+            for &banks in &self.space.banks {
+                let sector_axis: &[u64] = if org.gated() {
+                    &self.space.sectors
+                } else {
+                    &[1]
+                };
+                for &sectors in sector_axis {
+                    let arch = CapStoreArch::build(
+                        org,
+                        &self.model.req,
+                        &self.model.tech,
+                        banks,
+                        sectors,
+                    )?;
+                    let e = self.model.evaluate_arch(&arch);
+                    out.push(DesignPoint {
+                        organization: org,
+                        banks,
+                        sectors,
+                        onchip_energy_pj: e.onchip_pj,
+                        area_mm2: e.area_mm2,
+                        capacity_bytes: e.capacity_bytes,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Non-dominated subset, sorted by energy.
+    pub fn pareto(points: &[DesignPoint]) -> Vec<DesignPoint> {
+        let mut front: Vec<DesignPoint> = points
+            .iter()
+            .filter(|p| !points.iter().any(|q| q.dominates(p)))
+            .cloned()
+            .collect();
+        front.sort_by(|a, b| {
+            a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
+        });
+        front
+    }
+
+    /// Lowest-energy point (the paper's selection criterion → PG-SEP).
+    pub fn best_energy(points: &[DesignPoint]) -> Option<&DesignPoint> {
+        points.iter().min_by(|a, b| {
+            a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_explorer() -> Explorer {
+        let mut e = Explorer::new(CapsNetConfig::mnist());
+        // keep unit tests fast: a reduced slice of the space
+        e.space = SweepSpace {
+            banks: vec![8, 16],
+            sectors: vec![16, 64],
+            organizations: Organization::all().to_vec(),
+        };
+        e
+    }
+
+    #[test]
+    fn sweep_covers_expected_points() {
+        let ex = quick_explorer();
+        let pts = ex.sweep().unwrap();
+        // gated: 3 orgs x 2 banks x 2 sectors = 12; ungated: 3 x 2 = 6
+        assert_eq!(pts.len(), 18);
+    }
+
+    #[test]
+    fn best_energy_is_a_gated_sep() {
+        let ex = quick_explorer();
+        let pts = ex.sweep().unwrap();
+        let best = Explorer::best_energy(&pts).unwrap();
+        assert_eq!(
+            best.organization.label(),
+            "PG-SEP",
+            "paper's §5.2 selection"
+        );
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_sorted() {
+        let ex = quick_explorer();
+        let pts = ex.sweep().unwrap();
+        let front = Explorer::pareto(&pts);
+        assert!(!front.is_empty());
+        for (i, p) in front.iter().enumerate() {
+            for q in &front {
+                assert!(!q.dominates(p), "front point dominated");
+            }
+            if i > 0 {
+                assert!(
+                    front[i - 1].onchip_energy_pj <= p.onchip_energy_pj
+                );
+            }
+        }
+        // dominated points exist in the full sweep (front is a strict subset)
+        assert!(front.len() < pts.len());
+    }
+
+    #[test]
+    fn dominance_is_irreflexive() {
+        let ex = quick_explorer();
+        let pts = ex.sweep().unwrap();
+        for p in &pts {
+            assert!(!p.dominates(p));
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All the ways the CapStore stack can fail.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Artifact files (HLO text, weights, manifest) missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA failures surfaced from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Malformed configuration (mini-TOML parse or schema violations).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A memory-architecture invariant was violated (bad bank/sector
+    /// geometry, size not divisible, unknown organization...).
+    #[error("memory model error: {0}")]
+    MemModel(String),
+
+    /// Coordinator/runtime lifecycle failures (queue closed, worker died).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,36 @@
+//! # CapStore — energy-efficient on-chip memory for CapsuleNet accelerators
+//!
+//! Reproduction of *"CapStore: Energy-Efficient Design and Management of the
+//! On-Chip Memory for CapsuleNet Inference Accelerators"* (Marchisio et al.,
+//! 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/` authors the CapsuleNet in JAX
+//!   with Pallas kernels and AOT-lowers it to HLO-text artifacts.
+//! * **L3 (this crate)** — the paper's contribution: the CapsAcc accelerator
+//!   simulator ([`accel`]), CACTI-P-like memory models ([`memsim`]), the
+//!   CapStore memory organizations + application-aware power management
+//!   ([`capstore`]), the §3 analysis pipeline ([`analysis`]), design-space
+//!   exploration ([`dse`]) — plus a PJRT serving [`runtime`] and a threaded
+//!   [`coordinator`] so the whole thing runs real inference while the memory
+//!   system is simulated alongside.
+//!
+//! The experiment index mapping every paper table/figure to a module and a
+//! bench lives in `DESIGN.md`; measured-vs-paper numbers live in
+//! `EXPERIMENTS.md`.
+
+pub mod error;
+pub mod util;
+pub mod testing;
+pub mod capsnet;
+pub mod accel;
+pub mod memsim;
+pub mod capstore;
+pub mod analysis;
+pub mod dse;
+pub mod config;
+pub mod report;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+pub use error::{Error, Result};

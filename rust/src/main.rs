@@ -1,0 +1,478 @@
+//! `capstore` — CLI entrypoint for the CapStore reproduction.
+//!
+//! Subcommands:
+//!   analyze   — the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)
+//!   evaluate  — Table 1/2 + Fig 10 views for the six organizations
+//!   dse       — §4.2 design-space exploration (sweep + Pareto front)
+//!   serve     — run the PJRT inference server on synthetic digits
+//!   info      — artifact manifest + environment summary
+//!
+//! Hand-rolled arg parsing (clap is not in the offline image): flags are
+//! `--key value` pairs after the subcommand.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use capstore::accel::systolic::SystolicSim;
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::analysis::offchip::OffChipTraffic;
+use capstore::analysis::requirements::RequirementsAnalysis;
+use capstore::capsnet::{CapsNetConfig, Operation};
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::config::schema::{parse_organization, RunConfig};
+use capstore::coordinator::server::InferenceServer;
+use capstore::dse::{Explorer, SweepSpace};
+use capstore::report::paper::PaperReference;
+use capstore::report::table::Table;
+use capstore::runtime::manifest::ArtifactManifest;
+use capstore::testing::SplitMix64;
+use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
+use capstore::Result;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = match parse_args(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "analyze" => cmd_analyze(&flags),
+        "evaluate" => cmd_evaluate(&flags),
+        "dse" => cmd_dse(&flags),
+        "serve" => cmd_serve(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("error: unknown subcommand {other:?}");
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "capstore — energy-efficient on-chip memory for CapsuleNet accelerators
+
+USAGE: capstore <analyze|evaluate|dse|serve|info> [--flag value]...
+
+FLAGS (all optional):
+  --model <mnist|small>       network config        [mnist]
+  --config <path.toml>        run config file
+  --org <SMP|PG-SEP|...>      memory organization   [PG-SEP]
+  --banks N --sectors N       memory geometry       [16 / 64]
+  --artifacts <dir>           artifact directory    [artifacts]
+  --requests N                serve: request count  [64]
+  --clients N                 serve: client threads [4]"
+    );
+}
+
+type Flags = BTreeMap<String, String>;
+
+fn parse_args(args: &[String]) -> Result<(String, Flags)> {
+    let mut flags = Flags::new();
+    let cmd = args.first().cloned().unwrap_or_default();
+    let mut i = 1;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| {
+                capstore::Error::Config(format!(
+                    "expected --flag, got {:?}",
+                    args[i]
+                ))
+            })?
+            .to_string();
+        let v = args.get(i + 1).cloned().ok_or_else(|| {
+            capstore::Error::Config(format!("--{k} needs a value"))
+        })?;
+        flags.insert(k, v);
+        i += 2;
+    }
+    Ok((cmd, flags))
+}
+
+/// Assemble the run config from --config file + flag overrides.
+fn run_config(flags: &Flags) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(o) = flags.get("org") {
+        cfg.organization = parse_organization(o)?;
+    }
+    if let Some(b) = flags.get("banks") {
+        cfg.banks = b.parse().map_err(|_| bad_flag("banks", b))?;
+    }
+    if let Some(s) = flags.get("sectors") {
+        cfg.sectors = s.parse().map_err(|_| bad_flag("sectors", s))?;
+    }
+    if let Some(d) = flags.get("artifacts") {
+        cfg.artifact_dir = d.clone();
+    }
+    Ok(cfg)
+}
+
+fn bad_flag(name: &str, v: &str) -> capstore::Error {
+    capstore::Error::Config(format!("--{name}: cannot parse {v:?}"))
+}
+
+fn net(cfg: &RunConfig) -> Result<CapsNetConfig> {
+    CapsNetConfig::by_name(&cfg.model).ok_or_else(|| {
+        capstore::Error::Config(format!("unknown model {:?}", cfg.model))
+    })
+}
+
+// ---------------------------------------------------------------------
+// analyze — Fig 4a-e + Eq 1/2
+// ---------------------------------------------------------------------
+fn cmd_analyze(flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let cfg = net(&rc)?;
+    let sim = SystolicSim::default();
+    let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+    let cap = req.max_total();
+
+    let mut t = Table::new(
+        "Fig 4a/4c — on-chip memory requirements per operation (bytes)",
+        &["op", "data", "weight", "accum", "total", "util%"],
+    );
+    for o in &req.per_op {
+        t.row(vec![
+            o.kind.label().to_string(),
+            o.req.data.to_string(),
+            o.req.weight.to_string(),
+            o.req.accum.to_string(),
+            o.req.total().to_string(),
+            format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
+        ]);
+    }
+    t.print();
+    println!("overall worst case (dashed line): {}\n", fmt_bytes(cap));
+
+    let mut t = Table::new(
+        "Fig 4b — clock cycles per operation",
+        &["op", "execs", "cycles", "total"],
+    );
+    for op in Operation::all_kinds(&cfg) {
+        let p = sim.profile(&op);
+        let execs = op.kind.executions(&cfg);
+        t.row(vec![
+            op.kind.label().into(),
+            execs.to_string(),
+            fmt_si(p.cycles),
+            fmt_si(p.cycles * execs),
+        ]);
+    }
+    t.print();
+    let (_, total) = sim.profile_schedule(&cfg);
+    println!(
+        "inference total: {} cycles = {:.3} ms @ {:.1} GHz\n",
+        fmt_si(total),
+        total as f64 / sim.array.clock_hz * 1e3,
+        sim.array.clock_hz / 1e9
+    );
+
+    let mut t = Table::new(
+        "Fig 4d/4e — on-chip accesses per operation (per execution)",
+        &["op", "data R", "data W", "wt R", "wt W", "acc R", "acc W"],
+    );
+    for op in Operation::all_kinds(&cfg) {
+        let p = sim.profile(&op);
+        t.row(vec![
+            op.kind.label().into(),
+            fmt_si(p.data_reads),
+            fmt_si(p.data_writes),
+            fmt_si(p.weight_reads),
+            fmt_si(p.weight_writes),
+            fmt_si(p.accum_reads),
+            fmt_si(p.accum_writes),
+        ]);
+    }
+    t.print();
+    println!();
+
+    let mut t = Table::new(
+        "Eq (1)/(2) — off-chip accesses per operation",
+        &["op", "reads", "writes"],
+    );
+    for tr in OffChipTraffic::analyze(&cfg, &sim) {
+        t.row(vec![
+            tr.kind.label().into(),
+            fmt_si(tr.reads),
+            fmt_si(tr.writes),
+        ]);
+    }
+    t.print();
+    println!(
+        "total DRAM bytes per inference: {}",
+        fmt_bytes(OffChipTraffic::total_bytes(&cfg, &sim))
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// evaluate — Tables 1/2, Figs 5/10/11
+// ---------------------------------------------------------------------
+fn cmd_evaluate(flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let cfg = net(&rc)?;
+    let model = EnergyModel::new(cfg);
+    let paper = PaperReference::new();
+
+    let archs = CapStoreArch::all_default(&model.req, &model.tech)?;
+    let mut t1 = Table::new(
+        "Table 1 — organizations (sizes in bytes)",
+        &["org", "macro", "size", "banks", "sectors", "ports"],
+    );
+    let mut t2 = Table::new(
+        "Table 2 — area and on-chip energy per organization",
+        &["org", "area mm2", "energy/inf", "vs SMP", "paper vs SMP"],
+    );
+
+    let mut smp_energy = None;
+    for arch in &archs {
+        for m in &arch.macros {
+            t1.row(vec![
+                arch.organization.label().into(),
+                m.role.label().into(),
+                m.sram.size_bytes.to_string(),
+                m.sram.banks.to_string(),
+                m.sram.sectors.to_string(),
+                m.sram.ports.to_string(),
+            ]);
+        }
+        let e = model.evaluate_arch(arch);
+        if arch.organization.label() == "SMP" {
+            smp_energy = Some(e.onchip_pj);
+        }
+        let vs_smp = smp_energy.map(|s| e.onchip_pj / s).unwrap_or(1.0);
+        let paper_ratio = paper
+            .energy_vs_smp(arch.organization.label())
+            .map(|r| format!("{r:.3}"))
+            .unwrap_or_else(|| "-".into());
+        t2.row(vec![
+            arch.organization.label().into(),
+            format!("{:.3}", e.area_mm2),
+            fmt_energy_uj(e.onchip_pj),
+            format!("{vs_smp:.3}"),
+            paper_ratio,
+        ]);
+    }
+    t1.print();
+    println!();
+    t2.print();
+
+    // Fig 5 / Fig 11 headline systems
+    let a = model.all_onchip_baseline()?;
+    let smp = CapStoreArch::build_default(
+        Organization::Smp { gated: false },
+        &model.req,
+        &model.tech,
+    )?;
+    let b = model.system_energy(&smp);
+    let pg_sep = CapStoreArch::build_default(
+        Organization::Sep { gated: true },
+        &model.req,
+        &model.tech,
+    )?;
+    let c = model.system_energy(&pg_sep);
+
+    println!("\n== Fig 5 / Fig 11 — whole-system energy per inference ==");
+    for sys in [&a, &b, &c] {
+        println!(
+            "{:18} accel {:>10}  onchip {:>10}  offchip {:>10}  total {:>10}  (memory {:.1}%)",
+            sys.label,
+            fmt_energy_uj(sys.accel_pj),
+            fmt_energy_uj(sys.onchip_pj),
+            fmt_energy_uj(sys.offchip_pj),
+            fmt_energy_uj(sys.total_pj()),
+            100.0 * sys.memory_share()
+        );
+    }
+    println!();
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "hierarchy saving (b vs a)",
+            1.0 - b.total_pj() / a.total_pj(),
+            PaperReference::HIERARCHY_SAVING
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "PG-SEP on-chip saving vs (b)",
+            1.0 - c.onchip_pj / b.onchip_pj,
+            PaperReference::PG_SEP_ONCHIP_SAVING
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "PG-SEP total saving vs (a)",
+            1.0 - c.total_pj() / a.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_A
+        )
+    );
+    println!(
+        "{}",
+        PaperReference::delta_line(
+            "PG-SEP total saving vs (b)",
+            1.0 - c.total_pj() / b.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_B
+        )
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// dse — §4.2 sweep
+// ---------------------------------------------------------------------
+fn cmd_dse(flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let cfg = net(&rc)?;
+    let mut ex = Explorer::new(cfg);
+    ex.space = SweepSpace::default();
+    let points = ex.sweep()?;
+    let front = Explorer::pareto(&points);
+
+    let mut t = Table::new(
+        "DSE — Pareto front over (on-chip energy, area)",
+        &["org", "banks", "sectors", "energy/inf", "area mm2", "capacity"],
+    );
+    for p in &front {
+        t.row(vec![
+            p.organization.label().into(),
+            p.banks.to_string(),
+            p.sectors.to_string(),
+            fmt_energy_uj(p.onchip_energy_pj),
+            format!("{:.3}", p.area_mm2),
+            fmt_bytes(p.capacity_bytes),
+        ]);
+    }
+    t.print();
+    let best = Explorer::best_energy(&points).expect("non-empty sweep");
+    println!(
+        "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
+        best.organization.label(),
+        best.banks,
+        best.sectors,
+        fmt_energy_uj(best.onchip_energy_pj)
+    );
+    println!("explored {} design points", points.len());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// serve — PJRT inference server on synthetic digits
+// ---------------------------------------------------------------------
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let requests: usize = flags
+        .get("requests")
+        .map(|v| v.parse().map_err(|_| bad_flag("requests", v)))
+        .transpose()?
+        .unwrap_or(64);
+    let clients: usize = flags
+        .get("clients")
+        .map(|v| v.parse().map_err(|_| bad_flag("clients", v)))
+        .transpose()?
+        .unwrap_or(4)
+        .max(1);
+
+    println!(
+        "serving model={} org={} requests={requests} clients={clients}",
+        rc.model,
+        rc.organization.label()
+    );
+    let server = InferenceServer::start(
+        PathBuf::from(&rc.artifact_dir),
+        rc.model.clone(),
+        rc.server_config(),
+    )?;
+
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        let per_client =
+            requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xD161 + c as u64);
+            let mut preds = Vec::new();
+            for _ in 0..per_client {
+                let img: Vec<f32> =
+                    (0..784).map(|_| rng.f64() as f32).collect();
+                let resp = h.infer(img).expect("infer failed");
+                preds.push(resp.output.predicted);
+            }
+            preds
+        }));
+    }
+    let served: usize =
+        joins.into_iter().map(|j| j.join().expect("client died").len()).sum();
+    let m = server.shutdown();
+
+    println!("served {served} requests in {:.2}s", m.wall_seconds);
+    println!(
+        "throughput {:.1} inf/s, mean batch occupancy {:.2}",
+        m.throughput(),
+        m.mean_occupancy()
+    );
+    if let Some(s) = m.latency.summary() {
+        println!(
+            "latency ms: median {:.2} p95 {:.2} max {:.2}",
+            s.median, s.p95, s.max
+        );
+    }
+    println!(
+        "simulated memory+accel energy: {} total, {:.2} µJ/inference ({})",
+        fmt_energy_uj(m.sim_energy_pj),
+        m.energy_uj_per_inference(),
+        rc.organization.label()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// info
+// ---------------------------------------------------------------------
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let dir = PathBuf::from(&rc.artifact_dir);
+    let m = ArtifactManifest::load(&dir)?;
+    println!("artifact dir: {}", dir.display());
+    println!("param order:  {:?}", m.param_order);
+    for (name, entry) in &m.configs {
+        println!(
+            "config {name}: batches {:?}, {} ops, weights {} ({} params)",
+            entry.model.keys().collect::<Vec<_>>(),
+            entry.ops.len(),
+            entry.weights,
+            entry.num_params
+        );
+        if let Some(cfg) = CapsNetConfig::by_name(name) {
+            m.validate_against(name, &cfg)?;
+            println!("  geometry cross-check vs rust model: OK");
+        }
+    }
+    Ok(())
+}

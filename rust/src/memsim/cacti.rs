@@ -1,0 +1,275 @@
+//! Analytical CACTI-P-like SRAM model (32nm).
+//!
+//! For an SRAM of `size_bytes` organized as `banks` independent banks,
+//! each split into `sectors` power-gating sectors, with `ports`
+//! read/write ports:
+//!
+//! * **dynamic energy / access-byte**: decoder+wordline constant plus a
+//!   bitline term growing with √(bank capacity) (a bank is a mat grid;
+//!   both bitline length and the number of columns activated scale with
+//!   the mat side).  Extra ports add ~35% each (longer wordlines over
+//!   wider cells, duplicated sense amps).
+//! * **area**: cell area × capacity × port factor (≈ (1+0.45·(p−1))² —
+//!   each port adds a wordline AND a bitline pair per cell) plus a
+//!   per-bank periphery overhead.
+//! * **leakage**: proportional to area (cell + periphery leakage at 32nm
+//!   high-performance process).
+//!
+//! Banking lowers per-access energy (smaller mats) at an area cost —
+//! the trade the paper's DSE sweeps.
+
+use crate::error::{Error, Result};
+
+/// Technology constants (32nm defaults, single place for calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Technology {
+    /// SRAM cell area including intra-mat wiring, mm² per byte.
+    /// 32nm 6T ≈ 0.171 µm²/bit -> ~1.4e-6 mm²/B with array overhead.
+    pub cell_mm2_per_byte: f64,
+    /// Per-bank periphery (decoder, sense amps, IO) area, mm².
+    pub bank_periphery_mm2: f64,
+    /// Fixed per-access energy (decode + wordline), pJ per accessed byte.
+    pub access_fixed_pj: f64,
+    /// Bitline energy coefficient: pJ per byte per √byte of bank size.
+    pub access_bitline_pj_per_sqrt_byte: f64,
+    /// Write premium over read (full bitline swing), ratio.
+    pub write_premium: f64,
+    /// Energy penalty per extra port (ratio per port beyond the first).
+    pub port_energy_factor: f64,
+    /// Area penalty per extra port (per-port wordline+bitline growth —
+    /// squared in the cell area).
+    pub port_area_factor: f64,
+    /// Leakage power per area, mW per mm² (32nm HP process).
+    pub leakage_mw_per_mm2: f64,
+    /// H-tree / inter-bank routing energy per byte per bank count, pJ.
+    pub htree_pj_per_byte: f64,
+}
+
+impl Default for Technology {
+    fn default() -> Self {
+        Technology {
+            cell_mm2_per_byte: 1.4e-6,
+            bank_periphery_mm2: 0.012,
+            access_fixed_pj: 0.20,
+            access_bitline_pj_per_sqrt_byte: 0.009,
+            write_premium: 1.18,
+            port_energy_factor: 0.50,
+            port_area_factor: 0.80,
+            leakage_mw_per_mm2: 65.0,
+            htree_pj_per_byte: 0.02,
+        }
+    }
+}
+
+/// One SRAM macro: geometry the DSE explores.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SramConfig {
+    pub size_bytes: u64,
+    pub banks: u64,
+    /// Power-gating sectors per bank (1 = no sectoring).
+    pub sectors: u64,
+    /// Read/write ports (the paper's SMP is a 3-port memory).
+    pub ports: u64,
+}
+
+impl SramConfig {
+    pub fn new(size_bytes: u64, banks: u64, sectors: u64, ports: u64) -> Self {
+        SramConfig { size_bytes, banks, sectors, ports }
+    }
+
+    /// Validate geometry: non-zero, divisible, sane port count.
+    pub fn validate(&self) -> Result<()> {
+        if self.size_bytes == 0 {
+            return Err(Error::MemModel("SRAM size must be > 0".into()));
+        }
+        if self.banks == 0 || self.sectors == 0 || self.ports == 0 {
+            return Err(Error::MemModel(
+                "banks, sectors and ports must be > 0".into(),
+            ));
+        }
+        if self.size_bytes % self.banks != 0 {
+            return Err(Error::MemModel(format!(
+                "size {} not divisible into {} banks",
+                self.size_bytes, self.banks
+            )));
+        }
+        if (self.size_bytes / self.banks) % self.sectors != 0 {
+            return Err(Error::MemModel(format!(
+                "bank of {} bytes not divisible into {} sectors",
+                self.size_bytes / self.banks,
+                self.sectors
+            )));
+        }
+        if self.ports > 4 {
+            return Err(Error::MemModel(format!(
+                "{} ports unsupported (max 4)",
+                self.ports
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn bank_bytes(&self) -> u64 {
+        self.size_bytes / self.banks
+    }
+
+    pub fn sector_bytes(&self) -> u64 {
+        self.bank_bytes() / self.sectors
+    }
+}
+
+/// CACTI-like outputs for one SRAM macro.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SramCosts {
+    /// Read energy per accessed byte, pJ.
+    pub read_pj_per_byte: f64,
+    /// Write energy per accessed byte, pJ.
+    pub write_pj_per_byte: f64,
+    /// Total array leakage power (all sectors ON), mW.
+    pub leakage_mw: f64,
+    /// Leakage power of ONE sector (one bank's worth / sectors), mW —
+    /// gating granularity of the PMU.
+    pub sector_leakage_mw: f64,
+    /// Array area (without power-gating circuitry), mm².
+    pub area_mm2: f64,
+}
+
+/// Evaluate the model for a configuration.
+pub fn evaluate(cfg: &SramConfig, tech: &Technology) -> Result<SramCosts> {
+    cfg.validate()?;
+    let p = cfg.ports as f64;
+
+    // --- area -----------------------------------------------------------
+    let port_side = 1.0 + tech.port_area_factor * (p - 1.0);
+    let cell_area =
+        cfg.size_bytes as f64 * tech.cell_mm2_per_byte * port_side * port_side;
+    // periphery replicated per bank and (partially) per port
+    let periphery = cfg.banks as f64
+        * tech.bank_periphery_mm2
+        * (1.0 + 0.6 * (p - 1.0));
+    let area_mm2 = cell_area + periphery;
+
+    // --- dynamic energy ---------------------------------------------------
+    let bank_bytes = cfg.bank_bytes() as f64;
+    let port_energy = 1.0 + tech.port_energy_factor * (p - 1.0);
+    let read_pj_per_byte = (tech.access_fixed_pj
+        + tech.access_bitline_pj_per_sqrt_byte * bank_bytes.sqrt()
+        + tech.htree_pj_per_byte * (cfg.banks as f64).log2().max(1.0))
+        * port_energy;
+    let write_pj_per_byte = read_pj_per_byte * tech.write_premium;
+
+    // --- leakage ----------------------------------------------------------
+    let leakage_mw = area_mm2 * tech.leakage_mw_per_mm2;
+    // a "sector" in the paper gates one sector-index across ALL banks
+    // (Fig 6: one sleep transistor drives sector s of every bank), so the
+    // gating granularity is total_size / sectors.
+    let sector_leakage_mw = leakage_mw / cfg.sectors as f64;
+
+    Ok(SramCosts {
+        read_pj_per_byte,
+        write_pj_per_byte,
+        leakage_mw,
+        sector_leakage_mw,
+        area_mm2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    fn tech() -> Technology {
+        Technology::default()
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        assert!(SramConfig::new(0, 1, 1, 1).validate().is_err());
+        assert!(SramConfig::new(100, 3, 1, 1).validate().is_err()); // 100 % 3
+        assert!(SramConfig::new(128, 16, 3, 1).validate().is_err()); // 8 % 3
+        assert!(SramConfig::new(1024, 16, 1, 5).validate().is_err()); // ports
+        assert!(SramConfig::new(1024, 16, 4, 3).validate().is_ok());
+    }
+
+    #[test]
+    fn bigger_is_costlier() {
+        let small = evaluate(&SramConfig::new(64 << 10, 16, 1, 1), &tech()).unwrap();
+        let big = evaluate(&SramConfig::new(1 << 20, 16, 1, 1), &tech()).unwrap();
+        assert!(big.area_mm2 > small.area_mm2);
+        assert!(big.leakage_mw > small.leakage_mw);
+        assert!(big.read_pj_per_byte > small.read_pj_per_byte);
+    }
+
+    #[test]
+    fn banking_cuts_access_energy_but_adds_area() {
+        let mono = evaluate(&SramConfig::new(512 << 10, 1, 1, 1), &tech()).unwrap();
+        let banked = evaluate(&SramConfig::new(512 << 10, 16, 1, 1), &tech()).unwrap();
+        assert!(banked.read_pj_per_byte < mono.read_pj_per_byte);
+        assert!(banked.area_mm2 > mono.area_mm2);
+    }
+
+    #[test]
+    fn multiport_penalties_match_paper_shape() {
+        // The paper (Fig 10a/b): a shared 3-port memory has much higher
+        // area and energy than the same capacity split into 1-port chips.
+        let one = evaluate(&SramConfig::new(256 << 10, 16, 1, 1), &tech()).unwrap();
+        let three = evaluate(&SramConfig::new(256 << 10, 16, 1, 3), &tech()).unwrap();
+        assert!(three.area_mm2 / one.area_mm2 > 2.5, "area ratio");
+        assert!(three.read_pj_per_byte / one.read_pj_per_byte > 1.5, "energy ratio");
+    }
+
+    #[test]
+    fn energies_are_32nm_magnitudes() {
+        // ~256KB single-port at 32nm: read in the 0.5..5 pJ/B window
+        let c = evaluate(&SramConfig::new(256 << 10, 16, 1, 1), &tech()).unwrap();
+        assert!(c.read_pj_per_byte > 0.3 && c.read_pj_per_byte < 5.0,
+                "{} pJ/B", c.read_pj_per_byte);
+        // leakage tens of mW per mm²-scale macro
+        assert!(c.leakage_mw > 1.0 && c.leakage_mw < 200.0);
+        // area below 1 mm²
+        assert!(c.area_mm2 > 0.05 && c.area_mm2 < 2.0);
+    }
+
+    #[test]
+    fn write_costs_more_than_read() {
+        let c = evaluate(&SramConfig::new(128 << 10, 8, 1, 1), &tech()).unwrap();
+        assert!(c.write_pj_per_byte > c.read_pj_per_byte);
+    }
+
+    #[test]
+    fn sector_leakage_partitions_total() {
+        let c = evaluate(&SramConfig::new(256 << 10, 16, 8, 1), &tech()).unwrap();
+        assert!((c.sector_leakage_mw * 8.0 - c.leakage_mw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_monotonicity_in_size() {
+        check(Config::default().cases(40), |rng| {
+            let banks = *rng.pick(&[1u64, 2, 4, 8, 16]);
+            let base = rng.range(4, 64) * banks * 1024;
+            let a = evaluate(&SramConfig::new(base, banks, 1, 1), &tech()).unwrap();
+            let b = evaluate(&SramConfig::new(base * 2, banks, 1, 1), &tech()).unwrap();
+            assert!(b.area_mm2 > a.area_mm2);
+            assert!(b.leakage_mw > a.leakage_mw);
+            assert!(b.read_pj_per_byte >= a.read_pj_per_byte);
+        });
+    }
+
+    #[test]
+    fn prop_ports_monotone() {
+        check(Config::default().cases(30), |rng| {
+            let size = rng.range(16, 512) * 16 * 1024;
+            let mut last_area = 0.0;
+            let mut last_e = 0.0;
+            for ports in 1..=4 {
+                let c = evaluate(&SramConfig::new(size, 16, 1, ports), &tech())
+                    .unwrap();
+                assert!(c.area_mm2 > last_area);
+                assert!(c.read_pj_per_byte > last_e);
+                last_area = c.area_mm2;
+                last_e = c.read_pj_per_byte;
+            }
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Off-chip DRAM energy model.
+//!
+//! The paper splits the CapsAcc 8 MB all-on-chip memory into a small
+//! on-chip SRAM plus an off-chip DRAM (Fig 3b) and counts off-chip
+//! accesses with Eqs (1)/(2).  We model an LPDDR-class part with a flat
+//! pJ/byte transfer cost plus a row-activation cost amortized over a
+//! burst, and background (standby) power during the inference window.
+
+/// LPDDR3/4-class energy constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramModel {
+    /// Transfer energy per byte (I/O + internal access), pJ/B.
+    pub pj_per_byte: f64,
+    /// Row activation energy, pJ, amortized per `burst_bytes`.
+    pub activate_pj: f64,
+    /// Bytes per activation on a streaming access pattern.
+    pub burst_bytes: u64,
+    /// Background/standby power while the accelerator runs, mW.
+    pub standby_mw: f64,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        DramModel {
+            pj_per_byte: 18.0,
+            activate_pj: 900.0,
+            burst_bytes: 256,
+            standby_mw: 18.0,
+        }
+    }
+}
+
+impl DramModel {
+    /// Dynamic energy (pJ) for transferring `bytes` (reads or writes —
+    /// LPDDR read/write energies are within a few % of each other).
+    pub fn transfer_pj(&self, bytes: u64) -> f64 {
+        let activations = bytes.div_ceil(self.burst_bytes) as f64;
+        bytes as f64 * self.pj_per_byte + activations * self.activate_pj
+    }
+
+    /// Standby energy over an execution window.
+    pub fn standby_pj(&self, seconds: f64) -> f64 {
+        self.standby_mw * 1.0e-3 * seconds * 1.0e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales_with_bytes() {
+        let d = DramModel::default();
+        let one = d.transfer_pj(1 << 20);
+        let two = d.transfer_pj(2 << 20);
+        assert!((two / one - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn dram_byte_costs_more_than_sram_byte() {
+        use crate::memsim::cacti::{evaluate, SramConfig, Technology};
+        let d = DramModel::default();
+        let dram_per_byte = d.transfer_pj(4096) / 4096.0;
+        let sram = evaluate(
+            &SramConfig::new(256 << 10, 16, 1, 1),
+            &Technology::default(),
+        )
+        .unwrap();
+        // the whole premise of the paper's hierarchy: off-chip access is
+        // an order of magnitude pricier than on-chip
+        assert!(dram_per_byte > 5.0 * sram.read_pj_per_byte);
+    }
+
+    #[test]
+    fn standby_energy_positive() {
+        let d = DramModel::default();
+        assert!(d.standby_pj(1.0e-3) > 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Memory substrate models: analytical CACTI-P-like SRAM, sleep-transistor
+//! power gating, and off-chip DRAM.
+//!
+//! The CapStore paper evaluates its memory organizations with CACTI-P
+//! (Li et al., ICCAD'11) at 32nm.  CACTI-P is not available in this image,
+//! so [`cacti`] provides an analytical stand-in exposing the same outputs
+//! the paper consumes: per-access dynamic read/write energy, leakage
+//! power, and area, as functions of capacity / banks / sectors / ports —
+//! with the mechanisms the paper exploits modeled explicitly:
+//!
+//! * bitline/wordline energy grows ~√(bank capacity) (mat geometry);
+//! * multi-port SRAM pays a quadratic area penalty and a linear energy
+//!   penalty per extra port (dual 6T→8T+ cell, duplicated periphery);
+//! * leakage is proportional to area;
+//! * sector-level power gating adds sleep-transistor area sized by the
+//!   gated capacity, plus wakeup energy/latency per ON↔OFF transition
+//!   (Roy et al., TC'11 footer-transistor model of the paper's Fig 8).
+//!
+//! Constants are calibrated so 32nm magnitudes and, more importantly, the
+//! paper's *ratios* hold; `analysis::breakdown` tests assert those shapes.
+
+pub mod cacti;
+pub mod dram;
+pub mod powergate;
+
+pub use cacti::{SramConfig, SramCosts, Technology};
+pub use dram::DramModel;
+pub use powergate::{PowerGateModel, SleepTransistor};

@@ -1,0 +1,135 @@
+//! Sleep-transistor power-gating circuit model (the paper's Fig 8/9).
+//!
+//! One footer sleep transistor gates the same sector index across all N
+//! banks (Fig 6), so the gating granularity is `total_size / sectors`.
+//! Two sleep modes only — ON (full swing) and OFF (zero voltage, no data
+//! retention) — matching §4.1: intermediate retention modes are useless
+//! here because the gated sectors hold dead data between operations.
+//!
+//! Costs modeled (Roy et al., TC'11-style):
+//! * **area**: the sleep transistor must sink the gated sectors' peak
+//!   current, so its width — hence area — scales with the gated capacity.
+//!   This is why the paper's PG- variants have *much* larger area
+//!   (Table 2: PG-SMP 34.4 mm² vs SMP 11.4 mm²).
+//! * **wakeup energy**: recharging the virtual-ground rail costs energy
+//!   proportional to the gated capacity per OFF→ON transition.
+//! * **wakeup latency**: cycles before the sector is usable again; the
+//!   PMU schedules wakeups ahead of operation boundaries so it never
+//!   stalls the array (transitions are rare — §5.1 "very less frequent").
+//! * **residual leakage**: an OFF sector still leaks a few % through the
+//!   sleep transistor.
+
+/// Sleep-transistor + PMU overhead model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerGateModel {
+    /// Sleep-transistor area per gated byte, mm²/B.  Sized for IR-drop:
+    /// the footer must carry the whole sector's active current.
+    pub st_mm2_per_byte: f64,
+    /// PMU (FSM + handshake wiring) fixed area, mm².
+    pub pmu_mm2: f64,
+    /// Wakeup energy per gated byte, pJ/B (virtual-ground recharge).
+    pub wakeup_pj_per_byte: f64,
+    /// Wakeup latency, cycles.
+    pub wakeup_cycles: u64,
+    /// Sleep (ON→OFF) latency, cycles (isolation + discharge).
+    pub sleep_cycles: u64,
+    /// Fraction of nominal leakage that still flows when OFF.
+    pub off_leakage_fraction: f64,
+}
+
+impl Default for PowerGateModel {
+    fn default() -> Self {
+        PowerGateModel {
+            // calibrated so PG- area overhead lands in the ~1.5-3x window
+            // Table 2 exhibits for the big macros
+            st_mm2_per_byte: 2.6e-6,
+            pmu_mm2: 0.02,
+            wakeup_pj_per_byte: 1.1,
+            wakeup_cycles: 180,
+            sleep_cycles: 60,
+            off_leakage_fraction: 0.03,
+        }
+    }
+}
+
+/// A sleep transistor instance gating `gated_bytes` (one sector index
+/// across all banks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SleepTransistor {
+    pub gated_bytes: u64,
+}
+
+impl PowerGateModel {
+    /// Area overhead for a memory of `size_bytes` with `sectors` gating
+    /// domains (each domain = one sleep transistor spanning the banks).
+    /// Transistor area is linear in gated bytes, so splitting into more
+    /// sectors does not change the total ST area — but adds control wires,
+    /// charged per sector.
+    pub fn area_overhead_mm2(&self, size_bytes: u64, sectors: u64) -> f64 {
+        let st = size_bytes as f64 * self.st_mm2_per_byte;
+        let wires = sectors as f64 * 0.002;
+        st + wires + self.pmu_mm2
+    }
+
+    /// Energy of one OFF→ON transition of a domain of `gated_bytes`.
+    pub fn wakeup_energy_pj(&self, gated_bytes: u64) -> f64 {
+        gated_bytes as f64 * self.wakeup_pj_per_byte
+    }
+
+    /// Leakage power (mW) of a domain given its nominal ON leakage and
+    /// whether it is gated off.
+    pub fn domain_leakage_mw(&self, nominal_mw: f64, off: bool) -> f64 {
+        if off {
+            nominal_mw * self.off_leakage_fraction
+        } else {
+            nominal_mw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn gating_area_is_substantial_for_big_macros() {
+        let pg = PowerGateModel::default();
+        // ~460KB data memory: ST overhead should be mm²-scale, visibly
+        // larger than the array periphery — the paper's PG- rows show
+        // multi-x area growth.
+        let ovh = pg.area_overhead_mm2(460_800, 128);
+        assert!(ovh > 0.5 && ovh < 5.0, "{ovh} mm²");
+    }
+
+    #[test]
+    fn off_leakage_is_small_but_nonzero() {
+        let pg = PowerGateModel::default();
+        let on = pg.domain_leakage_mw(10.0, false);
+        let off = pg.domain_leakage_mw(10.0, true);
+        assert_eq!(on, 10.0);
+        assert!(off > 0.0 && off < 1.0);
+    }
+
+    #[test]
+    fn wakeup_energy_linear_in_capacity() {
+        let pg = PowerGateModel::default();
+        let e1 = pg.wakeup_energy_pj(1024);
+        let e2 = pg.wakeup_energy_pj(2048);
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_more_sectors_never_cheaper_area() {
+        let pg = PowerGateModel::default();
+        check(Config::default().cases(30), |rng| {
+            let size = rng.range(16, 1024) * 1024;
+            let s1 = rng.range(1, 64);
+            let s2 = s1 + rng.range(1, 64);
+            assert!(
+                pg.area_overhead_mm2(size, s2)
+                    >= pg.area_overhead_mm2(size, s1)
+            );
+        });
+    }
+}

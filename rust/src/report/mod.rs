@@ -1,0 +1,8 @@
+//! Report rendering: ASCII tables/series matching the paper's figures,
+//! plus the paper's published reference numbers for side-by-side deltas.
+
+pub mod paper;
+pub mod table;
+
+pub use paper::PaperReference;
+pub use table::Table;

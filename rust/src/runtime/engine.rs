@@ -1,0 +1,243 @@
+//! The inference engine: PJRT CPU client + compiled-executable cache +
+//! weight literals, built from the artifact manifest.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`) — see
+//! `python/compile/aot.py` for why serialized protos don't round-trip
+//! with xla_extension 0.5.1.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::capsnet::CapsNetConfig;
+use crate::error::{Error, Result};
+use crate::runtime::manifest::ArtifactManifest;
+use crate::runtime::weights::WeightFile;
+
+/// Classification result for one image.
+#[derive(Debug, Clone)]
+pub struct InferenceOutput {
+    /// Class-capsule lengths would require an extra reduce; we return the
+    /// raw class capsules v[10,16] and derive lengths on the Rust side.
+    pub class_capsules: Vec<f32>,
+    pub lengths: Vec<f32>,
+    pub predicted: usize,
+}
+
+/// PJRT engine bound to one network config.
+pub struct InferenceEngine {
+    pub cfg: CapsNetConfig,
+    client: xla::PjRtClient,
+    /// batch size -> compiled whole-model executable.
+    executables: BTreeMap<u64, xla::PjRtLoadedExecutable>,
+    /// Weight literals in PARAM_ORDER, reused across every request.
+    weight_literals: Vec<xla::Literal>,
+    image_elems: usize,
+}
+
+impl InferenceEngine {
+    /// Load artifacts for `config_name` ("mnist" or "small"), compiling
+    /// the whole-model executable for each available batch size.
+    pub fn load(artifact_dir: &Path, config_name: &str) -> Result<Self> {
+        let cfg = CapsNetConfig::by_name(config_name).ok_or_else(|| {
+            Error::Artifact(format!("unknown config {config_name:?}"))
+        })?;
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        manifest.validate_against(config_name, &cfg)?;
+        let entry = manifest.config(config_name)?;
+
+        let client = xla::PjRtClient::cpu()?;
+
+        let mut executables = BTreeMap::new();
+        for (&batch, rel) in &entry.model {
+            let proto = xla::HloModuleProto::from_text_file(
+                manifest.path(rel).to_str().ok_or_else(|| {
+                    Error::Artifact("non-utf8 artifact path".into())
+                })?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            executables.insert(batch, client.compile(&comp)?);
+        }
+
+        // weights -> device literals, once
+        let wf = WeightFile::load(&manifest.path(&entry.weights))?;
+        if wf.total_params() as u64 != cfg.total_params() {
+            return Err(Error::Artifact(format!(
+                "weight file has {} params, model needs {}",
+                wf.total_params(),
+                cfg.total_params()
+            )));
+        }
+        let mut weight_literals = Vec::new();
+        for name in &manifest.param_order {
+            let t = wf.get(name).ok_or_else(|| {
+                Error::Artifact(format!("weights missing tensor {name}"))
+            })?;
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data).reshape(&dims)?;
+            weight_literals.push(lit);
+        }
+
+        let image_elems =
+            (cfg.image_hw * cfg.image_hw * cfg.in_channels) as usize;
+        Ok(InferenceEngine {
+            cfg,
+            client,
+            executables,
+            weight_literals,
+            image_elems,
+        })
+    }
+
+    /// Batch sizes with a compiled executable, ascending.
+    pub fn batch_sizes(&self) -> Vec<u64> {
+        self.executables.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch size that fits `n` requests (or the
+    /// largest available if n exceeds all).
+    pub fn pick_batch(&self, n: usize) -> u64 {
+        let n = n as u64;
+        self.batch_sizes()
+            .into_iter()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| {
+                *self.executables.keys().next_back().expect("no executables")
+            })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run a batch of images (each `image_hw*image_hw` f32s).  Fewer
+    /// images than the chosen batch are zero-padded; only real outputs
+    /// are returned.
+    pub fn infer(&self, images: &[Vec<f32>]) -> Result<Vec<InferenceOutput>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != self.image_elems {
+                return Err(Error::Coordinator(format!(
+                    "image {i}: {} elements, expected {}",
+                    img.len(),
+                    self.image_elems
+                )));
+            }
+        }
+        let batch = self.pick_batch(images.len());
+        let exe = &self.executables[&batch];
+
+        // pack [batch, H, W, C]
+        let mut flat = vec![0f32; batch as usize * self.image_elems];
+        for (i, img) in images.iter().enumerate().take(batch as usize) {
+            flat[i * self.image_elems..(i + 1) * self.image_elems]
+                .copy_from_slice(img);
+        }
+        let hw = self.cfg.image_hw as i64;
+        let xs = xla::Literal::vec1(&flat).reshape(&[
+            batch as i64,
+            hw,
+            hw,
+            self.cfg.in_channels as i64,
+        ])?;
+
+        let mut args: Vec<&xla::Literal> =
+            self.weight_literals.iter().collect();
+        args.push(&xs);
+
+        // execute is generic over Borrow<Literal>, so &Literal works and
+        // the (large) weight literals are never cloned per request
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        // aot lowers with return_tuple=True -> 1-tuple of v[B,10,16]
+        let v = result.to_tuple1()?;
+        let values = v.to_vec::<f32>()?;
+
+        let j = self.cfg.num_classes as usize;
+        let e = self.cfg.class_dim as usize;
+        let per_image = j * e;
+        let mut outputs = Vec::with_capacity(images.len());
+        for i in 0..images.len().min(batch as usize) {
+            let caps = values[i * per_image..(i + 1) * per_image].to_vec();
+            let lengths: Vec<f32> = (0..j)
+                .map(|c| {
+                    caps[c * e..(c + 1) * e]
+                        .iter()
+                        .map(|x| x * x)
+                        .sum::<f32>()
+                        .sqrt()
+                })
+                .collect();
+            let predicted = lengths
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            outputs.push(InferenceOutput {
+                class_capsules: caps,
+                lengths,
+                predicted,
+            });
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn engine_loads_and_infers_small() {
+        let Some(dir) = artifacts() else { return };
+        let eng = InferenceEngine::load(&dir, "small").unwrap();
+        assert_eq!(eng.batch_sizes(), vec![1, 4]);
+        assert_eq!(eng.pick_batch(1), 1);
+        assert_eq!(eng.pick_batch(3), 4);
+        assert_eq!(eng.pick_batch(9), 4); // clamps to largest
+
+        let img = vec![0.5f32; 28 * 28];
+        let out = eng.infer(&[img]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].lengths.len(), 10);
+        assert_eq!(out[0].class_capsules.len(), 160);
+        // squash bounds every class length to (0, 1)
+        for &l in &out[0].lengths {
+            assert!(l > 0.0 && l < 1.0, "length {l}");
+        }
+        assert!(out[0].predicted < 10);
+    }
+
+    #[test]
+    fn batched_equals_single() {
+        let Some(dir) = artifacts() else { return };
+        let eng = InferenceEngine::load(&dir, "small").unwrap();
+        let a: Vec<f32> = (0..784).map(|i| (i % 29) as f32 / 29.0).collect();
+        let b: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
+        let single_a = eng.infer(&[a.clone()]).unwrap();
+        let batch = eng.infer(&[a, b]).unwrap();
+        assert_eq!(batch.len(), 2);
+        for (x, y) in single_a[0]
+            .class_capsules
+            .iter()
+            .zip(&batch[0].class_capsules)
+        {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let Some(dir) = artifacts() else { return };
+        let eng = InferenceEngine::load(&dir, "small").unwrap();
+        assert!(eng.infer(&[vec![0.0; 100]]).is_err());
+    }
+}

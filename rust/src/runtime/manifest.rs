@@ -1,0 +1,192 @@
+//! Typed view of `artifacts/manifest.json` (written by aot.py) with
+//! geometry cross-checks against the Rust topology model — the guard
+//! that keeps the simulator and the executed model in lock-step.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::capsnet::CapsNetConfig;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One network config's artifacts.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub name: String,
+    /// batch size -> whole-model HLO path (relative to artifact dir).
+    pub model: BTreeMap<u64, String>,
+    /// op name -> per-op HLO path.
+    pub ops: BTreeMap<String, String>,
+    pub weights: String,
+    pub num_primary_caps: u64,
+    pub num_params: u64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub param_order: Vec<String>,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "{} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+
+        let param_order = doc
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest: no param_order".into()))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let mut configs = BTreeMap::new();
+        let cfgs = doc
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest: no configs".into()))?;
+        for (name, entry) in cfgs {
+            let model = entry
+                .get("model")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| {
+                    Error::Artifact(format!("manifest: {name}: no model map"))
+                })?
+                .iter()
+                .filter_map(|(b, p)| {
+                    Some((b.parse::<u64>().ok()?, p.as_str()?.to_string()))
+                })
+                .collect();
+            let ops = entry
+                .get("ops")
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| {
+                            Some((k.clone(), v.as_str()?.to_string()))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let weights = entry
+                .get("weights")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::Artifact(format!("manifest: {name}: no weights"))
+                })?
+                .to_string();
+            let geom = entry.get("geometry");
+            let get_geo = |k: &str| {
+                geom.and_then(|g| g.get(k)).and_then(Json::as_u64).unwrap_or(0)
+            };
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    name: name.clone(),
+                    model,
+                    ops,
+                    weights,
+                    num_primary_caps: get_geo("num_primary_caps"),
+                    num_params: get_geo("num_params"),
+                },
+            );
+        }
+
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), param_order, configs })
+    }
+
+    /// Look up a config entry.
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "config {name:?} not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Cross-check a manifest entry against the Rust topology model —
+    /// geometry drift between python and rust fails loudly here.
+    pub fn validate_against(&self, name: &str, cfg: &CapsNetConfig) -> Result<()> {
+        let entry = self.config(name)?;
+        if entry.num_primary_caps != cfg.num_primary_caps() {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest num_primary_caps {} != rust model {}",
+                entry.num_primary_caps,
+                cfg.num_primary_caps()
+            )));
+        }
+        if entry.num_params != cfg.total_params() {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest num_params {} != rust model {}",
+                entry.num_params,
+                cfg.total_params()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(
+            m.param_order,
+            vec!["conv1_w", "conv1_b", "pc_w", "pc_b", "cc_w"]
+        );
+        let small = m.config("small").unwrap();
+        assert!(small.model.contains_key(&1));
+        assert_eq!(small.ops.len(), 4);
+        // geometry must match the Rust mirror of the python config
+        m.validate_against("small", &CapsNetConfig::small()).unwrap();
+        if m.configs.contains_key("mnist") {
+            m.validate_against("mnist", &CapsNetConfig::mnist()).unwrap();
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-dir"))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn validate_catches_geometry_drift() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        // validating "small" against the mnist geometry must fail
+        assert!(m.validate_against("small", &CapsNetConfig::mnist()).is_err());
+    }
+}

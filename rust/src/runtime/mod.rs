@@ -1,0 +1,17 @@
+//! PJRT serving runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them on the request path — Python never runs at serve
+//! time.
+//!
+//! Pieces:
+//! * [`weights`] — reader for the CAPW container (`weights_<cfg>.bin`);
+//! * [`manifest`] — typed view of `artifacts/manifest.json`;
+//! * [`engine`] — the compiled-executable cache + inference entrypoints.
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{InferenceEngine, InferenceOutput};
+pub use manifest::{ArtifactManifest, ConfigEntry};
+pub use weights::{Tensor, WeightFile};

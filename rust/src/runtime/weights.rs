@@ -1,0 +1,211 @@
+//! Reader for the CAPW weight container written by
+//! `python/compile/weights.py::save_weights`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"CAPW"      u32 version (1)      u32 tensor count
+//! per tensor:
+//!   u32 name_len, name bytes (utf-8)
+//!   u32 ndim, u64 x ndim dims
+//!   u8  dtype (0 = f32 LE)
+//!   raw f32 data
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"CAPW";
+const VERSION: u32 = 1;
+const DTYPE_F32: u8 = 0;
+
+/// One named tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A parsed CAPW file, tensors in file order (== model.PARAM_ORDER).
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl WeightFile {
+    /// Load and fully validate a CAPW file.
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let bytes = std::fs::read(path)?;
+        Self::parse(&bytes)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))
+    }
+
+    fn parse(bytes: &[u8]) -> std::result::Result<WeightFile, String> {
+        let mut r = Cursor { b: bytes, i: 0 };
+        if r.take(4)? != MAGIC.as_slice() {
+            return Err("bad magic".into());
+        }
+        if r.u32()? != VERSION {
+            return Err("unsupported version".into());
+        }
+        let count = r.u32()? as usize;
+        if count > 1024 {
+            return Err(format!("implausible tensor count {count}"));
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = r.u32()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())
+                .map_err(|_| "non-utf8 tensor name")?;
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                return Err(format!("{name}: implausible ndim {ndim}"));
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()? as usize);
+            }
+            if r.u8()? != DTYPE_F32 {
+                return Err(format!("{name}: unsupported dtype"));
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(4 * n)?;
+            let mut data = vec![0f32; n];
+            for (j, c) in raw.chunks_exact(4).enumerate() {
+                data[j] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            tensors.push(Tensor { name, dims, data });
+        }
+        if r.i != bytes.len() {
+            return Err("trailing bytes after last tensor".into());
+        }
+        Ok(WeightFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], String> {
+        if self.i + n > self.b.len() {
+            return Err(format!("truncated at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, String> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize a tiny CAPW blob in-memory (mirror of the python writer).
+    fn blob(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                out.extend_from_slice(&(*d as u64).to_le_bytes());
+            }
+            out.push(DTYPE_F32);
+            for v in *data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let b = blob(&[
+            ("w", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("b", &[3], &[0.1, 0.2, 0.3]),
+        ]);
+        let wf = WeightFile::parse(&b).unwrap();
+        assert_eq!(wf.tensors.len(), 2);
+        assert_eq!(wf.get("w").unwrap().dims, vec![2, 3]);
+        assert_eq!(wf.get("b").unwrap().data, vec![0.1, 0.2, 0.3]);
+        assert_eq!(wf.total_params(), 9);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = blob(&[("w", &[1], &[1.0])]);
+        b[0] = b'X';
+        assert!(WeightFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = blob(&[("w", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        assert!(WeightFile::parse(&b[..b.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = blob(&[("w", &[1], &[1.0])]);
+        b.push(0);
+        assert!(WeightFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        // integration-ish: validate the actual build output when it exists
+        let p = std::path::Path::new("artifacts/weights_small.bin");
+        if p.exists() {
+            let wf = WeightFile::load(p).unwrap();
+            assert_eq!(wf.tensors.len(), 5);
+            assert_eq!(wf.tensors[0].name, "conv1_w");
+            // small config: pinned against CapsNetConfig::small()
+            use crate::capsnet::CapsNetConfig;
+            assert_eq!(
+                wf.total_params() as u64,
+                CapsNetConfig::small().total_params()
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! In-house property-testing mini-framework.
+//!
+//! `proptest` is not available in this offline image, so we carry a small
+//! deterministic generator framework: a SplitMix64 PRNG plus a
+//! `check`/`Gen` loop that runs a property over N generated cases and
+//! reports the failing seed.  No shrinking — the failing seed is printed
+//! so a case can be replayed exactly.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{check, check_seeded, Config};
+pub use rng::SplitMix64;

@@ -1,0 +1,115 @@
+//! The property-check loop: run a property over N seeded cases.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flag)
+//! use capstore::testing::{check, Config, SplitMix64};
+//!
+//! check(Config::default().cases(64), |rng: &mut SplitMix64| {
+//!     let a = rng.range(0, 1000);
+//!     let b = rng.range(1, 100);
+//!     let q = a / b;
+//!     assert!(q * b <= a, "division lower bound");
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Property-check configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: u64,
+    /// Base seed; case i uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // CAPSTORE_PROP_SEED lets CI replay a failing run exactly.
+        let base_seed = std::env::var("CAPSTORE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xCAB5_0001);
+        Config { cases: 64, base_seed }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: u64) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases.  Panics (with the seed in
+/// the message) on the first failing case so `cargo test` reports it.
+pub fn check<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64),
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut rng = SplitMix64::new(seed);
+                prop(&mut rng);
+            },
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case} (seed {seed}): {msg}\n\
+                 replay with CAPSTORE_PROP_SEED={seed} and cases(1)"
+            );
+        }
+    }
+}
+
+/// One-case variant for replaying a specific seed.
+pub fn check_seeded<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64),
+{
+    let mut rng = SplitMix64::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(Config::default().cases(10), |_| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(Config::default().cases(5), |rng| {
+            assert!(rng.range(0, 10) > 100, "impossible bound");
+        });
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut v1 = 0;
+        let mut v2 = 1;
+        check_seeded(99, |rng| v1 = rng.next_u64());
+        check_seeded(99, |rng| v2 = rng.next_u64());
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small shared utilities: units, formatting, statistics, and a
+//! dependency-free JSON parser for the artifact manifest.
+
+pub mod json;
+pub mod stats;
+pub mod units;
+
+pub use stats::Summary;
+pub use units::{fmt_bytes, fmt_energy_uj, fmt_si};

@@ -1,0 +1,97 @@
+//! Unit newtypes and human-readable formatting.
+//!
+//! Energies flow through the stack in **picojoules** (f64), areas in
+//! **mm²**, power in **milliwatts**, time in **cycles** (u64) plus a clock
+//! to convert to seconds.  Keeping pJ as the base unit means per-access
+//! energies (single-digit pJ) and per-inference totals (hundreds of µJ)
+//! both stay well inside f64's exact-integer range.
+
+/// Picojoules → microjoules.
+pub const PJ_PER_UJ: f64 = 1.0e6;
+
+/// Format a byte count as B/KiB/MiB with 1 decimal.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format an energy given in pJ as the most readable of pJ/nJ/µJ/mJ.
+pub fn fmt_energy_uj(pj: f64) -> String {
+    let abs = pj.abs();
+    if abs >= 1.0e9 {
+        format!("{:.3} mJ", pj / 1.0e9)
+    } else if abs >= 1.0e6 {
+        format!("{:.2} µJ", pj / 1.0e6)
+    } else if abs >= 1.0e3 {
+        format!("{:.2} nJ", pj / 1.0e3)
+    } else {
+        format!("{pj:.2} pJ")
+    }
+}
+
+/// Format a count with SI suffixes (k/M/G), for access counts and cycles.
+pub fn fmt_si(v: u64) -> String {
+    let f = v as f64;
+    if f >= 1.0e9 {
+        format!("{:.2}G", f / 1.0e9)
+    } else if f >= 1.0e6 {
+        format!("{:.2}M", f / 1.0e6)
+    } else if f >= 1.0e3 {
+        format!("{:.1}k", f / 1.0e3)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `m`.
+pub fn round_up(a: u64, m: u64) -> u64 {
+    ceil_div(a, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn energy_formatting() {
+        assert_eq!(fmt_energy_uj(12.3), "12.30 pJ");
+        assert_eq!(fmt_energy_uj(4.2e3), "4.20 nJ");
+        assert_eq!(fmt_energy_uj(7.5e6), "7.50 µJ");
+        assert_eq!(fmt_energy_uj(3.9e9), "3.900 mJ");
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(999), "999");
+        assert_eq!(fmt_si(12_000), "12.0k");
+        assert_eq!(fmt_si(5_300_000), "5.30M");
+    }
+
+    #[test]
+    fn ceil_and_round() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(81, 16), 96);
+        assert_eq!(round_up(96, 16), 96);
+    }
+}

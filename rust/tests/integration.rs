@@ -1,0 +1,287 @@
+//! Cross-module integration tests: the analysis pipeline end to end,
+//! the DSE against the energy model, config files driving real builds,
+//! and (when artifacts exist) the PJRT runtime against the simulator's
+//! view of the very same network.
+
+use std::path::PathBuf;
+
+use capstore::accel::systolic::{ArrayConfig, SystolicSim};
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::analysis::offchip::OffChipTraffic;
+use capstore::analysis::requirements::RequirementsAnalysis;
+use capstore::capsnet::{CapsNetConfig, OpKind, Operation};
+use capstore::capstore::arch::{CapStoreArch, MemoryRole, Organization};
+use capstore::capstore::pmu::GatingSchedule;
+use capstore::config::schema::RunConfig;
+use capstore::config::toml::TomlDoc;
+use capstore::dse::Explorer;
+use capstore::memsim::cacti::Technology;
+use capstore::report::paper::PaperReference;
+use capstore::testing::{check, Config};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+// ---------------------------------------------------------------------
+// analysis pipeline end-to-end
+// ---------------------------------------------------------------------
+
+#[test]
+fn full_pipeline_reproduces_headline_claims() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let a = model.all_onchip_baseline().unwrap();
+    let smp = CapStoreArch::build_default(
+        Organization::Smp { gated: false },
+        &model.req,
+        &model.tech,
+    )
+    .unwrap();
+    let pg_sep = CapStoreArch::build_default(
+        Organization::Sep { gated: true },
+        &model.req,
+        &model.tech,
+    )
+    .unwrap();
+    let b = model.system_energy(&smp);
+    let c = model.system_energy(&pg_sep);
+
+    // paper's five headline claims, at shape level
+    assert!(a.memory_share() > 0.90, "96% memory share");
+    let hierarchy = 1.0 - b.total_pj() / a.total_pj();
+    assert!((hierarchy - PaperReference::HIERARCHY_SAVING).abs() < 0.15);
+    let onchip = 1.0 - c.onchip_pj / b.onchip_pj;
+    assert!(onchip > 0.6, "86% on-chip saving claim, ours {onchip}");
+    let vs_a = 1.0 - c.total_pj() / a.total_pj();
+    assert!((vs_a - PaperReference::PG_SEP_TOTAL_VS_A).abs() < 0.10);
+    let vs_b = 1.0 - c.total_pj() / b.total_pj();
+    assert!((vs_b - PaperReference::PG_SEP_TOTAL_VS_B).abs() < 0.10);
+}
+
+#[test]
+fn dse_selects_the_papers_architecture() {
+    let ex = Explorer::new(CapsNetConfig::mnist());
+    let pts = ex.sweep().unwrap();
+    let best = Explorer::best_energy(&pts).unwrap();
+    assert_eq!(best.organization.label(), "PG-SEP");
+    // and the front contains at least one gated and one ungated point
+    let front = Explorer::pareto(&pts);
+    assert!(front.iter().any(|p| p.organization.gated()));
+}
+
+#[test]
+fn gating_schedule_respects_capacity_for_every_arch() {
+    let cfg = CapsNetConfig::mnist();
+    let sim = SystolicSim::default();
+    let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+    for org in Organization::all() {
+        let arch =
+            CapStoreArch::build_default(org, &req, &Technology::default())
+                .unwrap();
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        for (kind, on) in &plan.steps {
+            for (i, m) in arch.macros.iter().enumerate() {
+                assert!(
+                    on[i] <= m.sram.sectors,
+                    "{}: {kind:?} macro {i} over capacity",
+                    org.label()
+                );
+                // ON sectors must cover the op's need for that macro
+                if org.gated() && m.role != MemoryRole::Shared {
+                    let need = match m.role {
+                        MemoryRole::Weight => req.get(*kind).weight,
+                        MemoryRole::Data => req.get(*kind).data,
+                        MemoryRole::Accumulator => req.get(*kind).accum,
+                        MemoryRole::Shared => 0,
+                    }
+                    .min(m.sram.size_bytes);
+                    let covered = on[i] * (m.sram.size_bytes / m.sram.sectors);
+                    assert!(
+                        covered >= need,
+                        "{}: {kind:?} {:?} covers {covered} < need {need}",
+                        org.label(),
+                        m.role
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn offchip_traffic_consistent_with_requirements() {
+    // ops whose inputs are 0 off-chip must be exactly the ops whose
+    // data comes from on-chip residents
+    let cfg = CapsNetConfig::mnist();
+    let sim = SystolicSim::default();
+    let traffic = OffChipTraffic::analyze(&cfg, &sim);
+    for (t, op) in traffic.iter().zip(Operation::all_kinds(&cfg)) {
+        assert_eq!(
+            t.reads == 0 && t.writes == 0,
+            op.on_chip_only,
+            "{:?}",
+            t.kind
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// property tests across module boundaries
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_energy_model_monotone_in_utilization_time() {
+    // a network with more routing iterations can never consume less
+    // on-chip energy (more ops, more accesses, more leakage time)
+    check(Config::default().cases(8), |rng| {
+        let base_iters = rng.range(1, 4);
+        let mut cfg1 = CapsNetConfig::mnist();
+        cfg1.routing_iters = base_iters;
+        let mut cfg2 = cfg1.clone();
+        cfg2.routing_iters = base_iters + 1;
+
+        let m1 = EnergyModel::new(cfg1);
+        let m2 = EnergyModel::new(cfg2);
+        let a1 = CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &m1.req,
+            &m1.tech,
+        )
+        .unwrap();
+        let a2 = CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &m2.req,
+            &m2.tech,
+        )
+        .unwrap();
+        let e1 = m1.evaluate_arch(&a1).onchip_pj;
+        let e2 = m2.evaluate_arch(&a2).onchip_pj;
+        assert!(e2 > e1, "iters {base_iters}: {e2} <= {e1}");
+    });
+}
+
+#[test]
+fn prop_any_valid_geometry_builds_and_evaluates() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    check(Config::default().cases(24), |rng| {
+        let banks = *rng.pick(&[1u64, 2, 4, 8, 16, 32]);
+        let sectors = *rng.pick(&[1u64, 2, 8, 32, 128]);
+        let org = *rng.pick(&Organization::all());
+        let arch = CapStoreArch::build(
+            org,
+            &model.req,
+            &model.tech,
+            banks,
+            sectors,
+        )
+        .unwrap();
+        let e = model.evaluate_arch(&arch);
+        assert!(e.onchip_pj.is_finite() && e.onchip_pj > 0.0);
+        assert!(e.area_mm2 > 0.0);
+        // capacity covers the worst case in every organization
+        assert!(arch.capacity() >= model.req.max_total());
+    });
+}
+
+#[test]
+fn prop_cycles_scale_with_network_width() {
+    // wider conv1 -> more MACs -> more cycles, in any valid config
+    check(Config::default().cases(10), |rng| {
+        let w = 32 * rng.range(1, 8);
+        let mut small = CapsNetConfig::mnist();
+        small.conv1_channels = w;
+        small.pc_channels = 256;
+        let mut big = small.clone();
+        big.conv1_channels = w * 2;
+        let sim = SystolicSim::default();
+        let (_, c_small) = sim.profile_schedule(&small);
+        let (_, c_big) = sim.profile_schedule(&big);
+        assert!(c_big > c_small);
+    });
+}
+
+// ---------------------------------------------------------------------
+// config-driven construction
+// ---------------------------------------------------------------------
+
+#[test]
+fn config_file_drives_a_real_build() {
+    let doc = TomlDoc::parse(
+        "model = \"mnist\"\n[memory]\norganization = \"PG-HY\"\nbanks = 8\nsectors = 32\n",
+    )
+    .unwrap();
+    let rc = RunConfig::from_toml(&doc).unwrap();
+    let cfg = CapsNetConfig::by_name(&rc.model).unwrap();
+    let model = EnergyModel::new(cfg);
+    let arch = CapStoreArch::build(
+        rc.organization,
+        &model.req,
+        &model.tech,
+        rc.banks,
+        rc.sectors,
+    )
+    .unwrap();
+    assert_eq!(arch.organization.label(), "PG-HY");
+    assert!(arch.macros.iter().all(|m| m.sram.banks == 8));
+    assert!(arch
+        .macros
+        .iter()
+        .all(|m| !arch.organization.gated() || m.sram.sectors == 32));
+}
+
+// ---------------------------------------------------------------------
+// runtime vs simulator consistency (needs artifacts)
+// ---------------------------------------------------------------------
+
+#[test]
+fn runtime_and_simulator_agree_on_geometry() {
+    let Some(dir) = artifacts() else { return };
+    use capstore::runtime::manifest::ArtifactManifest;
+    let m = ArtifactManifest::load(&dir).unwrap();
+    for (name, _) in &m.configs {
+        let cfg = CapsNetConfig::by_name(name).expect("rust mirror exists");
+        m.validate_against(name, &cfg).unwrap();
+        // the simulator can analyze exactly what the runtime executes
+        let sim = SystolicSim::default();
+        let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+        assert!(req.max_total() > 0);
+    }
+}
+
+#[test]
+fn served_inference_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    use capstore::runtime::engine::InferenceEngine;
+    let eng = InferenceEngine::load(&dir, "small").unwrap();
+    let img: Vec<f32> = (0..784).map(|i| ((i * 37) % 255) as f32 / 255.0).collect();
+    let a = eng.infer(&[img.clone()]).unwrap();
+    let b = eng.infer(&[img]).unwrap();
+    assert_eq!(a[0].predicted, b[0].predicted);
+    for (x, y) in a[0].class_capsules.iter().zip(&b[0].class_capsules) {
+        assert_eq!(x, y, "PJRT execution must be bit-deterministic");
+    }
+}
+
+#[test]
+fn per_op_artifacts_cover_the_schedule() {
+    let Some(dir) = artifacts() else { return };
+    use capstore::runtime::manifest::ArtifactManifest;
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let entry = m.config("small").unwrap();
+    // the staged pipeline has artifacts for exactly the four fused stages
+    // (conv1, primarycaps, classcaps_fc, routing); the simulator's five
+    // Fig-4 operations map onto them with routing = SumSquash+UpdateSum
+    for op in ["conv1", "primarycaps", "classcaps_fc", "routing"] {
+        assert!(entry.ops.contains_key(op), "missing op artifact {op}");
+        assert!(m.path(&entry.ops[op]).exists());
+    }
+    let kinds = [
+        OpKind::Conv1,
+        OpKind::PrimaryCaps,
+        OpKind::ClassCapsFc,
+        OpKind::SumSquash,
+        OpKind::UpdateSum,
+    ];
+    assert_eq!(kinds.len(), 5);
+}
