@@ -1,25 +1,30 @@
 //! Design-space exploration demo (§4.2 of the paper): sweep organization
-//! × banks × sectors, print the Pareto front and the sensitivity of the
-//! winner to each axis.
+//! × banks × sectors on the parallel incremental engine, print the
+//! Pareto front and the sensitivity of the winner to each axis.
 //!
 //! Run: `cargo run --release --example dse_sweep`
 
+use std::time::Instant;
+
 use capstore::capsnet::CapsNetConfig;
-use capstore::capstore::arch::Organization;
 use capstore::dse::{Explorer, SweepSpace};
 use capstore::report::table::Table;
 use capstore::util::units::{fmt_bytes, fmt_energy_uj};
 
 fn main() -> capstore::Result<()> {
     let mut ex = Explorer::new(CapsNetConfig::mnist());
-    ex.space = SweepSpace {
-        banks: vec![4, 8, 16, 32],
-        sectors: vec![8, 16, 32, 64, 128, 256],
-        organizations: Organization::all().to_vec(),
-    };
+    ex.space = SweepSpace::large();
 
+    let t0 = Instant::now();
     let points = ex.sweep()?;
-    println!("explored {} design points", points.len());
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "explored {} design points in {:.1} ms ({:.0} points/s, {} workers)",
+        points.len(),
+        secs * 1.0e3,
+        points.len() as f64 / secs.max(1e-12),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
 
     let front = Explorer::pareto(&points);
     let mut t = Table::new(

@@ -1,0 +1,131 @@
+//! Bench: throughput of the parallel incremental DSE engine on the
+//! enlarged sweep space, against the pre-refactor serial baseline
+//! (per-point context rebuild + uncached CACTI).
+//!
+//! Reports JSON on the last line so CI and scripts can consume it:
+//!
+//! ```json
+//! {"bench":"dse_throughput","points":273,...,"points_per_sec":...}
+//! ```
+//!
+//! Modes:
+//!   (default)   measure + print JSON
+//!   --check     CI mode: additionally assert the engine speedup —
+//!               >= 2x end-to-end on machines with >= 4 cores (skips
+//!               the assertion, not the run, on smaller machines)
+//!   --threads N worker override (0 = all cores)
+//!
+//! Before timing anything the bench verifies the parallel sweep is
+//! bit-identical to the serial one; a determinism violation fails the
+//! bench outright.
+
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::dse::{Explorer, MultiSweep, SweepSpace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+    let threads: usize = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let mut ex = Explorer::new(CapsNetConfig::mnist()).with_threads(threads);
+    ex.space = SweepSpace::large();
+    let points = ex.space.num_points();
+
+    // ---- determinism gate (before any timing) -------------------------
+    let serial = ex.sweep_serial().expect("serial sweep");
+    let parallel = ex.sweep().expect("parallel sweep");
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        assert!(
+            s.bit_eq(p),
+            "determinism violation at point {i}: {s:?} vs {p:?}"
+        );
+    }
+    println!(
+        "[dse_throughput] determinism: {} parallel points bit-identical \
+         to serial",
+        points
+    );
+
+    // ---- timings ------------------------------------------------------
+    let t_baseline =
+        bench::bench("dse: baseline (per-point ctx, uncached, serial)", 1, 7, || {
+            std::hint::black_box(ex.sweep_baseline().unwrap());
+        });
+    let t_serial =
+        bench::bench("dse: engine serial (shared ctx + cost cache)", 1, 7, || {
+            std::hint::black_box(ex.sweep_serial().unwrap());
+        });
+    let t_parallel = bench::bench("dse: engine parallel", 1, 7, || {
+        std::hint::black_box(ex.sweep().unwrap());
+    });
+
+    // grand sweep throughput: models x tech nodes x large space
+    let ms = MultiSweep { threads, ..MultiSweep::default() };
+    let grand_points = ms.num_points();
+    let t_grand = bench::bench("dse: grand sweep (models x tech nodes)", 1, 3, || {
+        std::hint::black_box(ms.run().unwrap());
+    });
+
+    let ctx_speedup = t_baseline.median / t_serial.median.max(1e-9);
+    let par_speedup = t_serial.median / t_parallel.median.max(1e-9);
+    let end_to_end = t_baseline.median / t_parallel.median.max(1e-9);
+    let pps = points as f64 / (t_parallel.median / 1.0e3).max(1e-12);
+    let grand_pps =
+        grand_points as f64 / (t_grand.median / 1.0e3).max(1e-12);
+
+    println!(
+        "\n[dse_throughput] {points} points: baseline {:.2} ms -> serial \
+         {:.2} ms ({ctx_speedup:.2}x) -> parallel {:.2} ms \
+         ({par_speedup:.2}x more, {end_to_end:.2}x end-to-end) on {cores} \
+         cores",
+        t_baseline.median, t_serial.median, t_parallel.median
+    );
+    println!(
+        "[dse_throughput] grand sweep: {grand_points} points in {:.2} ms \
+         ({grand_pps:.0} points/s)",
+        t_grand.median
+    );
+
+    // machine-readable result (last line)
+    println!(
+        "{{\"bench\":\"dse_throughput\",\"points\":{points},\
+         \"grand_points\":{grand_points},\"cores\":{cores},\
+         \"threads\":{threads},\
+         \"baseline_ms\":{:.4},\"serial_ms\":{:.4},\"parallel_ms\":{:.4},\
+         \"grand_ms\":{:.4},\"ctx_cache_speedup\":{ctx_speedup:.3},\
+         \"parallel_speedup\":{par_speedup:.3},\
+         \"end_to_end_speedup\":{end_to_end:.3},\
+         \"points_per_sec\":{pps:.0},\"grand_points_per_sec\":{grand_pps:.0}}}",
+        t_baseline.median, t_serial.median, t_parallel.median, t_grand.median
+    );
+
+    if check {
+        if cores >= 4 {
+            assert!(
+                end_to_end >= 2.0,
+                "check failed: end-to-end speedup {end_to_end:.2}x < 2x \
+                 on {cores} cores"
+            );
+            println!(
+                "dse_throughput check OK ({end_to_end:.2}x >= 2x on \
+                 {cores} cores)"
+            );
+        } else {
+            println!(
+                "dse_throughput check SKIPPED (only {cores} cores; need \
+                 >= 4 for the speedup assertion)"
+            );
+        }
+    }
+}

@@ -17,6 +17,7 @@ use crate::analysis::offchip::OffChipTraffic;
 use crate::analysis::requirements::RequirementsAnalysis;
 use crate::capsnet::{CapsNetConfig, OpKind, Operation};
 use crate::capstore::arch::{CapStoreArch, MemoryRole, Organization};
+use crate::analysis::context::SweepContext;
 use crate::capstore::pmu::GatingSchedule;
 use crate::error::Result;
 use crate::memsim::cacti::{self, SramConfig, Technology};
@@ -120,23 +121,68 @@ impl EnergyModel {
         ]
     }
 
-    /// Evaluate one architecture over the full inference schedule.
-    pub fn evaluate_arch(&self, arch: &CapStoreArch) -> ArchitectureEnergy {
+    /// Precompute everything about one inference that does *not* depend
+    /// on the memory architecture: schedule, per-op profiles, traffic
+    /// bytes, requirements, and cycle totals.  One context serves every
+    /// design point of a DSE sweep, so [`evaluate_arch_in`] stops paying
+    /// the schedule/profile recomputation per point.
+    ///
+    /// [`evaluate_arch_in`]: Self::evaluate_arch_in
+    pub fn context(&self) -> SweepContext {
         let schedule = Operation::schedule(&self.cfg);
         let profiles: Vec<OpProfile> =
             schedule.iter().map(|op| self.sim.profile(op)).collect();
         let op_cycles: Vec<u64> = profiles.iter().map(|p| p.cycles).collect();
-        let plan = GatingSchedule::plan(arch, &self.req, &self.cfg);
+        let op_kinds: Vec<OpKind> =
+            schedule.iter().map(|op| op.kind).collect();
+        let op_traffic: Vec<[(MemoryRole, u64, u64); 3]> =
+            profiles.iter().map(|p| self.traffic_bytes(p)).collect();
+        let op_needs =
+            schedule.iter().map(|op| self.req.get(op.kind)).collect();
+        let total_cycles: u64 = op_cycles.iter().sum();
+        let secs = total_cycles as f64 / self.sim.array.clock_hz;
+        SweepContext {
+            schedule,
+            profiles,
+            op_kinds,
+            op_cycles,
+            op_traffic,
+            op_needs,
+            total_cycles,
+            secs,
+        }
+    }
+
+    /// Evaluate one architecture over the full inference schedule.
+    ///
+    /// Convenience wrapper around [`evaluate_arch_in`](Self::evaluate_arch_in)
+    /// that rebuilds the [`SweepContext`] per call — fine for one-off
+    /// evaluations; the DSE reuses a single context across the sweep.
+    pub fn evaluate_arch(&self, arch: &CapStoreArch) -> ArchitectureEnergy {
+        self.evaluate_arch_in(&self.context(), arch)
+    }
+
+    /// Evaluate one architecture against a precomputed [`SweepContext`].
+    /// Bit-identical to [`evaluate_arch`](Self::evaluate_arch): the same
+    /// floating-point operations run in the same order; only the
+    /// arch-independent inputs come precomputed.
+    pub fn evaluate_arch_in(
+        &self,
+        ctx: &SweepContext,
+        arch: &CapStoreArch,
+    ) -> ArchitectureEnergy {
+        let plan = GatingSchedule::plan_for(arch, &self.req, &ctx.op_kinds);
 
         let nmac = arch.macros.len();
         let mut per_macro = vec![EnergyBreakdown::default(); nmac];
-        let mut per_op_pj: Vec<(OpKind, f64)> = Vec::new();
+        let mut per_op_pj: Vec<(OpKind, f64)> =
+            Vec::with_capacity(ctx.schedule.len());
 
         // ---- dynamic: route each op's traffic to the serving macro ----
-        for (op, p) in schedule.iter().zip(&profiles) {
-            let need = self.req.get(op.kind);
+        for (i_op, &kind) in ctx.op_kinds.iter().enumerate() {
+            let need = ctx.op_needs[i_op];
             let mut op_dyn = 0.0;
-            for (role, rbytes, wbytes) in self.traffic_bytes(p) {
+            for &(role, rbytes, wbytes) in &ctx.op_traffic[i_op] {
                 let comp_need = match role {
                     MemoryRole::Data => need.data,
                     MemoryRole::Weight => need.weight,
@@ -169,15 +215,15 @@ impl EnergyModel {
                     op_dyn += e;
                 }
             }
-            per_op_pj.push((op.kind, op_dyn));
+            per_op_pj.push((kind, op_dyn));
         }
 
         // ---- static: leakage x time x ON fraction -----------------------
-        let total_cycles: u64 = op_cycles.iter().sum();
-        let secs = total_cycles as f64 / self.sim.array.clock_hz;
+        let total_cycles = ctx.total_cycles;
+        let secs = ctx.secs;
         for (i, m) in arch.macros.iter().enumerate() {
             let static_pj = if arch.organization.gated() {
-                let on_f = plan.on_fraction(i, &op_cycles);
+                let on_f = plan.on_fraction(i, &ctx.op_cycles);
                 let off_f = 1.0 - on_f;
                 let eff_mw = m.costs.leakage_mw
                     * (on_f
@@ -190,10 +236,10 @@ impl EnergyModel {
         }
 
         // distribute static energy into the per-op view by cycle share
+        // (static_total is invariant across ops — summed once, not per op)
+        let static_total: f64 = per_macro.iter().map(|b| b.static_pj).sum();
         for (j, (_, e)) in per_op_pj.iter_mut().enumerate() {
-            let share = op_cycles[j] as f64 / total_cycles as f64;
-            let static_total: f64 =
-                per_macro.iter().map(|b| b.static_pj).sum();
+            let share = ctx.op_cycles[j] as f64 / total_cycles as f64;
             *e += static_total * share;
         }
 

@@ -1,0 +1,93 @@
+//! The shared, immutable per-network evaluation context.
+//!
+//! Everything in here depends only on the network config and the systolic
+//! array — *not* on the memory architecture being evaluated, nor on the
+//! technology node — so one context is computed per network and shared
+//! (immutably, hence freely across threads) by every design point of a
+//! sweep, across all technology nodes.  Before this existed,
+//! `EnergyModel::evaluate_arch` re-derived the operation schedule,
+//! re-profiled every op, and re-summed cycle totals for each of the
+//! sweep's thousands of points.
+
+use crate::accel::systolic::OpProfile;
+use crate::analysis::requirements::ComponentReq;
+use crate::capsnet::{OpKind, Operation};
+use crate::capstore::arch::MemoryRole;
+
+/// Arch-independent inputs to the energy integration, computed once per
+/// network config by [`crate::analysis::breakdown::EnergyModel::context`].
+#[derive(Debug, Clone)]
+pub struct SweepContext {
+    /// The full inference schedule (routing iterations expanded).
+    pub schedule: Vec<Operation>,
+    /// Per-scheduled-op systolic profile (cycles + SRAM access counts).
+    pub profiles: Vec<OpProfile>,
+    /// `schedule[i].kind`, extracted once for the gating planner.
+    pub op_kinds: Vec<OpKind>,
+    /// `profiles[i].cycles`, extracted once for the static-energy share.
+    pub op_cycles: Vec<u64>,
+    /// Per-op traffic: `(role, read_bytes, write_bytes)` per class.
+    pub op_traffic: Vec<[(MemoryRole, u64, u64); 3]>,
+    /// Per-op component requirement (drives the HY dedicated/shared split).
+    pub op_needs: Vec<ComponentReq>,
+    /// Total inference cycles.
+    pub total_cycles: u64,
+    /// Total inference wall-clock seconds at the array clock.
+    pub secs: f64,
+}
+
+impl SweepContext {
+    /// Number of scheduled operations.
+    pub fn num_ops(&self) -> usize {
+        self.schedule.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::breakdown::EnergyModel;
+    use crate::capsnet::CapsNetConfig;
+
+    #[test]
+    fn context_matches_fresh_computation() {
+        let m = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = m.context();
+        assert_eq!(ctx.num_ops(), 8); // C1, PC, CC-FC, (SS, US)x2, SS
+        assert_eq!(ctx.schedule.len(), ctx.profiles.len());
+        assert_eq!(ctx.schedule.len(), ctx.op_traffic.len());
+        assert_eq!(ctx.schedule.len(), ctx.op_needs.len());
+        assert_eq!(
+            ctx.total_cycles,
+            ctx.op_cycles.iter().sum::<u64>()
+        );
+        for (op, kind) in ctx.schedule.iter().zip(&ctx.op_kinds) {
+            assert_eq!(op.kind, *kind);
+        }
+        // secs consistent with the array clock
+        let expect = ctx.total_cycles as f64 / m.sim.array.clock_hz;
+        assert_eq!(ctx.secs.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn context_is_reusable_across_archs() {
+        use crate::capstore::arch::{CapStoreArch, Organization};
+        let m = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = m.context();
+        for org in Organization::all() {
+            let arch =
+                CapStoreArch::build_default(org, &m.req, &m.tech).unwrap();
+            let fresh = m.evaluate_arch(&arch);
+            let cached = m.evaluate_arch_in(&ctx, &arch);
+            assert_eq!(
+                fresh.onchip_pj.to_bits(),
+                cached.onchip_pj.to_bits(),
+                "{}: context path must be bit-identical",
+                org.label()
+            );
+            assert_eq!(
+                fresh.area_mm2.to_bits(),
+                cached.area_mm2.to_bits()
+            );
+        }
+    }
+}

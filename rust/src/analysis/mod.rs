@@ -3,9 +3,11 @@
 //! behind Figs 5, 10 and 11.
 
 pub mod breakdown;
+pub mod context;
 pub mod offchip;
 pub mod requirements;
 
 pub use breakdown::{ArchitectureEnergy, EnergyBreakdown, SystemEnergy};
+pub use context::SweepContext;
 pub use offchip::OffChipTraffic;
 pub use requirements::{ComponentReq, OpRequirements, RequirementsAnalysis};

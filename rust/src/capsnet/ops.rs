@@ -157,13 +157,11 @@ impl Operation {
         }
     }
 
-    /// Multiply-accumulate count of one execution of this op.
+    /// Multiply-accumulate count of one execution of this op: every kind
+    /// is a GEMM, so MACs = M·K·N (for CC-FC that is the I·D·(J·E)
+    /// per-capsule matmul volume).
     pub fn macs(&self) -> u64 {
-        match self.kind {
-            // each u_hat element is a D-deep dot: I*J*E*D
-            OpKind::ClassCapsFc => self.m * self.k * self.n,
-            _ => self.m * self.k * self.n,
-        }
+        self.m * self.k * self.n
     }
 
     /// The full inference schedule: operations in execution order with

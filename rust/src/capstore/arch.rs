@@ -122,6 +122,22 @@ impl CapStoreArch {
         banks: u64,
         sectors: u64,
     ) -> Result<CapStoreArch> {
+        Self::build_with(org, req, banks, sectors, &mut |sram| {
+            cacti::evaluate(sram, tech)
+        })
+    }
+
+    /// [`build`](Self::build) with an injected SRAM cost evaluator.  The
+    /// DSE passes its memoizing [`crate::dse::CostCache`] here so
+    /// identical geometries across organizations and design points solve
+    /// the CACTI model exactly once.
+    pub fn build_with(
+        org: Organization,
+        req: &RequirementsAnalysis,
+        banks: u64,
+        sectors: u64,
+        evaluate: &mut dyn FnMut(&SramConfig) -> Result<SramCosts>,
+    ) -> Result<CapStoreArch> {
         let pg = PowerGateModel::default();
         let sectors = if org.gated() { sectors } else { 1 };
         let maxc = req.max_components();
@@ -157,7 +173,7 @@ impl CapStoreArch {
         for (role, want, ports) in specs {
             let size = RequirementsAnalysis::bankable(want, banks, sectors);
             let sram = SramConfig::new(size, banks, sectors, ports);
-            let costs = cacti::evaluate(&sram, tech)?;
+            let costs = evaluate(&sram)?;
             let pg_area = if org.gated() {
                 pg.area_overhead_mm2(size, sectors)
             } else {

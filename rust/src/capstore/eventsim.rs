@@ -41,6 +41,9 @@ pub struct EventSimResult {
 /// a sleep transistor spans the same sector index across all banks).
 struct Domain {
     mac: usize,
+    /// This domain's sector index within its macro (the PMU plan turns
+    /// ON sectors `0..want`, so the index decides the target state).
+    sector: u64,
     pmu: Pmu,
     /// nominal leakage of this domain when ON, mW
     leak_mw: f64,
@@ -67,20 +70,33 @@ impl<'a> EventSim<'a> {
 
     /// Run one inference.  `lookahead` = cycles before an operation
     /// boundary at which the PMU issues wake requests for the next op's
-    /// sectors (the paper's ahead-of-time wakeup).
+    /// sectors (the paper's ahead-of-time wakeup, Fig 9): during the
+    /// last `lookahead` cycles of each op, OFF domains the *next* op
+    /// needs are woken early, trading a little extra ON-leakage for
+    /// arriving at the boundary already usable.  With `lookahead = 0`
+    /// wakes are only issued at the boundary itself, so the next op
+    /// stalls for the wakeup latency (visible in `not_ready_cycles`).
     pub fn run(&self, lookahead: u64) -> Result<EventSimResult> {
         let plan = GatingSchedule::plan(self.arch, self.req, self.cfg);
         let schedule = Operation::schedule(self.cfg);
         let op_cycles: Vec<u64> =
             schedule.iter().map(|op| self.sim.profile(op).cycles).collect();
 
-        // build domains: one per (macro, sector index)
-        let mut domains: Vec<Domain> = Vec::new();
+        // build domains: one per (macro, sector index), sized exactly
+        // from the arch up front
+        let total_domains: usize = self
+            .arch
+            .macros
+            .iter()
+            .map(|m| m.sram.sectors as usize)
+            .sum();
+        let mut domains: Vec<Domain> = Vec::with_capacity(total_domains);
         for (mi, m) in self.arch.macros.iter().enumerate() {
             let per_sector_leak = m.costs.leakage_mw / m.sram.sectors as f64;
-            for _ in 0..m.sram.sectors {
+            for sector in 0..m.sram.sectors {
                 domains.push(Domain {
                     mac: mi,
+                    sector,
                     pmu: Pmu::new(self.arch.pg_model.clone()),
                     leak_mw: per_sector_leak,
                     gated_bytes: m.sram.size_bytes / m.sram.sectors,
@@ -90,12 +106,12 @@ impl<'a> EventSim<'a> {
         let gated = self.arch.organization.gated();
 
         // helper: ON-sector target of domain d during schedule step s
-        let target_on = |d: &Domain, s: usize, sector_idx: u64| -> bool {
+        let target_on = |d: &Domain, s: usize| -> bool {
             if !gated {
                 return true;
             }
             let want = plan.steps[s].1[d.mac];
-            sector_idx < want
+            d.sector < want
         };
 
         let mut res = EventSimResult {
@@ -110,20 +126,10 @@ impl<'a> EventSim<'a> {
 
         // simulate step by step; within a step, advance in chunks between
         // PMU events for speed (domains only change state on requests)
-        let mut sector_counters: Vec<u64> = Vec::new();
-        {
-            // precompute each domain's sector index within its macro
-            let mut per_mac = vec![0u64; self.arch.macros.len()];
-            for d in &domains {
-                sector_counters.push(per_mac[d.mac]);
-                per_mac[d.mac] += 1;
-            }
-        }
-
         for (s, &cycles) in op_cycles.iter().enumerate() {
             // 1. issue transitions for this op's targets
-            for (di, d) in domains.iter_mut().enumerate() {
-                let want_on = target_on(d, s, sector_counters[di]);
+            for d in domains.iter_mut() {
+                let want_on = target_on(d, s);
                 match (want_on, d.pmu.state) {
                     (true, PmuState::Off) => {
                         d.pmu.request_wake();
@@ -135,41 +141,88 @@ impl<'a> EventSim<'a> {
                 }
             }
 
-            // 2. advance the op in two phases: transition window, steady
+            // 2. advance the op in three phases: the transition window
+            // (boundary-issued requests settle), the steady middle, and
+            // the pre-wake tail — the last `lookahead` cycles, where the
+            // PMU issues wake requests for the NEXT op's sectors so they
+            // are usable when the boundary arrives.
             let window = self
                 .arch
                 .pg_model
                 .wakeup_cycles
                 .max(self.arch.pg_model.sleep_cycles)
                 .min(cycles);
-            for (phase_cycles, stepping) in
-                [(window, true), (cycles - window, false)]
-            {
+            let tail = if s + 1 < op_cycles.len() {
+                lookahead.min(cycles - window)
+            } else {
+                0
+            };
+            let middle = cycles - window - tail;
+            for (phase_cycles, stepping, prewake) in [
+                (window, true, false),
+                (middle, false, false),
+                (tail, true, true),
+            ] {
                 if phase_cycles == 0 {
                     continue;
                 }
-                for (di, d) in domains.iter_mut().enumerate() {
+                if prewake {
+                    for d in domains.iter_mut() {
+                        if target_on(d, s + 1)
+                            && d.pmu.state == PmuState::Off
+                        {
+                            d.pmu.request_wake();
+                        }
+                    }
+                }
+                for d in domains.iter_mut() {
                     // leakage during this phase depends on state
-                    let (mw, completed) = match d.pmu.state {
-                        PmuState::On => (d.leak_mw, None),
-                        PmuState::Off => (
+                    let (static_pj, completed) = match d.pmu.state {
+                        PmuState::On => (
                             d.leak_mw
-                                * self.arch.pg_model.off_leakage_fraction,
+                                * phase_cycles as f64
+                                * pj_per_cycle_per_mw,
                             None,
                         ),
-                        // transitioning: full leakage until settled
-                        PmuState::Sleeping { .. }
-                        | PmuState::Waking { .. } => {
+                        PmuState::Off => (
+                            d.leak_mw
+                                * self.arch.pg_model.off_leakage_fraction
+                                * phase_cycles as f64
+                                * pj_per_cycle_per_mw,
+                            None,
+                        ),
+                        // transitioning: full leakage while the
+                        // transition is in flight, then the settled
+                        // state's leakage for the rest of the phase —
+                        // so widening the window (lookahead) doesn't
+                        // overcharge domains that settle early
+                        PmuState::Sleeping { remaining }
+                        | PmuState::Waking { remaining } => {
                             let ev = if stepping {
                                 d.pmu.step(phase_cycles)
                             } else {
                                 None
                             };
-                            (d.leak_mw, ev)
+                            let trans = remaining.min(phase_cycles);
+                            let settled_mw = match d.pmu.state {
+                                PmuState::Off => {
+                                    d.leak_mw
+                                        * self
+                                            .arch
+                                            .pg_model
+                                            .off_leakage_fraction
+                                }
+                                // On after a wake, or still in flight
+                                _ => d.leak_mw,
+                            };
+                            let pj = (d.leak_mw * trans as f64
+                                + settled_mw
+                                    * (phase_cycles - trans) as f64)
+                                * pj_per_cycle_per_mw;
+                            (pj, ev)
                         }
                     };
-                    res.static_pj +=
-                        mw * phase_cycles as f64 * pj_per_cycle_per_mw;
+                    res.static_pj += static_pj;
                     if let Some(ev) = completed {
                         res.transitions += 1;
                         if ev == crate::capstore::pmu::PmuEvent::WakeAcked {
@@ -181,7 +234,7 @@ impl<'a> EventSim<'a> {
                     }
                     // a domain still waking while its op needs it = stall
                     if stepping
-                        && target_on(d, s, sector_counters[di])
+                        && target_on(d, s)
                         && matches!(d.pmu.state, PmuState::Waking { .. })
                     {
                         res.not_ready_cycles += 1;
@@ -189,7 +242,6 @@ impl<'a> EventSim<'a> {
                 }
             }
             res.cycles += cycles;
-            let _ = lookahead; // lookahead folded into the window phase
         }
         Ok(res)
     }
@@ -284,6 +336,32 @@ mod tests {
             "{} of {}",
             ev.not_ready_cycles,
             domain_cycles
+        );
+    }
+
+    #[test]
+    fn lookahead_wakes_early_at_small_extra_leakage() {
+        // ahead-of-time wakeup (Fig 9): same transitions, issued before
+        // the boundary instead of at it — costing a little extra
+        // ON-leakage, which §5.1 calls negligible
+        let (cfg, sim, req, arch) = setup(Organization::Sep { gated: true });
+        let lazy = EventSim::new(&arch, &req, &cfg, &sim).run(0).unwrap();
+        let ahead = EventSim::new(&arch, &req, &cfg, &sim).run(256).unwrap();
+        assert_eq!(lazy.transitions, ahead.transitions);
+        let wake_rel = (lazy.wakeup_pj - ahead.wakeup_pj).abs()
+            / lazy.wakeup_pj.max(1.0);
+        assert!(wake_rel < 1e-9, "wakeup energy diverged: {wake_rel}");
+        assert!(
+            ahead.static_pj > lazy.static_pj,
+            "early wakeup must cost leakage: {} !> {}",
+            ahead.static_pj,
+            lazy.static_pj
+        );
+        assert!(
+            ahead.static_pj < lazy.static_pj * 1.02,
+            "overhead should be negligible: {} vs {}",
+            ahead.static_pj,
+            lazy.static_pj
         );
     }
 

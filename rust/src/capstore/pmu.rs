@@ -137,7 +137,20 @@ impl GatingSchedule {
         req: &RequirementsAnalysis,
         cfg: &CapsNetConfig,
     ) -> GatingSchedule {
-        let schedule = Operation::schedule(cfg);
+        let kinds: Vec<OpKind> =
+            Operation::schedule(cfg).iter().map(|op| op.kind).collect();
+        Self::plan_for(arch, req, &kinds)
+    }
+
+    /// [`plan`](Self::plan) against a precomputed schedule (op kinds in
+    /// execution order).  The DSE calls this thousands of times per sweep
+    /// with the kinds cached in its `SweepContext`, so the schedule must
+    /// not be re-derived per design point.
+    pub fn plan_for(
+        arch: &CapStoreArch,
+        req: &RequirementsAnalysis,
+        kinds: &[OpKind],
+    ) -> GatingSchedule {
         let gated = arch.organization.gated();
 
         let total_sectors: Vec<u64> =
@@ -148,9 +161,9 @@ impl GatingSchedule {
             .map(|m| m.sram.size_bytes / m.sram.sectors)
             .collect();
 
-        let mut steps = Vec::new();
-        for op in &schedule {
-            let need = req.get(op.kind);
+        let mut steps = Vec::with_capacity(kinds.len());
+        for &kind in kinds {
+            let need = req.get(kind);
             let on: Vec<u64> = arch
                 .macros
                 .iter()
@@ -179,7 +192,7 @@ impl GatingSchedule {
                     want.div_ceil(sbytes.max(1)).min(total)
                 })
                 .collect();
-            steps.push((op.kind, on));
+            steps.push((kind, on));
         }
 
         // transitions: a wakeup whenever a macro's ON count rises between

@@ -5,7 +5,9 @@
 use std::time::Duration;
 
 use crate::capstore::arch::Organization;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::batcher::BatchPolicy;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::server::ServerConfig;
 use crate::error::{Error, Result};
 
@@ -91,6 +93,7 @@ impl RunConfig {
     }
 
     /// Lower into the coordinator's server config.
+    #[cfg(feature = "pjrt")]
     pub fn server_config(&self) -> ServerConfig {
         ServerConfig {
             queue_depth: self.queue_depth,
@@ -156,6 +159,7 @@ mod tests {
         assert!(p.iter().any(|(n, _)| n == "PG-HY"));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn server_config_lowering() {
         let c = RunConfig::default();

@@ -13,9 +13,13 @@
 pub mod batcher;
 pub mod energy_account;
 pub mod metrics;
+/// The serving loop drives `runtime::engine` (PJRT), so it is gated
+/// behind the `pjrt` feature with it.
+#[cfg(feature = "pjrt")]
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use energy_account::EnergyAccountant;
 pub use metrics::{LatencyRecorder, ServerMetrics};
+#[cfg(feature = "pjrt")]
 pub use server::{InferenceServer, Request, Response, ServerConfig};

@@ -1,0 +1,9 @@
+//! Re-export of the shared, immutable per-network evaluation context.
+//!
+//! [`SweepContext`] is defined next to its producer —
+//! [`crate::analysis::breakdown::EnergyModel::context`] in
+//! [`crate::analysis::context`] — so the layering stays one-directional
+//! (`analysis` never depends on `dse`).  The DSE engine is its main
+//! consumer, hence this re-export under the `dse` namespace.
+
+pub use crate::analysis::context::SweepContext;

@@ -1,17 +1,40 @@
-//! Design-space exploration (the paper's §4.2).
+//! Design-space exploration (the paper's §4.2), engine edition.
 //!
-//! Sweeps organization × bank count × sector count, evaluates each point
-//! with the full energy model, and reports the Pareto front over
-//! (energy, area).  The paper's Table 1 points are one slice of this
-//! space; `capstore dse` prints the sweep and the winner.
+//! Sweeps organization × bank count × sector count (and, in the grand
+//! sweep, network × technology node), evaluates each point with the full
+//! energy model, and reports the Pareto front over (energy, area).  The
+//! paper's Table 1 points are one slice of this space; `capstore dse`
+//! prints the sweep and the winner.
+//!
+//! The engine is **parallel and incremental**:
+//!
+//! * [`context::SweepContext`] — everything arch-independent (schedule,
+//!   op profiles, traffic, cycle totals) computed once per network and
+//!   shared immutably by every point;
+//! * [`sweep::CostCache`] — memoized CACTI solutions keyed on the full
+//!   SRAM geometry + technology, shared across organizations and points;
+//! * [`sweep::run`] — chunked `std::thread::scope` execution with
+//!   deterministic, bit-identical-to-serial output ordering;
+//! * [`pareto::front`] — O(n log n) sort-and-scan skyline replacing the
+//!   old all-pairs filter.
+//!
+//! `benches/dse_throughput.rs` measures the stack end to end and prints
+//! points/sec + speedup vs the pre-refactor serial baseline as JSON.
+
+pub mod context;
+pub mod pareto;
+pub mod sweep;
 
 use crate::analysis::breakdown::EnergyModel;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::{CapStoreArch, Organization};
 use crate::error::Result;
 
+pub use context::SweepContext;
+pub use sweep::{CostCache, MultiPoint, MultiSweep, PointSpec};
+
 /// One evaluated design point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignPoint {
     pub organization: Organization,
     pub banks: u64,
@@ -28,6 +51,18 @@ impl DesignPoint {
             && self.area_mm2 <= other.area_mm2
             && (self.onchip_energy_pj < other.onchip_energy_pj
                 || self.area_mm2 < other.area_mm2)
+    }
+
+    /// Exact (bit-level) equality of the f64 fields plus the discrete
+    /// coordinates — the determinism contract of the parallel sweep.
+    pub fn bit_eq(&self, other: &DesignPoint) -> bool {
+        self.organization == other.organization
+            && self.banks == other.banks
+            && self.sectors == other.sectors
+            && self.capacity_bytes == other.capacity_bytes
+            && self.onchip_energy_pj.to_bits()
+                == other.onchip_energy_pj.to_bits()
+            && self.area_mm2.to_bits() == other.area_mm2.to_bits()
     }
 }
 
@@ -49,62 +84,107 @@ impl Default for SweepSpace {
     }
 }
 
+impl SweepSpace {
+    /// The enlarged fine-grained axes: every power-of-two bank count the
+    /// array can feed plus intermediate sector granularities.  315 points
+    /// per (network, tech) pair vs the default's ~72.
+    pub fn large() -> Self {
+        SweepSpace {
+            banks: vec![2, 4, 8, 16, 32, 64, 128],
+            sectors: vec![
+                2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256,
+            ],
+            organizations: Organization::all().to_vec(),
+        }
+    }
+
+    /// Points this space enumerates to (closed form; gated organizations
+    /// take the full sector axis, ungated collapse to one point).
+    pub fn num_points(&self) -> usize {
+        let gated =
+            self.organizations.iter().filter(|o| o.gated()).count();
+        let ungated = self.organizations.len() - gated;
+        gated * self.banks.len() * self.sectors.len()
+            + ungated * self.banks.len()
+    }
+}
+
 /// Run the exploration for a network config.
 pub struct Explorer {
     pub model: EnergyModel,
     pub space: SweepSpace,
+    /// Worker threads for [`sweep`](Self::sweep): 0 = one per core.
+    pub threads: usize,
 }
 
 impl Explorer {
     pub fn new(cfg: CapsNetConfig) -> Self {
-        Explorer { model: EnergyModel::new(cfg), space: SweepSpace::default() }
+        Explorer {
+            model: EnergyModel::new(cfg),
+            space: SweepSpace::default(),
+            threads: 0,
+        }
     }
 
-    /// Evaluate every point in the space.  Ungated organizations ignore
-    /// the sector axis (deduplicated to one point per bank count).
+    /// Builder-style thread override.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Evaluate every point in the space: shared context, memoized SRAM
+    /// costs, chunked parallel execution (see [`sweep::run`]).  Output
+    /// order — and every f64 bit — matches the serial path.
     pub fn sweep(&self) -> Result<Vec<DesignPoint>> {
+        self.sweep_with_threads(self.threads)
+    }
+
+    /// [`sweep`](Self::sweep) pinned to one worker (still context-cached).
+    pub fn sweep_serial(&self) -> Result<Vec<DesignPoint>> {
+        self.sweep_with_threads(1)
+    }
+
+    /// [`sweep`](Self::sweep) with an explicit worker count.
+    pub fn sweep_with_threads(
+        &self,
+        threads: usize,
+    ) -> Result<Vec<DesignPoint>> {
+        let ctx = self.model.context();
+        let cache = CostCache::new();
+        let specs = sweep::enumerate(&self.space);
+        sweep::run(&self.model, &ctx, &cache, &specs, threads)
+    }
+
+    /// The pre-refactor evaluation path — per-point context rebuild, no
+    /// cost cache, serial — kept as the speedup baseline for
+    /// `benches/dse_throughput.rs` and the bit-identity tests.
+    pub fn sweep_baseline(&self) -> Result<Vec<DesignPoint>> {
         let mut out = Vec::new();
-        for &org in &self.space.organizations {
-            for &banks in &self.space.banks {
-                let sector_axis: &[u64] = if org.gated() {
-                    &self.space.sectors
-                } else {
-                    &[1]
-                };
-                for &sectors in sector_axis {
-                    let arch = CapStoreArch::build(
-                        org,
-                        &self.model.req,
-                        &self.model.tech,
-                        banks,
-                        sectors,
-                    )?;
-                    let e = self.model.evaluate_arch(&arch);
-                    out.push(DesignPoint {
-                        organization: org,
-                        banks,
-                        sectors,
-                        onchip_energy_pj: e.onchip_pj,
-                        area_mm2: e.area_mm2,
-                        capacity_bytes: e.capacity_bytes,
-                    });
-                }
-            }
+        for spec in sweep::enumerate(&self.space) {
+            let arch = CapStoreArch::build(
+                spec.organization,
+                &self.model.req,
+                &self.model.tech,
+                spec.banks,
+                spec.sectors,
+            )?;
+            let e = self.model.evaluate_arch(&arch);
+            out.push(DesignPoint {
+                organization: spec.organization,
+                banks: spec.banks,
+                sectors: spec.sectors,
+                onchip_energy_pj: e.onchip_pj,
+                area_mm2: e.area_mm2,
+                capacity_bytes: e.capacity_bytes,
+            });
         }
         Ok(out)
     }
 
-    /// Non-dominated subset, sorted by energy.
+    /// Non-dominated subset, sorted by energy — O(n log n) sort-and-scan
+    /// (see [`pareto::front`]).
     pub fn pareto(points: &[DesignPoint]) -> Vec<DesignPoint> {
-        let mut front: Vec<DesignPoint> = points
-            .iter()
-            .filter(|p| !points.iter().any(|q| q.dominates(p)))
-            .cloned()
-            .collect();
-        front.sort_by(|a, b| {
-            a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
-        });
-        front
+        pareto::front(points)
     }
 
     /// Lowest-energy point (the paper's selection criterion → PG-SEP).
@@ -136,6 +216,7 @@ mod tests {
         let pts = ex.sweep().unwrap();
         // gated: 3 orgs x 2 banks x 2 sectors = 12; ungated: 3 x 2 = 6
         assert_eq!(pts.len(), 18);
+        assert_eq!(ex.space.num_points(), 18);
     }
 
     #[test]
@@ -177,5 +258,27 @@ mod tests {
         for p in &pts {
             assert!(!p.dominates(p));
         }
+    }
+
+    #[test]
+    fn engine_matches_baseline_bit_for_bit() {
+        // the whole point of the refactor: context reuse + cost cache +
+        // threads change nothing about the numbers
+        let ex = quick_explorer();
+        let baseline = ex.sweep_baseline().unwrap();
+        let serial = ex.sweep_serial().unwrap();
+        let parallel = ex.sweep_with_threads(4).unwrap();
+        assert_eq!(baseline.len(), serial.len());
+        assert_eq!(baseline.len(), parallel.len());
+        for ((b, s), p) in baseline.iter().zip(&serial).zip(&parallel) {
+            assert!(b.bit_eq(s), "serial diverged: {b:?} vs {s:?}");
+            assert!(b.bit_eq(p), "parallel diverged: {b:?} vs {p:?}");
+        }
+    }
+
+    #[test]
+    fn large_space_is_fine_grained() {
+        let large = SweepSpace::large();
+        assert!(large.num_points() > 4 * SweepSpace::default().num_points());
     }
 }

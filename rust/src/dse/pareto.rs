@@ -1,0 +1,172 @@
+//! Pareto skyline over (energy, area).
+//!
+//! The sweep's old front filter was the textbook O(n²) all-pairs
+//! dominance check — fine for the original ~72 points, quadratic pain for
+//! the enlarged multi-thousand-point space.  [`front`] is the standard
+//! sort-and-scan 2D skyline: sort by (energy asc, area asc), then a
+//! single pass keeps exactly the points no earlier point dominates.
+//! O(n log n), and the output is *identical* (order included) to the
+//! naive filter — a property test in `tests/dse_parallel.rs` pins that.
+
+use super::DesignPoint;
+
+/// Non-dominated subset under weak (energy, area) dominance, sorted by
+/// energy ascending (ties keep their original sweep order, matching the
+/// stable sort of the legacy implementation).
+pub fn front(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+
+    // Sort indices by (energy, area, original index).
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let pa = &points[a];
+        let pb = &points[b];
+        pa.onchip_energy_pj
+            .partial_cmp(&pb.onchip_energy_pj)
+            .expect("NaN energy in design point")
+            .then(
+                pa.area_mm2
+                    .partial_cmp(&pb.area_mm2)
+                    .expect("NaN area in design point"),
+            )
+            .then(a.cmp(&b))
+    });
+
+    // Scan equal-energy groups.  Within a group only the minimum-area
+    // points can survive (any larger area is dominated by the group
+    // minimum at equal energy); they survive iff no strictly-cheaper
+    // group reached an area <= theirs.
+    let mut keep = vec![false; points.len()];
+    let mut best_area = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        let energy = points[idx[i]].onchip_energy_pj;
+        let mut j = i;
+        while j < idx.len() && points[idx[j]].onchip_energy_pj == energy {
+            j += 1;
+        }
+        let group_min_area = points[idx[i]].area_mm2;
+        if group_min_area < best_area {
+            for &k in &idx[i..j] {
+                if points[k].area_mm2 == group_min_area {
+                    keep[k] = true;
+                }
+            }
+            best_area = group_min_area;
+        }
+        i = j;
+    }
+
+    // Collect survivors in original order, then stable-sort by energy —
+    // exactly what the legacy filter + stable sort produced.
+    let mut out: Vec<DesignPoint> = points
+        .iter()
+        .enumerate()
+        .filter(|(k, _)| keep[*k])
+        .map(|(_, p)| p.clone())
+        .collect();
+    out.sort_by(|a, b| {
+        a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
+    });
+    out
+}
+
+/// The legacy O(n²) all-pairs front — kept as the oracle for the
+/// property test and for auditing the fast path.
+pub fn front_naive(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    let mut out: Vec<DesignPoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    out.sort_by(|a, b| {
+        a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::capstore::arch::Organization;
+    use crate::testing::{check, Config};
+
+    fn pt(e: f64, a: f64) -> DesignPoint {
+        DesignPoint {
+            organization: Organization::Sep { gated: true },
+            banks: 16,
+            sectors: 64,
+            onchip_energy_pj: e,
+            area_mm2: a,
+            capacity_bytes: 0,
+        }
+    }
+
+    fn same(a: &[DesignPoint], b: &[DesignPoint]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.onchip_energy_pj.to_bits() == y.onchip_energy_pj.to_bits()
+                    && x.area_mm2.to_bits() == y.area_mm2.to_bits()
+            })
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(front(&[]).is_empty());
+        let one = [pt(1.0, 1.0)];
+        assert_eq!(front(&one).len(), 1);
+    }
+
+    #[test]
+    fn staircase_survives_interior_removed() {
+        let pts = [
+            pt(1.0, 5.0),
+            pt(2.0, 4.0), // dominated? no: higher e, lower a
+            pt(3.0, 4.5), // dominated by (2.0, 4.0)
+            pt(4.0, 1.0),
+        ];
+        let f = front(&pts);
+        assert!(same(&f, &front_naive(&pts)));
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn duplicates_all_survive_together() {
+        let pts = [pt(1.0, 2.0), pt(1.0, 2.0), pt(1.0, 3.0)];
+        let f = front(&pts);
+        // equal (e,a) pairs don't dominate each other; (1,3) is dominated
+        assert_eq!(f.len(), 2);
+        assert!(same(&f, &front_naive(&pts)));
+    }
+
+    #[test]
+    fn equal_energy_larger_area_dominated() {
+        let pts = [pt(1.0, 2.0), pt(1.0, 2.5)];
+        let f = front(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].area_mm2, 2.0);
+    }
+
+    #[test]
+    fn prop_fast_front_matches_naive() {
+        check(Config::default().cases(60), |rng| {
+            let n = rng.range(1, 120) as usize;
+            let pts: Vec<DesignPoint> = (0..n)
+                .map(|_| {
+                    // coarse grid to force plenty of ties and duplicates
+                    let e = rng.range(0, 12) as f64;
+                    let a = rng.range(0, 12) as f64 / 2.0;
+                    pt(e, a)
+                })
+                .collect();
+            let fast = front(&pts);
+            let naive = front_naive(&pts);
+            assert!(
+                same(&fast, &naive),
+                "fast {fast:?}\nnaive {naive:?}"
+            );
+        });
+    }
+}

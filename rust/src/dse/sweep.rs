@@ -1,0 +1,366 @@
+//! Sweep execution: memoized SRAM costs, chunked multi-threaded point
+//! evaluation with deterministic ordering, and the enlarged
+//! multi-network / multi-technology "grand" sweep.
+//!
+//! Design rules:
+//!
+//! * **Determinism** — the parallel path writes each design point into a
+//!   pre-allocated slot indexed by its enumeration position, so output
+//!   order (and every f64 bit) is identical to the serial path.  A test
+//!   in `tests/dse_parallel.rs` pins this.
+//! * **No new dependencies** — `std::thread::scope` only; no rayon.
+//! * **Memoization is exact** — [`CostCache`] keys on the full SRAM
+//!   geometry *and* every technology constant (by f64 bit pattern), and
+//!   `memsim::cacti::evaluate` is a pure function, so a cache hit returns
+//!   the exact floats a fresh evaluation would.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::analysis::breakdown::EnergyModel;
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::{CapStoreArch, Organization};
+use crate::dse::context::SweepContext;
+use crate::dse::{DesignPoint, SweepSpace};
+use crate::error::Result;
+use crate::memsim::cacti::{self, SramConfig, SramCosts, Technology};
+
+// ---------------------------------------------------------------------
+// SRAM cost cache
+// ---------------------------------------------------------------------
+
+/// Technology constants as a hashable key (f64 bit patterns — exact,
+/// no epsilon games; two techs are "the same" iff every constant is).
+/// The exhaustive destructuring (no `..`) turns a new `Technology` field
+/// into a compile error here, so it can never be silently left out of
+/// the cache key.
+fn tech_bits(t: &Technology) -> [u64; 9] {
+    let Technology {
+        cell_mm2_per_byte,
+        bank_periphery_mm2,
+        access_fixed_pj,
+        access_bitline_pj_per_sqrt_byte,
+        write_premium,
+        port_energy_factor,
+        port_area_factor,
+        leakage_mw_per_mm2,
+        htree_pj_per_byte,
+    } = t;
+    [
+        cell_mm2_per_byte.to_bits(),
+        bank_periphery_mm2.to_bits(),
+        access_fixed_pj.to_bits(),
+        access_bitline_pj_per_sqrt_byte.to_bits(),
+        write_premium.to_bits(),
+        port_energy_factor.to_bits(),
+        port_area_factor.to_bits(),
+        leakage_mw_per_mm2.to_bits(),
+        htree_pj_per_byte.to_bits(),
+    ]
+}
+
+/// Memoizing wrapper around [`cacti::evaluate`], keyed on
+/// `(size, banks, sectors, ports, technology)`.  Identical geometries
+/// recur constantly across a sweep — every organization shares bank/
+/// sector axes, and HY's small dedicated macros collapse to a handful of
+/// rounded sizes — so the sweep solves each distinct geometry once.
+///
+/// Thread-safe: one cache is shared by all sweep workers.
+#[derive(Default)]
+pub struct CostCache {
+    map: Mutex<HashMap<(SramConfig, [u64; 9]), SramCosts>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate with memoization.  Bit-identical to a fresh
+    /// [`cacti::evaluate`] call: the model is a pure function of the key.
+    ///
+    /// One short lock per call; the analytical model is a few dozen
+    /// flops, so holding the lock across a miss is cheaper than locking
+    /// twice and risking duplicate computes.
+    pub fn evaluate(
+        &self,
+        sram: &SramConfig,
+        tech: &Technology,
+    ) -> Result<SramCosts> {
+        let key = (sram.clone(), tech_bits(tech));
+        let mut map = self.map.lock().unwrap();
+        if let Some(hit) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit.clone());
+        }
+        let costs = cacti::evaluate(sram, tech)?;
+        map.insert(key, costs.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(costs)
+    }
+
+    /// Distinct geometries solved so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Point enumeration + evaluation
+// ---------------------------------------------------------------------
+
+/// One un-evaluated coordinate of the sweep space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PointSpec {
+    pub organization: Organization,
+    pub banks: u64,
+    pub sectors: u64,
+}
+
+/// Enumerate a space in canonical (organization, banks, sectors) order.
+/// Ungated organizations ignore the sector axis (deduplicated to one
+/// point per bank count), matching the legacy serial sweep exactly.
+pub fn enumerate(space: &SweepSpace) -> Vec<PointSpec> {
+    let mut specs = Vec::new();
+    for &org in &space.organizations {
+        for &banks in &space.banks {
+            let sector_axis: &[u64] =
+                if org.gated() { &space.sectors } else { &[1] };
+            for &sectors in sector_axis {
+                specs.push(PointSpec { organization: org, banks, sectors });
+            }
+        }
+    }
+    specs
+}
+
+/// Evaluate one design point: build the architecture (through the cost
+/// cache) and integrate its energy against the shared context.
+pub fn evaluate_point(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    spec: &PointSpec,
+) -> Result<DesignPoint> {
+    let arch = CapStoreArch::build_with(
+        spec.organization,
+        &model.req,
+        spec.banks,
+        spec.sectors,
+        &mut |sram| cache.evaluate(sram, &model.tech),
+    )?;
+    let e = model.evaluate_arch_in(ctx, &arch);
+    Ok(DesignPoint {
+        organization: spec.organization,
+        banks: spec.banks,
+        sectors: spec.sectors,
+        onchip_energy_pj: e.onchip_pj,
+        area_mm2: e.area_mm2,
+        capacity_bytes: e.capacity_bytes,
+    })
+}
+
+/// Resolve a thread-count request: 0 = one worker per available core,
+/// and never more workers than points.
+pub fn effective_threads(requested: usize, points: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.max(1).min(points.max(1))
+}
+
+/// Run a sweep over `specs`.  `threads <= 1` runs inline; otherwise the
+/// spec list is split into contiguous chunks, one scoped worker per
+/// chunk, each writing into its own slice of the pre-allocated output —
+/// deterministic order.  The only shared mutable state is the cost
+/// cache's short-lived lock (a few hash lookups per point).
+pub fn run(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    specs: &[PointSpec],
+    threads: usize,
+) -> Result<Vec<DesignPoint>> {
+    let n = specs.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 || n <= 1 {
+        return specs
+            .iter()
+            .map(|s| evaluate_point(model, ctx, cache, s))
+            .collect();
+    }
+
+    let chunk = n.div_ceil(threads);
+    let mut slots: Vec<Option<Result<DesignPoint>>> =
+        (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (spec_chunk, out_chunk) in
+            specs.chunks(chunk).zip(slots.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for (spec, slot) in
+                    spec_chunk.iter().zip(out_chunk.iter_mut())
+                {
+                    *slot = Some(evaluate_point(model, ctx, cache, spec));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("worker filled every slot"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Grand sweep: networks x technology nodes x the large space
+// ---------------------------------------------------------------------
+
+/// One evaluated point of the grand sweep, tagged with its network and
+/// technology node.
+#[derive(Debug, Clone)]
+pub struct MultiPoint {
+    pub model: &'static str,
+    pub tech: &'static str,
+    pub point: DesignPoint,
+}
+
+/// The enlarged exploration: every named network config x every
+/// technology node x the fine-grained [`SweepSpace::large`] axes —
+/// thousands of design points where the paper's Table 1 slice had ~72.
+#[derive(Debug, Clone)]
+pub struct MultiSweep {
+    pub models: Vec<CapsNetConfig>,
+    pub techs: Vec<(&'static str, Technology)>,
+    pub space: SweepSpace,
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for MultiSweep {
+    fn default() -> Self {
+        MultiSweep {
+            models: vec![CapsNetConfig::mnist(), CapsNetConfig::small()],
+            techs: Technology::nodes().to_vec(),
+            space: SweepSpace::large(),
+            threads: 0,
+        }
+    }
+}
+
+impl MultiSweep {
+    /// Total points the sweep will evaluate.
+    pub fn num_points(&self) -> usize {
+        self.space.num_points() * self.models.len() * self.techs.len()
+    }
+
+    /// Run the whole exploration.  One [`SweepContext`] per network —
+    /// the context is technology-independent, so all tech nodes of a
+    /// model share it — and one [`CostCache`] shared across everything
+    /// (the key includes the technology, so nodes never cross-talk).
+    pub fn run(&self) -> Result<Vec<MultiPoint>> {
+        let cache = CostCache::new();
+        let specs = enumerate(&self.space);
+        let mut out = Vec::with_capacity(self.num_points());
+        for cfg in &self.models {
+            let mut model = EnergyModel::new(cfg.clone());
+            let ctx = model.context();
+            for (tech_name, tech) in &self.techs {
+                model.tech = tech.clone();
+                let pts = run(&model, &ctx, &cache, &specs, self.threads)?;
+                out.extend(pts.into_iter().map(|point| MultiPoint {
+                    model: cfg.name,
+                    tech: tech_name,
+                    point,
+                }));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hits_on_repeat_geometry() {
+        let cache = CostCache::new();
+        let tech = Technology::default();
+        let sram = SramConfig::new(256 << 10, 16, 8, 1);
+        let a = cache.evaluate(&sram, &tech).unwrap();
+        let b = cache.evaluate(&sram, &tech).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        // bit-identical to the uncached model
+        let fresh = cacti::evaluate(&sram, &tech).unwrap();
+        assert_eq!(a.read_pj_per_byte.to_bits(), fresh.read_pj_per_byte.to_bits());
+        assert_eq!(a.leakage_mw.to_bits(), fresh.leakage_mw.to_bits());
+    }
+
+    #[test]
+    fn cache_distinguishes_technologies() {
+        let cache = CostCache::new();
+        let sram = SramConfig::new(128 << 10, 8, 4, 1);
+        let t32 = Technology::default();
+        let mut t_hot = Technology::default();
+        t_hot.leakage_mw_per_mm2 *= 2.0;
+        let a = cache.evaluate(&sram, &t32).unwrap();
+        let b = cache.evaluate(&sram, &t_hot).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(b.leakage_mw > a.leakage_mw);
+    }
+
+    #[test]
+    fn enumeration_dedups_ungated_sectors() {
+        let space = SweepSpace {
+            banks: vec![8, 16],
+            sectors: vec![16, 64],
+            organizations: Organization::all().to_vec(),
+        };
+        let specs = enumerate(&space);
+        // gated: 3 orgs x 2 banks x 2 sectors; ungated: 3 orgs x 2 banks
+        assert_eq!(specs.len(), 18);
+        assert!(specs
+            .iter()
+            .filter(|s| !s.organization.gated())
+            .all(|s| s.sectors == 1));
+    }
+
+    #[test]
+    fn effective_threads_bounds() {
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(8, 3), 3);
+        assert_eq!(effective_threads(1, 0), 1);
+        assert!(effective_threads(0, 1000) >= 1);
+    }
+
+    #[test]
+    fn multi_sweep_space_is_thousands_of_points() {
+        let ms = MultiSweep::default();
+        assert!(
+            ms.num_points() >= 2000,
+            "grand sweep too small: {}",
+            ms.num_points()
+        );
+    }
+}

@@ -1,35 +1,61 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the core crate
+//! carries zero external dependencies so it builds in the offline image.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All the ways the CapStore stack can fail.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Artifact files (HLO text, weights, manifest) missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA failures surfaced from the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Malformed configuration (mini-TOML parse or schema violations).
-    #[error("config error: {0}")]
     Config(String),
 
     /// A memory-architecture invariant was violated (bad bank/sector
     /// geometry, size not divisible, unknown organization...).
-    #[error("memory model error: {0}")]
     MemModel(String),
 
     /// Coordinator/runtime lifecycle failures (queue closed, worker died).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::MemModel(m) => write!(f, "memory model error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -9,10 +9,13 @@
 //! * **L3 (this crate)** — the paper's contribution: the CapsAcc accelerator
 //!   simulator ([`accel`]), CACTI-P-like memory models ([`memsim`]), the
 //!   CapStore memory organizations + application-aware power management
-//!   ([`capstore`]), the §3 analysis pipeline ([`analysis`]), design-space
-//!   exploration ([`dse`]) — plus a PJRT serving [`runtime`] and a threaded
-//!   [`coordinator`] so the whole thing runs real inference while the memory
-//!   system is simulated alongside.
+//!   ([`capstore`]), the §3 analysis pipeline ([`analysis`]), a parallel
+//!   incremental design-space exploration engine ([`dse`]) — plus a PJRT
+//!   serving [`runtime`] and a threaded [`coordinator`] so the whole thing
+//!   runs real inference while the memory system is simulated alongside.
+//!   The PJRT pieces (`runtime::engine`, `coordinator::server`) need the
+//!   `xla` crate and sit behind the default-off `pjrt` feature; everything
+//!   else is dependency-free and builds in the offline image.
 //!
 //! The experiment index mapping every paper table/figure to a module and a
 //! bench lives in `DESIGN.md`; measured-vs-paper numbers live in

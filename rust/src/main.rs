@@ -21,11 +21,13 @@ use capstore::analysis::requirements::RequirementsAnalysis;
 use capstore::capsnet::{CapsNetConfig, Operation};
 use capstore::capstore::arch::{CapStoreArch, Organization};
 use capstore::config::schema::{parse_organization, RunConfig};
+#[cfg(feature = "pjrt")]
 use capstore::coordinator::server::InferenceServer;
-use capstore::dse::{Explorer, SweepSpace};
+use capstore::dse::{Explorer, MultiSweep, SweepSpace};
 use capstore::report::paper::PaperReference;
 use capstore::report::table::Table;
 use capstore::runtime::manifest::ArtifactManifest;
+#[cfg(feature = "pjrt")]
 use capstore::testing::SplitMix64;
 use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
 use capstore::Result;
@@ -77,6 +79,11 @@ FLAGS (all optional):
   --org <SMP|PG-SEP|...>      memory organization   [PG-SEP]
   --banks N --sectors N       memory geometry       [16 / 64]
   --artifacts <dir>           artifact directory    [artifacts]
+  --threads N                 dse: worker threads   [0 = all cores]
+  --space <default|large|full>
+                              dse: sweep extent     [default]
+                              (full = all tech nodes x all models,
+                              narrowed by --model/--config if given)
   --requests N                serve: request count  [64]
   --clients N                 serve: client threads [4]"
     );
@@ -345,14 +352,52 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------
-// dse — §4.2 sweep
+// dse — §4.2 sweep (parallel incremental engine)
 // ---------------------------------------------------------------------
 fn cmd_dse(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
+    let threads: usize = flags
+        .get("threads")
+        .map(|v| v.parse().map_err(|_| bad_flag("threads", v)))
+        .transpose()?
+        .unwrap_or(0);
+    let space = flags.get("space").map(String::as_str).unwrap_or("default");
+
+    if space == "full" || space == "grand" {
+        // an explicit model selection (--model flag, or a config file
+        // that actually sets `model`) narrows the grand sweep; the
+        // geometry/org flags pick a single design point and don't apply
+        // to an exploration
+        let config_sets_model =
+            flags.get("config").is_some_and(|path| {
+                std::fs::read_to_string(path)
+                    .ok()
+                    .and_then(|text| {
+                        capstore::config::toml::TomlDoc::parse(&text).ok()
+                    })
+                    .is_some_and(|doc| !doc.str_or("", "model", "").is_empty())
+            });
+        let model_filter = (flags.contains_key("model")
+            || config_sets_model)
+        .then(|| rc.model.clone());
+        return cmd_dse_full(threads, model_filter.as_deref());
+    }
+
     let cfg = net(&rc)?;
-    let mut ex = Explorer::new(cfg);
-    ex.space = SweepSpace::default();
+    let mut ex = Explorer::new(cfg).with_threads(threads);
+    ex.space = match space {
+        "default" => SweepSpace::default(),
+        "large" => SweepSpace::large(),
+        other => {
+            return Err(capstore::Error::Config(format!(
+                "--space: want default|large|full, got {other:?}"
+            )))
+        }
+    };
+
+    let t0 = std::time::Instant::now();
     let points = ex.sweep()?;
+    let secs = t0.elapsed().as_secs_f64();
     let front = Explorer::pareto(&points);
 
     let mut t = Table::new(
@@ -378,13 +423,90 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
         best.sectors,
         fmt_energy_uj(best.onchip_energy_pj)
     );
-    println!("explored {} design points", points.len());
+    println!(
+        "explored {} design points in {:.1} ms ({:.0} points/s)",
+        points.len(),
+        secs * 1.0e3,
+        points.len() as f64 / secs.max(1e-12)
+    );
+    Ok(())
+}
+
+/// The grand sweep: every named network (or just `--model`) x every
+/// technology node x the large space, with per-pair winners and
+/// throughput.
+fn cmd_dse_full(threads: usize, model: Option<&str>) -> Result<()> {
+    let mut ms = MultiSweep { threads, ..MultiSweep::default() };
+    if let Some(name) = model {
+        ms.models.retain(|m| m.name == name);
+        if ms.models.is_empty() {
+            return Err(capstore::Error::Config(format!(
+                "unknown model {name:?}"
+            )));
+        }
+    }
+    println!(
+        "grand sweep: {} models x {} tech nodes x {} points = {} total",
+        ms.models.len(),
+        ms.techs.len(),
+        ms.space.num_points(),
+        ms.num_points()
+    );
+    let t0 = std::time::Instant::now();
+    let all = ms.run()?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "grand DSE — min-energy winner per (model, tech node)",
+        &["model", "tech", "org", "banks", "sectors", "energy/inf",
+          "area mm2"],
+    );
+    for cfg in &ms.models {
+        for (tech_name, _) in &ms.techs {
+            let best = all
+                .iter()
+                .filter(|mp| mp.model == cfg.name && mp.tech == *tech_name)
+                .min_by(|a, b| {
+                    a.point
+                        .onchip_energy_pj
+                        .partial_cmp(&b.point.onchip_energy_pj)
+                        .unwrap()
+                })
+                .expect("non-empty slice");
+            t.row(vec![
+                best.model.into(),
+                best.tech.into(),
+                best.point.organization.label().into(),
+                best.point.banks.to_string(),
+                best.point.sectors.to_string(),
+                fmt_energy_uj(best.point.onchip_energy_pj),
+                format!("{:.3}", best.point.area_mm2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
+        all.len(),
+        secs * 1.0e3,
+        all.len() as f64 / secs.max(1e-12)
+    );
     Ok(())
 }
 
 // ---------------------------------------------------------------------
 // serve — PJRT inference server on synthetic digits
 // ---------------------------------------------------------------------
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_flags: &Flags) -> Result<()> {
+    Err(capstore::Error::Config(
+        "`capstore serve` needs the PJRT runtime: rebuild with \
+         `--features pjrt` (requires the vendored `xla` crate)"
+            .into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
     let requests: usize = flags

@@ -61,6 +61,60 @@ impl Default for Technology {
     }
 }
 
+impl Technology {
+    /// Derive a node from the calibrated 32nm constants by classical
+    /// scaling: cell/periphery area with feature size squared, dynamic
+    /// access energy roughly linearly with feature size (capacitance),
+    /// and leakage *density* inversely (older nodes leak less per mm²
+    /// even though they spend more mm²).
+    fn scaled(area: f64, energy: f64, leak_density: f64) -> Self {
+        let base = Technology::default();
+        Technology {
+            cell_mm2_per_byte: base.cell_mm2_per_byte * area,
+            bank_periphery_mm2: base.bank_periphery_mm2 * area,
+            access_fixed_pj: base.access_fixed_pj * energy,
+            access_bitline_pj_per_sqrt_byte: base
+                .access_bitline_pj_per_sqrt_byte
+                * energy,
+            leakage_mw_per_mm2: base.leakage_mw_per_mm2 * leak_density,
+            htree_pj_per_byte: base.htree_pj_per_byte * energy,
+            ..base
+        }
+    }
+
+    /// 65nm planar (pre-HKMG): big cells, expensive bitlines, low
+    /// leakage density.
+    pub fn node_65nm() -> Self {
+        Self::scaled((65.0f64 / 32.0).powi(2), 2.1, 0.35)
+    }
+
+    /// 45nm: the step between the old planar nodes and the paper's 32nm.
+    pub fn node_45nm() -> Self {
+        Self::scaled((45.0f64 / 32.0).powi(2), 1.45, 0.60)
+    }
+
+    /// 32nm HP — the paper's CACTI-P operating point (the calibrated
+    /// default).
+    pub fn node_32nm() -> Self {
+        Self::default()
+    }
+
+    /// 22nm FinFET-era: denser, cheaper accesses, leakier per mm².
+    pub fn node_22nm() -> Self {
+        Self::scaled((22.0f64 / 32.0).powi(2), 0.72, 1.40)
+    }
+
+    /// The named nodes the grand DSE sweeps, newest last.
+    pub fn nodes() -> [(&'static str, Technology); 4] {
+        [
+            ("65nm", Self::node_65nm()),
+            ("45nm", Self::node_45nm()),
+            ("32nm", Self::node_32nm()),
+            ("22nm", Self::node_22nm()),
+        ]
+    }
+}
+
 /// One SRAM macro: geometry the DSE explores.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SramConfig {
@@ -241,6 +295,23 @@ mod tests {
     fn sector_leakage_partitions_total() {
         let c = evaluate(&SramConfig::new(256 << 10, 16, 8, 1), &tech()).unwrap();
         assert!((c.sector_leakage_mw * 8.0 - c.leakage_mw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn technology_nodes_scale_sanely() {
+        let sram = SramConfig::new(256 << 10, 16, 1, 1);
+        let nodes = Technology::nodes();
+        assert_eq!(nodes[2].0, "32nm");
+        assert_eq!(nodes[2].1, Technology::default());
+        let costs: Vec<SramCosts> = nodes
+            .iter()
+            .map(|(_, t)| evaluate(&sram, t).unwrap())
+            .collect();
+        // newest-last ordering: area and access energy shrink monotonically
+        for w in costs.windows(2) {
+            assert!(w[1].area_mm2 < w[0].area_mm2);
+            assert!(w[1].read_pj_per_byte < w[0].read_pj_per_byte);
+        }
     }
 
     #[test]

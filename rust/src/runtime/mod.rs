@@ -8,10 +8,14 @@
 //! * [`manifest`] — typed view of `artifacts/manifest.json`;
 //! * [`engine`] — the compiled-executable cache + inference entrypoints.
 
+/// The compiled-executable cache needs the `xla` crate (PJRT bindings),
+/// which is not in the offline image — gated behind the `pjrt` feature.
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{InferenceEngine, InferenceOutput};
 pub use manifest::{ArtifactManifest, ConfigEntry};
 pub use weights::{Tensor, WeightFile};

@@ -1,0 +1,156 @@
+//! Determinism and equivalence contracts of the parallel incremental DSE
+//! engine:
+//!
+//! 1. the parallel sweep is **bit-identical** (same order, same f64 bits)
+//!    to the serial sweep AND to the pre-refactor baseline path
+//!    (per-point context rebuild, uncached CACTI);
+//! 2. the O(n log n) sort-and-scan Pareto front equals the naive O(n²)
+//!    all-pairs front on arbitrary random point sets.
+
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::Organization;
+use capstore::dse::{pareto, DesignPoint, Explorer, MultiSweep, SweepSpace};
+use capstore::memsim::cacti::Technology;
+use capstore::testing::{check, Config};
+
+fn assert_bit_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.bit_eq(y),
+            "{what}: point {i} diverged\n  a = {x:?}\n  b = {y:?}"
+        );
+    }
+}
+
+#[test]
+fn parallel_sweep_bit_identical_to_serial_and_baseline() {
+    for cfg in [CapsNetConfig::mnist(), CapsNetConfig::small()] {
+        let mut ex = Explorer::new(cfg);
+        ex.space = SweepSpace {
+            banks: vec![2, 8, 16, 32],
+            sectors: vec![4, 16, 64, 128],
+            organizations: Organization::all().to_vec(),
+        };
+        let baseline = ex.sweep_baseline().unwrap();
+        let serial = ex.sweep_serial().unwrap();
+        for threads in [2, 3, 4, 8] {
+            let parallel = ex.sweep_with_threads(threads).unwrap();
+            assert_bit_identical(
+                &serial,
+                &parallel,
+                &format!("serial vs {threads} threads"),
+            );
+        }
+        assert_bit_identical(&baseline, &serial, "baseline vs engine");
+    }
+}
+
+#[test]
+fn large_space_sweep_is_consistent() {
+    let mut ex = Explorer::new(CapsNetConfig::mnist());
+    ex.space = SweepSpace::large();
+    let pts = ex.sweep().unwrap();
+    assert_eq!(pts.len(), ex.space.num_points());
+    assert!(pts.len() > 250, "large space should exceed 250 points");
+    // every point evaluated to something physical
+    for p in &pts {
+        assert!(p.onchip_energy_pj.is_finite() && p.onchip_energy_pj > 0.0);
+        assert!(p.area_mm2 > 0.0);
+        assert!(p.capacity_bytes > 0);
+    }
+    // the paper's selection survives the finer axes
+    let best = Explorer::best_energy(&pts).unwrap();
+    assert_eq!(best.organization.label(), "PG-SEP");
+}
+
+#[test]
+fn grand_sweep_covers_models_and_nodes() {
+    // trim the space so the test stays quick while still crossing
+    // model x tech boundaries
+    let ms = MultiSweep {
+        space: SweepSpace {
+            banks: vec![8, 16],
+            sectors: vec![16, 64],
+            organizations: Organization::all().to_vec(),
+        },
+        ..MultiSweep::default()
+    };
+    let all = ms.run().unwrap();
+    assert_eq!(all.len(), ms.num_points());
+    let nodes = Technology::nodes();
+    for cfg in &ms.models {
+        for (tech_name, _) in &nodes {
+            let slice: Vec<_> = all
+                .iter()
+                .filter(|mp| mp.model == cfg.name && mp.tech == *tech_name)
+                .collect();
+            assert_eq!(slice.len(), 18, "{} @ {tech_name}", cfg.name);
+        }
+    }
+    // energies differ across technology nodes for the same design point
+    let pick = |tech: &str| {
+        all.iter()
+            .find(|mp| {
+                mp.model == "mnist"
+                    && mp.tech == tech
+                    && mp.point.banks == 16
+                    && mp.point.sectors == 64
+                    && mp.point.organization.label() == "PG-SEP"
+            })
+            .unwrap()
+            .point
+            .onchip_energy_pj
+    };
+    assert!(pick("65nm") > pick("22nm"));
+}
+
+#[test]
+fn prop_fast_pareto_matches_naive_on_random_sets() {
+    fn pt(e: f64, a: f64) -> DesignPoint {
+        DesignPoint {
+            organization: Organization::Hy { gated: true },
+            banks: 8,
+            sectors: 32,
+            onchip_energy_pj: e,
+            area_mm2: a,
+            capacity_bytes: 1,
+        }
+    }
+    check(Config::default().cases(80), |rng| {
+        let n = rng.range(1, 200) as usize;
+        // mix continuous values with a coarse grid so ties, duplicates
+        // and exact-equality corner cases all appear
+        let pts: Vec<DesignPoint> = (0..n)
+            .map(|_| {
+                if rng.range(0, 2) == 0 {
+                    pt(rng.f64() * 10.0, rng.f64() * 10.0)
+                } else {
+                    pt(rng.range(0, 8) as f64, rng.range(0, 8) as f64)
+                }
+            })
+            .collect();
+        let fast = pareto::front(&pts);
+        let naive = pareto::front_naive(&pts);
+        assert_eq!(fast.len(), naive.len(), "front size mismatch");
+        for (f, nv) in fast.iter().zip(&naive) {
+            assert!(
+                f.bit_eq(nv),
+                "front order/content mismatch:\n fast {f:?}\n naive {nv:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn pareto_scales_past_the_quadratic_regime() {
+    // sanity: the skyline of a big sweep output is well-formed
+    let mut ex = Explorer::new(CapsNetConfig::mnist());
+    ex.space = SweepSpace::large();
+    let pts = ex.sweep().unwrap();
+    let front = Explorer::pareto(&pts);
+    assert!(!front.is_empty() && front.len() < pts.len());
+    for p in &front {
+        assert!(!pts.iter().any(|q| q.dominates(p)));
+    }
+}

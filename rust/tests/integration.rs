@@ -249,6 +249,7 @@ fn runtime_and_simulator_agree_on_geometry() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn served_inference_is_deterministic() {
     let Some(dir) = artifacts() else { return };
