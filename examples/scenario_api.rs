@@ -1,0 +1,87 @@
+//! Tour of the unified Scenario evaluation API: build scenarios with
+//! the fluent builder, round-trip them through TOML, enumerate a
+//! cross-product set, and evaluate everything through one facade.
+//!
+//!     cargo run --release --example scenario_api
+
+use capstore::memsim::MemoryModel;
+use capstore::scenario::{Evaluator, Scenario, ScenarioSet, TechNode};
+use capstore::util::units::fmt_energy_uj;
+
+fn main() {
+    // 1. one scenario, fluently ------------------------------------------
+    let sc = Scenario::builder()
+        .network("mnist")
+        .tech("32nm")
+        .organization_named("PG-SEP")
+        .banks(16)
+        .sectors(64)
+        .batch(8)
+        .build()
+        .expect("valid scenario");
+    println!("scenario: {}", sc.label());
+
+    // 2. TOML round-trip --------------------------------------------------
+    let text = sc.to_toml();
+    let back = Scenario::parse(&text).expect("parses back");
+    assert_eq!(sc, back);
+    println!("\n-- scenario.toml --\n{text}");
+
+    // 3. evaluate through the facade --------------------------------------
+    let ev = Evaluator::new();
+    let e = ev.evaluate(&sc).expect("evaluation");
+    println!(
+        "on-chip {}  total {}  batch({}) {}  area {:.3} mm2",
+        fmt_energy_uj(e.onchip_pj()),
+        fmt_energy_uj(e.total_pj()),
+        sc.batch,
+        fmt_energy_uj(e.batch_pj()),
+        e.area_mm2(),
+    );
+    let event = e.event.as_ref().expect("full evaluate runs the event sim");
+    println!(
+        "event-level cross-check: static {}  wakeup {}  {} transitions",
+        fmt_energy_uj(event.static_pj),
+        fmt_energy_uj(event.wakeup_pj),
+        event.transitions,
+    );
+
+    // the memory backends behind the pluggable MemoryModel trait
+    println!("\nbackends:");
+    for m in e.memory_models() {
+        println!(
+            "  {:14} read {:.3} pJ/B  write {:.3} pJ/B  leak {:.2} mW  {}",
+            m.label(),
+            m.read_pj_per_byte(),
+            m.write_pj_per_byte(),
+            m.leakage_mw(),
+            if m.is_onchip() { "on-chip" } else { "off-chip" },
+        );
+    }
+
+    // 4. a cross-product set: all six organizations at two nodes ----------
+    let set = ScenarioSet {
+        techs: vec![TechNode::N32, TechNode::N22],
+        banks: vec![16],
+        sectors: vec![64],
+        ..ScenarioSet::default()
+    };
+    println!(
+        "\nset: {} scenarios (org x node at fixed geometry)",
+        set.num_scenarios()
+    );
+    let evals = ev.evaluate_set(&set).expect("set evaluation");
+    for e in &evals {
+        println!(
+            "  {:28} onchip {:>10}  total {:>10}",
+            e.scenario.label(),
+            fmt_energy_uj(e.onchip_pj()),
+            fmt_energy_uj(e.total_pj()),
+        );
+    }
+    let best = evals
+        .iter()
+        .min_by(|a, b| a.onchip_pj().partial_cmp(&b.onchip_pj()).unwrap())
+        .unwrap();
+    println!("winner: {}", best.scenario.label());
+}

@@ -19,6 +19,7 @@ use capstore::capstore::arch::Organization;
 use capstore::coordinator::batcher::BatchPolicy;
 use capstore::coordinator::server::{InferenceServer, ServerConfig};
 use capstore::report::table::Table;
+use capstore::scenario::Scenario;
 use capstore::testing::SplitMix64;
 
 /// Procedural digit images matching python/compile/weights.py:
@@ -54,7 +55,7 @@ fn serve(
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
             },
-            organization: org,
+            scenario: Scenario::builder().organization(org).build()?,
         },
     )?;
 

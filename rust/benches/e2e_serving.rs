@@ -9,9 +9,9 @@
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use capstore::capstore::arch::Organization;
 use capstore::coordinator::batcher::BatchPolicy;
 use capstore::coordinator::server::{InferenceServer, ServerConfig};
+use capstore::scenario::Scenario;
 use capstore::testing::SplitMix64;
 use capstore::util::units::fmt_energy_uj;
 
@@ -35,7 +35,8 @@ fn main() {
                     max_batch: 8,
                     max_wait: Duration::from_millis(2),
                 },
-                organization: Organization::Sep { gated: true },
+                // PG-SEP at the paper's defaults (Scenario::default)
+                scenario: Scenario::default(),
             },
         )
         .expect("server start");

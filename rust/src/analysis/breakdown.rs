@@ -155,9 +155,13 @@ impl EnergyModel {
 
     /// Evaluate one architecture over the full inference schedule.
     ///
-    /// Convenience wrapper around [`evaluate_arch_in`](Self::evaluate_arch_in)
+    /// Convenience shim around [`evaluate_arch_in`](Self::evaluate_arch_in)
     /// that rebuilds the [`SweepContext`] per call — fine for one-off
-    /// evaluations; the DSE reuses a single context across the sweep.
+    /// evaluations.  New code should go through
+    /// [`crate::scenario::Evaluator`], which shares one context per
+    /// network and one SRAM cost cache across every evaluation; this
+    /// entry point is kept (bit-identical) for the figure benches and
+    /// as the equivalence-test oracle.
     pub fn evaluate_arch(&self, arch: &CapStoreArch) -> ArchitectureEnergy {
         self.evaluate_arch_in(&self.context(), arch)
     }
@@ -294,11 +298,22 @@ impl EnergyModel {
         )
     }
 
-    /// Version (a) of the paper's Fig 5: the all-on-chip baseline.
+    /// Version (a) of the paper's Fig 5: the all-on-chip baseline at
+    /// this model's technology node.
     pub fn all_onchip_baseline(&self) -> Result<SystemEnergy> {
+        self.all_onchip_baseline_in(&self.tech)
+    }
+
+    /// [`all_onchip_baseline`](Self::all_onchip_baseline) at an explicit
+    /// node — the `scenario::Evaluator` path, where the technology comes
+    /// from the scenario rather than the model.
+    pub fn all_onchip_baseline_in(
+        &self,
+        tech: &Technology,
+    ) -> Result<SystemEnergy> {
         let (wcfg, dcfg) = self.baseline_srams();
-        let wcosts = cacti::evaluate(&wcfg, &self.tech)?;
-        let dcosts = cacti::evaluate(&dcfg, &self.tech)?;
+        let wcosts = cacti::evaluate(&wcfg, tech)?;
+        let dcosts = cacti::evaluate(&dcfg, tech)?;
 
         let schedule = Operation::schedule(&self.cfg);
         let mut dynamic = 0.0;
@@ -339,6 +354,11 @@ impl EnergyModel {
 
     /// Whole-system energy for one CapStore architecture (version (b)
     /// baseline when `arch` = SMP; Fig 11 when `arch` = PG-SEP).
+    ///
+    /// Shim-status: prefer [`crate::scenario::Evaluator::evaluate`],
+    /// which returns the same `SystemEnergy` (bit-identical) inside a
+    /// unified `Evaluation`; kept for the benches and as the
+    /// equivalence-test oracle.
     pub fn system_energy(&self, arch: &CapStoreArch) -> SystemEnergy {
         let ae = self.evaluate_arch(arch);
         SystemEnergy {

@@ -52,12 +52,25 @@ impl CapsNetConfig {
         }
     }
 
+    /// Every shipped network config, in presentation order.  This is the
+    /// single source of truth for the named-network registry: [`names`],
+    /// [`by_name`], the CLI help/error text, the config presets, and the
+    /// grand DSE sweep all derive from it, so adding a network here is
+    /// the only step needed to surface it everywhere.
+    ///
+    /// [`names`]: Self::names
+    /// [`by_name`]: Self::by_name
+    pub fn all() -> Vec<CapsNetConfig> {
+        vec![Self::mnist(), Self::small()]
+    }
+
+    /// The shipped network names, in [`all`](Self::all) order.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|c| c.name).collect()
+    }
+
     pub fn by_name(name: &str) -> Option<Self> {
-        match name {
-            "mnist" => Some(Self::mnist()),
-            "small" => Some(Self::small()),
-            _ => None,
-        }
+        Self::all().into_iter().find(|c| c.name == name)
     }
 
     // ----- derived geometry --------------------------------------------
@@ -172,5 +185,21 @@ mod tests {
         assert_eq!(CapsNetConfig::by_name("mnist"), Some(CapsNetConfig::mnist()));
         assert_eq!(CapsNetConfig::by_name("small"), Some(CapsNetConfig::small()));
         assert_eq!(CapsNetConfig::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn registry_is_consistent() {
+        // names()/by_name() both derive from all(); every name resolves
+        // back to the config it came from, and names are unique
+        let names = CapsNetConfig::names();
+        assert_eq!(names.len(), CapsNetConfig::all().len());
+        for (name, cfg) in names.iter().zip(CapsNetConfig::all()) {
+            assert_eq!(*name, cfg.name);
+            assert_eq!(CapsNetConfig::by_name(name), Some(cfg));
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate network name");
     }
 }

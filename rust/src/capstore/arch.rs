@@ -78,6 +78,19 @@ impl Organization {
             | Organization::Hy { gated } => *gated,
         }
     }
+
+    /// The sector count this organization actually instantiates for a
+    /// requested count: ungated organizations have no gating domains,
+    /// so their sector axis collapses to 1.  The single definition of
+    /// the collapse rule — architecture builds, DSE enumeration, and
+    /// scenario design-point projection all follow it.
+    pub fn effective_sectors(&self, requested: u64) -> u64 {
+        if self.gated() {
+            requested
+        } else {
+            1
+        }
+    }
 }
 
 /// One physical SRAM macro of an organization, with its evaluated costs.
@@ -139,7 +152,7 @@ impl CapStoreArch {
         evaluate: &mut dyn FnMut(&SramConfig) -> Result<SramCosts>,
     ) -> Result<CapStoreArch> {
         let pg = PowerGateModel::default();
-        let sectors = if org.gated() { sectors } else { 1 };
+        let sectors = org.effective_sectors(sectors);
         let maxc = req.max_components();
         let minc = req.min_components();
 

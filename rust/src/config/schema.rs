@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::Organization;
 #[cfg(feature = "pjrt")]
 use crate::coordinator::batcher::BatchPolicy;
@@ -16,7 +17,9 @@ use super::toml::TomlDoc;
 /// Everything a `capstore serve`/`analyze` run needs.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// Network config name ("mnist" or "small").
+    /// Network config name — any entry of
+    /// [`crate::capsnet::CapsNetConfig::names`] (the single registry;
+    /// adding a network there surfaces it here automatically).
     pub model: String,
     pub organization: Organization,
     pub banks: u64,
@@ -92,31 +95,48 @@ impl RunConfig {
         Self::from_toml(&TomlDoc::parse(&text)?)
     }
 
-    /// Lower into the coordinator's server config.
+    /// Lower into the coordinator's server config: this run config's
+    /// queueing/batching knobs plus the already-resolved evaluation
+    /// [`Scenario`] the energy accountant will simulate.  The CLI
+    /// resolves the scenario (defaults → config → scenario file →
+    /// flags) before calling this, so invalid combinations error at
+    /// resolution time, not here.
     #[cfg(feature = "pjrt")]
-    pub fn server_config(&self) -> ServerConfig {
+    pub fn server_config(
+        &self,
+        scenario: crate::scenario::Scenario,
+    ) -> ServerConfig {
         ServerConfig {
             queue_depth: self.queue_depth,
             batch: BatchPolicy {
                 max_batch: self.max_batch,
                 max_wait: self.max_wait,
             },
-            organization: self.organization,
+            scenario,
         }
     }
 }
 
-/// The six shipped presets (one per Table-1 organization).
+/// The shipped presets: every registry network × every Table-1
+/// organization, named `<network>/<org>` (e.g. `mnist/PG-SEP`).  Both
+/// axes come from their single sources of truth
+/// ([`CapsNetConfig::names`] / [`Organization::all`]), so adding a
+/// network or organization extends the presets automatically.
 pub fn presets() -> Vec<(String, RunConfig)> {
-    Organization::all()
-        .into_iter()
-        .map(|o| {
-            (
-                o.label().to_string(),
-                RunConfig { organization: o, ..RunConfig::default() },
-            )
-        })
-        .collect()
+    let mut out = Vec::new();
+    for name in CapsNetConfig::names() {
+        for o in Organization::all() {
+            out.push((
+                format!("{name}/{}", o.label()),
+                RunConfig {
+                    model: name.to_string(),
+                    organization: o,
+                    ..RunConfig::default()
+                },
+            ));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -153,18 +173,26 @@ mod tests {
     }
 
     #[test]
-    fn presets_cover_all_six() {
+    fn presets_cover_networks_x_organizations() {
         let p = presets();
-        assert_eq!(p.len(), 6);
-        assert!(p.iter().any(|(n, _)| n == "PG-HY"));
+        assert_eq!(p.len(), 6 * CapsNetConfig::names().len());
+        assert!(p.iter().any(|(n, _)| n == "mnist/PG-HY"));
+        let (_, small_sep) = p
+            .iter()
+            .find(|(n, _)| n == "small/PG-SEP")
+            .expect("small preset");
+        assert_eq!(small_sep.model, "small");
+        assert_eq!(small_sep.organization.label(), "PG-SEP");
     }
 
     #[cfg(feature = "pjrt")]
     #[test]
     fn server_config_lowering() {
+        use crate::scenario::Scenario;
         let c = RunConfig::default();
-        let s = c.server_config();
+        let s = c.server_config(Scenario::default());
         assert_eq!(s.batch.max_batch, 8);
-        assert_eq!(s.organization.label(), "PG-SEP");
+        assert_eq!(s.scenario.organization.label(), "PG-SEP");
+        assert_eq!(s.scenario.network.name, "mnist");
     }
 }

@@ -7,11 +7,10 @@
 //! inferences served; the accountant also tracks the per-operation split
 //! so the server can report a Fig-10d-style view of what it served.
 
-use crate::analysis::breakdown::{ArchitectureEnergy, EnergyModel};
 use crate::capsnet::{CapsNetConfig, OpKind};
-use crate::capstore::arch::{CapStoreArch, Organization};
+use crate::capstore::arch::Organization;
 use crate::error::Result;
-use crate::memsim::cacti::Technology;
+use crate::scenario::{Evaluator, Scenario};
 
 /// Precomputed per-inference energy for one organization.
 #[derive(Debug, Clone)]
@@ -25,18 +24,29 @@ pub struct EnergyAccountant {
 }
 
 impl EnergyAccountant {
-    /// Build the accountant for a network + organization.
+    /// Build the accountant for a network + organization at the default
+    /// geometry/node.  Shim over [`for_scenario`](Self::for_scenario)
+    /// (bit-identical to the pre-facade `evaluate_arch` path).
     pub fn new(cfg: &CapsNetConfig, org: Organization) -> Result<Self> {
-        let model = EnergyModel::new(cfg.clone());
-        let arch =
-            CapStoreArch::build_default(org, &model.req, &Technology::default())?;
-        let ae: ArchitectureEnergy = model.evaluate_arch(&arch);
+        let sc = Scenario::builder()
+            .network_config(cfg.clone())
+            .organization(org)
+            .build()?;
+        Self::for_scenario(&sc)
+    }
+
+    /// Build the accountant for a full [`Scenario`] — organization,
+    /// geometry, *and* technology node all drive the per-inference
+    /// energy the server attributes.  Analytical-only: the accountant
+    /// never consumes the event-level cross-check, so it is skipped.
+    pub fn for_scenario(sc: &Scenario) -> Result<Self> {
+        let e = Evaluator::new().evaluate_analytical(sc)?;
         Ok(EnergyAccountant {
-            organization: org,
-            onchip_pj_per_inference: ae.onchip_pj,
-            offchip_pj_per_inference: model.offchip_pj(),
-            accel_pj_per_inference: model.accel_pj(),
-            per_op_pj: ae.per_op_pj,
+            organization: sc.organization,
+            onchip_pj_per_inference: e.onchip.onchip_pj,
+            offchip_pj_per_inference: e.system.offchip_pj,
+            accel_pj_per_inference: e.system.accel_pj,
+            per_op_pj: e.onchip.per_op_pj,
             inferences: 0,
         })
     }

@@ -8,12 +8,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::capstore::arch::Organization;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::energy_account::EnergyAccountant;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::error::{Error, Result};
 use crate::runtime::engine::{InferenceEngine, InferenceOutput};
+use crate::scenario::Scenario;
 
 /// One inference request: an image plus the reply channel.
 pub struct Request {
@@ -35,8 +35,10 @@ pub struct Response {
 pub struct ServerConfig {
     pub queue_depth: usize,
     pub batch: BatchPolicy,
-    /// CapStore organization used for the energy accounting.
-    pub organization: Organization,
+    /// CapStore scenario the energy accountant simulates (organization,
+    /// geometry, and technology node; the network field is replaced by
+    /// the engine's actually-loaded config at startup).
+    pub scenario: Scenario,
 }
 
 impl Default for ServerConfig {
@@ -44,7 +46,7 @@ impl Default for ServerConfig {
         ServerConfig {
             queue_depth: 64,
             batch: BatchPolicy::default(),
-            organization: Organization::Sep { gated: true },
+            scenario: Scenario::default(),
         }
     }
 }
@@ -95,7 +97,7 @@ impl InferenceServer {
         let stop_w = stop.clone();
         let metrics_w = metrics.clone();
         let batch_cfg = cfg.batch.clone();
-        let organization = cfg.organization;
+        let scenario = cfg.scenario.clone();
 
         let worker = std::thread::Builder::new()
             .name("capstore-worker".into())
@@ -111,8 +113,14 @@ impl InferenceServer {
                         return;
                     }
                 };
+                // charge energy for the network the engine actually
+                // loaded, at the scenario's organization/geometry/node
+                let acct_scenario = Scenario {
+                    network: engine.cfg.clone(),
+                    ..scenario
+                };
                 let mut accountant =
-                    match EnergyAccountant::new(&engine.cfg, organization) {
+                    match EnergyAccountant::for_scenario(&acct_scenario) {
                         Ok(a) => a,
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));

@@ -145,14 +145,17 @@ impl Explorer {
     }
 
     /// [`sweep`](Self::sweep) with an explicit worker count.
+    ///
+    /// Delegating shim: the shared context and cost cache live in the
+    /// [`crate::scenario::Evaluator`] facade, which is the one place
+    /// that constructs them (outside tests and the
+    /// [`sweep_baseline`](Self::sweep_baseline) oracle).
     pub fn sweep_with_threads(
         &self,
         threads: usize,
     ) -> Result<Vec<DesignPoint>> {
-        let ctx = self.model.context();
-        let cache = CostCache::new();
-        let specs = sweep::enumerate(&self.space);
-        sweep::run(&self.model, &ctx, &cache, &specs, threads)
+        crate::scenario::Evaluator::new()
+            .sweep_model(&self.model, &self.space, threads)
     }
 
     /// The pre-refactor evaluation path — per-point context rebuild, no

@@ -257,7 +257,7 @@ pub struct MultiSweep {
 impl Default for MultiSweep {
     fn default() -> Self {
         MultiSweep {
-            models: vec![CapsNetConfig::mnist(), CapsNetConfig::small()],
+            models: CapsNetConfig::all(),
             techs: Technology::nodes().to_vec(),
             space: SweepSpace::large(),
             threads: 0,
@@ -271,28 +271,14 @@ impl MultiSweep {
         self.space.num_points() * self.models.len() * self.techs.len()
     }
 
-    /// Run the whole exploration.  One [`SweepContext`] per network —
-    /// the context is technology-independent, so all tech nodes of a
-    /// model share it — and one [`CostCache`] shared across everything
-    /// (the key includes the technology, so nodes never cross-talk).
+    /// Run the whole exploration.  Delegating shim over
+    /// [`crate::scenario::Evaluator::multi_sweep`]: one `SweepContext`
+    /// per network — the context is technology-independent, so all tech
+    /// nodes of a model share it — and one [`CostCache`] shared across
+    /// everything (the key includes the technology, so nodes never
+    /// cross-talk).
     pub fn run(&self) -> Result<Vec<MultiPoint>> {
-        let cache = CostCache::new();
-        let specs = enumerate(&self.space);
-        let mut out = Vec::with_capacity(self.num_points());
-        for cfg in &self.models {
-            let mut model = EnergyModel::new(cfg.clone());
-            let ctx = model.context();
-            for (tech_name, tech) in &self.techs {
-                model.tech = tech.clone();
-                let pts = run(&model, &ctx, &cache, &specs, self.threads)?;
-                out.extend(pts.into_iter().map(|point| MultiPoint {
-                    model: cfg.name,
-                    tech: tech_name,
-                    point,
-                }));
-            }
-        }
-        Ok(out)
+        crate::scenario::Evaluator::new().multi_sweep(self)
     }
 }
 

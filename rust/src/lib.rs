@@ -13,6 +13,10 @@
 //!   incremental design-space exploration engine ([`dse`]) — plus a PJRT
 //!   serving [`runtime`] and a threaded [`coordinator`] so the whole thing
 //!   runs real inference while the memory system is simulated alongside.
+//!   The [`scenario`] module is the unified public evaluation surface:
+//!   a typed `Scenario` (network × tech node × batch × organization ×
+//!   geometry × gating), a cross-product `ScenarioSet`, and the
+//!   `Evaluator` facade every other entry point delegates to.
 //!   The PJRT pieces (`runtime::engine`, `coordinator::server`) need the
 //!   `xla` crate and sit behind the default-off `pjrt` feature; everything
 //!   else is dependency-free and builds in the offline image.
@@ -31,6 +35,7 @@ pub mod capstore;
 pub mod analysis;
 pub mod dse;
 pub mod config;
+pub mod scenario;
 pub mod report;
 pub mod runtime;
 pub mod coordinator;

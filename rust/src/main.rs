@@ -2,33 +2,38 @@
 //!
 //! Subcommands:
 //!   analyze   — the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)
-//!   evaluate  — Table 1/2 + Fig 10 views for the six organizations
+//!   evaluate  — Table 1/2 + Fig 10 views + one Scenario evaluation
 //!   dse       — §4.2 design-space exploration (sweep + Pareto front)
 //!   serve     — run the PJRT inference server on synthetic digits
 //!   info      — artifact manifest + environment summary
 //!
-//! Hand-rolled arg parsing (clap is not in the offline image): flags are
-//! `--key value` pairs after the subcommand.
+//! Every subcommand accepts `--scenario <file.toml>` (a typed
+//! [`Scenario`] document; individual flags override its fields) and
+//! `--format table|json`.  Hand-rolled arg parsing (clap is not in the
+//! offline image): flags are `--key value` or `--key=value` pairs after
+//! the subcommand; flags a subcommand does not know are rejected.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use capstore::accel::systolic::SystolicSim;
-use capstore::analysis::breakdown::EnergyModel;
 use capstore::analysis::offchip::OffChipTraffic;
 use capstore::analysis::requirements::RequirementsAnalysis;
 use capstore::capsnet::{CapsNetConfig, Operation};
-use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::capstore::arch::{Organization, DEFAULT_BANKS, DEFAULT_SECTORS};
 use capstore::config::schema::{parse_organization, RunConfig};
+use capstore::config::toml::TomlDoc;
 #[cfg(feature = "pjrt")]
 use capstore::coordinator::server::InferenceServer;
 use capstore::dse::{Explorer, MultiSweep, SweepSpace};
 use capstore::report::paper::PaperReference;
 use capstore::report::table::Table;
 use capstore::runtime::manifest::ArtifactManifest;
+use capstore::scenario::{Evaluator, Geometry, Scenario, TechNode};
 #[cfg(feature = "pjrt")]
 use capstore::testing::SplitMix64;
+use capstore::util::json::Json;
 use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
 use capstore::Result;
 
@@ -68,56 +73,138 @@ fn main() -> ExitCode {
 }
 
 fn usage() {
+    // network and tech lists come from their registries, so the help
+    // text can never drift when an entry is added
+    let models = CapsNetConfig::names().join("|");
+    let techs = TechNode::names().join("|");
     println!(
         "capstore — energy-efficient on-chip memory for CapsuleNet accelerators
 
-USAGE: capstore <analyze|evaluate|dse|serve|info> [--flag value]...
+USAGE: capstore <analyze|evaluate|dse|serve|info> [--flag value | --flag=value]...
 
-FLAGS (all optional):
-  --model <mnist|small>       network config        [mnist]
-  --config <path.toml>        run config file
-  --org <SMP|PG-SEP|...>      memory organization   [PG-SEP]
-  --banks N --sectors N       memory geometry       [16 / 64]
-  --artifacts <dir>           artifact directory    [artifacts]
-  --threads N                 dse: worker threads   [0 = all cores]
+FLAGS (all optional, `--flag value` or `--flag=value`; a subcommand
+rejects flags it does not consume):
+  --scenario <path.toml>      typed scenario file (network/tech/org/
+                              geometry/batch/gating); flags below
+                              override its fields
+                                          (analyze, evaluate, dse, serve)
+  --format <table|json>       output format            [table]
+  --model <{models}>          network config           [mnist]
+                                          (analyze, evaluate, dse, serve)
+  --config <path.toml>        legacy run config file
+  --tech <{techs}>            technology node          [32nm]
+                                          (evaluate, dse, serve)
+  --org <SMP|PG-SEP|...>      memory organization      [PG-SEP]
+  --banks N --sectors N       memory geometry          [16 / 64]
+                                          (evaluate, serve)
+  --artifacts <dir>           artifact directory       [artifacts]
+                                          (serve, info)
+
+dse only:
+  --threads N                 worker threads           [0 = all cores]
   --space <default|large|full>
-                              dse: sweep extent     [default]
+                              sweep extent             [default]
                               (full = all tech nodes x all models,
-                              narrowed by --model/--config if given)
-  --requests N                serve: request count  [64]
-  --clients N                 serve: client threads [4]"
+                              narrowed by --model/--tech if given)
+
+serve only:
+  --requests N                request count            [64]
+  --clients N                 client threads           [4]"
     );
 }
 
 type Flags = BTreeMap<String, String>;
 
+/// Flags each subcommand understands, composed from shared groups so a
+/// future flag is added in one place.  Every listed flag is actually
+/// consumed by its subcommand — anything else is rejected at parse time
+/// rather than silently ignored.  `None` = unknown subcommand (let the
+/// dispatcher report it instead of a flag error).
+fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
+    // scenario selection + output shared by the evaluation commands
+    const SCENARIO: &[&str] = &["scenario", "format", "model", "config"];
+    // the memory-system axes of a scenario
+    const MEMORY: &[&str] = &["tech", "org", "banks", "sectors"];
+    let parts: &[&[&str]] = match cmd {
+        "analyze" => &[SCENARIO],
+        "evaluate" => &[SCENARIO, MEMORY],
+        "dse" => &[SCENARIO, &["tech", "threads", "space"]],
+        "serve" => {
+            &[SCENARIO, MEMORY, &["artifacts", "requests", "clients"]]
+        }
+        "info" => &[&["config", "artifacts", "format"]],
+        "help" | "" => &[],
+        _ => return None,
+    };
+    Some(parts.iter().flat_map(|p| p.iter().copied()).collect())
+}
+
+/// Parse `<cmd> [--flag value | --flag=value]...`, rejecting flags the
+/// subcommand does not know.
 fn parse_args(args: &[String]) -> Result<(String, Flags)> {
-    let mut flags = Flags::new();
     let cmd = args.first().cloned().unwrap_or_default();
+    let known = known_flags(&cmd);
+    let mut flags = Flags::new();
     let mut i = 1;
     while i < args.len() {
-        let k = args[i]
-            .strip_prefix("--")
-            .ok_or_else(|| {
-                capstore::Error::Config(format!(
-                    "expected --flag, got {:?}",
-                    args[i]
-                ))
-            })?
-            .to_string();
-        let v = args.get(i + 1).cloned().ok_or_else(|| {
-            capstore::Error::Config(format!("--{k} needs a value"))
+        let body = args[i].strip_prefix("--").ok_or_else(|| {
+            capstore::Error::Config(format!(
+                "expected --flag, got {:?}",
+                args[i]
+            ))
         })?;
-        flags.insert(k, v);
-        i += 2;
+        let (key, value) = match body.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => {
+                let v = args.get(i + 1).cloned().ok_or_else(|| {
+                    capstore::Error::Config(format!("--{body} needs a value"))
+                })?;
+                i += 1;
+                (body.to_string(), v)
+            }
+        };
+        if let Some(known) = &known {
+            if !known.contains(&key.as_str()) {
+                return Err(capstore::Error::Config(format!(
+                    "unknown flag --{key} for `{cmd}` (known: {})",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )));
+            }
+        }
+        flags.insert(key, value);
+        i += 1;
     }
     Ok((cmd, flags))
 }
 
+/// Read and parse the TOML file a flag points at (once — callers that
+/// also need the raw document reuse it instead of re-reading).
+fn flag_doc(flags: &Flags, flag: &str) -> Result<Option<TomlDoc>> {
+    match flags.get(flag) {
+        None => Ok(None),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Ok(Some(TomlDoc::parse(&text)?))
+        }
+    }
+}
+
 /// Assemble the run config from --config file + flag overrides.
 fn run_config(flags: &Flags) -> Result<RunConfig> {
-    let mut cfg = match flags.get("config") {
-        Some(path) => RunConfig::load(path)?,
+    run_config_with_doc(flags, flag_doc(flags, "config")?.as_ref())
+}
+
+/// [`run_config`] against an already-parsed config document.
+fn run_config_with_doc(
+    flags: &Flags,
+    doc: Option<&TomlDoc>,
+) -> Result<RunConfig> {
+    let mut cfg = match doc {
+        Some(doc) => RunConfig::from_toml(doc)?,
         None => RunConfig::default(),
     };
     if let Some(m) = flags.get("model") {
@@ -138,14 +225,63 @@ fn run_config(flags: &Flags) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-fn bad_flag(name: &str, v: &str) -> capstore::Error {
-    capstore::Error::Config(format!("--{name}: cannot parse {v:?}"))
+/// Resolve the effective [`Scenario`], stacking lowest to highest:
+/// built-in defaults → `--config` run config → keys present in the
+/// `--scenario` file → individual flags.
+fn scenario_from(flags: &Flags, rc: &RunConfig) -> Result<Scenario> {
+    scenario_with_doc(flags, rc, flag_doc(flags, "scenario")?.as_ref())
 }
 
-fn net(cfg: &RunConfig) -> Result<CapsNetConfig> {
-    CapsNetConfig::by_name(&cfg.model).ok_or_else(|| {
-        capstore::Error::Config(format!("unknown model {:?}", cfg.model))
-    })
+/// [`scenario_from`] against an already-parsed scenario document.
+fn scenario_with_doc(
+    flags: &Flags,
+    rc: &RunConfig,
+    doc: Option<&TomlDoc>,
+) -> Result<Scenario> {
+    let mut b = Scenario::builder()
+        .network(&rc.model)
+        .organization(rc.organization)
+        .banks(rc.banks)
+        .sectors(rc.sectors);
+    if let Some(doc) = doc {
+        b = b.overlay_toml(doc)?;
+    }
+    if let Some(m) = flags.get("model") {
+        b = b.network(m);
+    }
+    if let Some(o) = flags.get("org") {
+        b = b.organization_named(o);
+    }
+    if let Some(t) = flags.get("tech") {
+        b = b.tech(t);
+    }
+    if let Some(v) = flags.get("banks") {
+        b = b.banks(v.parse().map_err(|_| bad_flag("banks", v))?);
+    }
+    if let Some(v) = flags.get("sectors") {
+        b = b.sectors(v.parse().map_err(|_| bad_flag("sectors", v))?);
+    }
+    b.build()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Table,
+    Json,
+}
+
+fn out_format(flags: &Flags) -> Result<Format> {
+    match flags.get("format").map(String::as_str) {
+        None | Some("table") => Ok(Format::Table),
+        Some("json") => Ok(Format::Json),
+        Some(other) => Err(capstore::Error::Config(format!(
+            "--format: want table|json, got {other:?}"
+        ))),
+    }
+}
+
+fn bad_flag(name: &str, v: &str) -> capstore::Error {
+    capstore::Error::Config(format!("--{name}: cannot parse {v:?}"))
 }
 
 // ---------------------------------------------------------------------
@@ -153,17 +289,19 @@ fn net(cfg: &RunConfig) -> Result<CapsNetConfig> {
 // ---------------------------------------------------------------------
 fn cmd_analyze(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
-    let cfg = net(&rc)?;
+    let fmt = out_format(flags)?;
+    let sc = scenario_from(flags, &rc)?;
+    let cfg = sc.network.clone();
     let sim = SystolicSim::default();
     let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
     let cap = req.max_total();
 
-    let mut t = Table::new(
+    let mut t_req = Table::new(
         "Fig 4a/4c — on-chip memory requirements per operation (bytes)",
         &["op", "data", "weight", "accum", "total", "util%"],
     );
     for o in &req.per_op {
-        t.row(vec![
+        t_req.row(vec![
             o.kind.label().to_string(),
             o.req.data.to_string(),
             o.req.weight.to_string(),
@@ -172,39 +310,31 @@ fn cmd_analyze(flags: &Flags) -> Result<()> {
             format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
         ]);
     }
-    t.print();
-    println!("overall worst case (dashed line): {}\n", fmt_bytes(cap));
 
-    let mut t = Table::new(
+    let mut t_cycles = Table::new(
         "Fig 4b — clock cycles per operation",
         &["op", "execs", "cycles", "total"],
     );
     for op in Operation::all_kinds(&cfg) {
         let p = sim.profile(&op);
         let execs = op.kind.executions(&cfg);
-        t.row(vec![
+        t_cycles.row(vec![
             op.kind.label().into(),
             execs.to_string(),
             fmt_si(p.cycles),
             fmt_si(p.cycles * execs),
         ]);
     }
-    t.print();
     let (_, total) = sim.profile_schedule(&cfg);
-    println!(
-        "inference total: {} cycles = {:.3} ms @ {:.1} GHz\n",
-        fmt_si(total),
-        total as f64 / sim.array.clock_hz * 1e3,
-        sim.array.clock_hz / 1e9
-    );
+    let inference_ms = total as f64 / sim.array.clock_hz * 1e3;
 
-    let mut t = Table::new(
+    let mut t_acc = Table::new(
         "Fig 4d/4e — on-chip accesses per operation (per execution)",
         &["op", "data R", "data W", "wt R", "wt W", "acc R", "acc W"],
     );
     for op in Operation::all_kinds(&cfg) {
         let p = sim.profile(&op);
-        t.row(vec![
+        t_acc.row(vec![
             op.kind.label().into(),
             fmt_si(p.data_reads),
             fmt_si(p.data_writes),
@@ -214,38 +344,74 @@ fn cmd_analyze(flags: &Flags) -> Result<()> {
             fmt_si(p.accum_writes),
         ]);
     }
-    t.print();
-    println!();
 
-    let mut t = Table::new(
+    let mut t_off = Table::new(
         "Eq (1)/(2) — off-chip accesses per operation",
         &["op", "reads", "writes"],
     );
     for tr in OffChipTraffic::analyze(&cfg, &sim) {
-        t.row(vec![
+        t_off.row(vec![
             tr.kind.label().into(),
             fmt_si(tr.reads),
             fmt_si(tr.writes),
         ]);
     }
-    t.print();
-    println!(
-        "total DRAM bytes per inference: {}",
-        fmt_bytes(OffChipTraffic::total_bytes(&cfg, &sim))
-    );
+    let dram_bytes = OffChipTraffic::total_bytes(&cfg, &sim);
+
+    match fmt {
+        Format::Table => {
+            t_req.print();
+            println!("overall worst case (dashed line): {}\n", fmt_bytes(cap));
+            t_cycles.print();
+            println!(
+                "inference total: {} cycles = {:.3} ms @ {:.1} GHz\n",
+                fmt_si(total),
+                inference_ms,
+                sim.array.clock_hz / 1e9
+            );
+            t_acc.print();
+            println!();
+            t_off.print();
+            println!(
+                "total DRAM bytes per inference: {}",
+                fmt_bytes(dram_bytes)
+            );
+        }
+        Format::Json => {
+            let j = Json::obj(vec![
+                ("network", Json::Str(cfg.name.to_string())),
+                (
+                    "tables",
+                    Json::Arr(vec![
+                        t_req.to_json(),
+                        t_cycles.to_json(),
+                        t_acc.to_json(),
+                        t_off.to_json(),
+                    ]),
+                ),
+                ("worst_case_bytes", Json::Num(cap as f64)),
+                ("total_cycles", Json::Num(total as f64)),
+                ("inference_ms", Json::Num(inference_ms)),
+                ("dram_bytes_per_inference", Json::Num(dram_bytes as f64)),
+            ]);
+            println!("{}", j.render());
+        }
+    }
     Ok(())
 }
 
 // ---------------------------------------------------------------------
-// evaluate — Tables 1/2, Figs 5/10/11
+// evaluate — Tables 1/2, Figs 5/10/11, + the selected scenario
 // ---------------------------------------------------------------------
 fn cmd_evaluate(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
-    let cfg = net(&rc)?;
-    let model = EnergyModel::new(cfg);
+    let fmt = out_format(flags)?;
+    let sc = scenario_from(flags, &rc)?;
+    let ev = Evaluator::new();
     let paper = PaperReference::new();
 
-    let archs = CapStoreArch::all_default(&model.req, &model.tech)?;
+    // Tables 1/2: all six organizations at the paper's default geometry
+    // for the scenario's network + node (one facade, shared caches).
     let mut t1 = Table::new(
         "Table 1 — organizations (sizes in bytes)",
         &["org", "macro", "size", "banks", "sectors", "ports"],
@@ -254,12 +420,21 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
         "Table 2 — area and on-chip energy per organization",
         &["org", "area mm2", "energy/inf", "vs SMP", "paper vs SMP"],
     );
-
     let mut smp_energy = None;
-    for arch in &archs {
-        for m in &arch.macros {
+    let mut org_evals = Vec::new();
+    for org in Organization::all() {
+        let org_sc = Scenario {
+            organization: org,
+            geometry: Geometry {
+                banks: DEFAULT_BANKS,
+                sectors: DEFAULT_SECTORS,
+            },
+            ..sc.clone()
+        };
+        let e = ev.evaluate_analytical(&org_sc)?;
+        for m in &e.architecture.macros {
             t1.row(vec![
-                arch.organization.label().into(),
+                org.label().into(),
                 m.role.label().into(),
                 m.sram.size_bytes.to_string(),
                 m.sram.banks.to_string(),
@@ -267,87 +442,144 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
                 m.sram.ports.to_string(),
             ]);
         }
-        let e = model.evaluate_arch(arch);
-        if arch.organization.label() == "SMP" {
-            smp_energy = Some(e.onchip_pj);
+        if org.label() == "SMP" {
+            smp_energy = Some(e.onchip_pj());
         }
-        let vs_smp = smp_energy.map(|s| e.onchip_pj / s).unwrap_or(1.0);
+        let vs_smp = smp_energy.map(|s| e.onchip_pj() / s).unwrap_or(1.0);
         let paper_ratio = paper
-            .energy_vs_smp(arch.organization.label())
+            .energy_vs_smp(org.label())
             .map(|r| format!("{r:.3}"))
             .unwrap_or_else(|| "-".into());
         t2.row(vec![
-            arch.organization.label().into(),
-            format!("{:.3}", e.area_mm2),
-            fmt_energy_uj(e.onchip_pj),
+            org.label().into(),
+            format!("{:.3}", e.area_mm2()),
+            fmt_energy_uj(e.onchip_pj()),
             format!("{vs_smp:.3}"),
             paper_ratio,
         ]);
+        org_evals.push(e);
     }
-    t1.print();
-    println!();
-    t2.print();
 
-    // Fig 5 / Fig 11 headline systems
-    let a = model.all_onchip_baseline()?;
-    let smp = CapStoreArch::build_default(
-        Organization::Smp { gated: false },
-        &model.req,
-        &model.tech,
-    )?;
-    let b = model.system_energy(&smp);
-    let pg_sep = CapStoreArch::build_default(
-        Organization::Sep { gated: true },
-        &model.req,
-        &model.tech,
-    )?;
-    let c = model.system_energy(&pg_sep);
+    // Fig 5 / Fig 11 headline systems (reusing the six evaluations)
+    let a = ev.all_onchip_baseline(&sc)?;
+    let by_label = |l: &str| {
+        org_evals
+            .iter()
+            .find(|e| e.scenario.organization.label() == l)
+            .expect("all six organizations evaluated")
+    };
+    let b = by_label("SMP").system.clone();
+    let c = by_label("PG-SEP").system.clone();
 
-    println!("\n== Fig 5 / Fig 11 — whole-system energy per inference ==");
-    for sys in [&a, &b, &c] {
-        println!(
-            "{:18} accel {:>10}  onchip {:>10}  offchip {:>10}  total {:>10}  (memory {:.1}%)",
-            sys.label,
-            fmt_energy_uj(sys.accel_pj),
-            fmt_energy_uj(sys.onchip_pj),
-            fmt_energy_uj(sys.offchip_pj),
-            fmt_energy_uj(sys.total_pj()),
-            100.0 * sys.memory_share()
-        );
+    // the scenario actually selected: the only full evaluation (with
+    // the event-level cross-check) — the table loop above is
+    // analytical-only, so exactly one event sim runs per invocation
+    let selected = ev.evaluate(&sc)?;
+
+    match fmt {
+        Format::Table => {
+            t1.print();
+            println!();
+            t2.print();
+
+            println!(
+                "\n== Fig 5 / Fig 11 — whole-system energy per inference =="
+            );
+            for sys in [&a, &b, &c] {
+                println!(
+                    "{:18} accel {:>10}  onchip {:>10}  offchip {:>10}  total {:>10}  (memory {:.1}%)",
+                    sys.label,
+                    fmt_energy_uj(sys.accel_pj),
+                    fmt_energy_uj(sys.onchip_pj),
+                    fmt_energy_uj(sys.offchip_pj),
+                    fmt_energy_uj(sys.total_pj()),
+                    100.0 * sys.memory_share()
+                );
+            }
+            println!();
+            println!(
+                "{}",
+                PaperReference::delta_line(
+                    "hierarchy saving (b vs a)",
+                    1.0 - b.total_pj() / a.total_pj(),
+                    PaperReference::HIERARCHY_SAVING
+                )
+            );
+            println!(
+                "{}",
+                PaperReference::delta_line(
+                    "PG-SEP on-chip saving vs (b)",
+                    1.0 - c.onchip_pj / b.onchip_pj,
+                    PaperReference::PG_SEP_ONCHIP_SAVING
+                )
+            );
+            println!(
+                "{}",
+                PaperReference::delta_line(
+                    "PG-SEP total saving vs (a)",
+                    1.0 - c.total_pj() / a.total_pj(),
+                    PaperReference::PG_SEP_TOTAL_VS_A
+                )
+            );
+            println!(
+                "{}",
+                PaperReference::delta_line(
+                    "PG-SEP total saving vs (b)",
+                    1.0 - c.total_pj() / b.total_pj(),
+                    PaperReference::PG_SEP_TOTAL_VS_B
+                )
+            );
+
+            println!("\n== scenario {} ==", selected.scenario.label());
+            println!(
+                "onchip {}  offchip {}  accel {}  total {}",
+                fmt_energy_uj(selected.onchip_pj()),
+                fmt_energy_uj(selected.system.offchip_pj),
+                fmt_energy_uj(selected.system.accel_pj),
+                fmt_energy_uj(selected.total_pj()),
+            );
+            println!(
+                "area {:.3} mm2, capacity {}, batch {} -> {} per batch",
+                selected.area_mm2(),
+                fmt_bytes(selected.capacity_bytes()),
+                selected.scenario.batch,
+                fmt_energy_uj(selected.batch_pj()),
+            );
+            if let Some(event) = &selected.event {
+                println!(
+                    "event-sim: static {}  wakeup {}  transitions {}  stall cycles {}",
+                    fmt_energy_uj(event.static_pj),
+                    fmt_energy_uj(event.wakeup_pj),
+                    event.transitions,
+                    event.not_ready_cycles,
+                );
+            }
+        }
+        Format::Json => {
+            let systems: Vec<Json> = [&a, &b, &c]
+                .iter()
+                .map(|sys| {
+                    Json::obj(vec![
+                        ("label", Json::Str(sys.label.clone())),
+                        ("accel_pj", Json::Num(sys.accel_pj)),
+                        ("onchip_pj", Json::Num(sys.onchip_pj)),
+                        ("offchip_pj", Json::Num(sys.offchip_pj)),
+                        ("total_pj", Json::Num(sys.total_pj())),
+                        ("memory_share", Json::Num(sys.memory_share())),
+                    ])
+                })
+                .collect();
+            let j = Json::obj(vec![
+                ("table1", t1.to_json()),
+                ("table2", t2.to_json()),
+                ("systems", Json::Arr(systems)),
+                // full Evaluation of the selected scenario (its own
+                // "scenario" sub-object names the evaluated point)
+                ("selected", selected.to_json()),
+            ]);
+            println!("{}", j.render());
+        }
     }
-    println!();
-    println!(
-        "{}",
-        PaperReference::delta_line(
-            "hierarchy saving (b vs a)",
-            1.0 - b.total_pj() / a.total_pj(),
-            PaperReference::HIERARCHY_SAVING
-        )
-    );
-    println!(
-        "{}",
-        PaperReference::delta_line(
-            "PG-SEP on-chip saving vs (b)",
-            1.0 - c.onchip_pj / b.onchip_pj,
-            PaperReference::PG_SEP_ONCHIP_SAVING
-        )
-    );
-    println!(
-        "{}",
-        PaperReference::delta_line(
-            "PG-SEP total saving vs (a)",
-            1.0 - c.total_pj() / a.total_pj(),
-            PaperReference::PG_SEP_TOTAL_VS_A
-        )
-    );
-    println!(
-        "{}",
-        PaperReference::delta_line(
-            "PG-SEP total saving vs (b)",
-            1.0 - c.total_pj() / b.total_pj(),
-            PaperReference::PG_SEP_TOTAL_VS_B
-        )
-    );
     Ok(())
 }
 
@@ -355,7 +587,37 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
 // dse — §4.2 sweep (parallel incremental engine)
 // ---------------------------------------------------------------------
 fn cmd_dse(flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
+    // parse each flagged TOML file exactly once; the docs feed both the
+    // scenario resolution and the sweep-narrowing key-presence checks
+    let config_doc = flag_doc(flags, "config")?;
+    let scenario_doc = flag_doc(flags, "scenario")?;
+    let rc = run_config_with_doc(flags, config_doc.as_ref())?;
+    let fmt = out_format(flags)?;
+    let sc = scenario_with_doc(flags, &rc, scenario_doc.as_ref())?;
+    // the exploration sweeps the organization/geometry axes itself, so
+    // a scenario file may only pin the workload axes (network/tech).
+    // Files that merely restate the effective defaults — e.g. anything
+    // Scenario::to_toml() emits — are fine; a file that actually
+    // CHANGES org/geometry/batch/gating would be silently overridden
+    // by the sweep, and this CLI rejects rather than ignores (matching
+    // known_flags, which rejects --org/--banks/--sectors for `dse`).
+    if scenario_doc.is_some() {
+        let without = scenario_with_doc(flags, &rc, None)?;
+        if sc.organization != without.organization
+            || sc.geometry != without.geometry
+            || sc.batch != without.batch
+            || sc.gating != without.gating
+        {
+            return Err(capstore::Error::Config(
+                "`dse` explores the organization/geometry axes itself: \
+                 the scenario file pins organization/geometry/batch/\
+                 gating values the sweep would override — drop those \
+                 keys (only `[scenario] network`/`tech` steer a sweep), \
+                 or use `capstore evaluate` for a single design point"
+                    .into(),
+            ));
+        }
+    }
     let threads: usize = flags
         .get("threads")
         .map(|v| v.parse().map_err(|_| bad_flag("threads", v)))
@@ -364,27 +626,37 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
     let space = flags.get("space").map(String::as_str).unwrap_or("default");
 
     if space == "full" || space == "grand" {
-        // an explicit model selection (--model flag, or a config file
-        // that actually sets `model`) narrows the grand sweep; the
-        // geometry/org flags pick a single design point and don't apply
-        // to an exploration
-        let config_sets_model =
-            flags.get("config").is_some_and(|path| {
-                std::fs::read_to_string(path)
-                    .ok()
-                    .and_then(|text| {
-                        capstore::config::toml::TomlDoc::parse(&text).ok()
-                    })
-                    .is_some_and(|doc| !doc.str_or("", "model", "").is_empty())
-            });
+        // an explicit model/tech selection narrows the grand sweep: a
+        // flag, or a config/scenario file that actually SETS the key
+        // (a scenario file that only tunes, say, gating must not
+        // collapse the exploration to the default model/node); the
+        // geometry/org flags pick a single design point and don't
+        // apply to an exploration
+        let config_sets_model = config_doc
+            .as_ref()
+            .is_some_and(|doc| !doc.str_or("", "model", "").is_empty());
+        let scenario_sets = |key: &str| {
+            scenario_doc
+                .as_ref()
+                .is_some_and(|doc| doc.get("scenario", key).is_some())
+        };
         let model_filter = (flags.contains_key("model")
+            || scenario_sets("network")
             || config_sets_model)
-        .then(|| rc.model.clone());
-        return cmd_dse_full(threads, model_filter.as_deref());
+        .then(|| sc.network.name.to_string());
+        let tech_filter = (flags.contains_key("tech")
+            || scenario_sets("tech"))
+        .then(|| sc.tech.label());
+        return cmd_dse_full(
+            threads,
+            model_filter.as_deref(),
+            tech_filter,
+            fmt,
+        );
     }
 
-    let cfg = net(&rc)?;
-    let mut ex = Explorer::new(cfg).with_threads(threads);
+    let mut ex = Explorer::new(sc.network.clone()).with_threads(threads);
+    ex.model.tech = sc.tech.technology();
     ex.space = match space {
         "default" => SweepSpace::default(),
         "large" => SweepSpace::large(),
@@ -399,6 +671,7 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
     let points = ex.sweep()?;
     let secs = t0.elapsed().as_secs_f64();
     let front = Explorer::pareto(&points);
+    let best = Explorer::best_energy(&points).expect("non-empty sweep");
 
     let mut t = Table::new(
         "DSE — Pareto front over (on-chip energy, area)",
@@ -414,44 +687,82 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
             fmt_bytes(p.capacity_bytes),
         ]);
     }
-    t.print();
-    let best = Explorer::best_energy(&points).expect("non-empty sweep");
-    println!(
-        "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
-        best.organization.label(),
-        best.banks,
-        best.sectors,
-        fmt_energy_uj(best.onchip_energy_pj)
-    );
-    println!(
-        "explored {} design points in {:.1} ms ({:.0} points/s)",
-        points.len(),
-        secs * 1.0e3,
-        points.len() as f64 / secs.max(1e-12)
-    );
+
+    match fmt {
+        Format::Table => {
+            t.print();
+            println!(
+                "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
+                best.organization.label(),
+                best.banks,
+                best.sectors,
+                fmt_energy_uj(best.onchip_energy_pj)
+            );
+            println!(
+                "explored {} design points in {:.1} ms ({:.0} points/s)",
+                points.len(),
+                secs * 1.0e3,
+                points.len() as f64 / secs.max(1e-12)
+            );
+        }
+        Format::Json => {
+            let j = Json::obj(vec![
+                ("network", Json::Str(sc.network.name.to_string())),
+                ("tech", Json::Str(sc.tech.label().to_string())),
+                ("points", Json::Num(points.len() as f64)),
+                ("seconds", Json::Num(secs)),
+                ("pareto_front", t.to_json()),
+                (
+                    "best",
+                    Json::obj(vec![
+                        (
+                            "org",
+                            Json::Str(best.organization.label().to_string()),
+                        ),
+                        ("banks", Json::Num(best.banks as f64)),
+                        ("sectors", Json::Num(best.sectors as f64)),
+                        ("energy_pj", Json::Num(best.onchip_energy_pj)),
+                        ("area_mm2", Json::Num(best.area_mm2)),
+                    ]),
+                ),
+            ]);
+            println!("{}", j.render());
+        }
+    }
     Ok(())
 }
 
 /// The grand sweep: every named network (or just `--model`) x every
-/// technology node x the large space, with per-pair winners and
-/// throughput.
-fn cmd_dse_full(threads: usize, model: Option<&str>) -> Result<()> {
+/// technology node (or just `--tech`) x the large space, with per-pair
+/// winners and throughput.
+fn cmd_dse_full(
+    threads: usize,
+    model: Option<&str>,
+    tech: Option<&'static str>,
+    fmt: Format,
+) -> Result<()> {
     let mut ms = MultiSweep { threads, ..MultiSweep::default() };
     if let Some(name) = model {
         ms.models.retain(|m| m.name == name);
         if ms.models.is_empty() {
             return Err(capstore::Error::Config(format!(
-                "unknown model {name:?}"
+                "unknown model {name:?} (want one of {})",
+                CapsNetConfig::names().join(", ")
             )));
         }
     }
-    println!(
-        "grand sweep: {} models x {} tech nodes x {} points = {} total",
-        ms.models.len(),
-        ms.techs.len(),
-        ms.space.num_points(),
-        ms.num_points()
-    );
+    if let Some(node) = tech {
+        ms.techs.retain(|(n, _)| *n == node);
+    }
+    if fmt == Format::Table {
+        println!(
+            "grand sweep: {} models x {} tech nodes x {} points = {} total",
+            ms.models.len(),
+            ms.techs.len(),
+            ms.space.num_points(),
+            ms.num_points()
+        );
+    }
     let t0 = std::time::Instant::now();
     let all = ms.run()?;
     let secs = t0.elapsed().as_secs_f64();
@@ -484,13 +795,25 @@ fn cmd_dse_full(threads: usize, model: Option<&str>) -> Result<()> {
             ]);
         }
     }
-    t.print();
-    println!(
-        "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
-        all.len(),
-        secs * 1.0e3,
-        all.len() as f64 / secs.max(1e-12)
-    );
+    match fmt {
+        Format::Table => {
+            t.print();
+            println!(
+                "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
+                all.len(),
+                secs * 1.0e3,
+                all.len() as f64 / secs.max(1e-12)
+            );
+        }
+        Format::Json => {
+            let j = Json::obj(vec![
+                ("points", Json::Num(all.len() as f64)),
+                ("seconds", Json::Num(secs)),
+                ("winners", t.to_json()),
+            ]);
+            println!("{}", j.render());
+        }
+    }
     Ok(())
 }
 
@@ -509,6 +832,8 @@ fn cmd_serve(_flags: &Flags) -> Result<()> {
 #[cfg(feature = "pjrt")]
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
+    let fmt = out_format(flags)?;
+    let sc = scenario_from(flags, &rc)?;
     let requests: usize = flags
         .get("requests")
         .map(|v| v.parse().map_err(|_| bad_flag("requests", v)))
@@ -521,15 +846,19 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .unwrap_or(4)
         .max(1);
 
-    println!(
-        "serving model={} org={} requests={requests} clients={clients}",
-        rc.model,
-        rc.organization.label()
-    );
+    if fmt == Format::Table {
+        println!(
+            "serving scenario={} requests={requests} clients={clients}",
+            sc.label()
+        );
+    }
+    // the resolved scenario (config/file/flags) drives the energy
+    // accounting in full — organization, geometry, and tech node; the
+    // legacy run config contributes only the queueing/batching knobs
     let server = InferenceServer::start(
         PathBuf::from(&rc.artifact_dir),
-        rc.model.clone(),
-        rc.server_config(),
+        sc.network.name.to_string(),
+        rc.server_config(sc.clone()),
     )?;
 
     let mut joins = Vec::new();
@@ -553,24 +882,56 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         joins.into_iter().map(|j| j.join().expect("client died").len()).sum();
     let m = server.shutdown();
 
-    println!("served {served} requests in {:.2}s", m.wall_seconds);
-    println!(
-        "throughput {:.1} inf/s, mean batch occupancy {:.2}",
-        m.throughput(),
-        m.mean_occupancy()
-    );
-    if let Some(s) = m.latency.summary() {
-        println!(
-            "latency ms: median {:.2} p95 {:.2} max {:.2}",
-            s.median, s.p95, s.max
-        );
+    match fmt {
+        Format::Table => {
+            println!("served {served} requests in {:.2}s", m.wall_seconds);
+            println!(
+                "throughput {:.1} inf/s, mean batch occupancy {:.2}",
+                m.throughput(),
+                m.mean_occupancy()
+            );
+            if let Some(s) = m.latency.summary() {
+                println!(
+                    "latency ms: median {:.2} p95 {:.2} max {:.2}",
+                    s.median, s.p95, s.max
+                );
+            }
+            println!(
+                "simulated memory+accel energy: {} total, {:.2} µJ/inference ({})",
+                fmt_energy_uj(m.sim_energy_pj),
+                m.energy_uj_per_inference(),
+                sc.organization.label()
+            );
+        }
+        Format::Json => {
+            let mut fields = vec![
+                ("served", Json::Num(served as f64)),
+                ("wall_seconds", Json::Num(m.wall_seconds)),
+                ("throughput", Json::Num(m.throughput())),
+                ("mean_occupancy", Json::Num(m.mean_occupancy())),
+                ("sim_energy_pj", Json::Num(m.sim_energy_pj)),
+                (
+                    "energy_uj_per_inference",
+                    Json::Num(m.energy_uj_per_inference()),
+                ),
+                (
+                    "organization",
+                    Json::Str(sc.organization.label().to_string()),
+                ),
+            ];
+            if let Some(s) = m.latency.summary() {
+                fields.push((
+                    "latency_ms",
+                    Json::obj(vec![
+                        ("median", Json::Num(s.median)),
+                        ("p95", Json::Num(s.p95)),
+                        ("max", Json::Num(s.max)),
+                    ]),
+                ));
+            }
+            println!("{}", Json::obj(fields).render());
+        }
     }
-    println!(
-        "simulated memory+accel energy: {} total, {:.2} µJ/inference ({})",
-        fmt_energy_uj(m.sim_energy_pj),
-        m.energy_uj_per_inference(),
-        rc.organization.label()
-    );
     Ok(())
 }
 
@@ -579,22 +940,144 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 // ---------------------------------------------------------------------
 fn cmd_info(flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
+    let fmt = out_format(flags)?;
     let dir = PathBuf::from(&rc.artifact_dir);
     let m = ArtifactManifest::load(&dir)?;
-    println!("artifact dir: {}", dir.display());
-    println!("param order:  {:?}", m.param_order);
+
+    let mut networks: Vec<Json> = Vec::new();
+    if fmt == Format::Table {
+        println!("artifact dir: {}", dir.display());
+        println!("networks:     {}", CapsNetConfig::names().join(", "));
+        println!("tech nodes:   {}", TechNode::names().join(", "));
+        println!("param order:  {:?}", m.param_order);
+    }
     for (name, entry) in &m.configs {
-        println!(
-            "config {name}: batches {:?}, {} ops, weights {} ({} params)",
-            entry.model.keys().collect::<Vec<_>>(),
-            entry.ops.len(),
-            entry.weights,
-            entry.num_params
-        );
-        if let Some(cfg) = CapsNetConfig::by_name(name) {
+        let validated = if let Some(cfg) = CapsNetConfig::by_name(name) {
             m.validate_against(name, &cfg)?;
-            println!("  geometry cross-check vs rust model: OK");
+            true
+        } else {
+            false
+        };
+        match fmt {
+            Format::Table => {
+                println!(
+                    "config {name}: batches {:?}, {} ops, weights {} ({} params)",
+                    entry.model.keys().collect::<Vec<_>>(),
+                    entry.ops.len(),
+                    entry.weights,
+                    entry.num_params
+                );
+                if validated {
+                    println!("  geometry cross-check vs rust model: OK");
+                }
+            }
+            Format::Json => networks.push(Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("ops", Json::Num(entry.ops.len() as f64)),
+                ("num_params", Json::Num(entry.num_params as f64)),
+                ("validated", Json::Bool(validated)),
+            ])),
         }
     }
+    if fmt == Format::Json {
+        let j = Json::obj(vec![
+            (
+                "artifact_dir",
+                Json::Str(dir.display().to_string()),
+            ),
+            (
+                "networks",
+                Json::Arr(
+                    CapsNetConfig::names()
+                        .iter()
+                        .map(|n| Json::Str(n.to_string()))
+                        .collect(),
+                ),
+            ),
+            ("configs", Json::Arr(networks)),
+        ]);
+        println!("{}", j.render());
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_args_supports_both_flag_forms() {
+        let (cmd, flags) =
+            parse_args(&argv(&["evaluate", "--banks=8", "--org", "SMP"]))
+                .unwrap();
+        assert_eq!(cmd, "evaluate");
+        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
+        assert_eq!(flags.get("org").map(String::as_str), Some("SMP"));
+    }
+
+    #[test]
+    fn equals_form_does_not_swallow_next_token() {
+        // the pre-redesign bug: `--banks=8 --sectors 32` stored the key
+        // "banks=8" and swallowed "--sectors" as its value
+        let (_, flags) =
+            parse_args(&argv(&["evaluate", "--banks=8", "--sectors", "32"]))
+                .unwrap();
+        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
+        assert_eq!(flags.get("sectors").map(String::as_str), Some("32"));
+        assert!(!flags.contains_key("banks=8"));
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_subcommand() {
+        // flags a subcommand does not consume are errors, not ignored
+        assert!(parse_args(&argv(&["analyze", "--banks", "8"])).is_err());
+        assert!(parse_args(&argv(&["info", "--model", "small"])).is_err());
+        assert!(parse_args(&argv(&["evaluate", "--bogus", "1"])).is_err());
+        assert!(parse_args(&argv(&["help", "--format", "json"])).is_err());
+        // ...while consumed flags pass
+        assert!(parse_args(&argv(&["dse", "--threads", "2"])).is_ok());
+        assert!(parse_args(&argv(&["evaluate", "--tech=22nm"])).is_ok());
+        // unknown subcommands defer to the dispatcher's error
+        assert!(parse_args(&argv(&["frobnicate", "--x", "1"])).is_ok());
+    }
+
+    #[test]
+    fn flags_require_values_and_dashes() {
+        assert!(parse_args(&argv(&["evaluate", "--banks"])).is_err());
+        assert!(parse_args(&argv(&["evaluate", "banks", "8"])).is_err());
+    }
+
+    #[test]
+    fn scenario_resolution_stacks_all_four_layers() {
+        // defaults -> run config -> scenario doc -> flags
+        let rc = RunConfig {
+            model: "small".into(),
+            banks: 8,
+            ..RunConfig::default()
+        };
+        let doc = TomlDoc::parse("[memory]\nbanks = 4\n").unwrap();
+        let mut flags = Flags::new();
+        flags.insert("sectors".into(), "32".into());
+        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
+        assert_eq!(sc.network.name, "small"); // run config
+        assert_eq!(sc.geometry.banks, 4); // doc overrides run config
+        assert_eq!(sc.geometry.sectors, 32); // flag overrides default
+        flags.insert("banks".into(), "2".into());
+        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
+        assert_eq!(sc.geometry.banks, 2); // flag overrides doc
+    }
+
+    #[test]
+    fn out_format_parses_and_rejects() {
+        let mut flags = Flags::new();
+        assert_eq!(out_format(&flags).unwrap(), Format::Table);
+        flags.insert("format".into(), "json".into());
+        assert_eq!(out_format(&flags).unwrap(), Format::Json);
+        flags.insert("format".into(), "xml".into());
+        assert!(out_format(&flags).is_err());
+    }
 }

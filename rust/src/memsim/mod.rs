@@ -18,11 +18,18 @@
 //!
 //! Constants are calibrated so 32nm magnitudes and, more importantly, the
 //! paper's *ratios* hold; `analysis::breakdown` tests assert those shapes.
+//!
+//! [`model::MemoryModel`] is the pluggable backend contract (read/write
+//! energy per byte, leakage, area) that both the SRAM and DRAM models
+//! implement — the seam future backends (eDRAM, real CACTI runs) plug
+//! into, surfaced per scenario by `scenario::Evaluation::memory_models`.
 
 pub mod cacti;
 pub mod dram;
+pub mod model;
 pub mod powergate;
 
 pub use cacti::{SramConfig, SramCosts, Technology};
 pub use dram::DramModel;
+pub use model::{MemoryModel, SramMacroModel};
 pub use powergate::{PowerGateModel, SleepTransistor};

@@ -72,6 +72,29 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// JSON view: `{"title": ..., "rows": [{header: cell, ...}, ...]}`
+    /// (cells stay strings — the table layer is presentation, not data).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .cloned()
+                        .zip(row.iter().map(|c| Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +115,22 @@ mod tests {
         // label column left-aligned, numeric right-aligned
         assert!(lines[3].starts_with("C1 "));
         assert!(lines[4].ends_with("    7"));
+    }
+
+    #[test]
+    fn json_view_keys_rows_by_header() {
+        use crate::util::json::Json;
+        let mut t = Table::new("demo", &["op", "cycles"]);
+        t.row(vec!["C1".into(), "32432".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j.path(&["title"]).and_then(Json::as_str),
+            Some("demo")
+        );
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("cycles").and_then(Json::as_str), Some("32432"));
+        // and the rendered text parses as JSON
+        assert!(Json::parse(&j.render()).is_ok());
     }
 
     #[test]

@@ -1,0 +1,448 @@
+//! The [`Evaluator`] facade — the one place that wires a [`Scenario`]
+//! through every model in the crate and returns a unified
+//! [`Evaluation`].
+//!
+//! The facade owns the two pieces of shared evaluation state:
+//!
+//! * one `(EnergyModel, SweepContext)` per network (the arch- and
+//!   tech-independent schedule/profile/traffic precomputation), built
+//!   lazily and reused across scenarios and technology nodes;
+//! * one memoized [`CostCache`] shared by every scenario and sweep, so
+//!   identical SRAM geometries solve the CACTI model exactly once.
+//!
+//! Everything the old scattered entry points did — `evaluate_arch`,
+//! `system_energy`, `EventSim::new(...).run(...)`,
+//! `Explorer::sweep_with_threads`, `MultiSweep::run` — now routes
+//! through here; the old names survive as delegating shims and stay
+//! bit-identical (pinned by `tests/scenario_facade.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::breakdown::{
+    ArchitectureEnergy, EnergyModel, SystemEnergy,
+};
+use crate::analysis::context::SweepContext;
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::CapStoreArch;
+use crate::capstore::eventsim::{EventSim, EventSimResult};
+use crate::dse::sweep::{self, CostCache, MultiPoint, MultiSweep};
+use crate::dse::{DesignPoint, SweepSpace};
+use crate::error::Result;
+use crate::memsim::model::{MemoryModel, SramMacroModel};
+use crate::memsim::DramModel;
+use crate::scenario::{Scenario, ScenarioSet};
+use crate::util::json::Json;
+
+/// Per-network shared state: the energy model (with the calibration
+/// defaults — technology enters per scenario through the cost cache) and
+/// the arch-independent sweep context.
+struct NetworkState {
+    model: EnergyModel,
+    ctx: SweepContext,
+}
+
+/// The unified result of evaluating one [`Scenario`]: the architecture
+/// that was built, its analytical on-chip energy integration, the
+/// whole-system view, and the event-level PMU cross-check.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub scenario: Scenario,
+    /// The instantiated memory architecture (macros + costs).
+    pub architecture: CapStoreArch,
+    /// Analytical on-chip energy (per-macro + per-op breakdowns).
+    pub onchip: ArchitectureEnergy,
+    /// Whole-system energy: accelerator + on-chip + off-chip.
+    pub system: SystemEnergy,
+    /// Event-level gated-memory simulation at the scenario's lookahead;
+    /// `None` when produced by [`Evaluator::evaluate_analytical`].
+    pub event: Option<EventSimResult>,
+}
+
+impl Evaluation {
+    /// On-chip memory energy per inference, pJ.
+    pub fn onchip_pj(&self) -> f64 {
+        self.onchip.onchip_pj
+    }
+
+    /// Whole-system energy per inference, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.system.total_pj()
+    }
+
+    /// Whole-system energy per batch (the model is workload-static, so
+    /// batches scale linearly), pJ.
+    pub fn batch_pj(&self) -> f64 {
+        self.scenario.batch as f64 * self.total_pj()
+    }
+
+    /// Memory area including gating circuitry, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.onchip.area_mm2
+    }
+
+    /// Total on-chip capacity, bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.onchip.capacity_bytes
+    }
+
+    /// Project onto the DSE's (energy, area) design-point view.
+    /// Ungated organizations report `sectors = 1`
+    /// ([`crate::capstore::arch::Organization::effective_sectors`]) —
+    /// the architecture build
+    /// and `dse::sweep::enumerate` follow the same rule, so facade
+    /// points and sweep points for the same design always compare
+    /// equal.
+    pub fn design_point(&self) -> DesignPoint {
+        let sectors = self
+            .scenario
+            .organization
+            .effective_sectors(self.scenario.geometry.sectors);
+        DesignPoint {
+            organization: self.scenario.organization,
+            banks: self.scenario.geometry.banks,
+            sectors,
+            onchip_energy_pj: self.onchip.onchip_pj,
+            area_mm2: self.onchip.area_mm2,
+            capacity_bytes: self.onchip.capacity_bytes,
+        }
+    }
+
+    /// The memory backends this scenario touches, behind the pluggable
+    /// [`MemoryModel`] interface: one entry per on-chip macro plus the
+    /// off-chip DRAM.
+    pub fn memory_models(&self) -> Vec<Box<dyn MemoryModel>> {
+        let mut out: Vec<Box<dyn MemoryModel>> = self
+            .architecture
+            .macros
+            .iter()
+            .map(|m| {
+                Box::new(SramMacroModel {
+                    role: m.role.label().to_string(),
+                    config: m.sram.clone(),
+                    costs: m.costs.clone(),
+                }) as Box<dyn MemoryModel>
+            })
+            .collect();
+        out.push(Box::new(DramModel::default()));
+        out
+    }
+
+    /// JSON view (the CLI's `--format json`).
+    pub fn to_json(&self) -> Json {
+        let sc = &self.scenario;
+        let backends: Vec<Json> = self
+            .memory_models()
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("label", Json::Str(m.label())),
+                    ("read_pj_per_byte", Json::Num(m.read_pj_per_byte())),
+                    ("write_pj_per_byte", Json::Num(m.write_pj_per_byte())),
+                    ("leakage_mw", Json::Num(m.leakage_mw())),
+                    ("area_mm2", Json::Num(m.area_mm2())),
+                    ("onchip", Json::Bool(m.is_onchip())),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("network", Json::Str(sc.network.name.to_string())),
+                    ("tech", Json::Str(sc.tech.label().to_string())),
+                    (
+                        "organization",
+                        Json::Str(sc.organization.label().to_string()),
+                    ),
+                    ("banks", Json::Num(sc.geometry.banks as f64)),
+                    ("sectors", Json::Num(sc.geometry.sectors as f64)),
+                    ("batch", Json::Num(sc.batch as f64)),
+                    (
+                        "lookahead_cycles",
+                        Json::Num(sc.gating.lookahead_cycles as f64),
+                    ),
+                ]),
+            ),
+            ("onchip_pj", Json::Num(self.onchip.onchip_pj)),
+            ("offchip_pj", Json::Num(self.system.offchip_pj)),
+            ("accel_pj", Json::Num(self.system.accel_pj)),
+            ("total_pj", Json::Num(self.total_pj())),
+            ("batch_pj", Json::Num(self.batch_pj())),
+            ("area_mm2", Json::Num(self.area_mm2())),
+            ("capacity_bytes", Json::Num(self.capacity_bytes() as f64)),
+        ];
+        if let Some(event) = &self.event {
+            fields.push((
+                "event",
+                Json::obj(vec![
+                    ("static_pj", Json::Num(event.static_pj)),
+                    ("wakeup_pj", Json::Num(event.wakeup_pj)),
+                    ("transitions", Json::Num(event.transitions as f64)),
+                    (
+                        "not_ready_cycles",
+                        Json::Num(event.not_ready_cycles as f64),
+                    ),
+                ]),
+            ));
+        }
+        fields.push(("backends", Json::Arr(backends)));
+        Json::obj(fields)
+    }
+}
+
+/// The facade.  Cheap to create; reusable (and shareable) across many
+/// scenarios — reuse amortizes the per-network context and the CACTI
+/// cost cache.
+#[derive(Default)]
+pub struct Evaluator {
+    cache: CostCache,
+    nets: Mutex<Vec<(CapsNetConfig, Arc<NetworkState>)>>,
+}
+
+impl Evaluator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shared SRAM cost cache (hit/miss introspection).
+    pub fn cost_cache(&self) -> &CostCache {
+        &self.cache
+    }
+
+    /// Per-network shared state, built on first use.  Keyed on full
+    /// config equality, so custom (unregistered) networks work too.
+    fn state_for(&self, cfg: &CapsNetConfig) -> Arc<NetworkState> {
+        let mut nets = self.nets.lock().unwrap();
+        if let Some((_, st)) = nets.iter().find(|(c, _)| c == cfg) {
+            return st.clone();
+        }
+        let model = EnergyModel::new(cfg.clone());
+        let ctx = model.context();
+        let st = Arc::new(NetworkState { model, ctx });
+        nets.push((cfg.clone(), st.clone()));
+        st
+    }
+
+    /// Evaluate one scenario end to end: build the architecture at the
+    /// scenario's node (through the cost cache), integrate the on-chip
+    /// energy against the shared context, assemble the whole-system
+    /// view, and run the event-level PMU cross-check.
+    ///
+    /// Bit-identical to the pre-facade path (`CapStoreArch::build` +
+    /// `EnergyModel::evaluate_arch` + `system_energy` + `EventSim`):
+    /// the cost cache memoizes a pure function and the context path is
+    /// pinned bit-identical by `analysis::context` tests.
+    pub fn evaluate(&self, sc: &Scenario) -> Result<Evaluation> {
+        self.evaluate_inner(sc, true)
+    }
+
+    /// [`evaluate`](Self::evaluate) without the event-level PMU pass —
+    /// for callers that only consume the analytical energies (the
+    /// serving accountant, table sweeps); `Evaluation::event` is `None`.
+    pub fn evaluate_analytical(&self, sc: &Scenario) -> Result<Evaluation> {
+        self.evaluate_inner(sc, false)
+    }
+
+    fn evaluate_inner(
+        &self,
+        sc: &Scenario,
+        with_event: bool,
+    ) -> Result<Evaluation> {
+        let st = self.state_for(&sc.network);
+        let tech = sc.tech.technology();
+        let architecture = CapStoreArch::build_with(
+            sc.organization,
+            &st.model.req,
+            sc.geometry.banks,
+            sc.geometry.sectors,
+            &mut |sram| self.cache.evaluate(sram, &tech),
+        )?;
+        let onchip = st.model.evaluate_arch_in(&st.ctx, &architecture);
+        let system = SystemEnergy {
+            label: sc.organization.label().into(),
+            accel_pj: st.model.accel_pj(),
+            onchip_pj: onchip.onchip_pj,
+            offchip_pj: st.model.offchip_pj(),
+        };
+        let event = if with_event {
+            Some(
+                EventSim::new(
+                    &architecture,
+                    &st.model.req,
+                    &st.model.cfg,
+                    &st.model.sim,
+                )
+                .run(sc.gating.lookahead_cycles)?,
+            )
+        } else {
+            None
+        };
+        Ok(Evaluation {
+            scenario: sc.clone(),
+            architecture,
+            onchip,
+            system,
+            event,
+        })
+    }
+
+    /// Evaluate every scenario of a set, in canonical order (full
+    /// evaluations, including the event-level pass).
+    pub fn evaluate_set(&self, set: &ScenarioSet) -> Result<Vec<Evaluation>> {
+        set.scenarios().iter().map(|sc| self.evaluate(sc)).collect()
+    }
+
+    /// [`evaluate_set`](Self::evaluate_set) without the event-level
+    /// pass — the cheap path for large sets whose consumers only read
+    /// the analytical energies.
+    pub fn evaluate_set_analytical(
+        &self,
+        set: &ScenarioSet,
+    ) -> Result<Vec<Evaluation>> {
+        set.scenarios()
+            .iter()
+            .map(|sc| self.evaluate_analytical(sc))
+            .collect()
+    }
+
+    /// The paper's Fig-3a/Fig-5 version (a) baseline (all-on-chip
+    /// CapsAcc memories) for the scenario's network at its node.
+    pub fn all_onchip_baseline(&self, sc: &Scenario) -> Result<SystemEnergy> {
+        self.state_for(&sc.network)
+            .model
+            .all_onchip_baseline_in(&sc.tech.technology())
+    }
+
+    /// Engine-level sweep for the DSE: shared context, this facade's
+    /// cost cache, chunked parallel execution.  `Explorer::sweep*`
+    /// delegates here; the model's `tech` field selects the node.
+    pub fn sweep_model(
+        &self,
+        model: &EnergyModel,
+        space: &SweepSpace,
+        threads: usize,
+    ) -> Result<Vec<DesignPoint>> {
+        let ctx = model.context();
+        let specs = sweep::enumerate(space);
+        sweep::run(model, &ctx, &self.cache, &specs, threads)
+    }
+
+    /// The grand multi-network / multi-node sweep (`MultiSweep::run`
+    /// delegates here).  One context per network — it is
+    /// tech-independent, so every node of a model shares it — and this
+    /// facade's single cost cache across everything (the cache key
+    /// includes the technology, so nodes never cross-talk).
+    pub fn multi_sweep(&self, ms: &MultiSweep) -> Result<Vec<MultiPoint>> {
+        let specs = sweep::enumerate(&ms.space);
+        let mut out = Vec::with_capacity(ms.num_points());
+        for cfg in &ms.models {
+            let mut model = EnergyModel::new(cfg.clone());
+            let ctx = model.context();
+            for &(tech_name, ref tech) in &ms.techs {
+                model.tech = tech.clone();
+                let pts =
+                    sweep::run(&model, &ctx, &self.cache, &specs, ms.threads)?;
+                out.extend(pts.into_iter().map(|point| MultiPoint {
+                    model: cfg.name,
+                    tech: tech_name,
+                    point,
+                }));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::capstore::arch::Organization;
+    use crate::scenario::TechNode;
+
+    #[test]
+    fn evaluation_is_self_consistent() {
+        let ev = Evaluator::new();
+        let sc = Scenario::default();
+        let e = ev.evaluate(&sc).unwrap();
+        assert_eq!(e.system.onchip_pj, e.onchip.onchip_pj);
+        assert!(e.total_pj() > e.onchip_pj());
+        assert_eq!(e.batch_pj(), e.total_pj()); // batch 1
+        assert_eq!(e.design_point().organization.label(), "PG-SEP");
+        // macros + DRAM behind the trait
+        assert_eq!(
+            e.memory_models().len(),
+            e.architecture.macros.len() + 1
+        );
+    }
+
+    #[test]
+    fn network_state_is_cached() {
+        let ev = Evaluator::new();
+        let a = Scenario::builder().tech_node(TechNode::N32).build().unwrap();
+        let b = Scenario::builder().tech_node(TechNode::N22).build().unwrap();
+        ev.evaluate(&a).unwrap();
+        ev.evaluate(&b).unwrap();
+        // same network across nodes -> one shared state
+        assert_eq!(ev.nets.lock().unwrap().len(), 1);
+        // and distinct tech nodes produce distinct cache entries
+        assert!(ev.cost_cache().len() >= 2);
+    }
+
+    #[test]
+    fn batch_scales_linearly() {
+        let ev = Evaluator::new();
+        let one = ev.evaluate(&Scenario::default()).unwrap();
+        let eight = ev
+            .evaluate(&Scenario { batch: 8, ..Scenario::default() })
+            .unwrap();
+        assert_eq!(one.total_pj().to_bits(), eight.total_pj().to_bits());
+        let ratio = eight.batch_pj() / one.batch_pj();
+        assert!((ratio - 8.0).abs() < 1e-12, "{ratio}");
+    }
+
+    #[test]
+    fn json_view_parses_back() {
+        let ev = Evaluator::new();
+        let e = ev.evaluate(&Scenario::default()).unwrap();
+        let j = e.to_json();
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(
+            parsed.path(&["scenario", "organization"]).and_then(Json::as_str),
+            Some("PG-SEP")
+        );
+        assert!(parsed.get("onchip_pj").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ungated_scenarios_have_quiet_events() {
+        let ev = Evaluator::new();
+        let sc = Scenario::builder()
+            .organization(Organization::Smp { gated: false })
+            .build()
+            .unwrap();
+        let e = ev.evaluate(&sc).unwrap();
+        let event = e.event.as_ref().expect("full evaluate runs event sim");
+        assert_eq!(event.transitions, 0);
+        assert_eq!(event.wakeup_pj, 0.0);
+        // ungated design points collapse the sector axis, matching the
+        // DSE's enumeration convention
+        assert_eq!(e.design_point().sectors, 1);
+    }
+
+    #[test]
+    fn analytical_evaluation_skips_event_sim() {
+        let ev = Evaluator::new();
+        let full = ev.evaluate(&Scenario::default()).unwrap();
+        let lite = ev.evaluate_analytical(&Scenario::default()).unwrap();
+        assert!(full.event.is_some());
+        assert!(lite.event.is_none());
+        // the analytical numbers are identical either way
+        assert_eq!(
+            full.onchip.onchip_pj.to_bits(),
+            lite.onchip.onchip_pj.to_bits()
+        );
+        // and the JSON view simply omits the event block
+        assert!(lite.to_json().get("event").is_none());
+        assert!(full.to_json().get("event").is_some());
+    }
+}

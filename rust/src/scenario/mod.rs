@@ -1,0 +1,605 @@
+//! The unified **Scenario** evaluation API — one typed entry point for
+//! *network × technology node × batch × memory organization × geometry ×
+//! gating policy* across analysis, DSE, and serving.
+//!
+//! Before this module, the paper's core loop (pick a CapsuleNet, a tech
+//! node, a memory organization and a gating policy, then evaluate energy
+//! — Figs 5–11) was spread across ad-hoc `(CapsNetConfig, Technology,
+//! CapStoreArch)` tuples and free functions, each call site re-plumbing
+//! the same five axes.  The pieces here close that gap:
+//!
+//! * [`Scenario`] — the value type naming one evaluation point, with a
+//!   fluent [`ScenarioBuilder`] and a TOML round-trip
+//!   ([`Scenario::to_toml`] / [`Scenario::from_toml`]);
+//! * [`ScenarioSet`] — a cross-product enumerator over every axis,
+//!   subsuming the DSE's ad-hoc `MultiSweep` product;
+//! * [`Evaluator`] — the facade that owns the shared `SweepContext` and
+//!   memoized `CostCache` and returns one unified [`Evaluation`]
+//!   (architecture energy + whole-system energy + event-level
+//!   cross-check + area) per scenario.
+//!
+//! The pre-existing entry points (`EnergyModel::evaluate_arch`,
+//! `system_energy`, `Explorer::sweep*`, `MultiSweep::run`,
+//! `EnergyAccountant::new`) survive as thin shims over this facade and
+//! stay bit-identical — `tests/scenario_facade.rs` pins the equivalence
+//! for every organization × network × technology node.
+
+pub mod evaluator;
+pub mod set;
+
+pub use evaluator::{Evaluation, Evaluator};
+pub use set::ScenarioSet;
+
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::{
+    Organization, DEFAULT_BANKS, DEFAULT_SECTORS,
+};
+use crate::config::schema::parse_organization;
+use crate::config::toml::TomlDoc;
+use crate::error::{Error, Result};
+use crate::memsim::cacti::Technology;
+
+/// Default PMU wakeup lookahead (cycles before an operation boundary at
+/// which the next op's sectors are woken — the paper's Fig 9 protocol).
+pub const DEFAULT_LOOKAHEAD_CYCLES: u64 = 256;
+
+/// A named technology node the scenario axis enumerates.  Each variant
+/// maps onto the calibrated [`Technology`] constant sets in
+/// [`crate::memsim::cacti`]; the enum (rather than a raw `Technology`)
+/// is what gives scenarios an exact TOML round-trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TechNode {
+    N65,
+    N45,
+    /// The paper's CACTI-P operating point (the calibrated default).
+    N32,
+    N22,
+}
+
+impl Default for TechNode {
+    fn default() -> Self {
+        TechNode::N32
+    }
+}
+
+impl TechNode {
+    /// Every named node, oldest first (matches `Technology::nodes()`).
+    pub fn all() -> [TechNode; 4] {
+        [TechNode::N65, TechNode::N45, TechNode::N32, TechNode::N22]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TechNode::N65 => "65nm",
+            TechNode::N45 => "45nm",
+            TechNode::N32 => "32nm",
+            TechNode::N22 => "22nm",
+        }
+    }
+
+    /// The calibrated constant set for this node.
+    pub fn technology(&self) -> Technology {
+        match self {
+            TechNode::N65 => Technology::node_65nm(),
+            TechNode::N45 => Technology::node_45nm(),
+            TechNode::N32 => Technology::node_32nm(),
+            TechNode::N22 => Technology::node_22nm(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<TechNode> {
+        Self::all()
+            .into_iter()
+            .find(|t| t.label().eq_ignore_ascii_case(name))
+    }
+
+    /// The node labels, in [`all`](Self::all) order — the single source
+    /// for help text, error messages, and `capstore info`.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|t| t.label()).collect()
+    }
+}
+
+/// SRAM macro geometry the scenario fixes (the DSE sweeps these axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Geometry {
+    pub banks: u64,
+    /// Power-gating sectors; ungated organizations collapse to 1 at
+    /// architecture-build time regardless of this value.
+    pub sectors: u64,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        Geometry { banks: DEFAULT_BANKS, sectors: DEFAULT_SECTORS }
+    }
+}
+
+/// Power-gating policy knobs (the PMU's ahead-of-time wakeup of Fig 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GatingPolicy {
+    /// Cycles before an operation boundary at which the PMU wakes the
+    /// next op's sectors (0 = wake lazily at the boundary).
+    pub lookahead_cycles: u64,
+}
+
+impl Default for GatingPolicy {
+    fn default() -> Self {
+        GatingPolicy { lookahead_cycles: DEFAULT_LOOKAHEAD_CYCLES }
+    }
+}
+
+/// One fully-specified evaluation point: *what* to evaluate, on *which*
+/// memory system, at *which* node — everything [`Evaluator::evaluate`]
+/// needs and nothing it doesn't.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub network: CapsNetConfig,
+    pub tech: TechNode,
+    /// Inference batch size; the workload-static energy model scales
+    /// linearly, so this only affects per-batch aggregates.
+    pub batch: u64,
+    pub organization: Organization,
+    pub geometry: Geometry,
+    pub gating: GatingPolicy,
+}
+
+impl Default for Scenario {
+    /// The paper's headline point: MNIST CapsuleNet, 32nm, PG-SEP,
+    /// 16 banks × 64 sectors, batch 1.
+    fn default() -> Self {
+        Scenario {
+            network: CapsNetConfig::mnist(),
+            tech: TechNode::default(),
+            batch: 1,
+            organization: Organization::Sep { gated: true },
+            geometry: Geometry::default(),
+            gating: GatingPolicy::default(),
+        }
+    }
+}
+
+impl Scenario {
+    /// Start a fluent builder seeded with [`Scenario::default`].
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// Re-open this scenario as a builder (CLI flag overlays).
+    pub fn into_builder(self) -> ScenarioBuilder {
+        ScenarioBuilder {
+            network: NetworkChoice::Config(self.network),
+            tech: TechChoice::Node(self.tech),
+            organization: OrgChoice::Org(self.organization),
+            batch: self.batch,
+            geometry: self.geometry,
+            gating: self.gating,
+        }
+    }
+
+    /// Short human label, e.g. `mnist/32nm/PG-SEP b16 s64`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{} b{} s{}",
+            self.network.name,
+            self.tech.label(),
+            self.organization.label(),
+            self.geometry.banks,
+            self.geometry.sectors
+        )
+    }
+
+    /// Serialize to the scenario TOML dialect.  [`from_toml`] parses the
+    /// result back to an equal scenario (networks are stored by name, so
+    /// only registry networks — [`CapsNetConfig::all`] — round-trip).
+    ///
+    /// [`from_toml`]: Self::from_toml
+    pub fn to_toml(&self) -> String {
+        format!(
+            "# capstore scenario\n\
+             [scenario]\n\
+             network = \"{}\"\n\
+             tech = \"{}\"\n\
+             batch = {}\n\
+             \n\
+             [memory]\n\
+             organization = \"{}\"\n\
+             banks = {}\n\
+             sectors = {}\n\
+             \n\
+             [gating]\n\
+             lookahead_cycles = {}\n",
+            self.network.name,
+            self.tech.label(),
+            self.batch,
+            self.organization.label(),
+            self.geometry.banks,
+            self.geometry.sectors,
+            self.gating.lookahead_cycles
+        )
+    }
+
+    /// Build from a parsed TOML document; missing keys take the
+    /// [`Scenario::default`] values.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Scenario> {
+        Scenario::builder().overlay_toml(doc)?.build()
+    }
+
+    /// Parse from TOML text.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        Self::from_toml(&TomlDoc::parse(text)?)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+}
+
+/// Strict typed getter for scenario TOML keys: absent is fine, but a
+/// present key with the wrong value type is an error — never silently
+/// dropped (see [`ScenarioBuilder::overlay_toml`]).
+fn want_str<'a>(
+    doc: &'a TomlDoc,
+    section: &str,
+    key: &str,
+) -> Result<Option<&'a str>> {
+    match doc.get(section, key) {
+        None => Ok(None),
+        Some(v) => v.as_str().map(Some).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario file: `[{section}] {key}` must be a string, \
+                 got {v:?}"
+            ))
+        }),
+    }
+}
+
+/// [`want_str`] for non-negative integer keys.
+fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<u64>> {
+    match doc.get(section, key) {
+        None => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario file: `[{section}] {key}` must be a \
+                 non-negative integer, got {v:?}"
+            ))
+        }),
+    }
+}
+
+#[derive(Debug, Clone)]
+enum NetworkChoice {
+    /// Deferred name lookup, validated at [`ScenarioBuilder::build`].
+    Named(String),
+    Config(CapsNetConfig),
+}
+
+#[derive(Debug, Clone)]
+enum TechChoice {
+    Named(String),
+    Node(TechNode),
+}
+
+#[derive(Debug, Clone)]
+enum OrgChoice {
+    Named(String),
+    Org(Organization),
+}
+
+/// Fluent [`Scenario`] builder.  Setters never fail — name lookups and
+/// range checks are deferred to [`build`](Self::build) so chains stay
+/// `?`-free:
+///
+/// ```
+/// use capstore::scenario::Scenario;
+/// let sc = Scenario::builder()
+///     .network("small")
+///     .tech("22nm")
+///     .organization_named("PG-HY")
+///     .banks(8)
+///     .sectors(32)
+///     .batch(4)
+///     .build()
+///     .unwrap();
+/// assert_eq!(sc.label(), "small/22nm/PG-HY b8 s32");
+/// ```
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    network: NetworkChoice,
+    tech: TechChoice,
+    organization: OrgChoice,
+    batch: u64,
+    geometry: Geometry,
+    gating: GatingPolicy,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        Scenario::default().into_builder()
+    }
+}
+
+impl ScenarioBuilder {
+    /// Select a registry network by name (see [`CapsNetConfig::names`]).
+    pub fn network(mut self, name: &str) -> Self {
+        self.network = NetworkChoice::Named(name.to_string());
+        self
+    }
+
+    /// Use a concrete (possibly custom, unregistered) network config.
+    pub fn network_config(mut self, cfg: CapsNetConfig) -> Self {
+        self.network = NetworkChoice::Config(cfg);
+        self
+    }
+
+    /// Select a technology node by name ("65nm", "45nm", "32nm", "22nm").
+    pub fn tech(mut self, name: &str) -> Self {
+        self.tech = TechChoice::Named(name.to_string());
+        self
+    }
+
+    pub fn tech_node(mut self, node: TechNode) -> Self {
+        self.tech = TechChoice::Node(node);
+        self
+    }
+
+    /// Select an organization by Table-1 label ("SMP", "PG-SEP", ...).
+    pub fn organization_named(mut self, label: &str) -> Self {
+        self.organization = OrgChoice::Named(label.to_string());
+        self
+    }
+
+    pub fn organization(mut self, org: Organization) -> Self {
+        self.organization = OrgChoice::Org(org);
+        self
+    }
+
+    pub fn banks(mut self, banks: u64) -> Self {
+        self.geometry.banks = banks;
+        self
+    }
+
+    pub fn sectors(mut self, sectors: u64) -> Self {
+        self.geometry.sectors = sectors;
+        self
+    }
+
+    pub fn batch(mut self, batch: u64) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn lookahead(mut self, cycles: u64) -> Self {
+        self.gating.lookahead_cycles = cycles;
+        self
+    }
+
+    /// Apply a scenario TOML document on top of the builder's current
+    /// state: keys present in the document override, absent keys keep
+    /// whatever the builder already holds.  This is what lets the CLI
+    /// stack `defaults → --config → --scenario → flags` without a
+    /// scenario file clobbering earlier layers with defaults.
+    ///
+    /// Unknown sections or keys are an error, not silently ignored — a
+    /// misspelled `lookahead_cycle` must not publish numbers for a
+    /// configuration the user did not ask for.
+    pub fn overlay_toml(mut self, doc: &TomlDoc) -> Result<Self> {
+        const KNOWN: &[(&str, &str)] = &[
+            ("scenario", "network"),
+            ("scenario", "tech"),
+            ("scenario", "batch"),
+            ("memory", "organization"),
+            ("memory", "banks"),
+            ("memory", "sectors"),
+            ("gating", "lookahead_cycles"),
+        ];
+        for (section, keys) in &doc.sections {
+            for key in keys.keys() {
+                if !KNOWN.contains(&(section.as_str(), key.as_str())) {
+                    let known = KNOWN
+                        .iter()
+                        .map(|(s, k)| format!("[{s}] {k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    return Err(Error::Config(format!(
+                        "scenario file: unknown key `{key}` in section \
+                         `[{section}]` (known: {known})"
+                    )));
+                }
+            }
+        }
+        if let Some(v) = want_str(doc, "scenario", "network")? {
+            self = self.network(v);
+        }
+        if let Some(v) = want_str(doc, "scenario", "tech")? {
+            self = self.tech(v);
+        }
+        if let Some(v) = want_u64(doc, "scenario", "batch")? {
+            self = self.batch(v);
+        }
+        if let Some(v) = want_str(doc, "memory", "organization")? {
+            self = self.organization_named(v);
+        }
+        if let Some(v) = want_u64(doc, "memory", "banks")? {
+            self = self.banks(v);
+        }
+        if let Some(v) = want_u64(doc, "memory", "sectors")? {
+            self = self.sectors(v);
+        }
+        if let Some(v) = want_u64(doc, "gating", "lookahead_cycles")? {
+            self = self.lookahead(v);
+        }
+        Ok(self)
+    }
+
+    /// Resolve deferred lookups and validate ranges.
+    pub fn build(self) -> Result<Scenario> {
+        let network = match self.network {
+            NetworkChoice::Config(c) => c,
+            NetworkChoice::Named(n) => {
+                CapsNetConfig::by_name(&n).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown network {n:?} (want one of {})",
+                        CapsNetConfig::names().join(", ")
+                    ))
+                })?
+            }
+        };
+        let tech = match self.tech {
+            TechChoice::Node(t) => t,
+            TechChoice::Named(n) => TechNode::by_name(&n).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown tech node {n:?} (want one of {})",
+                    TechNode::names().join(", ")
+                ))
+            })?,
+        };
+        let organization = match self.organization {
+            OrgChoice::Org(o) => o,
+            OrgChoice::Named(l) => parse_organization(&l)?,
+        };
+        if self.batch == 0 {
+            return Err(Error::Config("scenario batch must be > 0".into()));
+        }
+        if self.geometry.banks == 0 || self.geometry.sectors == 0 {
+            return Err(Error::Config(
+                "scenario banks and sectors must be > 0".into(),
+            ));
+        }
+        Ok(Scenario {
+            network,
+            tech,
+            batch: self.batch,
+            organization,
+            geometry: self.geometry,
+            gating: self.gating,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_papers_winner() {
+        let sc = Scenario::default();
+        assert_eq!(sc.label(), "mnist/32nm/PG-SEP b16 s64");
+        assert_eq!(sc.batch, 1);
+        assert_eq!(sc.gating.lookahead_cycles, DEFAULT_LOOKAHEAD_CYCLES);
+    }
+
+    #[test]
+    fn builder_resolves_names() {
+        let sc = Scenario::builder()
+            .network("small")
+            .tech("65nm")
+            .organization_named("smp")
+            .banks(4)
+            .sectors(2)
+            .batch(8)
+            .lookahead(0)
+            .build()
+            .unwrap();
+        assert_eq!(sc.network.name, "small");
+        assert_eq!(sc.tech, TechNode::N65);
+        assert_eq!(sc.organization.label(), "SMP");
+        assert_eq!(sc.batch, 8);
+    }
+
+    #[test]
+    fn builder_rejects_bad_inputs() {
+        assert!(Scenario::builder().network("resnet").build().is_err());
+        assert!(Scenario::builder().tech("7nm").build().is_err());
+        assert!(Scenario::builder()
+            .organization_named("XXL")
+            .build()
+            .is_err());
+        assert!(Scenario::builder().batch(0).build().is_err());
+        assert!(Scenario::builder().banks(0).build().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip_default() {
+        let sc = Scenario::default();
+        assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+    }
+
+    #[test]
+    fn overlay_preserves_unset_keys() {
+        // present keys override; absent keys keep the builder's state —
+        // the CLI's defaults -> config -> scenario -> flags stacking
+        let doc = TomlDoc::parse("[memory]\nbanks = 8\n").unwrap();
+        let sc = Scenario::builder()
+            .network("small")
+            .tech("22nm")
+            .overlay_toml(&doc)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(sc.network.name, "small");
+        assert_eq!(sc.tech, TechNode::N22);
+        assert_eq!(sc.geometry.banks, 8);
+        assert_eq!(sc.geometry.sectors, DEFAULT_SECTORS);
+    }
+
+    #[test]
+    fn overlay_rejects_unknown_keys() {
+        // misspellings must not silently evaluate a different scenario
+        for text in [
+            "[gating]\nlookahead_cycle = 0\n", // missing trailing s
+            "[memory]\nbank = 8\n",
+            "[server]\nmax_batch = 4\n", // run-config dialect, not scenario
+        ] {
+            let doc = TomlDoc::parse(text).unwrap();
+            assert!(
+                Scenario::builder().overlay_toml(&doc).is_err(),
+                "accepted: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn overlay_rejects_wrongly_typed_values() {
+        // a known key with the wrong type is an error too, not a
+        // silently-applied default
+        for text in [
+            "[memory]\nbanks = \"8\"\n", // string where int expected
+            "[scenario]\nbatch = -1\n",  // negative where u64 expected
+            "[scenario]\nnetwork = 3\n", // int where string expected
+            "[gating]\nlookahead_cycles = 1.5\n", // float
+        ] {
+            let doc = TomlDoc::parse(text).unwrap();
+            assert!(
+                Scenario::builder().overlay_toml(&doc).is_err(),
+                "accepted: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_toml_missing_keys_take_defaults() {
+        let sc = Scenario::parse("[scenario]\nnetwork = \"small\"\n").unwrap();
+        assert_eq!(sc.network.name, "small");
+        assert_eq!(sc.tech, TechNode::N32);
+        assert_eq!(sc.geometry, Geometry::default());
+    }
+
+    #[test]
+    fn tech_nodes_match_technology_registry() {
+        // the enum and Technology::nodes() must agree, label for label
+        let nodes = Technology::nodes();
+        for (t, (name, tech)) in TechNode::all().iter().zip(nodes.iter()) {
+            assert_eq!(t.label(), *name);
+            assert_eq!(&t.technology(), tech);
+        }
+    }
+
+    #[test]
+    fn tech_node_by_name_is_case_insensitive() {
+        assert_eq!(TechNode::by_name("32NM"), Some(TechNode::N32));
+        assert_eq!(TechNode::by_name("14nm"), None);
+    }
+}

@@ -1,0 +1,136 @@
+//! Cross-product scenario enumeration — the typed successor of the
+//! DSE's ad-hoc `MultiSweep` product.
+//!
+//! A [`ScenarioSet`] names value lists per axis and enumerates their
+//! product in a canonical order (network → tech → organization → banks →
+//! sectors → batch).  Ungated organizations collapse the sector axis to
+//! a single point, exactly like the sweep-space enumeration in
+//! [`crate::dse::sweep::enumerate`], so
+//! `ScenarioSet::grand().num_scenarios()` equals
+//! `MultiSweep::default().num_points()` — the equivalence is pinned in
+//! `tests/scenario_facade.rs`.
+
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::Organization;
+use crate::dse::SweepSpace;
+use crate::scenario::{GatingPolicy, Geometry, Scenario, TechNode};
+
+/// Value lists per scenario axis; [`scenarios`](Self::scenarios)
+/// enumerates the cross product.
+#[derive(Debug, Clone)]
+pub struct ScenarioSet {
+    pub networks: Vec<CapsNetConfig>,
+    pub techs: Vec<TechNode>,
+    pub organizations: Vec<Organization>,
+    pub banks: Vec<u64>,
+    pub sectors: Vec<u64>,
+    pub batches: Vec<u64>,
+    /// Shared gating policy (not an enumerated axis).
+    pub gating: GatingPolicy,
+}
+
+impl Default for ScenarioSet {
+    /// The paper's Table-1 slice: MNIST at 32nm over all six
+    /// organizations and the default bank/sector axes.
+    fn default() -> Self {
+        let space = SweepSpace::default();
+        ScenarioSet {
+            networks: vec![CapsNetConfig::mnist()],
+            techs: vec![TechNode::default()],
+            organizations: Organization::all().to_vec(),
+            banks: space.banks,
+            sectors: space.sectors,
+            batches: vec![1],
+            gating: GatingPolicy::default(),
+        }
+    }
+}
+
+impl ScenarioSet {
+    /// The grand product: every registry network × every tech node × the
+    /// fine-grained large space — the same point set `MultiSweep`
+    /// evaluates, expressed as scenarios.
+    pub fn grand() -> Self {
+        let space = SweepSpace::large();
+        ScenarioSet {
+            networks: CapsNetConfig::all(),
+            techs: TechNode::all().to_vec(),
+            organizations: Organization::all().to_vec(),
+            banks: space.banks,
+            sectors: space.sectors,
+            batches: vec![1],
+            gating: GatingPolicy::default(),
+        }
+    }
+
+    /// Closed-form scenario count (gated organizations take the full
+    /// sector axis; ungated collapse to one point per bank count).
+    pub fn num_scenarios(&self) -> usize {
+        let gated =
+            self.organizations.iter().filter(|o| o.gated()).count();
+        let ungated = self.organizations.len() - gated;
+        let per_pair = gated * self.banks.len() * self.sectors.len()
+            + ungated * self.banks.len();
+        per_pair * self.networks.len() * self.techs.len()
+            * self.batches.len()
+    }
+
+    /// Enumerate the product in canonical order.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.num_scenarios());
+        for network in &self.networks {
+            for &tech in &self.techs {
+                for &org in &self.organizations {
+                    for &banks in &self.banks {
+                        let sector_axis: &[u64] =
+                            if org.gated() { &self.sectors } else { &[1] };
+                        for &sectors in sector_axis {
+                            for &batch in &self.batches {
+                                out.push(Scenario {
+                                    network: network.clone(),
+                                    tech,
+                                    batch,
+                                    organization: org,
+                                    geometry: Geometry { banks, sectors },
+                                    gating: self.gating,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_matches_enumeration() {
+        for set in [ScenarioSet::default(), ScenarioSet::grand()] {
+            assert_eq!(set.scenarios().len(), set.num_scenarios());
+        }
+    }
+
+    #[test]
+    fn ungated_scenarios_collapse_sector_axis() {
+        let set = ScenarioSet::default();
+        for sc in set.scenarios() {
+            if !sc.organization.gated() {
+                assert_eq!(sc.geometry.sectors, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_axis_multiplies() {
+        let mut set = ScenarioSet::default();
+        let base = set.num_scenarios();
+        set.batches = vec![1, 8, 64];
+        assert_eq!(set.num_scenarios(), 3 * base);
+        assert!(set.scenarios().iter().any(|s| s.batch == 64));
+    }
+}

@@ -1,8 +1,10 @@
-//! Minimal recursive-descent JSON parser (no serde in the offline image).
+//! Minimal recursive-descent JSON parser + compact serializer (no serde
+//! in the offline image).
 //!
 //! Supports the full JSON grammar minus exotic number forms; good enough
-//! for `artifacts/manifest.json` and the config presets.  Numbers are kept
-//! as f64 (the manifest only contains small integers).
+//! for `artifacts/manifest.json`, the config presets, and the CLI's
+//! `--format json` output ([`Json::render`]).  Numbers are kept as f64
+//! (the manifest only contains small integers).
 
 use std::collections::BTreeMap;
 
@@ -80,6 +82,78 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Object builder from `(key, value)` pairs (duplicate keys keep the
+    /// last value, like JSON object semantics).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    /// Serialize to compact JSON text.  Non-finite numbers render as
+    /// `null` (JSON has no NaN/inf); everything else round-trips through
+    /// [`Json::parse`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -317,6 +391,36 @@ mod tests {
             Json::parse("\"\\u0041\"").unwrap(),
             Json::Str("A".into())
         );
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let doc = r#"{"a": [1, 2.5, {"b": "x\ny"}], "c": {"d": false}, "e": null}"#;
+        let v = Json::parse(doc).unwrap();
+        let again = Json::parse(&v.render()).unwrap();
+        assert_eq!(v, again);
+    }
+
+    #[test]
+    fn render_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd\u{01}".into());
+        assert_eq!(v.render(), "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn obj_builder() {
+        let v = Json::obj(vec![
+            ("x", Json::Num(1.0)),
+            ("y", Json::Str("z".into())),
+        ]);
+        assert_eq!(v.render(), r#"{"x":1,"y":"z"}"#);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Facade equivalence suite: the `Scenario`/`Evaluator` API must be
+//! **bit-identical** to the pre-refactor entry points
+//! (`CapStoreArch::build_default` + `EnergyModel::evaluate_arch` +
+//! `system_energy` + `EventSim::run`) for every organization × network ×
+//! technology node — plus property tests for the Scenario TOML
+//! round-trip and the ScenarioSet product.
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::capstore::eventsim::EventSim;
+use capstore::dse::{Explorer, MultiSweep};
+use capstore::scenario::{
+    Evaluator, Scenario, ScenarioSet, TechNode, DEFAULT_LOOKAHEAD_CYCLES,
+};
+use capstore::testing::{check, Config};
+
+/// The golden test of the redesign: one facade, every axis combination,
+/// zero drift.  6 organizations × {mnist, small} × 4 tech nodes = 48
+/// full evaluations compared field by field at the bit level.
+#[test]
+fn evaluator_bit_identical_to_legacy_path_everywhere() {
+    let ev = Evaluator::new();
+    for cfg in CapsNetConfig::all() {
+        for node in TechNode::all() {
+            let mut model = EnergyModel::new(cfg.clone());
+            model.tech = node.technology();
+            for org in Organization::all() {
+                let sc = Scenario::builder()
+                    .network_config(cfg.clone())
+                    .tech_node(node)
+                    .organization(org)
+                    .build()
+                    .unwrap();
+                let tag = sc.label();
+
+                // legacy path: direct arch build + scattered calls
+                let arch =
+                    CapStoreArch::build_default(org, &model.req, &model.tech)
+                        .unwrap();
+                let legacy = model.evaluate_arch(&arch);
+                let legacy_sys = model.system_energy(&arch);
+                let legacy_event =
+                    EventSim::new(&arch, &model.req, &model.cfg, &model.sim)
+                        .run(DEFAULT_LOOKAHEAD_CYCLES)
+                        .unwrap();
+
+                // facade path
+                let e = ev.evaluate(&sc).unwrap();
+
+                // the architecture itself is identical
+                assert_eq!(e.architecture, arch, "{tag}: arch diverged");
+
+                // analytical on-chip integration, bit for bit
+                assert_eq!(
+                    e.onchip.onchip_pj.to_bits(),
+                    legacy.onchip_pj.to_bits(),
+                    "{tag}: onchip_pj"
+                );
+                assert_eq!(
+                    e.onchip.area_mm2.to_bits(),
+                    legacy.area_mm2.to_bits(),
+                    "{tag}: area_mm2"
+                );
+                assert_eq!(e.onchip.capacity_bytes, legacy.capacity_bytes);
+                assert_eq!(e.onchip.per_macro.len(), legacy.per_macro.len());
+                for (a, b) in e.onchip.per_macro.iter().zip(&legacy.per_macro)
+                {
+                    assert_eq!(
+                        a.dynamic_pj.to_bits(),
+                        b.dynamic_pj.to_bits(),
+                        "{tag}: per-macro dynamic"
+                    );
+                    assert_eq!(
+                        a.static_pj.to_bits(),
+                        b.static_pj.to_bits(),
+                        "{tag}: per-macro static"
+                    );
+                    assert_eq!(
+                        a.wakeup_pj.to_bits(),
+                        b.wakeup_pj.to_bits(),
+                        "{tag}: per-macro wakeup"
+                    );
+                }
+                for ((ka, ea), (kb, eb)) in
+                    e.onchip.per_op_pj.iter().zip(&legacy.per_op_pj)
+                {
+                    assert_eq!(ka, kb, "{tag}: per-op kind order");
+                    assert_eq!(
+                        ea.to_bits(),
+                        eb.to_bits(),
+                        "{tag}: per-op energy"
+                    );
+                }
+
+                // whole-system view
+                assert_eq!(e.system.label, legacy_sys.label);
+                assert_eq!(
+                    e.system.accel_pj.to_bits(),
+                    legacy_sys.accel_pj.to_bits(),
+                    "{tag}: accel_pj"
+                );
+                assert_eq!(
+                    e.system.onchip_pj.to_bits(),
+                    legacy_sys.onchip_pj.to_bits(),
+                    "{tag}: system onchip_pj"
+                );
+                assert_eq!(
+                    e.system.offchip_pj.to_bits(),
+                    legacy_sys.offchip_pj.to_bits(),
+                    "{tag}: offchip_pj"
+                );
+
+                // event-level cross-check
+                let event =
+                    e.event.as_ref().expect("full evaluate runs event sim");
+                assert_eq!(
+                    event.static_pj.to_bits(),
+                    legacy_event.static_pj.to_bits(),
+                    "{tag}: event static"
+                );
+                assert_eq!(
+                    event.wakeup_pj.to_bits(),
+                    legacy_event.wakeup_pj.to_bits(),
+                    "{tag}: event wakeup"
+                );
+                assert_eq!(event.transitions, legacy_event.transitions);
+                assert_eq!(event.cycles, legacy_event.cycles);
+                assert_eq!(
+                    event.not_ready_cycles,
+                    legacy_event.not_ready_cycles
+                );
+            }
+        }
+    }
+}
+
+/// The baseline (version a) must also match through the facade, at
+/// every node.
+#[test]
+fn all_onchip_baseline_matches_legacy_at_every_node() {
+    let ev = Evaluator::new();
+    for node in TechNode::all() {
+        let mut model = EnergyModel::new(CapsNetConfig::mnist());
+        model.tech = node.technology();
+        let legacy = model.all_onchip_baseline().unwrap();
+        let sc = Scenario::builder().tech_node(node).build().unwrap();
+        let facade = ev.all_onchip_baseline(&sc).unwrap();
+        assert_eq!(facade.label, legacy.label);
+        assert_eq!(facade.accel_pj.to_bits(), legacy.accel_pj.to_bits());
+        assert_eq!(facade.onchip_pj.to_bits(), legacy.onchip_pj.to_bits());
+        assert_eq!(facade.offchip_pj.to_bits(), legacy.offchip_pj.to_bits());
+    }
+}
+
+/// Explorer/MultiSweep are delegating shims now; their output must
+/// still match the pre-refactor baseline sweep bit for bit (the deeper
+/// engine identity lives in tests/dse_parallel.rs — this pins the shim
+/// layer itself).
+#[test]
+fn dse_shims_still_match_their_baseline() {
+    let ex = Explorer::new(CapsNetConfig::small());
+    let baseline = ex.sweep_baseline().unwrap();
+    let through_facade = ex.sweep().unwrap();
+    assert_eq!(baseline.len(), through_facade.len());
+    for (b, f) in baseline.iter().zip(&through_facade) {
+        assert!(b.bit_eq(f), "shim diverged: {b:?} vs {f:?}");
+    }
+}
+
+#[test]
+fn scenario_set_subsumes_multisweep_product() {
+    let set = ScenarioSet::grand();
+    let scenarios = set.scenarios();
+    assert_eq!(scenarios.len(), set.num_scenarios());
+    assert_eq!(scenarios.len(), MultiSweep::default().num_points());
+    // canonical order: first scenario is the first network at the
+    // oldest node, first organization, smallest bank count
+    let first = &scenarios[0];
+    assert_eq!(first.network.name, CapsNetConfig::names()[0]);
+    assert_eq!(first.tech, TechNode::N65);
+}
+
+/// Property: Scenario → TOML → Scenario is the identity for every
+/// registry network, node, organization, geometry, batch and lookahead.
+#[test]
+fn prop_scenario_toml_roundtrip() {
+    let names = CapsNetConfig::names();
+    check(Config::default().cases(64), |rng| {
+        let sc = Scenario::builder()
+            .network(rng.pick(&names))
+            .tech_node(*rng.pick(&TechNode::all()))
+            .organization(*rng.pick(&Organization::all()))
+            .banks(*rng.pick(&[2u64, 4, 8, 16, 32, 64]))
+            .sectors(*rng.pick(&[1u64, 2, 8, 16, 64, 256]))
+            .batch(rng.range(1, 64))
+            .lookahead(rng.range(0, 1024))
+            .build()
+            .unwrap();
+        let text = sc.to_toml();
+        let back = Scenario::parse(&text).unwrap();
+        assert_eq!(sc, back, "round-trip failed for:\n{text}");
+    });
+}
+
+/// Property: the facade is deterministic — evaluating the same scenario
+/// twice (cold and warm caches) yields bit-identical numbers.
+#[test]
+fn prop_facade_is_cache_transparent() {
+    let names = CapsNetConfig::names();
+    let warm = Evaluator::new();
+    check(Config::default().cases(12), |rng| {
+        let sc = Scenario::builder()
+            .network(rng.pick(&names))
+            .tech_node(*rng.pick(&TechNode::all()))
+            .organization(*rng.pick(&Organization::all()))
+            .banks(*rng.pick(&[4u64, 8, 16]))
+            .sectors(*rng.pick(&[8u64, 64]))
+            .build()
+            .unwrap();
+        let cold = Evaluator::new().evaluate(&sc).unwrap();
+        let cached = warm.evaluate(&sc).unwrap();
+        assert_eq!(
+            cold.onchip.onchip_pj.to_bits(),
+            cached.onchip.onchip_pj.to_bits()
+        );
+        assert_eq!(
+            cold.onchip.area_mm2.to_bits(),
+            cached.onchip.area_mm2.to_bits()
+        );
+        assert_eq!(
+            cold.system.offchip_pj.to_bits(),
+            cached.system.offchip_pj.to_bits()
+        );
+        assert_eq!(
+            cold.event.as_ref().map(|e| e.transitions),
+            cached.event.as_ref().map(|e| e.transitions)
+        );
+    });
+}
