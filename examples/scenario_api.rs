@@ -46,6 +46,25 @@ fn main() {
         event.transitions,
     );
 
+    // the cycle-resolved timeline behind the numbers: op intervals and
+    // per-op utilization over time (batch of 8 pipelined inferences)
+    let tl = e.timeline();
+    println!(
+        "\ntimeline: {} op slots over {} cycles, pipelining saves {}",
+        tl.ops.len(),
+        tl.total_cycles,
+        fmt_energy_uj(e.batch.pipeline_saving_pj),
+    );
+    for row in e.utilization().iter().take(4) {
+        println!(
+            "  [{:>9}..{:>9})  {:10}  util {:>5.1}%",
+            row.interval.start,
+            row.interval.end,
+            row.kind.label(),
+            100.0 * row.on_fraction,
+        );
+    }
+
     // the memory backends behind the pluggable MemoryModel trait
     println!("\nbackends:");
     for m in e.memory_models() {

@@ -1,0 +1,95 @@
+//! Bench: cost of building the cycle-resolved Timeline IR, and a guard
+//! that the DSE sweep hot path never builds it.
+//!
+//! The IR is constructed once per scenario evaluation (op intervals +
+//! per-domain power-state segments + DMA placement); the DSE prices its
+//! DMA axis with the O(ops) `timeline::dma_overhead_pj` scan instead.
+//! `Timeline::build_count()` makes that contract observable: this bench
+//! runs a full large-space sweep (DMA axis included) and asserts the
+//! build counter did not move.
+//!
+//! Reports JSON on the last line:
+//!
+//! ```json
+//! {"bench":"timeline_build","build_ms":...,"dse_timeline_builds":0,...}
+//! ```
+//!
+//! Modes:
+//!   (default)   measure + print JSON
+//!   --check     CI mode: additionally assert dse_timeline_builds == 0
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::dse::{Explorer, SweepSpace};
+use capstore::timeline::{Timeline, TimelinePolicy};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let ctx = model.context();
+    let arch = CapStoreArch::build_default(
+        Organization::Sep { gated: true },
+        &model.req,
+        &model.tech,
+    )
+    .expect("default PG-SEP builds");
+
+    // ---- build cost: single inference and a pipelined batch ----------
+    let t_one = bench::bench("timeline: build (PG-SEP, batch 1)", 2, 9, || {
+        std::hint::black_box(Timeline::build(
+            &ctx,
+            &arch,
+            &model.req,
+            &TimelinePolicy::default(),
+        ));
+    });
+    let t_batch =
+        bench::bench("timeline: build (PG-SEP, batch 16)", 2, 9, || {
+            std::hint::black_box(Timeline::build(
+                &ctx,
+                &arch,
+                &model.req,
+                &TimelinePolicy { batch: 16, ..TimelinePolicy::default() },
+            ));
+        });
+
+    // ---- hot-path guard: a full sweep must not build timelines -------
+    let mut ex = Explorer::new(CapsNetConfig::mnist());
+    ex.space = SweepSpace::large(); // includes the DMA-overlap axis
+    let points = ex.space.num_points();
+    let before = Timeline::build_count();
+    let t_sweep = bench::bench("timeline: dse sweep (no IR builds)", 1, 3, || {
+        std::hint::black_box(ex.sweep().expect("sweep"));
+    });
+    let dse_builds = Timeline::build_count() - before;
+
+    println!(
+        "\n[timeline_build] build {:.3} ms (batch 16: {:.3} ms); sweep of \
+         {points} points ran in {:.1} ms with {dse_builds} timeline builds",
+        t_one.median, t_batch.median, t_sweep.median
+    );
+
+    // machine-readable result (last line)
+    println!(
+        "{{\"bench\":\"timeline_build\",\"build_ms\":{:.4},\
+         \"batch16_build_ms\":{:.4},\"dse_points\":{points},\
+         \"dse_sweep_ms\":{:.4},\"dse_timeline_builds\":{dse_builds}}}",
+        t_one.median, t_batch.median, t_sweep.median
+    );
+
+    if check {
+        assert_eq!(
+            dse_builds, 0,
+            "check failed: the DSE hot path built {dse_builds} timelines \
+             — dma pricing must go through timeline::dma_overhead_pj"
+        );
+        println!(
+            "timeline_build check OK (0 IR builds across {points} sweep \
+             points)"
+        );
+    }
+}

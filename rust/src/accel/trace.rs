@@ -56,6 +56,20 @@ impl TileTracer {
     pub fn replay<F: FnMut(&TileEvent)>(
         &self,
         op: &Operation,
+        on_event: F,
+    ) -> TraceTotals {
+        self.replay_at(op, 0, on_event)
+    }
+
+    /// [`replay`](Self::replay) with tile start cycles offset by
+    /// `base_cycle` — pass an op's `timeline::OpSlot` interval start so
+    /// the emitted events carry *absolute* timeline cycles instead of an
+    /// op-local clock (what `capstore trace` aligns against the
+    /// Timeline IR).
+    pub fn replay_at<F: FnMut(&TileEvent)>(
+        &self,
+        op: &Operation,
+        base_cycle: u64,
         mut on_event: F,
     ) -> TraceTotals {
         let a = &self.array;
@@ -64,7 +78,7 @@ impl TileTracer {
         let fill_drain = a.rows + a.cols;
 
         let mut totals = TraceTotals::default();
-        let mut clock = 0u64;
+        let mut clock = base_cycle;
 
         for nt in 0..n_tiles {
             // width of this (possibly partial) N tile
@@ -171,5 +185,48 @@ mod tests {
         });
         // ceil(20/16)^2 = 4 tiles
         assert_eq!(count, 4);
+    }
+
+    #[test]
+    fn replay_aligns_to_timeline_op_intervals() {
+        use crate::analysis::breakdown::EnergyModel;
+        use crate::analysis::requirements::RequirementsAnalysis;
+        use crate::capstore::arch::{CapStoreArch, Organization};
+        use crate::memsim::cacti::Technology;
+        use crate::timeline::{Timeline, TimelinePolicy};
+
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let req = RequirementsAnalysis::analyze(
+            &CapsNetConfig::mnist(),
+            &ArrayConfig::default(),
+        );
+        let arch = CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &req,
+            &Technology::default(),
+        )
+        .unwrap();
+        let tl =
+            Timeline::build(&ctx, &arch, &req, &TimelinePolicy::default());
+
+        // trace the second op (PC) at its absolute timeline position:
+        // tiles start exactly at the op interval's start and never
+        // precede it
+        let slot = &tl.ops[1];
+        let op = &ctx.schedule[slot.step];
+        let tracer = TileTracer::new(ArrayConfig::default());
+        let mut first = None;
+        let offset = slot.interval.start;
+        let local = tracer.replay(op, |_| {});
+        let global = tracer.replay_at(op, offset, |ev| {
+            if first.is_none() {
+                first = Some(ev.start_cycle);
+            }
+            assert!(ev.start_cycle >= offset);
+        });
+        assert_eq!(first, Some(offset));
+        // offsetting changes event positions, never the totals
+        assert_eq!(local, global);
     }
 }

@@ -3,13 +3,15 @@
 //!
 //! For one inference on a given CapStore architecture we combine:
 //!
-//! * **dynamic SRAM energy** — per-op access counts ([`accel`]) × the
-//!   per-byte access energies of the macro each traffic class maps to;
+//! * **dynamic SRAM energy** — per-op access counts ([`crate::accel`])
+//!   × the per-byte access energies of the macro each traffic class
+//!   maps to;
 //! * **static SRAM energy** — leakage power × op duration, scaled by the
 //!   PMU's ON fraction for gated organizations (+ residual OFF leakage);
 //! * **wakeup energy** — per OFF→ON transition of the gating plan;
 //! * **off-chip DRAM energy** — Eq 1/2 traffic × the DRAM model;
-//! * **accelerator energy** — the compute-side model ([`accel::power`]).
+//! * **accelerator energy** — the compute-side model
+//!   ([`crate::accel::power`]).
 
 use crate::accel::power::AccelPower;
 use crate::accel::systolic::{OpProfile, SystolicSim};
@@ -139,6 +141,8 @@ impl EnergyModel {
             profiles.iter().map(|p| self.traffic_bytes(p)).collect();
         let op_needs =
             schedule.iter().map(|op| self.req.get(op.kind)).collect();
+        let op_offchip =
+            OffChipTraffic::per_op_bytes(&self.cfg, &self.sim, &schedule);
         let total_cycles: u64 = op_cycles.iter().sum();
         let secs = total_cycles as f64 / self.sim.array.clock_hz;
         SweepContext {
@@ -148,8 +152,10 @@ impl EnergyModel {
             op_cycles,
             op_traffic,
             op_needs,
+            op_offchip,
             total_cycles,
             secs,
+            clock_hz: self.sim.array.clock_hz,
         }
     }
 
@@ -223,6 +229,10 @@ impl EnergyModel {
         }
 
         // ---- static: leakage x time x ON fraction -----------------------
+        // Closed-form integration over the plan's per-op gating segments
+        // (the same segments `timeline::Timeline` materializes per
+        // domain; `Timeline::on_fraction` delegates to this exact
+        // arithmetic, so the two stay bit-identical by construction).
         let total_cycles = ctx.total_cycles;
         let secs = ctx.secs;
         for (i, m) in arch.macros.iter().enumerate() {
@@ -271,11 +281,18 @@ impl EnergyModel {
         }
     }
 
+    /// Transfer-only DRAM energy for one inference (Eq 1/2 traffic), pJ.
+    /// The batch-pipelined accounting in `scenario::Evaluator` scales
+    /// this linearly while standby follows the (stall-extended) makespan.
+    pub fn offchip_transfer_pj(&self) -> f64 {
+        let bytes = OffChipTraffic::total_bytes(&self.cfg, &self.sim);
+        self.dram.transfer_pj(bytes)
+    }
+
     /// Off-chip DRAM energy for one inference (Eq 1/2 traffic + standby).
     pub fn offchip_pj(&self) -> f64 {
-        let bytes = OffChipTraffic::total_bytes(&self.cfg, &self.sim);
         let secs = self.sim.inference_seconds(&self.cfg);
-        self.dram.transfer_pj(bytes) + self.dram.standby_pj(secs)
+        self.offchip_transfer_pj() + self.dram.standby_pj(secs)
     }
 
     /// Accelerator (compute) energy for one inference.

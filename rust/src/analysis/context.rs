@@ -30,10 +30,16 @@ pub struct SweepContext {
     pub op_traffic: Vec<[(MemoryRole, u64, u64); 3]>,
     /// Per-op component requirement (drives the HY dedicated/shared split).
     pub op_needs: Vec<ComponentReq>,
+    /// Per-op off-chip traffic `(read_bytes, write_bytes)` (Eq 1/2;
+    /// zero for the routing ops) — the timeline's DMA placement input.
+    pub op_offchip: Vec<(u64, u64)>,
     /// Total inference cycles.
     pub total_cycles: u64,
     /// Total inference wall-clock seconds at the array clock.
     pub secs: f64,
+    /// Array clock, Hz (copied from the systolic config so timeline
+    /// construction needs no extra plumbing).
+    pub clock_hz: f64,
 }
 
 impl SweepContext {
@@ -56,6 +62,14 @@ mod tests {
         assert_eq!(ctx.schedule.len(), ctx.profiles.len());
         assert_eq!(ctx.schedule.len(), ctx.op_traffic.len());
         assert_eq!(ctx.schedule.len(), ctx.op_needs.len());
+        assert_eq!(ctx.schedule.len(), ctx.op_offchip.len());
+        assert_eq!(ctx.clock_hz, m.sim.array.clock_hz);
+        // routing ops never touch DRAM (Eq 1/2)
+        for (op, &(r, w)) in ctx.schedule.iter().zip(&ctx.op_offchip) {
+            if op.on_chip_only {
+                assert_eq!((r, w), (0, 0), "{:?}", op.kind);
+            }
+        }
         assert_eq!(
             ctx.total_cycles,
             ctx.op_cycles.iter().sum::<u64>()

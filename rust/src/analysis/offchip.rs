@@ -62,6 +62,29 @@ impl OffChipTraffic {
         Self::from_profiles(cfg, &sim.profile_all(cfg))
     }
 
+    /// Per-scheduled-op DRAM bytes `(reads, writes)` — the per-kind
+    /// Eq 1/2 counts (1-byte values) mapped through an execution
+    /// schedule.  The single definition both the analytical context
+    /// (`EnergyModel::context`) and the event sim derive their DMA
+    /// placement from, so the two can never disagree on traffic.
+    pub fn per_op_bytes(
+        cfg: &CapsNetConfig,
+        sim: &SystolicSim,
+        schedule: &[Operation],
+    ) -> Vec<(u64, u64)> {
+        let per_kind = Self::analyze(cfg, sim);
+        schedule
+            .iter()
+            .map(|op| {
+                let t = per_kind
+                    .iter()
+                    .find(|t| t.kind == op.kind)
+                    .expect("every op kind has an off-chip entry");
+                (t.reads, t.writes)
+            })
+            .collect()
+    }
+
     /// Total DRAM bytes moved in one inference (weights 1B, data 1B),
     /// with routing-op repetitions applied (they're zero anyway).
     pub fn total_bytes(cfg: &CapsNetConfig, sim: &SystolicSim) -> u64 {

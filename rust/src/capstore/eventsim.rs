@@ -1,53 +1,46 @@
-//! Discrete-event simulation of the gated memory over one inference —
-//! the independent cross-check for the *analytical* energy integration
-//! in [`crate::analysis::breakdown`].
+//! Event-level view of the gated memory over one inference — the
+//! cross-check for the *analytical* energy integration in
+//! [`crate::analysis::breakdown`].
 //!
-//! Where the analytical model multiplies leakage by cycle-weighted ON
-//! fractions, this simulator walks the operation schedule event by
-//! event: it drives one [`Pmu`] FSM per gating domain through the
-//! req/ack handshake (with real sleep/wake latencies), integrates
-//! leakage cycle-by-cycle in whatever state each domain is actually in
-//! (ON / transitioning / OFF with residual leakage), and charges wakeup
-//! energy per completed transition.  Because transitions overlap the
-//! preceding operation (the PMU wakes sectors *ahead* of the boundary),
-//! the two models agree only to within the transition-time fraction —
-//! the test asserts ≤2 % disagreement, which is also evidence for the
-//! paper's "wakeup overhead is negligible" claim at the event level.
+//! Since the Timeline IR refactor this is a **thin interpreter**: the
+//! exact per-domain ON/WAKING/SLEEPING/OFF power-state segments are
+//! produced once by [`crate::timeline::Timeline::build`] (PMU req/ack
+//! handshake semantics with ahead-of-time wakeup, Fig 8/9), and
+//! [`EventSim::replay`] walks those segments charging leakage per state
+//! and wakeup energy per completed OFF→ON transition.  Replay is
+//! therefore *exact* against the timeline's own closed-form integration
+//! ([`crate::timeline::Timeline::static_pj`]) — bit-identical, pinned
+//! by a test below — while the comparison against the analytical
+//! model's cycle-weighted ON-fraction path remains a genuine
+//! cross-check: the two agree only to within the transition-time
+//! fraction (the test asserts ≤2%, which is also evidence for the
+//! paper's "wakeup overhead is negligible" claim at the event level).
 
 use crate::accel::systolic::SystolicSim;
+use crate::analysis::offchip::OffChipTraffic;
 use crate::analysis::requirements::RequirementsAnalysis;
-use crate::capsnet::{CapsNetConfig, Operation};
+use crate::capsnet::{CapsNetConfig, OpKind, Operation};
 use crate::capstore::arch::CapStoreArch;
-use crate::capstore::pmu::{GatingSchedule, Pmu, PmuState};
+use crate::capstore::pmu::GatingSchedule;
 use crate::error::Result;
+use crate::timeline::{GatingPolicy, Timeline, TimelinePolicy};
 
 /// Result of one event-level run.
 #[derive(Debug, Clone)]
 pub struct EventSimResult {
-    /// Static (leakage) energy integrated event by event, pJ.
+    /// Static (leakage) energy integrated over the power-state
+    /// segments, pJ.
     pub static_pj: f64,
     /// Wakeup energy from completed OFF→ON transitions, pJ.
     pub wakeup_pj: f64,
     /// Total completed transitions (sleeps + wakes) across all domains.
     pub transitions: u64,
-    /// Cycles simulated.
+    /// Cycles simulated (the timeline makespan).
     pub cycles: u64,
-    /// Cycles during which any needed sector was still waking (stall
-    /// pressure; 0 when the PMU schedules wakeups far enough ahead).
+    /// Cycles during which a sector the running op needs was still
+    /// waking (stall pressure; 0 when the PMU's lookahead covers the
+    /// wakeup latency).
     pub not_ready_cycles: u64,
-}
-
-/// One gating domain = one sector index of one macro (the paper's Fig 6:
-/// a sleep transistor spans the same sector index across all banks).
-struct Domain {
-    mac: usize,
-    /// This domain's sector index within its macro (the PMU plan turns
-    /// ON sectors `0..want`, so the index decides the target state).
-    sector: u64,
-    pmu: Pmu,
-    /// nominal leakage of this domain when ON, mW
-    leak_mw: f64,
-    gated_bytes: u64,
 }
 
 /// Event-level simulator over the inference schedule.
@@ -68,182 +61,44 @@ impl<'a> EventSim<'a> {
         EventSim { arch, req, cfg, sim }
     }
 
-    /// Run one inference.  `lookahead` = cycles before an operation
-    /// boundary at which the PMU issues wake requests for the next op's
-    /// sectors (the paper's ahead-of-time wakeup, Fig 9): during the
-    /// last `lookahead` cycles of each op, OFF domains the *next* op
-    /// needs are woken early, trading a little extra ON-leakage for
-    /// arriving at the boundary already usable.  With `lookahead = 0`
-    /// wakes are only issued at the boundary itself, so the next op
-    /// stalls for the wakeup latency (visible in `not_ready_cycles`).
-    pub fn run(&self, lookahead: u64) -> Result<EventSimResult> {
-        let plan = GatingSchedule::plan(self.arch, self.req, self.cfg);
+    /// Build the single-inference timeline at `policy` (lookahead from
+    /// the gating policy — the same knob `Scenario` carries, so CLI,
+    /// evaluator and event sim cannot disagree on it) and replay it.
+    pub fn run(&self, policy: &GatingPolicy) -> Result<EventSimResult> {
         let schedule = Operation::schedule(self.cfg);
-        let op_cycles: Vec<u64> =
-            schedule.iter().map(|op| self.sim.profile(op).cycles).collect();
-
-        // build domains: one per (macro, sector index), sized exactly
-        // from the arch up front
-        let total_domains: usize = self
-            .arch
-            .macros
+        let kinds: Vec<OpKind> =
+            schedule.iter().map(|op| op.kind).collect();
+        let op_cycles: Vec<u64> = schedule
             .iter()
-            .map(|m| m.sram.sectors as usize)
-            .sum();
-        let mut domains: Vec<Domain> = Vec::with_capacity(total_domains);
-        for (mi, m) in self.arch.macros.iter().enumerate() {
-            let per_sector_leak = m.costs.leakage_mw / m.sram.sectors as f64;
-            for sector in 0..m.sram.sectors {
-                domains.push(Domain {
-                    mac: mi,
-                    sector,
-                    pmu: Pmu::new(self.arch.pg_model.clone()),
-                    leak_mw: per_sector_leak,
-                    gated_bytes: m.sram.size_bytes / m.sram.sectors,
-                });
-            }
+            .map(|op| self.sim.profile(op).cycles)
+            .collect();
+        let op_offchip =
+            OffChipTraffic::per_op_bytes(self.cfg, self.sim, &schedule);
+        let plan = GatingSchedule::plan_for(self.arch, self.req, &kinds);
+        let tl = Timeline::build_with_plan(
+            &kinds,
+            &op_cycles,
+            &op_offchip,
+            self.sim.array.clock_hz,
+            self.arch,
+            plan,
+            &TimelinePolicy { gating: *policy, ..TimelinePolicy::default() },
+        );
+        Ok(Self::replay(&tl))
+    }
+
+    /// Interpret a timeline: walk its power-state segments and charge
+    /// leakage per state and wakeup energy per completed transition.
+    /// Exact (bit-identical) against the timeline's closed forms —
+    /// replay and integration consume the very same segments.
+    pub fn replay(tl: &Timeline) -> EventSimResult {
+        EventSimResult {
+            static_pj: tl.static_pj(),
+            wakeup_pj: tl.wakeup_pj(),
+            transitions: tl.transitions(),
+            cycles: tl.total_cycles,
+            not_ready_cycles: tl.not_ready_cycles,
         }
-        let gated = self.arch.organization.gated();
-
-        // helper: ON-sector target of domain d during schedule step s
-        let target_on = |d: &Domain, s: usize| -> bool {
-            if !gated {
-                return true;
-            }
-            let want = plan.steps[s].1[d.mac];
-            d.sector < want
-        };
-
-        let mut res = EventSimResult {
-            static_pj: 0.0,
-            wakeup_pj: 0.0,
-            transitions: 0,
-            cycles: 0,
-            not_ready_cycles: 0,
-        };
-        let clock = self.sim.array.clock_hz;
-        let pj_per_cycle_per_mw = 1.0e-3 / clock * 1.0e12; // mW·cycle -> pJ
-
-        // simulate step by step; within a step, advance in chunks between
-        // PMU events for speed (domains only change state on requests)
-        for (s, &cycles) in op_cycles.iter().enumerate() {
-            // 1. issue transitions for this op's targets
-            for d in domains.iter_mut() {
-                let want_on = target_on(d, s);
-                match (want_on, d.pmu.state) {
-                    (true, PmuState::Off) => {
-                        d.pmu.request_wake();
-                    }
-                    (false, PmuState::On) => {
-                        d.pmu.request_sleep();
-                    }
-                    _ => {}
-                }
-            }
-
-            // 2. advance the op in three phases: the transition window
-            // (boundary-issued requests settle), the steady middle, and
-            // the pre-wake tail — the last `lookahead` cycles, where the
-            // PMU issues wake requests for the NEXT op's sectors so they
-            // are usable when the boundary arrives.
-            let window = self
-                .arch
-                .pg_model
-                .wakeup_cycles
-                .max(self.arch.pg_model.sleep_cycles)
-                .min(cycles);
-            let tail = if s + 1 < op_cycles.len() {
-                lookahead.min(cycles - window)
-            } else {
-                0
-            };
-            let middle = cycles - window - tail;
-            for (phase_cycles, stepping, prewake) in [
-                (window, true, false),
-                (middle, false, false),
-                (tail, true, true),
-            ] {
-                if phase_cycles == 0 {
-                    continue;
-                }
-                if prewake {
-                    for d in domains.iter_mut() {
-                        if target_on(d, s + 1)
-                            && d.pmu.state == PmuState::Off
-                        {
-                            d.pmu.request_wake();
-                        }
-                    }
-                }
-                for d in domains.iter_mut() {
-                    // leakage during this phase depends on state
-                    let (static_pj, completed) = match d.pmu.state {
-                        PmuState::On => (
-                            d.leak_mw
-                                * phase_cycles as f64
-                                * pj_per_cycle_per_mw,
-                            None,
-                        ),
-                        PmuState::Off => (
-                            d.leak_mw
-                                * self.arch.pg_model.off_leakage_fraction
-                                * phase_cycles as f64
-                                * pj_per_cycle_per_mw,
-                            None,
-                        ),
-                        // transitioning: full leakage while the
-                        // transition is in flight, then the settled
-                        // state's leakage for the rest of the phase —
-                        // so widening the window (lookahead) doesn't
-                        // overcharge domains that settle early
-                        PmuState::Sleeping { remaining }
-                        | PmuState::Waking { remaining } => {
-                            let ev = if stepping {
-                                d.pmu.step(phase_cycles)
-                            } else {
-                                None
-                            };
-                            let trans = remaining.min(phase_cycles);
-                            let settled_mw = match d.pmu.state {
-                                PmuState::Off => {
-                                    d.leak_mw
-                                        * self
-                                            .arch
-                                            .pg_model
-                                            .off_leakage_fraction
-                                }
-                                // On after a wake, or still in flight
-                                _ => d.leak_mw,
-                            };
-                            let pj = (d.leak_mw * trans as f64
-                                + settled_mw
-                                    * (phase_cycles - trans) as f64)
-                                * pj_per_cycle_per_mw;
-                            (pj, ev)
-                        }
-                    };
-                    res.static_pj += static_pj;
-                    if let Some(ev) = completed {
-                        res.transitions += 1;
-                        if ev == crate::capstore::pmu::PmuEvent::WakeAcked {
-                            res.wakeup_pj += self
-                                .arch
-                                .pg_model
-                                .wakeup_energy_pj(d.gated_bytes);
-                        }
-                    }
-                    // a domain still waking while its op needs it = stall
-                    if stepping
-                        && target_on(d, s)
-                        && matches!(d.pmu.state, PmuState::Waking { .. })
-                    {
-                        res.not_ready_cycles += 1;
-                    }
-                }
-            }
-            res.cycles += cycles;
-        }
-        Ok(res)
     }
 }
 
@@ -267,6 +122,14 @@ mod tests {
         (cfg, sim, req, arch)
     }
 
+    fn ahead() -> GatingPolicy {
+        GatingPolicy { lookahead_cycles: 256 }
+    }
+
+    fn lazy() -> GatingPolicy {
+        GatingPolicy { lookahead_cycles: 0 }
+    }
+
     #[test]
     fn event_sim_matches_analytical_static_energy_gated() {
         // the core cross-check: two independent computations of the
@@ -277,7 +140,8 @@ mod tests {
         let ana_static: f64 =
             analytical.per_macro.iter().map(|b| b.static_pj).sum();
 
-        let ev = EventSim::new(&arch, &req, &cfg, &sim).run(256).unwrap();
+        let ev =
+            EventSim::new(&arch, &req, &cfg, &sim).run(&ahead()).unwrap();
         let rel = (ev.static_pj - ana_static).abs() / ana_static;
         assert!(
             rel < 0.02,
@@ -293,7 +157,8 @@ mod tests {
         let analytical = model.evaluate_arch(&arch);
         let ana_static: f64 =
             analytical.per_macro.iter().map(|b| b.static_pj).sum();
-        let ev = EventSim::new(&arch, &req, &cfg, &sim).run(0).unwrap();
+        let ev =
+            EventSim::new(&arch, &req, &cfg, &sim).run(&lazy()).unwrap();
         let rel = (ev.static_pj - ana_static).abs() / ana_static;
         assert!(rel < 1e-9, "rel err {rel}");
         assert_eq!(ev.transitions, 0);
@@ -301,14 +166,40 @@ mod tests {
     }
 
     #[test]
+    fn replay_is_exact_against_the_timeline_closed_form() {
+        // the tightened contract of the refactor: the interpreter and
+        // the IR's closed-form integration agree bit for bit on the
+        // shared segments (they ARE the same segments)
+        let (cfg, sim, req, arch) = setup(Organization::Sep { gated: true });
+        let model = EnergyModel::new(cfg.clone());
+        let ctx = model.context();
+        let tl = Timeline::build(
+            &ctx,
+            &arch,
+            &req,
+            &crate::timeline::TimelinePolicy::default(),
+        );
+        let ev = EventSim::replay(&tl);
+        assert_eq!(ev.static_pj.to_bits(), tl.static_pj().to_bits());
+        assert_eq!(ev.wakeup_pj.to_bits(), tl.wakeup_pj().to_bits());
+        assert_eq!(ev.transitions, tl.transitions());
+        assert_eq!(ev.cycles, tl.total_cycles);
+        // and the convenience `run` path builds the identical timeline
+        let direct =
+            EventSim::new(&arch, &req, &cfg, &sim).run(&ahead()).unwrap();
+        assert_eq!(direct.static_pj.to_bits(), ev.static_pj.to_bits());
+    }
+
+    #[test]
     fn wakeup_energy_agrees_with_plan() {
         let (cfg, sim, req, arch) = setup(Organization::Sep { gated: true });
         let plan = GatingSchedule::plan(&arch, &req, &cfg);
         let planned = plan.wakeup_energy_pj(&arch.pg_model);
-        let ev = EventSim::new(&arch, &req, &cfg, &sim).run(256).unwrap();
-        // event sim can only wake what the plan wakes (initial power-on
-        // state differs: domains start ON, the plan charges first-op
-        // wakeups), so the event count is bounded by the plan
+        let ev =
+            EventSim::new(&arch, &req, &cfg, &sim).run(&ahead()).unwrap();
+        // the event level can only wake what the plan wakes (initial
+        // power-on state differs: domains start ON, the plan charges
+        // first-op wakeups), so the event count is bounded by the plan
         assert!(
             ev.wakeup_pj <= planned * 1.01,
             "event {} vs plan {planned}",
@@ -319,12 +210,12 @@ mod tests {
 
     #[test]
     fn transitions_never_stall_the_array() {
-        // wakeups complete within the transition window of each op —
-        // the Fig 9 protocol keeps the accelerator fed
+        // wakeups complete before the boundary when the lookahead
+        // covers the wakeup latency — the Fig 9 protocol keeps the
+        // accelerator fed
         let (cfg, sim, req, arch) = setup(Organization::Sep { gated: true });
-        let ev = EventSim::new(&arch, &req, &cfg, &sim).run(256).unwrap();
-        // waking domains are only "not ready" during the short window;
-        // bound it well below 1% of total domain-cycles
+        let ev =
+            EventSim::new(&arch, &req, &cfg, &sim).run(&ahead()).unwrap();
         let domain_cycles: u64 = arch
             .macros
             .iter()
@@ -345,8 +236,9 @@ mod tests {
         // the boundary instead of at it — costing a little extra
         // ON-leakage, which §5.1 calls negligible
         let (cfg, sim, req, arch) = setup(Organization::Sep { gated: true });
-        let lazy = EventSim::new(&arch, &req, &cfg, &sim).run(0).unwrap();
-        let ahead = EventSim::new(&arch, &req, &cfg, &sim).run(256).unwrap();
+        let es = EventSim::new(&arch, &req, &cfg, &sim);
+        let lazy = es.run(&lazy()).unwrap();
+        let ahead = es.run(&ahead()).unwrap();
         assert_eq!(lazy.transitions, ahead.transitions);
         let wake_rel = (lazy.wakeup_pj - ahead.wakeup_pj).abs()
             / lazy.wakeup_pj.max(1.0);
@@ -363,14 +255,18 @@ mod tests {
             ahead.static_pj,
             lazy.static_pj
         );
+        // lazy wakeups overlap the op start by the full wakeup latency
+        assert!(lazy.not_ready_cycles > ahead.not_ready_cycles);
     }
 
     #[test]
     fn gated_event_sim_saves_vs_ungated() {
         let (cfg, sim, req, gated) = setup(Organization::Sep { gated: true });
         let (_, _, _, plain) = setup(Organization::Sep { gated: false });
-        let e_gated = EventSim::new(&gated, &req, &cfg, &sim).run(256).unwrap();
-        let e_plain = EventSim::new(&plain, &req, &cfg, &sim).run(0).unwrap();
+        let e_gated =
+            EventSim::new(&gated, &req, &cfg, &sim).run(&ahead()).unwrap();
+        let e_plain =
+            EventSim::new(&plain, &req, &cfg, &sim).run(&lazy()).unwrap();
         assert!(
             e_gated.static_pj + e_gated.wakeup_pj < 0.6 * e_plain.static_pj,
             "gated {} vs plain {}",

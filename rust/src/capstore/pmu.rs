@@ -237,6 +237,41 @@ impl GatingSchedule {
             .map(|(&w, &sb)| w as f64 * pg.wakeup_energy_pj(sb))
             .sum()
     }
+
+    /// Per-macro OFF→ON transitions of a *steady-state* pipelined
+    /// inference: the first op's rise is counted against the **last**
+    /// op's ON counts (the previous inference's final configuration
+    /// carries over) instead of against a cold all-OFF start.  This is
+    /// the plan-level view of what the batched timeline expresses:
+    /// inference `i > 0` of a back-to-back batch never pays the full
+    /// first-op power-on again.
+    pub fn steady_wakeups(&self) -> Vec<u64> {
+        let nmac = self.total_sectors.len();
+        let mut wakeups = vec![0u64; nmac];
+        if self.steps.is_empty() {
+            return wakeups;
+        }
+        let mut prev: Vec<u64> = self.steps.last().unwrap().1.clone();
+        for (_, on) in &self.steps {
+            for i in 0..nmac {
+                wakeups[i] += on[i].saturating_sub(prev[i]);
+                prev[i] = on[i];
+            }
+        }
+        wakeups
+    }
+
+    /// Wakeup energy of a steady-state pipelined inference, pJ.  Always
+    /// ≤ [`wakeup_energy_pj`](Self::wakeup_energy_pj); the difference is
+    /// the cold-start saving each batched inference beyond the first
+    /// enjoys (the serving accountant charges batches with it).
+    pub fn wakeup_energy_steady_pj(&self, pg: &PowerGateModel) -> f64 {
+        self.steady_wakeups()
+            .iter()
+            .zip(&self.sector_bytes)
+            .map(|(&w, &sb)| w as f64 * pg.wakeup_energy_pj(sb))
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -338,6 +373,26 @@ mod tests {
             let f = plan.on_fraction(mac, &cycles);
             assert!((0.0..=1.0).contains(&f), "macro {mac}: {f}");
         }
+    }
+
+    #[test]
+    fn steady_state_wakeups_never_exceed_cold_start() {
+        // pipelined batches: the inter-inference boundary can only be
+        // cheaper than the cold all-OFF power-on the plan charges
+        let (arch, req, cfg) = setup(Organization::Sep { gated: true });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        for (steady, cold) in plan.steady_wakeups().iter().zip(&plan.wakeups)
+        {
+            assert!(steady <= cold, "{steady} > {cold}");
+        }
+        let pg = &arch.pg_model;
+        assert!(
+            plan.wakeup_energy_steady_pj(pg) <= plan.wakeup_energy_pj(pg)
+        );
+        // and an ungated plan has no transitions either way
+        let (arch, req, cfg) = setup(Organization::Sep { gated: false });
+        let plan = GatingSchedule::plan(&arch, &req, &cfg);
+        assert_eq!(plan.steady_wakeups().iter().sum::<u64>(), 0);
     }
 
     #[test]

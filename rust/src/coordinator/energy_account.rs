@@ -1,11 +1,15 @@
-//! Energy accountant: attributes, per served inference, the memory
-//! energy the selected CapStore organization would consume — the bridge
+//! Energy accountant: attributes, per served batch, the memory energy
+//! the selected CapStore organization would consume — the bridge
 //! between the real PJRT execution and the simulated accelerator.
 //!
-//! The per-inference energy of an architecture is precomputed once
-//! (the analysis is workload-static) and multiplied by the number of
-//! inferences served; the accountant also tracks the per-operation split
-//! so the server can report a Fig-10d-style view of what it served.
+//! The per-inference energy of an architecture is precomputed once (the
+//! analysis is workload-static); batches are charged with the
+//! timeline's pipelined accounting: the first inference of a batch pays
+//! the cold power-on wakeups, every subsequent inference in the same
+//! batch only pays the steady-state inter-inference transitions
+//! (`GatingSchedule::wakeup_energy_steady_pj`).  Between batches the
+//! queue may drain and the PMU puts everything to sleep, so each batch
+//! pays the cold start exactly once.
 
 use crate::capsnet::{CapsNetConfig, OpKind};
 use crate::capstore::arch::Organization;
@@ -20,7 +24,13 @@ pub struct EnergyAccountant {
     pub offchip_pj_per_inference: f64,
     pub accel_pj_per_inference: f64,
     pub per_op_pj: Vec<(OpKind, f64)>,
+    /// Wakeup energy each pipelined inference beyond a batch's first
+    /// saves vs the cold-start accounting (timeline-derived; 0 when the
+    /// organization is ungated).
+    pub pipeline_saving_pj: f64,
     inferences: u64,
+    batches: u64,
+    charged_pj: f64,
 }
 
 impl EnergyAccountant {
@@ -36,25 +46,56 @@ impl EnergyAccountant {
     }
 
     /// Build the accountant for a full [`Scenario`] — organization,
-    /// geometry, *and* technology node all drive the per-inference
-    /// energy the server attributes.  Analytical-only: the accountant
-    /// never consumes the event-level cross-check, so it is skipped.
+    /// geometry, technology node, *and* DMA policy all drive the
+    /// per-inference energy the server attributes (a serial-DMA
+    /// scenario charges its stall leakage and stall-extended DRAM
+    /// standby).  Analytical-only: the accountant never consumes the
+    /// event-level replay, so it is skipped; the timeline's batch
+    /// accounting supplies the pipelined saving.
     pub fn for_scenario(sc: &Scenario) -> Result<Self> {
-        let e = Evaluator::new().evaluate_analytical(sc)?;
+        // per-inference view: evaluate at batch 1 (the server's own
+        // batcher decides actual batch sizes; `charge(n)` applies the
+        // pipelining saving per served batch).  The batch-1 BatchEnergy
+        // carries the DMA pricing — for hidden transfers it is the
+        // plain per-inference numbers, bit-identical.
+        let sc1 = Scenario { batch: 1, ..sc.clone() };
+        let e = Evaluator::new().evaluate_analytical(&sc1)?;
+        // the per-inference saving is batch-size-independent, so an
+        // accountant built from any scenario can charge any batch size
+        let saving = if e.architecture.organization.gated() {
+            e.timeline.plan.wakeup_energy_pj(&e.architecture.pg_model)
+                - e.timeline
+                    .plan
+                    .wakeup_energy_steady_pj(&e.architecture.pg_model)
+        } else {
+            0.0
+        };
         Ok(EnergyAccountant {
             organization: sc.organization,
-            onchip_pj_per_inference: e.onchip.onchip_pj,
-            offchip_pj_per_inference: e.system.offchip_pj,
-            accel_pj_per_inference: e.system.accel_pj,
+            onchip_pj_per_inference: e.batch.onchip_pj,
+            offchip_pj_per_inference: e.batch.offchip_pj,
+            accel_pj_per_inference: e.batch.accel_pj,
             per_op_pj: e.onchip.per_op_pj,
+            pipeline_saving_pj: saving,
             inferences: 0,
+            batches: 0,
+            charged_pj: 0.0,
         })
     }
 
-    /// Record `n` served inferences; returns the energy charged (pJ).
+    /// Record one served batch of `n` pipelined inferences; returns the
+    /// energy charged (pJ): `n × per-inference` minus the pipelined
+    /// wakeup saving for every inference beyond the batch's first.
     pub fn charge(&mut self, n: u64) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
         self.inferences += n;
-        n as f64 * self.total_pj_per_inference()
+        self.batches += 1;
+        let pj = n as f64 * self.total_pj_per_inference()
+            - (n - 1) as f64 * self.pipeline_saving_pj;
+        self.charged_pj += pj;
+        pj
     }
 
     pub fn total_pj_per_inference(&self) -> f64 {
@@ -67,9 +108,14 @@ impl EnergyAccountant {
         self.inferences
     }
 
-    /// Total simulated energy so far, pJ.
+    /// Batches charged so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Total simulated energy charged so far, pJ.
     pub fn total_pj(&self) -> f64 {
-        self.inferences as f64 * self.total_pj_per_inference()
+        self.charged_pj
     }
 }
 
@@ -78,7 +124,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn charge_accumulates() {
+    fn charge_accumulates_with_pipelining() {
         let cfg = CapsNetConfig::mnist();
         let mut acc =
             EnergyAccountant::new(&cfg, Organization::Sep { gated: true })
@@ -86,9 +132,59 @@ mod tests {
         let e1 = acc.charge(3);
         let e2 = acc.charge(2);
         assert!(e1 > 0.0);
-        assert!((e1 / 3.0 - e2 / 2.0).abs() < 1e-6);
         assert_eq!(acc.inferences(), 5);
+        assert_eq!(acc.batches(), 2);
         assert!((acc.total_pj() - e1 - e2).abs() < 1.0);
+        // PG-SEP pipelines: a batch of 3 is strictly cheaper than 3
+        // singles, by exactly two inter-inference savings
+        assert!(acc.pipeline_saving_pj > 0.0);
+        let single = acc.total_pj_per_inference();
+        assert!(e1 < 3.0 * single);
+        let expect = 3.0 * single - 2.0 * acc.pipeline_saving_pj;
+        assert!((e1 - expect).abs() < 1e-6 * expect.abs().max(1.0));
+        // zero-size batches charge nothing and count nothing
+        assert_eq!(acc.charge(0), 0.0);
+        assert_eq!(acc.batches(), 2);
+    }
+
+    #[test]
+    fn ungated_batches_charge_linearly() {
+        let cfg = CapsNetConfig::mnist();
+        let mut acc =
+            EnergyAccountant::new(&cfg, Organization::Smp { gated: false })
+                .unwrap();
+        assert_eq!(acc.pipeline_saving_pj, 0.0);
+        let e1 = acc.charge(3);
+        let e2 = acc.charge(2);
+        assert!((e1 / 3.0 - e2 / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn serial_dma_scenarios_charge_their_stalls() {
+        use crate::scenario::{DmaModel, Scenario};
+        let hidden =
+            EnergyAccountant::for_scenario(&Scenario::default()).unwrap();
+        let serial = EnergyAccountant::for_scenario(
+            &Scenario::builder()
+                .dma_model(DmaModel::Serial)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        // stall leakage raises the on-chip charge; the stall-extended
+        // window raises DRAM standby
+        assert!(
+            serial.onchip_pj_per_inference
+                > hidden.onchip_pj_per_inference
+        );
+        assert!(
+            serial.offchip_pj_per_inference
+                > hidden.offchip_pj_per_inference
+        );
+        assert_eq!(
+            serial.accel_pj_per_inference.to_bits(),
+            hidden.accel_pj_per_inference.to_bits()
+        );
     }
 
     #[test]

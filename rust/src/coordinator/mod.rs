@@ -1,7 +1,8 @@
 //! L3 coordinator: the serving loop around the PJRT runtime.
 //!
 //! A bounded request queue feeds a dynamic batcher; a worker thread
-//! drains batches through the [`crate::runtime::InferenceEngine`] while
+//! drains batches through the `runtime::engine::InferenceEngine`
+//! (`pjrt`-gated, so not linked here) while
 //! the energy accountant attributes, per executed inference, the memory
 //! energy the selected CapStore organization would consume (the
 //! simulated-hardware counterpart of the real execution).

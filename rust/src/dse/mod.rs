@@ -29,6 +29,7 @@ use crate::analysis::breakdown::EnergyModel;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::{CapStoreArch, Organization};
 use crate::error::Result;
+use crate::timeline::{self, DmaPolicy};
 
 pub use context::SweepContext;
 pub use sweep::{CostCache, MultiPoint, MultiSweep, PointSpec};
@@ -39,9 +40,15 @@ pub struct DesignPoint {
     pub organization: Organization,
     pub banks: u64,
     pub sectors: u64,
+    /// DMA/compute-overlap coordinate of the point.
+    pub dma: DmaPolicy,
+    /// On-chip memory energy per inference, pJ (includes the extra
+    /// leakage spent during DMA stalls when transfers are not hidden).
     pub onchip_energy_pj: f64,
     pub area_mm2: f64,
     pub capacity_bytes: u64,
+    /// Inference latency including DMA stalls, cycles.
+    pub latency_cycles: u64,
 }
 
 impl DesignPoint {
@@ -59,7 +66,9 @@ impl DesignPoint {
         self.organization == other.organization
             && self.banks == other.banks
             && self.sectors == other.sectors
+            && self.dma == other.dma
             && self.capacity_bytes == other.capacity_bytes
+            && self.latency_cycles == other.latency_cycles
             && self.onchip_energy_pj.to_bits()
                 == other.onchip_energy_pj.to_bits()
             && self.area_mm2.to_bits() == other.area_mm2.to_bits()
@@ -72,6 +81,10 @@ pub struct SweepSpace {
     pub banks: Vec<u64>,
     pub sectors: Vec<u64>,
     pub organizations: Vec<Organization>,
+    /// DMA/compute-overlap axis; the default space keeps the historical
+    /// hidden-transfer assumption only, the large space explores all
+    /// three models.
+    pub dma: Vec<DmaPolicy>,
 }
 
 impl Default for SweepSpace {
@@ -80,14 +93,16 @@ impl Default for SweepSpace {
             banks: vec![4, 8, 16, 32],
             sectors: vec![8, 16, 32, 64, 128],
             organizations: Organization::all().to_vec(),
+            dma: vec![DmaPolicy::default()],
         }
     }
 }
 
 impl SweepSpace {
     /// The enlarged fine-grained axes: every power-of-two bank count the
-    /// array can feed plus intermediate sector granularities.  315 points
-    /// per (network, tech) pair vs the default's ~72.
+    /// array can feed, intermediate sector granularities, and the three
+    /// DMA-overlap models — 945 points per (network, tech) pair vs the
+    /// default's ~72.
     pub fn large() -> Self {
         SweepSpace {
             banks: vec![2, 4, 8, 16, 32, 64, 128],
@@ -95,17 +110,20 @@ impl SweepSpace {
                 2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256,
             ],
             organizations: Organization::all().to_vec(),
+            dma: DmaPolicy::all_models(),
         }
     }
 
     /// Points this space enumerates to (closed form; gated organizations
-    /// take the full sector axis, ungated collapse to one point).
+    /// take the full sector axis, ungated collapse to one point; every
+    /// point crosses the DMA axis).
     pub fn num_points(&self) -> usize {
         let gated =
             self.organizations.iter().filter(|o| o.gated()).count();
         let ungated = self.organizations.len() - gated;
-        gated * self.banks.len() * self.sectors.len()
-            + ungated * self.banks.len()
+        (gated * self.banks.len() * self.sectors.len()
+            + ungated * self.banks.len())
+            * self.dma.len()
     }
 }
 
@@ -160,8 +178,14 @@ impl Explorer {
 
     /// The pre-refactor evaluation path — per-point context rebuild, no
     /// cost cache, serial — kept as the speedup baseline for
-    /// `benches/dse_throughput.rs` and the bit-identity tests.
+    /// `benches/dse_throughput.rs` and the bit-identity tests.  The DMA
+    /// axis goes through the same [`timeline::price_design_point`]
+    /// helper the engine uses, so the identity contract extends to it.
     pub fn sweep_baseline(&self) -> Result<Vec<DesignPoint>> {
+        // schedule data for the DMA pricing only; the per-point energy
+        // below still rebuilds its context inside `evaluate_arch`, true
+        // to the baseline's pre-refactor nature
+        let ctx = self.model.context();
         let mut out = Vec::new();
         for spec in sweep::enumerate(&self.space) {
             let arch = CapStoreArch::build(
@@ -172,13 +196,27 @@ impl Explorer {
                 spec.sectors,
             )?;
             let e = self.model.evaluate_arch(&arch);
+            let (stall_pj, latency) = timeline::price_design_point(
+                &ctx.op_kinds,
+                &ctx.op_cycles,
+                &ctx.op_offchip,
+                ctx.clock_hz,
+                &arch,
+                &self.model.req,
+                &spec.dma,
+            );
             out.push(DesignPoint {
                 organization: spec.organization,
                 banks: spec.banks,
                 sectors: spec.sectors,
-                onchip_energy_pj: e.onchip_pj,
+                dma: spec.dma,
+                onchip_energy_pj: timeline::priced_onchip_pj(
+                    e.onchip_pj,
+                    stall_pj,
+                ),
                 area_mm2: e.area_mm2,
                 capacity_bytes: e.capacity_bytes,
+                latency_cycles: latency,
             });
         }
         Ok(out)
@@ -201,6 +239,7 @@ impl Explorer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::timeline::DmaModel;
 
     fn quick_explorer() -> Explorer {
         let mut e = Explorer::new(CapsNetConfig::mnist());
@@ -209,6 +248,7 @@ mod tests {
             banks: vec![8, 16],
             sectors: vec![16, 64],
             organizations: Organization::all().to_vec(),
+            dma: vec![DmaPolicy::default()],
         };
         e
     }
@@ -283,5 +323,43 @@ mod tests {
     fn large_space_is_fine_grained() {
         let large = SweepSpace::large();
         assert!(large.num_points() > 4 * SweepSpace::default().num_points());
+        // the overlap axis triples the large space
+        assert_eq!(large.dma.len(), 3);
+        assert_eq!(large.num_points() % 3, 0);
+    }
+
+    #[test]
+    fn dma_axis_prices_stalls_into_the_sweep() {
+        let mut ex = quick_explorer();
+        ex.space.dma = DmaPolicy::all_models();
+        let pts = ex.sweep().unwrap();
+        assert_eq!(pts.len(), ex.space.num_points());
+        // baseline path agrees on the new axis too
+        let baseline = ex.sweep_baseline().unwrap();
+        for (b, p) in baseline.iter().zip(&pts) {
+            assert!(b.bit_eq(p), "dma point diverged: {b:?} vs {p:?}");
+        }
+        // for a fixed geometry: hidden < double-buffered < serial on
+        // both latency and energy (stall leakage is priced in)
+        let find = |m: DmaModel| {
+            pts.iter()
+                .find(|p| {
+                    p.dma.model == m
+                        && p.banks == 16
+                        && p.sectors == 64
+                        && p.organization.label() == "PG-SEP"
+                })
+                .unwrap()
+        };
+        let instant = find(DmaModel::Instant);
+        let double = find(DmaModel::DoubleBuffered);
+        let serial = find(DmaModel::Serial);
+        assert!(instant.latency_cycles < double.latency_cycles);
+        assert!(double.latency_cycles < serial.latency_cycles);
+        assert!(instant.onchip_energy_pj < double.onchip_energy_pj);
+        assert!(double.onchip_energy_pj < serial.onchip_energy_pj);
+        // area and capacity are time-independent
+        assert_eq!(instant.area_mm2.to_bits(), serial.area_mm2.to_bits());
+        assert_eq!(instant.capacity_bytes, serial.capacity_bytes);
     }
 }

@@ -98,9 +98,11 @@ mod tests {
             organization: Organization::Sep { gated: true },
             banks: 16,
             sectors: 64,
+            dma: crate::timeline::DmaPolicy::default(),
             onchip_energy_pj: e,
             area_mm2: a,
             capacity_bytes: 0,
+            latency_cycles: 0,
         }
     }
 

@@ -25,6 +25,7 @@ use crate::dse::context::SweepContext;
 use crate::dse::{DesignPoint, SweepSpace};
 use crate::error::Result;
 use crate::memsim::cacti::{self, SramConfig, SramCosts, Technology};
+use crate::timeline::{self, DmaPolicy};
 
 // ---------------------------------------------------------------------
 // SRAM cost cache
@@ -130,11 +131,14 @@ pub struct PointSpec {
     pub organization: Organization,
     pub banks: u64,
     pub sectors: u64,
+    pub dma: DmaPolicy,
 }
 
-/// Enumerate a space in canonical (organization, banks, sectors) order.
-/// Ungated organizations ignore the sector axis (deduplicated to one
-/// point per bank count), matching the legacy serial sweep exactly.
+/// Enumerate a space in canonical (organization, banks, sectors, dma)
+/// order.  Ungated organizations ignore the sector axis (deduplicated
+/// to one point per bank count), matching the legacy serial sweep
+/// exactly; the DMA axis is innermost, mirroring
+/// `scenario::ScenarioSet::scenarios`.
 pub fn enumerate(space: &SweepSpace) -> Vec<PointSpec> {
     let mut specs = Vec::new();
     for &org in &space.organizations {
@@ -142,7 +146,14 @@ pub fn enumerate(space: &SweepSpace) -> Vec<PointSpec> {
             let sector_axis: &[u64] =
                 if org.gated() { &space.sectors } else { &[1] };
             for &sectors in sector_axis {
-                specs.push(PointSpec { organization: org, banks, sectors });
+                for &dma in &space.dma {
+                    specs.push(PointSpec {
+                        organization: org,
+                        banks,
+                        sectors,
+                        dma,
+                    });
+                }
             }
         }
     }
@@ -150,7 +161,11 @@ pub fn enumerate(space: &SweepSpace) -> Vec<PointSpec> {
 }
 
 /// Evaluate one design point: build the architecture (through the cost
-/// cache) and integrate its energy against the shared context.
+/// cache) and integrate its energy against the shared context.  The DMA
+/// axis is priced with the shared O(ops)
+/// [`timeline::price_design_point`] scan — the full Timeline IR is
+/// never built on this hot path (the `timeline_build` bench enforces
+/// it).
 pub fn evaluate_point(
     model: &EnergyModel,
     ctx: &SweepContext,
@@ -165,13 +180,24 @@ pub fn evaluate_point(
         &mut |sram| cache.evaluate(sram, &model.tech),
     )?;
     let e = model.evaluate_arch_in(ctx, &arch);
+    let (stall_pj, latency) = timeline::price_design_point(
+        &ctx.op_kinds,
+        &ctx.op_cycles,
+        &ctx.op_offchip,
+        ctx.clock_hz,
+        &arch,
+        &model.req,
+        &spec.dma,
+    );
     Ok(DesignPoint {
         organization: spec.organization,
         banks: spec.banks,
         sectors: spec.sectors,
-        onchip_energy_pj: e.onchip_pj,
+        dma: spec.dma,
+        onchip_energy_pj: timeline::priced_onchip_pj(e.onchip_pj, stall_pj),
         area_mm2: e.area_mm2,
         capacity_bytes: e.capacity_bytes,
+        latency_cycles: latency,
     })
 }
 
@@ -285,6 +311,7 @@ impl MultiSweep {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::timeline::DmaModel;
 
     #[test]
     fn cache_hits_on_repeat_geometry() {
@@ -322,6 +349,7 @@ mod tests {
             banks: vec![8, 16],
             sectors: vec![16, 64],
             organizations: Organization::all().to_vec(),
+            dma: vec![DmaPolicy::default()],
         };
         let specs = enumerate(&space);
         // gated: 3 orgs x 2 banks x 2 sectors; ungated: 3 orgs x 2 banks
@@ -330,6 +358,29 @@ mod tests {
             .iter()
             .filter(|s| !s.organization.gated())
             .all(|s| s.sectors == 1));
+    }
+
+    #[test]
+    fn enumeration_crosses_the_dma_axis() {
+        let space = SweepSpace {
+            banks: vec![16],
+            sectors: vec![64],
+            organizations: vec![Organization::Sep { gated: true }],
+            dma: DmaPolicy::all_models(),
+        };
+        let specs = enumerate(&space);
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs.len(), space.num_points());
+        let models: Vec<DmaModel> =
+            specs.iter().map(|s| s.dma.model).collect();
+        assert_eq!(
+            models,
+            vec![
+                DmaModel::Instant,
+                DmaModel::Serial,
+                DmaModel::DoubleBuffered
+            ]
+        );
     }
 
     #[test]

@@ -15,8 +15,12 @@
 //!   runs real inference while the memory system is simulated alongside.
 //!   The [`scenario`] module is the unified public evaluation surface:
 //!   a typed `Scenario` (network × tech node × batch × organization ×
-//!   geometry × gating), a cross-product `ScenarioSet`, and the
-//!   `Evaluator` facade every other entry point delegates to.
+//!   geometry × gating × DMA overlap), a cross-product `ScenarioSet`,
+//!   and the `Evaluator` facade every other entry point delegates to.
+//!   Underneath it, [`timeline`] is the cycle-resolved IR — op
+//!   intervals, per-domain power-state segments, DMA transfers — that
+//!   every time consumer (analytical leakage, event sim, tracer,
+//!   serving accountant, `capstore timeline`) derives from.
 //!   The PJRT pieces (`runtime::engine`, `coordinator::server`) need the
 //!   `xla` crate and sit behind the default-off `pjrt` feature; everything
 //!   else is dependency-free and builds in the offline image.
@@ -33,6 +37,7 @@ pub mod accel;
 pub mod memsim;
 pub mod capstore;
 pub mod analysis;
+pub mod timeline;
 pub mod dse;
 pub mod config;
 pub mod scenario;

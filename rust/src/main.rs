@@ -39,7 +39,7 @@ use capstore::Result;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, flags) = match parse_args(&args) {
+    let (cmd, positionals, flags) = match parse_args(&args) {
         Ok(x) => x,
         Err(e) => {
             eprintln!("error: {e}");
@@ -50,6 +50,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "analyze" => cmd_analyze(&flags),
         "evaluate" => cmd_evaluate(&flags),
+        "timeline" => cmd_timeline(&positionals, &flags),
         "dse" => cmd_dse(&flags),
         "serve" => cmd_serve(&flags),
         "info" => cmd_info(&flags),
@@ -80,32 +81,45 @@ fn usage() {
     println!(
         "capstore — energy-efficient on-chip memory for CapsuleNet accelerators
 
-USAGE: capstore <analyze|evaluate|dse|serve|info> [--flag value | --flag=value]...
+USAGE: capstore <analyze|evaluate|timeline|dse|serve|info>
+                [--flag value | --flag=value]...
+       capstore timeline [<net> [<org>]] [--flag value]...
 
 FLAGS (all optional, `--flag value` or `--flag=value`; a subcommand
 rejects flags it does not consume):
   --scenario <path.toml>      typed scenario file (network/tech/org/
-                              geometry/batch/gating); flags below
+                              geometry/batch/gating/dma); flags below
                               override its fields
-                                          (analyze, evaluate, dse, serve)
+                                 (analyze, evaluate, timeline, dse, serve)
   --format <table|json>       output format            [table]
   --model <{models}>          network config           [mnist]
-                                          (analyze, evaluate, dse, serve)
+                                 (analyze, evaluate, timeline, dse, serve)
   --config <path.toml>        legacy run config file
   --tech <{techs}>            technology node          [32nm]
-                                          (evaluate, dse, serve)
+                                 (evaluate, timeline, dse, serve)
   --org <SMP|PG-SEP|...>      memory organization      [PG-SEP]
   --banks N --sectors N       memory geometry          [16 / 64]
-                                          (evaluate, serve)
+                                 (evaluate, timeline, serve)
+  --lookahead N               PMU pre-wake cycles      [256]
+  --dma <instant|serial|double-buffered>
+                              DMA/compute overlap      [instant]
+  --dma-bw N                  DMA bytes per cycle      [16]
+  --batch N                   pipelined batch size     [1]
+                                 (evaluate, timeline, serve)
   --artifacts <dir>           artifact directory       [artifacts]
-                                          (serve, info)
+                                 (serve, info)
+
+timeline:
+  capstore timeline <net> <org>   render op intervals + per-macro gating
+                                  segments of the cycle-resolved IR
 
 dse only:
   --threads N                 worker threads           [0 = all cores]
   --space <default|large|full>
                               sweep extent             [default]
                               (full = all tech nodes x all models,
-                              narrowed by --model/--tech if given)
+                              narrowed by --model/--tech if given;
+                              large/full cross the dma axis too)
 
 serve only:
   --requests N                request count            [64]
@@ -125,12 +139,15 @@ fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
     const SCENARIO: &[&str] = &["scenario", "format", "model", "config"];
     // the memory-system axes of a scenario
     const MEMORY: &[&str] = &["tech", "org", "banks", "sectors"];
+    // the time-policy axes of a scenario (timeline IR knobs)
+    const TIME: &[&str] = &["lookahead", "dma", "dma-bw", "batch"];
     let parts: &[&[&str]] = match cmd {
         "analyze" => &[SCENARIO],
-        "evaluate" => &[SCENARIO, MEMORY],
+        "evaluate" => &[SCENARIO, MEMORY, TIME],
+        "timeline" => &[SCENARIO, MEMORY, TIME],
         "dse" => &[SCENARIO, &["tech", "threads", "space"]],
         "serve" => {
-            &[SCENARIO, MEMORY, &["artifacts", "requests", "clients"]]
+            &[SCENARIO, MEMORY, TIME, &["artifacts", "requests", "clients"]]
         }
         "info" => &[&["config", "artifacts", "format"]],
         "help" | "" => &[],
@@ -139,20 +156,38 @@ fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
     Some(parts.iter().flat_map(|p| p.iter().copied()).collect())
 }
 
-/// Parse `<cmd> [--flag value | --flag=value]...`, rejecting flags the
-/// subcommand does not know.
-fn parse_args(args: &[String]) -> Result<(String, Flags)> {
+/// Positional operands a subcommand accepts (everything else rejects
+/// bare tokens, as before).
+fn max_positionals(cmd: &str) -> usize {
+    match cmd {
+        // capstore timeline [<net> [<org>]]
+        "timeline" => 2,
+        _ => 0,
+    }
+}
+
+/// Parse `<cmd> [positional]... [--flag value | --flag=value]...`,
+/// rejecting flags the subcommand does not know and positionals beyond
+/// what it accepts.
+fn parse_args(args: &[String]) -> Result<(String, Vec<String>, Flags)> {
     let cmd = args.first().cloned().unwrap_or_default();
     let known = known_flags(&cmd);
+    let max_pos = max_positionals(&cmd);
+    let mut positionals: Vec<String> = Vec::new();
     let mut flags = Flags::new();
     let mut i = 1;
     while i < args.len() {
-        let body = args[i].strip_prefix("--").ok_or_else(|| {
-            capstore::Error::Config(format!(
+        let Some(body) = args[i].strip_prefix("--") else {
+            if positionals.len() < max_pos {
+                positionals.push(args[i].clone());
+                i += 1;
+                continue;
+            }
+            return Err(capstore::Error::Config(format!(
                 "expected --flag, got {:?}",
                 args[i]
-            ))
-        })?;
+            )));
+        };
         let (key, value) = match body.split_once('=') {
             Some((k, v)) => (k.to_string(), v.to_string()),
             None => {
@@ -178,7 +213,7 @@ fn parse_args(args: &[String]) -> Result<(String, Flags)> {
         flags.insert(key, value);
         i += 1;
     }
-    Ok((cmd, flags))
+    Ok((cmd, positionals, flags))
 }
 
 /// Read and parse the TOML file a flag points at (once — callers that
@@ -260,6 +295,18 @@ fn scenario_with_doc(
     }
     if let Some(v) = flags.get("sectors") {
         b = b.sectors(v.parse().map_err(|_| bad_flag("sectors", v))?);
+    }
+    if let Some(v) = flags.get("lookahead") {
+        b = b.lookahead(v.parse().map_err(|_| bad_flag("lookahead", v))?);
+    }
+    if let Some(v) = flags.get("dma") {
+        b = b.dma_named(v);
+    }
+    if let Some(v) = flags.get("dma-bw") {
+        b = b.dma_bandwidth(v.parse().map_err(|_| bad_flag("dma-bw", v))?);
+    }
+    if let Some(v) = flags.get("batch") {
+        b = b.batch(v.parse().map_err(|_| bad_flag("batch", v))?);
     }
     b.build()
 }
@@ -545,6 +592,17 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
                 selected.scenario.batch,
                 fmt_energy_uj(selected.batch_pj()),
             );
+            if selected.timeline.stall_cycles() > 0
+                || selected.scenario.batch > 1
+            {
+                println!(
+                    "timeline: batch latency {} cycles ({} DMA stall), \
+                     pipelining saves {}",
+                    fmt_si(selected.batch.latency_cycles),
+                    fmt_si(selected.timeline.stall_cycles()),
+                    fmt_energy_uj(selected.batch.pipeline_saving_pj),
+                );
+            }
             if let Some(event) = &selected.event {
                 println!(
                     "event-sim: static {}  wakeup {}  transitions {}  stall cycles {}",
@@ -584,6 +642,157 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------
+// timeline — the cycle-resolved IR: op intervals + gating segments
+// ---------------------------------------------------------------------
+fn cmd_timeline(positionals: &[String], flags: &Flags) -> Result<()> {
+    let rc = run_config(flags)?;
+    let fmt = out_format(flags)?;
+    // positional shorthand: capstore timeline <net> <org>.  A positional
+    // given together with its flag form is a conflict, rejected like
+    // every other ambiguous input in this CLI — never silently resolved.
+    if positionals.first().is_some() && flags.contains_key("model") {
+        return Err(capstore::Error::Config(
+            "`timeline <net>` and `--model` both name the network — \
+             give one or the other"
+                .into(),
+        ));
+    }
+    if positionals.get(1).is_some() && flags.contains_key("org") {
+        return Err(capstore::Error::Config(
+            "`timeline <net> <org>` and `--org` both name the \
+             organization — give one or the other"
+                .into(),
+        ));
+    }
+    let mut sc = scenario_from(flags, &rc)?;
+    if let Some(net) = positionals.first() {
+        sc = sc.into_builder().network(net).build()?;
+    }
+    if let Some(org) = positionals.get(1) {
+        sc = sc.into_builder().organization_named(org).build()?;
+    }
+
+    let ev = Evaluator::new();
+    let e = ev.evaluate(&sc)?;
+    let tl = e.timeline();
+
+    // op intervals + per-op utilization (Fig 4a/4c over time)
+    let mut headers: Vec<String> = ["#", "inf", "op", "start", "end", "util%"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for m in &tl.macros {
+        headers.push(format!("{} ON", m.label));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t_ops =
+        Table::new("Timeline — op intervals and ON sectors", &hrefs);
+    for row in e.utilization() {
+        let mut cells = vec![
+            row.op_index.to_string(),
+            row.inference.to_string(),
+            row.kind.label().to_string(),
+            row.interval.start.to_string(),
+            row.interval.end.to_string(),
+            format!("{:.1}", 100.0 * row.on_fraction),
+        ];
+        for (m, &on) in tl.macros.iter().zip(&row.sectors_on) {
+            cells.push(format!("{on}/{}", m.total_sectors));
+        }
+        t_ops.row(cells);
+    }
+
+    // per-macro gating segments (merged constant-ON runs)
+    let mut t_seg = Table::new(
+        "Timeline — per-macro gating segments",
+        &["macro", "start", "end", "cycles", "ON sectors", "state"],
+    );
+    for (mi, m) in tl.macros.iter().enumerate() {
+        for (iv, on) in tl.macro_segments(mi) {
+            let state = if on == 0 {
+                "OFF"
+            } else if on < m.total_sectors {
+                "partial"
+            } else {
+                "ON"
+            };
+            t_seg.row(vec![
+                m.label.to_string(),
+                iv.start.to_string(),
+                iv.end.to_string(),
+                fmt_si(iv.cycles()),
+                format!("{on}/{}", m.total_sectors),
+                state.to_string(),
+            ]);
+        }
+    }
+
+    // DMA stalls (only present when transfers are not hidden)
+    let mut t_stall = Table::new(
+        "Timeline — DMA stalls",
+        &["start", "end", "cycles"],
+    );
+    for s in &tl.stalls {
+        t_stall.row(vec![
+            s.interval.start.to_string(),
+            s.interval.end.to_string(),
+            fmt_si(s.interval.cycles()),
+        ]);
+    }
+
+    match fmt {
+        Format::Table => {
+            println!("scenario: {}", sc.label());
+            t_ops.print();
+            println!();
+            t_seg.print();
+            if !tl.stalls.is_empty() {
+                println!();
+                t_stall.print();
+            }
+            println!(
+                "\nmakespan: {} cycles ({:.3} ms), batch {}, stalls {}",
+                fmt_si(tl.total_cycles),
+                tl.latency_secs() * 1.0e3,
+                sc.batch,
+                fmt_si(tl.stall_cycles()),
+            );
+            println!(
+                "gating: {} transitions, wakeup {}, event static {}",
+                tl.transitions(),
+                fmt_energy_uj(tl.wakeup_pj()),
+                fmt_energy_uj(tl.static_pj()),
+            );
+            println!(
+                "batch energy: {} ({} saved by pipelining)",
+                fmt_energy_uj(e.batch_pj()),
+                fmt_energy_uj(e.batch.pipeline_saving_pj),
+            );
+        }
+        Format::Json => {
+            let j = Json::obj(vec![
+                ("scenario", Json::Str(sc.label())),
+                ("ops", t_ops.to_json()),
+                ("gating_segments", t_seg.to_json()),
+                ("stalls", t_stall.to_json()),
+                ("total_cycles", Json::Num(tl.total_cycles as f64)),
+                ("stall_cycles", Json::Num(tl.stall_cycles() as f64)),
+                ("transitions", Json::Num(tl.transitions() as f64)),
+                ("wakeup_pj", Json::Num(tl.wakeup_pj())),
+                ("static_pj", Json::Num(tl.static_pj())),
+                ("batch_pj", Json::Num(e.batch_pj())),
+                (
+                    "pipeline_saving_pj",
+                    Json::Num(e.batch.pipeline_saving_pj),
+                ),
+            ]);
+            println!("{}", j.render());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
 // dse — §4.2 sweep (parallel incremental engine)
 // ---------------------------------------------------------------------
 fn cmd_dse(flags: &Flags) -> Result<()> {
@@ -607,13 +816,15 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
             || sc.geometry != without.geometry
             || sc.batch != without.batch
             || sc.gating != without.gating
+            || sc.dma != without.dma
         {
             return Err(capstore::Error::Config(
-                "`dse` explores the organization/geometry axes itself: \
-                 the scenario file pins organization/geometry/batch/\
-                 gating values the sweep would override — drop those \
-                 keys (only `[scenario] network`/`tech` steer a sweep), \
-                 or use `capstore evaluate` for a single design point"
+                "`dse` explores the organization/geometry/dma axes \
+                 itself: the scenario file pins organization/geometry/\
+                 batch/gating/dma values the sweep would override — drop \
+                 those keys (only `[scenario] network`/`tech` steer a \
+                 sweep), or use `capstore evaluate` for a single design \
+                 point"
                     .into(),
             ));
         }
@@ -675,16 +886,19 @@ fn cmd_dse(flags: &Flags) -> Result<()> {
 
     let mut t = Table::new(
         "DSE — Pareto front over (on-chip energy, area)",
-        &["org", "banks", "sectors", "energy/inf", "area mm2", "capacity"],
+        &["org", "banks", "sectors", "dma", "energy/inf", "area mm2",
+          "capacity", "latency cy"],
     );
     for p in &front {
         t.row(vec![
             p.organization.label().into(),
             p.banks.to_string(),
             p.sectors.to_string(),
+            p.dma.model.label().into(),
             fmt_energy_uj(p.onchip_energy_pj),
             format!("{:.3}", p.area_mm2),
             fmt_bytes(p.capacity_bytes),
+            fmt_si(p.latency_cycles),
         ]);
     }
 
@@ -769,8 +983,8 @@ fn cmd_dse_full(
 
     let mut t = Table::new(
         "grand DSE — min-energy winner per (model, tech node)",
-        &["model", "tech", "org", "banks", "sectors", "energy/inf",
-          "area mm2"],
+        &["model", "tech", "org", "banks", "sectors", "dma",
+          "energy/inf", "area mm2"],
     );
     for cfg in &ms.models {
         for (tech_name, _) in &ms.techs {
@@ -790,6 +1004,7 @@ fn cmd_dse_full(
                 best.point.organization.label().into(),
                 best.point.banks.to_string(),
                 best.point.sectors.to_string(),
+                best.point.dma.model.label().into(),
                 fmt_energy_uj(best.point.onchip_energy_pj),
                 format!("{:.3}", best.point.area_mm2),
             ]);
@@ -1011,10 +1226,11 @@ mod tests {
 
     #[test]
     fn parse_args_supports_both_flag_forms() {
-        let (cmd, flags) =
+        let (cmd, pos, flags) =
             parse_args(&argv(&["evaluate", "--banks=8", "--org", "SMP"]))
                 .unwrap();
         assert_eq!(cmd, "evaluate");
+        assert!(pos.is_empty());
         assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
         assert_eq!(flags.get("org").map(String::as_str), Some("SMP"));
     }
@@ -1023,12 +1239,59 @@ mod tests {
     fn equals_form_does_not_swallow_next_token() {
         // the pre-redesign bug: `--banks=8 --sectors 32` stored the key
         // "banks=8" and swallowed "--sectors" as its value
-        let (_, flags) =
+        let (_, _, flags) =
             parse_args(&argv(&["evaluate", "--banks=8", "--sectors", "32"]))
                 .unwrap();
         assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
         assert_eq!(flags.get("sectors").map(String::as_str), Some("32"));
         assert!(!flags.contains_key("banks=8"));
+    }
+
+    #[test]
+    fn timeline_accepts_positionals_others_reject_them() {
+        let (cmd, pos, flags) = parse_args(&argv(&[
+            "timeline", "mnist", "PG-SEP", "--format", "json",
+        ]))
+        .unwrap();
+        assert_eq!(cmd, "timeline");
+        assert_eq!(pos, vec!["mnist".to_string(), "PG-SEP".to_string()]);
+        assert_eq!(flags.get("format").map(String::as_str), Some("json"));
+        // a third positional is one too many
+        assert!(parse_args(&argv(&["timeline", "a", "b", "c"])).is_err());
+        // other subcommands keep rejecting bare tokens
+        assert!(parse_args(&argv(&["evaluate", "mnist"])).is_err());
+    }
+
+    #[test]
+    fn timeline_positionals_conflict_with_flags() {
+        let mut flags = Flags::new();
+        flags.insert("model".into(), "mnist".into());
+        assert!(cmd_timeline(&["small".into()], &flags).is_err());
+        let mut flags = Flags::new();
+        flags.insert("org".into(), "SMP".into());
+        assert!(cmd_timeline(
+            &["mnist".into(), "PG-SEP".into()],
+            &flags
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn time_policy_flags_reach_the_scenario() {
+        let rc = RunConfig::default();
+        let mut flags = Flags::new();
+        flags.insert("lookahead".into(), "0".into());
+        flags.insert("dma".into(), "serial".into());
+        flags.insert("dma-bw".into(), "32".into());
+        flags.insert("batch".into(), "4".into());
+        let sc = scenario_with_doc(&flags, &rc, None).unwrap();
+        assert_eq!(sc.gating.lookahead_cycles, 0);
+        assert_eq!(sc.dma.model.label(), "serial");
+        assert_eq!(sc.dma.bandwidth_bytes_per_cycle, 32);
+        assert_eq!(sc.batch, 4);
+        // and a bad dma model is a build-time error
+        flags.insert("dma".into(), "warp".into());
+        assert!(scenario_with_doc(&flags, &rc, None).is_err());
     }
 
     #[test]
@@ -1038,9 +1301,13 @@ mod tests {
         assert!(parse_args(&argv(&["info", "--model", "small"])).is_err());
         assert!(parse_args(&argv(&["evaluate", "--bogus", "1"])).is_err());
         assert!(parse_args(&argv(&["help", "--format", "json"])).is_err());
+        // the dse explores the dma axis itself — no --dma flag there
+        assert!(parse_args(&argv(&["dse", "--dma", "serial"])).is_err());
         // ...while consumed flags pass
         assert!(parse_args(&argv(&["dse", "--threads", "2"])).is_ok());
         assert!(parse_args(&argv(&["evaluate", "--tech=22nm"])).is_ok());
+        assert!(parse_args(&argv(&["evaluate", "--dma=serial"])).is_ok());
+        assert!(parse_args(&argv(&["timeline", "--batch", "8"])).is_ok());
         // unknown subcommands defer to the dispatcher's error
         assert!(parse_args(&argv(&["frobnicate", "--x", "1"])).is_ok());
     }

@@ -6,7 +6,8 @@
 //! Pieces:
 //! * [`weights`] — reader for the CAPW container (`weights_<cfg>.bin`);
 //! * [`manifest`] — typed view of `artifacts/manifest.json`;
-//! * [`engine`] — the compiled-executable cache + inference entrypoints.
+//! * `engine` — the compiled-executable cache + inference entrypoints
+//!   (absent unless the `pjrt` feature is enabled, so not linked here).
 
 /// The compiled-executable cache needs the `xla` crate (PJRT bindings),
 /// which is not in the offline image — gated behind the `pjrt` feature.

@@ -1,6 +1,6 @@
 //! The unified **Scenario** evaluation API — one typed entry point for
 //! *network × technology node × batch × memory organization × geometry ×
-//! gating policy* across analysis, DSE, and serving.
+//! gating policy × DMA overlap* across analysis, DSE, and serving.
 //!
 //! Before this module, the paper's core loop (pick a CapsuleNet, a tech
 //! node, a memory organization and a gating policy, then evaluate energy
@@ -39,9 +39,13 @@ use crate::config::toml::TomlDoc;
 use crate::error::{Error, Result};
 use crate::memsim::cacti::Technology;
 
-/// Default PMU wakeup lookahead (cycles before an operation boundary at
-/// which the next op's sectors are woken — the paper's Fig 9 protocol).
-pub const DEFAULT_LOOKAHEAD_CYCLES: u64 = 256;
+// The time-policy value types live with the Timeline IR (the one place
+// that interprets them); re-exported here so `scenario::GatingPolicy`
+// and friends keep working and the scenario stays the typed surface.
+pub use crate::timeline::{
+    DmaModel, DmaPolicy, GatingPolicy, TimelinePolicy,
+    DEFAULT_LOOKAHEAD_CYCLES,
+};
 
 /// A named technology node the scenario axis enumerates.  Each variant
 /// maps onto the calibrated [`Technology`] constant sets in
@@ -115,20 +119,6 @@ impl Default for Geometry {
     }
 }
 
-/// Power-gating policy knobs (the PMU's ahead-of-time wakeup of Fig 9).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct GatingPolicy {
-    /// Cycles before an operation boundary at which the PMU wakes the
-    /// next op's sectors (0 = wake lazily at the boundary).
-    pub lookahead_cycles: u64,
-}
-
-impl Default for GatingPolicy {
-    fn default() -> Self {
-        GatingPolicy { lookahead_cycles: DEFAULT_LOOKAHEAD_CYCLES }
-    }
-}
-
 /// One fully-specified evaluation point: *what* to evaluate, on *which*
 /// memory system, at *which* node — everything [`Evaluator::evaluate`]
 /// needs and nothing it doesn't.
@@ -136,17 +126,20 @@ impl Default for GatingPolicy {
 pub struct Scenario {
     pub network: CapsNetConfig,
     pub tech: TechNode,
-    /// Inference batch size; the workload-static energy model scales
-    /// linearly, so this only affects per-batch aggregates.
+    /// Pipelined back-to-back inferences per batch; the timeline models
+    /// the gating state carrying across the batch (the per-inference
+    /// analytical numbers are batch-independent).
     pub batch: u64,
     pub organization: Organization,
     pub geometry: Geometry,
     pub gating: GatingPolicy,
+    /// DMA/compute-overlap knob (DESCNet-style double buffering axis).
+    pub dma: DmaPolicy,
 }
 
 impl Default for Scenario {
     /// The paper's headline point: MNIST CapsuleNet, 32nm, PG-SEP,
-    /// 16 banks × 64 sectors, batch 1.
+    /// 16 banks × 64 sectors, batch 1, transfers hidden.
     fn default() -> Self {
         Scenario {
             network: CapsNetConfig::mnist(),
@@ -155,6 +148,7 @@ impl Default for Scenario {
             organization: Organization::Sep { gated: true },
             geometry: Geometry::default(),
             gating: GatingPolicy::default(),
+            dma: DmaPolicy::default(),
         }
     }
 }
@@ -174,19 +168,36 @@ impl Scenario {
             batch: self.batch,
             geometry: self.geometry,
             gating: self.gating,
+            dma: DmaChoice::Policy(self.dma),
         }
     }
 
-    /// Short human label, e.g. `mnist/32nm/PG-SEP b16 s64`.
+    /// The time-policy triple the timeline consumes — the single
+    /// bridge between scenario knobs and the IR, so CLI, evaluator and
+    /// event sim cannot disagree on lookahead/DMA/batch.
+    pub fn timeline_policy(&self) -> TimelinePolicy {
+        TimelinePolicy {
+            gating: self.gating,
+            dma: self.dma,
+            batch: self.batch,
+        }
+    }
+
+    /// Short human label, e.g. `mnist/32nm/PG-SEP b16 s64` (plus the
+    /// DMA model when transfers are not hidden).
     pub fn label(&self) -> String {
-        format!(
+        let mut s = format!(
             "{}/{}/{} b{} s{}",
             self.network.name,
             self.tech.label(),
             self.organization.label(),
             self.geometry.banks,
             self.geometry.sectors
-        )
+        );
+        if self.dma.model != DmaModel::Instant {
+            s.push_str(&format!(" dma={}", self.dma.model.label()));
+        }
+        s
     }
 
     /// Serialize to the scenario TOML dialect.  [`from_toml`] parses the
@@ -208,14 +219,20 @@ impl Scenario {
              sectors = {}\n\
              \n\
              [gating]\n\
-             lookahead_cycles = {}\n",
+             lookahead_cycles = {}\n\
+             \n\
+             [dma]\n\
+             model = \"{}\"\n\
+             bandwidth_bytes_per_cycle = {}\n",
             self.network.name,
             self.tech.label(),
             self.batch,
             self.organization.label(),
             self.geometry.banks,
             self.geometry.sectors,
-            self.gating.lookahead_cycles
+            self.gating.lookahead_cycles,
+            self.dma.model.label(),
+            self.dma.bandwidth_bytes_per_cycle
         )
     }
 
@@ -288,6 +305,23 @@ enum OrgChoice {
     Org(Organization),
 }
 
+#[derive(Debug, Clone)]
+enum DmaChoice {
+    /// Deferred model-name lookup, validated at build; keeps the
+    /// already-chosen bandwidth.
+    Named(String, u64),
+    Policy(DmaPolicy),
+}
+
+impl DmaChoice {
+    fn bandwidth(&self) -> u64 {
+        match self {
+            DmaChoice::Named(_, bw) => *bw,
+            DmaChoice::Policy(p) => p.bandwidth_bytes_per_cycle,
+        }
+    }
+}
+
 /// Fluent [`Scenario`] builder.  Setters never fail — name lookups and
 /// range checks are deferred to [`build`](Self::build) so chains stay
 /// `?`-free:
@@ -313,6 +347,7 @@ pub struct ScenarioBuilder {
     batch: u64,
     geometry: Geometry,
     gating: GatingPolicy,
+    dma: DmaChoice,
 }
 
 impl Default for ScenarioBuilder {
@@ -376,6 +411,34 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Select the DMA/compute-overlap model.
+    pub fn dma_model(mut self, model: DmaModel) -> Self {
+        self.dma = DmaChoice::Policy(DmaPolicy {
+            model,
+            bandwidth_bytes_per_cycle: self.dma.bandwidth(),
+        });
+        self
+    }
+
+    /// Select the DMA model by name ("instant", "serial",
+    /// "double-buffered").
+    pub fn dma_named(mut self, name: &str) -> Self {
+        self.dma = DmaChoice::Named(name.to_string(), self.dma.bandwidth());
+        self
+    }
+
+    /// Off-chip bandwidth in bytes per array cycle.
+    pub fn dma_bandwidth(mut self, bytes_per_cycle: u64) -> Self {
+        self.dma = match self.dma {
+            DmaChoice::Named(n, _) => DmaChoice::Named(n, bytes_per_cycle),
+            DmaChoice::Policy(p) => DmaChoice::Policy(DmaPolicy {
+                bandwidth_bytes_per_cycle: bytes_per_cycle,
+                ..p
+            }),
+        };
+        self
+    }
+
     /// Apply a scenario TOML document on top of the builder's current
     /// state: keys present in the document override, absent keys keep
     /// whatever the builder already holds.  This is what lets the CLI
@@ -394,6 +457,8 @@ impl ScenarioBuilder {
             ("memory", "banks"),
             ("memory", "sectors"),
             ("gating", "lookahead_cycles"),
+            ("dma", "model"),
+            ("dma", "bandwidth_bytes_per_cycle"),
         ];
         for (section, keys) in &doc.sections {
             for key in keys.keys() {
@@ -431,6 +496,12 @@ impl ScenarioBuilder {
         if let Some(v) = want_u64(doc, "gating", "lookahead_cycles")? {
             self = self.lookahead(v);
         }
+        if let Some(v) = want_str(doc, "dma", "model")? {
+            self = self.dma_named(v);
+        }
+        if let Some(v) = want_u64(doc, "dma", "bandwidth_bytes_per_cycle")? {
+            self = self.dma_bandwidth(v);
+        }
         Ok(self)
     }
 
@@ -460,12 +531,29 @@ impl ScenarioBuilder {
             OrgChoice::Org(o) => o,
             OrgChoice::Named(l) => parse_organization(&l)?,
         };
+        let dma = match self.dma {
+            DmaChoice::Policy(p) => p,
+            DmaChoice::Named(n, bw) => DmaPolicy {
+                model: DmaModel::by_name(&n).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown dma model {n:?} (want one of {})",
+                        DmaModel::names().join(", ")
+                    ))
+                })?,
+                bandwidth_bytes_per_cycle: bw,
+            },
+        };
         if self.batch == 0 {
             return Err(Error::Config("scenario batch must be > 0".into()));
         }
         if self.geometry.banks == 0 || self.geometry.sectors == 0 {
             return Err(Error::Config(
                 "scenario banks and sectors must be > 0".into(),
+            ));
+        }
+        if dma.bandwidth_bytes_per_cycle == 0 {
+            return Err(Error::Config(
+                "scenario dma bandwidth must be > 0".into(),
             ));
         }
         Ok(Scenario {
@@ -475,6 +563,7 @@ impl ScenarioBuilder {
             organization,
             geometry: self.geometry,
             gating: self.gating,
+            dma,
         })
     }
 }
@@ -519,6 +608,28 @@ mod tests {
             .is_err());
         assert!(Scenario::builder().batch(0).build().is_err());
         assert!(Scenario::builder().banks(0).build().is_err());
+        assert!(Scenario::builder().dma_named("psychic").build().is_err());
+        assert!(Scenario::builder().dma_bandwidth(0).build().is_err());
+    }
+
+    #[test]
+    fn dma_knob_round_trips_and_labels() {
+        let sc = Scenario::builder()
+            .dma_named("double-buffered")
+            .dma_bandwidth(32)
+            .build()
+            .unwrap();
+        assert_eq!(sc.dma.model, DmaModel::DoubleBuffered);
+        assert_eq!(sc.dma.bandwidth_bytes_per_cycle, 32);
+        assert!(sc.label().ends_with("dma=double-buffered"));
+        assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+        // the default (hidden transfers) keeps the historical label
+        assert_eq!(Scenario::default().label(), "mnist/32nm/PG-SEP b16 s64");
+        // timeline_policy is the verbatim triple
+        let p = sc.timeline_policy();
+        assert_eq!(p.dma, sc.dma);
+        assert_eq!(p.gating, sc.gating);
+        assert_eq!(p.batch, sc.batch);
     }
 
     #[test]
@@ -570,6 +681,8 @@ mod tests {
             "[scenario]\nbatch = -1\n",  // negative where u64 expected
             "[scenario]\nnetwork = 3\n", // int where string expected
             "[gating]\nlookahead_cycles = 1.5\n", // float
+            "[dma]\nmodel = 3\n",        // int where string expected
+            "[dma]\nbandwidth_bytes_per_cycle = \"16\"\n",
         ] {
             let doc = TomlDoc::parse(text).unwrap();
             assert!(

@@ -13,7 +13,9 @@
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::Organization;
 use crate::dse::SweepSpace;
-use crate::scenario::{GatingPolicy, Geometry, Scenario, TechNode};
+use crate::scenario::{
+    DmaPolicy, GatingPolicy, Geometry, Scenario, TechNode,
+};
 
 /// Value lists per scenario axis; [`scenarios`](Self::scenarios)
 /// enumerates the cross product.
@@ -24,6 +26,8 @@ pub struct ScenarioSet {
     pub organizations: Vec<Organization>,
     pub banks: Vec<u64>,
     pub sectors: Vec<u64>,
+    /// DMA/compute-overlap axis (the DESCNet direction).
+    pub dma: Vec<DmaPolicy>,
     pub batches: Vec<u64>,
     /// Shared gating policy (not an enumerated axis).
     pub gating: GatingPolicy,
@@ -40,6 +44,7 @@ impl Default for ScenarioSet {
             organizations: Organization::all().to_vec(),
             banks: space.banks,
             sectors: space.sectors,
+            dma: space.dma,
             batches: vec![1],
             gating: GatingPolicy::default(),
         }
@@ -48,8 +53,8 @@ impl Default for ScenarioSet {
 
 impl ScenarioSet {
     /// The grand product: every registry network × every tech node × the
-    /// fine-grained large space — the same point set `MultiSweep`
-    /// evaluates, expressed as scenarios.
+    /// fine-grained large space (including its DMA-overlap axis) — the
+    /// same point set `MultiSweep` evaluates, expressed as scenarios.
     pub fn grand() -> Self {
         let space = SweepSpace::large();
         ScenarioSet {
@@ -58,6 +63,7 @@ impl ScenarioSet {
             organizations: Organization::all().to_vec(),
             banks: space.banks,
             sectors: space.sectors,
+            dma: space.dma,
             batches: vec![1],
             gating: GatingPolicy::default(),
         }
@@ -72,7 +78,7 @@ impl ScenarioSet {
         let per_pair = gated * self.banks.len() * self.sectors.len()
             + ungated * self.banks.len();
         per_pair * self.networks.len() * self.techs.len()
-            * self.batches.len()
+            * self.dma.len() * self.batches.len()
     }
 
     /// Enumerate the product in canonical order.
@@ -85,15 +91,21 @@ impl ScenarioSet {
                         let sector_axis: &[u64] =
                             if org.gated() { &self.sectors } else { &[1] };
                         for &sectors in sector_axis {
-                            for &batch in &self.batches {
-                                out.push(Scenario {
-                                    network: network.clone(),
-                                    tech,
-                                    batch,
-                                    organization: org,
-                                    geometry: Geometry { banks, sectors },
-                                    gating: self.gating,
-                                });
+                            for &dma in &self.dma {
+                                for &batch in &self.batches {
+                                    out.push(Scenario {
+                                        network: network.clone(),
+                                        tech,
+                                        batch,
+                                        organization: org,
+                                        geometry: Geometry {
+                                            banks,
+                                            sectors,
+                                        },
+                                        gating: self.gating,
+                                        dma,
+                                    });
+                                }
                             }
                         }
                     }
@@ -123,6 +135,19 @@ mod tests {
                 assert_eq!(sc.geometry.sectors, 1);
             }
         }
+    }
+
+    #[test]
+    fn dma_axis_multiplies() {
+        use crate::scenario::DmaModel;
+        let mut set = ScenarioSet::default();
+        let base = set.num_scenarios();
+        set.dma = DmaPolicy::all_models();
+        assert_eq!(set.num_scenarios(), 3 * base);
+        assert!(set
+            .scenarios()
+            .iter()
+            .any(|s| s.dma.model == DmaModel::Serial));
     }
 
     #[test]

@@ -1,0 +1,1270 @@
+//! The unified cycle-resolved **Timeline IR** — the single source of
+//! truth for *when* things happen during an inference (or a pipelined
+//! batch of them).
+//!
+//! Before this module the repo encoded time five different ways:
+//! `Operation::schedule` op lists, `SweepContext` cycle totals,
+//! `GatingSchedule::plan` per-op sector counts, `EventSim`'s inline
+//! cycle walk, and `TileTracer::replay`'s local clock.  Each consumer
+//! re-derived "when" from scratch and none of them could express what
+//! the related work needs next: DESCNet-style DMA/compute overlap
+//! (arXiv 2010.05754) and CapsAcc-style data reuse across pipelined
+//! inferences (arXiv 1811.08932) both require an explicit interval
+//! timeline.
+//!
+//! A [`Timeline`] is built once per scenario from the arch-independent
+//! schedule data (cycles, off-chip bytes — the fields of
+//! [`crate::analysis::context::SweepContext`]) plus one
+//! [`crate::capstore::arch::CapStoreArch`] and a [`TimelinePolicy`]:
+//!
+//! * **[`OpSlot`]s** — one interval per scheduled operation, batch
+//!   repetitions expanded, tiling the makespan together with the
+//!   [`StallSlot`]s;
+//! * **[`DomainTimeline`]s** — per gating domain (one sector index of
+//!   one macro, the paper's Fig 6), the exact ON / WAKING / SLEEPING /
+//!   OFF [`PowerSegment`] sequence produced by the PMU req/ack
+//!   handshake (Fig 8/9) with ahead-of-time wakeup lookahead;
+//! * **[`TransferSegment`]s** — off-chip DMA transfers placed in time
+//!   by the [`DmaModel`]: `Instant` (the analytical model's historical
+//!   assumption: transfers fully hidden), `Serial` (every fetch/drain
+//!   stalls the array) or `DoubleBuffered` (the DMA engine prefetches
+//!   the next op's inputs during the current op's compute).
+//!
+//! Consumers derive instead of re-deriving: the analytical model's
+//! leakage integration is pinned bit-identical to
+//! [`Timeline::on_fraction`] (same plan, same arithmetic), the event
+//! sim ([`crate::capstore::eventsim`]) is a thin interpreter over the
+//! segments, the CLI `capstore timeline` renders them, the serving
+//! accountant charges pipelined batches from
+//! [`crate::capstore::pmu::GatingSchedule`]'s steady-state wakeups, and
+//! the DSE prices the DMA axis with [`dma_overhead_pj`] — an O(ops)
+//! scan that deliberately does *not* build the full IR, keeping
+//! [`Timeline::build`] off the sweep hot path (guarded by
+//! `benches/timeline_build.rs` via [`Timeline::build_count`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::analysis::context::SweepContext;
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::capsnet::OpKind;
+use crate::capstore::arch::CapStoreArch;
+use crate::capstore::pmu::GatingSchedule;
+use crate::memsim::powergate::PowerGateModel;
+
+/// Default PMU wakeup lookahead (cycles before an operation boundary at
+/// which the next op's sectors are woken — the paper's Fig 9 protocol).
+pub const DEFAULT_LOOKAHEAD_CYCLES: u64 = 256;
+
+/// Default DMA bandwidth: 16 B/cycle (16 GB/s at the 1 GHz array clock,
+/// an LPDDR4-class part).
+pub const DEFAULT_DMA_BYTES_PER_CYCLE: u64 = 16;
+
+/// Power-gating policy knobs (the PMU's ahead-of-time wakeup of Fig 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GatingPolicy {
+    /// Cycles before an operation boundary at which the PMU wakes the
+    /// next op's sectors (0 = wake lazily at the boundary).
+    pub lookahead_cycles: u64,
+}
+
+impl Default for GatingPolicy {
+    fn default() -> Self {
+        GatingPolicy { lookahead_cycles: DEFAULT_LOOKAHEAD_CYCLES }
+    }
+}
+
+/// How off-chip transfers relate to compute in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DmaModel {
+    /// Transfers take no timeline room (the analytical model's
+    /// historical assumption; the seed behavior, and the default).
+    Instant,
+    /// Every input fetch and output drain stalls the array.
+    Serial,
+    /// DESCNet-style double buffering: the DMA engine prefetches the
+    /// next op's inputs (and drains the previous op's outputs) during
+    /// the current op's compute; the array only stalls when a fetch
+    /// has not finished by the op boundary.
+    DoubleBuffered,
+}
+
+impl DmaModel {
+    pub fn all() -> [DmaModel; 3] {
+        [DmaModel::Instant, DmaModel::Serial, DmaModel::DoubleBuffered]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DmaModel::Instant => "instant",
+            DmaModel::Serial => "serial",
+            DmaModel::DoubleBuffered => "double-buffered",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DmaModel> {
+        Self::all()
+            .into_iter()
+            .find(|m| m.label().eq_ignore_ascii_case(name))
+    }
+
+    /// The model labels, in [`all`](Self::all) order.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|m| m.label()).collect()
+    }
+}
+
+/// The DMA/compute-overlap knob of a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DmaPolicy {
+    pub model: DmaModel,
+    /// Off-chip bandwidth, bytes per array clock cycle.
+    pub bandwidth_bytes_per_cycle: u64,
+}
+
+impl Default for DmaPolicy {
+    fn default() -> Self {
+        DmaPolicy {
+            model: DmaModel::Instant,
+            bandwidth_bytes_per_cycle: DEFAULT_DMA_BYTES_PER_CYCLE,
+        }
+    }
+}
+
+impl DmaPolicy {
+    /// One policy per [`DmaModel`] at the default bandwidth — the
+    /// standard overlap axis of sweep spaces and scenario sets.
+    pub fn all_models() -> Vec<DmaPolicy> {
+        DmaModel::all()
+            .into_iter()
+            .map(|model| DmaPolicy { model, ..DmaPolicy::default() })
+            .collect()
+    }
+}
+
+/// Everything [`Timeline::build`] needs beyond the schedule + arch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TimelinePolicy {
+    pub gating: GatingPolicy,
+    pub dma: DmaPolicy,
+    /// Pipelined back-to-back inferences sharing the gating state.
+    pub batch: u64,
+}
+
+impl Default for TimelinePolicy {
+    fn default() -> Self {
+        TimelinePolicy {
+            gating: GatingPolicy::default(),
+            dma: DmaPolicy::default(),
+            batch: 1,
+        }
+    }
+}
+
+/// Half-open cycle interval `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Interval {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Interval {
+    pub fn new(start: u64, end: u64) -> Interval {
+        debug_assert!(end >= start, "interval end {end} < start {start}");
+        Interval { start, end }
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// Overlap length with another interval, cycles.
+    pub fn overlap(&self, o: &Interval) -> u64 {
+        self.end.min(o.end).saturating_sub(self.start.max(o.start))
+    }
+}
+
+/// One scheduled operation placed on the timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpSlot {
+    /// Global index in the batched schedule.
+    pub index: usize,
+    /// Which batch element (pipelined inference) this execution belongs to.
+    pub inference: u64,
+    /// Index within the per-inference schedule.
+    pub step: usize,
+    pub kind: OpKind,
+    pub interval: Interval,
+}
+
+/// A DMA wait during which the array is idle.  Together with the
+/// [`OpSlot`]s, stalls tile `[0, total_cycles)` exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StallSlot {
+    pub interval: Interval,
+    /// The op slot whose gating configuration holds during the stall
+    /// (the most recently started op); `None` before the first op, when
+    /// every domain is still in its initial all-ON state.
+    pub holds: Option<usize>,
+}
+
+/// Direction of an off-chip transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferDir {
+    /// DRAM → on-chip (input/weight fetch).
+    In,
+    /// on-chip → DRAM (output drain).
+    Out,
+}
+
+/// One off-chip DMA transfer placed in time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferSegment {
+    /// The op slot this transfer feeds ([`TransferDir::In`]) or drains
+    /// ([`TransferDir::Out`]).
+    pub op_index: usize,
+    pub dir: TransferDir,
+    pub bytes: u64,
+    pub interval: Interval,
+}
+
+/// Power state of one gating domain over one segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PowerState {
+    On,
+    /// wake_req asserted, virtual ground recharging (full leakage, not
+    /// yet usable).
+    Waking,
+    /// sleep_req asserted, discharging (full leakage).
+    Sleeping,
+    /// Gated off; residual leakage through the sleep transistor only.
+    Off,
+}
+
+impl PowerState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PowerState::On => "ON",
+            PowerState::Waking => "WAKING",
+            PowerState::Sleeping => "SLEEPING",
+            PowerState::Off => "OFF",
+        }
+    }
+}
+
+/// One contiguous power-state segment of a gating domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PowerSegment {
+    pub interval: Interval,
+    pub state: PowerState,
+}
+
+/// One gating domain (= one sector index of one macro, Fig 6) and its
+/// exact power-state history.  Segments are non-overlapping, ordered,
+/// and exhaustive over `[0, total_cycles)` (property-tested).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainTimeline {
+    /// Macro index (into [`Timeline::macros`] / `arch.macros`).
+    pub mac: usize,
+    /// Sector index within the macro.
+    pub sector: u64,
+    pub segments: Vec<PowerSegment>,
+    /// Completed OFF→ON transitions.
+    pub wakes: u64,
+    /// Completed ON→OFF transitions.
+    pub sleeps: u64,
+}
+
+/// Per-macro view: static facts plus the planned ON-sector target during
+/// every op slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MacroTimeline {
+    /// Role label (`"Weight"`, `"Shared"`, ...).
+    pub label: &'static str,
+    pub total_sectors: u64,
+    pub sector_bytes: u64,
+    /// Nominal (all-ON) leakage of the whole macro, mW.
+    pub leakage_mw: f64,
+    /// ON-sector target during each op slot (parallel to
+    /// [`Timeline::ops`]).
+    pub on_sectors: Vec<u64>,
+}
+
+/// One row of the per-op utilization-over-time report (the paper's
+/// Fig 4a/4c utilization, resolved on the timeline).
+#[derive(Debug, Clone)]
+pub struct UtilizationRow {
+    pub op_index: usize,
+    pub inference: u64,
+    pub kind: OpKind,
+    pub interval: Interval,
+    /// Per-macro ON sectors (parallel to [`Timeline::macros`]).
+    pub sectors_on: Vec<u64>,
+    /// ON bytes across all macros / total bytes.
+    pub on_fraction: f64,
+}
+
+static BUILD_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// The IR.  Built once per scenario; every consumer derives from it.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub ops: Vec<OpSlot>,
+    pub stalls: Vec<StallSlot>,
+    pub transfers: Vec<TransferSegment>,
+    pub macros: Vec<MacroTimeline>,
+    /// Per-domain power-state segments; empty when the IR was built
+    /// with [`build_analytical`](Self::build_analytical) (the cheap
+    /// no-event variant).
+    pub domains: Vec<DomainTimeline>,
+    /// The application-aware gating plan the segments were derived from.
+    pub plan: GatingSchedule,
+    pub policy: TimelinePolicy,
+    pub gated: bool,
+    pub pg: PowerGateModel,
+    /// Per-inference compute cycles in schedule order (one inference).
+    pub op_cycles: Vec<u64>,
+    /// Per-inference off-chip bytes `(reads, writes)` in schedule order.
+    pub op_offchip: Vec<(u64, u64)>,
+    /// Compute cycles of one inference (bit-for-bit equal to
+    /// `SweepContext::total_cycles`).
+    pub inference_cycles: u64,
+    /// End-to-end makespan including DMA stalls, cycles.
+    pub total_cycles: u64,
+    /// Cycles during which a sector needed by the running op was still
+    /// waking (0 when the lookahead covers the wakeup latency).
+    pub not_ready_cycles: u64,
+    pub clock_hz: f64,
+}
+
+/// The op/stall/transfer placement for a schedule under a DMA policy —
+/// the arch-independent half of a timeline.
+struct Placement {
+    ops: Vec<OpSlot>,
+    stalls: Vec<StallSlot>,
+    transfers: Vec<TransferSegment>,
+    total_cycles: u64,
+}
+
+/// Place the batched schedule in time under `dma`.  Op slots and stalls
+/// tile `[0, total_cycles)`; transfers may overlap ops (that is the
+/// point of double buffering).
+fn place(
+    kinds: &[OpKind],
+    op_cycles: &[u64],
+    op_offchip: &[(u64, u64)],
+    dma: &DmaPolicy,
+    batch: u64,
+) -> Placement {
+    let nsteps = kinds.len();
+    let batch = batch.max(1);
+    let total_ops = nsteps * batch as usize;
+    let bw = dma.bandwidth_bytes_per_cycle.max(1);
+    let xfer = |bytes: u64| -> u64 {
+        if bytes == 0 {
+            0
+        } else {
+            bytes.div_ceil(bw)
+        }
+    };
+
+    let mut ops: Vec<OpSlot> = Vec::with_capacity(total_ops);
+    let mut stalls: Vec<StallSlot> = Vec::new();
+    let mut transfers: Vec<TransferSegment> = Vec::new();
+    let mut t: u64 = 0;
+
+    match dma.model {
+        DmaModel::Instant => {
+            for b in 0..batch {
+                for j in 0..nsteps {
+                    let c = op_cycles[j];
+                    ops.push(OpSlot {
+                        index: ops.len(),
+                        inference: b,
+                        step: j,
+                        kind: kinds[j],
+                        interval: Interval::new(t, t + c),
+                    });
+                    t += c;
+                }
+            }
+        }
+        DmaModel::Serial => {
+            for b in 0..batch {
+                for j in 0..nsteps {
+                    let (rb, wb) = op_offchip[j];
+                    let fetch = xfer(rb);
+                    if fetch > 0 {
+                        let holds = ops.len().checked_sub(1);
+                        transfers.push(TransferSegment {
+                            op_index: ops.len(),
+                            dir: TransferDir::In,
+                            bytes: rb,
+                            interval: Interval::new(t, t + fetch),
+                        });
+                        stalls.push(StallSlot {
+                            interval: Interval::new(t, t + fetch),
+                            holds,
+                        });
+                        t += fetch;
+                    }
+                    let c = op_cycles[j];
+                    let g = ops.len();
+                    ops.push(OpSlot {
+                        index: g,
+                        inference: b,
+                        step: j,
+                        kind: kinds[j],
+                        interval: Interval::new(t, t + c),
+                    });
+                    t += c;
+                    let drain = xfer(wb);
+                    if drain > 0 {
+                        transfers.push(TransferSegment {
+                            op_index: g,
+                            dir: TransferDir::Out,
+                            bytes: wb,
+                            interval: Interval::new(t, t + drain),
+                        });
+                        stalls.push(StallSlot {
+                            interval: Interval::new(t, t + drain),
+                            holds: Some(g),
+                        });
+                        t += drain;
+                    }
+                }
+            }
+        }
+        DmaModel::DoubleBuffered => {
+            let off = |g: usize| op_offchip[g % nsteps];
+            // prefetch the first op's inputs before compute can start
+            let f0 = xfer(off(0).0);
+            if f0 > 0 {
+                transfers.push(TransferSegment {
+                    op_index: 0,
+                    dir: TransferDir::In,
+                    bytes: off(0).0,
+                    interval: Interval::new(0, f0),
+                });
+            }
+            // `ready`: when the current op's inputs are fully on-chip;
+            // `engine_free`: when the single DMA engine finishes its
+            // queued work (FIFO: fetch g+1, then drain g).
+            let mut ready = f0;
+            let mut engine_free = f0;
+            for g in 0..total_ops {
+                let start = t.max(ready);
+                if start > t {
+                    stalls.push(StallSlot {
+                        interval: Interval::new(t, start),
+                        holds: g.checked_sub(1),
+                    });
+                }
+                let b = (g / nsteps) as u64;
+                let j = g % nsteps;
+                let c = op_cycles[j];
+                ops.push(OpSlot {
+                    index: g,
+                    inference: b,
+                    step: j,
+                    kind: kinds[j],
+                    interval: Interval::new(start, start + c),
+                });
+                t = start + c;
+                if g + 1 < total_ops {
+                    let (rb1, _) = off(g + 1);
+                    let f = xfer(rb1);
+                    if f > 0 {
+                        // the engine may prefetch while op g computes
+                        let s = engine_free.max(start);
+                        transfers.push(TransferSegment {
+                            op_index: g + 1,
+                            dir: TransferDir::In,
+                            bytes: rb1,
+                            interval: Interval::new(s, s + f),
+                        });
+                        engine_free = s + f;
+                        ready = engine_free;
+                    } else {
+                        ready = 0;
+                    }
+                }
+                let (_, wb) = off(g);
+                let d = xfer(wb);
+                if d > 0 {
+                    // outputs exist only once op g's compute has ended
+                    let s = engine_free.max(t);
+                    transfers.push(TransferSegment {
+                        op_index: g,
+                        dir: TransferDir::Out,
+                        bytes: wb,
+                        interval: Interval::new(s, s + d),
+                    });
+                    engine_free = s + d;
+                }
+            }
+            // trailing drain extends the makespan past the last compute
+            if engine_free > t {
+                stalls.push(StallSlot {
+                    interval: Interval::new(t, engine_free),
+                    holds: total_ops.checked_sub(1),
+                });
+                t = engine_free;
+            }
+        }
+    }
+
+    Placement { ops, stalls, transfers, total_cycles: t }
+}
+
+/// Walk one domain's PMU FSM over the placed ops and emit its exact
+/// power-state segments.  Requests happen at op boundaries (sleep every
+/// sector the op does not need; wake every sector it does) and, with
+/// lookahead, at the pre-wake instant inside the previous op; a request
+/// while a transition is in flight is a no-op (the Fig 9 protocol
+/// forbids overlapping transitions).
+fn walk_domain(
+    mac: usize,
+    sector: u64,
+    on_sectors: &[u64],
+    requests: &[(u64, Req)],
+    pg: &PowerGateModel,
+    total: u64,
+) -> DomainTimeline {
+    let target = |g: usize| sector < on_sectors[g];
+
+    let mut segments: Vec<PowerSegment> = Vec::new();
+    let mut state = PowerState::On;
+    let mut seg_start = 0u64;
+    // (completes_at, settled_state) of the in-flight transition
+    let mut pending: Option<(u64, PowerState)> = None;
+    let mut wakes = 0u64;
+    let mut sleeps = 0u64;
+
+    let close =
+        |segs: &mut Vec<PowerSegment>, start: u64, end: u64, st: PowerState| {
+            if end > start {
+                segs.push(PowerSegment {
+                    interval: Interval::new(start, end),
+                    state: st,
+                });
+            }
+        };
+
+    for &(t, req) in requests {
+        if let Some((tc, settled)) = pending {
+            if tc <= t {
+                close(&mut segments, seg_start, tc, state);
+                match settled {
+                    PowerState::On => wakes += 1,
+                    PowerState::Off => sleeps += 1,
+                    _ => unreachable!("transitions settle to ON or OFF"),
+                }
+                state = settled;
+                seg_start = tc;
+                pending = None;
+            }
+        }
+        let (want_on, boundary) = match req {
+            Req::Boundary(g) => (target(g), true),
+            Req::Prewake(g) => (target(g), false),
+        };
+        if want_on && state == PowerState::Off {
+            close(&mut segments, seg_start, t, state);
+            state = PowerState::Waking;
+            seg_start = t;
+            pending = Some((t + pg.wakeup_cycles, PowerState::On));
+        } else if boundary && !want_on && state == PowerState::On {
+            close(&mut segments, seg_start, t, state);
+            state = PowerState::Sleeping;
+            seg_start = t;
+            pending = Some((t + pg.sleep_cycles, PowerState::Off));
+        }
+    }
+    if let Some((tc, settled)) = pending {
+        if tc <= total {
+            close(&mut segments, seg_start, tc, state);
+            match settled {
+                PowerState::On => wakes += 1,
+                PowerState::Off => sleeps += 1,
+                _ => unreachable!(),
+            }
+            state = settled;
+            seg_start = tc;
+        }
+        // else: the transition is clamped at the timeline edge — the
+        // domain stays in its transitioning state and nothing completes
+    }
+    close(&mut segments, seg_start, total, state);
+
+    DomainTimeline { mac, sector, segments, wakes, sleeps }
+}
+
+/// PMU request instants shared by every domain.
+#[derive(Debug, Clone, Copy)]
+enum Req {
+    /// Op `g` starts: apply its target configuration.
+    Boundary(usize),
+    /// Lookahead pre-wake for op `g`'s targets.
+    Prewake(usize),
+}
+
+impl Timeline {
+    /// Build the IR from the shared per-network context plus one
+    /// architecture and policy.  This is the once-per-scenario entry
+    /// point — the DSE sweep must *not* call it per design point
+    /// ([`dma_overhead_pj`] is the hot-path alternative;
+    /// `benches/timeline_build.rs --check` enforces the split via
+    /// [`build_count`](Self::build_count)).
+    pub fn build(
+        ctx: &SweepContext,
+        arch: &CapStoreArch,
+        req: &RequirementsAnalysis,
+        policy: &TimelinePolicy,
+    ) -> Timeline {
+        let plan = GatingSchedule::plan_for(arch, req, &ctx.op_kinds);
+        Self::build_with_plan(
+            &ctx.op_kinds,
+            &ctx.op_cycles,
+            &ctx.op_offchip,
+            ctx.clock_hz,
+            arch,
+            plan,
+            policy,
+        )
+    }
+
+    /// [`build`](Self::build) without materializing the per-domain
+    /// power-state segments — the cheap variant for analytical-only
+    /// consumers (large `ScenarioSet` sweeps, the serving accountant)
+    /// that read op intervals, stalls, the plan, and the batch/stall
+    /// closed forms but never replay the event level.  `domains` is
+    /// empty, so [`static_pj`](Self::static_pj) /
+    /// [`wakeup_pj`](Self::wakeup_pj) / [`transitions`](Self::transitions)
+    /// report 0; `Evaluator::evaluate` always builds the full IR.
+    pub fn build_analytical(
+        ctx: &SweepContext,
+        arch: &CapStoreArch,
+        req: &RequirementsAnalysis,
+        policy: &TimelinePolicy,
+    ) -> Timeline {
+        let plan = GatingSchedule::plan_for(arch, req, &ctx.op_kinds);
+        Self::build_inner(
+            &ctx.op_kinds,
+            &ctx.op_cycles,
+            &ctx.op_offchip,
+            ctx.clock_hz,
+            arch,
+            plan,
+            policy,
+            false,
+        )
+    }
+
+    /// [`build`](Self::build) against a precomputed gating plan and raw
+    /// schedule slices (the event sim's entry, which has no
+    /// `SweepContext` at hand).
+    pub fn build_with_plan(
+        kinds: &[OpKind],
+        op_cycles: &[u64],
+        op_offchip: &[(u64, u64)],
+        clock_hz: f64,
+        arch: &CapStoreArch,
+        plan: GatingSchedule,
+        policy: &TimelinePolicy,
+    ) -> Timeline {
+        Self::build_inner(
+            kinds, op_cycles, op_offchip, clock_hz, arch, plan, policy,
+            true,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_inner(
+        kinds: &[OpKind],
+        op_cycles: &[u64],
+        op_offchip: &[(u64, u64)],
+        clock_hz: f64,
+        arch: &CapStoreArch,
+        plan: GatingSchedule,
+        policy: &TimelinePolicy,
+        materialize_domains: bool,
+    ) -> Timeline {
+        BUILD_COUNT.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(kinds.len(), op_cycles.len());
+        assert_eq!(kinds.len(), op_offchip.len());
+        assert_eq!(kinds.len(), plan.steps.len());
+
+        let p = place(kinds, op_cycles, op_offchip, &policy.dma, policy.batch);
+        let gated = arch.organization.gated();
+
+        let macros: Vec<MacroTimeline> = arch
+            .macros
+            .iter()
+            .enumerate()
+            .map(|(i, m)| MacroTimeline {
+                label: m.role.label(),
+                total_sectors: m.sram.sectors,
+                sector_bytes: m.sram.size_bytes / m.sram.sectors,
+                leakage_mw: m.costs.leakage_mw,
+                on_sectors: p
+                    .ops
+                    .iter()
+                    .map(|o| plan.steps[o.step].1[i])
+                    .collect(),
+            })
+            .collect();
+
+        // PMU request instants, shared by every domain: one boundary per
+        // op start plus (with lookahead) one pre-wake inside each op for
+        // the next op's targets.  Monotone by construction:
+        // start_g < prewake_g < start_{g+1}.
+        let lookahead = policy.gating.lookahead_cycles;
+        let window = arch
+            .pg_model
+            .wakeup_cycles
+            .max(arch.pg_model.sleep_cycles);
+        let mut requests: Vec<(u64, Req)> =
+            Vec::with_capacity(2 * p.ops.len());
+        for (g, op) in p.ops.iter().enumerate() {
+            requests.push((op.interval.start, Req::Boundary(g)));
+            if g + 1 < p.ops.len() {
+                let cycles = op.interval.cycles();
+                let tail = lookahead.min(cycles - window.min(cycles));
+                if tail > 0 {
+                    requests
+                        .push((op.interval.end - tail, Req::Prewake(g + 1)));
+                }
+            }
+        }
+
+        let mut domains: Vec<DomainTimeline> = Vec::new();
+        if materialize_domains {
+            domains.reserve(
+                macros.iter().map(|m| m.total_sectors as usize).sum(),
+            );
+            for (mi, m) in macros.iter().enumerate() {
+                for sector in 0..m.total_sectors {
+                    domains.push(walk_domain(
+                        mi,
+                        sector,
+                        &m.on_sectors,
+                        &requests,
+                        &arch.pg_model,
+                        p.total_cycles,
+                    ));
+                }
+            }
+        }
+
+        // stall pressure: overlap of WAKING segments with ops that need
+        // the still-waking domain
+        let mut not_ready = 0u64;
+        for d in &domains {
+            let on = &macros[d.mac].on_sectors;
+            for seg in &d.segments {
+                if seg.state != PowerState::Waking {
+                    continue;
+                }
+                let first = p
+                    .ops
+                    .partition_point(|o| o.interval.end <= seg.interval.start);
+                for op in &p.ops[first..] {
+                    if op.interval.start >= seg.interval.end {
+                        break;
+                    }
+                    if d.sector < on[op.index] {
+                        not_ready += seg.interval.overlap(&op.interval);
+                    }
+                }
+            }
+        }
+
+        let inference_cycles: u64 = op_cycles.iter().sum();
+        Timeline {
+            ops: p.ops,
+            stalls: p.stalls,
+            transfers: p.transfers,
+            macros,
+            domains,
+            plan,
+            policy: *policy,
+            gated,
+            pg: arch.pg_model.clone(),
+            op_cycles: op_cycles.to_vec(),
+            op_offchip: op_offchip.to_vec(),
+            inference_cycles,
+            total_cycles: p.total_cycles,
+            not_ready_cycles: not_ready,
+            clock_hz,
+        }
+    }
+
+    /// How many timelines have been built process-wide — the
+    /// `timeline_build` bench uses this to prove the DSE hot path never
+    /// constructs the IR.
+    pub fn build_count() -> u64 {
+        BUILD_COUNT.load(Ordering::Relaxed)
+    }
+
+    fn pj_per_cycle_per_mw(&self) -> f64 {
+        1.0e-3 / self.clock_hz * 1.0e12
+    }
+
+    /// Makespan in seconds at the array clock.
+    pub fn latency_secs(&self) -> f64 {
+        self.total_cycles as f64 / self.clock_hz
+    }
+
+    /// Total DMA stall cycles (0 under [`DmaModel::Instant`]).
+    pub fn stall_cycles(&self) -> u64 {
+        self.stalls.iter().map(|s| s.interval.cycles()).sum()
+    }
+
+    /// Leakage energy integrated in closed form over the power-state
+    /// segments, pJ: ON/WAKING/SLEEPING at full leakage, OFF at the
+    /// sleep transistor's residual fraction.  The event sim
+    /// ([`crate::capstore::eventsim::EventSim::replay`]) reproduces this
+    /// exactly — it interprets the same segments.
+    pub fn static_pj(&self) -> f64 {
+        let k = self.pj_per_cycle_per_mw();
+        let mut pj = 0.0;
+        for d in &self.domains {
+            let m = &self.macros[d.mac];
+            let leak = m.leakage_mw / m.total_sectors as f64;
+            for seg in &d.segments {
+                let mw = match seg.state {
+                    PowerState::Off => {
+                        leak * self.pg.off_leakage_fraction
+                    }
+                    _ => leak,
+                };
+                pj += mw * seg.interval.cycles() as f64 * k;
+            }
+        }
+        pj
+    }
+
+    /// Wakeup energy of every completed OFF→ON transition, pJ.
+    pub fn wakeup_pj(&self) -> f64 {
+        self.domains
+            .iter()
+            .map(|d| {
+                d.wakes as f64
+                    * self
+                        .pg
+                        .wakeup_energy_pj(self.macros[d.mac].sector_bytes)
+            })
+            .sum()
+    }
+
+    /// Completed transitions (sleeps + wakes) across all domains.
+    pub fn transitions(&self) -> u64 {
+        self.domains.iter().map(|d| d.wakes + d.sleeps).sum()
+    }
+
+    /// Cycle-weighted ON fraction of macro `mac` over one inference —
+    /// delegates to the plan, so it is bit-identical to the analytical
+    /// model's `GatingSchedule::on_fraction` path by construction.
+    pub fn on_fraction(&self, mac: usize) -> f64 {
+        self.plan.on_fraction(mac, &self.op_cycles)
+    }
+
+    /// Extra leakage accumulated during DMA stalls, pJ, charged at the
+    /// gating configuration each stall holds (the analytical companion
+    /// of [`static_pj`](Self::static_pj) for the stall slots only).
+    pub fn stall_static_pj(&self) -> f64 {
+        let k = self.pj_per_cycle_per_mw();
+        let mut pj = 0.0;
+        for st in &self.stalls {
+            let cy = st.interval.cycles() as f64;
+            for m in &self.macros {
+                let eff_mw = if !self.gated {
+                    m.leakage_mw
+                } else {
+                    let on_f = match st.holds {
+                        Some(g) => {
+                            m.on_sectors[g] as f64
+                                / m.total_sectors.max(1) as f64
+                        }
+                        None => 1.0,
+                    };
+                    m.leakage_mw
+                        * (on_f
+                            + (1.0 - on_f) * self.pg.off_leakage_fraction)
+                };
+                pj += eff_mw * cy * k;
+            }
+        }
+        pj
+    }
+
+    /// Contiguous runs of constant ON-sector count for macro `mac`
+    /// (planner-level gating segments; transitions excluded) — what
+    /// `capstore timeline` renders.
+    pub fn macro_segments(&self, mac: usize) -> Vec<(Interval, u64)> {
+        let m = &self.macros[mac];
+        let mut out: Vec<(Interval, u64)> = Vec::new();
+        for op in &self.ops {
+            let on = m.on_sectors[op.index];
+            match out.last_mut() {
+                Some((iv, last_on))
+                    if *last_on == on && iv.end == op.interval.start =>
+                {
+                    iv.end = op.interval.end;
+                }
+                _ => out.push((op.interval, on)),
+            }
+        }
+        out
+    }
+
+    /// The per-op utilization-over-time report.
+    pub fn utilization(&self) -> Vec<UtilizationRow> {
+        let total_bytes: u64 = self
+            .macros
+            .iter()
+            .map(|m| m.total_sectors * m.sector_bytes)
+            .sum();
+        self.ops
+            .iter()
+            .map(|op| {
+                let sectors_on: Vec<u64> = self
+                    .macros
+                    .iter()
+                    .map(|m| m.on_sectors[op.index])
+                    .collect();
+                let on_bytes: u64 = self
+                    .macros
+                    .iter()
+                    .zip(&sectors_on)
+                    .map(|(m, &on)| on * m.sector_bytes)
+                    .sum();
+                UtilizationRow {
+                    op_index: op.index,
+                    inference: op.inference,
+                    kind: op.kind,
+                    interval: op.interval,
+                    sectors_on,
+                    on_fraction: on_bytes as f64
+                        / total_bytes.max(1) as f64,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Fold a design point's stall leakage onto its base on-chip energy.
+/// The `stall == 0` branch passes the base through untouched, keeping
+/// hidden-transfer points bit-identical to the pre-DMA-axis numbers —
+/// the one definition all pinned facade/sweep/baseline equality tests
+/// share.
+pub fn priced_onchip_pj(base_pj: f64, stall_pj: f64) -> f64 {
+    if stall_pj > 0.0 {
+        base_pj + stall_pj
+    } else {
+        base_pj
+    }
+}
+
+/// Price one design point's DMA coordinate: `(stall leakage pJ to add
+/// to the on-chip energy, stall-extended inference latency in cycles)`.
+/// Hidden transfers short-circuit to `(0.0, Σ op_cycles)` without
+/// planning anything.  This is the ONE definition shared by the sweep
+/// engine (`dse::sweep::evaluate_point`), the baseline oracle
+/// (`Explorer::sweep_baseline`) and the facade
+/// (`scenario::Evaluator`) — their pinned bit-equality rests on it.
+pub fn price_design_point(
+    kinds: &[OpKind],
+    op_cycles: &[u64],
+    op_offchip: &[(u64, u64)],
+    clock_hz: f64,
+    arch: &CapStoreArch,
+    req: &RequirementsAnalysis,
+    dma: &DmaPolicy,
+) -> (f64, u64) {
+    if dma.model == DmaModel::Instant {
+        return (0.0, op_cycles.iter().sum());
+    }
+    let plan = GatingSchedule::plan_for(arch, req, kinds);
+    dma_overhead_pj(kinds, op_cycles, op_offchip, clock_hz, arch, &plan, dma)
+}
+
+/// DMA stall overhead of ONE inference for the DSE hot path: extra
+/// leakage (pJ) charged at the held gating configurations plus the
+/// stall-extended latency (cycles).  O(ops × macros) integer/float scan
+/// — deliberately does **not** build a [`Timeline`].
+pub fn dma_overhead_pj(
+    kinds: &[OpKind],
+    op_cycles: &[u64],
+    op_offchip: &[(u64, u64)],
+    clock_hz: f64,
+    arch: &CapStoreArch,
+    plan: &GatingSchedule,
+    dma: &DmaPolicy,
+) -> (f64, u64) {
+    let p = place(kinds, op_cycles, op_offchip, dma, 1);
+    if p.stalls.is_empty() {
+        return (0.0, p.total_cycles);
+    }
+    let gated = arch.organization.gated();
+    let off = arch.pg_model.off_leakage_fraction;
+    let k = 1.0e-3 / clock_hz * 1.0e12;
+    let mut pj = 0.0;
+    for st in &p.stalls {
+        let cy = st.interval.cycles() as f64;
+        for (i, m) in arch.macros.iter().enumerate() {
+            let eff_mw = if !gated {
+                m.costs.leakage_mw
+            } else {
+                let on_f = match st.holds {
+                    Some(g) => {
+                        let step = p.ops[g].step;
+                        plan.steps[step].1[i] as f64
+                            / plan.total_sectors[i].max(1) as f64
+                    }
+                    None => 1.0,
+                };
+                m.costs.leakage_mw * (on_f + (1.0 - on_f) * off)
+            };
+            pj += eff_mw * cy * k;
+        }
+    }
+    (pj, p.total_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::systolic::ArrayConfig;
+    use crate::analysis::breakdown::EnergyModel;
+    use crate::capsnet::CapsNetConfig;
+    use crate::capstore::arch::Organization;
+    use crate::memsim::cacti::Technology;
+
+    fn setup(
+        org: Organization,
+    ) -> (EnergyModel, SweepContext, CapStoreArch) {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let arch = CapStoreArch::build_default(
+            org,
+            &RequirementsAnalysis::analyze(
+                &CapsNetConfig::mnist(),
+                &ArrayConfig::default(),
+            ),
+            &Technology::default(),
+        )
+        .unwrap();
+        (model, ctx, arch)
+    }
+
+    fn build(org: Organization, policy: &TimelinePolicy) -> Timeline {
+        let (model, ctx, arch) = setup(org);
+        Timeline::build(&ctx, &arch, &model.req, policy)
+    }
+
+    #[test]
+    fn default_timeline_matches_context_totals() {
+        let (model, ctx, arch) = setup(Organization::Sep { gated: true });
+        let tl = Timeline::build(
+            &ctx,
+            &arch,
+            &model.req,
+            &TimelinePolicy::default(),
+        );
+        // bit-for-bit totals: the IR introduces no new cycle accounting
+        assert_eq!(tl.total_cycles, ctx.total_cycles);
+        assert_eq!(tl.inference_cycles, ctx.total_cycles);
+        assert_eq!(tl.ops.len(), ctx.num_ops());
+        assert!(tl.stalls.is_empty());
+        assert!(tl.transfers.is_empty());
+        for (op, &cy) in tl.ops.iter().zip(&ctx.op_cycles) {
+            assert_eq!(op.interval.cycles(), cy);
+        }
+    }
+
+    #[test]
+    fn ops_and_stalls_tile_the_makespan() {
+        for dma in DmaModel::all() {
+            for batch in [1, 3] {
+                let tl = build(
+                    Organization::Sep { gated: true },
+                    &TimelinePolicy {
+                        dma: DmaPolicy {
+                            model: dma,
+                            ..DmaPolicy::default()
+                        },
+                        batch,
+                        ..TimelinePolicy::default()
+                    },
+                );
+                let mut pieces: Vec<Interval> = tl
+                    .ops
+                    .iter()
+                    .map(|o| o.interval)
+                    .chain(tl.stalls.iter().map(|s| s.interval))
+                    .collect();
+                pieces.sort_by_key(|iv| iv.start);
+                let mut cursor = 0;
+                for iv in &pieces {
+                    assert_eq!(
+                        iv.start, cursor,
+                        "{dma:?} b{batch}: gap/overlap at {cursor}"
+                    );
+                    cursor = iv.end;
+                }
+                assert_eq!(cursor, tl.total_cycles, "{dma:?} b{batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn on_fraction_is_bit_identical_to_the_plan() {
+        let (model, ctx, arch) = setup(Organization::Sep { gated: true });
+        let tl = Timeline::build(
+            &ctx,
+            &arch,
+            &model.req,
+            &TimelinePolicy::default(),
+        );
+        let plan =
+            GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+        for mac in 0..arch.macros.len() {
+            assert_eq!(
+                tl.on_fraction(mac).to_bits(),
+                plan.on_fraction(mac, &ctx.op_cycles).to_bits(),
+                "macro {mac}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_ordering_across_dma_models() {
+        let latency = |m: DmaModel| {
+            build(
+                Organization::Sep { gated: true },
+                &TimelinePolicy {
+                    dma: DmaPolicy { model: m, ..DmaPolicy::default() },
+                    ..TimelinePolicy::default()
+                },
+            )
+            .total_cycles
+        };
+        let instant = latency(DmaModel::Instant);
+        let double = latency(DmaModel::DoubleBuffered);
+        let serial = latency(DmaModel::Serial);
+        assert!(instant < double, "{instant} !< {double}");
+        assert!(double < serial, "{double} !< {serial}");
+    }
+
+    #[test]
+    fn pipelined_batch_wakes_less_than_batch_times_single() {
+        let one = build(
+            Organization::Sep { gated: true },
+            &TimelinePolicy::default(),
+        );
+        let four = build(
+            Organization::Sep { gated: true },
+            &TimelinePolicy { batch: 4, ..TimelinePolicy::default() },
+        );
+        assert_eq!(four.total_cycles, 4 * one.total_cycles);
+        assert!(four.transitions() > one.transitions());
+        // the event level never exceeds the plan's pipelined accounting:
+        // one cold power-on + (b-1) steady-state inter-inference passes.
+        // (it CAN exceed 4x the single-run event wakeups — a lone run
+        // never pays the op-0 power-on because domains start ON, while
+        // each inter-inference boundary re-wakes op-0 sectors.)
+        let bound = four.plan.wakeup_energy_pj(&four.pg)
+            + 3.0 * four.plan.wakeup_energy_steady_pj(&four.pg);
+        assert!(
+            four.wakeup_pj() <= bound * (1.0 + 1e-9),
+            "{} > {bound}",
+            four.wakeup_pj()
+        );
+        assert!(
+            one.wakeup_pj()
+                <= one.plan.wakeup_energy_pj(&one.pg) * (1.0 + 1e-9)
+        );
+    }
+
+    #[test]
+    fn dma_overhead_matches_full_timeline() {
+        let (model, ctx, arch) = setup(Organization::Sep { gated: true });
+        let plan =
+            GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+        for dma_model in DmaModel::all() {
+            let dma =
+                DmaPolicy { model: dma_model, ..DmaPolicy::default() };
+            let (pj, cycles) = dma_overhead_pj(
+                &ctx.op_kinds,
+                &ctx.op_cycles,
+                &ctx.op_offchip,
+                ctx.clock_hz,
+                &arch,
+                &plan,
+                &dma,
+            );
+            let tl = Timeline::build(
+                &ctx,
+                &arch,
+                &model.req,
+                &TimelinePolicy {
+                    dma,
+                    ..TimelinePolicy::default()
+                },
+            );
+            assert_eq!(cycles, tl.total_cycles, "{dma_model:?}");
+            assert_eq!(
+                pj.to_bits(),
+                tl.stall_static_pj().to_bits(),
+                "{dma_model:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn build_count_increments() {
+        let before = Timeline::build_count();
+        let _ = build(
+            Organization::Smp { gated: false },
+            &TimelinePolicy::default(),
+        );
+        assert!(Timeline::build_count() > before);
+    }
+
+    #[test]
+    fn macro_segments_cover_ops_and_match_targets() {
+        let tl = build(
+            Organization::Sep { gated: true },
+            &TimelinePolicy::default(),
+        );
+        for mac in 0..tl.macros.len() {
+            let segs = tl.macro_segments(mac);
+            let covered: u64 =
+                segs.iter().map(|(iv, _)| iv.cycles()).sum();
+            assert_eq!(covered, tl.inference_cycles);
+            for (iv, on) in &segs {
+                assert!(*on <= tl.macros[mac].total_sectors);
+                assert!(iv.cycles() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_rows_are_bounded() {
+        let tl = build(
+            Organization::Sep { gated: true },
+            &TimelinePolicy::default(),
+        );
+        let rows = tl.utilization();
+        assert_eq!(rows.len(), tl.ops.len());
+        let mut seen_partial = false;
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.on_fraction));
+            if r.on_fraction < 1.0 {
+                seen_partial = true;
+            }
+        }
+        assert!(seen_partial, "PG-SEP must gate something");
+    }
+}

@@ -12,6 +12,7 @@ use capstore::capstore::arch::Organization;
 use capstore::dse::{pareto, DesignPoint, Explorer, MultiSweep, SweepSpace};
 use capstore::memsim::cacti::Technology;
 use capstore::testing::{check, Config};
+use capstore::timeline::DmaPolicy;
 
 fn assert_bit_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");
@@ -31,6 +32,9 @@ fn parallel_sweep_bit_identical_to_serial_and_baseline() {
             banks: vec![2, 8, 16, 32],
             sectors: vec![4, 16, 64, 128],
             organizations: Organization::all().to_vec(),
+            // cross the DMA axis too: identity must hold for the stall
+            // pricing path, not just the hidden-transfer default
+            dma: DmaPolicy::all_models(),
         };
         let baseline = ex.sweep_baseline().unwrap();
         let serial = ex.sweep_serial().unwrap();
@@ -73,6 +77,7 @@ fn grand_sweep_covers_models_and_nodes() {
             banks: vec![8, 16],
             sectors: vec![16, 64],
             organizations: Organization::all().to_vec(),
+            dma: vec![DmaPolicy::default()],
         },
         ..MultiSweep::default()
     };
@@ -112,9 +117,11 @@ fn prop_fast_pareto_matches_naive_on_random_sets() {
             organization: Organization::Hy { gated: true },
             banks: 8,
             sectors: 32,
+            dma: DmaPolicy::default(),
             onchip_energy_pj: e,
             area_mm2: a,
             capacity_bytes: 1,
+            latency_cycles: 1,
         }
     }
     check(Config::default().cases(80), |rng| {

@@ -11,7 +11,8 @@ use capstore::capstore::arch::{CapStoreArch, Organization};
 use capstore::capstore::eventsim::EventSim;
 use capstore::dse::{Explorer, MultiSweep};
 use capstore::scenario::{
-    Evaluator, Scenario, ScenarioSet, TechNode, DEFAULT_LOOKAHEAD_CYCLES,
+    DmaModel, Evaluator, GatingPolicy, Scenario, ScenarioSet, TechNode,
+    DEFAULT_LOOKAHEAD_CYCLES,
 };
 use capstore::testing::{check, Config};
 
@@ -42,7 +43,9 @@ fn evaluator_bit_identical_to_legacy_path_everywhere() {
                 let legacy_sys = model.system_energy(&arch);
                 let legacy_event =
                     EventSim::new(&arch, &model.req, &model.cfg, &model.sim)
-                        .run(DEFAULT_LOOKAHEAD_CYCLES)
+                        .run(&GatingPolicy {
+                            lookahead_cycles: DEFAULT_LOOKAHEAD_CYCLES,
+                        })
                         .unwrap();
 
                 // facade path
@@ -195,6 +198,8 @@ fn prop_scenario_toml_roundtrip() {
             .sectors(*rng.pick(&[1u64, 2, 8, 16, 64, 256]))
             .batch(rng.range(1, 64))
             .lookahead(rng.range(0, 1024))
+            .dma_model(*rng.pick(&DmaModel::all()))
+            .dma_bandwidth(rng.range(1, 128))
             .build()
             .unwrap();
         let text = sc.to_toml();

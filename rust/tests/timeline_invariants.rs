@@ -1,0 +1,259 @@
+//! Invariant suite for the cycle-resolved Timeline IR:
+//!
+//! 1. per-domain power-state segments are **non-overlapping and
+//!    exhaustive** over `[0, total_cycles)`;
+//! 2. op intervals (plus DMA stalls) **tile** the makespan, and with
+//!    transfers hidden the totals equal `SweepContext::total_cycles`
+//!    bit for bit;
+//! 3. the timeline's cycle-weighted ON fraction is **bit-identical** to
+//!    the gating plan's (the analytical model's static-energy input);
+//! 4. batch / DMA-overlap knobs order energy and latency monotonically
+//!    (the pinned smoke values of the refactor).
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::capstore::pmu::GatingSchedule;
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::testing::{check, Config};
+use capstore::timeline::{
+    DmaModel, DmaPolicy, GatingPolicy, PowerState, Timeline, TimelinePolicy,
+};
+
+fn assert_segments_tile(tl: &Timeline, tag: &str) {
+    // domain count: one per (macro, sector)
+    let expect: u64 = tl.macros.iter().map(|m| m.total_sectors).sum();
+    assert_eq!(tl.domains.len() as u64, expect, "{tag}: domain count");
+
+    for d in &tl.domains {
+        let mut cursor = 0u64;
+        for seg in &d.segments {
+            assert_eq!(
+                seg.interval.start, cursor,
+                "{tag}: gap/overlap in domain ({}, {})",
+                d.mac, d.sector
+            );
+            assert!(
+                seg.interval.end > seg.interval.start,
+                "{tag}: empty segment"
+            );
+            cursor = seg.interval.end;
+        }
+        assert_eq!(
+            cursor, tl.total_cycles,
+            "{tag}: domain ({}, {}) not exhaustive",
+            d.mac, d.sector
+        );
+    }
+
+    // ops + stalls tile the makespan
+    let mut pieces: Vec<(u64, u64)> = tl
+        .ops
+        .iter()
+        .map(|o| (o.interval.start, o.interval.end))
+        .chain(tl.stalls.iter().map(|s| (s.interval.start, s.interval.end)))
+        .collect();
+    pieces.sort_unstable();
+    let mut cursor = 0u64;
+    for (s, e) in pieces {
+        assert_eq!(s, cursor, "{tag}: op/stall tiling broken at {cursor}");
+        cursor = e;
+    }
+    assert_eq!(cursor, tl.total_cycles, "{tag}: makespan not covered");
+}
+
+#[test]
+fn prop_segments_nonoverlapping_exhaustive_across_the_space() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let ctx = model.context();
+    check(Config::default().cases(24), |rng| {
+        let org = *rng.pick(&Organization::all());
+        let banks = *rng.pick(&[4u64, 8, 16]);
+        let sectors = *rng.pick(&[2u64, 8, 64, 128]);
+        let arch = CapStoreArch::build(
+            org,
+            &model.req,
+            &model.tech,
+            banks,
+            sectors,
+        )
+        .unwrap();
+        let policy = TimelinePolicy {
+            gating: GatingPolicy {
+                lookahead_cycles: rng.range(0, 512),
+            },
+            dma: DmaPolicy {
+                model: *rng.pick(&DmaModel::all()),
+                bandwidth_bytes_per_cycle: rng.range(1, 64),
+            },
+            batch: rng.range(1, 4),
+        };
+        let tl = Timeline::build(&ctx, &arch, &model.req, &policy);
+        let tag = format!("{} b{banks} s{sectors} {policy:?}", org.label());
+        assert_segments_tile(&tl, &tag);
+
+        // ungated timelines never leave the ON state
+        if !org.gated() {
+            for d in &tl.domains {
+                assert_eq!(d.segments.len(), 1, "{tag}");
+                assert_eq!(d.segments[0].state, PowerState::On, "{tag}");
+            }
+            assert_eq!(tl.transitions(), 0, "{tag}");
+        }
+    });
+}
+
+#[test]
+fn hidden_transfer_totals_match_sweep_context_bit_for_bit() {
+    for cfg in CapsNetConfig::all() {
+        let model = EnergyModel::new(cfg.clone());
+        let ctx = model.context();
+        for org in Organization::all() {
+            let arch =
+                CapStoreArch::build_default(org, &model.req, &model.tech)
+                    .unwrap();
+            let tl = Timeline::build(
+                &ctx,
+                &arch,
+                &model.req,
+                &TimelinePolicy::default(),
+            );
+            assert_eq!(tl.total_cycles, ctx.total_cycles);
+            assert_eq!(tl.inference_cycles, ctx.total_cycles);
+            assert_eq!(tl.ops.len(), ctx.num_ops());
+            // every op interval is exactly its context cycle count
+            for (op, &cy) in tl.ops.iter().zip(&ctx.op_cycles) {
+                assert_eq!(op.interval.cycles(), cy, "{}", cfg.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn on_fraction_bit_identical_across_orgs_and_networks() {
+    // the golden bridge between the IR and the analytical model: the
+    // timeline's leakage weighting IS the plan's, bit for bit
+    for cfg in CapsNetConfig::all() {
+        let model = EnergyModel::new(cfg.clone());
+        let ctx = model.context();
+        for org in Organization::all() {
+            let arch =
+                CapStoreArch::build_default(org, &model.req, &model.tech)
+                    .unwrap();
+            let tl = Timeline::build(
+                &ctx,
+                &arch,
+                &model.req,
+                &TimelinePolicy::default(),
+            );
+            let plan =
+                GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+            for mac in 0..arch.macros.len() {
+                assert_eq!(
+                    tl.on_fraction(mac).to_bits(),
+                    plan.on_fraction(mac, &ctx.op_cycles).to_bits(),
+                    "{} {} macro {mac}",
+                    cfg.name,
+                    org.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_design_points_match_sweep_points_on_the_dma_axis() {
+    use capstore::dse::{sweep, SweepSpace};
+    let ev = Evaluator::new();
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let ctx = model.context();
+    let space = SweepSpace {
+        banks: vec![16],
+        sectors: vec![64],
+        organizations: vec![Organization::Sep { gated: true }],
+        dma: DmaPolicy::all_models(),
+    };
+    let cache = sweep::CostCache::new();
+    for spec in sweep::enumerate(&space) {
+        let point =
+            sweep::evaluate_point(&model, &ctx, &cache, &spec).unwrap();
+        let sc = Scenario::builder()
+            .organization(spec.organization)
+            .banks(spec.banks)
+            .sectors(spec.sectors)
+            .dma_model(spec.dma.model)
+            .build()
+            .unwrap();
+        let facade = ev.evaluate_analytical(&sc).unwrap().design_point();
+        assert!(
+            facade.bit_eq(&point),
+            "facade vs sweep diverged:\n {facade:?}\n {point:?}"
+        );
+    }
+}
+
+#[test]
+fn batch_and_overlap_smoke_values_are_monotone() {
+    let ev = Evaluator::new();
+    let base = Scenario::default(); // mnist/32nm/PG-SEP
+    let e1 = ev.evaluate_analytical(&base).unwrap();
+
+    // batch: energy per batch grows, energy per inference shrinks
+    let mut prev_total = e1.batch_pj();
+    let mut prev_per_inf = f64::INFINITY;
+    for b in [2u64, 4, 8, 16] {
+        let e = ev
+            .evaluate_analytical(&Scenario { batch: b, ..base.clone() })
+            .unwrap();
+        let total = e.batch_pj();
+        let per_inf = total / b as f64;
+        assert!(total > prev_total, "batch {b}: {total} !> {prev_total}");
+        assert!(
+            per_inf < prev_per_inf,
+            "batch {b}: per-inf {per_inf} !< {prev_per_inf}"
+        );
+        assert!(
+            per_inf < e1.total_pj(),
+            "batch {b}: pipelining must amortize the cold start"
+        );
+        prev_total = total;
+        prev_per_inf = per_inf;
+    }
+
+    // overlap: hidden < double-buffered < serial on latency, and the
+    // stall energy follows
+    let lat = |m: DmaModel| {
+        ev.evaluate_analytical(
+            &Scenario::builder().dma_model(m).build().unwrap(),
+        )
+        .unwrap()
+        .batch
+        .latency_cycles
+    };
+    let (li, ld, ls) = (
+        lat(DmaModel::Instant),
+        lat(DmaModel::DoubleBuffered),
+        lat(DmaModel::Serial),
+    );
+    assert!(li < ld && ld < ls, "latency order broken: {li} {ld} {ls}");
+    // double buffering must actually hide a meaningful share of the
+    // serial stall (pinned smoke ratio)
+    let hidden = (ls - ld) as f64 / (ls - li) as f64;
+    assert!(hidden > 0.05, "double buffering hides only {hidden:.3}");
+
+    // bandwidth monotonicity: more bytes/cycle, less stall
+    let lat_bw = |bw: u64| {
+        ev.evaluate_analytical(
+            &Scenario::builder()
+                .dma_model(DmaModel::Serial)
+                .dma_bandwidth(bw)
+                .build()
+                .unwrap(),
+        )
+        .unwrap()
+        .batch
+        .latency_cycles
+    };
+    assert!(lat_bw(8) > lat_bw(16));
+    assert!(lat_bw(16) > lat_bw(64));
+}
