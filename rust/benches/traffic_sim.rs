@@ -1,0 +1,110 @@
+//! Bench: the traffic-driven serving simulator — throughput of the
+//! event loop, plus the two contracts CI enforces in `--check` mode:
+//!
+//! * **determinism** — two runs of the same seeded profile produce
+//!   byte-identical `TrafficReport` JSON (no wall clock, no ambient
+//!   randomness anywhere in the loop);
+//! * **hot path** — the simulator builds zero `Timeline` IRs per
+//!   dispatched batch: the per-batch-size energy/latency table is
+//!   precomputed in `ServiceModel::new` and cached (mirroring the
+//!   `timeline_build` bench's guard for the DSE sweep).
+//!
+//! Reports JSON on the last line:
+//!
+//! ```json
+//! {"bench":"traffic_sim","sim_ms":...,"hot_path_timeline_builds":0,...}
+//! ```
+
+use std::time::Duration;
+
+use capstore::bench;
+use capstore::coordinator::BatchPolicy;
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::timeline::Timeline;
+use capstore::traffic::{
+    simulate, ArrivalPattern, ServiceModel, TrafficProfile,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
+
+    // ---- amortized part: the per-batch-size service table ------------
+    let t_model = bench::bench("traffic: ServiceModel::new (8 sizes)", 1, 5, || {
+        std::hint::black_box(
+            ServiceModel::new(&ev, &sc, policy.max_batch)
+                .expect("service model"),
+        );
+    });
+    let svc = ServiceModel::new(&ev, &sc, policy.max_batch).unwrap();
+
+    let profile = TrafficProfile {
+        pattern: ArrivalPattern::Poisson,
+        rate_per_sec: 2000.0,
+        seed: 7,
+        duration_secs: 0.25,
+        slo_ms: 10.0,
+    };
+
+    // ---- contracts ---------------------------------------------------
+    let before = Timeline::build_count();
+    let r1 = simulate(&svc, &profile, &policy);
+    let hot_builds = Timeline::build_count() - before;
+    let r2 = simulate(&svc, &profile, &policy);
+    let j1 = r1.to_json(svc.clock_hz).render();
+    let j2 = r2.to_json(svc.clock_hz).render();
+    let deterministic = j1 == j2;
+
+    // ---- event-loop throughput --------------------------------------
+    let t_sim = bench::bench("traffic: simulate (poisson 2000/s x 0.25s)", 2, 9, || {
+        std::hint::black_box(simulate(&svc, &profile, &policy));
+    });
+
+    println!(
+        "\n[traffic_sim] model {:.3} ms; sim {:.3} ms for {} arrivals \
+         ({} served, {} batches); {hot_builds} timeline builds on the \
+         dispatch path; deterministic={deterministic}",
+        t_model.median, t_sim.median, r1.arrivals, r1.served, r1.batches
+    );
+
+    // machine-readable result (last line)
+    println!(
+        "{{\"bench\":\"traffic_sim\",\"model_ms\":{:.4},\
+         \"sim_ms\":{:.4},\"arrivals\":{},\"served\":{},\
+         \"batches\":{},\"cold_starts\":{},\
+         \"hot_path_timeline_builds\":{hot_builds},\
+         \"deterministic\":{deterministic}}}",
+        t_model.median,
+        t_sim.median,
+        r1.arrivals,
+        r1.served,
+        r1.batches,
+        r1.cold_starts
+    );
+
+    if check {
+        assert_eq!(
+            hot_builds, 0,
+            "check failed: simulate() built {hot_builds} Timelines — \
+             per-dispatch costs must come from the ServiceModel cache"
+        );
+        assert!(
+            deterministic,
+            "check failed: two runs of seed {} diverged:\n{j1}\n{j2}",
+            profile.seed
+        );
+        assert_eq!(r1.arrivals, r1.served + r1.queued, "conservation");
+        println!(
+            "traffic_sim check OK (deterministic, 0 IR builds across \
+             {} dispatched batches)",
+            r1.batches
+        );
+    }
+}

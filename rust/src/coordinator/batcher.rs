@@ -1,8 +1,101 @@
 //! Dynamic batcher: groups queued requests into batches matching the
 //! compiled executable sizes, trading latency (wait for more requests)
 //! against throughput (bigger batches amortize dispatch overhead).
+//!
+//! The batcher is generic over an injectable [`Clock`] so the same
+//! max_batch/max_wait trigger logic runs in two worlds:
+//!
+//! * [`WallClock`] (the default) — real time, nanosecond ticks from a
+//!   monotonic [`Instant`] epoch; the PJRT serving loop's path.
+//! * [`VirtualClock`] — a shared cycle counter the traffic simulator
+//!   (`crate::traffic`) advances explicitly, making the wait-trigger
+//!   path deterministic and unit-testable without sleeps.
+//!
+//! Internally time is an abstract `u64` tick count; only the clock
+//! knows what a tick means.  The wall path behaves exactly as the old
+//! `Instant`-based implementation did (nanosecond resolution, the same
+//! trigger inequalities).
 
+use std::cell::Cell;
+use std::rc::Rc;
 use std::time::{Duration, Instant};
+
+/// Injectable time source for the batcher.
+pub trait Clock {
+    /// Current time in this clock's ticks (monotone, non-decreasing).
+    fn now(&self) -> u64;
+    /// Express a [`Duration`] in ticks of this clock.
+    fn ticks(&self, d: Duration) -> u64;
+    /// Express a tick count as a [`Duration`].
+    fn duration(&self, ticks: u64) -> Duration;
+}
+
+/// Real time: ticks are nanoseconds since the clock's creation.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn ticks(&self, d: Duration) -> u64 {
+        d.as_nanos() as u64
+    }
+
+    fn duration(&self, ticks: u64) -> Duration {
+        Duration::from_nanos(ticks)
+    }
+}
+
+/// Virtual time: ticks are accelerator clock cycles, advanced explicitly
+/// by a driver (the traffic simulator's event loop).  Clones share the
+/// underlying counter, so a batcher and its driver see the same time.
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    cycle: Rc<Cell<u64>>,
+    /// Cycles per second — converts the policy's `max_wait` Duration.
+    hz: f64,
+}
+
+impl VirtualClock {
+    pub fn new(hz: f64) -> Self {
+        assert!(hz > 0.0, "virtual clock needs a positive frequency");
+        VirtualClock { cycle: Rc::new(Cell::new(0)), hz }
+    }
+
+    /// Advance to an absolute cycle.  Never moves backwards: a driver
+    /// replaying an event whose nominal time already passed (e.g. a
+    /// batch deadline that expired while the server was busy) observes
+    /// the current cycle instead.
+    pub fn advance_to(&self, cycle: u64) {
+        if cycle > self.cycle.get() {
+            self.cycle.set(cycle);
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> u64 {
+        self.cycle.get()
+    }
+
+    fn ticks(&self, d: Duration) -> u64 {
+        (d.as_secs_f64() * self.hz).round() as u64
+    }
+
+    fn duration(&self, ticks: u64) -> Duration {
+        Duration::from_secs_f64(ticks as f64 / self.hz)
+    }
+}
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -22,21 +115,44 @@ impl Default for BatchPolicy {
 
 /// Accumulates items into batches under the policy.
 #[derive(Debug)]
-pub struct Batcher<T> {
+pub struct Batcher<T, C: Clock = WallClock> {
     policy: BatchPolicy,
+    /// `policy.max_wait` pre-converted into clock ticks.
+    max_wait_ticks: u64,
     pending: Vec<T>,
-    oldest: Option<Instant>,
+    /// Tick at which the oldest pending item entered the batcher.
+    /// Invariant: `Some` iff `pending` is non-empty — `take` clears it
+    /// unconditionally, so a drained batcher can never leave a stale
+    /// deadline behind for the next batch to inherit.
+    oldest: Option<u64>,
+    clock: C,
 }
 
-impl<T> Batcher<T> {
+impl<T> Batcher<T, WallClock> {
+    /// Wall-clock batcher (the serving loop's default).
     pub fn new(policy: BatchPolicy) -> Self {
-        Batcher { policy, pending: Vec::new(), oldest: None }
+        Self::with_clock(policy, WallClock::default())
+    }
+}
+
+impl<T, C: Clock> Batcher<T, C> {
+    /// Batcher over an explicit clock (virtual time for simulation and
+    /// deterministic tests).
+    pub fn with_clock(policy: BatchPolicy, clock: C) -> Self {
+        let max_wait_ticks = clock.ticks(policy.max_wait);
+        Batcher {
+            policy,
+            max_wait_ticks,
+            pending: Vec::new(),
+            oldest: None,
+            clock,
+        }
     }
 
     /// Add an item; returns a full batch if the size trigger fired.
     pub fn push(&mut self, item: T) -> Option<Vec<T>> {
         if self.pending.is_empty() {
-            self.oldest = Some(Instant::now());
+            self.oldest = Some(self.clock.now());
         }
         self.pending.push(item);
         if self.pending.len() >= self.policy.max_batch {
@@ -49,8 +165,17 @@ impl<T> Batcher<T> {
     /// Returns the pending batch if the wait trigger fired.
     pub fn poll(&mut self) -> Option<Vec<T>> {
         match self.oldest {
-            Some(t) if t.elapsed() >= self.policy.max_wait
-                && !self.pending.is_empty() =>
+            Some(t) if self.pending.is_empty() => {
+                // stale deadline with nothing behind it (cannot arise
+                // through this API, but a future refactor must not turn
+                // it into a phantom batch) — clear rather than hold
+                debug_assert!(t <= self.clock.now());
+                self.oldest = None;
+                None
+            }
+            Some(t)
+                if self.clock.now().saturating_sub(t)
+                    >= self.max_wait_ticks =>
             {
                 self.take()
             }
@@ -60,10 +185,12 @@ impl<T> Batcher<T> {
 
     /// Drain whatever is pending (shutdown path).
     pub fn take(&mut self) -> Option<Vec<T>> {
+        // clear the deadline even when empty: a drained batcher never
+        // leaves a stale `oldest` for a later batch to inherit
+        self.oldest = None;
         if self.pending.is_empty() {
             return None;
         }
-        self.oldest = None;
         Some(std::mem::take(&mut self.pending))
     }
 
@@ -74,8 +201,16 @@ impl<T> Batcher<T> {
     /// Time remaining until the wait trigger would fire.
     pub fn time_to_deadline(&self) -> Option<Duration> {
         self.oldest.map(|t| {
-            self.policy.max_wait.saturating_sub(t.elapsed())
+            let elapsed = self.clock.now().saturating_sub(t);
+            self.clock
+                .duration(self.max_wait_ticks.saturating_sub(elapsed))
         })
+    }
+
+    /// Absolute tick at which the wait trigger fires (`None` while
+    /// empty) — what a discrete-event driver schedules against.
+    pub fn deadline_tick(&self) -> Option<u64> {
+        self.oldest.map(|t| t.saturating_add(self.max_wait_ticks))
     }
 }
 
@@ -88,6 +223,12 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
         }
+    }
+
+    /// A 1 kHz virtual clock: 1 tick = 1 ms, so `policy(_, n)` waits
+    /// exactly `n` ticks.
+    fn vclock() -> VirtualClock {
+        VirtualClock::new(1000.0)
     }
 
     #[test]
@@ -134,5 +275,69 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         let d2 = b.time_to_deadline().unwrap();
         assert!(d2 <= d1);
+    }
+
+    // ---- virtual-clock determinism (no sleeps) -----------------------
+
+    #[test]
+    fn virtual_wait_trigger_is_exact() {
+        let clock = vclock();
+        let mut b = Batcher::with_clock(policy(100, 5), clock.clone());
+        b.push("x");
+        assert_eq!(b.deadline_tick(), Some(5));
+        clock.advance_to(4);
+        assert!(b.poll().is_none(), "one tick early");
+        clock.advance_to(5);
+        assert_eq!(b.poll().unwrap(), vec!["x"]);
+        assert_eq!(b.deadline_tick(), None);
+    }
+
+    #[test]
+    fn virtual_deadline_runs_from_first_push() {
+        let clock = vclock();
+        let mut b = Batcher::with_clock(policy(100, 10), clock.clone());
+        clock.advance_to(3);
+        b.push(1);
+        clock.advance_to(9);
+        b.push(2);
+        // deadline is first-push + wait, not refreshed by later pushes
+        assert_eq!(b.deadline_tick(), Some(13));
+        assert_eq!(
+            b.time_to_deadline().unwrap(),
+            Duration::from_secs_f64(4.0 / 1000.0)
+        );
+        clock.advance_to(13);
+        assert_eq!(b.poll().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn virtual_clock_never_rewinds() {
+        let clock = vclock();
+        clock.advance_to(10);
+        clock.advance_to(4); // replayed past event: no time travel
+        assert_eq!(clock.now(), 10);
+    }
+
+    #[test]
+    fn drained_batcher_never_inherits_stale_deadline() {
+        // Regression (stale-`oldest` edge): a batch held past its
+        // deadline, drained through an empty push/take cycle, must not
+        // leak its expired timestamp into the next batch — the next
+        // push measures its wait from its OWN arrival tick.
+        let clock = vclock();
+        let mut b = Batcher::with_clock(policy(100, 10), clock.clone());
+        b.push("old");
+        clock.advance_to(500); // held far past the 10-tick deadline
+        assert_eq!(b.take().unwrap(), vec!["old"]);
+        // empty cycle: redundant take/poll while drained
+        assert!(b.take().is_none());
+        assert!(b.poll().is_none());
+        assert_eq!(b.deadline_tick(), None, "stale deadline survived");
+
+        b.push("new"); // arrives at t=500
+        assert_eq!(b.deadline_tick(), Some(510));
+        assert!(b.poll().is_none(), "fired on the inherited timestamp");
+        clock.advance_to(510);
+        assert_eq!(b.poll().unwrap(), vec!["new"]);
     }
 }

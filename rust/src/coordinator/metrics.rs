@@ -96,5 +96,8 @@ mod tests {
         let s = r.summary().unwrap();
         assert_eq!(s.n, 2);
         assert!(s.min >= 10.0 && s.max <= 20.1);
+        // the serving reports read the tail percentiles off the same
+        // summary; nearest-rank keeps them ordered and within range
+        assert!(s.median <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
     }
 }

@@ -19,7 +19,7 @@ pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod server;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, Clock, VirtualClock, WallClock};
 pub use energy_account::EnergyAccountant;
 pub use metrics::{LatencyRecorder, ServerMetrics};
 #[cfg(feature = "pjrt")]

@@ -52,6 +52,24 @@ pub struct DesignPoint {
 }
 
 impl DesignPoint {
+    /// Project this point onto a full [`crate::scenario::Scenario`]:
+    /// the point supplies the swept axes (organization, geometry, DMA),
+    /// the base scenario everything the DSE does not sweep (network,
+    /// tech node, batch, gating, traffic).  The serving-aware DSE
+    /// (`crate::traffic::rank`) re-evaluates Pareto fronts through
+    /// this bridge.
+    pub fn scenario(&self, base: &crate::scenario::Scenario) -> crate::scenario::Scenario {
+        crate::scenario::Scenario {
+            organization: self.organization,
+            geometry: crate::scenario::Geometry {
+                banks: self.banks,
+                sectors: self.sectors,
+            },
+            dma: self.dma,
+            ..base.clone()
+        }
+    }
+
     /// Weak Pareto dominance on (energy, area): self dominates other.
     pub fn dominates(&self, other: &DesignPoint) -> bool {
         self.onchip_energy_pj <= other.onchip_energy_pj
@@ -292,6 +310,23 @@ mod tests {
         }
         // dominated points exist in the full sweep (front is a strict subset)
         assert!(front.len() < pts.len());
+    }
+
+    #[test]
+    fn scenario_projection_round_trips_the_swept_axes() {
+        use crate::scenario::Scenario;
+        let ex = quick_explorer();
+        let base = Scenario::default();
+        for p in ex.sweep().unwrap() {
+            let sc = p.scenario(&base);
+            assert_eq!(sc.organization, p.organization);
+            assert_eq!(sc.geometry.banks, p.banks);
+            assert_eq!(sc.geometry.sectors, p.sectors);
+            assert_eq!(sc.dma, p.dma);
+            // un-swept axes come from the base
+            assert_eq!(sc.network.name, base.network.name);
+            assert_eq!(sc.tech, base.tech);
+        }
     }
 
     #[test]

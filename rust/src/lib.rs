@@ -17,6 +17,10 @@
 //!   a typed `Scenario` (network × tech node × batch × organization ×
 //!   geometry × gating × DMA overlap), a cross-product `ScenarioSet`,
 //!   and the `Evaluator` facade every other entry point delegates to.
+//!   On top of it, [`traffic`] is the deterministic serving simulator:
+//!   seeded arrival processes on a virtual cycle clock, break-even idle
+//!   power management, SLO-aware reports, and a serving-aware DSE
+//!   re-ranking pass.
 //!   Underneath it, [`timeline`] is the cycle-resolved IR — op
 //!   intervals, per-domain power-state segments, DMA transfers — that
 //!   every time consumer (analytical leakage, event sim, tracer,
@@ -41,6 +45,7 @@ pub mod timeline;
 pub mod dse;
 pub mod config;
 pub mod scenario;
+pub mod traffic;
 pub mod report;
 pub mod runtime;
 pub mod coordinator;

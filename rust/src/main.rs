@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   analyze   — the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)
 //!   evaluate  — Table 1/2 + Fig 10 views + one Scenario evaluation
+//!   timeline  — render the cycle-resolved Timeline IR
 //!   dse       — §4.2 design-space exploration (sweep + Pareto front)
+//!   traffic   — deterministic serving simulation (SLO + energy), and
+//!               the serving-aware DSE re-ranking (`--rates`)
 //!   serve     — run the PJRT inference server on synthetic digits
 //!   info      — artifact manifest + environment summary
 //!
@@ -24,6 +27,7 @@ use capstore::capsnet::{CapsNetConfig, Operation};
 use capstore::capstore::arch::{Organization, DEFAULT_BANKS, DEFAULT_SECTORS};
 use capstore::config::schema::{parse_organization, RunConfig};
 use capstore::config::toml::TomlDoc;
+use capstore::coordinator::BatchPolicy;
 #[cfg(feature = "pjrt")]
 use capstore::coordinator::server::InferenceServer;
 use capstore::dse::{Explorer, MultiSweep, SweepSpace};
@@ -33,6 +37,10 @@ use capstore::runtime::manifest::ArtifactManifest;
 use capstore::scenario::{Evaluator, Geometry, Scenario, TechNode};
 #[cfg(feature = "pjrt")]
 use capstore::testing::SplitMix64;
+use capstore::traffic::{
+    rank_for_traffic, simulate, ArrivalPattern, ServiceModel,
+    TrafficProfile,
+};
 use capstore::util::json::Json;
 use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
 use capstore::Result;
@@ -52,6 +60,7 @@ fn main() -> ExitCode {
         "evaluate" => cmd_evaluate(&flags),
         "timeline" => cmd_timeline(&positionals, &flags),
         "dse" => cmd_dse(&flags),
+        "traffic" => cmd_traffic(&positionals, &flags),
         "serve" => cmd_serve(&flags),
         "info" => cmd_info(&flags),
         "help" | "" => {
@@ -81,9 +90,10 @@ fn usage() {
     println!(
         "capstore — energy-efficient on-chip memory for CapsuleNet accelerators
 
-USAGE: capstore <analyze|evaluate|timeline|dse|serve|info>
+USAGE: capstore <analyze|evaluate|timeline|dse|traffic|serve|info>
                 [--flag value | --flag=value]...
        capstore timeline [<net> [<org>]] [--flag value]...
+       capstore traffic [<net> [<org>]] [--flag value]...
 
 FLAGS (all optional, `--flag value` or `--flag=value`; a subcommand
 rejects flags it does not consume):
@@ -121,6 +131,20 @@ dse only:
                               narrowed by --model/--tech if given;
                               large/full cross the dma axis too)
 
+traffic:
+  capstore traffic <net> <org>    simulate a request stream against the
+                                  scenario on a virtual cycle clock
+  --rate R                    mean arrivals per second [1000]
+  --pattern <poisson|bursty|diurnal>
+                              arrival process          [poisson]
+  --seed N                    arrival RNG seed         [1]
+  --duration S                simulated window, sec    [1]
+  --slo-ms MS                 latency objective, ms    [10]
+  --max-batch N --max-wait-ms MS
+                              batcher triggers         [8 / 2]
+  --rates R1,R2,...           serving-aware DSE: re-rank the Pareto
+                              front per rate and report each winner
+
 serve only:
   --requests N                request count            [64]
   --clients N                 client threads           [4]"
@@ -146,6 +170,18 @@ fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "evaluate" => &[SCENARIO, MEMORY, TIME],
         "timeline" => &[SCENARIO, MEMORY, TIME],
         "dse" => &[SCENARIO, &["tech", "threads", "space"]],
+        // traffic takes the time-policy flags minus `--batch`: the
+        // simulator's own batcher decides actual batch sizes (use
+        // --max-batch), so a --batch pin would be silently ignored
+        "traffic" => &[
+            SCENARIO,
+            MEMORY,
+            &["lookahead", "dma", "dma-bw"],
+            &[
+                "rate", "rates", "pattern", "seed", "duration", "slo-ms",
+                "max-batch", "max-wait-ms",
+            ],
+        ],
         "serve" => {
             &[SCENARIO, MEMORY, TIME, &["artifacts", "requests", "clients"]]
         }
@@ -160,8 +196,8 @@ fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
 /// bare tokens, as before).
 fn max_positionals(cmd: &str) -> usize {
     match cmd {
-        // capstore timeline [<net> [<org>]]
-        "timeline" => 2,
+        // capstore timeline|traffic [<net> [<org>]]
+        "timeline" | "traffic" => 2,
         _ => 0,
     }
 }
@@ -309,6 +345,37 @@ fn scenario_with_doc(
         b = b.batch(v.parse().map_err(|_| bad_flag("batch", v))?);
     }
     b.build()
+}
+
+/// Apply the `<net> [<org>]` positional shorthand shared by `timeline`
+/// and `traffic`.  A positional given together with its flag form is a
+/// conflict, rejected like every other ambiguous input in this CLI —
+/// never silently resolved.
+fn apply_positionals(
+    cmd: &str,
+    mut sc: Scenario,
+    positionals: &[String],
+    flags: &Flags,
+) -> Result<Scenario> {
+    if positionals.first().is_some() && flags.contains_key("model") {
+        return Err(capstore::Error::Config(format!(
+            "`{cmd} <net>` and `--model` both name the network — \
+             give one or the other"
+        )));
+    }
+    if positionals.get(1).is_some() && flags.contains_key("org") {
+        return Err(capstore::Error::Config(format!(
+            "`{cmd} <net> <org>` and `--org` both name the \
+             organization — give one or the other"
+        )));
+    }
+    if let Some(net) = positionals.first() {
+        sc = sc.into_builder().network(net).build()?;
+    }
+    if let Some(org) = positionals.get(1) {
+        sc = sc.into_builder().organization_named(org).build()?;
+    }
+    Ok(sc)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -647,30 +714,12 @@ fn cmd_evaluate(flags: &Flags) -> Result<()> {
 fn cmd_timeline(positionals: &[String], flags: &Flags) -> Result<()> {
     let rc = run_config(flags)?;
     let fmt = out_format(flags)?;
-    // positional shorthand: capstore timeline <net> <org>.  A positional
-    // given together with its flag form is a conflict, rejected like
-    // every other ambiguous input in this CLI — never silently resolved.
-    if positionals.first().is_some() && flags.contains_key("model") {
-        return Err(capstore::Error::Config(
-            "`timeline <net>` and `--model` both name the network — \
-             give one or the other"
-                .into(),
-        ));
-    }
-    if positionals.get(1).is_some() && flags.contains_key("org") {
-        return Err(capstore::Error::Config(
-            "`timeline <net> <org>` and `--org` both name the \
-             organization — give one or the other"
-                .into(),
-        ));
-    }
-    let mut sc = scenario_from(flags, &rc)?;
-    if let Some(net) = positionals.first() {
-        sc = sc.into_builder().network(net).build()?;
-    }
-    if let Some(org) = positionals.get(1) {
-        sc = sc.into_builder().organization_named(org).build()?;
-    }
+    let sc = apply_positionals(
+        "timeline",
+        scenario_from(flags, &rc)?,
+        positionals,
+        flags,
+    )?;
 
     let ev = Evaluator::new();
     let e = ev.evaluate(&sc)?;
@@ -1033,6 +1082,308 @@ fn cmd_dse_full(
 }
 
 // ---------------------------------------------------------------------
+// traffic — deterministic serving simulation + serving-aware DSE
+// ---------------------------------------------------------------------
+fn cmd_traffic(positionals: &[String], flags: &Flags) -> Result<()> {
+    let config_doc = flag_doc(flags, "config")?;
+    let scenario_doc = flag_doc(flags, "scenario")?;
+    let rc = run_config_with_doc(flags, config_doc.as_ref())?;
+    let fmt = out_format(flags)?;
+    let sc = apply_positionals(
+        "traffic",
+        scenario_with_doc(flags, &rc, scenario_doc.as_ref())?,
+        positionals,
+        flags,
+    )?;
+
+    // `--rates` re-ranks a Pareto front, i.e. it explores the
+    // organization/geometry/dma axes itself — a pinned design point
+    // would be silently overridden by the sweep, and this CLI rejects
+    // rather than ignores (mirroring `capstore dse`).
+    if flags.contains_key("rates") {
+        if positionals.get(1).is_some() {
+            return Err(capstore::Error::Config(
+                "`traffic <net> <org> --rates` pins an organization \
+                 the front re-ranking sweeps over — drop the \
+                 organization (the ranking tries every front point), \
+                 or use --rate to simulate that single design"
+                    .into(),
+            ));
+        }
+        for pinned in ["org", "banks", "sectors", "dma", "dma-bw"] {
+            if flags.contains_key(pinned) {
+                return Err(capstore::Error::Config(format!(
+                    "`--rates` explores the organization/geometry/dma \
+                     axes itself: --{pinned} would be silently \
+                     overridden — drop it, or use --rate to simulate \
+                     that single design point"
+                )));
+            }
+        }
+        if let Some(doc) = &config_doc {
+            for key in ["organization", "banks", "sectors"] {
+                if doc.get("memory", key).is_some() {
+                    return Err(capstore::Error::Config(format!(
+                        "`--rates` explores the organization/geometry \
+                         axes itself: the --config file pins \
+                         `[memory] {key}`, which the front re-ranking \
+                         would override — drop it, or use --rate for \
+                         a single design point"
+                    )));
+                }
+            }
+        }
+        if scenario_doc.is_some() {
+            let without = scenario_with_doc(flags, &rc, None)?;
+            if sc.organization != without.organization
+                || sc.geometry != without.geometry
+                || sc.dma != without.dma
+            {
+                return Err(capstore::Error::Config(
+                    "`--rates` explores the organization/geometry/dma \
+                     axes itself: the scenario file pins values the \
+                     front re-ranking would override — drop those \
+                     keys, or use --rate for a single design point"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    // workload: scenario [traffic] section (if any) under the flags
+    let mut profile = sc.traffic.clone().unwrap_or_default();
+    if let Some(v) = flags.get("pattern") {
+        profile.pattern = ArrivalPattern::by_name(v).ok_or_else(|| {
+            capstore::Error::Config(format!(
+                "--pattern: want one of {}, got {v:?}",
+                ArrivalPattern::names().join("|")
+            ))
+        })?;
+    }
+    if let Some(v) = flags.get("rate") {
+        profile.rate_per_sec =
+            v.parse().map_err(|_| bad_flag("rate", v))?;
+    }
+    if let Some(v) = flags.get("seed") {
+        profile.seed = v.parse().map_err(|_| bad_flag("seed", v))?;
+    }
+    if let Some(v) = flags.get("duration") {
+        profile.duration_secs =
+            v.parse().map_err(|_| bad_flag("duration", v))?;
+    }
+    if let Some(v) = flags.get("slo-ms") {
+        profile.slo_ms = v.parse().map_err(|_| bad_flag("slo-ms", v))?;
+    }
+    profile.validate()?;
+
+    // batching triggers: run-config [server] knobs under the flags
+    let mut policy =
+        BatchPolicy { max_batch: rc.max_batch, max_wait: rc.max_wait };
+    if let Some(v) = flags.get("max-batch") {
+        policy.max_batch =
+            v.parse().map_err(|_| bad_flag("max-batch", v))?;
+        if policy.max_batch == 0 {
+            return Err(capstore::Error::Config(
+                "--max-batch must be > 0".into(),
+            ));
+        }
+    }
+    if let Some(v) = flags.get("max-wait-ms") {
+        let ms: f64 = v.parse().map_err(|_| bad_flag("max-wait-ms", v))?;
+        if !(ms.is_finite() && ms >= 0.0) {
+            return Err(capstore::Error::Config(
+                "--max-wait-ms must be >= 0".into(),
+            ));
+        }
+        policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
+    }
+
+    let ev = Evaluator::new();
+    if let Some(list) = flags.get("rates") {
+        if flags.contains_key("rate") {
+            return Err(capstore::Error::Config(
+                "--rate simulates one profile, --rates re-ranks the \
+                 Pareto front — give one or the other"
+                    .into(),
+            ));
+        }
+        return cmd_traffic_rank(&ev, &sc, &profile, &policy, list, fmt);
+    }
+
+    let svc = ServiceModel::new(&ev, &sc, policy.max_batch)?;
+    let report = simulate(&svc, &profile, &policy);
+
+    match fmt {
+        Format::Table => {
+            println!("scenario: {}", sc.label());
+            println!("traffic:  {}", profile.label());
+            println!(
+                "\narrivals {}  served {}  queued {}  in {} batches \
+                 (mean occupancy {:.2})",
+                report.arrivals,
+                report.served,
+                report.queued,
+                report.batches,
+                report.mean_occupancy(),
+            );
+            println!(
+                "throughput {:.1} inf/s over a {:.3}s window \
+                 (busy {:.1}%)",
+                report.throughput_per_sec(svc.clock_hz),
+                profile.duration_secs,
+                100.0 * report.busy_cycles as f64
+                    / report.horizon_cycles.max(1) as f64,
+            );
+            if let Some(s) = &report.latency_ms {
+                println!(
+                    "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  \
+                     max {:.3}",
+                    s.median, s.p95, s.p99, s.max
+                );
+            }
+            println!(
+                "SLO {} ms: {} violations ({:.2}% of served)",
+                profile.slo_ms,
+                report.slo_violations,
+                100.0 * report.slo_violation_fraction(),
+            );
+            match report.break_even_cycles {
+                Some(be) => println!(
+                    "idle gating: {} cold starts, {} warm starts \
+                     (break-even {} cycles)",
+                    report.cold_starts, report.warm_starts, be
+                ),
+                None => println!(
+                    "idle gating: organization is ungated — memory \
+                     leaks at full power between batches"
+                ),
+            }
+            println!(
+                "energy: batches {} + idle {} - warm saving {} = {} \
+                 ({:.3} µJ/inference)",
+                fmt_energy_uj(report.batch_pj),
+                fmt_energy_uj(report.idle_pj),
+                fmt_energy_uj(report.warm_saving_pj),
+                fmt_energy_uj(report.total_pj()),
+                report.energy_uj_per_inference(),
+            );
+        }
+        Format::Json => {
+            println!("{}", report.to_json(svc.clock_hz).render());
+        }
+    }
+    Ok(())
+}
+
+/// `capstore traffic --rates R1,R2,...`: the serving-aware DSE.  Sweep
+/// the scenario's (network, tech) pair, take the Pareto front, and
+/// re-rank it per traffic profile — the winner moves with the load.
+fn cmd_traffic_rank(
+    ev: &Evaluator,
+    sc: &Scenario,
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    rates: &str,
+    fmt: Format,
+) -> Result<()> {
+    let rates: Vec<f64> = rates
+        .split(',')
+        .map(|r| {
+            r.trim()
+                .parse::<f64>()
+                .map_err(|_| bad_flag("rates", r))
+                .and_then(|v| {
+                    if v.is_finite() && v > 0.0 {
+                        Ok(v)
+                    } else {
+                        Err(bad_flag("rates", r))
+                    }
+                })
+        })
+        .collect::<Result<_>>()?;
+    if rates.is_empty() {
+        return Err(capstore::Error::Config(
+            "--rates needs at least one rate".into(),
+        ));
+    }
+
+    let mut ex = Explorer::new(sc.network.clone());
+    ex.model.tech = sc.tech.technology();
+    let points = ex.sweep()?;
+    let front = Explorer::pareto(&points);
+    let profiles: Vec<TrafficProfile> = rates
+        .iter()
+        .map(|&r| TrafficProfile { rate_per_sec: r, ..profile.clone() })
+        .collect();
+    let winners = rank_for_traffic(ev, sc, &front, &profiles, policy)?;
+
+    let mut t = Table::new(
+        "serving-aware DSE — best front point per traffic profile",
+        &["rate/s", "org", "banks", "sectors", "dma", "occup", "p99 ms",
+          "viol%", "cold", "µJ/inf", "slo"],
+    );
+    for w in &winners {
+        let p99 = w
+            .report
+            .latency_ms
+            .as_ref()
+            .map(|s| format!("{:.3}", s.p99))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            format!("{}", w.profile.rate_per_sec),
+            w.point.organization.label().into(),
+            w.point.banks.to_string(),
+            w.point.sectors.to_string(),
+            w.point.dma.model.label().into(),
+            format!("{:.2}", w.report.mean_occupancy()),
+            p99,
+            format!("{:.2}", 100.0 * w.report.slo_violation_fraction()),
+            w.report.cold_starts.to_string(),
+            format!("{:.3}", w.report.energy_uj_per_inference()),
+            if w.feasible { "ok" } else { "MISS" }.to_string(),
+        ]);
+    }
+
+    match fmt {
+        Format::Table => {
+            println!(
+                "scenario: {} | pattern {} seed {} duration {}s slo {}ms",
+                sc.label(),
+                profile.pattern.label(),
+                profile.seed,
+                profile.duration_secs,
+                profile.slo_ms,
+            );
+            println!(
+                "front: {} Pareto points of a {}-point sweep\n",
+                front.len(),
+                points.len()
+            );
+            t.print();
+            let shifted = winners
+                .windows(2)
+                .any(|w| !w[0].point.bit_eq(&w[1].point));
+            if shifted {
+                println!(
+                    "\nthe energy-optimal design point shifts with the \
+                     traffic profile"
+                );
+            }
+        }
+        Format::Json => {
+            let j = Json::obj(vec![
+                ("network", Json::Str(sc.network.name.to_string())),
+                ("tech", Json::Str(sc.tech.label().to_string())),
+                ("front_points", Json::Num(front.len() as f64)),
+                ("winners", t.to_json()),
+            ]);
+            println!("{}", j.render());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
 // serve — PJRT inference server on synthetic digits
 // ---------------------------------------------------------------------
 #[cfg(not(feature = "pjrt"))]
@@ -1107,8 +1458,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             );
             if let Some(s) = m.latency.summary() {
                 println!(
-                    "latency ms: median {:.2} p95 {:.2} max {:.2}",
-                    s.median, s.p95, s.max
+                    "latency ms: median {:.2} p95 {:.2} p99 {:.2} max {:.2}",
+                    s.median, s.p95, s.p99, s.max
                 );
             }
             println!(
@@ -1140,6 +1491,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                     Json::obj(vec![
                         ("median", Json::Num(s.median)),
                         ("p95", Json::Num(s.p95)),
+                        ("p99", Json::Num(s.p99)),
                         ("max", Json::Num(s.max)),
                     ]),
                 ));
@@ -1310,6 +1662,61 @@ mod tests {
         assert!(parse_args(&argv(&["timeline", "--batch", "8"])).is_ok());
         // unknown subcommands defer to the dispatcher's error
         assert!(parse_args(&argv(&["frobnicate", "--x", "1"])).is_ok());
+    }
+
+    #[test]
+    fn traffic_flags_parse_and_conflict() {
+        // positional shorthand + traffic knobs parse
+        let (cmd, pos, flags) = parse_args(&argv(&[
+            "traffic", "mnist", "PG-SEP", "--rate", "500", "--seed=7",
+        ]))
+        .unwrap();
+        assert_eq!(cmd, "traffic");
+        assert_eq!(pos.len(), 2);
+        assert_eq!(flags.get("rate").map(String::as_str), Some("500"));
+        assert!(parse_args(&argv(&["traffic", "--rates", "50,5000"])).is_ok());
+        // traffic knobs stay off the other subcommands
+        assert!(parse_args(&argv(&["evaluate", "--rate", "5"])).is_err());
+        assert!(parse_args(&argv(&["dse", "--rates", "5"])).is_err());
+        // --batch would be silently ignored by the simulator's own
+        // batcher, so traffic rejects it (use --max-batch)
+        assert!(parse_args(&argv(&["traffic", "--batch", "4"])).is_err());
+        assert!(parse_args(&argv(&["traffic", "--max-batch", "4"])).is_ok());
+        // --rate and --rates are mutually exclusive (checked in the
+        // command, after parsing)
+        let mut flags = Flags::new();
+        flags.insert("rate".into(), "100".into());
+        flags.insert("rates".into(), "100,200".into());
+        assert!(cmd_traffic(&[], &flags).is_err());
+        // bad pattern is rejected
+        let mut flags = Flags::new();
+        flags.insert("pattern".into(), "fractal".into());
+        assert!(cmd_traffic(&[], &flags).is_err());
+        // --rates explores the design-point axes itself: a pinned
+        // organization/geometry/dma (flag or positional) is rejected,
+        // never silently overridden by the sweep
+        for (key, value) in [
+            ("org", "SMP"),
+            ("banks", "4"),
+            ("sectors", "8"),
+            ("dma", "serial"),
+            ("dma-bw", "32"),
+        ] {
+            let mut flags = Flags::new();
+            flags.insert("rates".into(), "100,200".into());
+            flags.insert(key.into(), value.into());
+            assert!(
+                cmd_traffic(&[], &flags).is_err(),
+                "--rates accepted pinned --{key}"
+            );
+        }
+        let mut flags = Flags::new();
+        flags.insert("rates".into(), "100,200".into());
+        assert!(cmd_traffic(
+            &["mnist".into(), "PG-SEP".into()],
+            &flags
+        )
+        .is_err());
     }
 
     #[test]

@@ -27,7 +27,7 @@
 pub mod evaluator;
 pub mod set;
 
-pub use evaluator::{Evaluation, Evaluator};
+pub use evaluator::{BatchEnergy, Evaluation, Evaluator};
 pub use set::ScenarioSet;
 
 use crate::capsnet::CapsNetConfig;
@@ -38,6 +38,7 @@ use crate::config::schema::parse_organization;
 use crate::config::toml::TomlDoc;
 use crate::error::{Error, Result};
 use crate::memsim::cacti::Technology;
+use crate::traffic::{ArrivalPattern, TrafficProfile};
 
 // The time-policy value types live with the Timeline IR (the one place
 // that interprets them); re-exported here so `scenario::GatingPolicy`
@@ -135,6 +136,10 @@ pub struct Scenario {
     pub gating: GatingPolicy,
     /// DMA/compute-overlap knob (DESCNet-style double buffering axis).
     pub dma: DmaPolicy,
+    /// Optional serving workload (`capstore traffic` consumes it; the
+    /// per-inference evaluators ignore it).  `None` = no `[traffic]`
+    /// section in the TOML form.
+    pub traffic: Option<TrafficProfile>,
 }
 
 impl Default for Scenario {
@@ -149,6 +154,7 @@ impl Default for Scenario {
             geometry: Geometry::default(),
             gating: GatingPolicy::default(),
             dma: DmaPolicy::default(),
+            traffic: None,
         }
     }
 }
@@ -169,6 +175,7 @@ impl Scenario {
             geometry: self.geometry,
             gating: self.gating,
             dma: DmaChoice::Policy(self.dma),
+            traffic: self.traffic,
         }
     }
 
@@ -206,7 +213,7 @@ impl Scenario {
     ///
     /// [`from_toml`]: Self::from_toml
     pub fn to_toml(&self) -> String {
-        format!(
+        let mut out = format!(
             "# capstore scenario\n\
              [scenario]\n\
              network = \"{}\"\n\
@@ -233,7 +240,24 @@ impl Scenario {
             self.gating.lookahead_cycles,
             self.dma.model.label(),
             self.dma.bandwidth_bytes_per_cycle
-        )
+        );
+        if let Some(t) = &self.traffic {
+            out.push_str(&format!(
+                "\n\
+                 [traffic]\n\
+                 pattern = \"{}\"\n\
+                 rate_per_sec = {}\n\
+                 seed = {}\n\
+                 duration_secs = {}\n\
+                 slo_ms = {}\n",
+                t.pattern.label(),
+                t.rate_per_sec,
+                t.seed,
+                t.duration_secs,
+                t.slo_ms
+            ));
+        }
+        out
     }
 
     /// Build from a parsed TOML document; missing keys take the
@@ -281,6 +305,19 @@ fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<u64>> {
             Error::Config(format!(
                 "scenario file: `[{section}] {key}` must be a \
                  non-negative integer, got {v:?}"
+            ))
+        }),
+    }
+}
+
+/// [`want_str`] for numeric keys (int or float both accepted).
+fn want_f64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<f64>> {
+    match doc.get(section, key) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario file: `[{section}] {key}` must be a number, \
+                 got {v:?}"
             ))
         }),
     }
@@ -348,6 +385,7 @@ pub struct ScenarioBuilder {
     geometry: Geometry,
     gating: GatingPolicy,
     dma: DmaChoice,
+    traffic: Option<TrafficProfile>,
 }
 
 impl Default for ScenarioBuilder {
@@ -439,6 +477,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach (or replace) the serving workload — validated in
+    /// [`build`](Self::build).
+    pub fn traffic(mut self, profile: TrafficProfile) -> Self {
+        self.traffic = Some(profile);
+        self
+    }
+
     /// Apply a scenario TOML document on top of the builder's current
     /// state: keys present in the document override, absent keys keep
     /// whatever the builder already holds.  This is what lets the CLI
@@ -459,6 +504,11 @@ impl ScenarioBuilder {
             ("gating", "lookahead_cycles"),
             ("dma", "model"),
             ("dma", "bandwidth_bytes_per_cycle"),
+            ("traffic", "pattern"),
+            ("traffic", "rate_per_sec"),
+            ("traffic", "seed"),
+            ("traffic", "duration_secs"),
+            ("traffic", "slo_ms"),
         ];
         for (section, keys) in &doc.sections {
             for key in keys.keys() {
@@ -501,6 +551,33 @@ impl ScenarioBuilder {
         }
         if let Some(v) = want_u64(doc, "dma", "bandwidth_bytes_per_cycle")? {
             self = self.dma_bandwidth(v);
+        }
+        if doc.sections.contains_key("traffic") {
+            // a present section activates the workload; absent keys keep
+            // the builder's current profile (or the defaults)
+            let mut t = self.traffic.take().unwrap_or_default();
+            if let Some(v) = want_str(doc, "traffic", "pattern")? {
+                t.pattern =
+                    ArrivalPattern::by_name(v).ok_or_else(|| {
+                        Error::Config(format!(
+                            "unknown traffic pattern {v:?} (want one of {})",
+                            ArrivalPattern::names().join(", ")
+                        ))
+                    })?;
+            }
+            if let Some(v) = want_f64(doc, "traffic", "rate_per_sec")? {
+                t.rate_per_sec = v;
+            }
+            if let Some(v) = want_u64(doc, "traffic", "seed")? {
+                t.seed = v;
+            }
+            if let Some(v) = want_f64(doc, "traffic", "duration_secs")? {
+                t.duration_secs = v;
+            }
+            if let Some(v) = want_f64(doc, "traffic", "slo_ms")? {
+                t.slo_ms = v;
+            }
+            self.traffic = Some(t);
         }
         Ok(self)
     }
@@ -556,6 +633,9 @@ impl ScenarioBuilder {
                 "scenario dma bandwidth must be > 0".into(),
             ));
         }
+        if let Some(t) = &self.traffic {
+            t.validate()?;
+        }
         Ok(Scenario {
             network,
             tech,
@@ -564,6 +644,7 @@ impl ScenarioBuilder {
             geometry: self.geometry,
             gating: self.gating,
             dma,
+            traffic: self.traffic,
         })
     }
 }
@@ -636,6 +717,70 @@ mod tests {
     fn toml_roundtrip_default() {
         let sc = Scenario::default();
         assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+    }
+
+    #[test]
+    fn traffic_section_round_trips() {
+        let sc = Scenario::builder()
+            .traffic(TrafficProfile {
+                pattern: ArrivalPattern::Bursty,
+                rate_per_sec: 2500.0,
+                seed: 7,
+                duration_secs: 0.5,
+                slo_ms: 4.5,
+            })
+            .build()
+            .unwrap();
+        assert!(sc.to_toml().contains("[traffic]"));
+        assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+        // no [traffic] section => no profile, and no section emitted
+        let plain = Scenario::default();
+        assert!(plain.traffic.is_none());
+        assert!(!plain.to_toml().contains("[traffic]"));
+    }
+
+    #[test]
+    fn traffic_overlay_is_strict() {
+        // unknown key, bad type, unknown pattern, bad range: all errors
+        for text in [
+            "[traffic]\nrate = 100\n", // misspelled rate_per_sec
+            "[traffic]\nrate_per_sec = \"fast\"\n",
+            "[traffic]\npattern = \"fractal\"\n",
+            "[traffic]\nseed = 1.5\n",
+            "[traffic]\nslo_ms = true\n",
+        ] {
+            let doc = TomlDoc::parse(text).unwrap();
+            assert!(
+                Scenario::builder()
+                    .overlay_toml(&doc)
+                    .and_then(ScenarioBuilder::build)
+                    .is_err(),
+                "accepted: {text}"
+            );
+        }
+        // range checks live in build(): a zero rate parses but won't build
+        let doc = TomlDoc::parse("[traffic]\nrate_per_sec = 0\n").unwrap();
+        let b = Scenario::builder().overlay_toml(&doc).unwrap();
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn traffic_overlay_keeps_unset_keys() {
+        // a bare [traffic] section activates the default workload;
+        // present keys override it field by field
+        let doc =
+            TomlDoc::parse("[traffic]\nrate_per_sec = 50\nseed = 3\n")
+                .unwrap();
+        let sc = Scenario::builder()
+            .overlay_toml(&doc)
+            .unwrap()
+            .build()
+            .unwrap();
+        let t = sc.traffic.expect("section present => profile set");
+        assert_eq!(t.rate_per_sec, 50.0);
+        assert_eq!(t.seed, 3);
+        assert_eq!(t.pattern, ArrivalPattern::Poisson); // default kept
+        assert_eq!(t.slo_ms, TrafficProfile::default().slo_ms);
     }
 
     #[test]

@@ -104,6 +104,7 @@ impl ScenarioSet {
                                         },
                                         gating: self.gating,
                                         dma,
+                                        traffic: None,
                                     });
                                 }
                             }

@@ -36,9 +36,12 @@
 //! sim ([`crate::capstore::eventsim`]) is a thin interpreter over the
 //! segments, the CLI `capstore timeline` renders them, the serving
 //! accountant charges pipelined batches from
-//! [`crate::capstore::pmu::GatingSchedule`]'s steady-state wakeups, and
-//! the DSE prices the DMA axis with [`dma_overhead_pj`] — an O(ops)
-//! scan that deliberately does *not* build the full IR, keeping
+//! [`crate::capstore::pmu::GatingSchedule`]'s steady-state wakeups, the
+//! traffic simulator ([`crate::traffic`]) prices every dispatched batch
+//! from the timeline-derived `BatchEnergy` table (precomputed per batch
+//! size — `benches/traffic_sim.rs` asserts its event loop builds zero
+//! IRs), and the DSE prices the DMA axis with [`dma_overhead_pj`] — an
+//! O(ops) scan that deliberately does *not* build the full IR, keeping
 //! [`Timeline::build`] off the sweep hot path (guarded by
 //! `benches/timeline_build.rs` via [`Timeline::build_count`]).
 

@@ -1,0 +1,132 @@
+//! Deterministic traffic-driven serving simulation with SLO-aware
+//! energy accounting — the fleet-level view of a CapStore design.
+//!
+//! The rest of the crate answers "what does one inference (or one
+//! pipelined batch) cost on this memory system?"  This module answers
+//! the question a deployment asks: *under a given request stream, what
+//! latency tail, throughput, and energy per served inference does a
+//! design deliver* — including the time the accelerator spends idle
+//! between batches, which is where DESCNet-style sleep decisions
+//! (arXiv 2010.05754) actually pay off or backfire.
+//!
+//! Three layers, all pure functions of their inputs (no `Instant`, no
+//! ambient randomness — a seeded [`crate::testing::SplitMix64`] carries
+//! all the entropy, so every run is reproducible bit for bit):
+//!
+//! * [`arrivals`] — seeded Poisson / bursty-MMPP / diurnal arrival
+//!   generators on the virtual cycle clock;
+//! * [`sim`] — the discrete-event loop: a
+//!   [`crate::coordinator::Batcher`] over a
+//!   [`crate::coordinator::VirtualClock`] feeds a single simulated
+//!   accelerator whose per-batch service time and energy come from the
+//!   Timeline-derived [`crate::scenario::evaluator::BatchEnergy`]
+//!   table, with break-even idle gating between dispatches, producing a
+//!   [`TrafficReport`] (p50/p95/p99 latency, SLO violations, cold/warm
+//!   starts, and a bit-for-bit energy decomposition);
+//! * [`rank`] — serving-aware DSE: re-rank a Pareto front per
+//!   [`TrafficProfile`], showing the energy-optimal design point move
+//!   between the low-rate (idle-leakage-dominated) and saturated
+//!   (batch-amortized) regimes.
+//!
+//! Surfaced as `capstore traffic` and the `[traffic]` scenario TOML
+//! section; guarded by `benches/traffic_sim.rs --check` (determinism +
+//! zero `Timeline` builds per dispatched batch).
+
+pub mod arrivals;
+pub mod rank;
+pub mod sim;
+
+pub use arrivals::{ArrivalGen, ArrivalPattern};
+pub use rank::{rank_for_traffic, TrafficWinner, SLO_MISS_BUDGET};
+pub use sim::{
+    simulate, DispatchRecord, ServiceModel, TrafficReport,
+};
+
+/// One serving workload: the arrival process, its mean rate, the RNG
+/// seed, the simulated window, and the latency SLO — everything a
+/// simulation run needs beyond the [`crate::scenario::Scenario`].
+///
+/// Serializes as the `[traffic]` section of a scenario TOML file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficProfile {
+    pub pattern: ArrivalPattern,
+    /// Mean arrival rate, requests per second.
+    pub rate_per_sec: f64,
+    /// RNG seed; the same seed always replays the same arrival stream.
+    pub seed: u64,
+    /// Simulated window, seconds of virtual time.
+    pub duration_secs: f64,
+    /// Per-request latency objective (arrival → completion), ms.
+    pub slo_ms: f64,
+}
+
+impl Default for TrafficProfile {
+    fn default() -> Self {
+        TrafficProfile {
+            pattern: ArrivalPattern::Poisson,
+            rate_per_sec: 1000.0,
+            seed: 1,
+            duration_secs: 1.0,
+            slo_ms: 10.0,
+        }
+    }
+}
+
+impl TrafficProfile {
+    /// Validate ranges (the scenario builder calls this for `[traffic]`
+    /// overlays; the CLI for flags).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        fn positive(v: f64, what: &str) -> crate::error::Result<()> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(crate::error::Error::Config(format!(
+                    "traffic {what} must be a positive number, got {v}"
+                )))
+            }
+        }
+        positive(self.rate_per_sec, "rate_per_sec")?;
+        positive(self.duration_secs, "duration_secs")?;
+        positive(self.slo_ms, "slo_ms")
+    }
+
+    /// Short human label, e.g. `poisson 1000/s slo 10ms seed 1`.
+    pub fn label(&self) -> String {
+        format!(
+            "{} {}/s slo {}ms seed {}",
+            self.pattern.label(),
+            self.rate_per_sec,
+            self.slo_ms,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_is_valid() {
+        let p = TrafficProfile::default();
+        p.validate().unwrap();
+        assert_eq!(p.pattern, ArrivalPattern::Poisson);
+        assert_eq!(p.label(), "poisson 1000/s slo 10ms seed 1");
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_knobs() {
+        for bad in [
+            TrafficProfile { rate_per_sec: 0.0, ..Default::default() },
+            TrafficProfile { rate_per_sec: -1.0, ..Default::default() },
+            TrafficProfile { duration_secs: 0.0, ..Default::default() },
+            TrafficProfile { slo_ms: 0.0, ..Default::default() },
+            TrafficProfile {
+                rate_per_sec: f64::NAN,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

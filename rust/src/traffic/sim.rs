@@ -1,0 +1,657 @@
+//! The deterministic discrete-event serving simulator.
+//!
+//! A single simulated accelerator (one [`crate::scenario::Scenario`])
+//! serves an arrival stream on a virtual cycle clock:
+//!
+//! * arrivals queue behind a [`Batcher`] running the coordinator's
+//!   max_batch/max_wait trigger semantics against a [`VirtualClock`];
+//! * a dispatched batch of `n` requests occupies the accelerator for
+//!   the timeline-derived `BatchEnergy::latency_cycles` of batch `n`
+//!   and is charged exactly `BatchEnergy::total_pj()` — the simulator's
+//!   total batch energy is the plain sum of those terms, bit for bit;
+//! * between dispatches the PMU applies DESCNet-style break-even idle
+//!   management: the memory holds its sectors ON for
+//!   [`ServiceModel::break_even_cycles`] and then gates everything off,
+//!   so a short gap stays warm (the next batch is charged as a
+//!   steady-state continuation, crediting back the cold-start premium)
+//!   while a long gap sleeps (residual leakage only, and the next batch
+//!   pays the cold power-on its `BatchEnergy` already accounts).
+//!
+//! Everything the loop consumes per dispatch is precomputed in
+//! [`ServiceModel`]: one analytical `Timeline` per *batch size* (at
+//! model-build time), zero per dispatched batch — the `traffic_sim`
+//! bench asserts that with `Timeline::build_count`.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Clock, VirtualClock};
+use crate::error::Result;
+use crate::scenario::evaluator::BatchEnergy;
+use crate::scenario::{Evaluator, Scenario};
+use crate::traffic::arrivals::ArrivalGen;
+use crate::traffic::TrafficProfile;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Everything the event loop needs per dispatch, precomputed once per
+/// (scenario, max_batch): the whole-batch energy/latency table and the
+/// idle-management constants.
+#[derive(Debug, Clone)]
+pub struct ServiceModel {
+    pub scenario: Scenario,
+    /// `per_batch[n-1]` = timeline-derived accounting of a batch of n
+    /// pipelined inferences (n in `1..=max_batch`).
+    pub per_batch: Vec<BatchEnergy>,
+    pub clock_hz: f64,
+    /// Whether the scenario's organization can gate sectors at all.
+    pub gated: bool,
+    /// Idle leakage with every sector held ON, mW (all macros).
+    pub idle_on_mw: f64,
+    /// Idle leakage fully gated off (sleep-transistor residual), mW.
+    pub idle_off_mw: f64,
+    /// Wakeup-energy premium of a cold (all-OFF) start over a
+    /// steady-state continuation, pJ:
+    /// `GatingSchedule::wakeup_energy_pj - wakeup_energy_steady_pj`.
+    pub cold_extra_pj: f64,
+    /// Steady-state OFF→ON transitions per inference
+    /// (`GatingSchedule::steady_wakeups`), for the report.
+    pub steady_wakeups: u64,
+    /// Cold-start OFF→ON transitions per inference.
+    pub cold_wakeups: u64,
+    /// Idle cycles after which sleeping beats staying awake:
+    /// `cold_extra_pj / ((idle_on - idle_off) per-cycle leakage)`.
+    /// `None` for ungated organizations (nothing to gate).
+    pub break_even_cycles: Option<u64>,
+}
+
+impl ServiceModel {
+    /// Precompute the dispatch table for batch sizes `1..=max_batch`
+    /// through the evaluator facade (analytical path — one light
+    /// `Timeline` per batch size, none later).
+    pub fn new(
+        ev: &Evaluator,
+        sc: &Scenario,
+        max_batch: usize,
+    ) -> Result<ServiceModel> {
+        let max_batch = max_batch.max(1);
+        let mut per_batch = Vec::with_capacity(max_batch);
+        let mut first = None;
+        for b in 1..=max_batch {
+            let e = ev.evaluate_analytical(&Scenario {
+                batch: b as u64,
+                ..sc.clone()
+            })?;
+            per_batch.push(e.batch.clone());
+            if b == 1 {
+                first = Some(e);
+            }
+        }
+        let e1 = first.expect("max_batch >= 1");
+
+        let gated = e1.architecture.organization.gated();
+        let pg = &e1.architecture.pg_model;
+        let plan = &e1.timeline.plan;
+        let idle_on_mw: f64 =
+            e1.timeline.macros.iter().map(|m| m.leakage_mw).sum();
+        let idle_off_mw = if gated {
+            idle_on_mw * pg.off_leakage_fraction
+        } else {
+            idle_on_mw
+        };
+        let cold_extra_pj = if gated {
+            plan.wakeup_energy_pj(pg) - plan.wakeup_energy_steady_pj(pg)
+        } else {
+            0.0
+        };
+        let clock_hz = e1.timeline.clock_hz;
+        let k = pj_per_cycle_per_mw(clock_hz);
+        let delta_mw = idle_on_mw - idle_off_mw;
+        let break_even_cycles = (gated && delta_mw > 0.0)
+            .then(|| (cold_extra_pj / (delta_mw * k)).ceil() as u64);
+
+        Ok(ServiceModel {
+            scenario: sc.clone(),
+            per_batch,
+            clock_hz,
+            gated,
+            idle_on_mw,
+            idle_off_mw,
+            cold_extra_pj,
+            steady_wakeups: plan.steady_wakeups().iter().sum(),
+            cold_wakeups: plan.wakeups.iter().sum(),
+            break_even_cycles,
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.per_batch.len()
+    }
+
+    /// Leakage of one idle window of `gap` cycles under the break-even
+    /// policy, pJ: sectors held ON up to the break-even point, residual
+    /// leakage beyond it (ungated organizations leak at full power
+    /// throughout).  Returns whether the window slept — i.e. whether a
+    /// batch dispatched at its end starts cold.
+    pub fn idle_window_pj(&self, gap: u64) -> (f64, bool) {
+        let k = pj_per_cycle_per_mw(self.clock_hz);
+        match self.break_even_cycles {
+            Some(be) if gap > be => (
+                self.idle_on_mw * be as f64 * k
+                    + self.idle_off_mw * (gap - be) as f64 * k,
+                true,
+            ),
+            _ => (self.idle_on_mw * gap as f64 * k, false),
+        }
+    }
+}
+
+/// pJ accumulated per cycle per mW at the array clock (the same
+/// conversion the timeline uses for its leakage integration).
+fn pj_per_cycle_per_mw(clock_hz: f64) -> f64 {
+    1.0e-3 / clock_hz * 1.0e12
+}
+
+/// One dispatched batch, in dispatch order.
+#[derive(Debug, Clone)]
+pub struct DispatchRecord {
+    /// Dispatch instant, cycles.
+    pub at_cycle: u64,
+    /// Completion instant, cycles.
+    pub done_cycle: u64,
+    /// Requests in the batch.
+    pub size: usize,
+    /// Whether the preceding idle gap slept past break-even (the batch
+    /// pays its cold power-on) or stayed warm (steady continuation).
+    pub cold: bool,
+    /// `BatchEnergy::total_pj()` of this batch size — the term the
+    /// simulator total sums, bit for bit.
+    pub batch_pj: f64,
+}
+
+/// Fleet-level result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct TrafficReport {
+    pub scenario_label: String,
+    pub profile: TrafficProfile,
+    /// Simulated window, cycles.
+    pub horizon_cycles: u64,
+    // -- request conservation: arrivals == served + queued -------------
+    pub arrivals: u64,
+    pub served: u64,
+    /// Requests still waiting (queue + batcher) when the horizon hit.
+    pub queued: u64,
+    pub batches: u64,
+    // -- latency / SLO -------------------------------------------------
+    /// Per-request latency (arrival → batch completion), milliseconds.
+    pub latency_ms: Option<Summary>,
+    pub slo_violations: u64,
+    // -- idle-gap power management ------------------------------------
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub break_even_cycles: Option<u64>,
+    /// Cycles the accelerator spent serving *within the horizon window*
+    /// (a batch in flight at the horizon contributes only its in-window
+    /// part, so `busy_cycles <= horizon_cycles`).
+    pub busy_cycles: u64,
+    // -- energy decomposition (pJ) ------------------------------------
+    /// Σ per-dispatch `BatchEnergy::total_pj()` (bit-for-bit additive).
+    pub batch_pj: f64,
+    /// Leakage integrated over idle gaps (ON until break-even, residual
+    /// after).
+    pub idle_pj: f64,
+    /// Cold-start premium credited back for warm starts.
+    pub warm_saving_pj: f64,
+    /// Every dispatch in order (the additivity witnesses).
+    pub dispatches: Vec<DispatchRecord>,
+}
+
+impl TrafficReport {
+    /// Total simulated memory-system energy over the window, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.batch_pj - self.warm_saving_pj + self.idle_pj
+    }
+
+    /// Served inferences per second of virtual time.
+    pub fn throughput_per_sec(&self, clock_hz: f64) -> f64 {
+        if self.horizon_cycles == 0 {
+            return 0.0;
+        }
+        self.served as f64 / (self.horizon_cycles as f64 / clock_hz)
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// µJ per served inference (batch + idle energy amortized).
+    pub fn energy_uj_per_inference(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_pj() / 1.0e6 / self.served as f64
+        }
+    }
+
+    /// Fraction of served requests whose latency exceeded the SLO.
+    pub fn slo_violation_fraction(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.slo_violations as f64 / self.served as f64
+        }
+    }
+
+    /// JSON view; byte-identical across runs of the same seed (no wall
+    /// time anywhere).
+    pub fn to_json(&self, clock_hz: f64) -> Json {
+        let mut fields = vec![
+            ("scenario", Json::Str(self.scenario_label.clone())),
+            (
+                "profile",
+                Json::obj(vec![
+                    (
+                        "pattern",
+                        Json::Str(self.profile.pattern.label().to_string()),
+                    ),
+                    ("rate_per_sec", Json::Num(self.profile.rate_per_sec)),
+                    ("seed", Json::Num(self.profile.seed as f64)),
+                    (
+                        "duration_secs",
+                        Json::Num(self.profile.duration_secs),
+                    ),
+                    ("slo_ms", Json::Num(self.profile.slo_ms)),
+                ]),
+            ),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("queued", Json::Num(self.queued as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_occupancy", Json::Num(self.mean_occupancy())),
+            (
+                "throughput_per_sec",
+                Json::Num(self.throughput_per_sec(clock_hz)),
+            ),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            (
+                "slo_violation_fraction",
+                Json::Num(self.slo_violation_fraction()),
+            ),
+            ("cold_starts", Json::Num(self.cold_starts as f64)),
+            ("warm_starts", Json::Num(self.warm_starts as f64)),
+            (
+                "break_even_cycles",
+                match self.break_even_cycles {
+                    Some(c) => Json::Num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("horizon_cycles", Json::Num(self.horizon_cycles as f64)),
+            ("busy_cycles", Json::Num(self.busy_cycles as f64)),
+            (
+                "energy",
+                Json::obj(vec![
+                    ("batch_pj", Json::Num(self.batch_pj)),
+                    ("idle_pj", Json::Num(self.idle_pj)),
+                    ("warm_saving_pj", Json::Num(self.warm_saving_pj)),
+                    ("total_pj", Json::Num(self.total_pj())),
+                    (
+                        "uj_per_inference",
+                        Json::Num(self.energy_uj_per_inference()),
+                    ),
+                ]),
+            ),
+        ];
+        if let Some(s) = &self.latency_ms {
+            fields.push((
+                "latency_ms",
+                Json::obj(vec![
+                    ("mean", Json::Num(s.mean)),
+                    ("p50", Json::Num(s.median)),
+                    ("p95", Json::Num(s.p95)),
+                    ("p99", Json::Num(s.p99)),
+                    ("max", Json::Num(s.max)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Run one simulation: `profile`'s arrival stream against `svc`'s
+/// accelerator under the batching `policy`.  Pure function of its
+/// arguments — same inputs, same report, bit for bit.
+pub fn simulate(
+    svc: &ServiceModel,
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+) -> TrafficReport {
+    let clock = VirtualClock::new(svc.clock_hz);
+    let mut batcher: Batcher<u64, VirtualClock> = Batcher::with_clock(
+        BatchPolicy {
+            max_batch: policy.max_batch.clamp(1, svc.max_batch()),
+            max_wait: policy.max_wait,
+        },
+        clock.clone(),
+    );
+    let horizon =
+        (profile.duration_secs * svc.clock_hz).round() as u64;
+
+    let mut arrivals_gen = ArrivalGen::new(profile, svc.clock_hz);
+    let mut arrivals: u64 = 0;
+    let mut pull = |n: &mut u64| -> Option<u64> {
+        let a = arrivals_gen.next();
+        if a.is_some() {
+            *n += 1;
+        }
+        a
+    };
+    let mut next_arrival = pull(&mut arrivals);
+
+    // server + queue state
+    let mut fifo: VecDeque<u64> = VecDeque::new();
+    let mut busy_until: Option<u64> = None;
+    let mut idle_since: u64 = 0;
+
+    // accounting
+    let mut report = TrafficReport {
+        scenario_label: svc.scenario.label(),
+        profile: profile.clone(),
+        horizon_cycles: horizon,
+        arrivals: 0,
+        served: 0,
+        queued: 0,
+        batches: 0,
+        latency_ms: None,
+        slo_violations: 0,
+        cold_starts: 0,
+        warm_starts: 0,
+        break_even_cycles: svc.break_even_cycles,
+        busy_cycles: 0,
+        batch_pj: 0.0,
+        idle_pj: 0.0,
+        warm_saving_pj: 0.0,
+        dispatches: Vec::new(),
+    };
+    let mut latencies_ms: Vec<f64> = Vec::new();
+
+    // dispatch one batch at `t`; returns the completion cycle
+    let dispatch = |batch: Vec<u64>,
+                        t: u64,
+                        idle_since: u64,
+                        report: &mut TrafficReport,
+                        latencies_ms: &mut Vec<f64>|
+     -> u64 {
+        let n = batch.len();
+        let be = &svc.per_batch[n - 1];
+
+        // idle gap [idle_since, t): break-even power management
+        let (gap_pj, cold) = svc.idle_window_pj(t - idle_since);
+        report.idle_pj += gap_pj;
+        if cold {
+            report.cold_starts += 1;
+        } else {
+            report.warm_starts += 1;
+            // the batch's BatchEnergy charges a cold power-on; a warm
+            // continuation only owes the steady-state wakeups
+            report.warm_saving_pj += svc.cold_extra_pj;
+        }
+
+        let done = t + be.latency_cycles;
+        report.batches += 1;
+        report.served += n as u64;
+        // clip to the window so busy/horizon can never exceed 100%
+        report.busy_cycles +=
+            done.min(horizon).saturating_sub(t.min(horizon));
+        report.batch_pj += be.total_pj();
+        for &a in &batch {
+            let lat_ms = (done - a) as f64 / svc.clock_hz * 1.0e3;
+            if lat_ms > profile.slo_ms {
+                report.slo_violations += 1;
+            }
+            latencies_ms.push(lat_ms);
+        }
+        report.dispatches.push(DispatchRecord {
+            at_cycle: t,
+            done_cycle: done,
+            size: n,
+            cold,
+            batch_pj: be.total_pj(),
+        });
+        done
+    };
+
+    loop {
+        if let Some(done) = busy_until {
+            // while the accelerator is busy, arrivals wait in the queue
+            if let Some(a) = next_arrival {
+                if a < done {
+                    fifo.push_back(a);
+                    next_arrival = pull(&mut arrivals);
+                    continue;
+                }
+            }
+            // completion
+            clock.advance_to(done);
+            busy_until = None;
+            idle_since = done;
+            if done < horizon {
+                // drain the queue into the batcher; a size trigger
+                // dispatches back-to-back (zero idle gap)
+                while let Some(a) = fifo.pop_front() {
+                    if let Some(batch) = batcher.push(a) {
+                        let end = dispatch(
+                            batch,
+                            done,
+                            idle_since,
+                            &mut report,
+                            &mut latencies_ms,
+                        );
+                        busy_until = Some(end);
+                        break;
+                    }
+                }
+            }
+            continue;
+        }
+
+        // idle: next event is the batch deadline or the next arrival
+        let now = clock.now();
+        let deadline = batcher.deadline_tick();
+        match (next_arrival, deadline) {
+            (None, None) => break,
+            (a, Some(d)) if a.is_none_or(|a| d <= a) => {
+                // the wait trigger (a deadline that expired while the
+                // server was busy fires immediately, at `now`)
+                let t = d.max(now);
+                if t >= horizon {
+                    break;
+                }
+                clock.advance_to(t);
+                let batch = batcher.poll().expect("deadline implies batch");
+                let end = dispatch(
+                    batch,
+                    t,
+                    idle_since,
+                    &mut report,
+                    &mut latencies_ms,
+                );
+                busy_until = Some(end);
+            }
+            (Some(a), _) => {
+                clock.advance_to(a);
+                if let Some(batch) = batcher.push(a) {
+                    let end = dispatch(
+                        batch,
+                        a,
+                        idle_since,
+                        &mut report,
+                        &mut latencies_ms,
+                    );
+                    busy_until = Some(end);
+                }
+                next_arrival = pull(&mut arrivals);
+            }
+            (None, Some(_)) => unreachable!("covered by the guard above"),
+        }
+    }
+
+    // trailing idle: the window from the last completion (or 0) to the
+    // horizon leaks too, under the same break-even policy — without it
+    // a lightly-loaded design would get its parked time for free.  No
+    // batch follows, so no cold/warm start is counted and nothing is
+    // credited back.
+    let tail = horizon.saturating_sub(idle_since);
+    if tail > 0 {
+        report.idle_pj += svc.idle_window_pj(tail).0;
+    }
+
+    report.arrivals = arrivals;
+    report.queued = fifo.len() as u64
+        + batcher.pending_len() as u64
+        + u64::from(next_arrival.is_some());
+    report.latency_ms = Summary::from_samples(&latencies_ms);
+    report
+}
+
+/// Convenience: default batching policy with a scenario-appropriate cap.
+pub fn default_policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_millis(2) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::capstore::arch::Organization;
+    use crate::traffic::ArrivalPattern;
+
+    fn model(sc: &Scenario) -> ServiceModel {
+        ServiceModel::new(&Evaluator::new(), sc, 4).unwrap()
+    }
+
+    fn profile(rate: f64) -> TrafficProfile {
+        TrafficProfile {
+            pattern: ArrivalPattern::Poisson,
+            rate_per_sec: rate,
+            seed: 9,
+            duration_secs: 0.05,
+            slo_ms: 50.0,
+        }
+    }
+
+    #[test]
+    fn service_model_tables_are_consistent() {
+        let svc = model(&Scenario::default());
+        assert_eq!(svc.max_batch(), 4);
+        assert!(svc.gated);
+        assert!(svc.cold_extra_pj > 0.0);
+        assert!(svc.idle_off_mw < svc.idle_on_mw);
+        // plan-level reuse: a steady-state inference can only re-wake a
+        // subset of what a cold start powers on
+        assert!(svc.steady_wakeups <= svc.cold_wakeups);
+        assert!(svc.cold_wakeups > 0);
+        let be = svc.break_even_cycles.expect("gated => break-even");
+        assert!(be > 0);
+        // latency table is monotone in batch size
+        for w in svc.per_batch.windows(2) {
+            assert!(w[0].latency_cycles < w[1].latency_cycles);
+            assert!(w[0].total_pj() < w[1].total_pj());
+        }
+    }
+
+    #[test]
+    fn ungated_scenarios_never_sleep() {
+        let sc = Scenario::builder()
+            .organization(Organization::Smp { gated: false })
+            .build()
+            .unwrap();
+        let svc = model(&sc);
+        assert!(svc.break_even_cycles.is_none());
+        assert_eq!(svc.cold_extra_pj, 0.0);
+        assert_eq!(svc.idle_on_mw.to_bits(), svc.idle_off_mw.to_bits());
+        let r = simulate(&svc, &profile(2000.0), &default_policy(4));
+        assert_eq!(r.cold_starts, 0);
+        assert_eq!(r.warm_saving_pj, 0.0);
+        assert!(r.served > 0);
+    }
+
+    #[test]
+    fn conservation_and_basic_shape() {
+        let svc = model(&Scenario::default());
+        let r = simulate(&svc, &profile(3000.0), &default_policy(4));
+        assert_eq!(r.arrivals, r.served + r.queued);
+        assert_eq!(
+            r.served,
+            r.dispatches.iter().map(|d| d.size as u64).sum::<u64>()
+        );
+        assert_eq!(r.batches, r.dispatches.len() as u64);
+        assert_eq!(r.cold_starts + r.warm_starts, r.batches);
+        assert!(r.mean_occupancy() >= 1.0);
+        assert!(r.total_pj() > 0.0);
+        // dispatches never overlap and stay ordered
+        for w in r.dispatches.windows(2) {
+            assert!(w[0].done_cycle <= w[1].at_cycle);
+        }
+    }
+
+    #[test]
+    fn empty_stream_still_pays_idle_leakage() {
+        let svc = model(&Scenario::default());
+        // one expected arrival in ~20 horizons: this seed produces none
+        let p = TrafficProfile {
+            rate_per_sec: 1.0,
+            duration_secs: 1.0e-4,
+            ..profile(1.0)
+        };
+        let r = simulate(&svc, &p, &default_policy(4));
+        assert_eq!(r.arrivals, r.served + r.queued);
+        if r.arrivals == 0 {
+            assert_eq!(r.batches, 0);
+            assert!(r.latency_ms.is_none());
+            assert_eq!(r.energy_uj_per_inference(), 0.0);
+            // the parked window is not free: batch energy is zero but
+            // the whole horizon leaks under the break-even policy
+            assert_eq!(r.batch_pj, 0.0);
+            assert!(r.idle_pj > 0.0);
+            assert_eq!(r.total_pj().to_bits(), r.idle_pj.to_bits());
+        }
+    }
+
+    #[test]
+    fn idle_accounting_covers_the_whole_horizon() {
+        // with no gating (constant leakage) the idle energy must equal
+        // exactly (horizon - busy) cycles at full leakage: head gap,
+        // inter-batch gaps, and the trailing window all charged
+        let sc = Scenario::builder()
+            .organization(Organization::Smp { gated: false })
+            .build()
+            .unwrap();
+        let svc = model(&sc);
+        let r = simulate(&svc, &profile(2000.0), &default_policy(4));
+        let k = 1.0e-3 / svc.clock_hz * 1.0e12;
+        // busy cycles spill past the horizon when the last batch is
+        // still in flight; only the in-window part displaces idle
+        let busy_in_window: u64 = r
+            .dispatches
+            .iter()
+            .map(|d| {
+                d.done_cycle.min(r.horizon_cycles)
+                    - d.at_cycle.min(r.horizon_cycles)
+            })
+            .sum();
+        let expect = svc.idle_on_mw
+            * (r.horizon_cycles - busy_in_window) as f64
+            * k;
+        let rel = (r.idle_pj - expect).abs() / expect.max(1e-12);
+        assert!(
+            rel < 1e-9,
+            "idle {} vs expected {expect} (busy_in_window {busy_in_window})",
+            r.idle_pj
+        );
+    }
+}

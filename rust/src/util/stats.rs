@@ -11,6 +11,9 @@ pub struct Summary {
     pub mean: f64,
     pub median: f64,
     pub p95: f64,
+    /// Nearest-rank 99th percentile — the tail the serving SLO reports
+    /// care about (p95 hides one bad request in twenty).
+    pub p99: f64,
     pub stddev: f64,
 }
 
@@ -33,6 +36,7 @@ impl Summary {
             mean,
             median: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
             stddev: var.sqrt(),
         })
     }
@@ -60,6 +64,7 @@ mod tests {
         assert_eq!(s.min, 3.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.median, 3.0);
+        assert_eq!(s.p99, 3.0);
         assert_eq!(s.n, 1);
     }
 
@@ -71,6 +76,7 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert_eq!(s.median, 50.0);
         assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
         assert!((s.mean - 50.5).abs() < 1e-9);
     }
 
@@ -79,5 +85,32 @@ mod tests {
         let s = Summary::from_samples(&[5.0, 1.0, 3.0]).unwrap();
         assert_eq!(s.median, 3.0);
         assert_eq!(s.min, 1.0);
+    }
+
+    #[test]
+    fn prop_nearest_rank_percentiles() {
+        // Nearest-rank contract, for p95 and the new p99 alike: the
+        // percentile is an actual sample, at least ceil(p/100 * n)
+        // samples lie at or below it, and fewer than that lie strictly
+        // below.  Plus the ordering p50 <= p95 <= p99 <= max.
+        use crate::testing::{check, Config};
+        check(Config::default().cases(64), |rng| {
+            let n = rng.range(1, 200) as usize;
+            let samples: Vec<f64> =
+                (0..n).map(|_| rng.f64_range(-50.0, 50.0)).collect();
+            let s = Summary::from_samples(&samples).unwrap();
+            for (pct, got) in [(50.0, s.median), (95.0, s.p95), (99.0, s.p99)]
+            {
+                let rank =
+                    ((pct / 100.0) * n as f64).ceil().max(1.0) as usize;
+                let at_or_below =
+                    samples.iter().filter(|&&x| x <= got).count();
+                let below = samples.iter().filter(|&&x| x < got).count();
+                assert!(samples.contains(&got), "p{pct} not a sample");
+                assert!(at_or_below >= rank, "p{pct}: {at_or_below} < {rank}");
+                assert!(below < rank, "p{pct}: {below} >= {rank}");
+            }
+            assert!(s.median <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        });
     }
 }

@@ -1,0 +1,255 @@
+//! Integration invariants of the traffic-driven serving simulator:
+//! request conservation, bit-for-bit energy additivity, determinism,
+//! break-even sleep monotonicity, and the serving-aware DSE regime
+//! shift (the energy-optimal design point moves with the load).
+
+use capstore::capsnet::CapsNetConfig;
+use capstore::dse::Explorer;
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::traffic::{
+    rank_for_traffic, simulate, ArrivalPattern, ServiceModel,
+    TrafficProfile,
+};
+use capstore::coordinator::BatchPolicy;
+use std::time::Duration;
+
+fn policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_millis(2) }
+}
+
+fn service_model(max_batch: usize) -> ServiceModel {
+    ServiceModel::new(&Evaluator::new(), &Scenario::default(), max_batch)
+        .unwrap()
+}
+
+/// Offered load that saturates the simulated accelerator `frac`-fold,
+/// sized so roughly `arrivals` requests land in `duration_secs`.
+fn profile_at(
+    svc: &ServiceModel,
+    frac: f64,
+    arrivals: u64,
+    seed: u64,
+) -> TrafficProfile {
+    let capacity =
+        svc.clock_hz / svc.per_batch[0].latency_cycles as f64;
+    let rate = frac * capacity;
+    TrafficProfile {
+        pattern: ArrivalPattern::Poisson,
+        rate_per_sec: rate,
+        seed,
+        duration_secs: arrivals as f64 / rate,
+        slo_ms: 1.0e6, // irrelevant unless a test says otherwise
+    }
+}
+
+#[test]
+fn requests_are_conserved_for_every_pattern_and_load() {
+    let svc = service_model(8);
+    for pattern in ArrivalPattern::all() {
+        for frac in [0.2, 3.0] {
+            let p = TrafficProfile {
+                pattern,
+                ..profile_at(&svc, frac, 300, 11)
+            };
+            let r = simulate(&svc, &p, &policy(8));
+            assert!(r.arrivals > 0, "{pattern:?} x{frac}: no arrivals");
+            assert_eq!(
+                r.arrivals,
+                r.served + r.queued,
+                "{pattern:?} x{frac}: conservation"
+            );
+            assert_eq!(
+                r.served,
+                r.dispatches.iter().map(|d| d.size as u64).sum::<u64>(),
+                "{pattern:?} x{frac}: served != dispatch sum"
+            );
+            // saturation must leave a backlog; light load must not
+            if frac > 1.0 {
+                assert!(r.queued > 0, "{pattern:?}: no backlog at x{frac}");
+            }
+        }
+    }
+}
+
+#[test]
+fn energy_is_additive_in_batch_energy_terms_bit_for_bit() {
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let svc = ServiceModel::new(&ev, &sc, 8).unwrap();
+    let p = profile_at(&svc, 1.2, 400, 7);
+    let r = simulate(&svc, &p, &policy(8));
+    assert!(r.batches > 1);
+
+    // (1) the report total is the dispatch-order sum of batch_pj terms
+    let mut sum = 0.0;
+    for d in &r.dispatches {
+        sum += d.batch_pj;
+    }
+    assert_eq!(sum.to_bits(), r.batch_pj.to_bits(), "additivity");
+
+    // (2) each term is exactly the facade's BatchEnergy for that size
+    let mut by_size: std::collections::HashMap<usize, f64> =
+        std::collections::HashMap::new();
+    for d in &r.dispatches {
+        let pj = *by_size.entry(d.size).or_insert_with(|| {
+            ev.evaluate_analytical(&Scenario {
+                batch: d.size as u64,
+                ..sc.clone()
+            })
+            .unwrap()
+            .batch
+            .total_pj()
+        });
+        assert_eq!(
+            d.batch_pj.to_bits(),
+            pj.to_bits(),
+            "batch of {} diverged from BatchEnergy",
+            d.size
+        );
+    }
+
+    // (3) the decomposition closes: total = batches - warm + idle
+    let total = r.batch_pj - r.warm_saving_pj + r.idle_pj;
+    assert_eq!(total.to_bits(), r.total_pj().to_bits());
+    assert!(r.idle_pj >= 0.0 && r.warm_saving_pj >= 0.0);
+}
+
+#[test]
+fn same_seed_same_report_different_seed_different_arrivals() {
+    let svc = service_model(8);
+    for pattern in ArrivalPattern::all() {
+        let p = TrafficProfile {
+            pattern,
+            ..profile_at(&svc, 0.6, 250, 21)
+        };
+        let a = simulate(&svc, &p, &policy(8));
+        let b = simulate(&svc, &p, &policy(8));
+        assert_eq!(
+            a.to_json(svc.clock_hz).render(),
+            b.to_json(svc.clock_hz).render(),
+            "{pattern:?}: same seed diverged"
+        );
+        let c = simulate(
+            &svc,
+            &TrafficProfile { seed: 22, ..p.clone() },
+            &policy(8),
+        );
+        assert_ne!(
+            a.to_json(svc.clock_hz).render(),
+            c.to_json(svc.clock_hz).render(),
+            "{pattern:?}: seed is ignored"
+        );
+    }
+}
+
+#[test]
+fn higher_rate_means_fewer_cold_starts() {
+    // The break-even policy sleeps only across gaps longer than the
+    // wakeup pay-back.  Raising the offered load shrinks the gaps, so
+    // the cold-start count can only fall: at trickle load nearly every
+    // batch wakes a cold memory, at saturation batches run back to
+    // back and stay warm.
+    let svc = service_model(8);
+    assert!(svc.break_even_cycles.is_some(), "PG-SEP must gate");
+    let cold = |frac: f64| {
+        let p = profile_at(&svc, frac, 300, 13);
+        let r = simulate(&svc, &p, &policy(8));
+        assert_eq!(r.cold_starts + r.warm_starts, r.batches);
+        r.cold_starts
+    };
+    let trickle = cold(0.05);
+    let mid = cold(0.8);
+    let saturated = cold(3.0);
+    assert!(
+        trickle >= mid && mid >= saturated,
+        "cold starts not monotone: {trickle} / {mid} / {saturated}"
+    );
+    assert!(
+        trickle > saturated,
+        "no regime difference: {trickle} vs {saturated}"
+    );
+    // trickle load: essentially every batch is a cold start
+    assert!(trickle > 100, "trickle produced only {trickle} cold starts");
+    // saturation: back-to-back batches stay warm
+    assert!(saturated < 10, "saturated still cold {saturated} times");
+}
+
+#[test]
+fn slo_violations_appear_under_overload() {
+    let svc = service_model(8);
+    let service_ms =
+        svc.per_batch[0].latency_cycles as f64 / svc.clock_hz * 1.0e3;
+    // generous SLO at light load (50 services + the 2ms batcher wait):
+    // no violations
+    let mut light = profile_at(&svc, 0.1, 150, 17);
+    light.slo_ms = 50.0 * service_ms + 5.0;
+    let r_light = simulate(&svc, &light, &policy(8));
+    assert_eq!(r_light.slo_violations, 0, "light load misses its SLO");
+    // overload with the tightest possible SLO (one service time): the
+    // queueing tail blows past it
+    let mut heavy = profile_at(&svc, 4.0, 300, 17);
+    heavy.slo_ms = service_ms;
+    let r_heavy = simulate(&svc, &heavy, &policy(8));
+    assert!(
+        r_heavy.slo_violation_fraction() > 0.5,
+        "overload at {}x: only {} violations",
+        4.0,
+        r_heavy.slo_violations
+    );
+    let s = r_heavy.latency_ms.as_ref().unwrap();
+    assert!(s.p99 >= s.p95 && s.p95 >= s.median);
+}
+
+#[test]
+fn serving_aware_dse_winner_shifts_with_the_load() {
+    // The acceptance demo: same network, same tech node, two traffic
+    // profiles — the energy-optimal design point differs.  At trickle
+    // load the idle leakage of the sleeping memory dominates, favoring
+    // the smallest-leakage gated design; at saturation the accelerator
+    // never idles and the busy-energy winner of the classic DSE
+    // reasserts itself.
+    let ex = Explorer::new(CapsNetConfig::mnist());
+    let front = Explorer::pareto(&ex.sweep().unwrap());
+    // the regime shift needs at least two gated areas on the front
+    let gated_areas: std::collections::HashSet<u64> = front
+        .iter()
+        .filter(|p| p.organization.gated())
+        .map(|p| p.area_mm2.to_bits())
+        .collect();
+    assert!(gated_areas.len() >= 2, "front degenerate: {front:?}");
+
+    let ev = Evaluator::new();
+    let base = Scenario::default();
+    let svc0 = ServiceModel::new(&ev, &base, 8).unwrap();
+    let trickle = profile_at(&svc0, 0.005, 40, 7);
+    let saturated = profile_at(&svc0, 3.0, 300, 7);
+    let winners = rank_for_traffic(
+        &ev,
+        &base,
+        &front,
+        &[trickle, saturated],
+        &policy(8),
+    )
+    .unwrap();
+    assert_eq!(winners.len(), 2);
+    let (low, high) = (&winners[0], &winners[1]);
+    assert!(
+        !low.point.bit_eq(&high.point),
+        "same winner in both regimes: {:?}",
+        low.point
+    );
+    // and the shift is the predicted one: the trickle winner leaks
+    // less when parked than the saturated winner would
+    assert!(low.point.organization.gated());
+    assert!(
+        low.point.area_mm2 < high.point.area_mm2,
+        "trickle winner should be the smaller design: {} vs {}",
+        low.point.area_mm2,
+        high.point.area_mm2
+    );
+    // the saturated winner tracks the classic busy-energy optimum
+    assert!(
+        high.point.onchip_energy_pj <= low.point.onchip_energy_pj,
+        "saturated winner is not the busier-optimal point"
+    );
+}
