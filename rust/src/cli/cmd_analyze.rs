@@ -1,0 +1,141 @@
+//! `capstore analyze` — the paper's §3 analysis (Fig 4a-e + Eq 1/2),
+//! extracted verbatim from the old monolith; output is bit-identical.
+
+use crate::accel::systolic::SystolicSim;
+use crate::analysis::offchip::OffChipTraffic;
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::capsnet::Operation;
+use crate::report::Table;
+use crate::util::json::Json;
+use crate::util::units::{fmt_bytes, fmt_si};
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct Analyze;
+
+impl Command for Analyze {
+    fn name(&self) -> &'static str {
+        "analyze"
+    }
+
+    fn about(&self) -> &'static str {
+        "the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO]
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario()?;
+        let cfg = sc.network.clone();
+        let sim = SystolicSim::default();
+        let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
+        let cap = req.max_total();
+
+        let mut t_req = Table::new(
+            "Fig 4a/4c — on-chip memory requirements per operation (bytes)",
+            &["op", "data", "weight", "accum", "total", "util%"],
+        );
+        for o in &req.per_op {
+            t_req.row(vec![
+                o.kind.label().to_string(),
+                o.req.data.to_string(),
+                o.req.weight.to_string(),
+                o.req.accum.to_string(),
+                o.req.total().to_string(),
+                format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
+            ]);
+        }
+
+        let mut t_cycles = Table::new(
+            "Fig 4b — clock cycles per operation",
+            &["op", "execs", "cycles", "total"],
+        );
+        for op in Operation::all_kinds(&cfg) {
+            let p = sim.profile(&op);
+            let execs = op.kind.executions(&cfg);
+            t_cycles.row(vec![
+                op.kind.label().into(),
+                execs.to_string(),
+                fmt_si(p.cycles),
+                fmt_si(p.cycles * execs),
+            ]);
+        }
+        let (_, total) = sim.profile_schedule(&cfg);
+        let inference_ms = total as f64 / sim.array.clock_hz * 1e3;
+
+        let mut t_acc = Table::new(
+            "Fig 4d/4e — on-chip accesses per operation (per execution)",
+            &["op", "data R", "data W", "wt R", "wt W", "acc R", "acc W"],
+        );
+        for op in Operation::all_kinds(&cfg) {
+            let p = sim.profile(&op);
+            t_acc.row(vec![
+                op.kind.label().into(),
+                fmt_si(p.data_reads),
+                fmt_si(p.data_writes),
+                fmt_si(p.weight_reads),
+                fmt_si(p.weight_writes),
+                fmt_si(p.accum_reads),
+                fmt_si(p.accum_writes),
+            ]);
+        }
+
+        let mut t_off = Table::new(
+            "Eq (1)/(2) — off-chip accesses per operation",
+            &["op", "reads", "writes"],
+        );
+        for tr in OffChipTraffic::analyze(&cfg, &sim) {
+            t_off.row(vec![
+                tr.kind.label().into(),
+                fmt_si(tr.reads),
+                fmt_si(tr.writes),
+            ]);
+        }
+        let dram_bytes = OffChipTraffic::total_bytes(&cfg, &sim);
+
+        let mut out = Output::new();
+        out.json = Json::obj(vec![
+            ("network", Json::Str(cfg.name.to_string())),
+            (
+                "tables",
+                Json::Arr(vec![
+                    t_req.to_json(),
+                    t_cycles.to_json(),
+                    t_acc.to_json(),
+                    t_off.to_json(),
+                ]),
+            ),
+            ("worst_case_bytes", Json::Num(cap as f64)),
+            ("total_cycles", Json::Num(total as f64)),
+            ("inference_ms", Json::Num(inference_ms)),
+            ("dram_bytes_per_inference", Json::Num(dram_bytes as f64)),
+        ]);
+
+        out.table(t_req);
+        out.text(format!(
+            "overall worst case (dashed line): {}\n",
+            fmt_bytes(cap)
+        ));
+        out.table(t_cycles);
+        out.text(format!(
+            "inference total: {} cycles = {:.3} ms @ {:.1} GHz\n",
+            fmt_si(total),
+            inference_ms,
+            sim.array.clock_hz / 1e9
+        ));
+        out.table(t_acc);
+        out.blank();
+        out.table(t_off);
+        out.text(format!(
+            "total DRAM bytes per inference: {}",
+            fmt_bytes(dram_bytes)
+        ));
+        Ok(out)
+    }
+}

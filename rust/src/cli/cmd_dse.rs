@@ -1,0 +1,255 @@
+//! `capstore dse` — the §4.2 design-space exploration (parallel
+//! incremental engine) and the `--space full` grand sweep; extracted
+//! from the old monolith with bit-identical output.
+
+use crate::capsnet::CapsNetConfig;
+use crate::dse::{Explorer, MultiSweep, SweepSpace};
+use crate::report::Table;
+use crate::util::json::Json;
+use crate::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
+use crate::{Error, Result};
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct Dse;
+
+impl Command for Dse {
+    fn name(&self) -> &'static str {
+        "dse"
+    }
+
+    fn about(&self) -> &'static str {
+        "§4.2 design-space exploration (sweep + Pareto front)"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::TECH_ONLY, spec::DSE]
+    }
+
+    fn long_help(&self) -> &'static str {
+        "`dse` explores the organization/geometry/dma axes itself, so\n\
+         only the workload axes of a --scenario file ([scenario]\n\
+         network/tech) steer a sweep; a file that pins the explored\n\
+         axes is rejected.  Use `capstore evaluate` for a single\n\
+         design point."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario()?;
+        // the exploration sweeps the organization/geometry axes itself,
+        // so a scenario file may only pin the workload axes
+        // (network/tech).  Files that merely restate the effective
+        // defaults — e.g. anything Scenario::to_toml() emits — are
+        // fine; a file that actually CHANGES org/geometry/batch/gating
+        // would be silently overridden by the sweep, and this CLI
+        // rejects rather than ignores (matching the flag registry,
+        // which rejects --org/--banks/--sectors for `dse`).
+        if ctx.scenario_doc().is_some() {
+            let without = ctx.scenario_without_doc()?;
+            if sc.organization != without.organization
+                || sc.geometry != without.geometry
+                || sc.batch != without.batch
+                || sc.gating != without.gating
+                || sc.dma != without.dma
+            {
+                return Err(Error::Config(
+                    "`dse` explores the organization/geometry/dma axes \
+                     itself: the scenario file pins organization/geometry/\
+                     batch/gating/dma values the sweep would override — drop \
+                     those keys (only `[scenario] network`/`tech` steer a \
+                     sweep), or use `capstore evaluate` for a single design \
+                     point"
+                        .into(),
+                ));
+            }
+        }
+        let threads: usize = ctx.parsed("threads")?.unwrap_or(0);
+        let space = ctx.flag("space").unwrap_or("default");
+
+        if space == "full" || space == "grand" {
+            // an explicit model/tech selection narrows the grand sweep:
+            // a flag, or a config/scenario file that actually SETS the
+            // key (a scenario file that only tunes, say, gating must
+            // not collapse the exploration to the default model/node);
+            // the geometry/org flags pick a single design point and
+            // don't apply to an exploration
+            let config_sets_model = ctx
+                .config_doc()
+                .is_some_and(|doc| !doc.str_or("", "model", "").is_empty());
+            let scenario_sets = |key: &str| {
+                ctx.scenario_doc()
+                    .is_some_and(|doc| doc.get("scenario", key).is_some())
+            };
+            let model_filter = (ctx.flags.contains_key("model")
+                || scenario_sets("network")
+                || config_sets_model)
+                .then(|| sc.network.name.to_string());
+            let tech_filter = (ctx.flags.contains_key("tech")
+                || scenario_sets("tech"))
+            .then(|| sc.tech.label());
+            return run_full(
+                ctx,
+                threads,
+                model_filter.as_deref(),
+                tech_filter,
+            );
+        }
+
+        let mut ex = Explorer::new(sc.network.clone()).with_threads(threads);
+        ex.model.tech = sc.tech.technology();
+        ex.space = match space {
+            "default" => SweepSpace::default(),
+            "large" => SweepSpace::large(),
+            other => {
+                return Err(Error::Config(format!(
+                    "--space: want default|large|full, got {other:?}"
+                )))
+            }
+        };
+
+        let t0 = std::time::Instant::now();
+        let points = ex.sweep()?;
+        let secs = t0.elapsed().as_secs_f64();
+        let front = Explorer::pareto(&points);
+        let best = Explorer::best_energy(&points).expect("non-empty sweep");
+
+        let mut t = Table::new(
+            "DSE — Pareto front over (on-chip energy, area)",
+            &["org", "banks", "sectors", "dma", "energy/inf", "area mm2",
+              "capacity", "latency cy"],
+        );
+        for p in &front {
+            t.row(vec![
+                p.organization.label().into(),
+                p.banks.to_string(),
+                p.sectors.to_string(),
+                p.dma.model.label().into(),
+                fmt_energy_uj(p.onchip_energy_pj),
+                format!("{:.3}", p.area_mm2),
+                fmt_bytes(p.capacity_bytes),
+                fmt_si(p.latency_cycles),
+            ]);
+        }
+
+        let mut out = Output::new();
+        out.json = Json::obj(vec![
+            ("network", Json::Str(sc.network.name.to_string())),
+            ("tech", Json::Str(sc.tech.label().to_string())),
+            ("points", Json::Num(points.len() as f64)),
+            ("seconds", Json::Num(secs)),
+            ("pareto_front", t.to_json()),
+            (
+                "best",
+                Json::obj(vec![
+                    (
+                        "org",
+                        Json::Str(best.organization.label().to_string()),
+                    ),
+                    ("banks", Json::Num(best.banks as f64)),
+                    ("sectors", Json::Num(best.sectors as f64)),
+                    ("energy_pj", Json::Num(best.onchip_energy_pj)),
+                    ("area_mm2", Json::Num(best.area_mm2)),
+                ]),
+            ),
+        ]);
+
+        out.table(t);
+        out.text(format!(
+            "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
+            best.organization.label(),
+            best.banks,
+            best.sectors,
+            fmt_energy_uj(best.onchip_energy_pj)
+        ));
+        out.text(format!(
+            "explored {} design points in {:.1} ms ({:.0} points/s)",
+            points.len(),
+            secs * 1.0e3,
+            points.len() as f64 / secs.max(1e-12)
+        ));
+        Ok(out)
+    }
+}
+
+/// The grand sweep: every named network (or just `--model`) x every
+/// technology node (or just `--tech`) x the large space, with per-pair
+/// winners and throughput.
+fn run_full(
+    ctx: &CommandContext,
+    threads: usize,
+    model: Option<&str>,
+    tech: Option<&'static str>,
+) -> Result<Output> {
+    let mut ms = MultiSweep { threads, ..MultiSweep::default() };
+    if let Some(name) = model {
+        ms.models.retain(|m| m.name == name);
+        if ms.models.is_empty() {
+            return Err(Error::Config(format!(
+                "unknown model {name:?} (want one of {})",
+                CapsNetConfig::names().join(", ")
+            )));
+        }
+    }
+    if let Some(node) = tech {
+        ms.techs.retain(|(n, _)| *n == node);
+    }
+    // eager, before the sweep runs — the largest grand sweep takes a
+    // while and should not look hung (table mode only, as before)
+    ctx.progress(format!(
+        "grand sweep: {} models x {} tech nodes x {} points = {} total",
+        ms.models.len(),
+        ms.techs.len(),
+        ms.space.num_points(),
+        ms.num_points()
+    ));
+    let mut out = Output::new();
+    let t0 = std::time::Instant::now();
+    let all = ms.run()?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "grand DSE — min-energy winner per (model, tech node)",
+        &["model", "tech", "org", "banks", "sectors", "dma",
+          "energy/inf", "area mm2"],
+    );
+    for cfg in &ms.models {
+        for (tech_name, _) in &ms.techs {
+            let best = all
+                .iter()
+                .filter(|mp| mp.model == cfg.name && mp.tech == *tech_name)
+                .min_by(|a, b| {
+                    a.point
+                        .onchip_energy_pj
+                        .partial_cmp(&b.point.onchip_energy_pj)
+                        .unwrap()
+                })
+                .expect("non-empty slice");
+            t.row(vec![
+                best.model.into(),
+                best.tech.into(),
+                best.point.organization.label().into(),
+                best.point.banks.to_string(),
+                best.point.sectors.to_string(),
+                best.point.dma.model.label().into(),
+                fmt_energy_uj(best.point.onchip_energy_pj),
+                format!("{:.3}", best.point.area_mm2),
+            ]);
+        }
+    }
+    out.json = Json::obj(vec![
+        ("points", Json::Num(all.len() as f64)),
+        ("seconds", Json::Num(secs)),
+        ("winners", t.to_json()),
+    ]);
+    out.table(t);
+    out.text(format!(
+        "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
+        all.len(),
+        secs * 1.0e3,
+        all.len() as f64 / secs.max(1e-12)
+    ));
+    Ok(out)
+}

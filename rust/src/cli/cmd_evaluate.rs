@@ -1,0 +1,203 @@
+//! `capstore evaluate` — Tables 1/2, Figs 5/10/11, plus the full
+//! evaluation of the selected scenario; extracted from the old
+//! monolith with bit-identical output.
+
+use crate::capstore::arch::{Organization, DEFAULT_BANKS, DEFAULT_SECTORS};
+use crate::report::paper::PaperReference;
+use crate::report::Table;
+use crate::scenario::{Evaluator, Geometry, Scenario};
+use crate::util::json::Json;
+use crate::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct Evaluate;
+
+impl Command for Evaluate {
+    fn name(&self) -> &'static str {
+        "evaluate"
+    }
+
+    fn about(&self) -> &'static str {
+        "Table 1/2 + Fig 10 views + one Scenario evaluation"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME]
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario()?;
+        let ev = Evaluator::new();
+        let paper = PaperReference::new();
+
+        // Tables 1/2: all six organizations at the paper's default
+        // geometry for the scenario's network + node (one facade,
+        // shared caches).
+        let mut t1 = Table::new(
+            "Table 1 — organizations (sizes in bytes)",
+            &["org", "macro", "size", "banks", "sectors", "ports"],
+        );
+        let mut t2 = Table::new(
+            "Table 2 — area and on-chip energy per organization",
+            &["org", "area mm2", "energy/inf", "vs SMP", "paper vs SMP"],
+        );
+        let mut smp_energy = None;
+        let mut org_evals = Vec::new();
+        for org in Organization::all() {
+            let org_sc = Scenario {
+                organization: org,
+                geometry: Geometry {
+                    banks: DEFAULT_BANKS,
+                    sectors: DEFAULT_SECTORS,
+                },
+                ..sc.clone()
+            };
+            let e = ev.evaluate_analytical(&org_sc)?;
+            for m in &e.architecture.macros {
+                t1.row(vec![
+                    org.label().into(),
+                    m.role.label().into(),
+                    m.sram.size_bytes.to_string(),
+                    m.sram.banks.to_string(),
+                    m.sram.sectors.to_string(),
+                    m.sram.ports.to_string(),
+                ]);
+            }
+            if org.label() == "SMP" {
+                smp_energy = Some(e.onchip_pj());
+            }
+            let vs_smp = smp_energy.map(|s| e.onchip_pj() / s).unwrap_or(1.0);
+            let paper_ratio = paper
+                .energy_vs_smp(org.label())
+                .map(|r| format!("{r:.3}"))
+                .unwrap_or_else(|| "-".into());
+            t2.row(vec![
+                org.label().into(),
+                format!("{:.3}", e.area_mm2()),
+                fmt_energy_uj(e.onchip_pj()),
+                format!("{vs_smp:.3}"),
+                paper_ratio,
+            ]);
+            org_evals.push(e);
+        }
+
+        // Fig 5 / Fig 11 headline systems (reusing the six evaluations)
+        let a = ev.all_onchip_baseline(&sc)?;
+        let by_label = |l: &str| {
+            org_evals
+                .iter()
+                .find(|e| e.scenario.organization.label() == l)
+                .expect("all six organizations evaluated")
+        };
+        let b = by_label("SMP").system.clone();
+        let c = by_label("PG-SEP").system.clone();
+
+        // the scenario actually selected: the only full evaluation
+        // (with the event-level cross-check) — the table loop above is
+        // analytical-only, so exactly one event sim runs per invocation
+        let selected = ev.evaluate(&sc)?;
+
+        let mut out = Output::new();
+        let systems: Vec<Json> = [&a, &b, &c]
+            .iter()
+            .map(|sys| {
+                Json::obj(vec![
+                    ("label", Json::Str(sys.label.clone())),
+                    ("accel_pj", Json::Num(sys.accel_pj)),
+                    ("onchip_pj", Json::Num(sys.onchip_pj)),
+                    ("offchip_pj", Json::Num(sys.offchip_pj)),
+                    ("total_pj", Json::Num(sys.total_pj())),
+                    ("memory_share", Json::Num(sys.memory_share())),
+                ])
+            })
+            .collect();
+        out.json = Json::obj(vec![
+            ("table1", t1.to_json()),
+            ("table2", t2.to_json()),
+            ("systems", Json::Arr(systems)),
+            // full Evaluation of the selected scenario (its own
+            // "scenario" sub-object names the evaluated point)
+            ("selected", selected.to_json()),
+        ]);
+
+        out.table(t1);
+        out.blank();
+        out.table(t2);
+        out.text(
+            "\n== Fig 5 / Fig 11 — whole-system energy per inference ==",
+        );
+        for sys in [&a, &b, &c] {
+            out.text(format!(
+                "{:18} accel {:>10}  onchip {:>10}  offchip {:>10}  total {:>10}  (memory {:.1}%)",
+                sys.label,
+                fmt_energy_uj(sys.accel_pj),
+                fmt_energy_uj(sys.onchip_pj),
+                fmt_energy_uj(sys.offchip_pj),
+                fmt_energy_uj(sys.total_pj()),
+                100.0 * sys.memory_share()
+            ));
+        }
+        out.blank();
+        out.text(PaperReference::delta_line(
+            "hierarchy saving (b vs a)",
+            1.0 - b.total_pj() / a.total_pj(),
+            PaperReference::HIERARCHY_SAVING,
+        ));
+        out.text(PaperReference::delta_line(
+            "PG-SEP on-chip saving vs (b)",
+            1.0 - c.onchip_pj / b.onchip_pj,
+            PaperReference::PG_SEP_ONCHIP_SAVING,
+        ));
+        out.text(PaperReference::delta_line(
+            "PG-SEP total saving vs (a)",
+            1.0 - c.total_pj() / a.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_A,
+        ));
+        out.text(PaperReference::delta_line(
+            "PG-SEP total saving vs (b)",
+            1.0 - c.total_pj() / b.total_pj(),
+            PaperReference::PG_SEP_TOTAL_VS_B,
+        ));
+
+        out.text(format!("\n== scenario {} ==", selected.scenario.label()));
+        out.text(format!(
+            "onchip {}  offchip {}  accel {}  total {}",
+            fmt_energy_uj(selected.onchip_pj()),
+            fmt_energy_uj(selected.system.offchip_pj),
+            fmt_energy_uj(selected.system.accel_pj),
+            fmt_energy_uj(selected.total_pj()),
+        ));
+        out.text(format!(
+            "area {:.3} mm2, capacity {}, batch {} -> {} per batch",
+            selected.area_mm2(),
+            fmt_bytes(selected.capacity_bytes()),
+            selected.scenario.batch,
+            fmt_energy_uj(selected.batch_pj()),
+        ));
+        if selected.timeline.stall_cycles() > 0 || selected.scenario.batch > 1
+        {
+            out.text(format!(
+                "timeline: batch latency {} cycles ({} DMA stall), \
+                 pipelining saves {}",
+                fmt_si(selected.batch.latency_cycles),
+                fmt_si(selected.timeline.stall_cycles()),
+                fmt_energy_uj(selected.batch.pipeline_saving_pj),
+            ));
+        }
+        if let Some(event) = &selected.event {
+            out.text(format!(
+                "event-sim: static {}  wakeup {}  transitions {}  stall cycles {}",
+                fmt_energy_uj(event.static_pj),
+                fmt_energy_uj(event.wakeup_pj),
+                event.transitions,
+                event.not_ready_cycles,
+            ));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,86 @@
+//! `capstore help [<cmd>] [--all]` — usage, one command's reference,
+//! or the full dump, all generated from the registry.
+
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::{help, registry, Command};
+
+pub struct HelpCmd;
+
+impl Command for HelpCmd {
+    fn name(&self) -> &'static str {
+        "help"
+    }
+
+    fn about(&self) -> &'static str {
+        "show usage, one command (`help <cmd>`), or everything (--all)"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::HELP]
+    }
+
+    fn max_positionals(&self) -> usize {
+        1
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<cmd>]"
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let mut out = Output::new();
+        if ctx.flags.contains_key("all") {
+            // `help --all evaluate` is ambiguous — one command or all
+            // of them?  Rejected like every other ambiguous input in
+            // this CLI, never silently resolved.
+            if let Some(name) = ctx.positionals.first() {
+                return Err(crate::Error::Config(format!(
+                    "`help --all` dumps every command and `help {name}` \
+                     one of them — give one or the other"
+                )));
+            }
+            out.text(help::reference());
+        } else if let Some(name) = ctx.positionals.first() {
+            let cmd = registry::find_or_suggest(name)?;
+            out.text(help::command_help(cmd));
+        } else {
+            out.text(help::usage());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Flags;
+    use super::*;
+
+    fn run_help(positionals: Vec<String>, flags: Flags) -> Result<Output> {
+        let ctx = CommandContext::new("help", positionals, flags)?;
+        HelpCmd.run(&ctx)
+    }
+
+    #[test]
+    fn help_variants_resolve() {
+        assert!(run_help(Vec::new(), Flags::new()).is_ok());
+        assert!(run_help(vec!["evaluate".into()], Flags::new()).is_ok());
+        let mut flags = Flags::new();
+        flags.insert("all".into(), String::new());
+        assert!(run_help(Vec::new(), flags).is_ok());
+        // unknown command gets the canonical suggestion error
+        let err =
+            run_help(vec!["evalute".into()], Flags::new()).unwrap_err();
+        assert!(err.to_string().contains("did you mean `evaluate`"));
+        // `help --all <cmd>` is ambiguous and rejected, not silently
+        // resolved in favor of --all
+        let mut flags = Flags::new();
+        flags.insert("all".into(), String::new());
+        let err =
+            run_help(vec!["evaluate".into()], flags).unwrap_err();
+        assert!(err.to_string().contains("give one or the other"));
+    }
+}

@@ -1,0 +1,78 @@
+//! `capstore info` — artifact manifest + environment summary;
+//! extracted from the old monolith with bit-identical output.
+
+use std::path::PathBuf;
+
+use crate::capsnet::CapsNetConfig;
+use crate::runtime::manifest::ArtifactManifest;
+use crate::scenario::TechNode;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct Info;
+
+impl Command for Info {
+    fn name(&self) -> &'static str {
+        "info"
+    }
+
+    fn about(&self) -> &'static str {
+        "artifact manifest + environment summary"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::INFO]
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let rc = ctx.run_config();
+        let dir = PathBuf::from(&rc.artifact_dir);
+        let m = ArtifactManifest::load(&dir)?;
+
+        let mut out = Output::new();
+        out.text(format!("artifact dir: {}", dir.display()));
+        out.text(format!(
+            "networks:     {}",
+            CapsNetConfig::names().join(", ")
+        ));
+        out.text(format!("tech nodes:   {}", TechNode::names().join(", ")));
+        out.text(format!("param order:  {:?}", m.param_order));
+
+        let mut networks: Vec<Json> = Vec::new();
+        for (name, entry) in &m.configs {
+            let validated = if let Some(cfg) = CapsNetConfig::by_name(name) {
+                m.validate_against(name, &cfg)?;
+                true
+            } else {
+                false
+            };
+            out.text(format!(
+                "config {name}: batches {:?}, {} ops, weights {} ({} params)",
+                entry.model.keys().collect::<Vec<_>>(),
+                entry.ops.len(),
+                entry.weights,
+                entry.num_params
+            ));
+            if validated {
+                out.text("  geometry cross-check vs rust model: OK");
+            }
+            networks.push(Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("ops", Json::Num(entry.ops.len() as f64)),
+                ("num_params", Json::Num(entry.num_params as f64)),
+                ("validated", Json::Bool(validated)),
+            ]));
+        }
+        out.json = Json::obj(vec![
+            ("artifact_dir", Json::Str(dir.display().to_string())),
+            ("networks", Json::str_arr(CapsNetConfig::names())),
+            ("configs", Json::Arr(networks)),
+        ]);
+        Ok(out)
+    }
+}

@@ -1,0 +1,151 @@
+//! `capstore serve` — run the PJRT inference server on synthetic
+//! digits.  The PJRT runtime sits behind the default-off `pjrt`
+//! feature; without it the command is registered (so help/completions
+//! stay complete) but errors at run time with the rebuild hint.
+
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct Serve;
+
+impl Command for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn about(&self) -> &'static str {
+        "run the PJRT inference server on synthetic digits"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME, spec::SERVE]
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Needs the `pjrt` feature (vendored `xla` crate) and AOT\n\
+         artifacts; the resolved scenario drives the energy accounting\n\
+         (organization, geometry, tech node) while the legacy run\n\
+         config contributes the queueing/batching knobs."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        serve_impl(ctx)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_impl(_ctx: &CommandContext) -> Result<Output> {
+    Err(crate::Error::Config(
+        "`capstore serve` needs the PJRT runtime: rebuild with \
+         `--features pjrt` (requires the vendored `xla` crate)"
+            .into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_impl(ctx: &CommandContext) -> Result<Output> {
+    use std::path::PathBuf;
+
+    use crate::coordinator::server::InferenceServer;
+    use crate::testing::SplitMix64;
+    use crate::util::json::Json;
+    use crate::util::units::fmt_energy_uj;
+
+    let rc = ctx.run_config();
+    let sc = ctx.scenario()?;
+    let requests: usize = ctx.parsed("requests")?.unwrap_or(64);
+    let clients: usize = ctx.parsed("clients")?.unwrap_or(4).max(1);
+
+    // eager, before the server starts — table mode only, as before
+    ctx.progress(format!(
+        "serving scenario={} requests={requests} clients={clients}",
+        sc.label()
+    ));
+    let mut out = Output::new();
+    // the resolved scenario (config/file/flags) drives the energy
+    // accounting in full — organization, geometry, and tech node; the
+    // legacy run config contributes only the queueing/batching knobs
+    let server = InferenceServer::start(
+        PathBuf::from(&rc.artifact_dir),
+        sc.network.name.to_string(),
+        rc.server_config(sc.clone()),
+    )?;
+
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        let per_client =
+            requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(0xD161 + c as u64);
+            let mut preds = Vec::new();
+            for _ in 0..per_client {
+                let img: Vec<f32> =
+                    (0..784).map(|_| rng.f64() as f32).collect();
+                let resp = h.infer(img).expect("infer failed");
+                preds.push(resp.output.predicted);
+            }
+            preds
+        }));
+    }
+    let served: usize = joins
+        .into_iter()
+        .map(|j| j.join().expect("client died").len())
+        .sum();
+    let m = server.shutdown();
+
+    let mut fields = vec![
+        ("served", Json::Num(served as f64)),
+        ("wall_seconds", Json::Num(m.wall_seconds)),
+        ("throughput", Json::Num(m.throughput())),
+        ("mean_occupancy", Json::Num(m.mean_occupancy())),
+        ("sim_energy_pj", Json::Num(m.sim_energy_pj)),
+        (
+            "energy_uj_per_inference",
+            Json::Num(m.energy_uj_per_inference()),
+        ),
+        (
+            "organization",
+            Json::Str(sc.organization.label().to_string()),
+        ),
+    ];
+    if let Some(s) = m.latency.summary() {
+        fields.push((
+            "latency_ms",
+            Json::obj(vec![
+                ("median", Json::Num(s.median)),
+                ("p95", Json::Num(s.p95)),
+                ("p99", Json::Num(s.p99)),
+                ("max", Json::Num(s.max)),
+            ]),
+        ));
+    }
+    out.json = Json::obj(fields);
+
+    out.text(format!(
+        "served {served} requests in {:.2}s",
+        m.wall_seconds
+    ));
+    out.text(format!(
+        "throughput {:.1} inf/s, mean batch occupancy {:.2}",
+        m.throughput(),
+        m.mean_occupancy()
+    ));
+    if let Some(s) = m.latency.summary() {
+        out.text(format!(
+            "latency ms: median {:.2} p95 {:.2} p99 {:.2} max {:.2}",
+            s.median, s.p95, s.p99, s.max
+        ));
+    }
+    out.text(format!(
+        "simulated memory+accel energy: {} total, {:.2} µJ/inference ({})",
+        fmt_energy_uj(m.sim_energy_pj),
+        m.energy_uj_per_inference(),
+        sc.organization.label()
+    ));
+    Ok(out)
+}

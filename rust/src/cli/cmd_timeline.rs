@@ -1,0 +1,185 @@
+//! `capstore timeline [<net> [<org>]]` — render the cycle-resolved
+//! Timeline IR: op intervals, per-macro gating segments, DMA stalls;
+//! extracted from the old monolith with bit-identical output.
+
+use crate::report::Table;
+use crate::scenario::Evaluator;
+use crate::util::json::Json;
+use crate::util::units::{fmt_energy_uj, fmt_si};
+use crate::Result;
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct TimelineCmd;
+
+impl Command for TimelineCmd {
+    fn name(&self) -> &'static str {
+        "timeline"
+    }
+
+    fn about(&self) -> &'static str {
+        "render the cycle-resolved Timeline IR"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME]
+    }
+
+    fn max_positionals(&self) -> usize {
+        2
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<net> [<org>]]"
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Renders op intervals with per-op utilization over time, merged\n\
+         per-macro gating segments, DMA stalls (when transfers are not\n\
+         hidden), and the batch/pipelining summary.  A positional given\n\
+         together with its flag form (`timeline small --model mnist`)\n\
+         is a conflict and errors out."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario_with_positionals()?;
+
+        let ev = Evaluator::new();
+        let e = ev.evaluate(&sc)?;
+        let tl = e.timeline();
+
+        // op intervals + per-op utilization (Fig 4a/4c over time)
+        let mut headers: Vec<String> =
+            ["#", "inf", "op", "start", "end", "util%"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        for m in &tl.macros {
+            headers.push(format!("{} ON", m.label));
+        }
+        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut t_ops =
+            Table::new("Timeline — op intervals and ON sectors", &hrefs);
+        for row in e.utilization() {
+            let mut cells = vec![
+                row.op_index.to_string(),
+                row.inference.to_string(),
+                row.kind.label().to_string(),
+                row.interval.start.to_string(),
+                row.interval.end.to_string(),
+                format!("{:.1}", 100.0 * row.on_fraction),
+            ];
+            for (m, &on) in tl.macros.iter().zip(&row.sectors_on) {
+                cells.push(format!("{on}/{}", m.total_sectors));
+            }
+            t_ops.row(cells);
+        }
+
+        // per-macro gating segments (merged constant-ON runs)
+        let mut t_seg = Table::new(
+            "Timeline — per-macro gating segments",
+            &["macro", "start", "end", "cycles", "ON sectors", "state"],
+        );
+        for (mi, m) in tl.macros.iter().enumerate() {
+            for (iv, on) in tl.macro_segments(mi) {
+                let state = if on == 0 {
+                    "OFF"
+                } else if on < m.total_sectors {
+                    "partial"
+                } else {
+                    "ON"
+                };
+                t_seg.row(vec![
+                    m.label.to_string(),
+                    iv.start.to_string(),
+                    iv.end.to_string(),
+                    fmt_si(iv.cycles()),
+                    format!("{on}/{}", m.total_sectors),
+                    state.to_string(),
+                ]);
+            }
+        }
+
+        // DMA stalls (only present when transfers are not hidden)
+        let mut t_stall =
+            Table::new("Timeline — DMA stalls", &["start", "end", "cycles"]);
+        for s in &tl.stalls {
+            t_stall.row(vec![
+                s.interval.start.to_string(),
+                s.interval.end.to_string(),
+                fmt_si(s.interval.cycles()),
+            ]);
+        }
+
+        let mut out = Output::new();
+        out.json = Json::obj(vec![
+            ("scenario", Json::Str(sc.label())),
+            ("ops", t_ops.to_json()),
+            ("gating_segments", t_seg.to_json()),
+            ("stalls", t_stall.to_json()),
+            ("total_cycles", Json::Num(tl.total_cycles as f64)),
+            ("stall_cycles", Json::Num(tl.stall_cycles() as f64)),
+            ("transitions", Json::Num(tl.transitions() as f64)),
+            ("wakeup_pj", Json::Num(tl.wakeup_pj())),
+            ("static_pj", Json::Num(tl.static_pj())),
+            ("batch_pj", Json::Num(e.batch_pj())),
+            ("pipeline_saving_pj", Json::Num(e.batch.pipeline_saving_pj)),
+        ]);
+
+        out.text(format!("scenario: {}", sc.label()));
+        out.table(t_ops);
+        out.blank();
+        out.table(t_seg);
+        if !tl.stalls.is_empty() {
+            out.blank();
+            out.table(t_stall);
+        }
+        out.text(format!(
+            "\nmakespan: {} cycles ({:.3} ms), batch {}, stalls {}",
+            fmt_si(tl.total_cycles),
+            tl.latency_secs() * 1.0e3,
+            sc.batch,
+            fmt_si(tl.stall_cycles()),
+        ));
+        out.text(format!(
+            "gating: {} transitions, wakeup {}, event static {}",
+            tl.transitions(),
+            fmt_energy_uj(tl.wakeup_pj()),
+            fmt_energy_uj(tl.static_pj()),
+        ));
+        out.text(format!(
+            "batch energy: {} ({} saved by pipelining)",
+            fmt_energy_uj(e.batch_pj()),
+            fmt_energy_uj(e.batch.pipeline_saving_pj),
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Flags;
+    use super::*;
+
+    #[test]
+    fn timeline_positionals_conflict_with_flags() {
+        let mut flags = Flags::new();
+        flags.insert("model".into(), "mnist".into());
+        let ctx =
+            CommandContext::new("timeline", vec!["small".into()], flags)
+                .unwrap();
+        assert!(TimelineCmd.run(&ctx).is_err());
+        let mut flags = Flags::new();
+        flags.insert("org".into(), "SMP".into());
+        let ctx = CommandContext::new(
+            "timeline",
+            vec!["mnist".into(), "PG-SEP".into()],
+            flags,
+        )
+        .unwrap();
+        assert!(TimelineCmd.run(&ctx).is_err());
+    }
+}

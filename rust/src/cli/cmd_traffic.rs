@@ -1,0 +1,384 @@
+//! `capstore traffic [<net> [<org>]]` — deterministic serving
+//! simulation (SLO + energy) and the serving-aware DSE re-ranking
+//! (`--rates`); extracted from the old monolith with bit-identical
+//! output and the same conflict-rejection order.
+
+use crate::coordinator::BatchPolicy;
+use crate::dse::Explorer;
+use crate::report::Table;
+use crate::scenario::{Evaluator, Scenario};
+use crate::traffic::{
+    rank_for_traffic, simulate, ArrivalPattern, ServiceModel,
+    TrafficProfile,
+};
+use crate::util::json::Json;
+use crate::util::units::fmt_energy_uj;
+use crate::{Error, Result};
+
+use super::context::{bad_flag, CommandContext};
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct TrafficCmd;
+
+impl Command for TrafficCmd {
+    fn name(&self) -> &'static str {
+        "traffic"
+    }
+
+    fn about(&self) -> &'static str {
+        "deterministic serving simulation (SLO + energy), --rates DSE"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME_UNBATCHED, spec::TRAFFIC]
+    }
+
+    fn max_positionals(&self) -> usize {
+        2
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<net> [<org>]]"
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Simulates a seeded request stream against the scenario on a\n\
+         virtual cycle clock — same (pattern, rate, seed) in, identical\n\
+         report out, byte for byte.  `--rates R1,R2,...` is the\n\
+         serving-aware DSE: it sweeps the scenario's (network, tech)\n\
+         pair, takes the Pareto front, and re-ranks it per traffic\n\
+         profile, so it rejects any pinned design-point axis the\n\
+         ranking would override."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let rc = ctx.run_config();
+        let sc = ctx.scenario_with_positionals()?;
+
+        // `--rates` re-ranks a Pareto front, i.e. it explores the
+        // organization/geometry/dma axes itself — a pinned design point
+        // would be silently overridden by the sweep, and this CLI
+        // rejects rather than ignores (mirroring `capstore dse`).
+        if ctx.flags.contains_key("rates") {
+            if ctx.positionals.get(1).is_some() {
+                return Err(Error::Config(
+                    "`traffic <net> <org> --rates` pins an organization \
+                     the front re-ranking sweeps over — drop the \
+                     organization (the ranking tries every front point), \
+                     or use --rate to simulate that single design"
+                        .into(),
+                ));
+            }
+            for pinned in ["org", "banks", "sectors", "dma", "dma-bw"] {
+                if ctx.flags.contains_key(pinned) {
+                    return Err(Error::Config(format!(
+                        "`--rates` explores the organization/geometry/dma \
+                         axes itself: --{pinned} would be silently \
+                         overridden — drop it, or use --rate to simulate \
+                         that single design point"
+                    )));
+                }
+            }
+            if let Some(doc) = ctx.config_doc() {
+                for key in ["organization", "banks", "sectors"] {
+                    if doc.get("memory", key).is_some() {
+                        return Err(Error::Config(format!(
+                            "`--rates` explores the organization/geometry \
+                             axes itself: the --config file pins \
+                             `[memory] {key}`, which the front re-ranking \
+                             would override — drop it, or use --rate for \
+                             a single design point"
+                        )));
+                    }
+                }
+            }
+            if ctx.scenario_doc().is_some() {
+                let without = ctx.scenario_without_doc()?;
+                if sc.organization != without.organization
+                    || sc.geometry != without.geometry
+                    || sc.dma != without.dma
+                {
+                    return Err(Error::Config(
+                        "`--rates` explores the organization/geometry/dma \
+                         axes itself: the scenario file pins values the \
+                         front re-ranking would override — drop those \
+                         keys, or use --rate for a single design point"
+                            .into(),
+                    ));
+                }
+            }
+        }
+
+        // workload: scenario [traffic] section (if any) under the flags
+        let mut profile = sc.traffic.clone().unwrap_or_default();
+        if let Some(v) = ctx.flag("pattern") {
+            profile.pattern = ArrivalPattern::by_name(v).ok_or_else(|| {
+                Error::Config(format!(
+                    "--pattern: want one of {}, got {v:?}",
+                    ArrivalPattern::names().join("|")
+                ))
+            })?;
+        }
+        if let Some(v) = ctx.parsed("rate")? {
+            profile.rate_per_sec = v;
+        }
+        if let Some(v) = ctx.parsed("seed")? {
+            profile.seed = v;
+        }
+        if let Some(v) = ctx.parsed("duration")? {
+            profile.duration_secs = v;
+        }
+        if let Some(v) = ctx.parsed("slo-ms")? {
+            profile.slo_ms = v;
+        }
+        profile.validate()?;
+
+        // batching triggers: run-config [server] knobs under the flags
+        let mut policy =
+            BatchPolicy { max_batch: rc.max_batch, max_wait: rc.max_wait };
+        if let Some(v) = ctx.parsed("max-batch")? {
+            policy.max_batch = v;
+            if policy.max_batch == 0 {
+                return Err(Error::Config(
+                    "--max-batch must be > 0".into(),
+                ));
+            }
+        }
+        if let Some(ms) = ctx.parsed::<f64>("max-wait-ms")? {
+            if !(ms.is_finite() && ms >= 0.0) {
+                return Err(Error::Config(
+                    "--max-wait-ms must be >= 0".into(),
+                ));
+            }
+            policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
+        }
+
+        let ev = Evaluator::new();
+        if let Some(list) = ctx.flag("rates") {
+            if ctx.flags.contains_key("rate") {
+                return Err(Error::Config(
+                    "--rate simulates one profile, --rates re-ranks the \
+                     Pareto front — give one or the other"
+                        .into(),
+                ));
+            }
+            return run_rank(&ev, &sc, &profile, &policy, list);
+        }
+
+        let svc = ServiceModel::new(&ev, &sc, policy.max_batch)?;
+        let report = simulate(&svc, &profile, &policy);
+
+        let mut out = Output::new();
+        out.json = report.to_json(svc.clock_hz);
+
+        out.text(format!("scenario: {}", sc.label()));
+        out.text(format!("traffic:  {}", profile.label()));
+        out.text(format!(
+            "\narrivals {}  served {}  queued {}  in {} batches \
+             (mean occupancy {:.2})",
+            report.arrivals,
+            report.served,
+            report.queued,
+            report.batches,
+            report.mean_occupancy(),
+        ));
+        out.text(format!(
+            "throughput {:.1} inf/s over a {:.3}s window \
+             (busy {:.1}%)",
+            report.throughput_per_sec(svc.clock_hz),
+            profile.duration_secs,
+            100.0 * report.busy_cycles as f64
+                / report.horizon_cycles.max(1) as f64,
+        ));
+        if let Some(s) = &report.latency_ms {
+            out.text(format!(
+                "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  \
+                 max {:.3}",
+                s.median, s.p95, s.p99, s.max
+            ));
+        }
+        out.text(format!(
+            "SLO {} ms: {} violations ({:.2}% of served)",
+            profile.slo_ms,
+            report.slo_violations,
+            100.0 * report.slo_violation_fraction(),
+        ));
+        match report.break_even_cycles {
+            Some(be) => out.text(format!(
+                "idle gating: {} cold starts, {} warm starts \
+                 (break-even {} cycles)",
+                report.cold_starts, report.warm_starts, be
+            )),
+            None => out.text(
+                "idle gating: organization is ungated — memory \
+                 leaks at full power between batches",
+            ),
+        };
+        out.text(format!(
+            "energy: batches {} + idle {} - warm saving {} = {} \
+             ({:.3} µJ/inference)",
+            fmt_energy_uj(report.batch_pj),
+            fmt_energy_uj(report.idle_pj),
+            fmt_energy_uj(report.warm_saving_pj),
+            fmt_energy_uj(report.total_pj()),
+            report.energy_uj_per_inference(),
+        ));
+        Ok(out)
+    }
+}
+
+/// `capstore traffic --rates R1,R2,...`: the serving-aware DSE.  Sweep
+/// the scenario's (network, tech) pair, take the Pareto front, and
+/// re-rank it per traffic profile — the winner moves with the load.
+fn run_rank(
+    ev: &Evaluator,
+    sc: &Scenario,
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    rates: &str,
+) -> Result<Output> {
+    let rates: Vec<f64> = rates
+        .split(',')
+        .map(|r| {
+            r.trim()
+                .parse::<f64>()
+                .map_err(|_| bad_flag("rates", r))
+                .and_then(|v| {
+                    if v.is_finite() && v > 0.0 {
+                        Ok(v)
+                    } else {
+                        Err(bad_flag("rates", r))
+                    }
+                })
+        })
+        .collect::<Result<_>>()?;
+    if rates.is_empty() {
+        return Err(Error::Config(
+            "--rates needs at least one rate".into(),
+        ));
+    }
+
+    let mut ex = Explorer::new(sc.network.clone());
+    ex.model.tech = sc.tech.technology();
+    let points = ex.sweep()?;
+    let front = Explorer::pareto(&points);
+    let profiles: Vec<TrafficProfile> = rates
+        .iter()
+        .map(|&r| TrafficProfile { rate_per_sec: r, ..profile.clone() })
+        .collect();
+    let winners = rank_for_traffic(ev, sc, &front, &profiles, policy)?;
+
+    let mut t = Table::new(
+        "serving-aware DSE — best front point per traffic profile",
+        &["rate/s", "org", "banks", "sectors", "dma", "occup", "p99 ms",
+          "viol%", "cold", "µJ/inf", "slo"],
+    );
+    for w in &winners {
+        let p99 = w
+            .report
+            .latency_ms
+            .as_ref()
+            .map(|s| format!("{:.3}", s.p99))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            format!("{}", w.profile.rate_per_sec),
+            w.point.organization.label().into(),
+            w.point.banks.to_string(),
+            w.point.sectors.to_string(),
+            w.point.dma.model.label().into(),
+            format!("{:.2}", w.report.mean_occupancy()),
+            p99,
+            format!("{:.2}", 100.0 * w.report.slo_violation_fraction()),
+            w.report.cold_starts.to_string(),
+            format!("{:.3}", w.report.energy_uj_per_inference()),
+            if w.feasible { "ok" } else { "MISS" }.to_string(),
+        ]);
+    }
+
+    let mut out = Output::new();
+    out.json = Json::obj(vec![
+        ("network", Json::Str(sc.network.name.to_string())),
+        ("tech", Json::Str(sc.tech.label().to_string())),
+        ("front_points", Json::Num(front.len() as f64)),
+        ("winners", t.to_json()),
+    ]);
+
+    out.text(format!(
+        "scenario: {} | pattern {} seed {} duration {}s slo {}ms",
+        sc.label(),
+        profile.pattern.label(),
+        profile.seed,
+        profile.duration_secs,
+        profile.slo_ms,
+    ));
+    out.text(format!(
+        "front: {} Pareto points of a {}-point sweep\n",
+        front.len(),
+        points.len()
+    ));
+    out.table(t);
+    let shifted =
+        winners.windows(2).any(|w| !w[0].point.bit_eq(&w[1].point));
+    if shifted {
+        out.text(
+            "\nthe energy-optimal design point shifts with the \
+             traffic profile",
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Flags;
+    use super::*;
+
+    fn run_traffic(
+        positionals: Vec<String>,
+        flags: Flags,
+    ) -> Result<Output> {
+        let ctx = CommandContext::new("traffic", positionals, flags)?;
+        TrafficCmd.run(&ctx)
+    }
+
+    #[test]
+    fn traffic_flag_conflicts_are_rejected() {
+        // --rate and --rates are mutually exclusive (checked in the
+        // command, after parsing)
+        let mut flags = Flags::new();
+        flags.insert("rate".into(), "100".into());
+        flags.insert("rates".into(), "100,200".into());
+        assert!(run_traffic(Vec::new(), flags).is_err());
+        // bad pattern is rejected
+        let mut flags = Flags::new();
+        flags.insert("pattern".into(), "fractal".into());
+        assert!(run_traffic(Vec::new(), flags).is_err());
+        // --rates explores the design-point axes itself: a pinned
+        // organization/geometry/dma (flag or positional) is rejected,
+        // never silently overridden by the sweep
+        for (key, value) in [
+            ("org", "SMP"),
+            ("banks", "4"),
+            ("sectors", "8"),
+            ("dma", "serial"),
+            ("dma-bw", "32"),
+        ] {
+            let mut flags = Flags::new();
+            flags.insert("rates".into(), "100,200".into());
+            flags.insert(key.into(), value.into());
+            assert!(
+                run_traffic(Vec::new(), flags).is_err(),
+                "--rates accepted pinned --{key}"
+            );
+        }
+        let mut flags = Flags::new();
+        flags.insert("rates".into(), "100,200".into());
+        assert!(run_traffic(
+            vec!["mnist".into(), "PG-SEP".into()],
+            flags
+        )
+        .is_err());
+    }
+}

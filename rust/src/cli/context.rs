@@ -1,0 +1,336 @@
+//! [`CommandContext`] — the one place config/scenario/flag-precedence
+//! resolution happens.
+//!
+//! The old monolith duplicated this stack (`--config` doc → `RunConfig`
+//! → `--scenario` doc → individual flags) across five `cmd_*` functions
+//! with subtle drift; here each flagged TOML file is parsed exactly
+//! once per invocation, and every command sees the same resolution
+//! rules and the same error messages.
+
+use crate::config::schema::{parse_organization, RunConfig};
+use crate::config::toml::TomlDoc;
+use crate::scenario::Scenario;
+use crate::{Error, Result};
+
+use super::output::Format;
+use super::Flags;
+
+/// Everything a command needs to run: parsed flags/positionals, the
+/// TOML documents (each read and parsed once), the effective run
+/// config, and the output format.
+pub struct CommandContext {
+    /// The invoked command's name (for conflict messages).
+    pub name: &'static str,
+    pub positionals: Vec<String>,
+    pub flags: Flags,
+    pub format: Format,
+    config_doc: Option<TomlDoc>,
+    scenario_doc: Option<TomlDoc>,
+    run_config: RunConfig,
+}
+
+impl CommandContext {
+    /// Parse each flagged TOML file exactly once, resolve the run
+    /// config (file + flag overrides) and the output format.  The
+    /// effective [`Scenario`] stays lazy: commands that never touch a
+    /// scenario (`info`, `help`) must not fail on scenario-axis
+    /// problems they would never have surfaced.
+    pub fn new(
+        name: &'static str,
+        positionals: Vec<String>,
+        flags: Flags,
+    ) -> Result<CommandContext> {
+        let config_doc = read_doc(&flags, "config")?;
+        let run_config = run_config_with_doc(&flags, config_doc.as_ref())?;
+        let scenario_doc = read_doc(&flags, "scenario")?;
+        let format = Format::from_flags(&flags)?;
+        Ok(CommandContext {
+            name,
+            positionals,
+            flags,
+            format,
+            config_doc,
+            scenario_doc,
+            run_config,
+        })
+    }
+
+    /// The effective run config (`--config` file + flag overrides).
+    pub fn run_config(&self) -> &RunConfig {
+        &self.run_config
+    }
+
+    /// The parsed `--config` document, if one was given.
+    pub fn config_doc(&self) -> Option<&TomlDoc> {
+        self.config_doc.as_ref()
+    }
+
+    /// The parsed `--scenario` document, if one was given.
+    pub fn scenario_doc(&self) -> Option<&TomlDoc> {
+        self.scenario_doc.as_ref()
+    }
+
+    /// Resolve the effective [`Scenario`], stacking lowest to highest:
+    /// built-in defaults → `--config` run config → keys present in the
+    /// `--scenario` file → individual flags.
+    pub fn scenario(&self) -> Result<Scenario> {
+        scenario_with_doc(&self.flags, &self.run_config, self.scenario_doc())
+    }
+
+    /// [`CommandContext::scenario`] without the scenario-file overlay —
+    /// the comparison baseline for `dse` and `traffic --rates`, which
+    /// reject a file that pins axes their sweeps explore.
+    pub fn scenario_without_doc(&self) -> Result<Scenario> {
+        scenario_with_doc(&self.flags, &self.run_config, None)
+    }
+
+    /// The scenario with the `<net> [<org>]` positional shorthand
+    /// applied (used by `timeline` and `traffic`).
+    pub fn scenario_with_positionals(&self) -> Result<Scenario> {
+        apply_positionals(
+            self.name,
+            self.scenario()?,
+            &self.positionals,
+            &self.flags,
+        )
+    }
+
+    /// Raw flag lookup.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Print a pre-work progress line eagerly (table mode only, like
+    /// the historical inline `println!`s), so a long-running command —
+    /// the grand sweep, the PJRT server — shows feedback *before* the
+    /// work instead of buffering everything until the end.  JSON mode
+    /// stays a single clean document on stdout.  Callers must NOT also
+    /// add the line as an output section.
+    pub fn progress(&self, line: impl AsRef<str>) {
+        if self.format == Format::Table {
+            use std::io::Write;
+            println!("{}", line.as_ref());
+            let _ = std::io::stdout().flush();
+        }
+    }
+
+    /// Parse an optional flag value; parse failures keep the historical
+    /// `--flag: cannot parse "v"` message.
+    pub fn parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| bad_flag(name, v)),
+        }
+    }
+}
+
+/// The historical unparseable-value error.
+pub(super) fn bad_flag(name: &str, v: &str) -> Error {
+    Error::Config(format!("--{name}: cannot parse {v:?}"))
+}
+
+/// Read and parse the TOML file a flag points at (once — the context
+/// keeps the document so no command re-reads it).
+fn read_doc(flags: &Flags, flag: &str) -> Result<Option<TomlDoc>> {
+    match flags.get(flag) {
+        None => Ok(None),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Ok(Some(TomlDoc::parse(&text)?))
+        }
+    }
+}
+
+/// Assemble the run config from the `--config` document + flag
+/// overrides.
+fn run_config_with_doc(
+    flags: &Flags,
+    doc: Option<&TomlDoc>,
+) -> Result<RunConfig> {
+    let mut cfg = match doc {
+        Some(doc) => RunConfig::from_toml(doc)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    if let Some(o) = flags.get("org") {
+        cfg.organization = parse_organization(o)?;
+    }
+    if let Some(b) = flags.get("banks") {
+        cfg.banks = b.parse().map_err(|_| bad_flag("banks", b))?;
+    }
+    if let Some(s) = flags.get("sectors") {
+        cfg.sectors = s.parse().map_err(|_| bad_flag("sectors", s))?;
+    }
+    if let Some(d) = flags.get("artifacts") {
+        cfg.artifact_dir = d.clone();
+    }
+    Ok(cfg)
+}
+
+/// Resolve the effective scenario against an already-parsed scenario
+/// document (the four-layer precedence stack).
+pub(super) fn scenario_with_doc(
+    flags: &Flags,
+    rc: &RunConfig,
+    doc: Option<&TomlDoc>,
+) -> Result<Scenario> {
+    let mut b = Scenario::builder()
+        .network(&rc.model)
+        .organization(rc.organization)
+        .banks(rc.banks)
+        .sectors(rc.sectors);
+    if let Some(doc) = doc {
+        b = b.overlay_toml(doc)?;
+    }
+    if let Some(m) = flags.get("model") {
+        b = b.network(m);
+    }
+    if let Some(o) = flags.get("org") {
+        b = b.organization_named(o);
+    }
+    if let Some(t) = flags.get("tech") {
+        b = b.tech(t);
+    }
+    if let Some(v) = flags.get("banks") {
+        b = b.banks(v.parse().map_err(|_| bad_flag("banks", v))?);
+    }
+    if let Some(v) = flags.get("sectors") {
+        b = b.sectors(v.parse().map_err(|_| bad_flag("sectors", v))?);
+    }
+    if let Some(v) = flags.get("lookahead") {
+        b = b.lookahead(v.parse().map_err(|_| bad_flag("lookahead", v))?);
+    }
+    if let Some(v) = flags.get("dma") {
+        b = b.dma_named(v);
+    }
+    if let Some(v) = flags.get("dma-bw") {
+        b = b.dma_bandwidth(v.parse().map_err(|_| bad_flag("dma-bw", v))?);
+    }
+    if let Some(v) = flags.get("batch") {
+        b = b.batch(v.parse().map_err(|_| bad_flag("batch", v))?);
+    }
+    b.build()
+}
+
+/// Apply the `<net> [<org>]` positional shorthand shared by `timeline`
+/// and `traffic`.  A positional given together with its flag form is a
+/// conflict, rejected like every other ambiguous input in this CLI —
+/// never silently resolved.
+fn apply_positionals(
+    cmd: &str,
+    mut sc: Scenario,
+    positionals: &[String],
+    flags: &Flags,
+) -> Result<Scenario> {
+    if positionals.first().is_some() && flags.contains_key("model") {
+        return Err(Error::Config(format!(
+            "`{cmd} <net>` and `--model` both name the network — \
+             give one or the other"
+        )));
+    }
+    if positionals.get(1).is_some() && flags.contains_key("org") {
+        return Err(Error::Config(format!(
+            "`{cmd} <net> <org>` and `--org` both name the \
+             organization — give one or the other"
+        )));
+    }
+    if let Some(net) = positionals.first() {
+        sc = sc.into_builder().network(net).build()?;
+    }
+    if let Some(org) = positionals.get(1) {
+        sc = sc.into_builder().organization_named(org).build()?;
+    }
+    Ok(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_policy_flags_reach_the_scenario() {
+        let rc = RunConfig::default();
+        let mut flags = Flags::new();
+        flags.insert("lookahead".into(), "0".into());
+        flags.insert("dma".into(), "serial".into());
+        flags.insert("dma-bw".into(), "32".into());
+        flags.insert("batch".into(), "4".into());
+        let sc = scenario_with_doc(&flags, &rc, None).unwrap();
+        assert_eq!(sc.gating.lookahead_cycles, 0);
+        assert_eq!(sc.dma.model.label(), "serial");
+        assert_eq!(sc.dma.bandwidth_bytes_per_cycle, 32);
+        assert_eq!(sc.batch, 4);
+        // and a bad dma model is a build-time error
+        flags.insert("dma".into(), "warp".into());
+        assert!(scenario_with_doc(&flags, &rc, None).is_err());
+    }
+
+    #[test]
+    fn scenario_resolution_stacks_all_four_layers() {
+        // defaults -> run config -> scenario doc -> flags
+        let rc = RunConfig {
+            model: "small".into(),
+            banks: 8,
+            ..RunConfig::default()
+        };
+        let doc = TomlDoc::parse("[memory]\nbanks = 4\n").unwrap();
+        let mut flags = Flags::new();
+        flags.insert("sectors".into(), "32".into());
+        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
+        assert_eq!(sc.network.name, "small"); // run config
+        assert_eq!(sc.geometry.banks, 4); // doc overrides run config
+        assert_eq!(sc.geometry.sectors, 32); // flag overrides default
+        flags.insert("banks".into(), "2".into());
+        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
+        assert_eq!(sc.geometry.banks, 2); // flag overrides doc
+    }
+
+    #[test]
+    fn positionals_conflict_with_their_flag_forms() {
+        let base = || scenario_with_doc(&Flags::new(), &RunConfig::default(), None).unwrap();
+        let mut flags = Flags::new();
+        flags.insert("model".into(), "mnist".into());
+        assert!(apply_positionals(
+            "timeline",
+            base(),
+            &["small".into()],
+            &flags
+        )
+        .is_err());
+        let mut flags = Flags::new();
+        flags.insert("org".into(), "SMP".into());
+        assert!(apply_positionals(
+            "timeline",
+            base(),
+            &["mnist".into(), "PG-SEP".into()],
+            &flags
+        )
+        .is_err());
+        // and without the conflicting flag both positionals apply
+        let sc = apply_positionals(
+            "timeline",
+            base(),
+            &["small".into(), "SMP".into()],
+            &Flags::new(),
+        )
+        .unwrap();
+        assert_eq!(sc.network.name, "small");
+        assert_eq!(sc.organization.label(), "SMP");
+    }
+
+    #[test]
+    fn context_parses_docs_once_and_resolves_format() {
+        let ctx =
+            CommandContext::new("evaluate", Vec::new(), Flags::new()).unwrap();
+        assert_eq!(ctx.format, Format::Table);
+        assert!(ctx.config_doc().is_none());
+        assert!(ctx.scenario_doc().is_none());
+        let sc = ctx.scenario().unwrap();
+        assert_eq!(sc.network.name, "mnist");
+    }
+}

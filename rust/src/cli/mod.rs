@@ -1,0 +1,123 @@
+//! The declarative CLI command framework.
+//!
+//! The old 1.7k-line `main.rs` monolith hand-wired five parallel
+//! `match cmd` sites (flag lists, positional budgets, usage text,
+//! dispatch, per-command table/JSON rendering).  Here each subcommand
+//! is one module implementing [`Command`], and every user-facing
+//! surface derives from the same data:
+//!
+//! * [`spec`] — [`FlagSpec`] value types composed into reusable flag
+//!   groups (SCENARIO/MEMORY/TIME/TRAFFIC/DSE/...);
+//! * [`registry`] — the static command list, lookup, and "did you
+//!   mean" suggestions;
+//! * [`parse`] — registry-driven argument parsing (unknown commands
+//!   and unknown flags are rejected at parse time);
+//! * [`context`] — [`CommandContext`]: config/scenario/flag-precedence
+//!   resolution performed exactly once per invocation;
+//! * [`output`] — the typed [`Output`] sink honoring
+//!   `--format table|json` in one place;
+//! * [`help`] / [`completions`] — usage, per-command help, the full
+//!   reference dump, and bash/zsh completion scripts, all generated.
+//!
+//! `main.rs` is a thin shim over [`run`].
+
+pub mod completions;
+pub mod context;
+pub mod help;
+pub mod output;
+pub mod parse;
+pub mod registry;
+pub mod spec;
+
+mod cmd_analyze;
+mod cmd_dse;
+mod cmd_evaluate;
+mod cmd_help;
+mod cmd_info;
+mod cmd_serve;
+mod cmd_timeline;
+mod cmd_traffic;
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use crate::Result;
+
+use context::CommandContext;
+use output::Output;
+use spec::FlagSpec;
+
+/// Parsed `--flag value` pairs, keyed by flag name.
+pub type Flags = BTreeMap<String, String>;
+
+/// A CLI subcommand: a self-describing unit the registry exposes to
+/// the parser, the dispatcher, the help generator, and the completion
+/// scripts alike.
+pub trait Command: Sync {
+    /// The subcommand name (`capstore <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `usage()`.
+    fn about(&self) -> &'static str;
+
+    /// The composable flag groups this command consumes, in help
+    /// order; [`Command::flags`] flattens them.  Everything the
+    /// command does not list here is rejected at parse time.
+    fn groups(&self) -> &'static [&'static [FlagSpec]];
+
+    /// Flattened flag specs, derived from [`Command::groups`].
+    fn flags(&self) -> Vec<FlagSpec> {
+        self.groups().iter().flat_map(|g| g.iter().copied()).collect()
+    }
+
+    /// Positional operands accepted; bare tokens beyond this are
+    /// rejected, as before.
+    fn max_positionals(&self) -> usize {
+        0
+    }
+
+    /// The positional part of the usage line, e.g. `[<net> [<org>]]`.
+    fn positional_usage(&self) -> &'static str {
+        ""
+    }
+
+    /// Extra paragraph shown by `capstore help <cmd>`.
+    fn long_help(&self) -> &'static str {
+        ""
+    }
+
+    /// Execute against the resolved context, producing the typed
+    /// output the sink renders.
+    fn run(&self, ctx: &CommandContext) -> Result<Output>;
+}
+
+/// Drive one invocation end to end: parse, resolve, run, render.
+/// This is the whole dispatcher the binary calls.
+pub fn run(args: &[String]) -> ExitCode {
+    let inv = match parse::parse(args) {
+        Ok(inv) => inv,
+        Err(e) => {
+            eprintln!("error: {e}");
+            println!("{}", help::usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let Some(cmd) = inv.command else {
+        // bare `capstore`
+        println!("{}", help::usage());
+        return ExitCode::SUCCESS;
+    };
+    let result = CommandContext::new(cmd.name(), inv.positionals, inv.flags)
+        .and_then(|ctx| {
+            let out = cmd.run(&ctx)?;
+            print!("{}", out.render(ctx.format));
+            Ok(())
+        });
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

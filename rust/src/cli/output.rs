@@ -1,0 +1,147 @@
+//! The typed output sink.
+//!
+//! Every command returns one [`Output`] — an ordered list of table-mode
+//! [`Section`]s plus a single JSON document — and one renderer honors
+//! `--format table|json`.  This replaces the per-command
+//! `match fmt { Table => .., Json => .. }` rendering forks of the old
+//! monolith: commands are format-agnostic, and the bytes printed for
+//! each format are exactly what the old inline `println!` sequences
+//! produced.
+
+use crate::report::Table;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::Flags;
+
+/// Output format selected by `--format` (default: table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Table,
+    Json,
+}
+
+impl Format {
+    /// Resolve `--format` with the historical error message.
+    pub fn from_flags(flags: &Flags) -> Result<Format> {
+        match flags.get("format").map(String::as_str) {
+            None | Some("table") => Ok(Format::Table),
+            Some("json") => Ok(Format::Json),
+            Some(other) => Err(Error::Config(format!(
+                "--format: want table|json, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// One table-mode block.
+#[derive(Debug, Clone)]
+pub enum Section {
+    /// Rendered via [`Table::render`] (exactly what `Table::print` wrote).
+    Table(Table),
+    /// One `println!`-style block: the string plus a trailing newline
+    /// (the string itself may contain newlines, e.g. a leading `\n`
+    /// for a separating blank line).
+    Text(String),
+}
+
+/// What a command produced: both presentation views, built once from
+/// the same data.  The sink picks one; nothing is printed from inside
+/// a command.
+#[derive(Debug, Clone)]
+pub struct Output {
+    pub sections: Vec<Section>,
+    pub json: Json,
+}
+
+impl Output {
+    pub fn new() -> Output {
+        Output { sections: Vec::new(), json: Json::Null }
+    }
+
+    /// Append a table section.
+    pub fn table(&mut self, t: Table) -> &mut Self {
+        self.sections.push(Section::Table(t));
+        self
+    }
+
+    /// Append a text line/block (`println!` semantics).
+    pub fn text(&mut self, s: impl Into<String>) -> &mut Self {
+        self.sections.push(Section::Text(s.into()));
+        self
+    }
+
+    /// Append an empty line (a bare `println!()`).
+    pub fn blank(&mut self) -> &mut Self {
+        self.text("")
+    }
+
+    /// Render the selected view to a string (the dispatcher prints it
+    /// verbatim; JSON output gains the trailing newline `println!`
+    /// used to add).
+    pub fn render(&self, fmt: Format) -> String {
+        match fmt {
+            Format::Table => {
+                let mut out = String::new();
+                for s in &self.sections {
+                    match s {
+                        Section::Table(t) => out.push_str(&t.render()),
+                        Section::Text(line) => {
+                            out.push_str(line);
+                            out.push('\n');
+                        }
+                    }
+                }
+                out
+            }
+            Format::Json => {
+                let mut out = self.json.render();
+                out.push('\n');
+                out
+            }
+        }
+    }
+}
+
+impl Default for Output {
+    fn default() -> Self {
+        Output::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_format_parses_and_rejects() {
+        let mut flags = Flags::new();
+        assert_eq!(Format::from_flags(&flags).unwrap(), Format::Table);
+        flags.insert("format".into(), "json".into());
+        assert_eq!(Format::from_flags(&flags).unwrap(), Format::Json);
+        flags.insert("format".into(), "xml".into());
+        assert!(Format::from_flags(&flags).is_err());
+    }
+
+    #[test]
+    fn table_mode_matches_println_semantics() {
+        let mut out = Output::new();
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["x".into(), "1".into()]);
+        let table_bytes = t.render();
+        out.text("head");
+        out.table(t);
+        out.blank();
+        out.text("tail\n"); // a println! whose format string ends in \n
+        let r = out.render(Format::Table);
+        assert_eq!(r, format!("head\n{table_bytes}\ntail\n\n"));
+    }
+
+    #[test]
+    fn json_mode_prints_document_plus_newline() {
+        let mut out = Output::new();
+        out.text("ignored in json mode");
+        out.json = Json::obj(vec![("x", Json::Num(1.0))]);
+        assert_eq!(out.render(Format::Json), "{\"x\":1}\n");
+    }
+}

@@ -1,0 +1,242 @@
+//! Registry-driven argument parsing.
+//!
+//! `<cmd> [positional]... [--flag value | --flag=value]...` — the known
+//! flags, the positional budget, and the switch/value distinction all
+//! come from the command's [`FlagSpec`](super::spec::FlagSpec) list, so
+//! the parser can never drift from the help text.
+//!
+//! Unknown *commands* are rejected here, at parse time, with a
+//! "did you mean" suggestion from the registry (they used to slip
+//! through to the dispatcher with arbitrary flags attached and only
+//! die later).  Flags a command does not consume and positionals
+//! beyond what it accepts are errors, never silently ignored.
+
+use crate::{Error, Result};
+
+use super::registry;
+use super::{Command, Flags};
+
+/// One parsed invocation.
+pub struct Invocation {
+    /// `None` for a bare `capstore` (print usage, succeed).
+    pub command: Option<&'static dyn Command>,
+    pub positionals: Vec<String>,
+    pub flags: Flags,
+}
+
+/// Parse an argument vector against the command registry.
+pub fn parse(args: &[String]) -> Result<Invocation> {
+    let name = args.first().map(String::as_str).unwrap_or("");
+    if name.is_empty() {
+        // bare `capstore` (or an empty argv token): print usage — but
+        // trailing arguments have nothing to bind to, so reject them
+        if args.len() > 1 {
+            return Err(Error::Config(format!(
+                "expected a subcommand before {:?}",
+                args[1]
+            )));
+        }
+        return Ok(Invocation {
+            command: None,
+            positionals: Vec::new(),
+            flags: Flags::new(),
+        });
+    }
+    let cmd = registry::find_or_suggest(name)?;
+    let specs = cmd.flags();
+    let max_pos = cmd.max_positionals();
+    let mut positionals: Vec<String> = Vec::new();
+    let mut flags = Flags::new();
+    let mut i = 1;
+    while i < args.len() {
+        let Some(body) = args[i].strip_prefix("--") else {
+            if positionals.len() < max_pos {
+                positionals.push(args[i].clone());
+                i += 1;
+                continue;
+            }
+            return Err(Error::Config(format!(
+                "expected --flag, got {:?}",
+                args[i]
+            )));
+        };
+        let (key, inline) = match body.split_once('=') {
+            Some((k, v)) => (k, Some(v.to_string())),
+            None => (body, None),
+        };
+        let spec = specs.iter().find(|s| s.name == key).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown flag --{key} for `{}` (known: {})",
+                cmd.name(),
+                specs
+                    .iter()
+                    .map(|s| format!("--{}", s.name))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })?;
+        let value = if spec.kind.takes_value() {
+            match inline {
+                Some(v) => v,
+                None => {
+                    let v = args.get(i + 1).cloned().ok_or_else(|| {
+                        Error::Config(format!("--{key} needs a value"))
+                    })?;
+                    i += 1;
+                    v
+                }
+            }
+        } else {
+            if inline.is_some() {
+                return Err(Error::Config(format!("--{key} takes no value")));
+            }
+            String::new()
+        };
+        flags.insert(key.to_string(), value);
+        i += 1;
+    }
+    Ok(Invocation { command: Some(cmd), positionals, flags })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    /// `parse` plus the old `(cmd, positionals, flags)` view the
+    /// pre-registry tests asserted against.
+    fn parse_args(
+        args: &[String],
+    ) -> Result<(String, Vec<String>, Flags)> {
+        let inv = parse(args)?;
+        let name = inv
+            .command
+            .map(|c| c.name().to_string())
+            .unwrap_or_default();
+        Ok((name, inv.positionals, inv.flags))
+    }
+
+    #[test]
+    fn parse_args_supports_both_flag_forms() {
+        let (cmd, pos, flags) =
+            parse_args(&argv(&["evaluate", "--banks=8", "--org", "SMP"]))
+                .unwrap();
+        assert_eq!(cmd, "evaluate");
+        assert!(pos.is_empty());
+        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
+        assert_eq!(flags.get("org").map(String::as_str), Some("SMP"));
+    }
+
+    #[test]
+    fn equals_form_does_not_swallow_next_token() {
+        // the pre-redesign bug: `--banks=8 --sectors 32` stored the key
+        // "banks=8" and swallowed "--sectors" as its value
+        let (_, _, flags) =
+            parse_args(&argv(&["evaluate", "--banks=8", "--sectors", "32"]))
+                .unwrap();
+        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
+        assert_eq!(flags.get("sectors").map(String::as_str), Some("32"));
+        assert!(!flags.contains_key("banks=8"));
+    }
+
+    #[test]
+    fn timeline_accepts_positionals_others_reject_them() {
+        let (cmd, pos, flags) = parse_args(&argv(&[
+            "timeline", "mnist", "PG-SEP", "--format", "json",
+        ]))
+        .unwrap();
+        assert_eq!(cmd, "timeline");
+        assert_eq!(pos, vec!["mnist".to_string(), "PG-SEP".to_string()]);
+        assert_eq!(flags.get("format").map(String::as_str), Some("json"));
+        // a third positional is one too many
+        assert!(parse_args(&argv(&["timeline", "a", "b", "c"])).is_err());
+        // other subcommands keep rejecting bare tokens
+        assert!(parse_args(&argv(&["evaluate", "mnist"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_subcommand() {
+        // flags a subcommand does not consume are errors, not ignored
+        assert!(parse_args(&argv(&["analyze", "--banks", "8"])).is_err());
+        assert!(parse_args(&argv(&["info", "--model", "small"])).is_err());
+        assert!(parse_args(&argv(&["evaluate", "--bogus", "1"])).is_err());
+        assert!(parse_args(&argv(&["help", "--format", "json"])).is_err());
+        // the dse explores the dma axis itself — no --dma flag there
+        assert!(parse_args(&argv(&["dse", "--dma", "serial"])).is_err());
+        // ...while consumed flags pass
+        assert!(parse_args(&argv(&["dse", "--threads", "2"])).is_ok());
+        assert!(parse_args(&argv(&["evaluate", "--tech=22nm"])).is_ok());
+        assert!(parse_args(&argv(&["evaluate", "--dma=serial"])).is_ok());
+        assert!(parse_args(&argv(&["timeline", "--batch", "8"])).is_ok());
+    }
+
+    #[test]
+    fn unknown_subcommands_die_at_parse_time_with_suggestion() {
+        // the old parser let `capstore frobnicate --x 1` through and
+        // only the dispatcher complained; now parsing itself fails
+        let err = parse(&argv(&["frobnicate", "--x", "1"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown subcommand"), "{msg}");
+        // a near-miss gets a registry-derived suggestion
+        let err = parse(&argv(&["trafic", "--rate", "5"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("did you mean `traffic`"), "{msg}");
+        // bare `capstore` (and an empty argv token) still resolve to
+        // "print usage", as before the redesign
+        let inv = parse(&[]).unwrap();
+        assert!(inv.command.is_none());
+        let inv = parse(&argv(&[""])).unwrap();
+        assert!(inv.command.is_none());
+        // ...but trailing args after an empty token have nothing to
+        // bind to
+        assert!(parse(&argv(&["", "--format", "json"])).is_err());
+    }
+
+    #[test]
+    fn traffic_flags_parse() {
+        // positional shorthand + traffic knobs parse
+        let (cmd, pos, flags) = parse_args(&argv(&[
+            "traffic", "mnist", "PG-SEP", "--rate", "500", "--seed=7",
+        ]))
+        .unwrap();
+        assert_eq!(cmd, "traffic");
+        assert_eq!(pos.len(), 2);
+        assert_eq!(flags.get("rate").map(String::as_str), Some("500"));
+        assert!(
+            parse_args(&argv(&["traffic", "--rates", "50,5000"])).is_ok()
+        );
+        // traffic knobs stay off the other subcommands
+        assert!(parse_args(&argv(&["evaluate", "--rate", "5"])).is_err());
+        assert!(parse_args(&argv(&["dse", "--rates", "5"])).is_err());
+        // --batch would be silently ignored by the simulator's own
+        // batcher, so traffic rejects it (use --max-batch)
+        assert!(parse_args(&argv(&["traffic", "--batch", "4"])).is_err());
+        assert!(
+            parse_args(&argv(&["traffic", "--max-batch", "4"])).is_ok()
+        );
+    }
+
+    #[test]
+    fn flags_require_values_and_dashes() {
+        assert!(parse_args(&argv(&["evaluate", "--banks"])).is_err());
+        assert!(parse_args(&argv(&["evaluate", "banks", "8"])).is_err());
+    }
+
+    #[test]
+    fn switch_flags_take_no_value() {
+        let (_, _, flags) = parse_args(&argv(&["help", "--all"])).unwrap();
+        assert!(flags.contains_key("all"));
+        // `--all` does not swallow a following token as its value (the
+        // token parses as a positional; the help command then rejects
+        // the ambiguous --all + <cmd> combination at run time)
+        let (_, pos, flags) =
+            parse_args(&argv(&["help", "--all", "evaluate"])).unwrap();
+        assert!(flags.contains_key("all"));
+        assert_eq!(pos, vec!["evaluate".to_string()]);
+        // and the `=value` form is rejected for switches
+        assert!(parse_args(&argv(&["help", "--all=yes"])).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! The command registry: one static, self-describing list every other
+//! CLI surface (parser, dispatcher, help, completions, tests) derives
+//! from.
+
+use crate::{Error, Result};
+
+use super::cmd_analyze::Analyze;
+use super::cmd_dse::Dse;
+use super::cmd_evaluate::Evaluate;
+use super::cmd_help::HelpCmd;
+use super::cmd_info::Info;
+use super::cmd_serve::Serve;
+use super::cmd_timeline::TimelineCmd;
+use super::cmd_traffic::TrafficCmd;
+use super::completions::Completions;
+use super::Command;
+
+/// Every registered subcommand, in help order.
+pub fn commands() -> &'static [&'static dyn Command] {
+    static COMMANDS: &[&dyn Command] = &[
+        &Analyze,
+        &Evaluate,
+        &TimelineCmd,
+        &Dse,
+        &TrafficCmd,
+        &Serve,
+        &Info,
+        &Completions,
+        &HelpCmd,
+    ];
+    COMMANDS
+}
+
+/// Look up a command by name.
+pub fn find(name: &str) -> Option<&'static dyn Command> {
+    commands().iter().copied().find(|c| c.name() == name)
+}
+
+/// [`find`], turning a miss into the canonical unknown-subcommand
+/// error with a "did you mean" suggestion.
+pub fn find_or_suggest(name: &str) -> Result<&'static dyn Command> {
+    find(name).ok_or_else(|| {
+        let hint = match suggest(name) {
+            Some(s) => format!(" — did you mean `{s}`?"),
+            None => " (run `capstore help` for the command list)".into(),
+        };
+        Error::Config(format!("unknown subcommand {name:?}{hint}"))
+    })
+}
+
+/// Closest registered command by edit distance, for "did you mean"
+/// suggestions.  The budget scales with the input length (a third of
+/// it, at least 1, at most 3), so a one-letter typo of `traffic` is
+/// caught but `capstore x` does not get told it meant `dse`.
+pub fn suggest(name: &str) -> Option<&'static str> {
+    let limit = (name.chars().count() / 3).clamp(1, 3);
+    commands()
+        .iter()
+        .map(|c| (levenshtein(name, c.name()), c.name()))
+        .min()
+        .filter(|(d, _)| *d <= limit)
+        .map(|(_, n)| n)
+}
+
+/// Plain O(|a|·|b|) Levenshtein distance (two-row DP).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i + 1);
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut names: Vec<&str> =
+            commands().iter().map(|c| c.name()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate command names");
+        for name in names {
+            assert!(find(name).is_some());
+        }
+    }
+
+    #[test]
+    fn suggestions_catch_near_misses_only() {
+        assert_eq!(suggest("trafic"), Some("traffic"));
+        assert_eq!(suggest("evalute"), Some("evaluate"));
+        assert_eq!(suggest("timelin"), Some("timeline"));
+        assert_eq!(suggest("frobnicate"), None);
+        // a one-letter token is 3 edits from `dse`, but suggesting it
+        // would be noise — the budget scales with input length
+        assert_eq!(suggest("x"), None);
+        assert_eq!(suggest("in"), None);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
+}

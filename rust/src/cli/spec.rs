@@ -1,0 +1,410 @@
+//! The declarative flag registry.
+//!
+//! Every CLI flag is one [`FlagSpec`] value and flags are composed into
+//! reusable groups ([`SCENARIO`], [`MEMORY`], [`TIME`], [`TRAFFIC`],
+//! [`DSE`], ...).  Everything user-facing — known-flag rejection in the
+//! parser, `usage()`, `capstore help <cmd>`, shell completions, the
+//! USER_GUIDE reference — *derives* from these specs, so adding a flag
+//! is a one-line change that can never drift out of sync with the help
+//! text (the old monolith kept five hand-synced `match cmd` sites).
+
+use crate::capsnet::CapsNetConfig;
+use crate::capstore::arch::Organization;
+use crate::scenario::TechNode;
+use crate::traffic::ArrivalPattern;
+
+/// How a flag's value is interpreted — drives help hints and shell
+/// completions.  Value *parsing* stays in the command context so error
+/// messages are unchanged from the pre-registry CLI; the kind is
+/// metadata, not a validator.
+#[derive(Debug, Clone, Copy)]
+pub enum ValueKind {
+    /// Filesystem path.
+    Path,
+    /// Unsigned integer.
+    UInt,
+    /// Floating-point number.
+    Float,
+    /// Comma-separated list of numbers.
+    List,
+    /// One of a fixed set of words.
+    Choice(&'static [&'static str]),
+    /// One of a runtime registry's names (networks, nodes, patterns).
+    DynChoice(fn() -> Vec<&'static str>),
+    /// Boolean switch: the flag takes no value token.
+    Switch,
+}
+
+impl ValueKind {
+    /// The candidate values for this flag, if enumerable (used by the
+    /// completion scripts).
+    pub fn choices(&self) -> Vec<&'static str> {
+        match self {
+            ValueKind::Choice(c) => c.to_vec(),
+            ValueKind::DynChoice(f) => f(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Whether the flag consumes a value token.
+    pub fn takes_value(&self) -> bool {
+        !matches!(self, ValueKind::Switch)
+    }
+}
+
+/// The group a flag belongs to; `capstore help <cmd>` renders a
+/// section label when consecutive flags change group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlagGroup {
+    /// Scenario selection + output, shared by the evaluation commands.
+    Scenario,
+    /// The memory-system axes of a scenario.
+    Memory,
+    /// The time-policy axes of a scenario (timeline IR knobs).
+    Time,
+    /// The serving-simulation workload knobs.
+    Traffic,
+    /// Design-space exploration controls.
+    Dse,
+    /// PJRT serving / artifact knobs.
+    Serve,
+    /// Help-only switches.
+    Help,
+}
+
+impl FlagGroup {
+    /// The section label shown in `capstore help <cmd>`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlagGroup::Scenario => "scenario selection & output",
+            FlagGroup::Memory => "memory axes",
+            FlagGroup::Time => "time-policy axes",
+            FlagGroup::Traffic => "serving workload",
+            FlagGroup::Dse => "exploration",
+            FlagGroup::Serve => "serving / artifacts",
+            FlagGroup::Help => "help",
+        }
+    }
+}
+
+/// One declared flag: the single source of truth its command's parser,
+/// help text, and completions all derive from.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    /// Flag name without the `--` prefix.
+    pub name: &'static str,
+    /// Value kind (metadata for hints/completions, not a validator).
+    pub kind: ValueKind,
+    /// Value placeholder in help text, e.g. `<path.toml>` or `N`.
+    pub hint: &'static str,
+    /// One-line description shown in `usage()` and `help <cmd>`.
+    pub doc: &'static str,
+    /// Rendered as `[default]` in help; empty = no default shown.
+    pub default: &'static str,
+    pub group: FlagGroup,
+}
+
+// --- dynamic choice sources (the existing registries) ----------------
+
+fn model_names() -> Vec<&'static str> {
+    CapsNetConfig::names()
+}
+
+fn tech_names() -> Vec<&'static str> {
+    TechNode::names()
+}
+
+fn pattern_names() -> Vec<&'static str> {
+    ArrivalPattern::names()
+}
+
+fn org_names() -> Vec<&'static str> {
+    Organization::all().iter().map(|o| o.label()).collect()
+}
+
+fn dma_names() -> Vec<&'static str> {
+    crate::timeline::DmaModel::names()
+}
+
+// --- the flags -------------------------------------------------------
+
+pub const SCENARIO_FILE: FlagSpec = FlagSpec {
+    name: "scenario",
+    kind: ValueKind::Path,
+    hint: "<path.toml>",
+    doc: "typed scenario file (network/tech/org/geometry/batch/gating/\
+          dma/traffic); individual flags override its fields",
+    default: "",
+    group: FlagGroup::Scenario,
+};
+
+pub const FORMAT: FlagSpec = FlagSpec {
+    name: "format",
+    kind: ValueKind::Choice(&["table", "json"]),
+    hint: "<table|json>",
+    doc: "output format",
+    default: "table",
+    group: FlagGroup::Scenario,
+};
+
+pub const MODEL: FlagSpec = FlagSpec {
+    name: "model",
+    kind: ValueKind::DynChoice(model_names),
+    hint: "<name>",
+    doc: "network config (`capstore info` lists the registry)",
+    default: "mnist",
+    group: FlagGroup::Scenario,
+};
+
+pub const CONFIG: FlagSpec = FlagSpec {
+    name: "config",
+    kind: ValueKind::Path,
+    hint: "<path.toml>",
+    doc: "legacy run config file (server knobs + memory fields)",
+    default: "",
+    group: FlagGroup::Scenario,
+};
+
+pub const TECH: FlagSpec = FlagSpec {
+    name: "tech",
+    kind: ValueKind::DynChoice(tech_names),
+    hint: "<node>",
+    doc: "technology node",
+    default: "32nm",
+    group: FlagGroup::Memory,
+};
+
+pub const ORG: FlagSpec = FlagSpec {
+    name: "org",
+    kind: ValueKind::DynChoice(org_names),
+    hint: "<org>",
+    doc: "memory organization (Table 1)",
+    default: "PG-SEP",
+    group: FlagGroup::Memory,
+};
+
+pub const BANKS: FlagSpec = FlagSpec {
+    name: "banks",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "SRAM banks per macro",
+    default: "16",
+    group: FlagGroup::Memory,
+};
+
+pub const SECTORS: FlagSpec = FlagSpec {
+    name: "sectors",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "power-gating sectors per bank",
+    default: "64",
+    group: FlagGroup::Memory,
+};
+
+pub const LOOKAHEAD: FlagSpec = FlagSpec {
+    name: "lookahead",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "PMU pre-wake cycles before an op boundary (0 = lazy)",
+    default: "256",
+    group: FlagGroup::Time,
+};
+
+pub const DMA: FlagSpec = FlagSpec {
+    name: "dma",
+    kind: ValueKind::DynChoice(dma_names),
+    hint: "<instant|serial|double-buffered>",
+    doc: "DMA/compute overlap model",
+    default: "instant",
+    group: FlagGroup::Time,
+};
+
+pub const DMA_BW: FlagSpec = FlagSpec {
+    name: "dma-bw",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "DMA bytes per array cycle",
+    default: "16",
+    group: FlagGroup::Time,
+};
+
+pub const BATCH: FlagSpec = FlagSpec {
+    name: "batch",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "pipelined back-to-back inferences per batch",
+    default: "1",
+    group: FlagGroup::Time,
+};
+
+pub const ARTIFACTS: FlagSpec = FlagSpec {
+    name: "artifacts",
+    kind: ValueKind::Path,
+    hint: "<dir>",
+    doc: "AOT artifact directory",
+    default: "artifacts",
+    group: FlagGroup::Serve,
+};
+
+pub const THREADS: FlagSpec = FlagSpec {
+    name: "threads",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "worker threads (0 = all cores)",
+    default: "0",
+    group: FlagGroup::Dse,
+};
+
+pub const SPACE: FlagSpec = FlagSpec {
+    name: "space",
+    kind: ValueKind::Choice(&["default", "large", "full"]),
+    hint: "<default|large|full>",
+    doc: "sweep extent (full = all tech nodes x all models, narrowed \
+          by --model/--tech; large/full cross the dma axis too)",
+    default: "default",
+    group: FlagGroup::Dse,
+};
+
+pub const RATE: FlagSpec = FlagSpec {
+    name: "rate",
+    kind: ValueKind::Float,
+    hint: "R",
+    doc: "mean arrivals per second",
+    default: "1000",
+    group: FlagGroup::Traffic,
+};
+
+pub const RATES: FlagSpec = FlagSpec {
+    name: "rates",
+    kind: ValueKind::List,
+    hint: "R1,R2,...",
+    doc: "serving-aware DSE: re-rank the Pareto front per rate and \
+          report each winner (conflicts with --rate and any pinned \
+          design-point axis)",
+    default: "",
+    group: FlagGroup::Traffic,
+};
+
+pub const PATTERN: FlagSpec = FlagSpec {
+    name: "pattern",
+    kind: ValueKind::DynChoice(pattern_names),
+    hint: "<poisson|bursty|diurnal>",
+    doc: "arrival process",
+    default: "poisson",
+    group: FlagGroup::Traffic,
+};
+
+pub const SEED: FlagSpec = FlagSpec {
+    name: "seed",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "arrival RNG seed",
+    default: "1",
+    group: FlagGroup::Traffic,
+};
+
+pub const DURATION: FlagSpec = FlagSpec {
+    name: "duration",
+    kind: ValueKind::Float,
+    hint: "S",
+    doc: "simulated window, seconds of virtual time",
+    default: "1",
+    group: FlagGroup::Traffic,
+};
+
+pub const SLO_MS: FlagSpec = FlagSpec {
+    name: "slo-ms",
+    kind: ValueKind::Float,
+    hint: "MS",
+    doc: "per-request latency objective, milliseconds",
+    default: "10",
+    group: FlagGroup::Traffic,
+};
+
+pub const MAX_BATCH: FlagSpec = FlagSpec {
+    name: "max-batch",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "batcher size trigger",
+    default: "8",
+    group: FlagGroup::Traffic,
+};
+
+pub const MAX_WAIT_MS: FlagSpec = FlagSpec {
+    name: "max-wait-ms",
+    kind: ValueKind::Float,
+    hint: "MS",
+    doc: "batcher wait trigger, milliseconds",
+    default: "2",
+    group: FlagGroup::Traffic,
+};
+
+pub const REQUESTS: FlagSpec = FlagSpec {
+    name: "requests",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "request count",
+    default: "64",
+    group: FlagGroup::Serve,
+};
+
+pub const CLIENTS: FlagSpec = FlagSpec {
+    name: "clients",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "client threads",
+    default: "4",
+    group: FlagGroup::Serve,
+};
+
+pub const ALL: FlagSpec = FlagSpec {
+    name: "all",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "dump the full command/flag reference for every command",
+    default: "",
+    group: FlagGroup::Help,
+};
+
+// --- the composable groups -------------------------------------------
+//
+// A command's `groups()` concatenates these; the parser, help, and
+// completions all see the concatenation, so a future flag is added in
+// exactly one place.
+
+/// Scenario selection + output, shared by the evaluation commands.
+pub const SCENARIO: &[FlagSpec] = &[SCENARIO_FILE, FORMAT, MODEL, CONFIG];
+
+/// The memory-system axes of a scenario.
+pub const MEMORY: &[FlagSpec] = &[TECH, ORG, BANKS, SECTORS];
+
+/// The time-policy axes of a scenario (timeline IR knobs).
+pub const TIME: &[FlagSpec] = &[LOOKAHEAD, DMA, DMA_BW, BATCH];
+
+/// [`TIME`] minus `--batch`: the traffic simulator's own batcher
+/// decides actual batch sizes (use `--max-batch`), so a `--batch` pin
+/// would be silently ignored — and this CLI rejects rather than
+/// ignores.
+pub const TIME_UNBATCHED: &[FlagSpec] = &[LOOKAHEAD, DMA, DMA_BW];
+
+/// The serving-simulation workload knobs.
+pub const TRAFFIC: &[FlagSpec] = &[
+    RATE, RATES, PATTERN, SEED, DURATION, SLO_MS, MAX_BATCH, MAX_WAIT_MS,
+];
+
+/// Design-space exploration controls.
+pub const DSE: &[FlagSpec] = &[THREADS, SPACE];
+
+/// `--tech` alone: `dse` pins the workload node but explores the
+/// org/geometry/dma axes itself, so the rest of [`MEMORY`] is rejected
+/// there.
+pub const TECH_ONLY: &[FlagSpec] = &[TECH];
+
+/// PJRT serving knobs.
+pub const SERVE: &[FlagSpec] = &[ARTIFACTS, REQUESTS, CLIENTS];
+
+/// `info`'s flags.
+pub const INFO: &[FlagSpec] = &[CONFIG, FORMAT, ARTIFACTS];
+
+/// `help`'s flags.
+pub const HELP: &[FlagSpec] = &[ALL];

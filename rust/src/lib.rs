@@ -25,6 +25,9 @@
 //!   intervals, per-domain power-state segments, DMA transfers — that
 //!   every time consumer (analytical leakage, event sim, tracer,
 //!   serving accountant, `capstore timeline`) derives from.
+//!   The [`cli`] module is the declarative command framework behind the
+//!   `capstore` binary: a typed `FlagSpec` registry from which parsing,
+//!   usage, per-command help, and shell completions all derive.
 //!   The PJRT pieces (`runtime::engine`, `coordinator::server`) need the
 //!   `xla` crate and sit behind the default-off `pjrt` feature; everything
 //!   else is dependency-free and builds in the offline image.
@@ -50,5 +53,6 @@ pub mod report;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;
+pub mod cli;
 
 pub use error::{Error, Result};

@@ -1,1757 +1,33 @@
 //! `capstore` — CLI entrypoint for the CapStore reproduction.
 //!
-//! Subcommands:
-//!   analyze   — the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)
-//!   evaluate  — Table 1/2 + Fig 10 views + one Scenario evaluation
-//!   timeline  — render the cycle-resolved Timeline IR
-//!   dse       — §4.2 design-space exploration (sweep + Pareto front)
-//!   traffic   — deterministic serving simulation (SLO + energy), and
-//!               the serving-aware DSE re-ranking (`--rates`)
-//!   serve     — run the PJRT inference server on synthetic digits
-//!   info      — artifact manifest + environment summary
+//! The binary is a thin shim: every subcommand lives in the
+//! declarative [`capstore::cli`] command framework, where each command
+//! is a module implementing `cli::Command` and everything user-facing
+//! (known-flag rejection, `usage()`, `capstore help <cmd>`, shell
+//! completions) derives from one typed `FlagSpec` registry.
 //!
-//! Every subcommand accepts `--scenario <file.toml>` (a typed
-//! [`Scenario`] document; individual flags override its fields) and
-//! `--format table|json`.  Hand-rolled arg parsing (clap is not in the
-//! offline image): flags are `--key value` or `--key=value` pairs after
-//! the subcommand; flags a subcommand does not know are rejected.
+//! Subcommands:
+//!   analyze      — the paper's §3 analysis (Fig 4a-e + Eq 1/2 tables)
+//!   evaluate     — Table 1/2 + Fig 10 views + one Scenario evaluation
+//!   timeline     — render the cycle-resolved Timeline IR
+//!   dse          — §4.2 design-space exploration (sweep + Pareto front)
+//!   traffic      — deterministic serving simulation (SLO + energy), and
+//!                  the serving-aware DSE re-ranking (`--rates`)
+//!   serve        — run the PJRT inference server on synthetic digits
+//!   info         — artifact manifest + environment summary
+//!   completions  — bash/zsh completion scripts from the registry
+//!   help         — usage, `help <cmd>`, or the full `--all` reference
+//!
+//! Every evaluation subcommand accepts `--scenario <file.toml>` (a
+//! typed `Scenario` document; individual flags override its fields)
+//! and `--format table|json`.  Arg parsing is hand-rolled (clap is not
+//! in the offline image): flags are `--key value` or `--key=value`
+//! pairs after the subcommand; flags a subcommand does not know and
+//! unknown subcommands are rejected at parse time.
 
-use std::collections::BTreeMap;
-use std::path::PathBuf;
 use std::process::ExitCode;
-
-use capstore::accel::systolic::SystolicSim;
-use capstore::analysis::offchip::OffChipTraffic;
-use capstore::analysis::requirements::RequirementsAnalysis;
-use capstore::capsnet::{CapsNetConfig, Operation};
-use capstore::capstore::arch::{Organization, DEFAULT_BANKS, DEFAULT_SECTORS};
-use capstore::config::schema::{parse_organization, RunConfig};
-use capstore::config::toml::TomlDoc;
-use capstore::coordinator::BatchPolicy;
-#[cfg(feature = "pjrt")]
-use capstore::coordinator::server::InferenceServer;
-use capstore::dse::{Explorer, MultiSweep, SweepSpace};
-use capstore::report::paper::PaperReference;
-use capstore::report::table::Table;
-use capstore::runtime::manifest::ArtifactManifest;
-use capstore::scenario::{Evaluator, Geometry, Scenario, TechNode};
-#[cfg(feature = "pjrt")]
-use capstore::testing::SplitMix64;
-use capstore::traffic::{
-    rank_for_traffic, simulate, ArrivalPattern, ServiceModel,
-    TrafficProfile,
-};
-use capstore::util::json::Json;
-use capstore::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
-use capstore::Result;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, positionals, flags) = match parse_args(&args) {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("error: {e}");
-            usage();
-            return ExitCode::FAILURE;
-        }
-    };
-    let result = match cmd.as_str() {
-        "analyze" => cmd_analyze(&flags),
-        "evaluate" => cmd_evaluate(&flags),
-        "timeline" => cmd_timeline(&positionals, &flags),
-        "dse" => cmd_dse(&flags),
-        "traffic" => cmd_traffic(&positionals, &flags),
-        "serve" => cmd_serve(&flags),
-        "info" => cmd_info(&flags),
-        "help" | "" => {
-            usage();
-            Ok(())
-        }
-        other => {
-            eprintln!("error: unknown subcommand {other:?}");
-            usage();
-            return ExitCode::FAILURE;
-        }
-    };
-    match result {
-        Ok(()) => ExitCode::SUCCESS,
-        Err(e) => {
-            eprintln!("error: {e}");
-            ExitCode::FAILURE
-        }
-    }
-}
-
-fn usage() {
-    // network and tech lists come from their registries, so the help
-    // text can never drift when an entry is added
-    let models = CapsNetConfig::names().join("|");
-    let techs = TechNode::names().join("|");
-    println!(
-        "capstore — energy-efficient on-chip memory for CapsuleNet accelerators
-
-USAGE: capstore <analyze|evaluate|timeline|dse|traffic|serve|info>
-                [--flag value | --flag=value]...
-       capstore timeline [<net> [<org>]] [--flag value]...
-       capstore traffic [<net> [<org>]] [--flag value]...
-
-FLAGS (all optional, `--flag value` or `--flag=value`; a subcommand
-rejects flags it does not consume):
-  --scenario <path.toml>      typed scenario file (network/tech/org/
-                              geometry/batch/gating/dma); flags below
-                              override its fields
-                                 (analyze, evaluate, timeline, dse, serve)
-  --format <table|json>       output format            [table]
-  --model <{models}>          network config           [mnist]
-                                 (analyze, evaluate, timeline, dse, serve)
-  --config <path.toml>        legacy run config file
-  --tech <{techs}>            technology node          [32nm]
-                                 (evaluate, timeline, dse, serve)
-  --org <SMP|PG-SEP|...>      memory organization      [PG-SEP]
-  --banks N --sectors N       memory geometry          [16 / 64]
-                                 (evaluate, timeline, serve)
-  --lookahead N               PMU pre-wake cycles      [256]
-  --dma <instant|serial|double-buffered>
-                              DMA/compute overlap      [instant]
-  --dma-bw N                  DMA bytes per cycle      [16]
-  --batch N                   pipelined batch size     [1]
-                                 (evaluate, timeline, serve)
-  --artifacts <dir>           artifact directory       [artifacts]
-                                 (serve, info)
-
-timeline:
-  capstore timeline <net> <org>   render op intervals + per-macro gating
-                                  segments of the cycle-resolved IR
-
-dse only:
-  --threads N                 worker threads           [0 = all cores]
-  --space <default|large|full>
-                              sweep extent             [default]
-                              (full = all tech nodes x all models,
-                              narrowed by --model/--tech if given;
-                              large/full cross the dma axis too)
-
-traffic:
-  capstore traffic <net> <org>    simulate a request stream against the
-                                  scenario on a virtual cycle clock
-  --rate R                    mean arrivals per second [1000]
-  --pattern <poisson|bursty|diurnal>
-                              arrival process          [poisson]
-  --seed N                    arrival RNG seed         [1]
-  --duration S                simulated window, sec    [1]
-  --slo-ms MS                 latency objective, ms    [10]
-  --max-batch N --max-wait-ms MS
-                              batcher triggers         [8 / 2]
-  --rates R1,R2,...           serving-aware DSE: re-rank the Pareto
-                              front per rate and report each winner
-
-serve only:
-  --requests N                request count            [64]
-  --clients N                 client threads           [4]"
-    );
-}
-
-type Flags = BTreeMap<String, String>;
-
-/// Flags each subcommand understands, composed from shared groups so a
-/// future flag is added in one place.  Every listed flag is actually
-/// consumed by its subcommand — anything else is rejected at parse time
-/// rather than silently ignored.  `None` = unknown subcommand (let the
-/// dispatcher report it instead of a flag error).
-fn known_flags(cmd: &str) -> Option<Vec<&'static str>> {
-    // scenario selection + output shared by the evaluation commands
-    const SCENARIO: &[&str] = &["scenario", "format", "model", "config"];
-    // the memory-system axes of a scenario
-    const MEMORY: &[&str] = &["tech", "org", "banks", "sectors"];
-    // the time-policy axes of a scenario (timeline IR knobs)
-    const TIME: &[&str] = &["lookahead", "dma", "dma-bw", "batch"];
-    let parts: &[&[&str]] = match cmd {
-        "analyze" => &[SCENARIO],
-        "evaluate" => &[SCENARIO, MEMORY, TIME],
-        "timeline" => &[SCENARIO, MEMORY, TIME],
-        "dse" => &[SCENARIO, &["tech", "threads", "space"]],
-        // traffic takes the time-policy flags minus `--batch`: the
-        // simulator's own batcher decides actual batch sizes (use
-        // --max-batch), so a --batch pin would be silently ignored
-        "traffic" => &[
-            SCENARIO,
-            MEMORY,
-            &["lookahead", "dma", "dma-bw"],
-            &[
-                "rate", "rates", "pattern", "seed", "duration", "slo-ms",
-                "max-batch", "max-wait-ms",
-            ],
-        ],
-        "serve" => {
-            &[SCENARIO, MEMORY, TIME, &["artifacts", "requests", "clients"]]
-        }
-        "info" => &[&["config", "artifacts", "format"]],
-        "help" | "" => &[],
-        _ => return None,
-    };
-    Some(parts.iter().flat_map(|p| p.iter().copied()).collect())
-}
-
-/// Positional operands a subcommand accepts (everything else rejects
-/// bare tokens, as before).
-fn max_positionals(cmd: &str) -> usize {
-    match cmd {
-        // capstore timeline|traffic [<net> [<org>]]
-        "timeline" | "traffic" => 2,
-        _ => 0,
-    }
-}
-
-/// Parse `<cmd> [positional]... [--flag value | --flag=value]...`,
-/// rejecting flags the subcommand does not know and positionals beyond
-/// what it accepts.
-fn parse_args(args: &[String]) -> Result<(String, Vec<String>, Flags)> {
-    let cmd = args.first().cloned().unwrap_or_default();
-    let known = known_flags(&cmd);
-    let max_pos = max_positionals(&cmd);
-    let mut positionals: Vec<String> = Vec::new();
-    let mut flags = Flags::new();
-    let mut i = 1;
-    while i < args.len() {
-        let Some(body) = args[i].strip_prefix("--") else {
-            if positionals.len() < max_pos {
-                positionals.push(args[i].clone());
-                i += 1;
-                continue;
-            }
-            return Err(capstore::Error::Config(format!(
-                "expected --flag, got {:?}",
-                args[i]
-            )));
-        };
-        let (key, value) = match body.split_once('=') {
-            Some((k, v)) => (k.to_string(), v.to_string()),
-            None => {
-                let v = args.get(i + 1).cloned().ok_or_else(|| {
-                    capstore::Error::Config(format!("--{body} needs a value"))
-                })?;
-                i += 1;
-                (body.to_string(), v)
-            }
-        };
-        if let Some(known) = &known {
-            if !known.contains(&key.as_str()) {
-                return Err(capstore::Error::Config(format!(
-                    "unknown flag --{key} for `{cmd}` (known: {})",
-                    known
-                        .iter()
-                        .map(|k| format!("--{k}"))
-                        .collect::<Vec<_>>()
-                        .join(", ")
-                )));
-            }
-        }
-        flags.insert(key, value);
-        i += 1;
-    }
-    Ok((cmd, positionals, flags))
-}
-
-/// Read and parse the TOML file a flag points at (once — callers that
-/// also need the raw document reuse it instead of re-reading).
-fn flag_doc(flags: &Flags, flag: &str) -> Result<Option<TomlDoc>> {
-    match flags.get(flag) {
-        None => Ok(None),
-        Some(path) => {
-            let text = std::fs::read_to_string(path)?;
-            Ok(Some(TomlDoc::parse(&text)?))
-        }
-    }
-}
-
-/// Assemble the run config from --config file + flag overrides.
-fn run_config(flags: &Flags) -> Result<RunConfig> {
-    run_config_with_doc(flags, flag_doc(flags, "config")?.as_ref())
-}
-
-/// [`run_config`] against an already-parsed config document.
-fn run_config_with_doc(
-    flags: &Flags,
-    doc: Option<&TomlDoc>,
-) -> Result<RunConfig> {
-    let mut cfg = match doc {
-        Some(doc) => RunConfig::from_toml(doc)?,
-        None => RunConfig::default(),
-    };
-    if let Some(m) = flags.get("model") {
-        cfg.model = m.clone();
-    }
-    if let Some(o) = flags.get("org") {
-        cfg.organization = parse_organization(o)?;
-    }
-    if let Some(b) = flags.get("banks") {
-        cfg.banks = b.parse().map_err(|_| bad_flag("banks", b))?;
-    }
-    if let Some(s) = flags.get("sectors") {
-        cfg.sectors = s.parse().map_err(|_| bad_flag("sectors", s))?;
-    }
-    if let Some(d) = flags.get("artifacts") {
-        cfg.artifact_dir = d.clone();
-    }
-    Ok(cfg)
-}
-
-/// Resolve the effective [`Scenario`], stacking lowest to highest:
-/// built-in defaults → `--config` run config → keys present in the
-/// `--scenario` file → individual flags.
-fn scenario_from(flags: &Flags, rc: &RunConfig) -> Result<Scenario> {
-    scenario_with_doc(flags, rc, flag_doc(flags, "scenario")?.as_ref())
-}
-
-/// [`scenario_from`] against an already-parsed scenario document.
-fn scenario_with_doc(
-    flags: &Flags,
-    rc: &RunConfig,
-    doc: Option<&TomlDoc>,
-) -> Result<Scenario> {
-    let mut b = Scenario::builder()
-        .network(&rc.model)
-        .organization(rc.organization)
-        .banks(rc.banks)
-        .sectors(rc.sectors);
-    if let Some(doc) = doc {
-        b = b.overlay_toml(doc)?;
-    }
-    if let Some(m) = flags.get("model") {
-        b = b.network(m);
-    }
-    if let Some(o) = flags.get("org") {
-        b = b.organization_named(o);
-    }
-    if let Some(t) = flags.get("tech") {
-        b = b.tech(t);
-    }
-    if let Some(v) = flags.get("banks") {
-        b = b.banks(v.parse().map_err(|_| bad_flag("banks", v))?);
-    }
-    if let Some(v) = flags.get("sectors") {
-        b = b.sectors(v.parse().map_err(|_| bad_flag("sectors", v))?);
-    }
-    if let Some(v) = flags.get("lookahead") {
-        b = b.lookahead(v.parse().map_err(|_| bad_flag("lookahead", v))?);
-    }
-    if let Some(v) = flags.get("dma") {
-        b = b.dma_named(v);
-    }
-    if let Some(v) = flags.get("dma-bw") {
-        b = b.dma_bandwidth(v.parse().map_err(|_| bad_flag("dma-bw", v))?);
-    }
-    if let Some(v) = flags.get("batch") {
-        b = b.batch(v.parse().map_err(|_| bad_flag("batch", v))?);
-    }
-    b.build()
-}
-
-/// Apply the `<net> [<org>]` positional shorthand shared by `timeline`
-/// and `traffic`.  A positional given together with its flag form is a
-/// conflict, rejected like every other ambiguous input in this CLI —
-/// never silently resolved.
-fn apply_positionals(
-    cmd: &str,
-    mut sc: Scenario,
-    positionals: &[String],
-    flags: &Flags,
-) -> Result<Scenario> {
-    if positionals.first().is_some() && flags.contains_key("model") {
-        return Err(capstore::Error::Config(format!(
-            "`{cmd} <net>` and `--model` both name the network — \
-             give one or the other"
-        )));
-    }
-    if positionals.get(1).is_some() && flags.contains_key("org") {
-        return Err(capstore::Error::Config(format!(
-            "`{cmd} <net> <org>` and `--org` both name the \
-             organization — give one or the other"
-        )));
-    }
-    if let Some(net) = positionals.first() {
-        sc = sc.into_builder().network(net).build()?;
-    }
-    if let Some(org) = positionals.get(1) {
-        sc = sc.into_builder().organization_named(org).build()?;
-    }
-    Ok(sc)
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Format {
-    Table,
-    Json,
-}
-
-fn out_format(flags: &Flags) -> Result<Format> {
-    match flags.get("format").map(String::as_str) {
-        None | Some("table") => Ok(Format::Table),
-        Some("json") => Ok(Format::Json),
-        Some(other) => Err(capstore::Error::Config(format!(
-            "--format: want table|json, got {other:?}"
-        ))),
-    }
-}
-
-fn bad_flag(name: &str, v: &str) -> capstore::Error {
-    capstore::Error::Config(format!("--{name}: cannot parse {v:?}"))
-}
-
-// ---------------------------------------------------------------------
-// analyze — Fig 4a-e + Eq 1/2
-// ---------------------------------------------------------------------
-fn cmd_analyze(flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
-    let fmt = out_format(flags)?;
-    let sc = scenario_from(flags, &rc)?;
-    let cfg = sc.network.clone();
-    let sim = SystolicSim::default();
-    let req = RequirementsAnalysis::analyze(&cfg, &sim.array);
-    let cap = req.max_total();
-
-    let mut t_req = Table::new(
-        "Fig 4a/4c — on-chip memory requirements per operation (bytes)",
-        &["op", "data", "weight", "accum", "total", "util%"],
-    );
-    for o in &req.per_op {
-        t_req.row(vec![
-            o.kind.label().to_string(),
-            o.req.data.to_string(),
-            o.req.weight.to_string(),
-            o.req.accum.to_string(),
-            o.req.total().to_string(),
-            format!("{:.1}", 100.0 * o.req.total() as f64 / cap as f64),
-        ]);
-    }
-
-    let mut t_cycles = Table::new(
-        "Fig 4b — clock cycles per operation",
-        &["op", "execs", "cycles", "total"],
-    );
-    for op in Operation::all_kinds(&cfg) {
-        let p = sim.profile(&op);
-        let execs = op.kind.executions(&cfg);
-        t_cycles.row(vec![
-            op.kind.label().into(),
-            execs.to_string(),
-            fmt_si(p.cycles),
-            fmt_si(p.cycles * execs),
-        ]);
-    }
-    let (_, total) = sim.profile_schedule(&cfg);
-    let inference_ms = total as f64 / sim.array.clock_hz * 1e3;
-
-    let mut t_acc = Table::new(
-        "Fig 4d/4e — on-chip accesses per operation (per execution)",
-        &["op", "data R", "data W", "wt R", "wt W", "acc R", "acc W"],
-    );
-    for op in Operation::all_kinds(&cfg) {
-        let p = sim.profile(&op);
-        t_acc.row(vec![
-            op.kind.label().into(),
-            fmt_si(p.data_reads),
-            fmt_si(p.data_writes),
-            fmt_si(p.weight_reads),
-            fmt_si(p.weight_writes),
-            fmt_si(p.accum_reads),
-            fmt_si(p.accum_writes),
-        ]);
-    }
-
-    let mut t_off = Table::new(
-        "Eq (1)/(2) — off-chip accesses per operation",
-        &["op", "reads", "writes"],
-    );
-    for tr in OffChipTraffic::analyze(&cfg, &sim) {
-        t_off.row(vec![
-            tr.kind.label().into(),
-            fmt_si(tr.reads),
-            fmt_si(tr.writes),
-        ]);
-    }
-    let dram_bytes = OffChipTraffic::total_bytes(&cfg, &sim);
-
-    match fmt {
-        Format::Table => {
-            t_req.print();
-            println!("overall worst case (dashed line): {}\n", fmt_bytes(cap));
-            t_cycles.print();
-            println!(
-                "inference total: {} cycles = {:.3} ms @ {:.1} GHz\n",
-                fmt_si(total),
-                inference_ms,
-                sim.array.clock_hz / 1e9
-            );
-            t_acc.print();
-            println!();
-            t_off.print();
-            println!(
-                "total DRAM bytes per inference: {}",
-                fmt_bytes(dram_bytes)
-            );
-        }
-        Format::Json => {
-            let j = Json::obj(vec![
-                ("network", Json::Str(cfg.name.to_string())),
-                (
-                    "tables",
-                    Json::Arr(vec![
-                        t_req.to_json(),
-                        t_cycles.to_json(),
-                        t_acc.to_json(),
-                        t_off.to_json(),
-                    ]),
-                ),
-                ("worst_case_bytes", Json::Num(cap as f64)),
-                ("total_cycles", Json::Num(total as f64)),
-                ("inference_ms", Json::Num(inference_ms)),
-                ("dram_bytes_per_inference", Json::Num(dram_bytes as f64)),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// evaluate — Tables 1/2, Figs 5/10/11, + the selected scenario
-// ---------------------------------------------------------------------
-fn cmd_evaluate(flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
-    let fmt = out_format(flags)?;
-    let sc = scenario_from(flags, &rc)?;
-    let ev = Evaluator::new();
-    let paper = PaperReference::new();
-
-    // Tables 1/2: all six organizations at the paper's default geometry
-    // for the scenario's network + node (one facade, shared caches).
-    let mut t1 = Table::new(
-        "Table 1 — organizations (sizes in bytes)",
-        &["org", "macro", "size", "banks", "sectors", "ports"],
-    );
-    let mut t2 = Table::new(
-        "Table 2 — area and on-chip energy per organization",
-        &["org", "area mm2", "energy/inf", "vs SMP", "paper vs SMP"],
-    );
-    let mut smp_energy = None;
-    let mut org_evals = Vec::new();
-    for org in Organization::all() {
-        let org_sc = Scenario {
-            organization: org,
-            geometry: Geometry {
-                banks: DEFAULT_BANKS,
-                sectors: DEFAULT_SECTORS,
-            },
-            ..sc.clone()
-        };
-        let e = ev.evaluate_analytical(&org_sc)?;
-        for m in &e.architecture.macros {
-            t1.row(vec![
-                org.label().into(),
-                m.role.label().into(),
-                m.sram.size_bytes.to_string(),
-                m.sram.banks.to_string(),
-                m.sram.sectors.to_string(),
-                m.sram.ports.to_string(),
-            ]);
-        }
-        if org.label() == "SMP" {
-            smp_energy = Some(e.onchip_pj());
-        }
-        let vs_smp = smp_energy.map(|s| e.onchip_pj() / s).unwrap_or(1.0);
-        let paper_ratio = paper
-            .energy_vs_smp(org.label())
-            .map(|r| format!("{r:.3}"))
-            .unwrap_or_else(|| "-".into());
-        t2.row(vec![
-            org.label().into(),
-            format!("{:.3}", e.area_mm2()),
-            fmt_energy_uj(e.onchip_pj()),
-            format!("{vs_smp:.3}"),
-            paper_ratio,
-        ]);
-        org_evals.push(e);
-    }
-
-    // Fig 5 / Fig 11 headline systems (reusing the six evaluations)
-    let a = ev.all_onchip_baseline(&sc)?;
-    let by_label = |l: &str| {
-        org_evals
-            .iter()
-            .find(|e| e.scenario.organization.label() == l)
-            .expect("all six organizations evaluated")
-    };
-    let b = by_label("SMP").system.clone();
-    let c = by_label("PG-SEP").system.clone();
-
-    // the scenario actually selected: the only full evaluation (with
-    // the event-level cross-check) — the table loop above is
-    // analytical-only, so exactly one event sim runs per invocation
-    let selected = ev.evaluate(&sc)?;
-
-    match fmt {
-        Format::Table => {
-            t1.print();
-            println!();
-            t2.print();
-
-            println!(
-                "\n== Fig 5 / Fig 11 — whole-system energy per inference =="
-            );
-            for sys in [&a, &b, &c] {
-                println!(
-                    "{:18} accel {:>10}  onchip {:>10}  offchip {:>10}  total {:>10}  (memory {:.1}%)",
-                    sys.label,
-                    fmt_energy_uj(sys.accel_pj),
-                    fmt_energy_uj(sys.onchip_pj),
-                    fmt_energy_uj(sys.offchip_pj),
-                    fmt_energy_uj(sys.total_pj()),
-                    100.0 * sys.memory_share()
-                );
-            }
-            println!();
-            println!(
-                "{}",
-                PaperReference::delta_line(
-                    "hierarchy saving (b vs a)",
-                    1.0 - b.total_pj() / a.total_pj(),
-                    PaperReference::HIERARCHY_SAVING
-                )
-            );
-            println!(
-                "{}",
-                PaperReference::delta_line(
-                    "PG-SEP on-chip saving vs (b)",
-                    1.0 - c.onchip_pj / b.onchip_pj,
-                    PaperReference::PG_SEP_ONCHIP_SAVING
-                )
-            );
-            println!(
-                "{}",
-                PaperReference::delta_line(
-                    "PG-SEP total saving vs (a)",
-                    1.0 - c.total_pj() / a.total_pj(),
-                    PaperReference::PG_SEP_TOTAL_VS_A
-                )
-            );
-            println!(
-                "{}",
-                PaperReference::delta_line(
-                    "PG-SEP total saving vs (b)",
-                    1.0 - c.total_pj() / b.total_pj(),
-                    PaperReference::PG_SEP_TOTAL_VS_B
-                )
-            );
-
-            println!("\n== scenario {} ==", selected.scenario.label());
-            println!(
-                "onchip {}  offchip {}  accel {}  total {}",
-                fmt_energy_uj(selected.onchip_pj()),
-                fmt_energy_uj(selected.system.offchip_pj),
-                fmt_energy_uj(selected.system.accel_pj),
-                fmt_energy_uj(selected.total_pj()),
-            );
-            println!(
-                "area {:.3} mm2, capacity {}, batch {} -> {} per batch",
-                selected.area_mm2(),
-                fmt_bytes(selected.capacity_bytes()),
-                selected.scenario.batch,
-                fmt_energy_uj(selected.batch_pj()),
-            );
-            if selected.timeline.stall_cycles() > 0
-                || selected.scenario.batch > 1
-            {
-                println!(
-                    "timeline: batch latency {} cycles ({} DMA stall), \
-                     pipelining saves {}",
-                    fmt_si(selected.batch.latency_cycles),
-                    fmt_si(selected.timeline.stall_cycles()),
-                    fmt_energy_uj(selected.batch.pipeline_saving_pj),
-                );
-            }
-            if let Some(event) = &selected.event {
-                println!(
-                    "event-sim: static {}  wakeup {}  transitions {}  stall cycles {}",
-                    fmt_energy_uj(event.static_pj),
-                    fmt_energy_uj(event.wakeup_pj),
-                    event.transitions,
-                    event.not_ready_cycles,
-                );
-            }
-        }
-        Format::Json => {
-            let systems: Vec<Json> = [&a, &b, &c]
-                .iter()
-                .map(|sys| {
-                    Json::obj(vec![
-                        ("label", Json::Str(sys.label.clone())),
-                        ("accel_pj", Json::Num(sys.accel_pj)),
-                        ("onchip_pj", Json::Num(sys.onchip_pj)),
-                        ("offchip_pj", Json::Num(sys.offchip_pj)),
-                        ("total_pj", Json::Num(sys.total_pj())),
-                        ("memory_share", Json::Num(sys.memory_share())),
-                    ])
-                })
-                .collect();
-            let j = Json::obj(vec![
-                ("table1", t1.to_json()),
-                ("table2", t2.to_json()),
-                ("systems", Json::Arr(systems)),
-                // full Evaluation of the selected scenario (its own
-                // "scenario" sub-object names the evaluated point)
-                ("selected", selected.to_json()),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// timeline — the cycle-resolved IR: op intervals + gating segments
-// ---------------------------------------------------------------------
-fn cmd_timeline(positionals: &[String], flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
-    let fmt = out_format(flags)?;
-    let sc = apply_positionals(
-        "timeline",
-        scenario_from(flags, &rc)?,
-        positionals,
-        flags,
-    )?;
-
-    let ev = Evaluator::new();
-    let e = ev.evaluate(&sc)?;
-    let tl = e.timeline();
-
-    // op intervals + per-op utilization (Fig 4a/4c over time)
-    let mut headers: Vec<String> = ["#", "inf", "op", "start", "end", "util%"]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
-    for m in &tl.macros {
-        headers.push(format!("{} ON", m.label));
-    }
-    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
-    let mut t_ops =
-        Table::new("Timeline — op intervals and ON sectors", &hrefs);
-    for row in e.utilization() {
-        let mut cells = vec![
-            row.op_index.to_string(),
-            row.inference.to_string(),
-            row.kind.label().to_string(),
-            row.interval.start.to_string(),
-            row.interval.end.to_string(),
-            format!("{:.1}", 100.0 * row.on_fraction),
-        ];
-        for (m, &on) in tl.macros.iter().zip(&row.sectors_on) {
-            cells.push(format!("{on}/{}", m.total_sectors));
-        }
-        t_ops.row(cells);
-    }
-
-    // per-macro gating segments (merged constant-ON runs)
-    let mut t_seg = Table::new(
-        "Timeline — per-macro gating segments",
-        &["macro", "start", "end", "cycles", "ON sectors", "state"],
-    );
-    for (mi, m) in tl.macros.iter().enumerate() {
-        for (iv, on) in tl.macro_segments(mi) {
-            let state = if on == 0 {
-                "OFF"
-            } else if on < m.total_sectors {
-                "partial"
-            } else {
-                "ON"
-            };
-            t_seg.row(vec![
-                m.label.to_string(),
-                iv.start.to_string(),
-                iv.end.to_string(),
-                fmt_si(iv.cycles()),
-                format!("{on}/{}", m.total_sectors),
-                state.to_string(),
-            ]);
-        }
-    }
-
-    // DMA stalls (only present when transfers are not hidden)
-    let mut t_stall = Table::new(
-        "Timeline — DMA stalls",
-        &["start", "end", "cycles"],
-    );
-    for s in &tl.stalls {
-        t_stall.row(vec![
-            s.interval.start.to_string(),
-            s.interval.end.to_string(),
-            fmt_si(s.interval.cycles()),
-        ]);
-    }
-
-    match fmt {
-        Format::Table => {
-            println!("scenario: {}", sc.label());
-            t_ops.print();
-            println!();
-            t_seg.print();
-            if !tl.stalls.is_empty() {
-                println!();
-                t_stall.print();
-            }
-            println!(
-                "\nmakespan: {} cycles ({:.3} ms), batch {}, stalls {}",
-                fmt_si(tl.total_cycles),
-                tl.latency_secs() * 1.0e3,
-                sc.batch,
-                fmt_si(tl.stall_cycles()),
-            );
-            println!(
-                "gating: {} transitions, wakeup {}, event static {}",
-                tl.transitions(),
-                fmt_energy_uj(tl.wakeup_pj()),
-                fmt_energy_uj(tl.static_pj()),
-            );
-            println!(
-                "batch energy: {} ({} saved by pipelining)",
-                fmt_energy_uj(e.batch_pj()),
-                fmt_energy_uj(e.batch.pipeline_saving_pj),
-            );
-        }
-        Format::Json => {
-            let j = Json::obj(vec![
-                ("scenario", Json::Str(sc.label())),
-                ("ops", t_ops.to_json()),
-                ("gating_segments", t_seg.to_json()),
-                ("stalls", t_stall.to_json()),
-                ("total_cycles", Json::Num(tl.total_cycles as f64)),
-                ("stall_cycles", Json::Num(tl.stall_cycles() as f64)),
-                ("transitions", Json::Num(tl.transitions() as f64)),
-                ("wakeup_pj", Json::Num(tl.wakeup_pj())),
-                ("static_pj", Json::Num(tl.static_pj())),
-                ("batch_pj", Json::Num(e.batch_pj())),
-                (
-                    "pipeline_saving_pj",
-                    Json::Num(e.batch.pipeline_saving_pj),
-                ),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// dse — §4.2 sweep (parallel incremental engine)
-// ---------------------------------------------------------------------
-fn cmd_dse(flags: &Flags) -> Result<()> {
-    // parse each flagged TOML file exactly once; the docs feed both the
-    // scenario resolution and the sweep-narrowing key-presence checks
-    let config_doc = flag_doc(flags, "config")?;
-    let scenario_doc = flag_doc(flags, "scenario")?;
-    let rc = run_config_with_doc(flags, config_doc.as_ref())?;
-    let fmt = out_format(flags)?;
-    let sc = scenario_with_doc(flags, &rc, scenario_doc.as_ref())?;
-    // the exploration sweeps the organization/geometry axes itself, so
-    // a scenario file may only pin the workload axes (network/tech).
-    // Files that merely restate the effective defaults — e.g. anything
-    // Scenario::to_toml() emits — are fine; a file that actually
-    // CHANGES org/geometry/batch/gating would be silently overridden
-    // by the sweep, and this CLI rejects rather than ignores (matching
-    // known_flags, which rejects --org/--banks/--sectors for `dse`).
-    if scenario_doc.is_some() {
-        let without = scenario_with_doc(flags, &rc, None)?;
-        if sc.organization != without.organization
-            || sc.geometry != without.geometry
-            || sc.batch != without.batch
-            || sc.gating != without.gating
-            || sc.dma != without.dma
-        {
-            return Err(capstore::Error::Config(
-                "`dse` explores the organization/geometry/dma axes \
-                 itself: the scenario file pins organization/geometry/\
-                 batch/gating/dma values the sweep would override — drop \
-                 those keys (only `[scenario] network`/`tech` steer a \
-                 sweep), or use `capstore evaluate` for a single design \
-                 point"
-                    .into(),
-            ));
-        }
-    }
-    let threads: usize = flags
-        .get("threads")
-        .map(|v| v.parse().map_err(|_| bad_flag("threads", v)))
-        .transpose()?
-        .unwrap_or(0);
-    let space = flags.get("space").map(String::as_str).unwrap_or("default");
-
-    if space == "full" || space == "grand" {
-        // an explicit model/tech selection narrows the grand sweep: a
-        // flag, or a config/scenario file that actually SETS the key
-        // (a scenario file that only tunes, say, gating must not
-        // collapse the exploration to the default model/node); the
-        // geometry/org flags pick a single design point and don't
-        // apply to an exploration
-        let config_sets_model = config_doc
-            .as_ref()
-            .is_some_and(|doc| !doc.str_or("", "model", "").is_empty());
-        let scenario_sets = |key: &str| {
-            scenario_doc
-                .as_ref()
-                .is_some_and(|doc| doc.get("scenario", key).is_some())
-        };
-        let model_filter = (flags.contains_key("model")
-            || scenario_sets("network")
-            || config_sets_model)
-        .then(|| sc.network.name.to_string());
-        let tech_filter = (flags.contains_key("tech")
-            || scenario_sets("tech"))
-        .then(|| sc.tech.label());
-        return cmd_dse_full(
-            threads,
-            model_filter.as_deref(),
-            tech_filter,
-            fmt,
-        );
-    }
-
-    let mut ex = Explorer::new(sc.network.clone()).with_threads(threads);
-    ex.model.tech = sc.tech.technology();
-    ex.space = match space {
-        "default" => SweepSpace::default(),
-        "large" => SweepSpace::large(),
-        other => {
-            return Err(capstore::Error::Config(format!(
-                "--space: want default|large|full, got {other:?}"
-            )))
-        }
-    };
-
-    let t0 = std::time::Instant::now();
-    let points = ex.sweep()?;
-    let secs = t0.elapsed().as_secs_f64();
-    let front = Explorer::pareto(&points);
-    let best = Explorer::best_energy(&points).expect("non-empty sweep");
-
-    let mut t = Table::new(
-        "DSE — Pareto front over (on-chip energy, area)",
-        &["org", "banks", "sectors", "dma", "energy/inf", "area mm2",
-          "capacity", "latency cy"],
-    );
-    for p in &front {
-        t.row(vec![
-            p.organization.label().into(),
-            p.banks.to_string(),
-            p.sectors.to_string(),
-            p.dma.model.label().into(),
-            fmt_energy_uj(p.onchip_energy_pj),
-            format!("{:.3}", p.area_mm2),
-            fmt_bytes(p.capacity_bytes),
-            fmt_si(p.latency_cycles),
-        ]);
-    }
-
-    match fmt {
-        Format::Table => {
-            t.print();
-            println!(
-                "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
-                best.organization.label(),
-                best.banks,
-                best.sectors,
-                fmt_energy_uj(best.onchip_energy_pj)
-            );
-            println!(
-                "explored {} design points in {:.1} ms ({:.0} points/s)",
-                points.len(),
-                secs * 1.0e3,
-                points.len() as f64 / secs.max(1e-12)
-            );
-        }
-        Format::Json => {
-            let j = Json::obj(vec![
-                ("network", Json::Str(sc.network.name.to_string())),
-                ("tech", Json::Str(sc.tech.label().to_string())),
-                ("points", Json::Num(points.len() as f64)),
-                ("seconds", Json::Num(secs)),
-                ("pareto_front", t.to_json()),
-                (
-                    "best",
-                    Json::obj(vec![
-                        (
-                            "org",
-                            Json::Str(best.organization.label().to_string()),
-                        ),
-                        ("banks", Json::Num(best.banks as f64)),
-                        ("sectors", Json::Num(best.sectors as f64)),
-                        ("energy_pj", Json::Num(best.onchip_energy_pj)),
-                        ("area_mm2", Json::Num(best.area_mm2)),
-                    ]),
-                ),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-/// The grand sweep: every named network (or just `--model`) x every
-/// technology node (or just `--tech`) x the large space, with per-pair
-/// winners and throughput.
-fn cmd_dse_full(
-    threads: usize,
-    model: Option<&str>,
-    tech: Option<&'static str>,
-    fmt: Format,
-) -> Result<()> {
-    let mut ms = MultiSweep { threads, ..MultiSweep::default() };
-    if let Some(name) = model {
-        ms.models.retain(|m| m.name == name);
-        if ms.models.is_empty() {
-            return Err(capstore::Error::Config(format!(
-                "unknown model {name:?} (want one of {})",
-                CapsNetConfig::names().join(", ")
-            )));
-        }
-    }
-    if let Some(node) = tech {
-        ms.techs.retain(|(n, _)| *n == node);
-    }
-    if fmt == Format::Table {
-        println!(
-            "grand sweep: {} models x {} tech nodes x {} points = {} total",
-            ms.models.len(),
-            ms.techs.len(),
-            ms.space.num_points(),
-            ms.num_points()
-        );
-    }
-    let t0 = std::time::Instant::now();
-    let all = ms.run()?;
-    let secs = t0.elapsed().as_secs_f64();
-
-    let mut t = Table::new(
-        "grand DSE — min-energy winner per (model, tech node)",
-        &["model", "tech", "org", "banks", "sectors", "dma",
-          "energy/inf", "area mm2"],
-    );
-    for cfg in &ms.models {
-        for (tech_name, _) in &ms.techs {
-            let best = all
-                .iter()
-                .filter(|mp| mp.model == cfg.name && mp.tech == *tech_name)
-                .min_by(|a, b| {
-                    a.point
-                        .onchip_energy_pj
-                        .partial_cmp(&b.point.onchip_energy_pj)
-                        .unwrap()
-                })
-                .expect("non-empty slice");
-            t.row(vec![
-                best.model.into(),
-                best.tech.into(),
-                best.point.organization.label().into(),
-                best.point.banks.to_string(),
-                best.point.sectors.to_string(),
-                best.point.dma.model.label().into(),
-                fmt_energy_uj(best.point.onchip_energy_pj),
-                format!("{:.3}", best.point.area_mm2),
-            ]);
-        }
-    }
-    match fmt {
-        Format::Table => {
-            t.print();
-            println!(
-                "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
-                all.len(),
-                secs * 1.0e3,
-                all.len() as f64 / secs.max(1e-12)
-            );
-        }
-        Format::Json => {
-            let j = Json::obj(vec![
-                ("points", Json::Num(all.len() as f64)),
-                ("seconds", Json::Num(secs)),
-                ("winners", t.to_json()),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// traffic — deterministic serving simulation + serving-aware DSE
-// ---------------------------------------------------------------------
-fn cmd_traffic(positionals: &[String], flags: &Flags) -> Result<()> {
-    let config_doc = flag_doc(flags, "config")?;
-    let scenario_doc = flag_doc(flags, "scenario")?;
-    let rc = run_config_with_doc(flags, config_doc.as_ref())?;
-    let fmt = out_format(flags)?;
-    let sc = apply_positionals(
-        "traffic",
-        scenario_with_doc(flags, &rc, scenario_doc.as_ref())?,
-        positionals,
-        flags,
-    )?;
-
-    // `--rates` re-ranks a Pareto front, i.e. it explores the
-    // organization/geometry/dma axes itself — a pinned design point
-    // would be silently overridden by the sweep, and this CLI rejects
-    // rather than ignores (mirroring `capstore dse`).
-    if flags.contains_key("rates") {
-        if positionals.get(1).is_some() {
-            return Err(capstore::Error::Config(
-                "`traffic <net> <org> --rates` pins an organization \
-                 the front re-ranking sweeps over — drop the \
-                 organization (the ranking tries every front point), \
-                 or use --rate to simulate that single design"
-                    .into(),
-            ));
-        }
-        for pinned in ["org", "banks", "sectors", "dma", "dma-bw"] {
-            if flags.contains_key(pinned) {
-                return Err(capstore::Error::Config(format!(
-                    "`--rates` explores the organization/geometry/dma \
-                     axes itself: --{pinned} would be silently \
-                     overridden — drop it, or use --rate to simulate \
-                     that single design point"
-                )));
-            }
-        }
-        if let Some(doc) = &config_doc {
-            for key in ["organization", "banks", "sectors"] {
-                if doc.get("memory", key).is_some() {
-                    return Err(capstore::Error::Config(format!(
-                        "`--rates` explores the organization/geometry \
-                         axes itself: the --config file pins \
-                         `[memory] {key}`, which the front re-ranking \
-                         would override — drop it, or use --rate for \
-                         a single design point"
-                    )));
-                }
-            }
-        }
-        if scenario_doc.is_some() {
-            let without = scenario_with_doc(flags, &rc, None)?;
-            if sc.organization != without.organization
-                || sc.geometry != without.geometry
-                || sc.dma != without.dma
-            {
-                return Err(capstore::Error::Config(
-                    "`--rates` explores the organization/geometry/dma \
-                     axes itself: the scenario file pins values the \
-                     front re-ranking would override — drop those \
-                     keys, or use --rate for a single design point"
-                        .into(),
-                ));
-            }
-        }
-    }
-
-    // workload: scenario [traffic] section (if any) under the flags
-    let mut profile = sc.traffic.clone().unwrap_or_default();
-    if let Some(v) = flags.get("pattern") {
-        profile.pattern = ArrivalPattern::by_name(v).ok_or_else(|| {
-            capstore::Error::Config(format!(
-                "--pattern: want one of {}, got {v:?}",
-                ArrivalPattern::names().join("|")
-            ))
-        })?;
-    }
-    if let Some(v) = flags.get("rate") {
-        profile.rate_per_sec =
-            v.parse().map_err(|_| bad_flag("rate", v))?;
-    }
-    if let Some(v) = flags.get("seed") {
-        profile.seed = v.parse().map_err(|_| bad_flag("seed", v))?;
-    }
-    if let Some(v) = flags.get("duration") {
-        profile.duration_secs =
-            v.parse().map_err(|_| bad_flag("duration", v))?;
-    }
-    if let Some(v) = flags.get("slo-ms") {
-        profile.slo_ms = v.parse().map_err(|_| bad_flag("slo-ms", v))?;
-    }
-    profile.validate()?;
-
-    // batching triggers: run-config [server] knobs under the flags
-    let mut policy =
-        BatchPolicy { max_batch: rc.max_batch, max_wait: rc.max_wait };
-    if let Some(v) = flags.get("max-batch") {
-        policy.max_batch =
-            v.parse().map_err(|_| bad_flag("max-batch", v))?;
-        if policy.max_batch == 0 {
-            return Err(capstore::Error::Config(
-                "--max-batch must be > 0".into(),
-            ));
-        }
-    }
-    if let Some(v) = flags.get("max-wait-ms") {
-        let ms: f64 = v.parse().map_err(|_| bad_flag("max-wait-ms", v))?;
-        if !(ms.is_finite() && ms >= 0.0) {
-            return Err(capstore::Error::Config(
-                "--max-wait-ms must be >= 0".into(),
-            ));
-        }
-        policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
-    }
-
-    let ev = Evaluator::new();
-    if let Some(list) = flags.get("rates") {
-        if flags.contains_key("rate") {
-            return Err(capstore::Error::Config(
-                "--rate simulates one profile, --rates re-ranks the \
-                 Pareto front — give one or the other"
-                    .into(),
-            ));
-        }
-        return cmd_traffic_rank(&ev, &sc, &profile, &policy, list, fmt);
-    }
-
-    let svc = ServiceModel::new(&ev, &sc, policy.max_batch)?;
-    let report = simulate(&svc, &profile, &policy);
-
-    match fmt {
-        Format::Table => {
-            println!("scenario: {}", sc.label());
-            println!("traffic:  {}", profile.label());
-            println!(
-                "\narrivals {}  served {}  queued {}  in {} batches \
-                 (mean occupancy {:.2})",
-                report.arrivals,
-                report.served,
-                report.queued,
-                report.batches,
-                report.mean_occupancy(),
-            );
-            println!(
-                "throughput {:.1} inf/s over a {:.3}s window \
-                 (busy {:.1}%)",
-                report.throughput_per_sec(svc.clock_hz),
-                profile.duration_secs,
-                100.0 * report.busy_cycles as f64
-                    / report.horizon_cycles.max(1) as f64,
-            );
-            if let Some(s) = &report.latency_ms {
-                println!(
-                    "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  \
-                     max {:.3}",
-                    s.median, s.p95, s.p99, s.max
-                );
-            }
-            println!(
-                "SLO {} ms: {} violations ({:.2}% of served)",
-                profile.slo_ms,
-                report.slo_violations,
-                100.0 * report.slo_violation_fraction(),
-            );
-            match report.break_even_cycles {
-                Some(be) => println!(
-                    "idle gating: {} cold starts, {} warm starts \
-                     (break-even {} cycles)",
-                    report.cold_starts, report.warm_starts, be
-                ),
-                None => println!(
-                    "idle gating: organization is ungated — memory \
-                     leaks at full power between batches"
-                ),
-            }
-            println!(
-                "energy: batches {} + idle {} - warm saving {} = {} \
-                 ({:.3} µJ/inference)",
-                fmt_energy_uj(report.batch_pj),
-                fmt_energy_uj(report.idle_pj),
-                fmt_energy_uj(report.warm_saving_pj),
-                fmt_energy_uj(report.total_pj()),
-                report.energy_uj_per_inference(),
-            );
-        }
-        Format::Json => {
-            println!("{}", report.to_json(svc.clock_hz).render());
-        }
-    }
-    Ok(())
-}
-
-/// `capstore traffic --rates R1,R2,...`: the serving-aware DSE.  Sweep
-/// the scenario's (network, tech) pair, take the Pareto front, and
-/// re-rank it per traffic profile — the winner moves with the load.
-fn cmd_traffic_rank(
-    ev: &Evaluator,
-    sc: &Scenario,
-    profile: &TrafficProfile,
-    policy: &BatchPolicy,
-    rates: &str,
-    fmt: Format,
-) -> Result<()> {
-    let rates: Vec<f64> = rates
-        .split(',')
-        .map(|r| {
-            r.trim()
-                .parse::<f64>()
-                .map_err(|_| bad_flag("rates", r))
-                .and_then(|v| {
-                    if v.is_finite() && v > 0.0 {
-                        Ok(v)
-                    } else {
-                        Err(bad_flag("rates", r))
-                    }
-                })
-        })
-        .collect::<Result<_>>()?;
-    if rates.is_empty() {
-        return Err(capstore::Error::Config(
-            "--rates needs at least one rate".into(),
-        ));
-    }
-
-    let mut ex = Explorer::new(sc.network.clone());
-    ex.model.tech = sc.tech.technology();
-    let points = ex.sweep()?;
-    let front = Explorer::pareto(&points);
-    let profiles: Vec<TrafficProfile> = rates
-        .iter()
-        .map(|&r| TrafficProfile { rate_per_sec: r, ..profile.clone() })
-        .collect();
-    let winners = rank_for_traffic(ev, sc, &front, &profiles, policy)?;
-
-    let mut t = Table::new(
-        "serving-aware DSE — best front point per traffic profile",
-        &["rate/s", "org", "banks", "sectors", "dma", "occup", "p99 ms",
-          "viol%", "cold", "µJ/inf", "slo"],
-    );
-    for w in &winners {
-        let p99 = w
-            .report
-            .latency_ms
-            .as_ref()
-            .map(|s| format!("{:.3}", s.p99))
-            .unwrap_or_else(|| "-".into());
-        t.row(vec![
-            format!("{}", w.profile.rate_per_sec),
-            w.point.organization.label().into(),
-            w.point.banks.to_string(),
-            w.point.sectors.to_string(),
-            w.point.dma.model.label().into(),
-            format!("{:.2}", w.report.mean_occupancy()),
-            p99,
-            format!("{:.2}", 100.0 * w.report.slo_violation_fraction()),
-            w.report.cold_starts.to_string(),
-            format!("{:.3}", w.report.energy_uj_per_inference()),
-            if w.feasible { "ok" } else { "MISS" }.to_string(),
-        ]);
-    }
-
-    match fmt {
-        Format::Table => {
-            println!(
-                "scenario: {} | pattern {} seed {} duration {}s slo {}ms",
-                sc.label(),
-                profile.pattern.label(),
-                profile.seed,
-                profile.duration_secs,
-                profile.slo_ms,
-            );
-            println!(
-                "front: {} Pareto points of a {}-point sweep\n",
-                front.len(),
-                points.len()
-            );
-            t.print();
-            let shifted = winners
-                .windows(2)
-                .any(|w| !w[0].point.bit_eq(&w[1].point));
-            if shifted {
-                println!(
-                    "\nthe energy-optimal design point shifts with the \
-                     traffic profile"
-                );
-            }
-        }
-        Format::Json => {
-            let j = Json::obj(vec![
-                ("network", Json::Str(sc.network.name.to_string())),
-                ("tech", Json::Str(sc.tech.label().to_string())),
-                ("front_points", Json::Num(front.len() as f64)),
-                ("winners", t.to_json()),
-            ]);
-            println!("{}", j.render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// serve — PJRT inference server on synthetic digits
-// ---------------------------------------------------------------------
-#[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_flags: &Flags) -> Result<()> {
-    Err(capstore::Error::Config(
-        "`capstore serve` needs the PJRT runtime: rebuild with \
-         `--features pjrt` (requires the vendored `xla` crate)"
-            .into(),
-    ))
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_serve(flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
-    let fmt = out_format(flags)?;
-    let sc = scenario_from(flags, &rc)?;
-    let requests: usize = flags
-        .get("requests")
-        .map(|v| v.parse().map_err(|_| bad_flag("requests", v)))
-        .transpose()?
-        .unwrap_or(64);
-    let clients: usize = flags
-        .get("clients")
-        .map(|v| v.parse().map_err(|_| bad_flag("clients", v)))
-        .transpose()?
-        .unwrap_or(4)
-        .max(1);
-
-    if fmt == Format::Table {
-        println!(
-            "serving scenario={} requests={requests} clients={clients}",
-            sc.label()
-        );
-    }
-    // the resolved scenario (config/file/flags) drives the energy
-    // accounting in full — organization, geometry, and tech node; the
-    // legacy run config contributes only the queueing/batching knobs
-    let server = InferenceServer::start(
-        PathBuf::from(&rc.artifact_dir),
-        sc.network.name.to_string(),
-        rc.server_config(sc.clone()),
-    )?;
-
-    let mut joins = Vec::new();
-    for c in 0..clients {
-        let h = server.handle();
-        let per_client =
-            requests / clients + usize::from(c < requests % clients);
-        joins.push(std::thread::spawn(move || {
-            let mut rng = SplitMix64::new(0xD161 + c as u64);
-            let mut preds = Vec::new();
-            for _ in 0..per_client {
-                let img: Vec<f32> =
-                    (0..784).map(|_| rng.f64() as f32).collect();
-                let resp = h.infer(img).expect("infer failed");
-                preds.push(resp.output.predicted);
-            }
-            preds
-        }));
-    }
-    let served: usize =
-        joins.into_iter().map(|j| j.join().expect("client died").len()).sum();
-    let m = server.shutdown();
-
-    match fmt {
-        Format::Table => {
-            println!("served {served} requests in {:.2}s", m.wall_seconds);
-            println!(
-                "throughput {:.1} inf/s, mean batch occupancy {:.2}",
-                m.throughput(),
-                m.mean_occupancy()
-            );
-            if let Some(s) = m.latency.summary() {
-                println!(
-                    "latency ms: median {:.2} p95 {:.2} p99 {:.2} max {:.2}",
-                    s.median, s.p95, s.p99, s.max
-                );
-            }
-            println!(
-                "simulated memory+accel energy: {} total, {:.2} µJ/inference ({})",
-                fmt_energy_uj(m.sim_energy_pj),
-                m.energy_uj_per_inference(),
-                sc.organization.label()
-            );
-        }
-        Format::Json => {
-            let mut fields = vec![
-                ("served", Json::Num(served as f64)),
-                ("wall_seconds", Json::Num(m.wall_seconds)),
-                ("throughput", Json::Num(m.throughput())),
-                ("mean_occupancy", Json::Num(m.mean_occupancy())),
-                ("sim_energy_pj", Json::Num(m.sim_energy_pj)),
-                (
-                    "energy_uj_per_inference",
-                    Json::Num(m.energy_uj_per_inference()),
-                ),
-                (
-                    "organization",
-                    Json::Str(sc.organization.label().to_string()),
-                ),
-            ];
-            if let Some(s) = m.latency.summary() {
-                fields.push((
-                    "latency_ms",
-                    Json::obj(vec![
-                        ("median", Json::Num(s.median)),
-                        ("p95", Json::Num(s.p95)),
-                        ("p99", Json::Num(s.p99)),
-                        ("max", Json::Num(s.max)),
-                    ]),
-                ));
-            }
-            println!("{}", Json::obj(fields).render());
-        }
-    }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------
-// info
-// ---------------------------------------------------------------------
-fn cmd_info(flags: &Flags) -> Result<()> {
-    let rc = run_config(flags)?;
-    let fmt = out_format(flags)?;
-    let dir = PathBuf::from(&rc.artifact_dir);
-    let m = ArtifactManifest::load(&dir)?;
-
-    let mut networks: Vec<Json> = Vec::new();
-    if fmt == Format::Table {
-        println!("artifact dir: {}", dir.display());
-        println!("networks:     {}", CapsNetConfig::names().join(", "));
-        println!("tech nodes:   {}", TechNode::names().join(", "));
-        println!("param order:  {:?}", m.param_order);
-    }
-    for (name, entry) in &m.configs {
-        let validated = if let Some(cfg) = CapsNetConfig::by_name(name) {
-            m.validate_against(name, &cfg)?;
-            true
-        } else {
-            false
-        };
-        match fmt {
-            Format::Table => {
-                println!(
-                    "config {name}: batches {:?}, {} ops, weights {} ({} params)",
-                    entry.model.keys().collect::<Vec<_>>(),
-                    entry.ops.len(),
-                    entry.weights,
-                    entry.num_params
-                );
-                if validated {
-                    println!("  geometry cross-check vs rust model: OK");
-                }
-            }
-            Format::Json => networks.push(Json::obj(vec![
-                ("name", Json::Str(name.clone())),
-                ("ops", Json::Num(entry.ops.len() as f64)),
-                ("num_params", Json::Num(entry.num_params as f64)),
-                ("validated", Json::Bool(validated)),
-            ])),
-        }
-    }
-    if fmt == Format::Json {
-        let j = Json::obj(vec![
-            (
-                "artifact_dir",
-                Json::Str(dir.display().to_string()),
-            ),
-            (
-                "networks",
-                Json::Arr(
-                    CapsNetConfig::names()
-                        .iter()
-                        .map(|n| Json::Str(n.to_string()))
-                        .collect(),
-                ),
-            ),
-            ("configs", Json::Arr(networks)),
-        ]);
-        println!("{}", j.render());
-    }
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn argv(s: &[&str]) -> Vec<String> {
-        s.iter().map(|x| x.to_string()).collect()
-    }
-
-    #[test]
-    fn parse_args_supports_both_flag_forms() {
-        let (cmd, pos, flags) =
-            parse_args(&argv(&["evaluate", "--banks=8", "--org", "SMP"]))
-                .unwrap();
-        assert_eq!(cmd, "evaluate");
-        assert!(pos.is_empty());
-        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
-        assert_eq!(flags.get("org").map(String::as_str), Some("SMP"));
-    }
-
-    #[test]
-    fn equals_form_does_not_swallow_next_token() {
-        // the pre-redesign bug: `--banks=8 --sectors 32` stored the key
-        // "banks=8" and swallowed "--sectors" as its value
-        let (_, _, flags) =
-            parse_args(&argv(&["evaluate", "--banks=8", "--sectors", "32"]))
-                .unwrap();
-        assert_eq!(flags.get("banks").map(String::as_str), Some("8"));
-        assert_eq!(flags.get("sectors").map(String::as_str), Some("32"));
-        assert!(!flags.contains_key("banks=8"));
-    }
-
-    #[test]
-    fn timeline_accepts_positionals_others_reject_them() {
-        let (cmd, pos, flags) = parse_args(&argv(&[
-            "timeline", "mnist", "PG-SEP", "--format", "json",
-        ]))
-        .unwrap();
-        assert_eq!(cmd, "timeline");
-        assert_eq!(pos, vec!["mnist".to_string(), "PG-SEP".to_string()]);
-        assert_eq!(flags.get("format").map(String::as_str), Some("json"));
-        // a third positional is one too many
-        assert!(parse_args(&argv(&["timeline", "a", "b", "c"])).is_err());
-        // other subcommands keep rejecting bare tokens
-        assert!(parse_args(&argv(&["evaluate", "mnist"])).is_err());
-    }
-
-    #[test]
-    fn timeline_positionals_conflict_with_flags() {
-        let mut flags = Flags::new();
-        flags.insert("model".into(), "mnist".into());
-        assert!(cmd_timeline(&["small".into()], &flags).is_err());
-        let mut flags = Flags::new();
-        flags.insert("org".into(), "SMP".into());
-        assert!(cmd_timeline(
-            &["mnist".into(), "PG-SEP".into()],
-            &flags
-        )
-        .is_err());
-    }
-
-    #[test]
-    fn time_policy_flags_reach_the_scenario() {
-        let rc = RunConfig::default();
-        let mut flags = Flags::new();
-        flags.insert("lookahead".into(), "0".into());
-        flags.insert("dma".into(), "serial".into());
-        flags.insert("dma-bw".into(), "32".into());
-        flags.insert("batch".into(), "4".into());
-        let sc = scenario_with_doc(&flags, &rc, None).unwrap();
-        assert_eq!(sc.gating.lookahead_cycles, 0);
-        assert_eq!(sc.dma.model.label(), "serial");
-        assert_eq!(sc.dma.bandwidth_bytes_per_cycle, 32);
-        assert_eq!(sc.batch, 4);
-        // and a bad dma model is a build-time error
-        flags.insert("dma".into(), "warp".into());
-        assert!(scenario_with_doc(&flags, &rc, None).is_err());
-    }
-
-    #[test]
-    fn unknown_flags_are_rejected_per_subcommand() {
-        // flags a subcommand does not consume are errors, not ignored
-        assert!(parse_args(&argv(&["analyze", "--banks", "8"])).is_err());
-        assert!(parse_args(&argv(&["info", "--model", "small"])).is_err());
-        assert!(parse_args(&argv(&["evaluate", "--bogus", "1"])).is_err());
-        assert!(parse_args(&argv(&["help", "--format", "json"])).is_err());
-        // the dse explores the dma axis itself — no --dma flag there
-        assert!(parse_args(&argv(&["dse", "--dma", "serial"])).is_err());
-        // ...while consumed flags pass
-        assert!(parse_args(&argv(&["dse", "--threads", "2"])).is_ok());
-        assert!(parse_args(&argv(&["evaluate", "--tech=22nm"])).is_ok());
-        assert!(parse_args(&argv(&["evaluate", "--dma=serial"])).is_ok());
-        assert!(parse_args(&argv(&["timeline", "--batch", "8"])).is_ok());
-        // unknown subcommands defer to the dispatcher's error
-        assert!(parse_args(&argv(&["frobnicate", "--x", "1"])).is_ok());
-    }
-
-    #[test]
-    fn traffic_flags_parse_and_conflict() {
-        // positional shorthand + traffic knobs parse
-        let (cmd, pos, flags) = parse_args(&argv(&[
-            "traffic", "mnist", "PG-SEP", "--rate", "500", "--seed=7",
-        ]))
-        .unwrap();
-        assert_eq!(cmd, "traffic");
-        assert_eq!(pos.len(), 2);
-        assert_eq!(flags.get("rate").map(String::as_str), Some("500"));
-        assert!(parse_args(&argv(&["traffic", "--rates", "50,5000"])).is_ok());
-        // traffic knobs stay off the other subcommands
-        assert!(parse_args(&argv(&["evaluate", "--rate", "5"])).is_err());
-        assert!(parse_args(&argv(&["dse", "--rates", "5"])).is_err());
-        // --batch would be silently ignored by the simulator's own
-        // batcher, so traffic rejects it (use --max-batch)
-        assert!(parse_args(&argv(&["traffic", "--batch", "4"])).is_err());
-        assert!(parse_args(&argv(&["traffic", "--max-batch", "4"])).is_ok());
-        // --rate and --rates are mutually exclusive (checked in the
-        // command, after parsing)
-        let mut flags = Flags::new();
-        flags.insert("rate".into(), "100".into());
-        flags.insert("rates".into(), "100,200".into());
-        assert!(cmd_traffic(&[], &flags).is_err());
-        // bad pattern is rejected
-        let mut flags = Flags::new();
-        flags.insert("pattern".into(), "fractal".into());
-        assert!(cmd_traffic(&[], &flags).is_err());
-        // --rates explores the design-point axes itself: a pinned
-        // organization/geometry/dma (flag or positional) is rejected,
-        // never silently overridden by the sweep
-        for (key, value) in [
-            ("org", "SMP"),
-            ("banks", "4"),
-            ("sectors", "8"),
-            ("dma", "serial"),
-            ("dma-bw", "32"),
-        ] {
-            let mut flags = Flags::new();
-            flags.insert("rates".into(), "100,200".into());
-            flags.insert(key.into(), value.into());
-            assert!(
-                cmd_traffic(&[], &flags).is_err(),
-                "--rates accepted pinned --{key}"
-            );
-        }
-        let mut flags = Flags::new();
-        flags.insert("rates".into(), "100,200".into());
-        assert!(cmd_traffic(
-            &["mnist".into(), "PG-SEP".into()],
-            &flags
-        )
-        .is_err());
-    }
-
-    #[test]
-    fn flags_require_values_and_dashes() {
-        assert!(parse_args(&argv(&["evaluate", "--banks"])).is_err());
-        assert!(parse_args(&argv(&["evaluate", "banks", "8"])).is_err());
-    }
-
-    #[test]
-    fn scenario_resolution_stacks_all_four_layers() {
-        // defaults -> run config -> scenario doc -> flags
-        let rc = RunConfig {
-            model: "small".into(),
-            banks: 8,
-            ..RunConfig::default()
-        };
-        let doc = TomlDoc::parse("[memory]\nbanks = 4\n").unwrap();
-        let mut flags = Flags::new();
-        flags.insert("sectors".into(), "32".into());
-        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
-        assert_eq!(sc.network.name, "small"); // run config
-        assert_eq!(sc.geometry.banks, 4); // doc overrides run config
-        assert_eq!(sc.geometry.sectors, 32); // flag overrides default
-        flags.insert("banks".into(), "2".into());
-        let sc = scenario_with_doc(&flags, &rc, Some(&doc)).unwrap();
-        assert_eq!(sc.geometry.banks, 2); // flag overrides doc
-    }
-
-    #[test]
-    fn out_format_parses_and_rejects() {
-        let mut flags = Flags::new();
-        assert_eq!(out_format(&flags).unwrap(), Format::Table);
-        flags.insert("format".into(), "json".into());
-        assert_eq!(out_format(&flags).unwrap(), Format::Json);
-        flags.insert("format".into(), "xml".into());
-        assert!(out_format(&flags).is_err());
-    }
+    capstore::cli::run(&args)
 }

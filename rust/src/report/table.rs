@@ -97,9 +97,53 @@ impl Table {
     }
 }
 
+/// Two-column layout used by the CLI help: left cells padded to the
+/// widest, each line indented, no header/separator (labels, not data —
+/// for data use [`Table`]).  A row with an empty right cell renders
+/// the left cell alone, unpadded.
+pub fn two_col(
+    rows: &[(String, String)],
+    indent: usize,
+    gap: usize,
+) -> String {
+    let width = rows
+        .iter()
+        .filter(|(_, r)| !r.is_empty())
+        .map(|(l, _)| l.len())
+        .max()
+        .unwrap_or(0);
+    let pad = " ".repeat(indent);
+    let mut out = String::new();
+    for (l, r) in rows {
+        if r.is_empty() {
+            out.push_str(&format!("{pad}{l}\n"));
+        } else {
+            out.push_str(&format!(
+                "{pad}{l:<width$}{}{r}\n",
+                " ".repeat(gap)
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn two_col_aligns_and_indents() {
+        let rows = vec![
+            ("--banks N".to_string(), "SRAM banks".to_string()),
+            ("--x".to_string(), "short".to_string()),
+            ("lone".to_string(), String::new()),
+        ];
+        let out = two_col(&rows, 2, 2);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "  --banks N  SRAM banks");
+        assert_eq!(lines[1], "  --x        short");
+        assert_eq!(lines[2], "  lone");
+    }
 
     #[test]
     fn renders_aligned_columns() {

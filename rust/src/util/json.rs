@@ -91,6 +91,18 @@ impl Json {
         )
     }
 
+    /// String-array builder (`["a","b"]`) — the common registry-list
+    /// shape the CLI emits (network names, tech nodes, ...).
+    pub fn str_arr<I, S>(items: I) -> Json
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Json::Arr(
+            items.into_iter().map(|s| Json::Str(s.into())).collect(),
+        )
+    }
+
     /// Serialize to compact JSON text.  Non-finite numbers render as
     /// `null` (JSON has no NaN/inf); everything else round-trips through
     /// [`Json::parse`].
@@ -421,6 +433,12 @@ mod tests {
             ("y", Json::Str("z".into())),
         ]);
         assert_eq!(v.render(), r#"{"x":1,"y":"z"}"#);
+    }
+
+    #[test]
+    fn str_arr_builder() {
+        assert_eq!(Json::str_arr(["a", "b"]).render(), r#"["a","b"]"#);
+        assert_eq!(Json::str_arr(Vec::<String>::new()).render(), "[]");
     }
 
     #[test]

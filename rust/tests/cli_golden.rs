@@ -1,0 +1,222 @@
+//! Golden-file CLI tests + registry invariants.
+//!
+//! The golden tests pin the `--format json` output of `evaluate`,
+//! `timeline`, and `traffic` for one fixed scenario, byte for byte.
+//! Each case is run twice (determinism) and compared against
+//! `tests/golden/<name>.json`; a missing golden file is written on
+//! first run (and `CAPSTORE_BLESS=1 cargo test` re-blesses after an
+//! intentional output change — the diff then shows up in review).
+//!
+//! The registry invariants assert the self-describing property the CLI
+//! redesign is built on: every flag of every command carries a doc
+//! string and appears in `capstore help <cmd>`, and the generated
+//! usage/completions cover the whole registry.
+
+use std::path::{Path, PathBuf};
+use std::process::Command as Proc;
+
+use capstore::cli::{completions, help, registry};
+use capstore::util::json::Json;
+
+/// Run the release/test binary, asserting success and non-empty stdout.
+fn run_capstore(args: &[&str]) -> String {
+    let out = Proc::new(env!("CARGO_BIN_EXE_capstore"))
+        .args(args)
+        .output()
+        .expect("spawn capstore");
+    assert!(
+        out.status.success(),
+        "capstore {:?} failed: {}",
+        args,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    assert!(!stdout.is_empty(), "capstore {args:?}: empty stdout");
+    stdout
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("{name}.json"))
+}
+
+/// Determinism + golden comparison for one `--format json` invocation.
+fn golden_check(name: &str, args: &[&str], required_keys: &[&str]) {
+    let out1 = run_capstore(args);
+    let out2 = run_capstore(args);
+    assert_eq!(out1, out2, "non-deterministic output for {args:?}");
+
+    // structural sanity independent of the golden file: parses as a
+    // JSON object and carries the expected top-level keys
+    let doc = Json::parse(&out1).expect("stdout is one JSON document");
+    for key in required_keys {
+        assert!(
+            doc.get(key).is_some(),
+            "{name}: missing top-level key {key:?}"
+        );
+    }
+
+    let path = golden_path(name);
+    let bless = std::env::var_os("CAPSTORE_BLESS").is_some();
+    if bless || !path.exists() {
+        // Bootstrap: the authoring container has no Rust toolchain, so
+        // golden files materialize on the first toolchain-ed run and
+        // must then be committed (see tests/golden/README.md).  Until
+        // they are, only the determinism + key checks above bite; set
+        // CAPSTORE_REQUIRE_GOLDEN=1 to turn a missing golden into a
+        // hard failure instead of a re-bless.
+        assert!(
+            bless || std::env::var_os("CAPSTORE_REQUIRE_GOLDEN").is_none(),
+            "{name}: golden file {} is missing and \
+             CAPSTORE_REQUIRE_GOLDEN is set — generate it with \
+             CAPSTORE_BLESS=1 cargo test and commit it",
+            path.display()
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &out1).unwrap();
+        eprintln!(
+            "{name}: blessed {} — commit it to pin this output",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        out1, want,
+        "{name}: output drifted from {}; if intentional, re-bless with \
+         CAPSTORE_BLESS=1 cargo test",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_evaluate_json() {
+    golden_check(
+        "evaluate",
+        &["evaluate", "--model", "mnist", "--tech", "32nm", "--format",
+          "json"],
+        &["table1", "table2", "systems", "selected"],
+    );
+}
+
+#[test]
+fn golden_timeline_json() {
+    golden_check(
+        "timeline",
+        &["timeline", "mnist", "PG-SEP", "--format", "json"],
+        &["scenario", "ops", "gating_segments", "total_cycles"],
+    );
+}
+
+#[test]
+fn golden_traffic_json() {
+    golden_check(
+        "traffic",
+        &["traffic", "mnist", "PG-SEP", "--rate", "500", "--seed", "7",
+          "--format", "json"],
+        &["scenario", "profile", "arrivals", "served"],
+    );
+}
+
+#[test]
+fn unknown_subcommand_fails_with_suggestion() {
+    // the satellite bugfix: `capstore frobnicate --x 1` used to parse
+    // fine and only die in the dispatcher; a near-miss now gets a
+    // registry-derived suggestion on stderr
+    let out = Proc::new(env!("CARGO_BIN_EXE_capstore"))
+        .args(["trafic", "--rate", "5"])
+        .output()
+        .expect("spawn capstore");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand"), "{stderr}");
+    assert!(stderr.contains("did you mean `traffic`"), "{stderr}");
+
+    let out = Proc::new(env!("CARGO_BIN_EXE_capstore"))
+        .args(["frobnicate", "--x", "1"])
+        .output()
+        .expect("spawn capstore");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn help_and_completions_run() {
+    let usage = run_capstore(&["help"]);
+    for cmd in registry::commands() {
+        assert!(usage.contains(cmd.name()), "usage misses {}", cmd.name());
+    }
+    let all = run_capstore(&["help", "--all"]);
+    assert_eq!(all.trim_end(), help::reference());
+    let bash = run_capstore(&["completions", "bash"]);
+    assert_eq!(bash.trim_end(), completions::bash());
+    let zsh = run_capstore(&["completions", "zsh"]);
+    assert_eq!(zsh.trim_end(), completions::zsh());
+}
+
+#[test]
+fn registry_invariants_every_flag_documented_and_in_help() {
+    for cmd in registry::commands() {
+        let h = help::command_help(*cmd);
+        let flags = cmd.flags();
+        // names unique within the command
+        let mut names: Vec<&str> = flags.iter().map(|f| f.name).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(
+            names.len(),
+            before,
+            "`{}` lists a flag twice",
+            cmd.name()
+        );
+        for f in flags {
+            assert!(
+                !f.doc.trim().is_empty(),
+                "--{} of `{}` has no doc string",
+                f.name,
+                cmd.name()
+            );
+            assert!(
+                h.contains(&format!("--{}", f.name)),
+                "`capstore help {}` does not mention --{}",
+                cmd.name(),
+                f.name
+            );
+            assert!(
+                f.hint.is_empty() == !f.kind.takes_value(),
+                "--{} of `{}`: value-taking flags need a hint, \
+                 switches must not have one",
+                f.name,
+                cmd.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_invariants_generated_surfaces_cover_everything() {
+    let usage = help::usage();
+    let reference = help::reference();
+    let bash = completions::bash();
+    let zsh = completions::zsh();
+    for cmd in registry::commands() {
+        for surface in [&usage, &reference, &bash, &zsh] {
+            assert!(
+                surface.contains(cmd.name()),
+                "a generated surface misses command {}",
+                cmd.name()
+            );
+        }
+        for f in cmd.flags() {
+            for surface in [&reference, &bash, &zsh] {
+                assert!(
+                    surface.contains(&format!("--{}", f.name)),
+                    "a generated surface misses --{} of {}",
+                    f.name,
+                    cmd.name()
+                );
+            }
+        }
+    }
+}
