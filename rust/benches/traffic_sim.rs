@@ -19,10 +19,11 @@ use std::time::Duration;
 
 use capstore::bench;
 use capstore::coordinator::BatchPolicy;
+use capstore::faults::{FaultPlan, ResiliencePolicy};
 use capstore::scenario::{Evaluator, Scenario};
 use capstore::timeline::Timeline;
 use capstore::traffic::{
-    simulate, ArrivalPattern, ServiceModel, TrafficProfile,
+    simulate, simulate_with, ArrivalPattern, ServiceModel, TrafficProfile,
 };
 
 fn main() {
@@ -55,16 +56,27 @@ fn main() {
 
     // ---- contracts ---------------------------------------------------
     let before = Timeline::build_count();
-    let r1 = simulate(&svc, &profile, &policy);
+    let r1 = simulate(&svc, &profile, &policy).unwrap();
     let hot_builds = Timeline::build_count() - before;
-    let r2 = simulate(&svc, &profile, &policy);
+    let r2 = simulate(&svc, &profile, &policy).unwrap();
     let j1 = r1.to_json(svc.clock_hz).render();
     let j2 = r2.to_json(svc.clock_hz).render();
+    // identity fault injection must be bit-transparent: the same run
+    // through simulate_with(identity, none) renders the same bytes
+    let r0 = simulate_with(
+        &svc,
+        &profile,
+        &policy,
+        &FaultPlan::none(),
+        &ResiliencePolicy::none(),
+    )
+    .unwrap();
+    let identity_transparent = j1 == r0.to_json(svc.clock_hz).render();
     let deterministic = j1 == j2;
 
     // ---- event-loop throughput --------------------------------------
     let t_sim = bench::bench("traffic: simulate (poisson 2000/s x 0.25s)", 2, 9, || {
-        std::hint::black_box(simulate(&svc, &profile, &policy));
+        std::hint::black_box(simulate(&svc, &profile, &policy).unwrap());
     });
 
     println!(
@@ -99,6 +111,10 @@ fn main() {
             deterministic,
             "check failed: two runs of seed {} diverged:\n{j1}\n{j2}",
             profile.seed
+        );
+        assert!(
+            identity_transparent,
+            "check failed: identity fault injection perturbed the report"
         );
         assert_eq!(r1.arrivals, r1.served + r1.queued, "conservation");
         println!(

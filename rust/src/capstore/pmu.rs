@@ -18,10 +18,12 @@
 use crate::analysis::requirements::RequirementsAnalysis;
 use crate::capsnet::{CapsNetConfig, OpKind, Operation};
 use crate::capstore::arch::{CapStoreArch, MemoryRole};
+use crate::faults::backoff_delay_cycles;
 use crate::memsim::powergate::PowerGateModel;
 
 /// Sleep FSM states for one gating domain (ON/OFF plus the handshake
-/// transitions of Fig 9).
+/// transitions of Fig 9, and the fault-injection extension: a wake
+/// whose ack never arrives).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PmuState {
     On,
@@ -30,6 +32,12 @@ pub enum PmuState {
     Off,
     /// wake_req asserted, virtual ground recharging.
     Waking { remaining: u64 },
+    /// wake_req asserted but the ack never arrives: the watchdog (plus
+    /// exponential backoff across consecutive failures) must expire
+    /// before the retry can recharge the rail.  The domain leaks at
+    /// full power throughout — the energy model charges this exactly
+    /// like an extended WAKING segment.
+    WakeFailed { remaining: u64 },
 }
 
 /// Events emitted by the FSM (for the trace/test harness).
@@ -39,6 +47,9 @@ pub enum PmuEvent {
     SleepAcked,
     WakeRequested,
     WakeAcked,
+    /// The watchdog of the last failed attempt expired; the retry that
+    /// will succeed is now in flight.
+    WakeTimedOut,
 }
 
 /// Handshake FSM for one gating domain.
@@ -49,11 +60,20 @@ pub struct Pmu {
     /// completed OFF→ON transitions (wakeup-energy accounting)
     pub wakeups: u64,
     pub sleeps: u64,
+    /// wake attempts whose ack never arrived (each re-pays the wakeup
+    /// charge energy on retry)
+    pub failed_wakes: u64,
 }
 
 impl Pmu {
     pub fn new(model: PowerGateModel) -> Self {
-        Pmu { state: PmuState::On, model, wakeups: 0, sleeps: 0 }
+        Pmu {
+            state: PmuState::On,
+            model,
+            wakeups: 0,
+            sleeps: 0,
+            failed_wakes: 0,
+        }
     }
 
     /// Request the domain to sleep.  No-op unless fully ON (the paper's
@@ -70,13 +90,31 @@ impl Pmu {
 
     /// Request wakeup.  No-op unless fully OFF.
     pub fn request_wake(&mut self) -> Option<PmuEvent> {
-        if self.state == PmuState::Off {
-            self.state =
-                PmuState::Waking { remaining: self.model.wakeup_cycles };
-            Some(PmuEvent::WakeRequested)
-        } else {
-            None
+        self.request_wake_faulty(0, 0)
+    }
+
+    /// Request wakeup through a faulty rail: the first `failures`
+    /// attempts never ack, each waiting out `timeout_cycles` of
+    /// watchdog (doubled per attempt, the `faults` module's backoff
+    /// rule) before retrying.  With `failures == 0` this is exactly
+    /// [`request_wake`](Self::request_wake).  No-op unless fully OFF.
+    pub fn request_wake_faulty(
+        &mut self,
+        failures: u32,
+        timeout_cycles: u64,
+    ) -> Option<PmuEvent> {
+        if self.state != PmuState::Off {
+            return None;
         }
+        self.state = if failures > 0 {
+            PmuState::WakeFailed {
+                remaining: backoff_delay_cycles(timeout_cycles, failures),
+            }
+        } else {
+            PmuState::Waking { remaining: self.model.wakeup_cycles }
+        };
+        self.failed_wakes += u64::from(failures);
+        Some(PmuEvent::WakeRequested)
     }
 
     /// Advance `cycles`; returns the ack event if a transition completed.
@@ -101,6 +139,22 @@ impl Pmu {
                 } else {
                     self.state =
                         PmuState::Waking { remaining: remaining - cycles };
+                    None
+                }
+            }
+            PmuState::WakeFailed { remaining } => {
+                if cycles >= remaining {
+                    // the surviving retry starts recharging now; any
+                    // cycles beyond the watchdog do NOT count against
+                    // the recharge (the retry is a fresh handshake)
+                    self.state = PmuState::Waking {
+                        remaining: self.model.wakeup_cycles,
+                    };
+                    Some(PmuEvent::WakeTimedOut)
+                } else {
+                    self.state = PmuState::WakeFailed {
+                        remaining: remaining - cycles,
+                    };
                     None
                 }
             }
@@ -317,6 +371,55 @@ mod tests {
         pmu.request_sleep().unwrap();
         assert_eq!(pmu.request_sleep(), None);
         assert_eq!(pmu.request_wake(), None); // can't wake mid-sleep
+    }
+
+    #[test]
+    fn fsm_prices_a_failed_wake_as_an_extended_waking_window() {
+        let model = PowerGateModel::default();
+        let mut pmu = Pmu::new(model.clone());
+        pmu.request_sleep().unwrap();
+        pmu.step(model.sleep_cycles);
+        assert_eq!(pmu.state, PmuState::Off);
+
+        // two consecutive failures at a 100-cycle watchdog: backoff
+        // waits 100 + 200 cycles before the surviving retry recharges
+        assert_eq!(
+            pmu.request_wake_faulty(2, 100),
+            Some(PmuEvent::WakeRequested)
+        );
+        assert_eq!(pmu.state, PmuState::WakeFailed { remaining: 300 });
+        assert!(!pmu.usable());
+        assert_eq!(pmu.step(299), None);
+        // the watchdog expiry starts a fresh recharge — overshoot does
+        // not eat into the wakeup latency
+        assert_eq!(pmu.step(50), Some(PmuEvent::WakeTimedOut));
+        assert_eq!(
+            pmu.state,
+            PmuState::Waking { remaining: model.wakeup_cycles }
+        );
+        assert_eq!(
+            pmu.step(model.wakeup_cycles),
+            Some(PmuEvent::WakeAcked)
+        );
+        assert!(pmu.usable());
+        assert_eq!(pmu.failed_wakes, 2);
+        assert_eq!(pmu.wakeups, 1);
+
+        // zero failures degenerate to the plain handshake
+        let mut clean = Pmu::new(model.clone());
+        clean.request_sleep().unwrap();
+        clean.step(model.sleep_cycles);
+        assert_eq!(
+            clean.request_wake_faulty(0, 100),
+            Some(PmuEvent::WakeRequested)
+        );
+        assert_eq!(
+            clean.state,
+            PmuState::Waking { remaining: model.wakeup_cycles }
+        );
+        assert_eq!(clean.failed_wakes, 0);
+        // a faulty wake is still a transition: no overlapping requests
+        assert_eq!(clean.request_wake_faulty(1, 100), None);
     }
 
     #[test]

@@ -5,10 +5,11 @@
 
 use crate::coordinator::BatchPolicy;
 use crate::dse::Explorer;
+use crate::faults::{FaultPlan, ResiliencePolicy};
 use crate::report::Table;
 use crate::scenario::{Evaluator, Scenario};
 use crate::traffic::{
-    rank_for_traffic, simulate, ArrivalPattern, ServiceModel,
+    rank_for_traffic_under, simulate_with, ArrivalPattern, ServiceModel,
     TrafficProfile,
 };
 use crate::util::json::Json;
@@ -32,7 +33,13 @@ impl Command for TrafficCmd {
     }
 
     fn groups(&self) -> &'static [&'static [FlagSpec]] {
-        &[spec::SCENARIO, spec::MEMORY, spec::TIME_UNBATCHED, spec::TRAFFIC]
+        &[
+            spec::SCENARIO,
+            spec::MEMORY,
+            spec::TIME_UNBATCHED,
+            spec::TRAFFIC,
+            spec::FAULT_KNOBS,
+        ]
     }
 
     fn max_positionals(&self) -> usize {
@@ -50,7 +57,14 @@ impl Command for TrafficCmd {
          serving-aware DSE: it sweeps the scenario's (network, tech)\n\
          pair, takes the Pareto front, and re-ranks it per traffic\n\
          profile, so it rejects any pinned design-point axis the\n\
-         ranking would override."
+         ranking would override.\n\
+         \n\
+         Faults and resilience: a seeded fault plan (scenario [faults]\n\
+         section, --faults file, or --wake-fail-rate) injects wake\n\
+         failures, DMA degradation, thermal throttle, and queue-boundary\n\
+         drops/duplicates; --queue-cap/--timeout-ms/--retry-budget/\n\
+         --wake-fallback select the resilience policy.  Identity plans\n\
+         reproduce the fault-free report byte for byte."
     }
 
     fn run(&self, ctx: &CommandContext) -> Result<Output> {
@@ -155,6 +169,47 @@ impl Command for TrafficCmd {
             policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
         }
 
+        // fault plan: scenario [faults] section, replaced by a --faults
+        // file, overridden field-wise by the dedicated flags
+        let mut faults =
+            sc.faults.clone().unwrap_or_else(FaultPlan::none);
+        if let Some(path) = ctx.flag("faults") {
+            faults = FaultPlan::load(path)?;
+        }
+        if let Some(v) = ctx.parsed::<f64>("wake-fail-rate")? {
+            faults.wake_fail_rate = v;
+        }
+        faults.validate()?;
+
+        // resilience policy: flags only (the policy is an operator
+        // choice, not a property of the design under test)
+        let mut resilience = ResiliencePolicy::none();
+        if let Some(v) = ctx.parsed::<u64>("queue-cap")? {
+            if v == 0 {
+                return Err(Error::Config(
+                    "--queue-cap must be > 0 (0 would shed everything)"
+                        .into(),
+                ));
+            }
+            resilience.queue_cap = Some(v);
+        }
+        if let Some(v) = ctx.parsed::<f64>("timeout-ms")? {
+            resilience.timeout_ms = Some(v);
+        }
+        if let Some(v) = ctx.parsed::<u32>("retry-budget")? {
+            resilience.retry_budget = v;
+            // a retry budget needs a timeout to act on; default to the
+            // SLO — a request that has already missed its deadline is
+            // the one worth re-queueing fresh
+            if v > 0 && resilience.timeout_ms.is_none() {
+                resilience.timeout_ms = Some(profile.slo_ms);
+            }
+        }
+        if let Some(v) = ctx.parsed::<f64>("wake-fallback")? {
+            resilience.wake_fail_fallback = Some(v);
+        }
+        resilience.validate()?;
+
         let ev = Evaluator::new();
         if let Some(list) = ctx.flag("rates") {
             if ctx.flags.contains_key("rate") {
@@ -164,11 +219,19 @@ impl Command for TrafficCmd {
                         .into(),
                 ));
             }
-            return run_rank(&ev, &sc, &profile, &policy, list);
+            return run_rank(
+                &ev, &sc, &profile, &policy, list, &faults, &resilience,
+            );
         }
 
-        let svc = ServiceModel::new(&ev, &sc, policy.max_batch)?;
-        let report = simulate(&svc, &profile, &policy);
+        let svc = ServiceModel::with_faults(
+            &ev,
+            &sc,
+            policy.max_batch,
+            Some(&faults),
+        )?;
+        let report = simulate_with(&svc, &profile, &policy, &faults,
+                                   &resilience)?;
 
         let mut out = Output::new();
         out.json = report.to_json(svc.clock_hz);
@@ -225,6 +288,39 @@ impl Command for TrafficCmd {
             fmt_energy_uj(report.total_pj()),
             report.energy_uj_per_inference(),
         ));
+        out.text(format!(
+            "backlog: peak {} requests ({} staged bytes)",
+            report.peak_queue_depth, report.peak_queue_bytes,
+        ));
+        if report.resilience_active {
+            let s = &report.resilience;
+            out.text(format!(
+                "\nfaults:   {}",
+                report.faults_label.as_deref().unwrap_or("no faults"),
+            ));
+            out.text(format!(
+                "queue boundary: {} dropped  {} duplicated  {} shed  \
+                 {} timed out  {} retried",
+                s.dropped, s.duplicated, s.shed, s.timed_out, s.retried,
+            ));
+            out.text(format!(
+                "wakes: {} attempts, {} failed ({} extra); \
+                 dma-degraded {} batches, throttled {} ({} extra)",
+                s.wake_attempts,
+                s.wake_failures,
+                fmt_energy_uj(s.wake_retry_pj),
+                s.dma_degraded_batches,
+                s.throttled_batches,
+                fmt_energy_uj(s.throttle_extra_pj),
+            ));
+            match s.fallback_at_cycle {
+                Some(c) => out.text(format!(
+                    "all-on fallback engaged at cycle {c} — gating \
+                     disabled for the rest of the run"
+                )),
+                None => out.text("all-on fallback: never engaged"),
+            };
+        }
         Ok(out)
     }
 }
@@ -232,12 +328,15 @@ impl Command for TrafficCmd {
 /// `capstore traffic --rates R1,R2,...`: the serving-aware DSE.  Sweep
 /// the scenario's (network, tech) pair, take the Pareto front, and
 /// re-rank it per traffic profile — the winner moves with the load.
+#[allow(clippy::too_many_arguments)]
 fn run_rank(
     ev: &Evaluator,
     sc: &Scenario,
     profile: &TrafficProfile,
     policy: &BatchPolicy,
     rates: &str,
+    faults: &FaultPlan,
+    resilience: &ResiliencePolicy,
 ) -> Result<Output> {
     let rates: Vec<f64> = rates
         .split(',')
@@ -268,7 +367,9 @@ fn run_rank(
         .iter()
         .map(|&r| TrafficProfile { rate_per_sec: r, ..profile.clone() })
         .collect();
-    let winners = rank_for_traffic(ev, sc, &front, &profiles, policy)?;
+    let winners = rank_for_traffic_under(
+        ev, sc, &front, &profiles, policy, faults, resilience,
+    )?;
 
     let mut t = Table::new(
         "serving-aware DSE — best front point per traffic profile",
@@ -313,6 +414,9 @@ fn run_rank(
         profile.duration_secs,
         profile.slo_ms,
     ));
+    if !faults.is_identity() || resilience.is_active() {
+        out.text(format!("faults:   {}", faults.label()));
+    }
     out.text(format!(
         "front: {} Pareto points of a {}-point sweep\n",
         front.len(),
@@ -380,5 +484,71 @@ mod tests {
             flags
         )
         .is_err());
+    }
+
+    #[test]
+    fn fault_flags_are_validated() {
+        // a wake-fail probability outside [0, 1) is a config error
+        for bad in ["1.5", "-0.1", "nan"] {
+            let mut flags = Flags::new();
+            flags.insert("rate".into(), "100".into());
+            flags.insert("wake-fail-rate".into(), bad.into());
+            assert!(
+                run_traffic(Vec::new(), flags).is_err(),
+                "accepted wake-fail-rate {bad}"
+            );
+        }
+        // a zero queue cap would shed everything
+        let mut flags = Flags::new();
+        flags.insert("queue-cap".into(), "0".into());
+        assert!(run_traffic(Vec::new(), flags).is_err());
+        // a fallback threshold must be in (0, 1]
+        let mut flags = Flags::new();
+        flags.insert("wake-fallback".into(), "0".into());
+        assert!(run_traffic(Vec::new(), flags).is_err());
+        // a missing fault-plan file is an error, not a silent identity
+        let mut flags = Flags::new();
+        flags.insert("faults".into(), "/nonexistent/plan.toml".into());
+        assert!(run_traffic(Vec::new(), flags).is_err());
+    }
+
+    #[test]
+    fn retry_budget_defaults_its_timeout_to_the_slo() {
+        // --retry-budget alone must not be silently inert: the command
+        // pairs it with a timeout at the SLO, so the run reports an
+        // active resilience section
+        let mut flags = Flags::new();
+        flags.insert("rate".into(), "2000".into());
+        flags.insert("duration".into(), "0.02".into());
+        flags.insert("retry-budget".into(), "1".into());
+        flags.insert("format".into(), "json".into());
+        let out = run_traffic(Vec::new(), flags).unwrap();
+        assert!(
+            out.json.render().contains("\"resilience\""),
+            "retry-budget alone produced no resilience section"
+        );
+    }
+
+    #[test]
+    fn wake_fail_rate_flag_changes_the_report() {
+        let base = |wake: Option<&str>| {
+            let mut flags = Flags::new();
+            flags.insert("rate".into(), "200".into());
+            flags.insert("duration".into(), "0.05".into());
+            flags.insert("max-batch".into(), "1".into());
+            flags.insert("format".into(), "json".into());
+            if let Some(w) = wake {
+                flags.insert("wake-fail-rate".into(), w.into());
+            }
+            run_traffic(Vec::new(), flags).unwrap().json.render()
+        };
+        let clean = base(None);
+        let faulty = base(Some("0.9"));
+        assert!(!clean.contains("\"resilience\""));
+        assert!(faulty.contains("\"resilience\""));
+        assert!(faulty.contains("wake_failures"));
+        assert_ne!(clean, faulty);
+        // determinism: the same faulty invocation is byte-identical
+        assert_eq!(faulty, base(Some("0.9")));
     }
 }

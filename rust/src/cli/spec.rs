@@ -64,6 +64,8 @@ pub enum FlagGroup {
     Time,
     /// The serving-simulation workload knobs.
     Traffic,
+    /// Fault injection and resilience policy knobs.
+    Faults,
     /// Design-space exploration controls.
     Dse,
     /// PJRT serving / artifact knobs.
@@ -80,6 +82,7 @@ impl FlagGroup {
             FlagGroup::Memory => "memory axes",
             FlagGroup::Time => "time-policy axes",
             FlagGroup::Traffic => "serving workload",
+            FlagGroup::Faults => "faults & resilience",
             FlagGroup::Dse => "exploration",
             FlagGroup::Serve => "serving / artifacts",
             FlagGroup::Help => "help",
@@ -133,7 +136,7 @@ pub const SCENARIO_FILE: FlagSpec = FlagSpec {
     kind: ValueKind::Path,
     hint: "<path.toml>",
     doc: "typed scenario file (network/tech/org/geometry/batch/gating/\
-          dma/traffic); individual flags override its fields",
+          dma/traffic/faults); individual flags override its fields",
     default: "",
     group: FlagGroup::Scenario,
 };
@@ -339,6 +342,65 @@ pub const MAX_WAIT_MS: FlagSpec = FlagSpec {
     group: FlagGroup::Traffic,
 };
 
+pub const FAULTS: FlagSpec = FlagSpec {
+    name: "faults",
+    kind: ValueKind::Path,
+    hint: "<path.toml>",
+    doc: "fault plan file (a bare `[faults]` TOML section); overrides \
+          the scenario's section, and the flags below override its \
+          fields",
+    default: "",
+    group: FlagGroup::Faults,
+};
+
+pub const WAKE_FAIL_RATE: FlagSpec = FlagSpec {
+    name: "wake-fail-rate",
+    kind: ValueKind::Float,
+    hint: "P",
+    doc: "probability each sector wake attempt fails (retried with \
+          exponential backoff up to the plan's retry cap)",
+    default: "0",
+    group: FlagGroup::Faults,
+};
+
+pub const QUEUE_CAP: FlagSpec = FlagSpec {
+    name: "queue-cap",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "admission control: shed arrivals beyond this backlog",
+    default: "",
+    group: FlagGroup::Faults,
+};
+
+pub const RETRY_BUDGET: FlagSpec = FlagSpec {
+    name: "retry-budget",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "re-queues granted to a timed-out request (needs a timeout; \
+          defaults the timeout to the SLO when --timeout-ms is absent)",
+    default: "0",
+    group: FlagGroup::Faults,
+};
+
+pub const TIMEOUT_MS: FlagSpec = FlagSpec {
+    name: "timeout-ms",
+    kind: ValueKind::Float,
+    hint: "MS",
+    doc: "expire requests older than this at dispatch assembly",
+    default: "",
+    group: FlagGroup::Faults,
+};
+
+pub const WAKE_FALLBACK: FlagSpec = FlagSpec {
+    name: "wake-fallback",
+    kind: ValueKind::Float,
+    hint: "P",
+    doc: "stop gating for the rest of the run once the observed \
+          wake-failure rate reaches P (all-on fallback)",
+    default: "",
+    group: FlagGroup::Faults,
+};
+
 pub const REQUESTS: FlagSpec = FlagSpec {
     name: "requests",
     kind: ValueKind::UInt,
@@ -390,6 +452,16 @@ pub const TIME_UNBATCHED: &[FlagSpec] = &[LOOKAHEAD, DMA, DMA_BW];
 /// The serving-simulation workload knobs.
 pub const TRAFFIC: &[FlagSpec] = &[
     RATE, RATES, PATTERN, SEED, DURATION, SLO_MS, MAX_BATCH, MAX_WAIT_MS,
+];
+
+/// Fault injection + resilience policy knobs (`capstore traffic`).
+pub const FAULT_KNOBS: &[FlagSpec] = &[
+    FAULTS,
+    WAKE_FAIL_RATE,
+    QUEUE_CAP,
+    RETRY_BUDGET,
+    TIMEOUT_MS,
+    WAKE_FALLBACK,
 ];
 
 /// Design-space exploration controls.

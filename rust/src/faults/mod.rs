@@ -1,0 +1,860 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The rest of the crate models a fault-free machine; this module is
+//! the single place where hardware misbehaves, on purpose and
+//! reproducibly.  A [`FaultPlan`] names the fault classes the paper's
+//! power-gating lever is exposed to:
+//!
+//! * **transient wake failures** — the PMU's wake ack never arrives;
+//!   the retry waits out a bounded timeout with exponential backoff and
+//!   every aborted attempt pays the cold wake premium again
+//!   ([`WakeFaultSampler`]);
+//! * **DMA bandwidth degradation** — exponentially-dwelling windows
+//!   ([`FaultWindows`]) during which off-chip bandwidth is divided by a
+//!   factor;
+//! * **accelerator slowdown** — thermal-throttle windows that stretch
+//!   batch service latency by a clock-scaling factor;
+//! * **queue-boundary faults** — request drops and duplicates before
+//!   admission.
+//!
+//! Determinism contract (same as `traffic::arrivals`): all entropy
+//! comes from [`SplitMix64`] streams derived from [`FaultPlan::seed`],
+//! so one `(plan, scenario, profile)` triple always produces the
+//! bit-identical report.  Each fault class draws from its **own**
+//! stream (`seed ^ class salt`); a class at rate zero therefore cannot
+//! perturb another class's draws, and a plan with every rate at zero
+//! ([`FaultPlan::is_identity`]) leaves every existing report
+//! bit-for-bit unchanged — the identity-injection invariant pinned by
+//! `tests/faults.rs`.
+//!
+//! [`ResiliencePolicy`] is the reaction side: bounded-queue admission
+//! control, per-request timeout + retry budget, and graceful
+//! degradation (batch-size cap under throttle, all-on fallback once
+//! the observed wake-failure rate crosses a threshold — the DESCNet
+//! break-even rule extended with measured reliability).  The policies
+//! run inside `traffic::sim`'s event loop; this module only carries
+//! their knobs.
+
+use crate::config::toml::TomlDoc;
+use crate::error::{Error, Result};
+use crate::testing::SplitMix64;
+
+/// Stream salts: one per fault class, xor-ed into [`FaultPlan::seed`]
+/// so the classes consume independent randomness (see module docs).
+const QUEUE_STREAM: u64 = 0x5155_4555_4642_4454; // queue drops/dups
+const WAKE_STREAM: u64 = 0x57414b_45_4641_494c; // wake failures
+const DMA_STREAM: u64 = 0x444d_4144_4547_5244; // dma degradation
+const SLOWDOWN_STREAM: u64 = 0x534c_4f57_444f_574e; // throttle windows
+
+/// Wake timeout used when [`FaultPlan::wake_timeout_cycles`] is 0
+/// (auto): this many nominal wake latencies — a conservative PMU
+/// watchdog that waits well past the expected ack before declaring the
+/// attempt dead.
+pub const DEFAULT_WAKE_TIMEOUT_WAKEUPS: u64 = 8;
+
+/// Exponential backoff doubles the wait per failed wake attempt, but
+/// never beyond `timeout << MAX_BACKOFF_DOUBLINGS` per attempt.
+pub const MAX_BACKOFF_DOUBLINGS: u32 = 6;
+
+/// A seeded, deterministic description of *what goes wrong*: per-class
+/// rates plus the class-specific shape knobs.  All rates default to
+/// zero — the identity plan injects nothing.
+///
+/// Serializes as the strict `[faults]` section of a scenario TOML file
+/// (exact round-trip, unknown keys rejected).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed; the same seed always replays the same fault sequence.
+    pub seed: u64,
+    // -- transient sector wake failures --------------------------------
+    /// Probability that one wake attempt of a cold (slept) start fails
+    /// (the PMU ack never arrives).
+    pub wake_fail_rate: f64,
+    /// Retry budget per wake: after this many consecutive failures the
+    /// next attempt is assumed to succeed (the rail eventually comes
+    /// up); bounds the worst-case wake delay.
+    pub max_wake_retries: u32,
+    /// Cycles a failed attempt waits before retrying (the watchdog
+    /// timeout; backoff doubles it per attempt).  0 = auto: a multiple
+    /// of the nominal wake latency ([`DEFAULT_WAKE_TIMEOUT_WAKEUPS`]).
+    pub wake_timeout_cycles: u64,
+    // -- DMA bandwidth degradation windows -----------------------------
+    /// Long-run fraction of time spent inside a degraded-DMA window.
+    pub dma_degrade_rate: f64,
+    /// Bandwidth divisor while degraded (>= 1).
+    pub dma_degrade_factor: u64,
+    /// Mean dwell of one degraded window, seconds.
+    pub dma_degrade_dwell_secs: f64,
+    // -- accelerator slowdown (thermal throttle) -----------------------
+    /// Long-run fraction of time spent thermally throttled.
+    pub slowdown_rate: f64,
+    /// Service-latency multiplier while throttled (>= 1; the clock
+    /// effectively runs `1/factor` as fast).
+    pub slowdown_factor: f64,
+    /// Mean dwell of one throttle window, seconds.
+    pub slowdown_dwell_secs: f64,
+    // -- queue-boundary faults -----------------------------------------
+    /// Probability an arriving request is lost before admission.
+    pub drop_rate: f64,
+    /// Probability an arriving request is delivered twice
+    /// (at-least-once client retry storms).
+    pub duplicate_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            wake_fail_rate: 0.0,
+            max_wake_retries: 3,
+            wake_timeout_cycles: 0,
+            dma_degrade_rate: 0.0,
+            dma_degrade_factor: 4,
+            dma_degrade_dwell_secs: 0.02,
+            slowdown_rate: 0.0,
+            slowdown_factor: 1.5,
+            slowdown_dwell_secs: 0.02,
+            drop_rate: 0.0,
+            duplicate_rate: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The identity plan: every rate zero, nothing injected.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no fault class can fire — the shape knobs (factors,
+    /// dwells, retry budget) are irrelevant when every rate is zero.
+    pub fn is_identity(&self) -> bool {
+        self.wake_fail_rate == 0.0
+            && self.dma_degrade_rate == 0.0
+            && self.slowdown_rate == 0.0
+            && self.drop_rate == 0.0
+            && self.duplicate_rate == 0.0
+    }
+
+    /// Validate ranges; every consumer calls this before simulating.
+    pub fn validate(&self) -> Result<()> {
+        fn rate(v: f64, what: &str) -> Result<()> {
+            if v.is_finite() && (0.0..=1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(Error::Config(format!(
+                    "faults: {what} must be in [0, 1], got {v}"
+                )))
+            }
+        }
+        fn occupancy(v: f64, what: &str) -> Result<()> {
+            if v.is_finite() && (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(Error::Config(format!(
+                    "faults: {what} must be in [0, 1) — a window \
+                     process needs fault-free time between windows, \
+                     got {v}"
+                )))
+            }
+        }
+        fn dwell(v: f64, what: &str) -> Result<()> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(Error::Config(format!(
+                    "faults: {what} must be a positive number, got {v}"
+                )))
+            }
+        }
+        rate(self.wake_fail_rate, "wake_fail_rate")?;
+        rate(self.drop_rate, "drop_rate")?;
+        rate(self.duplicate_rate, "duplicate_rate")?;
+        occupancy(self.dma_degrade_rate, "dma_degrade_rate")?;
+        occupancy(self.slowdown_rate, "slowdown_rate")?;
+        dwell(self.dma_degrade_dwell_secs, "dma_degrade_dwell_secs")?;
+        dwell(self.slowdown_dwell_secs, "slowdown_dwell_secs")?;
+        if self.max_wake_retries > 16 {
+            return Err(Error::Config(format!(
+                "faults: max_wake_retries must be <= 16, got {}",
+                self.max_wake_retries
+            )));
+        }
+        if self.dma_degrade_factor == 0 {
+            return Err(Error::Config(
+                "faults: dma_degrade_factor must be >= 1".into(),
+            ));
+        }
+        if !(self.slowdown_factor.is_finite()
+            && (1.0..=64.0).contains(&self.slowdown_factor))
+        {
+            return Err(Error::Config(format!(
+                "faults: slowdown_factor must be in [1, 64], got {}",
+                self.slowdown_factor
+            )));
+        }
+        Ok(())
+    }
+
+    /// Short human label listing only the active classes, e.g.
+    /// `wake 0.2 dma /4@0.1 drop 0.01 seed 1` — or `no faults`.
+    pub fn label(&self) -> String {
+        if self.is_identity() {
+            return "no faults".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.wake_fail_rate > 0.0 {
+            parts.push(format!("wake {}", self.wake_fail_rate));
+        }
+        if self.dma_degrade_rate > 0.0 {
+            parts.push(format!(
+                "dma /{}@{}",
+                self.dma_degrade_factor, self.dma_degrade_rate
+            ));
+        }
+        if self.slowdown_rate > 0.0 {
+            parts.push(format!(
+                "slow x{}@{}",
+                self.slowdown_factor, self.slowdown_rate
+            ));
+        }
+        if self.drop_rate > 0.0 {
+            parts.push(format!("drop {}", self.drop_rate));
+        }
+        if self.duplicate_rate > 0.0 {
+            parts.push(format!("dup {}", self.duplicate_rate));
+        }
+        parts.push(format!("seed {}", self.seed));
+        parts.join(" ")
+    }
+
+    /// The effective wake watchdog timeout given the gating model's
+    /// nominal wake latency: the plan's explicit value, or the
+    /// [`DEFAULT_WAKE_TIMEOUT_WAKEUPS`] auto-sizing when left at 0.
+    /// Shared by [`WakeFaultSampler`] and the serving simulator's
+    /// fault-extended break-even rule so the two never disagree.
+    pub fn resolved_wake_timeout(&self, wakeup_cycles: u64) -> u64 {
+        if self.wake_timeout_cycles > 0 {
+            self.wake_timeout_cycles
+        } else {
+            wakeup_cycles
+                .saturating_mul(DEFAULT_WAKE_TIMEOUT_WAKEUPS)
+                .max(1)
+        }
+    }
+
+    // -- per-class streams ---------------------------------------------
+
+    fn stream(&self, salt: u64) -> SplitMix64 {
+        SplitMix64::new(self.seed ^ salt)
+    }
+
+    /// Stream for queue-boundary drop/duplicate draws.
+    pub fn queue_rng(&self) -> SplitMix64 {
+        self.stream(QUEUE_STREAM)
+    }
+
+    /// Stream for wake-failure draws.
+    pub fn wake_rng(&self) -> SplitMix64 {
+        self.stream(WAKE_STREAM)
+    }
+
+    /// Stream for the DMA-degradation window process.
+    pub fn dma_rng(&self) -> SplitMix64 {
+        self.stream(DMA_STREAM)
+    }
+
+    /// Stream for the thermal-throttle window process.
+    pub fn slowdown_rng(&self) -> SplitMix64 {
+        self.stream(SLOWDOWN_STREAM)
+    }
+
+    // -- TOML ----------------------------------------------------------
+
+    /// The exact key set of the `[faults]` section, declaration order.
+    /// `Scenario`'s strict overlay and [`FaultPlan::parse`] share it.
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "seed",
+        "wake_fail_rate",
+        "max_wake_retries",
+        "wake_timeout_cycles",
+        "dma_degrade_rate",
+        "dma_degrade_factor",
+        "dma_degrade_dwell_secs",
+        "slowdown_rate",
+        "slowdown_factor",
+        "slowdown_dwell_secs",
+        "drop_rate",
+        "duplicate_rate",
+    ];
+
+    /// Serialize as a `[faults]` TOML section (all keys, exact
+    /// round-trip through [`FaultPlan::parse`]).
+    pub fn to_toml_section(&self) -> String {
+        format!(
+            "[faults]\n\
+             seed = {}\n\
+             wake_fail_rate = {}\n\
+             max_wake_retries = {}\n\
+             wake_timeout_cycles = {}\n\
+             dma_degrade_rate = {}\n\
+             dma_degrade_factor = {}\n\
+             dma_degrade_dwell_secs = {}\n\
+             slowdown_rate = {}\n\
+             slowdown_factor = {}\n\
+             slowdown_dwell_secs = {}\n\
+             drop_rate = {}\n\
+             duplicate_rate = {}\n",
+            self.seed,
+            self.wake_fail_rate,
+            self.max_wake_retries,
+            self.wake_timeout_cycles,
+            self.dma_degrade_rate,
+            self.dma_degrade_factor,
+            self.dma_degrade_dwell_secs,
+            self.slowdown_rate,
+            self.slowdown_factor,
+            self.slowdown_dwell_secs,
+            self.drop_rate,
+            self.duplicate_rate
+        )
+    }
+
+    /// Apply a parsed document's `[faults]` keys on top of `self`:
+    /// present keys override, absent keys keep their current values.
+    /// Key types are checked strictly; key *names* are the caller's job
+    /// (the scenario overlay and [`parse`](Self::parse) both reject
+    /// unknowns against [`KNOWN_KEYS`](Self::KNOWN_KEYS)).
+    pub fn overlay_toml(mut self, doc: &TomlDoc) -> Result<FaultPlan> {
+        use crate::scenario::{want_f64, want_u64};
+        if let Some(v) = want_u64(doc, "faults", "seed")? {
+            self.seed = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "wake_fail_rate")? {
+            self.wake_fail_rate = v;
+        }
+        if let Some(v) = want_u64(doc, "faults", "max_wake_retries")? {
+            self.max_wake_retries = u32::try_from(v).map_err(|_| {
+                Error::Config(format!(
+                    "faults: max_wake_retries {v} out of range"
+                ))
+            })?;
+        }
+        if let Some(v) = want_u64(doc, "faults", "wake_timeout_cycles")? {
+            self.wake_timeout_cycles = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "dma_degrade_rate")? {
+            self.dma_degrade_rate = v;
+        }
+        if let Some(v) = want_u64(doc, "faults", "dma_degrade_factor")? {
+            self.dma_degrade_factor = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "dma_degrade_dwell_secs")?
+        {
+            self.dma_degrade_dwell_secs = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "slowdown_rate")? {
+            self.slowdown_rate = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "slowdown_factor")? {
+            self.slowdown_factor = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "slowdown_dwell_secs")? {
+            self.slowdown_dwell_secs = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "drop_rate")? {
+            self.drop_rate = v;
+        }
+        if let Some(v) = want_f64(doc, "faults", "duplicate_rate")? {
+            self.duplicate_rate = v;
+        }
+        Ok(self)
+    }
+
+    /// Parse a standalone fault-plan file (`--faults <file>`): exactly
+    /// one `[faults]` section, known keys only, validated ranges.
+    /// Scenario files carry the same section inline; this entry point
+    /// is for plans shared across scenarios.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let doc = TomlDoc::parse(text)?;
+        for (section, keys) in &doc.sections {
+            if section != "faults" {
+                return Err(Error::Config(format!(
+                    "fault plan file: unexpected section `[{section}]` \
+                     (a plan file holds only `[faults]`; scenario \
+                     sections belong to --scenario)"
+                )));
+            }
+            for key in keys.keys() {
+                if !Self::KNOWN_KEYS.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "fault plan file: unknown key `{key}` in \
+                         `[faults]` (known: {})",
+                        Self::KNOWN_KEYS.join(", ")
+                    )));
+                }
+            }
+        }
+        if !doc.sections.contains_key("faults") {
+            return Err(Error::Config(
+                "fault plan file: missing `[faults]` section".into(),
+            ));
+        }
+        let plan = FaultPlan::none().overlay_toml(&doc)?;
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Load a fault-plan file from a path.
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+}
+
+/// How the serving stack *reacts* to faults and overload, applied
+/// inside the `traffic::sim` event loop.  The default (all `None`,
+/// zero retry budget) is the historical behavior: unbounded queue, no
+/// timeouts, no fallback.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ResiliencePolicy {
+    /// Admission control: maximum requests waiting (queue + batcher);
+    /// arrivals beyond it are shed instead of growing the backlog.
+    pub queue_cap: Option<u64>,
+    /// Per-request wait budget, ms: a request older than this at
+    /// dispatch-assembly time is not served (the client gave up).
+    pub timeout_ms: Option<f64>,
+    /// Retries granted to a timed-out request: a fresh copy re-enters
+    /// the queue (age reset) until the budget is spent.
+    pub retry_budget: u32,
+    /// Graceful degradation: once the observed wake-failure rate
+    /// reaches this threshold, fall back to all-on (stop sleeping) for
+    /// the rest of the run — trading idle leakage for dependable
+    /// latency.
+    pub wake_fail_fallback: Option<f64>,
+    /// Graceful degradation: batch-size cap while thermally throttled
+    /// (smaller batches bound the per-batch latency stretch).
+    pub degraded_max_batch: Option<u64>,
+}
+
+impl ResiliencePolicy {
+    /// The do-nothing policy (historical simulator behavior).
+    pub fn none() -> ResiliencePolicy {
+        ResiliencePolicy::default()
+    }
+
+    /// Whether any reaction is configured.  A retry budget without a
+    /// timeout is inert (nothing ever times out), so it alone does not
+    /// activate the policy.
+    pub fn is_active(&self) -> bool {
+        self.queue_cap.is_some()
+            || self.timeout_ms.is_some()
+            || self.wake_fail_fallback.is_some()
+            || self.degraded_max_batch.is_some()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let Some(c) = self.queue_cap {
+            if c == 0 {
+                return Err(Error::Config(
+                    "resilience: queue_cap must be >= 1".into(),
+                ));
+            }
+        }
+        if let Some(t) = self.timeout_ms {
+            if !(t.is_finite() && t > 0.0) {
+                return Err(Error::Config(format!(
+                    "resilience: timeout_ms must be a positive \
+                     number, got {t}"
+                )));
+            }
+        }
+        if self.retry_budget > 64 {
+            return Err(Error::Config(format!(
+                "resilience: retry_budget must be <= 64, got {}",
+                self.retry_budget
+            )));
+        }
+        if let Some(f) = self.wake_fail_fallback {
+            if !(f.is_finite() && f > 0.0 && f <= 1.0) {
+                return Err(Error::Config(format!(
+                    "resilience: wake_fail_fallback must be in (0, 1], \
+                     got {f}"
+                )));
+            }
+        }
+        if let Some(b) = self.degraded_max_batch {
+            if b == 0 {
+                return Err(Error::Config(
+                    "resilience: degraded_max_batch must be >= 1".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-attempt backoff: attempt `k` (0-based) waits
+/// `timeout << min(k, MAX_BACKOFF_DOUBLINGS)`; the total delay of `f`
+/// consecutive failures is the sum over attempts (saturating — a
+/// pathological timeout cannot wrap the clock).
+pub fn backoff_delay_cycles(timeout_cycles: u64, failures: u32) -> u64 {
+    (0..failures).fold(0u64, |acc, k| {
+        acc.saturating_add(
+            timeout_cycles
+                .saturating_mul(1u64 << k.min(MAX_BACKOFF_DOUBLINGS)),
+        )
+    })
+}
+
+/// Draws the per-wake failure sequence of a run: how many consecutive
+/// attempts fail before a cold start's wake succeeds, and what delay
+/// (timeout + exponential backoff) those failures cost.  One sampler
+/// per run, consuming [`FaultPlan::wake_rng`] in dispatch order.
+#[derive(Debug, Clone)]
+pub struct WakeFaultSampler {
+    rng: SplitMix64,
+    rate: f64,
+    max_retries: u32,
+    timeout_cycles: u64,
+}
+
+impl WakeFaultSampler {
+    /// `wakeup_cycles` is the nominal (fault-free) wake latency of the
+    /// gating model, used to auto-size the watchdog timeout when the
+    /// plan leaves it at 0.
+    pub fn new(plan: &FaultPlan, wakeup_cycles: u64) -> WakeFaultSampler {
+        let timeout_cycles = plan.resolved_wake_timeout(wakeup_cycles);
+        WakeFaultSampler {
+            rng: plan.wake_rng(),
+            rate: plan.wake_fail_rate,
+            max_retries: plan.max_wake_retries,
+            timeout_cycles,
+        }
+    }
+
+    /// The resolved watchdog timeout, cycles.
+    pub fn timeout_cycles(&self) -> u64 {
+        self.timeout_cycles
+    }
+
+    /// Number of consecutive failed attempts of the next cold wake
+    /// (0 = the first attempt succeeds); capped by the retry budget —
+    /// after `max_retries` failures the rail is assumed up.
+    pub fn sample_failures(&mut self) -> u32 {
+        let mut f = 0;
+        while f < self.max_retries && self.rng.chance(self.rate) {
+            f += 1;
+        }
+        f
+    }
+
+    /// Total extra wake delay of `failures` consecutive failed
+    /// attempts, cycles.
+    pub fn delay_cycles(&self, failures: u32) -> u64 {
+        backoff_delay_cycles(self.timeout_cycles, failures)
+    }
+}
+
+/// A deterministic alternating good/bad window process on the cycle
+/// axis: exponentially-dwelling fault windows occupying a target
+/// long-run fraction of the horizon.  Used for DMA degradation and
+/// thermal throttle.
+#[derive(Debug, Clone, Default)]
+pub struct FaultWindows {
+    /// Half-open `[start, end)` windows, ascending and disjoint.
+    windows: Vec<(u64, u64)>,
+}
+
+impl FaultWindows {
+    /// No windows — `contains` is always false.
+    pub fn none() -> FaultWindows {
+        FaultWindows::default()
+    }
+
+    /// Generate the window sequence for one run.  `occupancy` is the
+    /// long-run in-window fraction (< 1), `dwell_secs` the mean length
+    /// of one window; the mean gap between windows follows from the
+    /// two.  The process starts fault-free at cycle 0.
+    pub fn generate(
+        rng: &mut SplitMix64,
+        occupancy: f64,
+        dwell_secs: f64,
+        horizon_cycles: u64,
+        clock_hz: f64,
+    ) -> FaultWindows {
+        if occupancy <= 0.0 || horizon_cycles == 0 {
+            return FaultWindows::none();
+        }
+        let bad_mean = dwell_secs;
+        let good_mean = dwell_secs * (1.0 - occupancy) / occupancy;
+        let mut exp_cycles = |mean_secs: f64| -> u64 {
+            let secs = -(1.0 - rng.f64()).ln() * mean_secs;
+            ((secs * clock_hz).round() as u64).max(1)
+        };
+        let mut windows = Vec::new();
+        let mut t = 0u64;
+        loop {
+            t = t.saturating_add(exp_cycles(good_mean));
+            if t >= horizon_cycles {
+                break;
+            }
+            let end = t
+                .saturating_add(exp_cycles(bad_mean))
+                .min(horizon_cycles);
+            windows.push((t, end));
+            t = end;
+            if t >= horizon_cycles {
+                break;
+            }
+        }
+        FaultWindows { windows }
+    }
+
+    /// Whether `cycle` falls inside a fault window.
+    pub fn contains(&self, cycle: u64) -> bool {
+        let i = self.windows.partition_point(|w| w.0 <= cycle);
+        i > 0 && cycle < self.windows[i - 1].1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Total in-window cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.windows.iter().map(|(s, e)| e - s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_plan_is_identity_and_valid() {
+        let p = FaultPlan::none();
+        assert!(p.is_identity());
+        p.validate().unwrap();
+        assert_eq!(p.label(), "no faults");
+        // shape knobs alone do not activate anything
+        let shaped = FaultPlan {
+            max_wake_retries: 9,
+            slowdown_factor: 3.0,
+            ..FaultPlan::none()
+        };
+        assert!(shaped.is_identity());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_knobs() {
+        for bad in [
+            FaultPlan { wake_fail_rate: 1.5, ..FaultPlan::none() },
+            FaultPlan { wake_fail_rate: -0.1, ..FaultPlan::none() },
+            FaultPlan { drop_rate: f64::NAN, ..FaultPlan::none() },
+            FaultPlan { duplicate_rate: 2.0, ..FaultPlan::none() },
+            // window occupancies must leave fault-free time
+            FaultPlan { dma_degrade_rate: 1.0, ..FaultPlan::none() },
+            FaultPlan { slowdown_rate: 1.0, ..FaultPlan::none() },
+            FaultPlan { dma_degrade_factor: 0, ..FaultPlan::none() },
+            FaultPlan { dma_degrade_dwell_secs: 0.0, ..FaultPlan::none() },
+            FaultPlan { slowdown_dwell_secs: -1.0, ..FaultPlan::none() },
+            FaultPlan { slowdown_factor: 0.5, ..FaultPlan::none() },
+            FaultPlan {
+                slowdown_factor: f64::INFINITY,
+                ..FaultPlan::none()
+            },
+            FaultPlan { max_wake_retries: 17, ..FaultPlan::none() },
+        ] {
+            assert!(bad.validate().is_err(), "accepted: {bad:?}");
+        }
+        // boundary values that must pass
+        FaultPlan { wake_fail_rate: 1.0, ..FaultPlan::none() }
+            .validate()
+            .unwrap();
+        FaultPlan { drop_rate: 1.0, ..FaultPlan::none() }
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn toml_round_trips_exactly() {
+        let plan = FaultPlan {
+            seed: 99,
+            wake_fail_rate: 0.25,
+            max_wake_retries: 5,
+            wake_timeout_cycles: 1234,
+            dma_degrade_rate: 0.125,
+            dma_degrade_factor: 8,
+            dma_degrade_dwell_secs: 0.01,
+            slowdown_rate: 0.0625,
+            slowdown_factor: 2.5,
+            slowdown_dwell_secs: 0.03,
+            drop_rate: 0.0078125,
+            duplicate_rate: 0.5,
+        };
+        plan.validate().unwrap();
+        let text = plan.to_toml_section();
+        assert_eq!(FaultPlan::parse(&text).unwrap(), plan);
+        // every emitted key is a known key, and every known key is
+        // emitted — the section and the registry cannot drift apart
+        for key in FaultPlan::KNOWN_KEYS {
+            assert!(
+                text.contains(&format!("{key} = ")),
+                "emission misses {key}"
+            );
+        }
+        assert_eq!(
+            text.lines().filter(|l| l.contains(" = ")).count(),
+            FaultPlan::KNOWN_KEYS.len()
+        );
+    }
+
+    #[test]
+    fn parse_is_strict() {
+        // unknown key, wrong type, foreign section, missing section
+        for text in [
+            "[faults]\nwake_failure_rate = 0.1\n", // misspelled
+            "[faults]\nwake_fail_rate = \"high\"\n",
+            "[faults]\nseed = 1.5\n",
+            "[faults]\nmax_wake_retries = -1\n",
+            "[scenario]\nnetwork = \"mnist\"\n",
+            "[traffic]\nrate_per_sec = 100\n",
+            "",
+            // parses but fails range validation
+            "[faults]\nwake_fail_rate = 7\n",
+        ] {
+            assert!(FaultPlan::parse(text).is_err(), "accepted: {text:?}");
+        }
+        // partial overlay keeps defaults for absent keys
+        let p = FaultPlan::parse("[faults]\ndrop_rate = 0.5\n").unwrap();
+        assert_eq!(p.drop_rate, 0.5);
+        assert_eq!(p.seed, FaultPlan::none().seed);
+        assert_eq!(p.max_wake_retries, FaultPlan::none().max_wake_retries);
+    }
+
+    #[test]
+    fn class_streams_are_independent() {
+        let plan = FaultPlan { seed: 42, ..FaultPlan::none() };
+        let mut a = plan.queue_rng();
+        let mut b = plan.wake_rng();
+        let mut c = plan.dma_rng();
+        let mut d = plan.slowdown_rng();
+        let first: Vec<u64> = vec![
+            a.next_u64(),
+            b.next_u64(),
+            c.next_u64(),
+            d.next_u64(),
+        ];
+        let mut uniq = first.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "stream salts collide: {first:?}");
+        // and the streams are a pure function of the seed
+        assert_eq!(plan.queue_rng().next_u64(), first[0]);
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_delay_cycles(100, 0), 0);
+        assert_eq!(backoff_delay_cycles(100, 1), 100);
+        assert_eq!(backoff_delay_cycles(100, 2), 300);
+        assert_eq!(backoff_delay_cycles(100, 3), 700);
+        // doublings cap at MAX_BACKOFF_DOUBLINGS per attempt
+        let eight = backoff_delay_cycles(1, 8);
+        assert_eq!(eight, 1 + 2 + 4 + 8 + 16 + 32 + 64 + 64);
+        // saturating, never wrapping
+        assert_eq!(backoff_delay_cycles(u64::MAX, 3), u64::MAX);
+    }
+
+    #[test]
+    fn wake_sampler_respects_rate_and_budget() {
+        // rate 0: never fails, regardless of draws
+        let mut never = WakeFaultSampler::new(&FaultPlan::none(), 180);
+        for _ in 0..64 {
+            assert_eq!(never.sample_failures(), 0);
+        }
+        // rate 1: always exhausts the retry budget
+        let always_plan = FaultPlan {
+            wake_fail_rate: 1.0,
+            max_wake_retries: 3,
+            ..FaultPlan::none()
+        };
+        let mut always = WakeFaultSampler::new(&always_plan, 180);
+        for _ in 0..16 {
+            assert_eq!(always.sample_failures(), 3);
+        }
+        // auto timeout: DEFAULT_WAKE_TIMEOUT_WAKEUPS nominal wakes
+        assert_eq!(
+            always.timeout_cycles(),
+            180 * DEFAULT_WAKE_TIMEOUT_WAKEUPS
+        );
+        // explicit timeout wins
+        let pinned = WakeFaultSampler::new(
+            &FaultPlan { wake_timeout_cycles: 77, ..always_plan },
+            180,
+        );
+        assert_eq!(pinned.timeout_cycles(), 77);
+        assert_eq!(pinned.delay_cycles(2), 77 + 154);
+        // same plan, same draw sequence
+        let plan = FaultPlan {
+            wake_fail_rate: 0.5,
+            seed: 7,
+            ..FaultPlan::none()
+        };
+        let mut s1 = WakeFaultSampler::new(&plan, 180);
+        let mut s2 = WakeFaultSampler::new(&plan, 180);
+        let a: Vec<u32> = (0..100).map(|_| s1.sample_failures()).collect();
+        let b: Vec<u32> = (0..100).map(|_| s2.sample_failures()).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&f| f > 0), "rate 0.5 never failed");
+        assert!(a.iter().any(|&f| f == 0), "rate 0.5 never succeeded");
+    }
+
+    #[test]
+    fn fault_windows_are_ordered_disjoint_and_sized() {
+        let plan = FaultPlan { seed: 11, ..FaultPlan::none() };
+        let horizon = 1_000_000_000u64; // 1 s at 1 GHz
+        let gen = |seed_rng: &mut SplitMix64| {
+            FaultWindows::generate(seed_rng, 0.2, 0.002, horizon, 1.0e9)
+        };
+        let w = gen(&mut plan.dma_rng());
+        assert!(!w.is_empty(), "0.2 occupancy produced no windows");
+        let mut last_end = 0u64;
+        for &(s, e) in &w.windows {
+            assert!(s >= last_end, "overlap");
+            assert!(s < e, "empty window");
+            assert!(e <= horizon, "past horizon");
+            last_end = e;
+        }
+        // ~500 windows of mean 2 ms dwell: occupancy close to target
+        let frac = w.total_cycles() as f64 / horizon as f64;
+        assert!(
+            (0.1..0.3).contains(&frac),
+            "occupancy {frac} far from 0.2"
+        );
+        // deterministic in the rng state
+        let v = gen(&mut plan.dma_rng());
+        assert_eq!(w.windows, v.windows);
+        // membership queries agree with the raw windows
+        let (s0, e0) = w.windows[0];
+        assert!(!w.contains(s0.saturating_sub(1)));
+        assert!(w.contains(s0));
+        assert!(w.contains(e0 - 1));
+        assert!(!w.contains(e0));
+        // zero occupancy: nothing
+        assert!(FaultWindows::generate(
+            &mut plan.dma_rng(),
+            0.0,
+            0.002,
+            horizon,
+            1.0e9
+        )
+        .is_empty());
+        assert!(!FaultWindows::none().contains(0));
+    }
+}

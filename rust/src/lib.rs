@@ -20,7 +20,11 @@
 //!   On top of it, [`traffic`] is the deterministic serving simulator:
 //!   seeded arrival processes on a virtual cycle clock, break-even idle
 //!   power management, SLO-aware reports, and a serving-aware DSE
-//!   re-ranking pass.
+//!   re-ranking pass.  The [`faults`] module injects seeded hardware
+//!   misbehavior (wake failures, DMA degradation, thermal throttle,
+//!   queue drops/duplicates) into that stack and carries the
+//!   resilience policies — bounded queues, timeouts + retries, all-on
+//!   fallback — that keep it SLO-feasible.
 //!   Underneath it, [`timeline`] is the cycle-resolved IR — op
 //!   intervals, per-domain power-state segments, DMA transfers — that
 //!   every time consumer (analytical leakage, event sim, tracer,
@@ -48,6 +52,7 @@ pub mod timeline;
 pub mod dse;
 pub mod config;
 pub mod scenario;
+pub mod faults;
 pub mod traffic;
 pub mod report;
 pub mod runtime;

@@ -37,6 +37,7 @@ use crate::capstore::arch::{
 use crate::config::schema::parse_organization;
 use crate::config::toml::TomlDoc;
 use crate::error::{Error, Result};
+use crate::faults::FaultPlan;
 use crate::memsim::cacti::Technology;
 use crate::traffic::{ArrivalPattern, TrafficProfile};
 
@@ -140,6 +141,10 @@ pub struct Scenario {
     /// per-inference evaluators ignore it).  `None` = no `[traffic]`
     /// section in the TOML form.
     pub traffic: Option<TrafficProfile>,
+    /// Optional fault-injection plan (`capstore traffic` consumes it;
+    /// the fault-free evaluators ignore it).  `None` = no `[faults]`
+    /// section in the TOML form.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for Scenario {
@@ -155,6 +160,7 @@ impl Default for Scenario {
             gating: GatingPolicy::default(),
             dma: DmaPolicy::default(),
             traffic: None,
+            faults: None,
         }
     }
 }
@@ -176,6 +182,7 @@ impl Scenario {
             gating: self.gating,
             dma: DmaChoice::Policy(self.dma),
             traffic: self.traffic,
+            faults: self.faults,
         }
     }
 
@@ -257,6 +264,10 @@ impl Scenario {
                 t.slo_ms
             ));
         }
+        if let Some(f) = &self.faults {
+            out.push('\n');
+            out.push_str(&f.to_toml_section());
+        }
         out
     }
 
@@ -280,8 +291,9 @@ impl Scenario {
 
 /// Strict typed getter for scenario TOML keys: absent is fine, but a
 /// present key with the wrong value type is an error — never silently
-/// dropped (see [`ScenarioBuilder::overlay_toml`]).
-fn want_str<'a>(
+/// dropped (see [`ScenarioBuilder::overlay_toml`]).  Crate-visible so
+/// `faults::FaultPlan` parses its `[faults]` section the same way.
+pub(crate) fn want_str<'a>(
     doc: &'a TomlDoc,
     section: &str,
     key: &str,
@@ -298,7 +310,7 @@ fn want_str<'a>(
 }
 
 /// [`want_str`] for non-negative integer keys.
-fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<u64>> {
+pub(crate) fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<u64>> {
     match doc.get(section, key) {
         None => Ok(None),
         Some(v) => v.as_u64().map(Some).ok_or_else(|| {
@@ -311,7 +323,7 @@ fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<u64>> {
 }
 
 /// [`want_str`] for numeric keys (int or float both accepted).
-fn want_f64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<f64>> {
+pub(crate) fn want_f64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option<f64>> {
     match doc.get(section, key) {
         None => Ok(None),
         Some(v) => v.as_f64().map(Some).ok_or_else(|| {
@@ -386,6 +398,7 @@ pub struct ScenarioBuilder {
     gating: GatingPolicy,
     dma: DmaChoice,
     traffic: Option<TrafficProfile>,
+    faults: Option<FaultPlan>,
 }
 
 impl Default for ScenarioBuilder {
@@ -484,6 +497,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach (or replace) the fault-injection plan — validated in
+    /// [`build`](Self::build).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Apply a scenario TOML document on top of the builder's current
     /// state: keys present in the document override, absent keys keep
     /// whatever the builder already holds.  This is what lets the CLI
@@ -509,6 +529,20 @@ impl ScenarioBuilder {
             ("traffic", "seed"),
             ("traffic", "duration_secs"),
             ("traffic", "slo_ms"),
+            // [faults] mirrors FaultPlan::KNOWN_KEYS; a sync test
+            // below keeps the two lists from drifting apart
+            ("faults", "seed"),
+            ("faults", "wake_fail_rate"),
+            ("faults", "max_wake_retries"),
+            ("faults", "wake_timeout_cycles"),
+            ("faults", "dma_degrade_rate"),
+            ("faults", "dma_degrade_factor"),
+            ("faults", "dma_degrade_dwell_secs"),
+            ("faults", "slowdown_rate"),
+            ("faults", "slowdown_factor"),
+            ("faults", "slowdown_dwell_secs"),
+            ("faults", "drop_rate"),
+            ("faults", "duplicate_rate"),
         ];
         for (section, keys) in &doc.sections {
             for key in keys.keys() {
@@ -579,6 +613,12 @@ impl ScenarioBuilder {
             }
             self.traffic = Some(t);
         }
+        if doc.sections.contains_key("faults") {
+            // a present section activates the plan; absent keys keep
+            // the builder's current plan (or the identity defaults)
+            let base = self.faults.take().unwrap_or_default();
+            self.faults = Some(base.overlay_toml(doc)?);
+        }
         Ok(self)
     }
 
@@ -636,6 +676,9 @@ impl ScenarioBuilder {
         if let Some(t) = &self.traffic {
             t.validate()?;
         }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
         Ok(Scenario {
             network,
             tech,
@@ -645,6 +688,7 @@ impl ScenarioBuilder {
             gating: self.gating,
             dma,
             traffic: self.traffic,
+            faults: self.faults,
         })
     }
 }
@@ -737,6 +781,82 @@ mod tests {
         let plain = Scenario::default();
         assert!(plain.traffic.is_none());
         assert!(!plain.to_toml().contains("[traffic]"));
+    }
+
+    #[test]
+    fn faults_section_round_trips() {
+        let sc = Scenario::builder()
+            .faults(FaultPlan {
+                seed: 13,
+                wake_fail_rate: 0.3,
+                drop_rate: 0.01,
+                ..FaultPlan::none()
+            })
+            .build()
+            .unwrap();
+        assert!(sc.to_toml().contains("[faults]"));
+        assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+        // no [faults] section => no plan, and no section emitted
+        let plain = Scenario::default();
+        assert!(plain.faults.is_none());
+        assert!(!plain.to_toml().contains("[faults]"));
+    }
+
+    #[test]
+    fn faults_overlay_is_strict_and_keeps_unset_keys() {
+        // unknown key, bad type, bad range: all errors
+        for text in [
+            "[faults]\nwake_failure_rate = 0.1\n", // misspelled
+            "[faults]\nwake_fail_rate = \"high\"\n",
+            "[faults]\nseed = -3\n",
+            "[faults]\nwake_fail_rate = 2.0\n", // build() range check
+        ] {
+            let doc = TomlDoc::parse(text).unwrap();
+            assert!(
+                Scenario::builder()
+                    .overlay_toml(&doc)
+                    .and_then(ScenarioBuilder::build)
+                    .is_err(),
+                "accepted: {text}"
+            );
+        }
+        // a bare [faults] section activates the identity plan; present
+        // keys override it field by field
+        let doc =
+            TomlDoc::parse("[faults]\nwake_fail_rate = 0.5\nseed = 4\n")
+                .unwrap();
+        let sc = Scenario::builder()
+            .overlay_toml(&doc)
+            .unwrap()
+            .build()
+            .unwrap();
+        let f = sc.faults.expect("section present => plan set");
+        assert_eq!(f.wake_fail_rate, 0.5);
+        assert_eq!(f.seed, 4);
+        assert_eq!(
+            f.max_wake_retries,
+            FaultPlan::none().max_wake_retries
+        );
+    }
+
+    #[test]
+    fn faults_known_keys_stay_in_sync() {
+        // the overlay's KNOWN list and FaultPlan::KNOWN_KEYS must name
+        // the same section — a key in one but not the other would make
+        // to_toml() output unparseable or the overlay silently lax
+        let sc = Scenario::builder()
+            .faults(FaultPlan::none())
+            .build()
+            .unwrap();
+        assert_eq!(Scenario::parse(&sc.to_toml()).unwrap(), sc);
+        for key in FaultPlan::KNOWN_KEYS {
+            let doc = TomlDoc::parse(&format!("[faults]\n{key} = 0\n"))
+                .unwrap();
+            assert!(
+                Scenario::builder().overlay_toml(&doc).is_ok(),
+                "overlay rejects known faults key {key}"
+            );
+        }
     }
 
     #[test]

@@ -105,6 +105,7 @@ impl ScenarioSet {
                                         gating: self.gating,
                                         dma,
                                         traffic: None,
+                                        faults: None,
                                     });
                                 }
                             }

@@ -52,6 +52,7 @@ use crate::analysis::requirements::RequirementsAnalysis;
 use crate::capsnet::OpKind;
 use crate::capstore::arch::CapStoreArch;
 use crate::capstore::pmu::GatingSchedule;
+use crate::faults::{FaultPlan, WakeFaultSampler};
 use crate::memsim::powergate::PowerGateModel;
 
 /// Default PMU wakeup lookahead (cycles before an operation boundary at
@@ -275,6 +276,12 @@ pub struct DomainTimeline {
     pub wakes: u64,
     /// Completed ON→OFF transitions.
     pub sleeps: u64,
+    /// Wake attempts whose ack never arrived (fault injection via
+    /// [`Timeline::build_with_faults`]; 0 on fault-free builds).  Each
+    /// failed attempt extends the WAKING segment by the watchdog
+    /// timeout (+ backoff), so [`Timeline::static_pj`] prices the
+    /// extra full-leakage window with no special casing.
+    pub failed_wakes: u64,
 }
 
 /// Per-macro view: static facts plus the planned ON-sector target during
@@ -532,6 +539,7 @@ fn walk_domain(
     requests: &[(u64, Req)],
     pg: &PowerGateModel,
     total: u64,
+    mut faults: Option<&mut WakeFaultSampler>,
 ) -> DomainTimeline {
     let target = |g: usize| sector < on_sectors[g];
 
@@ -542,6 +550,7 @@ fn walk_domain(
     let mut pending: Option<(u64, PowerState)> = None;
     let mut wakes = 0u64;
     let mut sleeps = 0u64;
+    let mut failed_wakes = 0u64;
 
     let close =
         |segs: &mut Vec<PowerSegment>, start: u64, end: u64, st: PowerState| {
@@ -575,7 +584,20 @@ fn walk_domain(
             close(&mut segments, seg_start, t, state);
             state = PowerState::Waking;
             seg_start = t;
-            pending = Some((t + pg.wakeup_cycles, PowerState::On));
+            // fault injection: failed attempts stretch the WAKING
+            // window by the watchdog + backoff delay before the
+            // surviving retry's recharge — one extended segment, so
+            // leakage integration needs no special casing
+            let mut delay = 0u64;
+            if let Some(s) = faults.as_deref_mut() {
+                let f = s.sample_failures();
+                if f > 0 {
+                    failed_wakes += u64::from(f);
+                    delay = s.delay_cycles(f);
+                }
+            }
+            pending =
+                Some((t + delay + pg.wakeup_cycles, PowerState::On));
         } else if boundary && !want_on && state == PowerState::On {
             close(&mut segments, seg_start, t, state);
             state = PowerState::Sleeping;
@@ -599,7 +621,7 @@ fn walk_domain(
     }
     close(&mut segments, seg_start, total, state);
 
-    DomainTimeline { mac, sector, segments, wakes, sleeps }
+    DomainTimeline { mac, sector, segments, wakes, sleeps, failed_wakes }
 }
 
 /// PMU request instants shared by every domain.
@@ -636,6 +658,34 @@ impl Timeline {
         )
     }
 
+    /// [`build`](Self::build) under a fault plan: every wake request a
+    /// domain issues may transiently fail (`FaultPlan::wake_fail_rate`
+    /// on the plan's dedicated wake stream, sampled in deterministic
+    /// domain order), stretching the WAKING segment by the watchdog +
+    /// backoff delay so leakage is charged exactly over the extended
+    /// window.  With an identity plan the result is bit-identical to
+    /// [`build`](Self::build) — `tests/faults.rs` pins that invariant.
+    pub fn build_with_faults(
+        ctx: &SweepContext,
+        arch: &CapStoreArch,
+        req: &RequirementsAnalysis,
+        policy: &TimelinePolicy,
+        faults: &FaultPlan,
+    ) -> Timeline {
+        let plan = GatingSchedule::plan_for(arch, req, &ctx.op_kinds);
+        Self::build_inner(
+            &ctx.op_kinds,
+            &ctx.op_cycles,
+            &ctx.op_offchip,
+            ctx.clock_hz,
+            arch,
+            plan,
+            policy,
+            true,
+            Some(faults),
+        )
+    }
+
     /// [`build`](Self::build) without materializing the per-domain
     /// power-state segments — the cheap variant for analytical-only
     /// consumers (large `ScenarioSet` sweeps, the serving accountant)
@@ -660,6 +710,7 @@ impl Timeline {
             plan,
             policy,
             false,
+            None,
         )
     }
 
@@ -677,7 +728,7 @@ impl Timeline {
     ) -> Timeline {
         Self::build_inner(
             kinds, op_cycles, op_offchip, clock_hz, arch, plan, policy,
-            true,
+            true, None,
         )
     }
 
@@ -691,6 +742,7 @@ impl Timeline {
         plan: GatingSchedule,
         policy: &TimelinePolicy,
         materialize_domains: bool,
+        faults: Option<&FaultPlan>,
     ) -> Timeline {
         BUILD_COUNT.fetch_add(1, Ordering::Relaxed);
         assert_eq!(kinds.len(), op_cycles.len());
@@ -742,6 +794,12 @@ impl Timeline {
 
         let mut domains: Vec<DomainTimeline> = Vec::new();
         if materialize_domains {
+            // one sampler for the whole build, consumed in (macro,
+            // sector) order — the deterministic equivalent of the PMU
+            // serving wake requests in domain-scan order
+            let mut sampler = faults.map(|f| {
+                WakeFaultSampler::new(f, arch.pg_model.wakeup_cycles)
+            });
             domains.reserve(
                 macros.iter().map(|m| m.total_sectors as usize).sum(),
             );
@@ -754,6 +812,7 @@ impl Timeline {
                         &requests,
                         &arch.pg_model,
                         p.total_cycles,
+                        sampler.as_mut(),
                     ));
                 }
             }
@@ -853,6 +912,28 @@ impl Timeline {
             .iter()
             .map(|d| {
                 d.wakes as f64
+                    * self
+                        .pg
+                        .wakeup_energy_pj(self.macros[d.mac].sector_bytes)
+            })
+            .sum()
+    }
+
+    /// Transient wake failures injected across all domains (0 unless the
+    /// timeline was built via [`build_with_faults`](Self::build_with_faults)
+    /// with a non-zero wake-failure rate).
+    pub fn failed_wakes(&self) -> u64 {
+        self.domains.iter().map(|d| d.failed_wakes).sum()
+    }
+
+    /// Energy attributed to failed wake attempts, pJ: every retry burns
+    /// one more cold-restore premium on top of the stretched WAKING
+    /// leakage that [`static_pj`](Self::static_pj) already prices.
+    pub fn failed_wake_pj(&self) -> f64 {
+        self.domains
+            .iter()
+            .map(|d| {
+                d.failed_wakes as f64
                     * self
                         .pg
                         .wakeup_energy_pj(self.macros[d.mac].sector_bytes)
@@ -1139,6 +1220,85 @@ mod tests {
                 "macro {mac}"
             );
         }
+    }
+
+    #[test]
+    fn identity_fault_plan_builds_bit_identically() {
+        let (model, ctx, arch) = setup(Organization::Sep { gated: true });
+        let policy = TimelinePolicy::default();
+        let base = Timeline::build(&ctx, &arch, &model.req, &policy);
+        let id = Timeline::build_with_faults(
+            &ctx,
+            &arch,
+            &model.req,
+            &policy,
+            &FaultPlan::none(),
+        );
+        assert_eq!(base.domains, id.domains);
+        assert_eq!(id.failed_wakes(), 0);
+        assert_eq!(id.failed_wake_pj().to_bits(), 0f64.to_bits());
+        assert_eq!(base.static_pj().to_bits(), id.static_pj().to_bits());
+        assert_eq!(base.wakeup_pj().to_bits(), id.wakeup_pj().to_bits());
+        assert_eq!(base.not_ready_cycles, id.not_ready_cycles);
+    }
+
+    #[test]
+    fn wake_failures_stretch_waking_deterministically() {
+        let waking_cycles = |tl: &Timeline| -> u64 {
+            tl.domains
+                .iter()
+                .flat_map(|d| &d.segments)
+                .filter(|s| s.state == PowerState::Waking)
+                .map(|s| s.interval.cycles())
+                .sum()
+        };
+        let (model, ctx, arch) = setup(Organization::Sep { gated: true });
+        let policy = TimelinePolicy::default();
+        let base = Timeline::build(&ctx, &arch, &model.req, &policy);
+        let plan = FaultPlan {
+            wake_fail_rate: 0.9,
+            seed: 11,
+            ..FaultPlan::none()
+        };
+        let faulty = Timeline::build_with_faults(
+            &ctx,
+            &arch,
+            &model.req,
+            &policy,
+            &plan,
+        );
+        // faults never reshape the schedule — only power-state segments
+        assert_eq!(faulty.total_cycles, base.total_cycles);
+        assert_eq!(faulty.ops, base.ops);
+        assert!(faulty.failed_wakes() > 0);
+        assert!(faulty.failed_wake_pj() > 0.0);
+        // the backoff delay extends WAKING windows, which both stretches
+        // the full-leakage span and raises stall pressure
+        assert!(waking_cycles(&faulty) > waking_cycles(&base));
+        assert!(faulty.static_pj() >= base.static_pj());
+        assert!(faulty.not_ready_cycles >= base.not_ready_cycles);
+        // every domain's segments still tile [0, total_cycles) exactly
+        for d in &faulty.domains {
+            let mut cursor = 0;
+            for seg in &d.segments {
+                assert_eq!(seg.interval.start, cursor);
+                cursor = seg.interval.end;
+            }
+            assert_eq!(cursor, faulty.total_cycles);
+        }
+        // same seed + plan → bit-identical rebuild
+        let again = Timeline::build_with_faults(
+            &ctx,
+            &arch,
+            &model.req,
+            &policy,
+            &plan,
+        );
+        assert_eq!(faulty.domains, again.domains);
+        assert_eq!(
+            faulty.static_pj().to_bits(),
+            again.static_pj().to_bits()
+        );
     }
 
     #[test]

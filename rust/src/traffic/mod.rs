@@ -28,6 +28,15 @@
 //!   between the low-rate (idle-leakage-dominated) and saturated
 //!   (batch-amortized) regimes.
 //!
+//! [`sim::simulate_with`] runs the same loop under a seeded
+//! [`crate::faults::FaultPlan`] and a
+//! [`crate::faults::ResiliencePolicy`] (wake failures, DMA degradation,
+//! thermal throttle, queue-boundary drops/duplicates; shedding,
+//! timeouts + retries, throttle-capped batches, all-on fallback), and
+//! [`rank_for_traffic_under`] re-ranks the Pareto front under those
+//! conditions.  The identity plan reproduces the fault-free reports bit
+//! for bit (`tests/faults.rs`).
+//!
 //! Surfaced as `capstore traffic` and the `[traffic]` scenario TOML
 //! section; guarded by `benches/traffic_sim.rs --check` (determinism +
 //! zero `Timeline` builds per dispatched batch).
@@ -37,9 +46,13 @@ pub mod rank;
 pub mod sim;
 
 pub use arrivals::{ArrivalGen, ArrivalPattern};
-pub use rank::{rank_for_traffic, TrafficWinner, SLO_MISS_BUDGET};
+pub use rank::{
+    rank_for_traffic, rank_for_traffic_under, TrafficWinner,
+    SLO_MISS_BUDGET,
+};
 pub use sim::{
-    simulate, DispatchRecord, ServiceModel, TrafficReport,
+    simulate, simulate_with, DispatchRecord, ResilienceStats,
+    ServiceModel, TrafficReport, FALLBACK_MIN_ATTEMPTS,
 };
 
 /// One serving workload: the arrival process, its mean rate, the RNG

@@ -16,8 +16,9 @@
 use crate::coordinator::batcher::BatchPolicy;
 use crate::dse::DesignPoint;
 use crate::error::Result;
+use crate::faults::{FaultPlan, ResiliencePolicy};
 use crate::scenario::{Evaluator, Scenario};
-use crate::traffic::sim::{simulate, ServiceModel, TrafficReport};
+use crate::traffic::sim::{simulate_with, ServiceModel, TrafficReport};
 use crate::traffic::TrafficProfile;
 
 /// A design point is SLO-feasible when at most this fraction of served
@@ -50,6 +51,33 @@ pub fn rank_for_traffic(
     profiles: &[TrafficProfile],
     policy: &BatchPolicy,
 ) -> Result<Vec<TrafficWinner>> {
+    rank_for_traffic_under(
+        ev,
+        base,
+        front,
+        profiles,
+        policy,
+        &FaultPlan::none(),
+        &ResiliencePolicy::none(),
+    )
+}
+
+/// [`rank_for_traffic`] under a fault plan and resilience policy: which
+/// Pareto design *stays* SLO-feasible when wakes fail, DMA degrades,
+/// and the queue boundary misbehaves?  A design whose energy win rests
+/// on aggressive gating pays a wake-retry tax per cold start, so the
+/// winner can move toward less-gated (or all-on-fallback) points as the
+/// fault rate rises — the fault-extended DESCNet break-even rule made
+/// visible at the fleet level.
+pub fn rank_for_traffic_under(
+    ev: &Evaluator,
+    base: &Scenario,
+    front: &[DesignPoint],
+    profiles: &[TrafficProfile],
+    policy: &BatchPolicy,
+    faults: &FaultPlan,
+    resilience: &ResiliencePolicy,
+) -> Result<Vec<TrafficWinner>> {
     if front.is_empty() {
         return Err(crate::error::Error::Config(
             "serving-aware ranking needs a non-empty Pareto front".into(),
@@ -59,14 +87,20 @@ pub fn rank_for_traffic(
     let mut models = Vec::with_capacity(front.len());
     for p in front {
         let sc = p.scenario(base);
-        models.push(ServiceModel::new(ev, &sc, policy.max_batch)?);
+        models.push(ServiceModel::with_faults(
+            ev,
+            &sc,
+            policy.max_batch,
+            Some(faults),
+        )?);
     }
 
     let mut out = Vec::with_capacity(profiles.len());
     for profile in profiles {
         let mut best: Option<(usize, TrafficReport, bool)> = None;
         for (i, svc) in models.iter().enumerate() {
-            let report = simulate(svc, profile, policy);
+            let report =
+                simulate_with(svc, profile, policy, faults, resilience)?;
             let feasible =
                 report.slo_violation_fraction() <= SLO_MISS_BUDGET
                     && report.served > 0;

@@ -21,18 +21,46 @@
 //! [`ServiceModel`]: one analytical `Timeline` per *batch size* (at
 //! model-build time), zero per dispatched batch — the `traffic_sim`
 //! bench asserts that with `Timeline::build_count`.
+//!
+//! # Faults and resilience
+//!
+//! [`simulate_with`] runs the same event loop under a seeded
+//! [`FaultPlan`] and a [`ResiliencePolicy`] (see [`crate::faults`]):
+//! queue-boundary drops/duplicates and bounded-queue shedding at
+//! admission, per-request timeouts + retries at dispatch assembly,
+//! transient wake failures (timeout + exponential backoff) on cold
+//! starts, DMA-degradation and thermal-throttle windows on service, and
+//! an all-on fallback once the observed wake-failure rate crosses the
+//! policy threshold.  The identity plan plus the do-nothing policy is
+//! the plain [`simulate`] — bit for bit (`tests/faults.rs` pins it).
+//!
+//! Request conservation under faults: every *copy* of a request ends in
+//! exactly one bucket, so
+//! `arrivals + duplicated + retried == served + queued + shed + dropped
+//! + timed_out` (which degenerates to `arrivals == served + queued`
+//! when nothing is injected).
 
 use std::collections::VecDeque;
 use std::time::Duration;
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Clock, VirtualClock};
 use crate::error::Result;
+use crate::faults::{
+    backoff_delay_cycles, FaultPlan, FaultWindows, ResiliencePolicy,
+    WakeFaultSampler,
+};
 use crate::scenario::evaluator::BatchEnergy;
-use crate::scenario::{Evaluator, Scenario};
+use crate::scenario::{DmaModel, DmaPolicy, Evaluation, Evaluator, Scenario};
+use crate::testing::SplitMix64;
 use crate::traffic::arrivals::ArrivalGen;
 use crate::traffic::TrafficProfile;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Wake-failure observations required before the all-on fallback may
+/// trigger — a couple of unlucky first draws must not disable gating
+/// for a whole run.
+pub const FALLBACK_MIN_ATTEMPTS: u64 = 4;
 
 /// Everything the event loop needs per dispatch, precomputed once per
 /// (scenario, max_batch): the whole-batch energy/latency table and the
@@ -43,6 +71,12 @@ pub struct ServiceModel {
     /// `per_batch[n-1]` = timeline-derived accounting of a batch of n
     /// pipelined inferences (n in `1..=max_batch`).
     pub per_batch: Vec<BatchEnergy>,
+    /// Same table evaluated at the fault plan's degraded DMA bandwidth
+    /// (`bandwidth / dma_degrade_factor`); `None` when the model was
+    /// built without faults, the plan never degrades, or the scenario's
+    /// DMA model is [`DmaModel::Instant`] (transfers take no timeline
+    /// room, so less bandwidth changes nothing).
+    pub per_batch_degraded: Option<Vec<BatchEnergy>>,
     pub clock_hz: f64,
     /// Whether the scenario's organization can gate sectors at all.
     pub gated: bool,
@@ -59,6 +93,13 @@ pub struct ServiceModel {
     pub steady_wakeups: u64,
     /// Cold-start OFF→ON transitions per inference.
     pub cold_wakeups: u64,
+    /// Nominal wake latency of the gating model, cycles (sizes the
+    /// fault sampler's auto watchdog timeout).
+    pub wakeup_cycles: u64,
+    /// Staged off-chip bytes of one queued inference (the first op's
+    /// input fetch) — the per-request term of the backlog memory
+    /// footprint reported as `peak_queue_bytes`.
+    pub request_bytes: u64,
     /// Idle cycles after which sleeping beats staying awake:
     /// `cold_extra_pj / ((idle_on - idle_off) per-cycle leakage)`.
     /// `None` for ungated organizations (nothing to gate).
@@ -74,20 +115,54 @@ impl ServiceModel {
         sc: &Scenario,
         max_batch: usize,
     ) -> Result<ServiceModel> {
+        Self::with_faults(ev, sc, max_batch, None)
+    }
+
+    /// [`new`](Self::new) plus the degraded-DMA dispatch table when the
+    /// fault plan can degrade bandwidth (see
+    /// [`per_batch_degraded`](Self::per_batch_degraded)).
+    pub fn with_faults(
+        ev: &Evaluator,
+        sc: &Scenario,
+        max_batch: usize,
+        faults: Option<&FaultPlan>,
+    ) -> Result<ServiceModel> {
         let max_batch = max_batch.max(1);
-        let mut per_batch = Vec::with_capacity(max_batch);
-        let mut first = None;
-        for b in 1..=max_batch {
-            let e = ev.evaluate_analytical(&Scenario {
-                batch: b as u64,
-                ..sc.clone()
-            })?;
-            per_batch.push(e.batch.clone());
-            if b == 1 {
-                first = Some(e);
+        let table = |dma: DmaPolicy| -> Result<(Vec<BatchEnergy>, Evaluation)> {
+            let mut per_batch = Vec::with_capacity(max_batch);
+            let mut first = None;
+            for b in 1..=max_batch {
+                let e = ev.evaluate_analytical(&Scenario {
+                    batch: b as u64,
+                    dma,
+                    ..sc.clone()
+                })?;
+                per_batch.push(e.batch.clone());
+                if b == 1 {
+                    first = Some(e);
+                }
             }
-        }
-        let e1 = first.expect("max_batch >= 1");
+            Ok((per_batch, first.expect("max_batch >= 1")))
+        };
+        let (per_batch, e1) = table(sc.dma)?;
+        let per_batch_degraded = match faults {
+            Some(f)
+                if f.dma_degrade_rate > 0.0
+                    && f.dma_degrade_factor > 1
+                    && sc.dma.model != DmaModel::Instant =>
+            {
+                let degraded = DmaPolicy {
+                    bandwidth_bytes_per_cycle: (sc
+                        .dma
+                        .bandwidth_bytes_per_cycle
+                        / f.dma_degrade_factor)
+                        .max(1),
+                    ..sc.dma
+                };
+                Some(table(degraded)?.0)
+            }
+            _ => None,
+        };
 
         let gated = e1.architecture.organization.gated();
         let pg = &e1.architecture.pg_model;
@@ -113,6 +188,7 @@ impl ServiceModel {
         Ok(ServiceModel {
             scenario: sc.clone(),
             per_batch,
+            per_batch_degraded,
             clock_hz,
             gated,
             idle_on_mw,
@@ -120,6 +196,13 @@ impl ServiceModel {
             cold_extra_pj,
             steady_wakeups: plan.steady_wakeups().iter().sum(),
             cold_wakeups: plan.wakeups.iter().sum(),
+            wakeup_cycles: pg.wakeup_cycles,
+            request_bytes: e1
+                .timeline
+                .op_offchip
+                .first()
+                .map(|&(r, _)| r)
+                .unwrap_or(0),
             break_even_cycles,
         })
     }
@@ -134,8 +217,20 @@ impl ServiceModel {
     /// throughout).  Returns whether the window slept — i.e. whether a
     /// batch dispatched at its end starts cold.
     pub fn idle_window_pj(&self, gap: u64) -> (f64, bool) {
+        self.idle_window_pj_with(gap, self.break_even_cycles)
+    }
+
+    /// [`idle_window_pj`](Self::idle_window_pj) against an explicit
+    /// break-even point: the fault-extended one from
+    /// [`break_even_cycles_under`](Self::break_even_cycles_under), or
+    /// `None` to model the all-on fallback (never sleep).
+    pub fn idle_window_pj_with(
+        &self,
+        gap: u64,
+        break_even: Option<u64>,
+    ) -> (f64, bool) {
         let k = pj_per_cycle_per_mw(self.clock_hz);
-        match self.break_even_cycles {
+        match break_even {
             Some(be) if gap > be => (
                 self.idle_on_mw * be as f64 * k
                     + self.idle_off_mw * (gap - be) as f64 * k,
@@ -143,6 +238,44 @@ impl ServiceModel {
             ),
             _ => (self.idle_on_mw * gap as f64 * k, false),
         }
+    }
+
+    /// The DESCNet break-even rule extended with the fault plan's wake
+    /// failure rate: a cold start now costs the cold premium *plus* the
+    /// expected retry premium (each failed attempt re-pays the cold
+    /// restore and leaks at full power over its backoff wait), so
+    /// sleeping pays off only after a proportionally longer gap.
+    /// Identity plans return [`break_even_cycles`](Self::break_even_cycles)
+    /// unchanged.
+    pub fn break_even_cycles_under(
+        &self,
+        faults: &FaultPlan,
+    ) -> Option<u64> {
+        let be = self.break_even_cycles?;
+        let p = faults.wake_fail_rate;
+        if p <= 0.0 {
+            return Some(be);
+        }
+        let k = pj_per_cycle_per_mw(self.clock_hz);
+        let timeout = faults.resolved_wake_timeout(self.wakeup_cycles);
+        // E[extra cost of one cold wake]: attempt j is reached with
+        // probability p^j and then burns one more cold premium plus
+        // full leakage over its backoff step
+        let mut extra_pj = 0.0;
+        let mut p_reach = 1.0;
+        for j in 1..=faults.max_wake_retries {
+            p_reach *= p;
+            let step = backoff_delay_cycles(timeout, j)
+                - backoff_delay_cycles(timeout, j - 1);
+            extra_pj += p_reach
+                * (self.cold_extra_pj
+                    + self.idle_on_mw * step as f64 * k);
+        }
+        let delta_mw = self.idle_on_mw - self.idle_off_mw;
+        Some(
+            ((self.cold_extra_pj + extra_pj) / (delta_mw * k)).ceil()
+                as u64,
+        )
     }
 }
 
@@ -167,6 +300,50 @@ pub struct DispatchRecord {
     /// `BatchEnergy::total_pj()` of this batch size — the term the
     /// simulator total sums, bit for bit.
     pub batch_pj: f64,
+    /// Extra wake delay injected by failed wake attempts (0 on
+    /// fault-free or warm dispatches).
+    pub wake_delay_cycles: u64,
+    /// Dispatched inside a degraded-DMA window (priced from the
+    /// degraded table).
+    pub dma_degraded: bool,
+    /// Dispatched thermally throttled (stretched service latency).
+    pub throttled: bool,
+}
+
+/// Fault/resilience counters of one run — all zero on a fault-free run
+/// with the do-nothing policy.  Conservation: see the module docs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceStats {
+    /// Arrivals lost at the queue boundary (fault class).
+    pub dropped: u64,
+    /// Arrivals delivered twice (fault class); each duplicate adds one
+    /// extra copy.
+    pub duplicated: u64,
+    /// Copies rejected by bounded-queue admission control.
+    pub shed: u64,
+    /// Copies expired at dispatch assembly (older than the timeout).
+    pub timed_out: u64,
+    /// Fresh copies re-entered for timed-out requests (retry budget).
+    pub retried: u64,
+    /// Wake attempts issued by cold starts (failures + successes).
+    pub wake_attempts: u64,
+    /// Wake attempts whose ack never arrived.
+    pub wake_failures: u64,
+    /// Batches priced from the degraded-DMA table.
+    pub dma_degraded_batches: u64,
+    /// Batches dispatched inside a throttle window.
+    pub throttled_batches: u64,
+    /// Total cycles covered by degraded-DMA windows.
+    pub dma_window_cycles: u64,
+    /// Total cycles covered by throttle windows.
+    pub slowdown_window_cycles: u64,
+    /// Energy attributed to failed wakes: one cold premium per aborted
+    /// attempt plus full leakage over the backoff wait, pJ.
+    pub wake_retry_pj: f64,
+    /// Extra full-power leakage over throttle-stretched service, pJ.
+    pub throttle_extra_pj: f64,
+    /// Cycle at which the all-on fallback engaged (`None` = never).
+    pub fallback_at_cycle: Option<u64>,
 }
 
 /// Fleet-level result of one simulation run.
@@ -176,7 +353,11 @@ pub struct TrafficReport {
     pub profile: TrafficProfile,
     /// Simulated window, cycles.
     pub horizon_cycles: u64,
-    // -- request conservation: arrivals == served + queued -------------
+    // -- request conservation -------------------------------------------
+    // arrivals + duplicated + retried
+    //     == served + queued + shed + dropped + timed_out
+    // (degenerates to arrivals == served + queued when nothing is
+    // injected)
     pub arrivals: u64,
     pub served: u64,
     /// Requests still waiting (queue + batcher) when the horizon hit.
@@ -189,11 +370,19 @@ pub struct TrafficReport {
     // -- idle-gap power management ------------------------------------
     pub cold_starts: u64,
     pub warm_starts: u64,
+    /// The break-even point the run actually used (fault-extended when
+    /// a wake failure rate was injected).
     pub break_even_cycles: Option<u64>,
     /// Cycles the accelerator spent serving *within the horizon window*
     /// (a batch in flight at the horizon contributes only its in-window
     /// part, so `busy_cycles <= horizon_cycles`).
     pub busy_cycles: u64,
+    // -- backlog (always reported, cap or no cap) ----------------------
+    /// Largest queue + batcher backlog observed, requests.
+    pub peak_queue_depth: u64,
+    /// That backlog's staged-input memory footprint, bytes
+    /// (`peak_queue_depth × ServiceModel::request_bytes`).
+    pub peak_queue_bytes: u64,
     // -- energy decomposition (pJ) ------------------------------------
     /// Σ per-dispatch `BatchEnergy::total_pj()` (bit-for-bit additive).
     pub batch_pj: f64,
@@ -202,14 +391,27 @@ pub struct TrafficReport {
     pub idle_pj: f64,
     /// Cold-start premium credited back for warm starts.
     pub warm_saving_pj: f64,
+    // -- faults / resilience -------------------------------------------
+    pub resilience: ResilienceStats,
+    /// Whether the run injected faults or ran an active policy (gates
+    /// the `resilience` JSON section so fault-free reports stay
+    /// byte-identical to the historical shape).
+    pub resilience_active: bool,
+    /// `FaultPlan::label()` of the injected plan when active.
+    pub faults_label: Option<String>,
     /// Every dispatch in order (the additivity witnesses).
     pub dispatches: Vec<DispatchRecord>,
 }
 
 impl TrafficReport {
-    /// Total simulated memory-system energy over the window, pJ.
+    /// Total simulated memory-system energy over the window, pJ
+    /// (fault-free runs add exact zeros, keeping the historical
+    /// decomposition bit-identical).
     pub fn total_pj(&self) -> f64 {
-        self.batch_pj - self.warm_saving_pj + self.idle_pj
+        self.batch_pj - self.warm_saving_pj
+            + self.idle_pj
+            + self.resilience.wake_retry_pj
+            + self.resilience.throttle_extra_pj
     }
 
     /// Served inferences per second of virtual time.
@@ -248,7 +450,8 @@ impl TrafficReport {
     }
 
     /// JSON view; byte-identical across runs of the same seed (no wall
-    /// time anywhere).
+    /// time anywhere).  The `resilience` section appears only when the
+    /// run injected faults or ran an active policy.
     pub fn to_json(&self, clock_hz: f64) -> Json {
         let mut fields = vec![
             ("scenario", Json::Str(self.scenario_label.clone())),
@@ -294,6 +497,14 @@ impl TrafficReport {
             ("horizon_cycles", Json::Num(self.horizon_cycles as f64)),
             ("busy_cycles", Json::Num(self.busy_cycles as f64)),
             (
+                "peak_queue_depth",
+                Json::Num(self.peak_queue_depth as f64),
+            ),
+            (
+                "peak_queue_bytes",
+                Json::Num(self.peak_queue_bytes as f64),
+            ),
+            (
                 "energy",
                 Json::obj(vec![
                     ("batch_pj", Json::Num(self.batch_pj)),
@@ -307,6 +518,57 @@ impl TrafficReport {
                 ]),
             ),
         ];
+        if self.resilience_active {
+            let s = &self.resilience;
+            fields.push((
+                "resilience",
+                Json::obj(vec![
+                    (
+                        "faults",
+                        Json::Str(
+                            self.faults_label
+                                .clone()
+                                .unwrap_or_else(|| "no faults".into()),
+                        ),
+                    ),
+                    ("dropped", Json::Num(s.dropped as f64)),
+                    ("duplicated", Json::Num(s.duplicated as f64)),
+                    ("shed", Json::Num(s.shed as f64)),
+                    ("timed_out", Json::Num(s.timed_out as f64)),
+                    ("retried", Json::Num(s.retried as f64)),
+                    ("wake_attempts", Json::Num(s.wake_attempts as f64)),
+                    ("wake_failures", Json::Num(s.wake_failures as f64)),
+                    (
+                        "dma_degraded_batches",
+                        Json::Num(s.dma_degraded_batches as f64),
+                    ),
+                    (
+                        "throttled_batches",
+                        Json::Num(s.throttled_batches as f64),
+                    ),
+                    (
+                        "dma_window_cycles",
+                        Json::Num(s.dma_window_cycles as f64),
+                    ),
+                    (
+                        "slowdown_window_cycles",
+                        Json::Num(s.slowdown_window_cycles as f64),
+                    ),
+                    ("wake_retry_pj", Json::Num(s.wake_retry_pj)),
+                    (
+                        "throttle_extra_pj",
+                        Json::Num(s.throttle_extra_pj),
+                    ),
+                    (
+                        "fallback_at_cycle",
+                        match s.fallback_at_cycle {
+                            Some(c) => Json::Num(c as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ));
+        }
         if let Some(s) = &self.latency_ms {
             fields.push((
                 "latency_ms",
@@ -323,16 +585,378 @@ impl TrafficReport {
     }
 }
 
+/// One queued copy of a request at the serving boundary.
+#[derive(Debug, Clone, Copy)]
+struct QReq {
+    /// Arrival cycle (reset on retry — the latency clock restarts).
+    arrival: u64,
+    /// Timeout retries already consumed by this request lineage.
+    retries: u32,
+}
+
+/// Live state of one [`simulate_with`] run: the queue boundary, the
+/// fault samplers, and the resilience bookkeeping — a plain struct so
+/// the event-loop helpers can borrow pieces without fighting closures.
+struct EventLoop<'a> {
+    svc: &'a ServiceModel,
+    profile: &'a TrafficProfile,
+    res: &'a ResiliencePolicy,
+    faults: &'a FaultPlan,
+    clock: VirtualClock,
+    batcher: Batcher<QReq, VirtualClock>,
+    gen: ArrivalGen,
+    fifo: VecDeque<QReq>,
+    horizon: u64,
+    /// `ResiliencePolicy::timeout_ms` in cycles.
+    timeout_cycles: Option<u64>,
+    /// Fault-extended break-even point (identity plans keep the plain
+    /// one); `None` after the all-on fallback engages.
+    break_even_eff: Option<u64>,
+    queue_rng: SplitMix64,
+    wake: WakeFaultSampler,
+    dma_windows: FaultWindows,
+    slow_windows: FaultWindows,
+    arrivals: u64,
+    next_arrival: Option<u64>,
+    busy_until: Option<u64>,
+    idle_since: u64,
+    fallback: bool,
+    report: TrafficReport,
+    latencies_ms: Vec<f64>,
+}
+
+impl EventLoop<'_> {
+    fn pending_total(&self) -> u64 {
+        self.fifo.len() as u64 + self.batcher.pending_len() as u64
+    }
+
+    fn note_queue_depth(&mut self) {
+        let d = self.pending_total();
+        if d > self.report.peak_queue_depth {
+            self.report.peak_queue_depth = d;
+        }
+    }
+
+    fn pull(&mut self) -> Option<u64> {
+        let a = self.gen.next();
+        if a.is_some() {
+            self.arrivals += 1;
+        }
+        a
+    }
+
+    /// Queue-boundary faults for one raw arrival: how many copies reach
+    /// admission (0 = dropped, 2 = duplicated).  Both draws always
+    /// happen, so the stream position never depends on the outcomes.
+    fn arrival_copies(&mut self) -> u32 {
+        let dropped = self.queue_rng.chance(self.faults.drop_rate);
+        let duplicated =
+            self.queue_rng.chance(self.faults.duplicate_rate);
+        if dropped {
+            self.report.resilience.dropped += 1;
+            0
+        } else if duplicated {
+            self.report.resilience.duplicated += 1;
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Offer one copy to the queue boundary: bounded-queue admission
+    /// first, then the wait queue while the server is busy or the
+    /// batcher while idle (a size trigger dispatches immediately, back
+    /// to back).
+    fn offer(&mut self, q: QReq, t: u64) {
+        if let Some(cap) = self.res.queue_cap {
+            if self.pending_total() >= cap {
+                self.report.resilience.shed += 1;
+                return;
+            }
+        }
+        if self.busy_until.is_some() {
+            self.fifo.push_back(q);
+        } else if let Some(batch) = self.batcher.push(q) {
+            self.dispatch(batch, t);
+        }
+        self.note_queue_depth();
+    }
+
+    /// The DESCNet break-even rule extended with *observed*
+    /// reliability: once enough wake attempts have failed at or above
+    /// the policy threshold, stop gating for the rest of the run — no
+    /// more cold starts, no more exposure to wake faults, dependable
+    /// latency bought with idle leakage.
+    fn maybe_fall_back(&mut self, t: u64) {
+        let Some(threshold) = self.res.wake_fail_fallback else {
+            return;
+        };
+        if self.fallback {
+            return;
+        }
+        let s = &self.report.resilience;
+        if s.wake_attempts >= FALLBACK_MIN_ATTEMPTS
+            && s.wake_failures as f64
+                >= threshold * s.wake_attempts as f64
+        {
+            self.fallback = true;
+            self.report.resilience.fallback_at_cycle = Some(t);
+        }
+    }
+
+    /// Dispatch one assembled batch at `t`: expire requests past the
+    /// wait budget (their retry copies re-enter fresh), cap the batch
+    /// while throttled, then serve what remains.
+    fn dispatch(&mut self, mut batch: Vec<QReq>, t: u64) {
+        let mut retries: Vec<QReq> = Vec::new();
+        if let Some(tc) = self.timeout_cycles {
+            let stats = &mut self.report.resilience;
+            let budget = self.res.retry_budget;
+            batch.retain(|q| {
+                if t.saturating_sub(q.arrival) > tc {
+                    stats.timed_out += 1;
+                    if q.retries < budget {
+                        stats.retried += 1;
+                        retries.push(QReq {
+                            arrival: t,
+                            retries: q.retries + 1,
+                        });
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        if !batch.is_empty() {
+            if let Some(cap) = self.res.degraded_max_batch {
+                // graceful degradation: smaller batches bound the
+                // per-batch latency stretch while throttled
+                let cap = cap as usize;
+                if self.slow_windows.contains(t) && batch.len() > cap {
+                    for q in batch.drain(cap..).rev() {
+                        self.fifo.push_front(q);
+                    }
+                }
+            }
+        }
+        if !batch.is_empty() {
+            let done = self.serve(&batch, t);
+            self.busy_until = Some(done);
+        }
+        // retry copies re-enter after the launch: the server is busy
+        // now, so they wait in the queue; if everything expired they go
+        // back through the batcher (and may trigger a fresh batch)
+        for q in retries {
+            self.offer(q, t);
+        }
+        self.note_queue_depth();
+    }
+
+    /// Price and launch a non-empty batch at `t`; returns the
+    /// completion cycle.
+    fn serve(&mut self, batch: &[QReq], t: u64) -> u64 {
+        let n = batch.len();
+        let dma_degraded = self.svc.per_batch_degraded.is_some()
+            && self.dma_windows.contains(t);
+        let be = match (&self.svc.per_batch_degraded, dma_degraded) {
+            (Some(tab), true) => &tab[n - 1],
+            _ => &self.svc.per_batch[n - 1],
+        };
+        let k = pj_per_cycle_per_mw(self.svc.clock_hz);
+
+        // idle gap [idle_since, t): break-even power management
+        let be_cycles =
+            if self.fallback { None } else { self.break_even_eff };
+        let (gap_pj, cold) =
+            self.svc.idle_window_pj_with(t - self.idle_since, be_cycles);
+        self.report.idle_pj += gap_pj;
+        let mut wake_delay = 0u64;
+        if cold {
+            self.report.cold_starts += 1;
+            // transient wake failures: only a cold start issues wake
+            // requests at the serving boundary
+            let f = self.wake.sample_failures();
+            self.report.resilience.wake_attempts += u64::from(f) + 1;
+            if f > 0 {
+                self.report.resilience.wake_failures += u64::from(f);
+                wake_delay = self.wake.delay_cycles(f);
+                // every aborted attempt re-pays the cold premium, and
+                // the memory leaks at full power over the backoff wait
+                self.report.resilience.wake_retry_pj += f as f64
+                    * self.svc.cold_extra_pj
+                    + self.svc.idle_on_mw * wake_delay as f64 * k;
+            }
+            self.maybe_fall_back(t);
+        } else {
+            self.report.warm_starts += 1;
+            // the batch's BatchEnergy charges a cold power-on; a warm
+            // continuation only owes the steady-state wakeups
+            self.report.warm_saving_pj += self.svc.cold_extra_pj;
+        }
+
+        // thermal throttle stretches the service window; the extra
+        // occupancy leaks at full power (the sectors are serving)
+        let throttled = self.slow_windows.contains(t);
+        let mut latency = be.latency_cycles;
+        if throttled {
+            let scaled = (latency as f64 * self.faults.slowdown_factor)
+                .ceil() as u64;
+            self.report.resilience.throttle_extra_pj +=
+                self.svc.idle_on_mw * (scaled - latency) as f64 * k;
+            self.report.resilience.throttled_batches += 1;
+            latency = scaled;
+        }
+        if dma_degraded {
+            self.report.resilience.dma_degraded_batches += 1;
+        }
+
+        let done = t + wake_delay + latency;
+        self.report.batches += 1;
+        self.report.served += n as u64;
+        // clip to the window so busy/horizon can never exceed 100%
+        self.report.busy_cycles +=
+            done.min(self.horizon).saturating_sub(t.min(self.horizon));
+        self.report.batch_pj += be.total_pj();
+        for q in batch {
+            let lat_ms =
+                (done - q.arrival) as f64 / self.svc.clock_hz * 1.0e3;
+            if lat_ms > self.profile.slo_ms {
+                self.report.slo_violations += 1;
+            }
+            self.latencies_ms.push(lat_ms);
+        }
+        self.report.dispatches.push(DispatchRecord {
+            at_cycle: t,
+            done_cycle: done,
+            size: n,
+            cold,
+            batch_pj: be.total_pj(),
+            wake_delay_cycles: wake_delay,
+            dma_degraded,
+            throttled,
+        });
+        done
+    }
+
+    fn run(mut self) -> TrafficReport {
+        self.next_arrival = self.pull();
+        loop {
+            if let Some(done) = self.busy_until {
+                // while the accelerator is busy, copies wait in the queue
+                if let Some(a) = self.next_arrival {
+                    if a < done {
+                        for _ in 0..self.arrival_copies() {
+                            self.offer(QReq { arrival: a, retries: 0 }, a);
+                        }
+                        self.next_arrival = self.pull();
+                        continue;
+                    }
+                }
+                // completion
+                self.clock.advance_to(done);
+                self.busy_until = None;
+                self.idle_since = done;
+                if done < self.horizon {
+                    // drain the queue into the batcher; a size trigger
+                    // dispatches back-to-back (zero idle gap)
+                    while let Some(q) = self.fifo.pop_front() {
+                        if let Some(batch) = self.batcher.push(q) {
+                            self.dispatch(batch, done);
+                            if self.busy_until.is_some() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+
+            // idle: next event is the batch deadline or the next arrival
+            let now = self.clock.now();
+            let deadline = self.batcher.deadline_tick();
+            match (self.next_arrival, deadline) {
+                (None, None) => break,
+                (a, Some(d)) if a.is_none_or(|a| d <= a) => {
+                    // the wait trigger (a deadline that expired while
+                    // the server was busy fires immediately, at `now`)
+                    let t = d.max(now);
+                    if t >= self.horizon {
+                        break;
+                    }
+                    self.clock.advance_to(t);
+                    let batch =
+                        self.batcher.poll().expect("deadline implies batch");
+                    self.dispatch(batch, t);
+                }
+                (Some(a), _) => {
+                    self.clock.advance_to(a);
+                    for _ in 0..self.arrival_copies() {
+                        self.offer(QReq { arrival: a, retries: 0 }, a);
+                    }
+                    self.next_arrival = self.pull();
+                }
+                (None, Some(_)) => {
+                    unreachable!("covered by the guard above")
+                }
+            }
+        }
+
+        // trailing idle: the window from the last completion (or 0) to
+        // the horizon leaks too, under the same break-even policy —
+        // without it a lightly-loaded design would get its parked time
+        // for free.  No batch follows, so no cold/warm start is counted
+        // and nothing is credited back.
+        let tail = self.horizon.saturating_sub(self.idle_since);
+        if tail > 0 {
+            let be_cycles =
+                if self.fallback { None } else { self.break_even_eff };
+            self.report.idle_pj +=
+                self.svc.idle_window_pj_with(tail, be_cycles).0;
+        }
+
+        self.report.arrivals = self.arrivals;
+        self.report.queued = self.pending_total()
+            + u64::from(self.next_arrival.is_some());
+        self.report.peak_queue_bytes =
+            self.report.peak_queue_depth * self.svc.request_bytes;
+        self.report.latency_ms = Summary::from_samples(&self.latencies_ms);
+        self.report
+    }
+}
+
 /// Run one simulation: `profile`'s arrival stream against `svc`'s
-/// accelerator under the batching `policy`.  Pure function of its
-/// arguments — same inputs, same report, bit for bit.
+/// accelerator under the batching `policy`, fault-free with the
+/// do-nothing resilience policy.  Pure function of its arguments —
+/// same inputs, same report, bit for bit.
 pub fn simulate(
     svc: &ServiceModel,
     profile: &TrafficProfile,
     policy: &BatchPolicy,
-) -> TrafficReport {
+) -> Result<TrafficReport> {
+    simulate_with(
+        svc,
+        profile,
+        policy,
+        &FaultPlan::none(),
+        &ResiliencePolicy::none(),
+    )
+}
+
+/// [`simulate`] under a seeded fault plan and a resilience policy (see
+/// the module docs for the injection points).  The identity plan with
+/// the do-nothing policy reproduces [`simulate`] bit for bit.
+pub fn simulate_with(
+    svc: &ServiceModel,
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    faults: &FaultPlan,
+    resilience: &ResiliencePolicy,
+) -> Result<TrafficReport> {
+    faults.validate()?;
+    resilience.validate()?;
     let clock = VirtualClock::new(svc.clock_hz);
-    let mut batcher: Batcher<u64, VirtualClock> = Batcher::with_clock(
+    let batcher: Batcher<QReq, VirtualClock> = Batcher::with_clock(
         BatchPolicy {
             max_batch: policy.max_batch.clamp(1, svc.max_batch()),
             max_wait: policy.max_wait,
@@ -341,25 +965,37 @@ pub fn simulate(
     );
     let horizon =
         (profile.duration_secs * svc.clock_hz).round() as u64;
+    let gen = ArrivalGen::new(profile, svc.clock_hz)?;
 
-    let mut arrivals_gen = ArrivalGen::new(profile, svc.clock_hz);
-    let mut arrivals: u64 = 0;
-    let mut pull = |n: &mut u64| -> Option<u64> {
-        let a = arrivals_gen.next();
-        if a.is_some() {
-            *n += 1;
-        }
-        a
+    let dma_windows = if svc.per_batch_degraded.is_some()
+        && faults.dma_degrade_rate > 0.0
+    {
+        FaultWindows::generate(
+            &mut faults.dma_rng(),
+            faults.dma_degrade_rate,
+            faults.dma_degrade_dwell_secs,
+            horizon,
+            svc.clock_hz,
+        )
+    } else {
+        FaultWindows::none()
     };
-    let mut next_arrival = pull(&mut arrivals);
+    let slow_windows = if faults.slowdown_rate > 0.0 {
+        FaultWindows::generate(
+            &mut faults.slowdown_rng(),
+            faults.slowdown_rate,
+            faults.slowdown_dwell_secs,
+            horizon,
+            svc.clock_hz,
+        )
+    } else {
+        FaultWindows::none()
+    };
+    let resilience_active =
+        !faults.is_identity() || resilience.is_active();
+    let break_even_eff = svc.break_even_cycles_under(faults);
 
-    // server + queue state
-    let mut fifo: VecDeque<u64> = VecDeque::new();
-    let mut busy_until: Option<u64> = None;
-    let mut idle_since: u64 = 0;
-
-    // accounting
-    let mut report = TrafficReport {
+    let report = TrafficReport {
         scenario_label: svc.scenario.label(),
         profile: profile.clone(),
         horizon_cycles: horizon,
@@ -371,152 +1007,50 @@ pub fn simulate(
         slo_violations: 0,
         cold_starts: 0,
         warm_starts: 0,
-        break_even_cycles: svc.break_even_cycles,
+        break_even_cycles: break_even_eff,
         busy_cycles: 0,
+        peak_queue_depth: 0,
+        peak_queue_bytes: 0,
         batch_pj: 0.0,
         idle_pj: 0.0,
         warm_saving_pj: 0.0,
+        resilience: ResilienceStats {
+            dma_window_cycles: dma_windows.total_cycles(),
+            slowdown_window_cycles: slow_windows.total_cycles(),
+            ..ResilienceStats::default()
+        },
+        resilience_active,
+        faults_label: resilience_active.then(|| faults.label()),
         dispatches: Vec::new(),
     };
-    let mut latencies_ms: Vec<f64> = Vec::new();
 
-    // dispatch one batch at `t`; returns the completion cycle
-    let dispatch = |batch: Vec<u64>,
-                        t: u64,
-                        idle_since: u64,
-                        report: &mut TrafficReport,
-                        latencies_ms: &mut Vec<f64>|
-     -> u64 {
-        let n = batch.len();
-        let be = &svc.per_batch[n - 1];
-
-        // idle gap [idle_since, t): break-even power management
-        let (gap_pj, cold) = svc.idle_window_pj(t - idle_since);
-        report.idle_pj += gap_pj;
-        if cold {
-            report.cold_starts += 1;
-        } else {
-            report.warm_starts += 1;
-            // the batch's BatchEnergy charges a cold power-on; a warm
-            // continuation only owes the steady-state wakeups
-            report.warm_saving_pj += svc.cold_extra_pj;
-        }
-
-        let done = t + be.latency_cycles;
-        report.batches += 1;
-        report.served += n as u64;
-        // clip to the window so busy/horizon can never exceed 100%
-        report.busy_cycles +=
-            done.min(horizon).saturating_sub(t.min(horizon));
-        report.batch_pj += be.total_pj();
-        for &a in &batch {
-            let lat_ms = (done - a) as f64 / svc.clock_hz * 1.0e3;
-            if lat_ms > profile.slo_ms {
-                report.slo_violations += 1;
-            }
-            latencies_ms.push(lat_ms);
-        }
-        report.dispatches.push(DispatchRecord {
-            at_cycle: t,
-            done_cycle: done,
-            size: n,
-            cold,
-            batch_pj: be.total_pj(),
-        });
-        done
+    let el = EventLoop {
+        svc,
+        profile,
+        res: resilience,
+        faults,
+        clock,
+        batcher,
+        gen,
+        fifo: VecDeque::new(),
+        horizon,
+        timeout_cycles: resilience
+            .timeout_ms
+            .map(|ms| (ms / 1.0e3 * svc.clock_hz).round() as u64),
+        break_even_eff,
+        queue_rng: faults.queue_rng(),
+        wake: WakeFaultSampler::new(faults, svc.wakeup_cycles),
+        dma_windows,
+        slow_windows,
+        arrivals: 0,
+        next_arrival: None,
+        busy_until: None,
+        idle_since: 0,
+        fallback: false,
+        report,
+        latencies_ms: Vec::new(),
     };
-
-    loop {
-        if let Some(done) = busy_until {
-            // while the accelerator is busy, arrivals wait in the queue
-            if let Some(a) = next_arrival {
-                if a < done {
-                    fifo.push_back(a);
-                    next_arrival = pull(&mut arrivals);
-                    continue;
-                }
-            }
-            // completion
-            clock.advance_to(done);
-            busy_until = None;
-            idle_since = done;
-            if done < horizon {
-                // drain the queue into the batcher; a size trigger
-                // dispatches back-to-back (zero idle gap)
-                while let Some(a) = fifo.pop_front() {
-                    if let Some(batch) = batcher.push(a) {
-                        let end = dispatch(
-                            batch,
-                            done,
-                            idle_since,
-                            &mut report,
-                            &mut latencies_ms,
-                        );
-                        busy_until = Some(end);
-                        break;
-                    }
-                }
-            }
-            continue;
-        }
-
-        // idle: next event is the batch deadline or the next arrival
-        let now = clock.now();
-        let deadline = batcher.deadline_tick();
-        match (next_arrival, deadline) {
-            (None, None) => break,
-            (a, Some(d)) if a.is_none_or(|a| d <= a) => {
-                // the wait trigger (a deadline that expired while the
-                // server was busy fires immediately, at `now`)
-                let t = d.max(now);
-                if t >= horizon {
-                    break;
-                }
-                clock.advance_to(t);
-                let batch = batcher.poll().expect("deadline implies batch");
-                let end = dispatch(
-                    batch,
-                    t,
-                    idle_since,
-                    &mut report,
-                    &mut latencies_ms,
-                );
-                busy_until = Some(end);
-            }
-            (Some(a), _) => {
-                clock.advance_to(a);
-                if let Some(batch) = batcher.push(a) {
-                    let end = dispatch(
-                        batch,
-                        a,
-                        idle_since,
-                        &mut report,
-                        &mut latencies_ms,
-                    );
-                    busy_until = Some(end);
-                }
-                next_arrival = pull(&mut arrivals);
-            }
-            (None, Some(_)) => unreachable!("covered by the guard above"),
-        }
-    }
-
-    // trailing idle: the window from the last completion (or 0) to the
-    // horizon leaks too, under the same break-even policy — without it
-    // a lightly-loaded design would get its parked time for free.  No
-    // batch follows, so no cold/warm start is counted and nothing is
-    // credited back.
-    let tail = horizon.saturating_sub(idle_since);
-    if tail > 0 {
-        report.idle_pj += svc.idle_window_pj(tail).0;
-    }
-
-    report.arrivals = arrivals;
-    report.queued = fifo.len() as u64
-        + batcher.pending_len() as u64
-        + u64::from(next_arrival.is_some());
-    report.latency_ms = Summary::from_samples(&latencies_ms);
-    report
+    Ok(el.run())
 }
 
 /// Convenience: default batching policy with a scenario-appropriate cap.
@@ -544,6 +1078,16 @@ mod tests {
         }
     }
 
+    /// Copy conservation under faults (see module docs).
+    fn assert_conserved(r: &TrafficReport) {
+        let s = &r.resilience;
+        assert_eq!(
+            r.arrivals + s.duplicated + s.retried,
+            r.served + r.queued + s.shed + s.dropped + s.timed_out,
+            "copy conservation broken: {s:?}"
+        );
+    }
+
     #[test]
     fn service_model_tables_are_consistent() {
         let svc = model(&Scenario::default());
@@ -551,6 +1095,7 @@ mod tests {
         assert!(svc.gated);
         assert!(svc.cold_extra_pj > 0.0);
         assert!(svc.idle_off_mw < svc.idle_on_mw);
+        assert!(svc.request_bytes > 0);
         // plan-level reuse: a steady-state inference can only re-wake a
         // subset of what a cold start powers on
         assert!(svc.steady_wakeups <= svc.cold_wakeups);
@@ -562,6 +1107,19 @@ mod tests {
             assert!(w[0].latency_cycles < w[1].latency_cycles);
             assert!(w[0].total_pj() < w[1].total_pj());
         }
+        // instant DMA: no degraded table even under a degrading plan
+        let faulty = FaultPlan {
+            dma_degrade_rate: 0.5,
+            ..FaultPlan::none()
+        };
+        let svc2 = ServiceModel::with_faults(
+            &Evaluator::new(),
+            &Scenario::default(),
+            4,
+            Some(&faulty),
+        )
+        .unwrap();
+        assert!(svc2.per_batch_degraded.is_none());
     }
 
     #[test]
@@ -574,7 +1132,8 @@ mod tests {
         assert!(svc.break_even_cycles.is_none());
         assert_eq!(svc.cold_extra_pj, 0.0);
         assert_eq!(svc.idle_on_mw.to_bits(), svc.idle_off_mw.to_bits());
-        let r = simulate(&svc, &profile(2000.0), &default_policy(4));
+        let r =
+            simulate(&svc, &profile(2000.0), &default_policy(4)).unwrap();
         assert_eq!(r.cold_starts, 0);
         assert_eq!(r.warm_saving_pj, 0.0);
         assert!(r.served > 0);
@@ -583,8 +1142,10 @@ mod tests {
     #[test]
     fn conservation_and_basic_shape() {
         let svc = model(&Scenario::default());
-        let r = simulate(&svc, &profile(3000.0), &default_policy(4));
+        let r =
+            simulate(&svc, &profile(3000.0), &default_policy(4)).unwrap();
         assert_eq!(r.arrivals, r.served + r.queued);
+        assert_conserved(&r);
         assert_eq!(
             r.served,
             r.dispatches.iter().map(|d| d.size as u64).sum::<u64>()
@@ -593,10 +1154,233 @@ mod tests {
         assert_eq!(r.cold_starts + r.warm_starts, r.batches);
         assert!(r.mean_occupancy() >= 1.0);
         assert!(r.total_pj() > 0.0);
+        assert!(r.peak_queue_depth > 0, "3 kHz load never queued");
+        assert_eq!(
+            r.peak_queue_bytes,
+            r.peak_queue_depth * svc.request_bytes
+        );
+        // fault-free runs keep the historical report shape
+        assert!(!r.resilience_active);
+        assert_eq!(r.resilience, ResilienceStats::default());
         // dispatches never overlap and stay ordered
         for w in r.dispatches.windows(2) {
             assert!(w[0].done_cycle <= w[1].at_cycle);
         }
+    }
+
+    #[test]
+    fn identity_faults_are_bit_transparent() {
+        let svc = model(&Scenario::default());
+        let p = profile(3000.0);
+        let plain = simulate(&svc, &p, &default_policy(4)).unwrap();
+        let injected = simulate_with(
+            &svc,
+            &p,
+            &default_policy(4),
+            &FaultPlan::none(),
+            &ResiliencePolicy::none(),
+        )
+        .unwrap();
+        assert_eq!(
+            plain.to_json(svc.clock_hz).render(),
+            injected.to_json(svc.clock_hz).render()
+        );
+        assert_eq!(plain.total_pj().to_bits(), injected.total_pj().to_bits());
+    }
+
+    #[test]
+    fn queue_cap_sheds_load_and_bounds_the_backlog() {
+        let svc = model(&Scenario::default());
+        let p = profile(20000.0); // far past capacity
+        let unbounded =
+            simulate(&svc, &p, &default_policy(4)).unwrap();
+        let capped = simulate_with(
+            &svc,
+            &p,
+            &default_policy(4),
+            &FaultPlan::none(),
+            &ResiliencePolicy {
+                queue_cap: Some(8),
+                ..ResiliencePolicy::none()
+            },
+        )
+        .unwrap();
+        assert!(unbounded.peak_queue_depth > 8);
+        assert!(capped.peak_queue_depth <= 8);
+        assert!(capped.resilience.shed > 0);
+        assert!(capped.resilience_active);
+        assert_conserved(&capped);
+        assert_conserved(&unbounded);
+    }
+
+    #[test]
+    fn drops_duplicates_and_timeouts_conserve_copies() {
+        let svc = model(&Scenario::default());
+        let p = profile(4000.0);
+        let faults = FaultPlan {
+            drop_rate: 0.3,
+            duplicate_rate: 0.3,
+            seed: 5,
+            ..FaultPlan::none()
+        };
+        let res = ResiliencePolicy {
+            timeout_ms: Some(0.05),
+            retry_budget: 1,
+            ..ResiliencePolicy::none()
+        };
+        let r = simulate_with(
+            &svc,
+            &p,
+            &default_policy(4),
+            &faults,
+            &res,
+        )
+        .unwrap();
+        assert!(r.resilience.dropped > 0);
+        assert!(r.resilience.duplicated > 0);
+        assert_conserved(&r);
+        // same seed, same plan: byte-identical
+        let again = simulate_with(
+            &svc,
+            &p,
+            &default_policy(4),
+            &faults,
+            &res,
+        )
+        .unwrap();
+        assert_eq!(
+            r.to_json(svc.clock_hz).render(),
+            again.to_json(svc.clock_hz).render()
+        );
+    }
+
+    /// Trickle profile whose mean gap is 8× the plan's fault-extended
+    /// break-even point: nearly every dispatch sleeps first and wakes
+    /// cold, whatever the scenario's absolute break-even value is.
+    fn trickle(svc: &ServiceModel, faults: &FaultPlan) -> TrafficProfile {
+        let gap = svc.break_even_cycles_under(faults).unwrap() * 8;
+        TrafficProfile {
+            rate_per_sec: svc.clock_hz / gap as f64,
+            duration_secs: 40.0 * gap as f64 / svc.clock_hz,
+            seed: 9,
+            slo_ms: 1.0e9,
+            pattern: ArrivalPattern::Poisson,
+        }
+    }
+
+    #[test]
+    fn wake_failures_delay_cold_starts_and_cost_energy() {
+        let svc = model(&Scenario::default());
+        let faults = FaultPlan {
+            wake_fail_rate: 1.0,
+            max_wake_retries: 2,
+            ..FaultPlan::none()
+        };
+        let p = trickle(&svc, &faults);
+        let clean = simulate(&svc, &p, &default_policy(1)).unwrap();
+        let faulty = simulate_with(
+            &svc,
+            &p,
+            &default_policy(1),
+            &faults,
+            &ResiliencePolicy::none(),
+        )
+        .unwrap();
+        assert!(clean.cold_starts > 0, "trickle load never slept");
+        let s = &faulty.resilience;
+        assert!(s.wake_failures > 0);
+        assert_eq!(s.wake_failures, 2 * s.wake_attempts / 3);
+        assert!(s.wake_retry_pj > 0.0);
+        assert!(faulty.total_pj() > clean.total_pj());
+        assert!(
+            faulty
+                .dispatches
+                .iter()
+                .any(|d| d.cold && d.wake_delay_cycles > 0),
+            "no dispatch recorded a wake delay"
+        );
+        // the fault-extended break-even point is strictly later
+        assert!(
+            faulty.break_even_cycles.unwrap()
+                > clean.break_even_cycles.unwrap()
+        );
+    }
+
+    #[test]
+    fn fallback_stops_gating_after_observed_failures() {
+        let svc = model(&Scenario::default());
+        let faults = FaultPlan {
+            wake_fail_rate: 1.0,
+            max_wake_retries: 2,
+            ..FaultPlan::none()
+        };
+        let p = trickle(&svc, &faults);
+        let stubborn = simulate_with(
+            &svc,
+            &p,
+            &default_policy(1),
+            &faults,
+            &ResiliencePolicy::none(),
+        )
+        .unwrap();
+        let graceful = simulate_with(
+            &svc,
+            &p,
+            &default_policy(1),
+            &faults,
+            &ResiliencePolicy {
+                wake_fail_fallback: Some(0.5),
+                ..ResiliencePolicy::none()
+            },
+        )
+        .unwrap();
+        let at = graceful
+            .resilience
+            .fallback_at_cycle
+            .expect("rate-1.0 failures must trigger the fallback");
+        assert!(at < graceful.horizon_cycles);
+        // after the fallback no more cold starts (or wake faults) occur
+        assert!(graceful.cold_starts < stubborn.cold_starts);
+        assert!(
+            graceful.resilience.wake_failures
+                < stubborn.resilience.wake_failures
+        );
+        assert!(graceful
+            .dispatches
+            .iter()
+            .filter(|d| d.at_cycle > at)
+            .all(|d| !d.cold));
+    }
+
+    #[test]
+    fn throttle_windows_stretch_latency() {
+        let svc = model(&Scenario::default());
+        let faults = FaultPlan {
+            slowdown_rate: 0.8,
+            slowdown_factor: 8.0,
+            slowdown_dwell_secs: 0.01,
+            ..FaultPlan::none()
+        };
+        let r = simulate_with(
+            &svc,
+            &profile(2000.0),
+            &default_policy(4),
+            &faults,
+            &ResiliencePolicy::none(),
+        )
+        .unwrap();
+        let s = &r.resilience;
+        assert!(s.slowdown_window_cycles > 0);
+        assert!(s.throttled_batches > 0, "0.5 occupancy hit no dispatch");
+        assert!(s.throttle_extra_pj > 0.0);
+        for d in r.dispatches.iter().filter(|d| d.throttled) {
+            assert!(
+                d.done_cycle - d.at_cycle - d.wake_delay_cycles
+                    > svc.per_batch[d.size - 1].latency_cycles,
+                "throttled batch served at nominal latency"
+            );
+        }
+        assert_conserved(&r);
     }
 
     #[test]
@@ -608,7 +1392,7 @@ mod tests {
             duration_secs: 1.0e-4,
             ..profile(1.0)
         };
-        let r = simulate(&svc, &p, &default_policy(4));
+        let r = simulate(&svc, &p, &default_policy(4)).unwrap();
         assert_eq!(r.arrivals, r.served + r.queued);
         if r.arrivals == 0 {
             assert_eq!(r.batches, 0);
@@ -632,7 +1416,8 @@ mod tests {
             .build()
             .unwrap();
         let svc = model(&sc);
-        let r = simulate(&svc, &profile(2000.0), &default_policy(4));
+        let r =
+            simulate(&svc, &profile(2000.0), &default_policy(4)).unwrap();
         let k = 1.0e-3 / svc.clock_hz * 1.0e12;
         // busy cycles spill past the horizon when the last batch is
         // still in flight; only the in-window part displaces idle

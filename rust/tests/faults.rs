@@ -1,0 +1,345 @@
+//! End-to-end invariants of the deterministic fault-injection layer:
+//!
+//! 1. **identity transparency** — the all-zero [`FaultPlan`] plus the
+//!    do-nothing [`ResiliencePolicy`] leaves every existing report
+//!    bit-identical: traffic JSON across seeds/patterns/networks,
+//!    timeline totals across organizations, and serving-aware DSE
+//!    ranks;
+//! 2. **determinism under faults** — the same seeded plan renders
+//!    byte-identical JSON across two invocations;
+//! 3. **conservation** — every request copy ends in exactly one bucket
+//!    under combined queue faults and resilience;
+//! 4. **the pinned SLO flip** — at a high wake-failure rate the gated
+//!    design loses SLO-feasibility, and the all-on fallback policy
+//!    restores it (the DESCNet break-even rule extended to a
+//!    reliability regime).
+
+use std::time::Duration;
+
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::capsnet::CapsNetConfig;
+use capstore::capstore::arch::{CapStoreArch, Organization};
+use capstore::coordinator::BatchPolicy;
+use capstore::dse::Explorer;
+use capstore::faults::{FaultPlan, ResiliencePolicy};
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::timeline::{DmaModel, DmaPolicy, Timeline, TimelinePolicy};
+use capstore::traffic::{
+    rank_for_traffic, rank_for_traffic_under, simulate, simulate_with,
+    ArrivalPattern, ServiceModel, TrafficProfile, SLO_MISS_BUDGET,
+};
+
+fn policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_millis(2) }
+}
+
+fn assert_conserved(r: &capstore::traffic::TrafficReport, tag: &str) {
+    let s = &r.resilience;
+    assert_eq!(
+        r.arrivals + s.duplicated + s.retried,
+        r.served + r.queued + s.shed + s.dropped + s.timed_out,
+        "{tag}: copy conservation broken: {s:?}"
+    );
+}
+
+#[test]
+fn identity_plan_leaves_traffic_reports_bit_identical() {
+    // property: across networks, seeds, and arrival patterns, the
+    // identity injection path renders the same bytes as the plain one
+    let ev = Evaluator::new();
+    for cfg in CapsNetConfig::all() {
+        let sc = Scenario { network: cfg.clone(), ..Scenario::default() };
+        let svc = ServiceModel::new(&ev, &sc, 4).unwrap();
+        for seed in [1u64, 7, 1234] {
+            for pattern in ArrivalPattern::all() {
+                let p = TrafficProfile {
+                    pattern,
+                    rate_per_sec: 2000.0,
+                    seed,
+                    duration_secs: 0.02,
+                    slo_ms: 10.0,
+                };
+                let plain = simulate(&svc, &p, &policy(4)).unwrap();
+                let injected = simulate_with(
+                    &svc,
+                    &p,
+                    &policy(4),
+                    &FaultPlan::none(),
+                    &ResiliencePolicy::none(),
+                )
+                .unwrap();
+                assert_eq!(
+                    plain.to_json(svc.clock_hz).render(),
+                    injected.to_json(svc.clock_hz).render(),
+                    "{} seed {seed} {pattern:?}: identity not transparent",
+                    cfg.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identity_plan_leaves_timeline_totals_bit_identical() {
+    let model = EnergyModel::new(CapsNetConfig::mnist());
+    let ctx = model.context();
+    for org in Organization::all() {
+        let arch =
+            CapStoreArch::build_default(org, &model.req, &model.tech)
+                .unwrap();
+        let policy = TimelinePolicy::default();
+        let base = Timeline::build(&ctx, &arch, &model.req, &policy);
+        let id = Timeline::build_with_faults(
+            &ctx,
+            &arch,
+            &model.req,
+            &policy,
+            &FaultPlan::none(),
+        );
+        let tag = org.label();
+        assert_eq!(base.total_cycles, id.total_cycles, "{tag}");
+        assert_eq!(base.not_ready_cycles, id.not_ready_cycles, "{tag}");
+        assert_eq!(base.domains, id.domains, "{tag}: segments diverged");
+        assert_eq!(
+            base.static_pj().to_bits(),
+            id.static_pj().to_bits(),
+            "{tag}: static energy"
+        );
+        assert_eq!(
+            base.wakeup_pj().to_bits(),
+            id.wakeup_pj().to_bits(),
+            "{tag}: wakeup energy"
+        );
+        assert_eq!(id.failed_wakes(), 0, "{tag}");
+        assert_eq!(id.failed_wake_pj().to_bits(), 0f64.to_bits(), "{tag}");
+    }
+}
+
+#[test]
+fn identity_plan_leaves_dse_ranks_identical() {
+    let ex = Explorer::new(CapsNetConfig::mnist());
+    let front = Explorer::pareto(&ex.sweep().unwrap());
+    let ev = Evaluator::new();
+    let base = Scenario::default();
+    let svc0 = ServiceModel::new(&ev, &base, 8).unwrap();
+    let capacity = svc0.clock_hz / svc0.per_batch[0].latency_cycles as f64;
+    let profiles: Vec<TrafficProfile> = [0.01, 2.0]
+        .iter()
+        .map(|&frac| TrafficProfile {
+            pattern: ArrivalPattern::Poisson,
+            rate_per_sec: frac * capacity,
+            seed: 7,
+            duration_secs: 200.0 / (frac * capacity),
+            slo_ms: 1.0e6,
+        })
+        .collect();
+    let plain =
+        rank_for_traffic(&ev, &base, &front, &profiles, &policy(8))
+            .unwrap();
+    let injected = rank_for_traffic_under(
+        &ev,
+        &base,
+        &front,
+        &profiles,
+        &policy(8),
+        &FaultPlan::none(),
+        &ResiliencePolicy::none(),
+    )
+    .unwrap();
+    assert_eq!(plain.len(), injected.len());
+    for (a, b) in plain.iter().zip(&injected) {
+        assert!(
+            a.point.bit_eq(&b.point),
+            "identity plan moved a winner: {:?} vs {:?}",
+            a.point,
+            b.point
+        );
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(
+            a.report.to_json(svc0.clock_hz).render(),
+            b.report.to_json(svc0.clock_hz).render(),
+            "winner report diverged under the identity plan"
+        );
+    }
+}
+
+#[test]
+fn active_faults_are_byte_identical_across_invocations() {
+    // a serial-DMA scenario so the degradation windows have a table to
+    // re-price from, plus every other fault class and an active policy
+    let sc = Scenario {
+        dma: DmaPolicy {
+            model: DmaModel::Serial,
+            bandwidth_bytes_per_cycle: 16,
+        },
+        ..Scenario::default()
+    };
+    let faults = FaultPlan {
+        seed: 99,
+        wake_fail_rate: 0.3,
+        dma_degrade_rate: 0.3,
+        dma_degrade_dwell_secs: 0.005,
+        slowdown_rate: 0.3,
+        slowdown_dwell_secs: 0.005,
+        drop_rate: 0.05,
+        duplicate_rate: 0.05,
+        ..FaultPlan::none()
+    };
+    let resilience = ResiliencePolicy {
+        queue_cap: Some(64),
+        timeout_ms: Some(5.0),
+        retry_budget: 2,
+        wake_fail_fallback: Some(0.9),
+        degraded_max_batch: Some(2),
+    };
+    let ev = Evaluator::new();
+    let svc =
+        ServiceModel::with_faults(&ev, &sc, 4, Some(&faults)).unwrap();
+    assert!(
+        svc.per_batch_degraded.is_some(),
+        "serial DMA + degrade rate must build the degraded table"
+    );
+    let p = TrafficProfile {
+        pattern: ArrivalPattern::Bursty,
+        rate_per_sec: 4000.0,
+        seed: 3,
+        duration_secs: 0.05,
+        slo_ms: 5.0,
+    };
+    let run = || {
+        simulate_with(&svc, &p, &policy(4), &faults, &resilience).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        a.to_json(svc.clock_hz).render(),
+        b.to_json(svc.clock_hz).render(),
+        "same seed, same plan: reports diverged"
+    );
+    assert!(a.resilience_active);
+    assert_conserved(&a, "combined faults");
+    // a different fault seed perturbs the run
+    let other = simulate_with(
+        &svc,
+        &p,
+        &policy(4),
+        &FaultPlan { seed: 100, ..faults.clone() },
+        &resilience,
+    )
+    .unwrap();
+    assert_ne!(
+        a.to_json(svc.clock_hz).render(),
+        other.to_json(svc.clock_hz).render(),
+        "fault seed is ignored"
+    );
+}
+
+#[test]
+fn gated_design_loses_slo_feasibility_to_the_all_on_fallback() {
+    // The pinned acceptance scenario.  A gated design at trickle load
+    // sleeps between requests, so every dispatch wakes cold; at a 0.9
+    // wake-failure rate most cold starts burn through retries and blow
+    // a 2x-service-time SLO.  Without resilience the design is
+    // SLO-infeasible.  The all-on fallback observes the failure rate,
+    // stops gating, and the rest of the run serves warm at nominal
+    // latency — feasible again, at the cost of idle leakage.
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let svc = ServiceModel::new(&ev, &sc, 1).unwrap();
+    assert!(svc.gated, "the pinned scenario must gate");
+    let service = svc.per_batch[0].latency_cycles;
+    let faults = FaultPlan {
+        wake_fail_rate: 0.9,
+        max_wake_retries: 3,
+        // one service time per watchdog window: the first retry already
+        // doubles the request latency
+        wake_timeout_cycles: service,
+        ..FaultPlan::none()
+    };
+    // mean gap 8x the fault-extended break-even point: essentially
+    // every dispatch sleeps first, whatever the absolute numbers are
+    let gap = svc.break_even_cycles_under(&faults).unwrap() * 8;
+    let rate = svc.clock_hz / gap as f64;
+    let profile = TrafficProfile {
+        pattern: ArrivalPattern::Poisson,
+        rate_per_sec: rate,
+        seed: 5,
+        // ~400 arrivals: a handful of pre-fallback misses cannot break
+        // the 1% budget on their own
+        duration_secs: 400.0 / rate,
+        slo_ms: 2.0 * service as f64 / svc.clock_hz * 1.0e3,
+    };
+    let pol = policy(1);
+
+    let stubborn = simulate_with(
+        &svc,
+        &profile,
+        &pol,
+        &faults,
+        &ResiliencePolicy::none(),
+    )
+    .unwrap();
+    assert!(stubborn.served > 200, "trickle run served too little");
+    assert!(stubborn.cold_starts > 100, "trickle load stayed warm");
+    assert!(
+        stubborn.slo_violation_fraction() > SLO_MISS_BUDGET,
+        "wake failures at 0.9 left the gated design feasible \
+         ({} violations / {} served)",
+        stubborn.slo_violations,
+        stubborn.served
+    );
+
+    let graceful = simulate_with(
+        &svc,
+        &profile,
+        &pol,
+        &faults,
+        &ResiliencePolicy {
+            wake_fail_fallback: Some(0.25),
+            ..ResiliencePolicy::none()
+        },
+    )
+    .unwrap();
+    let at = graceful
+        .resilience
+        .fallback_at_cycle
+        .expect("0.9 failure rate must engage the fallback");
+    assert!(
+        graceful.slo_violation_fraction() <= SLO_MISS_BUDGET,
+        "the all-on fallback did not restore feasibility \
+         ({} violations / {} served, fallback at {at})",
+        graceful.slo_violations,
+        graceful.served
+    );
+    // the flip is the point: same design, same faults — the policy is
+    // what separates infeasible from feasible
+    assert!(graceful.cold_starts < stubborn.cold_starts);
+    assert!(
+        graceful.resilience.wake_failures
+            < stubborn.resilience.wake_failures
+    );
+    // and the reliability is bought with leakage, not magic: holding
+    // the memory awake costs more idle energy than gated sleep would
+    assert!(graceful.idle_pj > stubborn.idle_pj);
+    assert_conserved(&stubborn, "stubborn");
+    assert_conserved(&graceful, "graceful");
+}
+
+#[test]
+fn fault_plan_toml_round_trips_through_the_scenario() {
+    // [faults] in scenario TOML: parse -> to_toml -> parse is exact
+    let sc = Scenario {
+        faults: Some(FaultPlan {
+            seed: 17,
+            wake_fail_rate: 0.25,
+            drop_rate: 0.01,
+            ..FaultPlan::none()
+        }),
+        ..Scenario::default()
+    };
+    let text = sc.to_toml();
+    let back = Scenario::parse(&text).unwrap();
+    assert_eq!(back.faults, sc.faults);
+    let again = Scenario::parse(&back.to_toml()).unwrap();
+    assert_eq!(again, back);
+}

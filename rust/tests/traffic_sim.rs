@@ -51,7 +51,7 @@ fn requests_are_conserved_for_every_pattern_and_load() {
                 pattern,
                 ..profile_at(&svc, frac, 300, 11)
             };
-            let r = simulate(&svc, &p, &policy(8));
+            let r = simulate(&svc, &p, &policy(8)).unwrap();
             assert!(r.arrivals > 0, "{pattern:?} x{frac}: no arrivals");
             assert_eq!(
                 r.arrivals,
@@ -77,7 +77,7 @@ fn energy_is_additive_in_batch_energy_terms_bit_for_bit() {
     let sc = Scenario::default();
     let svc = ServiceModel::new(&ev, &sc, 8).unwrap();
     let p = profile_at(&svc, 1.2, 400, 7);
-    let r = simulate(&svc, &p, &policy(8));
+    let r = simulate(&svc, &p, &policy(8)).unwrap();
     assert!(r.batches > 1);
 
     // (1) the report total is the dispatch-order sum of batch_pj terms
@@ -122,8 +122,8 @@ fn same_seed_same_report_different_seed_different_arrivals() {
             pattern,
             ..profile_at(&svc, 0.6, 250, 21)
         };
-        let a = simulate(&svc, &p, &policy(8));
-        let b = simulate(&svc, &p, &policy(8));
+        let a = simulate(&svc, &p, &policy(8)).unwrap();
+        let b = simulate(&svc, &p, &policy(8)).unwrap();
         assert_eq!(
             a.to_json(svc.clock_hz).render(),
             b.to_json(svc.clock_hz).render(),
@@ -133,7 +133,8 @@ fn same_seed_same_report_different_seed_different_arrivals() {
             &svc,
             &TrafficProfile { seed: 22, ..p.clone() },
             &policy(8),
-        );
+        )
+        .unwrap();
         assert_ne!(
             a.to_json(svc.clock_hz).render(),
             c.to_json(svc.clock_hz).render(),
@@ -153,7 +154,7 @@ fn higher_rate_means_fewer_cold_starts() {
     assert!(svc.break_even_cycles.is_some(), "PG-SEP must gate");
     let cold = |frac: f64| {
         let p = profile_at(&svc, frac, 300, 13);
-        let r = simulate(&svc, &p, &policy(8));
+        let r = simulate(&svc, &p, &policy(8)).unwrap();
         assert_eq!(r.cold_starts + r.warm_starts, r.batches);
         r.cold_starts
     };
@@ -183,13 +184,13 @@ fn slo_violations_appear_under_overload() {
     // no violations
     let mut light = profile_at(&svc, 0.1, 150, 17);
     light.slo_ms = 50.0 * service_ms + 5.0;
-    let r_light = simulate(&svc, &light, &policy(8));
+    let r_light = simulate(&svc, &light, &policy(8)).unwrap();
     assert_eq!(r_light.slo_violations, 0, "light load misses its SLO");
     // overload with the tightest possible SLO (one service time): the
     // queueing tail blows past it
     let mut heavy = profile_at(&svc, 4.0, 300, 17);
     heavy.slo_ms = service_ms;
-    let r_heavy = simulate(&svc, &heavy, &policy(8));
+    let r_heavy = simulate(&svc, &heavy, &policy(8)).unwrap();
     assert!(
         r_heavy.slo_violation_fraction() > 0.5,
         "overload at {}x: only {} violations",

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Regenerate the machine-readable bench snapshots under
+# rust/benches/snapshots/.
+#
+# Each JSON bench prints its result as the last flush-left JSON line of
+# its stdout; this script captures that line per bench into
+# BENCH_<name>.json.  CI runs it on every PR and uploads the refreshed
+# snapshots as an artifact, so per-PR numbers are persisted without
+# committing machine-dependent timings to the repo (the committed
+# placeholders carry `null` timings and record the schema only — see
+# rust/benches/snapshots/README.md).
+#
+# Usage: tools/bench_snapshot.sh [outdir]   (default: the committed dir)
+
+set -eu
+cd "$(dirname "$0")/.."
+
+outdir="${1:-rust/benches/snapshots}"
+mkdir -p "$outdir"
+
+for bench in dse_throughput timeline_build traffic_sim; do
+  echo "== $bench" >&2
+  json="$(cargo bench --manifest-path rust/Cargo.toml --bench "$bench" \
+            2>/dev/null | grep '^{' | tail -1)"
+  if [ -z "$json" ]; then
+    echo "bench $bench printed no JSON result line" >&2
+    exit 1
+  fi
+  printf '%s\n' "$json" > "$outdir/BENCH_$bench.json"
+  echo "   -> $outdir/BENCH_$bench.json" >&2
+done
+
+echo "snapshots written to $outdir" >&2
