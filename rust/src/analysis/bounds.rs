@@ -1,0 +1,260 @@
+//! Statically derived timing and gating bounds.
+//!
+//! Everything here is computed from the arch-independent
+//! [`SweepContext`] plus CACTI arithmetic — no [`crate::timeline::Timeline`]
+//! is ever constructed and no event loop runs.  Two consumers share the
+//! results:
+//!
+//! * the rule engine in [`crate::analysis::check`], which compares the
+//!   bounds against a scenario's declared SLO/rate before anything is
+//!   simulated;
+//! * the sweep engine, which accepts a [`LatencyBound`] as an
+//!   *admissible* pruning predicate — the bound is the exact
+//!   `DesignPoint::latency_cycles` value (both come from the same
+//!   `timeline::place()` schedule), so pruning with it is bit-identical
+//!   to post-hoc filtering of the full sweep.
+
+use crate::analysis::context::SweepContext;
+use crate::capstore::arch::CapStoreArch;
+use crate::capstore::pmu::GatingSchedule;
+use crate::timeline::{placed_latency_cycles, DmaPolicy};
+
+/// pJ accumulated per cycle per mW at the array clock — the same
+/// conversion the timeline and the serving simulator use for leakage
+/// integration (1.0 at 1 GHz).
+pub fn pj_per_cycle_per_mw(clock_hz: f64) -> f64 {
+    1.0e-3 / clock_hz * 1.0e12
+}
+
+/// Static latency (cycles) of one `batch`-deep inference under `dma` —
+/// the exact value `dse::sweep` records as `DesignPoint::latency_cycles`
+/// for `batch == 1`.  Architecture-free.
+pub fn dma_latency_cycles(
+    ctx: &SweepContext,
+    dma: &DmaPolicy,
+    batch: u64,
+) -> u64 {
+    placed_latency_cycles(
+        &ctx.op_kinds,
+        &ctx.op_cycles,
+        &ctx.op_offchip,
+        dma,
+        batch,
+    )
+}
+
+/// The static service-time facts of one scenario's (network, dma) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StaticTiming {
+    /// Latency of a single inference, cycles (the service floor: DMA
+    /// stalls included, queueing and batching can only add to it).
+    pub service_cycles: u64,
+    /// Steady-state cycles per additional pipelined inference
+    /// (`latency(batch 2) - latency(batch 1)`, floored at 1) — the
+    /// throughput-defining increment.
+    pub steady_cycles: u64,
+    /// Array clock, Hz.
+    pub clock_hz: f64,
+}
+
+impl StaticTiming {
+    /// Derive the timing bounds from a shared context and DMA policy.
+    pub fn for_context(ctx: &SweepContext, dma: &DmaPolicy) -> StaticTiming {
+        let service = dma_latency_cycles(ctx, dma, 1);
+        let two = dma_latency_cycles(ctx, dma, 2);
+        StaticTiming {
+            service_cycles: service,
+            steady_cycles: two.saturating_sub(service).max(1),
+            clock_hz: ctx.clock_hz,
+        }
+    }
+
+    /// Service floor in seconds.
+    pub fn service_secs(&self) -> f64 {
+        self.service_cycles as f64 / self.clock_hz
+    }
+
+    /// Service floor in milliseconds (what an SLO compares against).
+    pub fn service_ms(&self) -> f64 {
+        self.service_secs() * 1.0e3
+    }
+
+    /// Maximum sustainable arrival rate, inferences per second, at
+    /// perfect back-to-back pipelining.
+    pub fn capacity_per_sec(&self) -> f64 {
+        self.clock_hz / self.steady_cycles as f64
+    }
+}
+
+/// Static power-gating economics of one architecture: the same numbers
+/// `traffic::ServiceModel` derives, computed without an `Evaluation`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatingBounds {
+    /// Leakage with every sector ON, mW.
+    pub idle_on_mw: f64,
+    /// Leakage with every sector gated OFF (residual), mW.
+    pub idle_off_mw: f64,
+    /// Cold-start wakeup premium over a steady-state batch, pJ.
+    pub cold_extra_pj: f64,
+    /// Idle cycles after which sleeping beats staying on; `None` for
+    /// ungated organizations.
+    pub break_even_cycles: Option<u64>,
+}
+
+/// Derive the gating economics from the architecture and its gating
+/// schedule — CACTI arithmetic only, mirroring
+/// `ServiceModel::with_faults` term for term.
+pub fn gating_bounds(
+    arch: &CapStoreArch,
+    plan: &GatingSchedule,
+    clock_hz: f64,
+) -> GatingBounds {
+    let gated = arch.organization.gated();
+    let pg = &arch.pg_model;
+    let idle_on_mw: f64 =
+        arch.macros.iter().map(|m| m.costs.leakage_mw).sum();
+    let idle_off_mw = if gated {
+        idle_on_mw * pg.off_leakage_fraction
+    } else {
+        idle_on_mw
+    };
+    let cold_extra_pj = if gated {
+        plan.wakeup_energy_pj(pg) - plan.wakeup_energy_steady_pj(pg)
+    } else {
+        0.0
+    };
+    let k = pj_per_cycle_per_mw(clock_hz);
+    let delta_mw = idle_on_mw - idle_off_mw;
+    let break_even_cycles = (gated && delta_mw > 0.0)
+        .then(|| (cold_extra_pj / (delta_mw * k)).ceil() as u64);
+    GatingBounds {
+        idle_on_mw,
+        idle_off_mw,
+        cold_extra_pj,
+        break_even_cycles,
+    }
+}
+
+/// An admissible latency predicate for the sweep engine: a design point
+/// is kept iff its static latency does not exceed the ceiling.  The
+/// unconstrained bound admits everything, making `sweep_bounded` with
+/// it bit-identical to the plain sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LatencyBound {
+    /// Inclusive ceiling on single-inference latency, cycles; `None`
+    /// admits every point.
+    pub max_latency_cycles: Option<u64>,
+}
+
+impl LatencyBound {
+    /// The bound that admits everything.
+    pub fn unconstrained() -> LatencyBound {
+        LatencyBound { max_latency_cycles: None }
+    }
+
+    /// Admit points whose latency is at most `cycles`.
+    pub fn at_most(cycles: u64) -> LatencyBound {
+        LatencyBound { max_latency_cycles: Some(cycles) }
+    }
+
+    /// The ceiling implied by an SLO: a design whose *single-inference*
+    /// latency already exceeds the SLO can never serve a request inside
+    /// it (queueing and batching only add latency).
+    pub fn from_slo(slo_ms: f64, clock_hz: f64) -> LatencyBound {
+        LatencyBound {
+            max_latency_cycles: Some(
+                (slo_ms * 1.0e-3 * clock_hz).floor() as u64
+            ),
+        }
+    }
+
+    pub fn admits(&self, latency_cycles: u64) -> bool {
+        match self.max_latency_cycles {
+            Some(max) => latency_cycles <= max,
+            None => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::breakdown::EnergyModel;
+    use crate::capsnet::CapsNetConfig;
+    use crate::capstore::arch::Organization;
+    use crate::memsim::cacti::Technology;
+    use crate::timeline::DmaModel;
+
+    fn ctx() -> SweepContext {
+        EnergyModel::new(CapsNetConfig::mnist()).context()
+    }
+
+    #[test]
+    fn instant_dma_timing_matches_context_totals() {
+        let ctx = ctx();
+        let t = StaticTiming::for_context(&ctx, &DmaPolicy::default());
+        // hidden transfers: the service floor is exactly the schedule
+        assert_eq!(t.service_cycles, ctx.total_cycles);
+        assert_eq!(t.steady_cycles, ctx.total_cycles);
+        assert!(t.service_ms() > 0.0);
+        assert!(t.capacity_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn serial_dma_extends_the_floor() {
+        let ctx = ctx();
+        let instant = StaticTiming::for_context(&ctx, &DmaPolicy::default());
+        let serial = StaticTiming::for_context(
+            &ctx,
+            &DmaPolicy {
+                model: DmaModel::Serial,
+                bandwidth_bytes_per_cycle: 16,
+            },
+        );
+        assert!(serial.service_cycles > instant.service_cycles);
+        assert!(serial.capacity_per_sec() < instant.capacity_per_sec());
+    }
+
+    #[test]
+    fn gating_bounds_match_gatedness() {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        for org in [
+            Organization::Sep { gated: true },
+            Organization::Sep { gated: false },
+        ] {
+            let arch = CapStoreArch::build_default(
+                org,
+                &model.req,
+                &Technology::default(),
+            )
+            .unwrap();
+            let plan =
+                GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+            let gb = gating_bounds(&arch, &plan, ctx.clock_hz);
+            if org.gated() {
+                assert!(gb.break_even_cycles.is_some());
+                assert!(gb.idle_off_mw < gb.idle_on_mw);
+                assert!(gb.cold_extra_pj > 0.0);
+            } else {
+                assert!(gb.break_even_cycles.is_none());
+                assert_eq!(
+                    gb.idle_on_mw.to_bits(),
+                    gb.idle_off_mw.to_bits()
+                );
+                assert_eq!(gb.cold_extra_pj, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_bound_semantics() {
+        assert!(LatencyBound::unconstrained().admits(u64::MAX));
+        let b = LatencyBound::at_most(100);
+        assert!(b.admits(100));
+        assert!(!b.admits(101));
+        // 1 ms at 1 GHz = 1e6 cycles
+        let slo = LatencyBound::from_slo(1.0, 1.0e9);
+        assert_eq!(slo.max_latency_cycles, Some(1_000_000));
+    }
+}

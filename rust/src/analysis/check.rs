@@ -1,0 +1,421 @@
+//! The rule-driven static checker behind `capstore check`.
+//!
+//! [`check_scenario`] inspects a resolved [`Scenario`] (plus, when one
+//! came from a file, its parsed [`TomlDoc`] — some rules only make
+//! sense against keys the user actually wrote) and returns a
+//! [`CheckReport`]: diagnostics with stable codes from
+//! [`crate::analysis::diag`] and the static bounds that justified them.
+//! Nothing here builds a `Timeline` or runs the event loop — the whole
+//! point is to reject infeasible work *before* a 40-minute sweep or a
+//! long traffic run, and `tests/analysis_check.rs` pins that via
+//! `Timeline::build_count`.
+
+use crate::analysis::bounds::{
+    gating_bounds, GatingBounds, StaticTiming,
+};
+use crate::analysis::breakdown::EnergyModel;
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::requirements::RequirementsAnalysis;
+use crate::capstore::arch::CapStoreArch;
+use crate::capstore::pmu::GatingSchedule;
+use crate::config::toml::TomlDoc;
+use crate::scenario::{DmaModel, Scenario};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Pad threshold for CAP001: quantization must at least double the
+/// demand AND waste at least this many bytes before we warn — rounding
+/// a few hundred bytes up to a 1 KiB quantum is business as usual.
+const QUANTIZATION_WASTE_FLOOR_BYTES: u64 = 4096;
+
+/// The statically derived facts a check run reports alongside its
+/// diagnostics (and that several rules compare against).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundsSummary {
+    /// Single-inference service floor, cycles (DMA stalls included).
+    pub service_cycles: u64,
+    /// Service floor, milliseconds.
+    pub service_ms: f64,
+    /// Maximum sustainable arrival rate, inferences/second.
+    pub capacity_per_sec: f64,
+    /// Gating break-even idle window, cycles (`None` when ungated).
+    pub break_even_cycles: Option<u64>,
+}
+
+impl BoundsSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("service_cycles", Json::Num(self.service_cycles as f64)),
+            ("service_ms", Json::Num(self.service_ms)),
+            ("capacity_per_sec", Json::Num(self.capacity_per_sec)),
+            (
+                "break_even_cycles",
+                match self.break_even_cycles {
+                    Some(be) => Json::Num(be as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// What [`check_scenario`] found for one scenario.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// The checked scenario's label (`Scenario::label`).
+    pub label: String,
+    pub diagnostics: Vec<Diagnostic>,
+    pub bounds: BoundsSummary,
+}
+
+impl CheckReport {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity.is_error()).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.len() - self.errors()
+    }
+
+    /// Whether the scenario is admissible (warnings do not block).
+    pub fn passed(&self) -> bool {
+        self.errors() == 0
+    }
+}
+
+/// Run every scenario-scoped rule.  `doc` is the parsed TOML the
+/// scenario came from, when it came from a file: the ignored-key rule
+/// (CAP002) only fires on keys the user actually wrote, so a scenario
+/// assembled purely from defaults and flags never trips it.
+pub fn check_scenario(
+    sc: &Scenario,
+    doc: Option<&TomlDoc>,
+) -> Result<CheckReport> {
+    let model = EnergyModel::new(sc.network.clone());
+    let ctx = model.context();
+    let tech = sc.tech.technology();
+    let arch = CapStoreArch::build(
+        sc.organization,
+        &model.req,
+        &tech,
+        sc.geometry.banks,
+        sc.geometry.sectors,
+    )?;
+    let plan = GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+    let timing = StaticTiming::for_context(&ctx, &sc.dma);
+    let gb = gating_bounds(&arch, &plan, ctx.clock_hz);
+    let gated = sc.organization.gated();
+
+    let mut diags = Vec::new();
+
+    // CAP001 — bank x sector quantization inflates a macro far past
+    // its application demand (the paper's sizing is per-byte; the
+    // physical macro rounds up to banks x sectors granules).
+    let eff_sectors =
+        sc.organization.effective_sectors(sc.geometry.sectors);
+    for (role, want, _ports) in
+        CapStoreArch::sizing_targets(sc.organization, &model.req)
+    {
+        let padded = RequirementsAnalysis::bankable(
+            want,
+            sc.geometry.banks,
+            eff_sectors,
+        );
+        let floor = want.max(1);
+        if padded >= 2 * floor
+            && padded - want >= QUANTIZATION_WASTE_FLOOR_BYTES
+        {
+            diags.push(Diagnostic::new(
+                "CAP001",
+                "[memory] banks/sectors",
+                format!(
+                    "{} macro: {} B of demand padded to {} B by the \
+                     {} x {} bank/sector quantum — shrink banks or \
+                     sectors",
+                    role.label(),
+                    want,
+                    padded,
+                    sc.geometry.banks,
+                    eff_sectors,
+                ),
+            ));
+        }
+    }
+
+    // CAP002 — keys the user wrote that the resolved scenario ignores.
+    if let Some(doc) = doc {
+        if doc.get("memory", "sectors").is_some() && !gated {
+            diags.push(Diagnostic::new(
+                "CAP002",
+                "[memory] sectors",
+                format!(
+                    "sectors has no effect: organization {} is ungated \
+                     and collapses to 1 sector at build time",
+                    sc.organization.label()
+                ),
+            ));
+        }
+        if doc.get("dma", "bandwidth_bytes_per_cycle").is_some()
+            && sc.dma.model == DmaModel::Instant
+        {
+            diags.push(Diagnostic::new(
+                "CAP002",
+                "[dma] bandwidth_bytes_per_cycle",
+                "bandwidth has no effect: the instant DMA model hides \
+                 all transfers",
+            ));
+        }
+        if doc.get("gating", "lookahead_cycles").is_some()
+            && sc.gating.lookahead_cycles > 0
+            && !gated
+        {
+            diags.push(Diagnostic::new(
+                "CAP002",
+                "[gating] lookahead_cycles",
+                format!(
+                    "lookahead has no effect: organization {} has no \
+                     sectors to pre-wake",
+                    sc.organization.label()
+                ),
+            ));
+        }
+    }
+
+    // Traffic rules: compare the declared workload against the static
+    // service bounds.
+    if let Some(t) = &sc.traffic {
+        // CAP003 — an SLO below the single-inference service floor is
+        // unmeetable by construction: queueing and batching only add.
+        if t.slo_ms < timing.service_ms() {
+            diags.push(Diagnostic::new(
+                "CAP003",
+                "[traffic] slo_ms",
+                format!(
+                    "SLO {} ms is below the static service floor \
+                     {:.3} ms ({} cycles at {:.1} GHz) — no design \
+                     point can meet it",
+                    t.slo_ms,
+                    timing.service_ms(),
+                    timing.service_cycles,
+                    timing.clock_hz / 1.0e9,
+                ),
+            ));
+        }
+
+        // CAP004 — offered load beyond the pipelined service capacity:
+        // the queue grows without bound (deliberate overload studies
+        // are legitimate, hence a warning).
+        let capacity = timing.capacity_per_sec();
+        if t.rate_per_sec > capacity {
+            diags.push(Diagnostic::new(
+                "CAP004",
+                "[traffic] rate_per_sec",
+                format!(
+                    "arrival rate {:.0}/s exceeds the static service \
+                     capacity {:.0}/s — the backlog grows without \
+                     bound",
+                    t.rate_per_sec, capacity,
+                ),
+            ));
+        }
+
+        // CAP005 — the mean idle gap between back-to-back requests
+        // never reaches the gating break-even point, so every sleep
+        // costs more than it saves.
+        if let (true, Some(be)) = (gated, gb.break_even_cycles) {
+            let inter_arrival = timing.clock_hz / t.rate_per_sec;
+            let gap = inter_arrival - timing.service_cycles as f64;
+            if gap > 0.0 && gap <= be as f64 {
+                diags.push(Diagnostic::new(
+                    "CAP005",
+                    "[traffic] rate_per_sec",
+                    format!(
+                        "mean idle gap {:.0} cycles never reaches the \
+                         gating break-even point ({} cycles): sleeping \
+                         always costs more than it saves at this rate",
+                        gap, be,
+                    ),
+                ));
+            }
+        }
+
+        // CAP008 — a window expecting fewer than one arrival measures
+        // nothing.
+        if t.rate_per_sec * t.duration_secs < 1.0 {
+            diags.push(Diagnostic::new(
+                "CAP008",
+                "[traffic] duration_secs",
+                format!(
+                    "fewer than one expected arrival over the window \
+                     ({:.0}/s x {}s = {:.2}) — nothing to measure",
+                    t.rate_per_sec,
+                    t.duration_secs,
+                    t.rate_per_sec * t.duration_secs,
+                ),
+            ));
+        }
+    }
+
+    // Fault-plan rules.
+    if let Some(f) = &sc.faults {
+        // CAP006 — a plan that drops every request serves nothing.
+        if f.drop_rate >= 1.0 {
+            diags.push(Diagnostic::new(
+                "CAP006",
+                "[faults] drop_rate",
+                "drop_rate = 1 drops every request at the queue \
+                 boundary — the run can serve nothing",
+            ));
+        }
+
+        // CAP007 — enabled fault clauses that can never manifest.
+        if f.dma_degrade_rate > 0.0 && f.dma_degrade_factor == 1 {
+            diags.push(Diagnostic::new(
+                "CAP007",
+                "[faults] dma_degrade_factor",
+                "dma_degrade_factor = 1 leaves bandwidth unchanged — \
+                 the degradation windows are inert",
+            ));
+        }
+        if f.dma_degrade_rate > 0.0 && sc.dma.model == DmaModel::Instant {
+            diags.push(Diagnostic::new(
+                "CAP007",
+                "[faults] dma_degrade_rate",
+                "DMA degradation cannot manifest under the instant DMA \
+                 model (transfers take no timeline room)",
+            ));
+        }
+        if f.slowdown_rate > 0.0 && f.slowdown_factor == 1.0 {
+            diags.push(Diagnostic::new(
+                "CAP007",
+                "[faults] slowdown_factor",
+                "slowdown_factor = 1 leaves compute unchanged — the \
+                 throttle windows are inert",
+            ));
+        }
+        if f.wake_fail_rate > 0.0 && !gated {
+            diags.push(Diagnostic::new(
+                "CAP007",
+                "[faults] wake_fail_rate",
+                format!(
+                    "wake failures cannot manifest: organization {} \
+                     never gates a sector, so nothing ever wakes",
+                    sc.organization.label()
+                ),
+            ));
+        }
+
+        // CAP010 — a wake watchdog shorter than the wake latency
+        // itself times out every attempt.
+        if f.wake_fail_rate > 0.0
+            && f.wake_timeout_cycles > 0
+            && f.wake_timeout_cycles < arch.pg_model.wakeup_cycles
+        {
+            diags.push(Diagnostic::new(
+                "CAP010",
+                "[faults] wake_timeout_cycles",
+                format!(
+                    "wake watchdog of {} cycles is shorter than the \
+                     {}-cycle wake latency — every wake attempt times \
+                     out",
+                    f.wake_timeout_cycles, arch.pg_model.wakeup_cycles,
+                ),
+            ));
+        }
+    }
+
+    // CAP009 — a nonzero lookahead shorter than the wakeup latency
+    // still stalls every op boundary (it pre-wakes, but too late).
+    if gated
+        && sc.gating.lookahead_cycles > 0
+        && sc.gating.lookahead_cycles < arch.pg_model.wakeup_cycles
+    {
+        diags.push(Diagnostic::new(
+            "CAP009",
+            "[gating] lookahead_cycles",
+            format!(
+                "lookahead of {} cycles covers only part of the \
+                 {}-cycle wakeup — every op boundary still stalls",
+                sc.gating.lookahead_cycles, arch.pg_model.wakeup_cycles,
+            ),
+        ));
+    }
+
+    Ok(CheckReport {
+        label: sc.label(),
+        diagnostics: diags,
+        bounds: BoundsSummary {
+            service_cycles: timing.service_cycles,
+            service_ms: timing.service_ms(),
+            capacity_per_sec: timing.capacity_per_sec(),
+            break_even_cycles: gb.break_even_cycles,
+        },
+    })
+}
+
+/// The break-even summary a report carries even when no rule fired —
+/// exposed for callers that want the bounds without the rules.
+pub fn scenario_bounds(sc: &Scenario) -> Result<(StaticTiming, GatingBounds)> {
+    let model = EnergyModel::new(sc.network.clone());
+    let ctx = model.context();
+    let tech = sc.tech.technology();
+    let arch = CapStoreArch::build(
+        sc.organization,
+        &model.req,
+        &tech,
+        sc.geometry.banks,
+        sc.geometry.sectors,
+    )?;
+    let plan = GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+    Ok((
+        StaticTiming::for_context(&ctx, &sc.dma),
+        gating_bounds(&arch, &plan, ctx.clock_hz),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    #[test]
+    fn default_scenario_is_clean() {
+        let report = check_scenario(&Scenario::default(), None).unwrap();
+        assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+        assert!(report.passed());
+        assert!(report.bounds.service_cycles > 0);
+        assert!(report.bounds.break_even_cycles.is_some());
+    }
+
+    #[test]
+    fn infeasible_slo_is_an_error() {
+        let sc = Scenario {
+            traffic: Some(crate::traffic::TrafficProfile {
+                slo_ms: 1.0e-4, // 100 ns: below any service floor
+                ..Default::default()
+            }),
+            ..Scenario::default()
+        };
+        let report = check_scenario(&sc, None).unwrap();
+        assert!(!report.passed());
+        assert!(report.diagnostics.iter().any(|d| d.code == "CAP003"));
+    }
+
+    #[test]
+    fn overload_and_short_window_warn_but_pass() {
+        let sc = Scenario {
+            traffic: Some(crate::traffic::TrafficProfile {
+                rate_per_sec: 1.0e7, // far past ~1k/s mnist capacity
+                duration_secs: 1.0e-8,
+                ..Default::default()
+            }),
+            ..Scenario::default()
+        };
+        let report = check_scenario(&sc, None).unwrap();
+        assert!(report.passed(), "warnings must not block");
+        let codes: Vec<&str> =
+            report.diagnostics.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&"CAP004"), "{codes:?}");
+        assert!(codes.contains(&"CAP008"), "{codes:?}");
+    }
+}

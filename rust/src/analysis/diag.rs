@@ -1,0 +1,231 @@
+//! Diagnostic value types and the stable code registry for the static
+//! checker (`capstore check`).
+//!
+//! Every rule in [`crate::analysis::check`] emits [`Diagnostic`]s
+//! carrying a stable `CAPnnn` code, a severity, and a source location
+//! pointing back at the offending TOML key (or the flag that set it).
+//! The registry below is the single source of truth: severities live
+//! here (a rule cannot emit a code at the wrong severity), the docs
+//! table is generated from it, and the test suite asserts every
+//! scenario-scoped code is exercised by a broken fixture or a
+//! programmatic case (`tests/analysis_check.rs`).
+
+use crate::util::json::Json;
+
+/// How bad a finding is.  `Error` findings make `capstore check` exit
+/// nonzero and abort pre-flighted commands; warnings never block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Severity::Error)
+    }
+}
+
+/// What a code's rule inspects: one resolved [`crate::scenario::Scenario`]
+/// or a [`crate::dse::SweepSpace`].  Scenario-scoped codes are each
+/// exercised by a broken fixture under `rust/tests/fixtures/` (or a
+/// programmatic case where the trigger depends on derived quantities,
+/// like CAP005's break-even point); space-scoped codes are covered by
+/// unit tests (a sweep space has no TOML surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    Scenario,
+    Space,
+}
+
+/// One finding of the static checker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable registry code, e.g. `CAP003`.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Source location: the offending TOML `[section] key` (which is
+    /// also the flag surface — every key has a flag twin).
+    pub location: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic for a registered code; the severity comes
+    /// from the registry so rule code cannot disagree with the docs.
+    /// Panics on an unregistered code — that is a bug in the rule, and
+    /// the registry invariant test catches it.
+    pub fn new(
+        code: &'static str,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        let spec = spec(code)
+            .unwrap_or_else(|| panic!("unregistered diagnostic code {code}"));
+        Diagnostic {
+            code,
+            severity: spec.severity,
+            location: location.into(),
+            message: message.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("severity", Json::Str(self.severity.label().to_string())),
+            ("location", Json::Str(self.location.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+
+    /// The one-line table rendering: `error[CAP003] [traffic] slo_ms: ...`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}[{}] {}: {}",
+            self.severity.label(),
+            self.code,
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// A registered diagnostic code: the registry row `capstore check`
+/// rules, docs, and tests all derive from.
+#[derive(Debug, Clone, Copy)]
+pub struct CodeSpec {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub scope: Scope,
+    /// One-line summary for the USER_GUIDE code table.
+    pub summary: &'static str,
+}
+
+/// Every diagnostic code the checker can emit, in code order.
+pub const CODES: &[CodeSpec] = &[
+    CodeSpec {
+        code: "CAP001",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "bank x sector quantization inflates a macro to >= 2x \
+                  its application demand",
+    },
+    CodeSpec {
+        code: "CAP002",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "a configured key has no effect under the resolved \
+                  scenario (ignored sectors/bandwidth/lookahead)",
+    },
+    CodeSpec {
+        code: "CAP003",
+        severity: Severity::Error,
+        scope: Scope::Scenario,
+        summary: "declared SLO is below the static single-inference \
+                  service floor — no design in the space can meet it",
+    },
+    CodeSpec {
+        code: "CAP004",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "arrival rate exceeds the static steady-state service \
+                  capacity (queue grows without bound)",
+    },
+    CodeSpec {
+        code: "CAP005",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "mean idle gap never reaches the gating break-even \
+                  point — sleeping costs more than it saves",
+    },
+    CodeSpec {
+        code: "CAP006",
+        severity: Severity::Error,
+        scope: Scope::Scenario,
+        summary: "fault plan drops every request (drop_rate = 1)",
+    },
+    CodeSpec {
+        code: "CAP007",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "inert fault clause: an enabled fault can never \
+                  manifest under this scenario",
+    },
+    CodeSpec {
+        code: "CAP008",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "degenerate traffic window: fewer than one expected \
+                  arrival over the whole duration",
+    },
+    CodeSpec {
+        code: "CAP009",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "nonzero gating lookahead shorter than the wakeup \
+                  latency — every op boundary still stalls",
+    },
+    CodeSpec {
+        code: "CAP010",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "wake watchdog timeout shorter than the wake latency \
+                  itself — every wake attempt times out",
+    },
+    CodeSpec {
+        code: "CAP011",
+        severity: Severity::Error,
+        scope: Scope::Space,
+        summary: "sweep space has an empty axis — zero design points \
+                  to explore",
+    },
+];
+
+/// Look up a code's registry row.
+pub fn spec(code: &str) -> Option<&'static CodeSpec> {
+    CODES.iter().find(|c| c.code == code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_sorted_and_documented() {
+        for w in CODES.windows(2) {
+            assert!(w[0].code < w[1].code, "codes out of order");
+        }
+        for c in CODES {
+            assert!(c.code.starts_with("CAP"), "{}", c.code);
+            assert!(!c.summary.is_empty(), "{} lacks a summary", c.code);
+            assert!(spec(c.code).is_some());
+        }
+        assert!(spec("CAP999").is_none());
+    }
+
+    #[test]
+    fn diagnostic_inherits_registry_severity() {
+        let d = Diagnostic::new("CAP003", "[traffic] slo_ms", "too tight");
+        assert!(d.severity.is_error());
+        let d = Diagnostic::new("CAP001", "[memory] banks", "padded");
+        assert!(!d.severity.is_error());
+        assert_eq!(
+            d.render(),
+            "warning[CAP001] [memory] banks: padded"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered diagnostic code")]
+    fn unregistered_code_panics() {
+        Diagnostic::new("CAP999", "x", "y");
+    }
+}

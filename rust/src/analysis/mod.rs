@@ -2,12 +2,18 @@
 //! access counts, off-chip traffic (Eqs 1–2), and the energy breakdowns
 //! behind Figs 5, 10 and 11.
 
+pub mod bounds;
 pub mod breakdown;
+pub mod check;
 pub mod context;
+pub mod diag;
 pub mod offchip;
 pub mod requirements;
 
+pub use bounds::{GatingBounds, LatencyBound, StaticTiming};
 pub use breakdown::{ArchitectureEnergy, EnergyBreakdown, SystemEnergy};
+pub use check::{check_scenario, CheckReport};
 pub use context::SweepContext;
+pub use diag::{CodeSpec, Diagnostic, Severity};
 pub use offchip::OffChipTraffic;
 pub use requirements::{ComponentReq, OpRequirements, RequirementsAnalysis};

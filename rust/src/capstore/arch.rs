@@ -153,10 +153,36 @@ impl CapStoreArch {
     ) -> Result<CapStoreArch> {
         let pg = PowerGateModel::default();
         let sectors = org.effective_sectors(sectors);
+
+        let mut macros = Vec::new();
+        for (role, want, ports) in Self::sizing_targets(org, req) {
+            let size = RequirementsAnalysis::bankable(want, banks, sectors);
+            let sram = SramConfig::new(size, banks, sectors, ports);
+            let costs = evaluate(&sram)?;
+            let pg_area = if org.gated() {
+                pg.area_overhead_mm2(size, sectors)
+            } else {
+                0.0
+            };
+            macros.push(MemoryMacro { role, sram, costs, pg_area_mm2: pg_area });
+        }
+
+        Ok(CapStoreArch { organization: org, macros, pg_model: pg })
+    }
+
+    /// The application-aware sizing spec for `org`: one
+    /// `(role, wanted bytes, ports)` entry per macro, *before* bank/
+    /// sector quantization rounds it up (paper §4.2).  Shared between
+    /// [`build_with`](Self::build_with) and the static capacity rule in
+    /// `analysis::check`, so the diagnostics always reason about the
+    /// exact macros a build would instantiate.
+    pub fn sizing_targets(
+        org: Organization,
+        req: &RequirementsAnalysis,
+    ) -> Vec<(MemoryRole, u64, u64)> {
         let maxc = req.max_components();
         let minc = req.min_components();
-
-        let mut specs: Vec<(MemoryRole, u64, u64)> = Vec::new(); // role, size, ports
+        let mut specs: Vec<(MemoryRole, u64, u64)> = Vec::new();
         match org {
             Organization::Smp { .. } => {
                 // worst-case simultaneous total, one 3-port macro
@@ -181,21 +207,7 @@ impl CapStoreArch {
                 specs.push((MemoryRole::Accumulator, minc.accum.max(1), 2));
             }
         }
-
-        let mut macros = Vec::new();
-        for (role, want, ports) in specs {
-            let size = RequirementsAnalysis::bankable(want, banks, sectors);
-            let sram = SramConfig::new(size, banks, sectors, ports);
-            let costs = evaluate(&sram)?;
-            let pg_area = if org.gated() {
-                pg.area_overhead_mm2(size, sectors)
-            } else {
-                0.0
-            };
-            macros.push(MemoryMacro { role, sram, costs, pg_area_mm2: pg_area });
-        }
-
-        Ok(CapStoreArch { organization: org, macros, pg_model: pg })
+        specs
     }
 
     /// Build with the paper's defaults (16 banks; 64 sectors when gated).

@@ -1,0 +1,242 @@
+//! `capstore check` — the static diagnostics engine, CLI edition.
+//!
+//! Runs every rule in [`crate::analysis::check`] against one resolved
+//! scenario (flags, `--scenario <file>`, or a bare positional path) or
+//! against every file under `examples/scenarios/` with
+//! `--all-examples`.  No `Timeline` is built and no event loop runs:
+//! the command's whole job is to reject infeasible work before the
+//! expensive commands start.  Error-severity findings set
+//! [`Output::failed`], so the process exits nonzero while still
+//! printing the full report in either format.
+
+use crate::analysis::check::{check_scenario, CheckReport};
+use crate::config::toml::TomlDoc;
+use crate::scenario::Scenario;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+/// Where `--all-examples` looks for scenario files, relative to the
+/// working directory; the crate is nested one level below the repo
+/// root (which owns `examples/`), so both vantage points are tried.
+const EXAMPLE_DIRS: &[&str] = &["examples/scenarios", "../examples/scenarios"];
+
+pub struct Check;
+
+impl Command for Check {
+    fn name(&self) -> &'static str {
+        "check"
+    }
+
+    fn about(&self) -> &'static str {
+        "static diagnostics: lint a scenario without simulating it"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME, spec::CHECK]
+    }
+
+    fn max_positionals(&self) -> usize {
+        1
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<scenario.toml>]"
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Checks the resolved scenario against the static rule catalogue \
+         (stable CAPnnn codes; see docs/USER_GUIDE.md) without building \
+         a timeline or running the event loop: geometry quantization \
+         waste, ignored keys, SLOs below the static service floor, \
+         overload, gating break-even violations, and degenerate \
+         [traffic]/[faults] sections.  Errors exit nonzero; warnings \
+         do not.  A bare path positional is shorthand for --scenario; \
+         --all-examples checks every file under examples/scenarios/."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let targets = resolve_targets(ctx)?;
+
+        let mut out = Output::new();
+        let mut scenarios = Vec::new();
+        let mut total_errors = 0;
+        let mut total_warnings = 0;
+        for (file, sc, doc) in &targets {
+            let report = check_scenario(sc, doc.as_ref())?;
+            total_errors += report.errors();
+            total_warnings += report.warnings();
+            render_report(&mut out, file.as_deref(), &report);
+            scenarios.push(report_json(file.as_deref(), &report));
+        }
+
+        out.text(format!(
+            "\nchecked {} scenario(s): {} error(s), {} warning(s)",
+            targets.len(),
+            total_errors,
+            total_warnings,
+        ));
+        out.json = Json::obj(vec![
+            ("checked", Json::Num(targets.len() as f64)),
+            ("errors", Json::Num(total_errors as f64)),
+            ("warnings", Json::Num(total_warnings as f64)),
+            ("scenarios", Json::Arr(scenarios)),
+        ]);
+        out.failed = total_errors > 0;
+        Ok(out)
+    }
+}
+
+/// The static pre-flight `evaluate`/`dse`/`traffic` run before any
+/// simulation: error-severity diagnostics abort with each finding
+/// listed; warnings stay silent here (run `capstore check` for the
+/// full report) so the simulating commands' output is byte-identical
+/// to the pre-check CLI.  `--no-check` skips the whole thing.
+pub(super) fn preflight(
+    ctx: &CommandContext,
+    sc: &Scenario,
+    doc: Option<&TomlDoc>,
+) -> Result<()> {
+    if ctx.flag("no-check").is_some() {
+        return Ok(());
+    }
+    let report = check_scenario(sc, doc)?;
+    if report.passed() {
+        return Ok(());
+    }
+    let errors: Vec<String> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity.is_error())
+        .map(|d| d.render())
+        .collect();
+    Err(Error::Config(format!(
+        "static check failed for {} (`capstore check` shows the full \
+         report; --no-check overrides):\n  {}",
+        report.label,
+        errors.join("\n  "),
+    )))
+}
+
+/// What to check: `(source file, scenario, parsed doc)` triples.  The
+/// doc rides along because the ignored-key rule (CAP002) only fires on
+/// keys the user actually wrote.
+type Target = (Option<String>, Scenario, Option<TomlDoc>);
+
+fn resolve_targets(ctx: &CommandContext) -> Result<Vec<Target>> {
+    let all_examples = ctx.flag("all-examples").is_some();
+    let positional = ctx.positionals.first();
+
+    if all_examples && (positional.is_some() || ctx.flag("scenario").is_some())
+    {
+        return Err(Error::Config(
+            "--all-examples conflicts with naming a single scenario \
+             (positional path or --scenario)"
+                .into(),
+        ));
+    }
+    if let (Some(p), Some(_)) = (positional, ctx.flag("scenario")) {
+        return Err(Error::Config(format!(
+            "`check {p}` and `--scenario` both name the file — give \
+             one or the other"
+        )));
+    }
+
+    if all_examples {
+        let dir = EXAMPLE_DIRS
+            .iter()
+            .find(|d| std::path::Path::new(d).is_dir())
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "--all-examples: none of {} exists here",
+                    EXAMPLE_DIRS.join(", ")
+                ))
+            })?;
+        let mut paths: Vec<String> = std::fs::read_dir(dir)
+            .map_err(|e| Error::Config(format!("--all-examples: {dir}: {e}")))?
+            .filter_map(|entry| {
+                let p = entry.ok()?.path();
+                let name = p.to_str()?;
+                name.ends_with(".toml").then(|| name.to_string())
+            })
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Config(format!(
+                "--all-examples: no .toml files under {dir}"
+            )));
+        }
+        return paths.into_iter().map(|p| load_target(&p)).collect();
+    }
+
+    if let Some(path) = positional {
+        return Ok(vec![load_target(path)?]);
+    }
+
+    // the shared flag stack: defaults -> --config -> --scenario -> flags
+    Ok(vec![(
+        ctx.flag("scenario").map(str::to_string),
+        ctx.scenario()?,
+        ctx.scenario_doc().cloned(),
+    )])
+}
+
+/// Load one scenario file the way `--scenario <path>` would (doc-only,
+/// no flag overlay — a batch check has no meaningful flag layer).
+fn load_target(path: &str) -> Result<Target> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("{path}: {e}")))?;
+    let doc = TomlDoc::parse(&text)?;
+    let sc = Scenario::builder().overlay_toml(&doc)?.build()?;
+    Ok((Some(path.to_string()), sc, Some(doc)))
+}
+
+fn render_report(out: &mut Output, file: Option<&str>, report: &CheckReport) {
+    match file {
+        Some(f) => out.text(format!("== check {} ({f}) ==", report.label)),
+        None => out.text(format!("== check {} ==", report.label)),
+    };
+    for d in &report.diagnostics {
+        out.text(format!("  {}", d.render()));
+    }
+    if report.diagnostics.is_empty() {
+        out.text("  ok — no findings");
+    }
+    let be = match report.bounds.break_even_cycles {
+        Some(be) => format!("{be} cycles"),
+        None => "- (ungated)".into(),
+    };
+    out.text(format!(
+        "  bounds: service floor {:.3} ms ({} cycles), capacity \
+         {:.0}/s, gating break-even {}",
+        report.bounds.service_ms,
+        report.bounds.service_cycles,
+        report.bounds.capacity_per_sec,
+        be,
+    ));
+}
+
+fn report_json(file: Option<&str>, report: &CheckReport) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::Str(report.label.clone())),
+        (
+            "file",
+            match file {
+                Some(f) => Json::Str(f.to_string()),
+                None => Json::Null,
+            },
+        ),
+        ("passed", Json::Bool(report.passed())),
+        ("errors", Json::Num(report.errors() as f64)),
+        ("warnings", Json::Num(report.warnings() as f64)),
+        (
+            "diagnostics",
+            Json::Arr(report.diagnostics.iter().map(|d| d.to_json()).collect()),
+        ),
+        ("bounds", report.bounds.to_json()),
+    ])
+}

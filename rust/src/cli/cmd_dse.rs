@@ -26,7 +26,7 @@ impl Command for Dse {
     }
 
     fn groups(&self) -> &'static [&'static [FlagSpec]] {
-        &[spec::SCENARIO, spec::TECH_ONLY, spec::DSE]
+        &[spec::SCENARIO, spec::TECH_ONLY, spec::DSE, spec::PREFLIGHT]
     }
 
     fn long_help(&self) -> &'static str {
@@ -66,6 +66,10 @@ impl Command for Dse {
                 ));
             }
         }
+        // static pre-flight: an infeasible scenario (e.g. an SLO below
+        // the static service floor) fails here instead of after a full
+        // sweep that returns an empty admissible set
+        super::cmd_check::preflight(ctx, &sc, ctx.scenario_doc())?;
         let threads: usize = ctx.parsed("threads")?.unwrap_or(0);
         let space = ctx.flag("space").unwrap_or("default");
 
@@ -110,9 +114,22 @@ impl Command for Dse {
             }
         };
 
+        if let Some(d) = ex.space.check().into_iter().next() {
+            return Err(Error::Config(d.render()));
+        }
+
         let t0 = std::time::Instant::now();
         let points = ex.sweep()?;
+        // wall-clock is progress feedback only: printed eagerly in
+        // table mode, never part of the JSON document (which stays
+        // bit-deterministic across runs)
         let secs = t0.elapsed().as_secs_f64();
+        ctx.progress(format!(
+            "explored {} design points in {:.1} ms ({:.0} points/s)",
+            points.len(),
+            secs * 1.0e3,
+            points.len() as f64 / secs.max(1e-12)
+        ));
         let front = Explorer::pareto(&points);
         let best = Explorer::best_energy(&points).expect("non-empty sweep");
 
@@ -139,7 +156,6 @@ impl Command for Dse {
             ("network", Json::Str(sc.network.name.to_string())),
             ("tech", Json::Str(sc.tech.label().to_string())),
             ("points", Json::Num(points.len() as f64)),
-            ("seconds", Json::Num(secs)),
             ("pareto_front", t.to_json()),
             (
                 "best",
@@ -163,12 +179,6 @@ impl Command for Dse {
             best.banks,
             best.sectors,
             fmt_energy_uj(best.onchip_energy_pj)
-        ));
-        out.text(format!(
-            "explored {} design points in {:.1} ms ({:.0} points/s)",
-            points.len(),
-            secs * 1.0e3,
-            points.len() as f64 / secs.max(1e-12)
         ));
         Ok(out)
     }
@@ -208,7 +218,14 @@ fn run_full(
     let mut out = Output::new();
     let t0 = std::time::Instant::now();
     let all = ms.run()?;
+    // wall-clock is progress feedback only, never part of the JSON
     let secs = t0.elapsed().as_secs_f64();
+    ctx.progress(format!(
+        "explored {} design points in {:.1} ms ({:.0} points/s)",
+        all.len(),
+        secs * 1.0e3,
+        all.len() as f64 / secs.max(1e-12)
+    ));
 
     let mut t = Table::new(
         "grand DSE — min-energy winner per (model, tech node)",
@@ -241,15 +258,8 @@ fn run_full(
     }
     out.json = Json::obj(vec![
         ("points", Json::Num(all.len() as f64)),
-        ("seconds", Json::Num(secs)),
         ("winners", t.to_json()),
     ]);
     out.table(t);
-    out.text(format!(
-        "\nexplored {} design points in {:.1} ms ({:.0} points/s)",
-        all.len(),
-        secs * 1.0e3,
-        all.len() as f64 / secs.max(1e-12)
-    ));
     Ok(out)
 }

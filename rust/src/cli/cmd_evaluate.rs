@@ -27,11 +27,14 @@ impl Command for Evaluate {
     }
 
     fn groups(&self) -> &'static [&'static [FlagSpec]] {
-        &[spec::SCENARIO, spec::MEMORY, spec::TIME]
+        &[spec::SCENARIO, spec::MEMORY, spec::TIME, spec::PREFLIGHT]
     }
 
     fn run(&self, ctx: &CommandContext) -> Result<Output> {
         let sc = ctx.scenario()?;
+        // static pre-flight: error-severity diagnostics abort before
+        // any evaluation work (--no-check skips)
+        super::cmd_check::preflight(ctx, &sc, ctx.scenario_doc())?;
         let ev = Evaluator::new();
         let paper = PaperReference::new();
 

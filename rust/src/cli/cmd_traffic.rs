@@ -39,6 +39,7 @@ impl Command for TrafficCmd {
             spec::TIME_UNBATCHED,
             spec::TRAFFIC,
             spec::FAULT_KNOBS,
+            spec::PREFLIGHT,
         ]
     }
 
@@ -209,6 +210,20 @@ impl Command for TrafficCmd {
             resilience.wake_fail_fallback = Some(v);
         }
         resilience.validate()?;
+
+        // static pre-flight on the fully resolved workload (flags
+        // already folded into profile/faults, so the scenario doc's
+        // key->location mapping no longer applies — pass no doc).  The
+        // --rates path skips it: the re-ranking sweeps design axes the
+        // single-scenario rules would mis-blame.
+        if !ctx.flags.contains_key("rates") {
+            let checked = Scenario {
+                traffic: Some(profile.clone()),
+                faults: (!faults.is_identity()).then(|| faults.clone()),
+                ..sc.clone()
+            };
+            super::cmd_check::preflight(ctx, &checked, None)?;
+        }
 
         let ev = Evaluator::new();
         if let Some(list) = ctx.flag("rates") {

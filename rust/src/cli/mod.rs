@@ -30,6 +30,7 @@ pub mod registry;
 pub mod spec;
 
 mod cmd_analyze;
+mod cmd_check;
 mod cmd_dse;
 mod cmd_evaluate;
 mod cmd_help;
@@ -111,10 +112,13 @@ pub fn run(args: &[String]) -> ExitCode {
         .and_then(|ctx| {
             let out = cmd.run(&ctx)?;
             print!("{}", out.render(ctx.format));
-            Ok(())
+            Ok(out.failed)
         });
     match result {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::SUCCESS,
+        // output printed, but the command reported a semantic failure
+        // (e.g. `check` found error-severity diagnostics)
+        Ok(true) => ExitCode::FAILURE,
         Err(e) => {
             eprintln!("error: {e}");
             ExitCode::FAILURE

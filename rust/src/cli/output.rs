@@ -52,11 +52,15 @@ pub enum Section {
 pub struct Output {
     pub sections: Vec<Section>,
     pub json: Json,
+    /// Set when the command semantically failed (e.g. `capstore check`
+    /// found error-severity diagnostics) but still has output to print:
+    /// the dispatcher renders the output, then exits nonzero.
+    pub failed: bool,
 }
 
 impl Output {
     pub fn new() -> Output {
-        Output { sections: Vec::new(), json: Json::Null }
+        Output { sections: Vec::new(), json: Json::Null, failed: false }
     }
 
     /// Append a table section.

@@ -5,6 +5,7 @@
 use crate::{Error, Result};
 
 use super::cmd_analyze::Analyze;
+use super::cmd_check::Check;
 use super::cmd_dse::Dse;
 use super::cmd_evaluate::Evaluate;
 use super::cmd_help::HelpCmd;
@@ -20,6 +21,7 @@ pub fn commands() -> &'static [&'static dyn Command] {
     static COMMANDS: &[&dyn Command] = &[
         &Analyze,
         &Evaluate,
+        &Check,
         &TimelineCmd,
         &Dse,
         &TrafficCmd,

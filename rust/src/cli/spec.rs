@@ -428,6 +428,26 @@ pub const ALL: FlagSpec = FlagSpec {
     group: FlagGroup::Help,
 };
 
+pub const NO_CHECK: FlagSpec = FlagSpec {
+    name: "no-check",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "skip the static pre-flight (`capstore check`) that otherwise \
+          aborts on error-severity diagnostics before simulating",
+    default: "",
+    group: FlagGroup::Scenario,
+};
+
+pub const ALL_EXAMPLES: FlagSpec = FlagSpec {
+    name: "all-examples",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "check every scenario file under examples/scenarios/ instead \
+          of a single scenario",
+    default: "",
+    group: FlagGroup::Scenario,
+};
+
 // --- the composable groups -------------------------------------------
 //
 // A command's `groups()` concatenates these; the parser, help, and
@@ -477,6 +497,12 @@ pub const SERVE: &[FlagSpec] = &[ARTIFACTS, REQUESTS, CLIENTS];
 
 /// `info`'s flags.
 pub const INFO: &[FlagSpec] = &[CONFIG, FORMAT, ARTIFACTS];
+
+/// The static pre-flight opt-out shared by `evaluate`/`dse`/`traffic`.
+pub const PREFLIGHT: &[FlagSpec] = &[NO_CHECK];
+
+/// `check`'s own switches.
+pub const CHECK: &[FlagSpec] = &[ALL_EXAMPLES];
 
 /// `help`'s flags.
 pub const HELP: &[FlagSpec] = &[ALL];

@@ -143,6 +143,35 @@ impl SweepSpace {
             + ungated * self.banks.len())
             * self.dma.len()
     }
+
+    /// Static sanity check of the space itself: an empty axis means the
+    /// sweep enumerates zero points, which historically surfaced as an
+    /// empty Pareto front after the full run.  Space-scoped rules live
+    /// here rather than in `analysis::check` so the layering stays
+    /// one-directional (`analysis` never depends on `dse`).
+    pub fn check(&self) -> Vec<crate::analysis::Diagnostic> {
+        use crate::analysis::Diagnostic;
+        let mut out = Vec::new();
+        let axes: [(&str, bool); 4] = [
+            ("banks", self.banks.is_empty()),
+            ("sectors", self.sectors.is_empty()),
+            ("organizations", self.organizations.is_empty()),
+            ("dma", self.dma.is_empty()),
+        ];
+        for (axis, empty) in axes {
+            if empty {
+                out.push(Diagnostic::new(
+                    "CAP011",
+                    format!("[space] {axis}"),
+                    format!(
+                        "sweep axis `{axis}` is empty: the space \
+                         enumerates zero design points"
+                    ),
+                ));
+            }
+        }
+        out
+    }
 }
 
 /// Run the exploration for a network config.
@@ -192,6 +221,23 @@ impl Explorer {
     ) -> Result<Vec<DesignPoint>> {
         crate::scenario::Evaluator::new()
             .sweep_model(&self.model, &self.space, threads)
+    }
+
+    /// [`sweep`](Self::sweep) through an admissible latency bound
+    /// (see [`crate::analysis::LatencyBound`]): points whose static
+    /// latency the bound rejects are pruned *before* pricing, and the
+    /// result is bit-identical to filtering the full sweep after the
+    /// fact.  The unconstrained bound degenerates to [`sweep`](Self::sweep).
+    pub fn sweep_bounded(
+        &self,
+        bound: &crate::analysis::LatencyBound,
+    ) -> Result<Vec<DesignPoint>> {
+        crate::scenario::Evaluator::new().sweep_model_bounded(
+            &self.model,
+            &self.space,
+            self.threads,
+            bound,
+        )
     }
 
     /// The pre-refactor evaluation path — per-point context rebuild, no
@@ -351,6 +397,53 @@ mod tests {
         for ((b, s), p) in baseline.iter().zip(&serial).zip(&parallel) {
             assert!(b.bit_eq(s), "serial diverged: {b:?} vs {s:?}");
             assert!(b.bit_eq(p), "parallel diverged: {b:?} vs {p:?}");
+        }
+    }
+
+    #[test]
+    fn default_space_is_clean_and_empty_axes_error() {
+        assert!(SweepSpace::default().check().is_empty());
+        assert!(SweepSpace::large().check().is_empty());
+        let broken = SweepSpace {
+            banks: Vec::new(),
+            ..SweepSpace::default()
+        };
+        let diags = broken.check();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, "CAP011");
+        assert!(diags[0].severity.is_error());
+        assert_eq!(diags[0].location, "[space] banks");
+    }
+
+    #[test]
+    fn bounded_sweep_is_bit_identical_to_post_hoc_filtering() {
+        use crate::analysis::LatencyBound;
+        let mut ex = quick_explorer();
+        // include the overlap axis so the bound actually discriminates
+        ex.space.dma = DmaPolicy::all_models();
+        let full = ex.sweep().unwrap();
+
+        // unconstrained bound: exactly the full sweep
+        let open = ex.sweep_bounded(&LatencyBound::unconstrained()).unwrap();
+        assert_eq!(open.len(), full.len());
+        for (a, b) in full.iter().zip(&open) {
+            assert!(a.bit_eq(b));
+        }
+
+        // a ceiling between the instant and serial latencies: pruning
+        // keeps exactly the admitted subset, in sweep order, bit for bit
+        let mid = full.iter().map(|p| p.latency_cycles).min().unwrap();
+        let bound = LatencyBound::at_most(mid);
+        let pruned = ex.sweep_bounded(&bound).unwrap();
+        let filtered: Vec<_> = full
+            .iter()
+            .filter(|p| bound.admits(p.latency_cycles))
+            .collect();
+        assert!(!pruned.is_empty());
+        assert!(pruned.len() < full.len());
+        assert_eq!(pruned.len(), filtered.len());
+        for (a, b) in pruned.iter().zip(&filtered) {
+            assert!(a.bit_eq(b), "pruned diverged: {a:?} vs {b:?}");
         }
     }
 

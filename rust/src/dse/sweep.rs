@@ -14,10 +14,11 @@
 //!   `memsim::cacti::evaluate` is a pure function, so a cache hit returns
 //!   the exact floats a fresh evaluation would.
 
-use std::collections::HashMap;
+use std::collections::HashMap; // lint:allow(determinism) value cache, never iterated
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::analysis::bounds::{dma_latency_cycles, LatencyBound};
 use crate::analysis::breakdown::EnergyModel;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::{CapStoreArch, Organization};
@@ -70,7 +71,9 @@ fn tech_bits(t: &Technology) -> [u64; 9] {
 /// Thread-safe: one cache is shared by all sweep workers.
 #[derive(Default)]
 pub struct CostCache {
-    map: Mutex<HashMap<(SramConfig, [u64; 9]), SramCosts>>,
+    // point lookups only: the cache is never iterated, so hash order
+    // cannot leak into any result
+    map: Mutex<HashMap<(SramConfig, [u64; 9]), SramCosts>>, // lint:allow(determinism)
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -253,6 +256,55 @@ pub fn run(
         .into_iter()
         .map(|s| s.expect("worker filled every slot"))
         .collect()
+}
+
+/// Filter `specs` through an admissible latency bound *before* pricing
+/// anything.  A spec's static latency — the `place()` schedule at batch
+/// 1 under its DMA policy — is the exact `DesignPoint::latency_cycles`
+/// value [`evaluate_point`] would record, so the surviving set prices
+/// to exactly the admitted subset of the full sweep, bit for bit
+/// (`tests/analysis_check.rs` pins both directions).  Latency depends
+/// only on the DMA coordinate, so one latency is computed per distinct
+/// policy — a small linear memo, deliberately not a hash map, keeping
+/// the deterministic modules free of hash-order-dependent code.
+pub fn prune(
+    ctx: &SweepContext,
+    specs: Vec<PointSpec>,
+    bound: &LatencyBound,
+) -> Vec<PointSpec> {
+    if bound.max_latency_cycles.is_none() {
+        return specs;
+    }
+    let mut memo: Vec<(DmaPolicy, u64)> = Vec::new();
+    specs
+        .into_iter()
+        .filter(|s| {
+            let lat = match memo.iter().find(|(d, _)| *d == s.dma) {
+                Some(&(_, l)) => l,
+                None => {
+                    let l = dma_latency_cycles(ctx, &s.dma, 1);
+                    memo.push((s.dma, l));
+                    l
+                }
+            };
+            bound.admits(lat)
+        })
+        .collect()
+}
+
+/// [`run`] over the bound-admitted subset of `specs`: the seed of the
+/// ROADMAP's branch-and-bound item — an inadmissible subtree is dropped
+/// before its points are priced.
+pub fn run_bounded(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    specs: Vec<PointSpec>,
+    bound: &LatencyBound,
+    threads: usize,
+) -> Result<Vec<DesignPoint>> {
+    let admitted = prune(ctx, specs, bound);
+    run(model, ctx, cache, &admitted, threads)
 }
 
 // ---------------------------------------------------------------------

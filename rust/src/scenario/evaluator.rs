@@ -504,6 +504,22 @@ impl Evaluator {
         sweep::run(model, &ctx, &self.cache, &specs, threads)
     }
 
+    /// [`sweep_model`](Self::sweep_model) behind an admissible latency
+    /// bound: specs the bound rejects are pruned before pricing (see
+    /// `sweep::prune`), so the surviving points are bit-identical to
+    /// filtering the full sweep on `DesignPoint::latency_cycles`.
+    pub fn sweep_model_bounded(
+        &self,
+        model: &EnergyModel,
+        space: &SweepSpace,
+        threads: usize,
+        bound: &crate::analysis::LatencyBound,
+    ) -> Result<Vec<DesignPoint>> {
+        let ctx = model.context();
+        let specs = sweep::enumerate(space);
+        sweep::run_bounded(model, &ctx, &self.cache, specs, bound, threads)
+    }
+
     /// The grand multi-network / multi-node sweep (`MultiSweep::run`
     /// delegates here).  One context per network — it is
     /// tech-independent, so every node of a model shares it — and this

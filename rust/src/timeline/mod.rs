@@ -1116,6 +1116,23 @@ pub fn dma_overhead_pj(
     (pj, p.total_cycles)
 }
 
+/// Statically computed latency (cycles) of one `batch`-deep inference
+/// under `dma`, from the same `place()` schedule the sweep engine and
+/// the Timeline batch accountant share.  Architecture-free and
+/// Timeline-free: this is the exact `DesignPoint::latency_cycles`
+/// value for `batch == 1`, which makes it an *admissible* bound for
+/// `analysis::bounds` pruning — filtering on it is bit-identical to
+/// post-hoc filtering of the full sweep.
+pub fn placed_latency_cycles(
+    kinds: &[OpKind],
+    op_cycles: &[u64],
+    op_offchip: &[(u64, u64)],
+    dma: &DmaPolicy,
+    batch: u64,
+) -> u64 {
+    place(kinds, op_cycles, op_offchip, dma, batch).total_cycles
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

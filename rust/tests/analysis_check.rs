@@ -1,0 +1,262 @@
+//! Integration tests for the static diagnostics engine: `capstore
+//! check` over the broken fixtures in `tests/fixtures/`, the registry
+//! coverage invariant, the Timeline-free guarantee, and the admissible
+//! property (check-pass implies the evaluator succeeds).
+//!
+//! Each `capXXX_*.toml` fixture triggers exactly one diagnostic code;
+//! CAP005 has no static fixture because its trigger rate depends on
+//! the derived break-even point, so it is exercised programmatically
+//! from `analysis::check::scenario_bounds`.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command as Proc;
+
+use capstore::analysis::check::{check_scenario, scenario_bounds};
+use capstore::analysis::diag;
+use capstore::config::toml::TomlDoc;
+use capstore::dse::SweepSpace;
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::timeline::Timeline;
+use capstore::traffic::TrafficProfile;
+use capstore::util::json::Json;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn examples_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// Run `capstore check <file> --format json`; return (exit ok, doc).
+fn check_subprocess(path: &Path) -> (bool, Json) {
+    let out = Proc::new(env!("CARGO_BIN_EXE_capstore"))
+        .args(["check", path.to_str().unwrap(), "--format", "json"])
+        .output()
+        .expect("spawn capstore");
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    let doc = Json::parse(&stdout).unwrap_or_else(|e| {
+        panic!("check {}: bad JSON ({e:?}):\n{stdout}", path.display())
+    });
+    (out.status.success(), doc)
+}
+
+/// Every diagnostic code in a `check` JSON document, in emission order.
+fn emitted_codes(doc: &Json) -> Vec<String> {
+    let mut codes = Vec::new();
+    if let Some(Json::Arr(scenarios)) = doc.get("scenarios") {
+        for sc in scenarios {
+            if let Some(Json::Arr(diags)) = sc.get("diagnostics") {
+                for d in diags {
+                    if let Some(Json::Str(code)) = d.get("code") {
+                        codes.push(code.clone());
+                    }
+                }
+            }
+        }
+    }
+    codes
+}
+
+/// Load a fixture the way `capstore check <file>` does, returning the
+/// (scenario, doc) pair so CAP002's written-key rules can fire.
+fn load(path: &Path) -> (Scenario, TomlDoc) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let doc = TomlDoc::parse(&text).unwrap();
+    let sc = Scenario::builder()
+        .overlay_toml(&doc)
+        .unwrap()
+        .build()
+        .unwrap();
+    (sc, doc)
+}
+
+#[test]
+fn fixtures_emit_their_codes_with_the_right_exit_status() {
+    // (fixture, code it must emit, error severity => nonzero exit)
+    let cases = [
+        ("cap001_quantized_geometry.toml", "CAP001", false),
+        ("cap002_ignored_keys.toml", "CAP002", false),
+        ("cap003_infeasible_slo.toml", "CAP003", true),
+        ("cap004_overload.toml", "CAP004", false),
+        ("cap006_drop_everything.toml", "CAP006", true),
+        ("cap007_inert_faults.toml", "CAP007", false),
+        ("cap008_empty_window.toml", "CAP008", false),
+        ("cap009_short_lookahead.toml", "CAP009", false),
+        ("cap010_wake_watchdog.toml", "CAP010", false),
+    ];
+    for (file, code, is_error) in cases {
+        let (ok, doc) = check_subprocess(&fixture_dir().join(file));
+        let codes = emitted_codes(&doc);
+        assert!(
+            codes.iter().any(|c| c == code),
+            "{file}: expected {code}, got {codes:?}"
+        );
+        assert_eq!(
+            ok, !is_error,
+            "{file}: exit status disagrees with severity ({codes:?})"
+        );
+        // fixtures are single-purpose: nothing but the target code fires
+        assert!(
+            codes.iter().all(|c| c == code),
+            "{file}: stray diagnostics besides {code}: {codes:?}"
+        );
+    }
+}
+
+#[test]
+fn cap005_fires_when_the_idle_gap_is_below_break_even() {
+    // The trigger rate depends on the derived break-even point, so this
+    // case is programmatic: pick a rate whose mean idle gap lands at
+    // exactly half the break-even window.
+    let base = Scenario::default();
+    let (timing, gb) = scenario_bounds(&base).unwrap();
+    let be = gb.break_even_cycles.expect("default organization is gated");
+    let inter_arrival = timing.service_cycles as f64 + be as f64 / 2.0;
+    let sc = Scenario {
+        traffic: Some(TrafficProfile {
+            rate_per_sec: timing.clock_hz / inter_arrival,
+            duration_secs: 1.0,
+            slo_ms: 1.0e3,
+            ..Default::default()
+        }),
+        ..base
+    };
+    let report = check_scenario(&sc, None).unwrap();
+    let codes: Vec<&str> = report.diagnostics.iter().map(|d| d.code).collect();
+    assert!(codes.contains(&"CAP005"), "{codes:?}");
+    assert!(report.passed(), "CAP005 is a warning, not an error");
+}
+
+#[test]
+fn every_registered_code_is_exercised() {
+    let mut seen = BTreeSet::new();
+
+    // every scenario fixture, through the library path
+    for entry in std::fs::read_dir(fixture_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let (sc, doc) = load(&path);
+        let report = check_scenario(&sc, Some(&doc)).unwrap();
+        assert!(
+            !report.diagnostics.is_empty(),
+            "{}: a broken fixture produced no findings",
+            path.display()
+        );
+        for d in &report.diagnostics {
+            seen.insert(d.code.to_string());
+        }
+    }
+
+    // CAP005: programmatic (see cap005_fires_when_...)
+    let base = Scenario::default();
+    let (timing, gb) = scenario_bounds(&base).unwrap();
+    let be = gb.break_even_cycles.unwrap() as f64;
+    let sc = Scenario {
+        traffic: Some(TrafficProfile {
+            rate_per_sec: timing.clock_hz
+                / (timing.service_cycles as f64 + be / 2.0),
+            duration_secs: 1.0,
+            slo_ms: 1.0e3,
+            ..Default::default()
+        }),
+        ..base
+    };
+    for d in check_scenario(&sc, None).unwrap().diagnostics {
+        seen.insert(d.code.to_string());
+    }
+
+    // CAP011: space-scoped, no TOML surface
+    let space = SweepSpace { banks: Vec::new(), ..SweepSpace::default() };
+    for d in space.check() {
+        seen.insert(d.code.to_string());
+    }
+
+    for spec in diag::CODES {
+        assert!(
+            seen.contains(spec.code),
+            "registered code {} is never exercised by any fixture or \
+             programmatic case",
+            spec.code
+        );
+    }
+}
+
+#[test]
+fn check_builds_no_timeline_and_admissible_scenarios_evaluate() {
+    // Part 1 — the Timeline-free guarantee: checking an infeasible
+    // scenario (static-floor SLO violation) rejects it without ever
+    // constructing the timeline IR.  Both parts share one test function
+    // because `Timeline::build_count` is process-wide and part 2 builds
+    // timelines on purpose.
+    let (sc, doc) = load(&fixture_dir().join("cap003_infeasible_slo.toml"));
+    let before = Timeline::build_count();
+    let report = check_scenario(&sc, Some(&doc)).unwrap();
+    assert!(!report.passed());
+    assert!(report.diagnostics.iter().any(|d| d.code == "CAP003"));
+    assert_eq!(
+        Timeline::build_count(),
+        before,
+        "check_scenario constructed a Timeline"
+    );
+
+    // Part 2 — the admissible property: a scenario the checker passes
+    // (errors == 0; warnings are fine) must evaluate cleanly.
+    let ev = Evaluator::new();
+    for entry in std::fs::read_dir(examples_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let (sc, doc) = load(&path);
+        let report = check_scenario(&sc, Some(&doc)).unwrap();
+        assert!(
+            report.diagnostics.is_empty(),
+            "{}: examples must be finding-free, got {:?}",
+            path.display(),
+            report.diagnostics
+        );
+        ev.evaluate(&sc).unwrap_or_else(|e| {
+            panic!(
+                "{}: passed check but failed evaluation: {e:?}",
+                path.display()
+            )
+        });
+    }
+    // and across the organization axis (analytical path, for speed)
+    for org in capstore::capstore::arch::Organization::all() {
+        let sc = Scenario { organization: org, ..Scenario::default() };
+        let report = check_scenario(&sc, None).unwrap();
+        if report.passed() {
+            ev.evaluate_analytical(&sc).unwrap_or_else(|e| {
+                panic!("{}: passed check but failed evaluation: {e:?}",
+                       org.label())
+            });
+        }
+    }
+}
+
+#[test]
+fn all_examples_mode_is_clean() {
+    // cwd of an integration test is the crate root (rust/), so the
+    // command resolves the repo-root examples/ via its ../ fallback
+    let out = Proc::new(env!("CARGO_BIN_EXE_capstore"))
+        .args(["check", "--all-examples", "--format", "json"])
+        .output()
+        .expect("spawn capstore");
+    assert!(
+        out.status.success(),
+        "check --all-examples failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let doc = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(doc.get("errors"), Some(&Json::Num(0.0)));
+    assert_eq!(doc.get("warnings"), Some(&Json::Num(0.0)));
+    match doc.get("checked") {
+        Some(&Json::Num(n)) => assert!(n >= 3.0, "only {n} examples"),
+        other => panic!("bad `checked` field: {other:?}"),
+    }
+}

@@ -120,6 +120,36 @@ fn golden_traffic_json() {
 }
 
 #[test]
+fn golden_check_json() {
+    golden_check(
+        "check",
+        &["check", "--model", "mnist", "--tech", "32nm", "--format",
+          "json"],
+        &["checked", "errors", "warnings", "scenarios"],
+    );
+}
+
+#[test]
+fn golden_dse_json_has_no_wall_clock() {
+    golden_check(
+        "dse",
+        &["dse", "--model", "mnist", "--tech", "32nm", "--threads", "1",
+          "--format", "json"],
+        &["network", "tech", "points", "pareto_front", "best"],
+    );
+    // regression for the wall-clock leak: the JSON document used to
+    // carry a `seconds` field measured with Instant::now(), making
+    // `--format json` non-reproducible run to run
+    let out = run_capstore(&["dse", "--model", "mnist", "--tech", "32nm",
+                             "--threads", "1", "--format", "json"]);
+    let doc = Json::parse(&out).expect("dse JSON parses");
+    assert!(
+        doc.get("seconds").is_none(),
+        "dse JSON leaks wall-clock timing"
+    );
+}
+
+#[test]
 fn unknown_subcommand_fails_with_suggestion() {
     // the satellite bugfix: `capstore frobnicate --x 1` used to parse
     // fine and only die in the dispatcher; a near-miss now gets a

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# Regenerate the machine-readable bench snapshots under
-# rust/benches/snapshots/.
+# Regenerate (default) or gate (--check) the machine-readable bench
+# snapshots under rust/benches/snapshots/.
 #
 # Each JSON bench prints its result as the last flush-left JSON line of
 # its stdout; this script captures that line per bench into
@@ -10,12 +10,40 @@
 # placeholders carry `null` timings and record the schema only — see
 # rust/benches/snapshots/README.md).
 #
-# Usage: tools/bench_snapshot.sh [outdir]   (default: the committed dir)
+# Usage:
+#   tools/bench_snapshot.sh [outdir]      regenerate (default: committed dir)
+#   tools/bench_snapshot.sh --check [dir] regenerate to a temp dir and
+#                                         compare against [dir] (default:
+#                                         the committed snapshots)
+#
+# --check comparison rules, per key of each BENCH_*.json:
+#   * the key sets must match exactly (schema drift fails);
+#   * a null baseline value accepts any current value — that is how the
+#     committed placeholders stay machine-independent while still
+#     pinning the schema;
+#   * a zero or boolean or string baseline must match exactly — these
+#     are semantic invariants (e.g. dse_timeline_builds = 0,
+#     deterministic = true), not timings;
+#   * any other numeric baseline must be within BENCH_TOLERANCE
+#     (default 0.5, i.e. +/-50% relative) — loose on purpose: it only
+#     catches order-of-magnitude regressions, not machine jitter.
 
 set -eu
 cd "$(dirname "$0")/.."
 
-outdir="${1:-rust/benches/snapshots}"
+check=0
+if [ "${1:-}" = "--check" ]; then
+  check=1
+  shift
+fi
+
+baseline="${1:-rust/benches/snapshots}"
+if [ "$check" -eq 1 ]; then
+  outdir="$(mktemp -d)"
+  trap 'rm -rf "$outdir"' EXIT
+else
+  outdir="$baseline"
+fi
 mkdir -p "$outdir"
 
 for bench in dse_throughput timeline_build traffic_sim; do
@@ -30,4 +58,58 @@ for bench in dse_throughput timeline_build traffic_sim; do
   echo "   -> $outdir/BENCH_$bench.json" >&2
 done
 
-echo "snapshots written to $outdir" >&2
+if [ "$check" -eq 0 ]; then
+  echo "snapshots written to $outdir" >&2
+  exit 0
+fi
+
+BENCH_TOLERANCE="${BENCH_TOLERANCE:-0.5}" \
+python3 - "$baseline" "$outdir" <<'PY'
+import json, os, sys
+
+baseline_dir, current_dir = sys.argv[1], sys.argv[2]
+tol = float(os.environ["BENCH_TOLERANCE"])
+failures = []
+
+for name in sorted(os.listdir(baseline_dir)):
+    if not (name.startswith("BENCH_") and name.endswith(".json")):
+        continue
+    with open(os.path.join(baseline_dir, name)) as f:
+        base = json.load(f)
+    cur_path = os.path.join(current_dir, name)
+    if not os.path.exists(cur_path):
+        failures.append(f"{name}: no current snapshot generated")
+        continue
+    with open(cur_path) as f:
+        cur = json.load(f)
+    if set(base) != set(cur):
+        failures.append(
+            f"{name}: key sets differ "
+            f"(missing {sorted(set(base) - set(cur))}, "
+            f"extra {sorted(set(cur) - set(base))})")
+        continue
+    for key, want in base.items():
+        got = cur[key]
+        if want is None:
+            continue  # placeholder: schema-only
+        if isinstance(want, bool) or isinstance(want, str) or want == 0:
+            if got != want:
+                failures.append(f"{name}: {key} = {got!r}, want {want!r}")
+        elif isinstance(want, (int, float)):
+            if not isinstance(got, (int, float)) or isinstance(got, bool):
+                failures.append(f"{name}: {key} = {got!r}, want a number")
+            elif abs(got - want) > tol * abs(want):
+                failures.append(
+                    f"{name}: {key} = {got} drifted more than "
+                    f"{tol:.0%} from baseline {want}")
+        elif got != want:
+            failures.append(f"{name}: {key} = {got!r}, want {want!r}")
+
+if failures:
+    print("bench snapshot check FAILED:", file=sys.stderr)
+    for f in failures:
+        print(f"  {f}", file=sys.stderr)
+    sys.exit(1)
+print(f"bench snapshot check: clean vs {baseline_dir} "
+      f"(tolerance {tol:.0%})", file=sys.stderr)
+PY

@@ -1,0 +1,68 @@
+#!/usr/bin/env bash
+# Determinism lint for the simulation core.
+#
+# The modules below promise bit-reproducible results: same scenario in,
+# same bytes out, across runs, machines, and thread counts.  That
+# promise dies quietly the first time someone reads a wall clock or
+# iterates a hash map inside them, so this lint greps for the usual
+# suspects and fails the build on any hit:
+#
+#   Instant::now / SystemTime   wall-clock reads
+#   thread_rng / rand::         ambient (non-seeded) randomness
+#   HashMap / HashSet           iteration order varies per process
+#
+# A hit can be exempted by putting `lint:allow(determinism)` in a
+# comment ON THE SAME LINE, ideally with a reason nearby — e.g. the DSE
+# CostCache holds a HashMap it never iterates.  Modules outside the
+# scope (cli, coordinator, bench, report) may use wall clocks freely:
+# progress feedback and wall-clock benchmarking are their whole point.
+#
+# Usage: tools/lint_determinism.sh   (exit 0 clean, 1 on findings)
+
+set -eu
+cd "$(dirname "$0")/.."
+
+scope=(
+  rust/src/timeline
+  rust/src/traffic
+  rust/src/faults
+  rust/src/dse
+  rust/src/scenario
+  rust/src/analysis
+)
+
+patterns=(
+  'Instant::now'
+  '\bSystemTime\b'
+  '\bthread_rng\b'
+  '\brand::'
+  '\bHashMap\b'
+  '\bHashSet\b'
+)
+
+# ripgrep when available (fast, honors .gitignore), plain grep otherwise
+search() {
+  if command -v rg >/dev/null 2>&1; then
+    rg -n -e "$1" "${scope[@]}" || true
+  else
+    grep -rEn -e "$1" --include='*.rs' "${scope[@]}" || true
+  fi
+}
+
+fail=0
+for pat in "${patterns[@]}"; do
+  hits="$(search "$pat" | grep -v 'lint:allow(determinism)' || true)"
+  if [ -n "$hits" ]; then
+    echo "determinism lint: forbidden pattern '$pat' in the simulation core:" >&2
+    printf '%s\n' "$hits" >&2
+    echo >&2
+    fail=1
+  fi
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "determinism lint FAILED — fix the uses above or add a" >&2
+  echo "same-line 'lint:allow(determinism)' comment with a reason" >&2
+  exit 1
+fi
+echo "determinism lint: clean (${#scope[@]} modules, ${#patterns[@]} patterns)" >&2
