@@ -1,0 +1,186 @@
+//! Bench: the million-point DSE stack — contention-free cost-table
+//! kernel + streaming Pareto front + dominance-aware pruning — against
+//! the PR7 per-point engine (shared ctx, `Mutex<HashMap>` cost cache,
+//! per-spec arch rebuild).
+//!
+//! Reports JSON on the last line so CI and scripts can consume it:
+//!
+//! ```json
+//! {"bench":"dse_scale","huge_points":130536,...,"prune_identical":true}
+//! ```
+//!
+//! Modes:
+//!   (default)   measure + print JSON
+//!   --check     CI mode: additionally assert the table kernel is
+//!               >= 3x the PR7 path on the huge slice on machines with
+//!               >= 4 cores (skips the assertion, not the run, on
+//!               smaller machines)
+//!   --threads N worker override (0 = all cores)
+//!
+//! Before timing anything the bench verifies (1) the table kernel is
+//! bit-identical to the legacy per-point engine, and (2) the streamed
+//! front — pruned and unpruned — is bit-identical to the post-hoc
+//! `pareto::front` over the full sweep.  A violation fails the bench
+//! outright.
+
+use capstore::bench;
+use capstore::capsnet::CapsNetConfig;
+use capstore::dse::{pareto, Explorer, MultiSweep, SweepSpace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+    let threads: usize = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let mut ex = Explorer::new(CapsNetConfig::mnist()).with_threads(threads);
+    ex.space = SweepSpace::huge();
+    let huge_points = ex.space.num_points();
+    assert!(
+        huge_points >= 100_000,
+        "huge slice shrank below the scale target: {huge_points}"
+    );
+
+    // ---- correctness gates (before any timing) ------------------------
+    let legacy = ex.sweep_legacy().expect("legacy sweep");
+    let table = ex.sweep().expect("table sweep");
+    assert_eq!(legacy.len(), table.len());
+    for (i, (l, t)) in legacy.iter().zip(&table).enumerate() {
+        assert!(
+            l.bit_eq(t),
+            "table kernel diverged from the PR7 engine at point {i}: \
+             {l:?} vs {t:?}"
+        );
+    }
+    let post_hoc = pareto::front(&table);
+    drop(legacy);
+
+    let (front_off, stats_off) = ex.sweep_front(false).expect("front");
+    let (front_on, stats_on) = ex.sweep_front(true).expect("pruned front");
+    let same = |a: &[capstore::dse::DesignPoint],
+                b: &[capstore::dse::DesignPoint]| {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.bit_eq(y))
+    };
+    assert!(
+        same(&front_off, &post_hoc),
+        "streamed front diverged from post-hoc pareto::front"
+    );
+    assert!(
+        same(&front_on, &post_hoc),
+        "pruned front diverged from the exhaustive front"
+    );
+    assert_eq!(stats_off.priced_points, stats_off.specs);
+    assert_eq!(
+        stats_on.pruned_points + stats_on.priced_points,
+        stats_on.specs
+    );
+    let front_points = front_on.len();
+    println!(
+        "[dse_scale] determinism: {huge_points} table points bit-identical \
+         to the PR7 engine; pruned + streamed fronts ({front_points} \
+         points) match post-hoc pareto (pruned {} of {} points)",
+        stats_on.pruned_points, stats_on.specs
+    );
+
+    // ---- timings ------------------------------------------------------
+    let t_legacy = bench::bench(
+        "dse_scale: PR7 per-point engine (huge slice)",
+        0,
+        3,
+        || {
+            std::hint::black_box(ex.sweep_legacy().unwrap());
+        },
+    );
+    let t_table =
+        bench::bench("dse_scale: table kernel (huge slice)", 0, 3, || {
+            std::hint::black_box(ex.sweep().unwrap());
+        });
+    let slice_speedup = t_legacy.median / t_table.median.max(1e-9);
+
+    // the grand multi-sweep: every model x every node x the huge space,
+    // streamed — the full point set never materializes
+    let ms = MultiSweep {
+        threads,
+        space: SweepSpace::huge(),
+        ..MultiSweep::default()
+    };
+    let huge_grand_points = ms.num_points();
+    assert!(
+        huge_grand_points >= 1_000_000,
+        "huge grand sweep shrank below a million points: \
+         {huge_grand_points}"
+    );
+    let mut huge_front_points = 0usize;
+    let t_grand = bench::bench(
+        "dse_scale: huge grand sweep (streaming front, pruned)",
+        0,
+        1,
+        || {
+            let fronts = ms.run_front(true).unwrap();
+            huge_front_points =
+                fronts.iter().map(|mf| mf.front.len()).sum();
+            std::hint::black_box(fronts);
+        },
+    );
+    let grand_pps =
+        huge_grand_points as f64 / (t_grand.median / 1.0e3).max(1e-12);
+
+    println!(
+        "\n[dse_scale] huge slice ({huge_points} points): PR7 engine \
+         {:.2} ms -> table kernel {:.2} ms ({slice_speedup:.2}x) on \
+         {cores} cores",
+        t_legacy.median, t_table.median
+    );
+    println!(
+        "[dse_scale] huge grand sweep: {huge_grand_points} points in \
+         {:.2} ms ({grand_pps:.0} points/s), {huge_front_points} front \
+         points survive",
+        t_grand.median
+    );
+
+    // machine-readable result (last line)
+    println!(
+        "{{\"bench\":\"dse_scale\",\"huge_points\":{huge_points},\
+         \"huge_grand_points\":{huge_grand_points},\"cores\":{cores},\
+         \"threads\":{threads},\
+         \"legacy_slice_ms\":{:.4},\"table_slice_ms\":{:.4},\
+         \"slice_speedup\":{slice_speedup:.3},\"huge_grand_ms\":{:.4},\
+         \"huge_points_per_sec\":{grand_pps:.0},\
+         \"front_points\":{front_points},\
+         \"huge_front_points\":{huge_front_points},\
+         \"pruned_points\":{},\"priced_points\":{},\
+         \"prune_identical\":true}}",
+        t_legacy.median,
+        t_table.median,
+        t_grand.median,
+        stats_on.pruned_points,
+        stats_on.priced_points
+    );
+
+    if check {
+        if cores >= 4 {
+            assert!(
+                slice_speedup >= 3.0,
+                "check failed: table-kernel speedup {slice_speedup:.2}x \
+                 < 3x over the PR7 engine on {cores} cores"
+            );
+            println!(
+                "dse_scale check OK ({slice_speedup:.2}x >= 3x on \
+                 {cores} cores)"
+            );
+        } else {
+            println!(
+                "dse_scale check SKIPPED (only {cores} cores; need >= 4 \
+                 for the speedup assertion)"
+            );
+        }
+    }
+}

@@ -176,6 +176,43 @@ impl LatencyBound {
     }
 }
 
+/// A monotone (energy, area) lower bound for a whole subtree of the
+/// sweep lattice — the dominance-aware analogue of [`LatencyBound`].
+///
+/// The sweep's geometry table supplies one bound per (organization,
+/// banks, sectors) geometry: the hidden-transfer base energy (every
+/// DMA coordinate of the geometry prices to `base + stall` with
+/// `stall >= 0`) and the exact area (DMA-independent).  Both are
+/// *admissible* — no point of the subtree can price below them — so a
+/// subtree may be discarded iff some already-evaluated point
+/// **strictly dominates** the bound: that point then strictly
+/// dominates every point above the bound, and none of them can reach
+/// the Pareto front.  Equality alone never prunes (an equal-(energy,
+/// area) duplicate is not dominated and must survive), which is what
+/// keeps the pruned front bit-identical — tie order included — to the
+/// exhaustive one (`tests/dse_parallel.rs` pins it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoBound {
+    /// Lower bound on `DesignPoint::onchip_energy_pj` over the subtree.
+    pub energy_lb_pj: f64,
+    /// Lower bound on `DesignPoint::area_mm2` over the subtree.
+    pub area_lb_mm2: f64,
+}
+
+impl ParetoBound {
+    /// Does an evaluated point at `(energy_pj, area_mm2)` strictly
+    /// dominate this bound — and therefore everything above it?  NaN
+    /// coordinates on either side make every comparison false, so a
+    /// NaN bound (or incumbent) never prunes anything: pruning stays
+    /// sound even off the models' finite-value contract.
+    pub fn dominated_by(&self, energy_pj: f64, area_mm2: f64) -> bool {
+        energy_pj <= self.energy_lb_pj
+            && area_mm2 <= self.area_lb_mm2
+            && (energy_pj < self.energy_lb_pj
+                || area_mm2 < self.area_lb_mm2)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,5 +293,29 @@ mod tests {
         // 1 ms at 1 GHz = 1e6 cycles
         let slo = LatencyBound::from_slo(1.0, 1.0e9);
         assert_eq!(slo.max_latency_cycles, Some(1_000_000));
+    }
+
+    #[test]
+    fn pareto_bound_requires_strict_dominance() {
+        let b = ParetoBound { energy_lb_pj: 2.0, area_lb_mm2: 3.0 };
+        // strictly better on one axis, no worse on the other: prunes
+        assert!(b.dominated_by(1.0, 3.0));
+        assert!(b.dominated_by(2.0, 2.5));
+        assert!(b.dominated_by(1.0, 1.0));
+        // exact tie: an equal duplicate is NOT dominated — never prune
+        assert!(!b.dominated_by(2.0, 3.0));
+        // worse on either axis: no dominance
+        assert!(!b.dominated_by(2.5, 1.0));
+        assert!(!b.dominated_by(1.0, 3.5));
+    }
+
+    #[test]
+    fn pareto_bound_nan_never_prunes() {
+        let nan_bound =
+            ParetoBound { energy_lb_pj: f64::NAN, area_lb_mm2: 1.0 };
+        assert!(!nan_bound.dominated_by(0.0, 0.0));
+        let b = ParetoBound { energy_lb_pj: 2.0, area_lb_mm2: 3.0 };
+        assert!(!b.dominated_by(f64::NAN, 0.0));
+        assert!(!b.dominated_by(0.0, f64::NAN));
     }
 }

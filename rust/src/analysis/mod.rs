@@ -10,7 +10,7 @@ pub mod diag;
 pub mod offchip;
 pub mod requirements;
 
-pub use bounds::{GatingBounds, LatencyBound, StaticTiming};
+pub use bounds::{GatingBounds, LatencyBound, ParetoBound, StaticTiming};
 pub use breakdown::{ArchitectureEnergy, EnergyBreakdown, SystemEnergy};
 pub use check::{check_scenario, CheckReport};
 pub use context::SweepContext;

@@ -1,9 +1,10 @@
-//! `capstore dse` — the §4.2 design-space exploration (parallel
-//! incremental engine) and the `--space full` grand sweep; extracted
-//! from the old monolith with bit-identical output.
+//! `capstore dse` — the §4.2 design-space exploration (streaming-front
+//! table engine with optional dominance-aware pruning) and the
+//! `--space full` grand sweep; extracted from the old monolith with
+//! bit-identical output.
 
 use crate::capsnet::CapsNetConfig;
-use crate::dse::{Explorer, MultiSweep, SweepSpace};
+use crate::dse::{Explorer, MultiSweep, SweepSpace, SweepStats};
 use crate::report::Table;
 use crate::util::json::Json;
 use crate::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
@@ -72,6 +73,7 @@ impl Command for Dse {
         super::cmd_check::preflight(ctx, &sc, ctx.scenario_doc())?;
         let threads: usize = ctx.parsed("threads")?.unwrap_or(0);
         let space = ctx.flag("space").unwrap_or("default");
+        let prune = ctx.flag("prune").unwrap_or("off") == "on";
 
         if space == "full" || space == "grand" {
             // an explicit model/tech selection narrows the grand sweep:
@@ -97,6 +99,7 @@ impl Command for Dse {
             return run_full(
                 ctx,
                 threads,
+                prune,
                 model_filter.as_deref(),
                 tech_filter,
             );
@@ -107,9 +110,10 @@ impl Command for Dse {
         ex.space = match space {
             "default" => SweepSpace::default(),
             "large" => SweepSpace::large(),
+            "huge" => SweepSpace::huge(),
             other => {
                 return Err(Error::Config(format!(
-                    "--space: want default|large|full, got {other:?}"
+                    "--space: want default|large|huge|full, got {other:?}"
                 )))
             }
         };
@@ -119,19 +123,23 @@ impl Command for Dse {
         }
 
         let t0 = std::time::Instant::now();
-        let points = ex.sweep()?;
+        // streaming front: the full point set is never materialized —
+        // the only way the >=100k-point huge space stays cheap — and
+        // with --prune on whole geometry subtrees the incumbent front
+        // dominates are skipped before pricing (bit-identical front)
+        let (front, stats) = ex.sweep_front(prune)?;
         // wall-clock is progress feedback only: printed eagerly in
         // table mode, never part of the JSON document (which stays
         // bit-deterministic across runs)
         let secs = t0.elapsed().as_secs_f64();
         ctx.progress(format!(
-            "explored {} design points in {:.1} ms ({:.0} points/s)",
-            points.len(),
+            "explored {} of {} design points in {:.1} ms ({:.0} points/s)",
+            stats.priced_points,
+            stats.specs,
             secs * 1.0e3,
-            points.len() as f64 / secs.max(1e-12)
+            stats.priced_points as f64 / secs.max(1e-12)
         ));
-        let front = Explorer::pareto(&points);
-        let best = Explorer::best_energy(&points).expect("non-empty sweep");
+        let best = Explorer::best_energy(&front).expect("non-empty front");
 
         let mut t = Table::new(
             "DSE — Pareto front over (on-chip energy, area)",
@@ -155,7 +163,8 @@ impl Command for Dse {
         out.json = Json::obj(vec![
             ("network", Json::Str(sc.network.name.to_string())),
             ("tech", Json::Str(sc.tech.label().to_string())),
-            ("points", Json::Num(points.len() as f64)),
+            ("points", Json::Num(stats.specs as f64)),
+            ("stats", stats_json(&stats)),
             ("pareto_front", t.to_json()),
             (
                 "best",
@@ -174,6 +183,17 @@ impl Command for Dse {
 
         out.table(t);
         out.text(format!(
+            "\nsweep: {} specs over {} geometries x {} dma policies; \
+             pruned {} geometries ({} points), priced {}, front {}",
+            stats.specs,
+            stats.geometries,
+            stats.dma_policies,
+            stats.pruned_geometries,
+            stats.pruned_points,
+            stats.priced_points,
+            stats.front_len,
+        ));
+        out.text(format!(
             "\nselected (paper §5.2 criterion, min energy): {} banks={} sectors={} -> {}",
             best.organization.label(),
             best.banks,
@@ -184,12 +204,30 @@ impl Command for Dse {
     }
 }
 
+/// The sweep-statistics block shared by the default and `full` modes.
+/// Every field is a deterministic counter (no timings): the JSON
+/// document stays byte-identical across runs and thread counts.
+fn stats_json(s: &SweepStats) -> Json {
+    Json::obj(vec![
+        ("specs", Json::Num(s.specs as f64)),
+        ("geometries", Json::Num(s.geometries as f64)),
+        ("dma_policies", Json::Num(s.dma_policies as f64)),
+        ("pruned_geometries", Json::Num(s.pruned_geometries as f64)),
+        ("pruned_points", Json::Num(s.pruned_points as f64)),
+        ("priced_points", Json::Num(s.priced_points as f64)),
+        ("front_len", Json::Num(s.front_len as f64)),
+    ])
+}
+
 /// The grand sweep: every named network (or just `--model`) x every
 /// technology node (or just `--tech`) x the large space, with per-pair
-/// winners and throughput.
+/// winners and throughput.  Runs through the streaming front — only
+/// the per-pair Pareto fronts are ever held in memory, which is what
+/// lets `--space huge --space full` scale past a million points.
 fn run_full(
     ctx: &CommandContext,
     threads: usize,
+    prune: bool,
     model: Option<&str>,
     tech: Option<&'static str>,
 ) -> Result<Output> {
@@ -217,14 +255,16 @@ fn run_full(
     ));
     let mut out = Output::new();
     let t0 = std::time::Instant::now();
-    let all = ms.run()?;
+    let fronts = ms.run_front(prune)?;
     // wall-clock is progress feedback only, never part of the JSON
     let secs = t0.elapsed().as_secs_f64();
+    let priced: u64 = fronts.iter().map(|mf| mf.stats.priced_points).sum();
     ctx.progress(format!(
-        "explored {} design points in {:.1} ms ({:.0} points/s)",
-        all.len(),
+        "explored {} of {} design points in {:.1} ms ({:.0} points/s)",
+        priced,
+        ms.num_points(),
         secs * 1.0e3,
-        all.len() as f64 / secs.max(1e-12)
+        priced as f64 / secs.max(1e-12)
     ));
 
     let mut t = Table::new(
@@ -232,34 +272,46 @@ fn run_full(
         &["model", "tech", "org", "banks", "sectors", "dma",
           "energy/inf", "area mm2"],
     );
-    for cfg in &ms.models {
-        for (tech_name, _) in &ms.techs {
-            let best = all
-                .iter()
-                .filter(|mp| mp.model == cfg.name && mp.tech == *tech_name)
-                .min_by(|a, b| {
-                    a.point
-                        .onchip_energy_pj
-                        .partial_cmp(&b.point.onchip_energy_pj)
-                        .unwrap()
-                })
-                .expect("non-empty slice");
-            t.row(vec![
-                best.model.into(),
-                best.tech.into(),
-                best.point.organization.label().into(),
-                best.point.banks.to_string(),
-                best.point.sectors.to_string(),
-                best.point.dma.model.label().into(),
-                fmt_energy_uj(best.point.onchip_energy_pj),
-                format!("{:.3}", best.point.area_mm2),
-            ]);
-        }
+    // fronts arrive in (models outer x techs inner) order — the same
+    // order the winner table always used
+    let mut total = SweepStats::default();
+    for mf in &fronts {
+        let s = &mf.stats;
+        total.specs += s.specs;
+        total.geometries += s.geometries;
+        total.dma_policies += s.dma_policies;
+        total.pruned_geometries += s.pruned_geometries;
+        total.pruned_points += s.pruned_points;
+        total.priced_points += s.priced_points;
+        total.front_len += s.front_len;
+        let best =
+            Explorer::best_energy(&mf.front).expect("non-empty front");
+        t.row(vec![
+            mf.model.into(),
+            mf.tech.into(),
+            best.organization.label().into(),
+            best.banks.to_string(),
+            best.sectors.to_string(),
+            best.dma.model.label().into(),
+            fmt_energy_uj(best.onchip_energy_pj),
+            format!("{:.3}", best.area_mm2),
+        ]);
     }
     out.json = Json::obj(vec![
-        ("points", Json::Num(all.len() as f64)),
+        ("points", Json::Num(ms.num_points() as f64)),
+        ("stats", stats_json(&total)),
         ("winners", t.to_json()),
     ]);
     out.table(t);
+    out.text(format!(
+        "\nsweep: {} specs across {} (model, tech) pairs; pruned {} \
+         geometries ({} points), priced {}, fronts {}",
+        total.specs,
+        fronts.len(),
+        total.pruned_geometries,
+        total.pruned_points,
+        total.priced_points,
+        total.front_len,
+    ));
     Ok(out)
 }

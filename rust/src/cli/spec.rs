@@ -260,11 +260,23 @@ pub const THREADS: FlagSpec = FlagSpec {
 
 pub const SPACE: FlagSpec = FlagSpec {
     name: "space",
-    kind: ValueKind::Choice(&["default", "large", "full"]),
-    hint: "<default|large|full>",
+    kind: ValueKind::Choice(&["default", "large", "huge", "full"]),
+    hint: "<default|large|huge|full>",
     doc: "sweep extent (full = all tech nodes x all models, narrowed \
-          by --model/--tech; large/full cross the dma axis too)",
+          by --model/--tech; large/huge/full cross the dma axis too; \
+          huge is the >=100k-point scale space)",
     default: "default",
+    group: FlagGroup::Dse,
+};
+
+pub const PRUNE: FlagSpec = FlagSpec {
+    name: "prune",
+    kind: ValueKind::Choice(&["on", "off"]),
+    hint: "<on|off>",
+    doc: "dominance-aware branch-and-bound: skip geometry subtrees the \
+          incumbent Pareto front already strictly dominates (the front \
+          is bit-identical either way)",
+    default: "off",
     group: FlagGroup::Dse,
 };
 
@@ -485,7 +497,7 @@ pub const FAULT_KNOBS: &[FlagSpec] = &[
 ];
 
 /// Design-space exploration controls.
-pub const DSE: &[FlagSpec] = &[THREADS, SPACE];
+pub const DSE: &[FlagSpec] = &[THREADS, SPACE, PRUNE];
 
 /// `--tech` alone: `dse` pins the workload node but explores the
 /// org/geometry/dma axes itself, so the rest of [`MEMORY`] is rejected

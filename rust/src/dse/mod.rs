@@ -6,33 +6,47 @@
 //! paper's Table 1 points are one slice of this space; `capstore dse`
 //! prints the sweep and the winner.
 //!
-//! The engine is **parallel and incremental**:
+//! The engine is **parallel, incremental and scale-oriented**:
 //!
 //! * [`context::SweepContext`] — everything arch-independent (schedule,
 //!   op profiles, traffic, cycle totals) computed once per network and
 //!   shared immutably by every point;
 //! * [`sweep::CostCache`] — memoized CACTI solutions keyed on the full
 //!   SRAM geometry + technology, shared across organizations and points;
+//! * [`table::CostTable`] — the contention-free cost kernel: distinct
+//!   geometries deduplicated and solved once up front, then lock-free
+//!   indexed pricing on the parallel hot path;
 //! * [`sweep::run`] — chunked `std::thread::scope` execution with
 //!   deterministic, bit-identical-to-serial output ordering;
-//! * [`pareto::front`] — O(n log n) sort-and-scan skyline replacing the
-//!   old all-pairs filter.
+//! * [`skyline::Skyline`] — streaming O(log n) Pareto maintenance
+//!   feeding the incumbent front to the dominance-aware
+//!   branch-and-bound in [`sweep::run_front`];
+//! * [`pareto::front`] — O(n log n) sort-and-scan skyline for post-hoc
+//!   front queries (and the oracle the streaming path is pinned to).
 //!
-//! `benches/dse_throughput.rs` measures the stack end to end and prints
-//! points/sec + speedup vs the pre-refactor serial baseline as JSON.
+//! `benches/dse_throughput.rs` measures the point-list stack end to
+//! end; `benches/dse_scale.rs` drives the ≥1M-point
+//! [`SweepSpace::huge`] space through the table kernel + streaming
+//! front and gates the speedup over the PR7 per-point engine.
 
 pub mod context;
 pub mod pareto;
+pub mod skyline;
 pub mod sweep;
+pub mod table;
 
 use crate::analysis::breakdown::EnergyModel;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::{CapStoreArch, Organization};
 use crate::error::Result;
-use crate::timeline::{self, DmaPolicy};
+use crate::timeline::{self, DmaModel, DmaPolicy};
 
 pub use context::SweepContext;
-pub use sweep::{CostCache, MultiPoint, MultiSweep, PointSpec};
+pub use skyline::Skyline;
+pub use sweep::{
+    CostCache, MultiFront, MultiPoint, MultiSweep, PointSpec, SweepStats,
+};
+pub use table::CostTable;
 
 /// One evaluated design point.
 #[derive(Debug, Clone, PartialEq)]
@@ -129,6 +143,33 @@ impl SweepSpace {
             ],
             organizations: Organization::all().to_vec(),
             dma: DmaPolicy::all_models(),
+        }
+    }
+
+    /// The million-point scale target: ≥100k points per (network,
+    /// tech) pair — 24 bank counts × 48 sector granularities × 6
+    /// organizations × 37 DMA policies (the hidden-transfer default
+    /// plus serial/double-buffered at 18 bandwidths) = 130,536 points
+    /// per pair, 1,044,288 across the grand sweep.  Built for the
+    /// table-kernel + branch-and-bound path: consume it through
+    /// [`Explorer::sweep_front`] / [`MultiSweep::run_front`] (which
+    /// stream the front) rather than materializing the point list.
+    pub fn huge() -> Self {
+        let bandwidths = [
+            1u64, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192,
+            256, 384, 512,
+        ];
+        let mut dma = vec![DmaPolicy::default()];
+        for model in [DmaModel::Serial, DmaModel::DoubleBuffered] {
+            for &bandwidth_bytes_per_cycle in &bandwidths {
+                dma.push(DmaPolicy { model, bandwidth_bytes_per_cycle });
+            }
+        }
+        SweepSpace {
+            banks: (1..=24).map(|i| 2 * i).collect(),
+            sectors: (1..=48).map(|i| 4 * i).collect(),
+            organizations: Organization::all().to_vec(),
+            dma,
         }
     }
 
@@ -240,6 +281,38 @@ impl Explorer {
         )
     }
 
+    /// Stream the sweep through the incremental [`Skyline`] and return
+    /// only the Pareto front plus deterministic [`SweepStats`] — never
+    /// materializing the point list, which is what lets
+    /// [`SweepSpace::huge`] run in bounded memory.  With `prune`, the
+    /// dominance-aware branch-and-bound skips geometry subtrees the
+    /// incumbent front already strictly dominates; the front is
+    /// bit-identical either way, and identical to
+    /// `Explorer::pareto(&self.sweep()?)` — pinned by
+    /// `tests/dse_parallel.rs`.
+    pub fn sweep_front(
+        &self,
+        prune: bool,
+    ) -> Result<(Vec<DesignPoint>, SweepStats)> {
+        crate::scenario::Evaluator::new().sweep_model_front(
+            &self.model,
+            &self.space,
+            self.threads,
+            prune,
+        )
+    }
+
+    /// The PR7 engine path — shared context and mutex-guarded cost
+    /// cache, but per-point architecture build + energy integration —
+    /// kept as the speedup baseline for `benches/dse_scale.rs` and as
+    /// an equality oracle for the table kernel.
+    pub fn sweep_legacy(&self) -> Result<Vec<DesignPoint>> {
+        let ctx = self.model.context();
+        let cache = sweep::CostCache::new();
+        let specs = sweep::enumerate(&self.space);
+        sweep::run_legacy(&self.model, &ctx, &cache, &specs, self.threads)
+    }
+
     /// The pre-refactor evaluation path — per-point context rebuild, no
     /// cost cache, serial — kept as the speedup baseline for
     /// `benches/dse_throughput.rs` and the bit-identity tests.  The DMA
@@ -293,10 +366,16 @@ impl Explorer {
     }
 
     /// Lowest-energy point (the paper's selection criterion → PG-SEP).
+    ///
+    /// Ordered by `f64::total_cmp` — bit-identical to the historical
+    /// `partial_cmp().unwrap()` for the non-NaN energies the models
+    /// produce, but a synthetic NaN now sorts deterministically after
+    /// every finite value instead of panicking (regression-tested in
+    /// `pareto::tests`).
     pub fn best_energy(points: &[DesignPoint]) -> Option<&DesignPoint> {
-        points.iter().min_by(|a, b| {
-            a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
-        })
+        points
+            .iter()
+            .min_by(|a, b| a.onchip_energy_pj.total_cmp(&b.onchip_energy_pj))
     }
 }
 
@@ -454,6 +533,54 @@ mod tests {
         // the overlap axis triples the large space
         assert_eq!(large.dma.len(), 3);
         assert_eq!(large.num_points() % 3, 0);
+    }
+
+    #[test]
+    fn huge_space_hits_the_scale_targets() {
+        let huge = SweepSpace::huge();
+        assert!(huge.check().is_empty());
+        // ≥100k per (network, tech) pair...
+        assert_eq!(huge.num_points(), 130_536);
+        assert!(huge.num_points() >= 100_000);
+        // ...and ≥1M across the grand sweep
+        let ms = MultiSweep { space: SweepSpace::huge(), ..MultiSweep::default() };
+        assert_eq!(ms.num_points(), 1_044_288);
+        assert!(ms.num_points() >= 1_000_000);
+        // one hidden-transfer policy + 2 models x 18 bandwidths
+        assert_eq!(huge.dma.len(), 37);
+    }
+
+    #[test]
+    fn streamed_front_matches_post_hoc_pareto() {
+        let mut ex = quick_explorer();
+        ex.space.dma = DmaPolicy::all_models();
+        let post_hoc = Explorer::pareto(&ex.sweep().unwrap());
+        for prune in [false, true] {
+            let (front, stats) = ex.sweep_front(prune).unwrap();
+            assert_eq!(front.len(), post_hoc.len());
+            for (a, b) in front.iter().zip(&post_hoc) {
+                assert!(a.bit_eq(b), "streamed front diverged (prune={prune})");
+            }
+            assert_eq!(stats.specs, ex.space.num_points() as u64);
+            assert_eq!(stats.pruned_points + stats.priced_points, stats.specs);
+            assert_eq!(stats.front_len, front.len() as u64);
+            if !prune {
+                assert_eq!(stats.pruned_points, 0);
+                assert_eq!(stats.pruned_geometries, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn table_kernel_matches_the_legacy_engine_bit_for_bit() {
+        let mut ex = quick_explorer();
+        ex.space.dma = DmaPolicy::all_models();
+        let legacy = ex.sweep_legacy().unwrap();
+        let table = ex.sweep().unwrap();
+        assert_eq!(legacy.len(), table.len());
+        for (a, b) in legacy.iter().zip(&table) {
+            assert!(a.bit_eq(b), "table kernel diverged: {a:?} vs {b:?}");
+        }
     }
 
     #[test]

@@ -7,48 +7,79 @@
 //! single pass keeps exactly the points no earlier point dominates.
 //! O(n log n), and the output is *identical* (order included) to the
 //! naive filter — a property test in `tests/dse_parallel.rs` pins that.
+//!
+//! Ordering uses `f64::total_cmp` throughout: bit-identical to the old
+//! `partial_cmp().unwrap()` for the finite, non-negative values the
+//! models produce, but a synthetic NaN coordinate now sorts under the
+//! IEEE total order instead of panicking.  Under weak dominance a NaN
+//! coordinate makes every comparison false, so such points are neither
+//! dominated nor dominating — both fronts keep them, matching
+//! [`front_naive`] exactly (regression-tested below).  Negative zeros
+//! are outside the contract (the models sum non-negative terms); NaNs
+//! only enter through synthetic inputs.
+
+use std::cmp::Ordering;
 
 use super::DesignPoint;
 
 /// Non-dominated subset under weak (energy, area) dominance, sorted by
 /// energy ascending (ties keep their original sweep order, matching the
-/// stable sort of the legacy implementation).
+/// stable sort of the legacy implementation; NaN energies sort last
+/// among non-negative values, per `total_cmp`).
 pub fn front(points: &[DesignPoint]) -> Vec<DesignPoint> {
     if points.is_empty() {
         return Vec::new();
     }
 
-    // Sort indices by (energy, area, original index).
+    // Sort indices by (energy, area, original index) under the IEEE
+    // total order.
     let mut idx: Vec<usize> = (0..points.len()).collect();
     idx.sort_by(|&a, &b| {
         let pa = &points[a];
         let pb = &points[b];
         pa.onchip_energy_pj
-            .partial_cmp(&pb.onchip_energy_pj)
-            .expect("NaN energy in design point")
-            .then(
-                pa.area_mm2
-                    .partial_cmp(&pb.area_mm2)
-                    .expect("NaN area in design point"),
-            )
+            .total_cmp(&pb.onchip_energy_pj)
+            .then(pa.area_mm2.total_cmp(&pb.area_mm2))
             .then(a.cmp(&b))
     });
 
-    // Scan equal-energy groups.  Within a group only the minimum-area
-    // points can survive (any larger area is dominated by the group
-    // minimum at equal energy); they survive iff no strictly-cheaper
-    // group reached an area <= theirs.
+    // Scan equal-energy groups (grouped under total_cmp, so a NaN
+    // energy groups with bit-identical NaNs and the scan always
+    // advances).  Within a finite group only the minimum-area points
+    // can survive (any larger area is dominated by the group minimum
+    // at equal energy); they survive iff no strictly-cheaper group
+    // reached an area <= theirs.  NaN coordinates never dominate and
+    // are never dominated, so NaN-energy groups and NaN-area members
+    // survive unconditionally and leave `best_area` untouched.
     let mut keep = vec![false; points.len()];
     let mut best_area = f64::INFINITY;
     let mut i = 0;
     while i < idx.len() {
         let energy = points[idx[i]].onchip_energy_pj;
         let mut j = i;
-        while j < idx.len() && points[idx[j]].onchip_energy_pj == energy {
+        while j < idx.len()
+            && points[idx[j]].onchip_energy_pj.total_cmp(&energy)
+                == Ordering::Equal
+        {
             j += 1;
         }
+        if energy.is_nan() {
+            for &k in &idx[i..j] {
+                keep[k] = true;
+            }
+            i = j;
+            continue;
+        }
+        // NaN areas sort last within the group (total_cmp), so the
+        // first member holds the group's minimum area when any finite
+        // area exists.
         let group_min_area = points[idx[i]].area_mm2;
-        if group_min_area < best_area {
+        for &k in &idx[i..j] {
+            if points[k].area_mm2.is_nan() {
+                keep[k] = true;
+            }
+        }
+        if !group_min_area.is_nan() && group_min_area < best_area {
             for &k in &idx[i..j] {
                 if points[k].area_mm2 == group_min_area {
                     keep[k] = true;
@@ -67,9 +98,7 @@ pub fn front(points: &[DesignPoint]) -> Vec<DesignPoint> {
         .filter(|(k, _)| keep[*k])
         .map(|(_, p)| p.clone())
         .collect();
-    out.sort_by(|a, b| {
-        a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
-    });
+    out.sort_by(|a, b| a.onchip_energy_pj.total_cmp(&b.onchip_energy_pj));
     out
 }
 
@@ -81,9 +110,7 @@ pub fn front_naive(points: &[DesignPoint]) -> Vec<DesignPoint> {
         .filter(|p| !points.iter().any(|q| q.dominates(p)))
         .cloned()
         .collect();
-    out.sort_by(|a, b| {
-        a.onchip_energy_pj.partial_cmp(&b.onchip_energy_pj).unwrap()
-    });
+    out.sort_by(|a, b| a.onchip_energy_pj.total_cmp(&b.onchip_energy_pj));
     out
 }
 
@@ -149,6 +176,41 @@ mod tests {
         let f = front(&pts);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].area_mm2, 2.0);
+    }
+
+    #[test]
+    fn nan_points_survive_without_panicking() {
+        // Regression: both fronts used `partial_cmp().unwrap()` and
+        // panicked the moment a synthetic point carried a NaN
+        // coordinate.  Under weak dominance a NaN coordinate is never
+        // dominated and never dominates, so such points simply ride
+        // along in both implementations.
+        let pts = [
+            pt(f64::NAN, 1.0),
+            pt(2.0, f64::NAN),
+            pt(1.0, 2.5), // dominated by (1.0, 2.0)
+            pt(1.0, 2.0),
+        ];
+        let fast = front(&pts);
+        let naive = front_naive(&pts);
+        assert!(same(&fast, &naive), "fast {fast:?}\nnaive {naive:?}");
+        assert_eq!(fast.len(), 3);
+        // positive NaN energy sorts last under total_cmp
+        assert_eq!(fast[0].onchip_energy_pj, 1.0);
+        assert_eq!(fast[0].area_mm2, 2.0);
+        assert_eq!(fast[1].onchip_energy_pj, 2.0);
+        assert!(fast[1].area_mm2.is_nan());
+        assert!(fast[2].onchip_energy_pj.is_nan());
+    }
+
+    #[test]
+    fn best_energy_with_nan_returns_finite_min() {
+        // Regression: `Explorer::best_energy` panicked on NaN via
+        // `partial_cmp().unwrap()`; under total_cmp a positive NaN
+        // sorts after every finite energy and the finite minimum wins.
+        let pts = [pt(f64::NAN, 1.0), pt(1.0, 2.0), pt(3.0, 0.5)];
+        let best = crate::dse::Explorer::best_energy(&pts).unwrap();
+        assert_eq!(best.onchip_energy_pj, 1.0);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Streaming 2D Pareto maintenance: an incremental skyline over
+//! (on-chip energy, area) with O(log n) insert via binary search.
+//!
+//! [`pareto::front`](crate::dse::pareto::front) is a post-hoc filter —
+//! it needs the whole sweep materialized before it can answer anything.
+//! [`Skyline`] keeps the *incumbent* front live while the sweep is
+//! still running, which is what feeds the dominance-aware
+//! branch-and-bound in [`crate::dse::sweep::run_front`]: a geometry
+//! subtree whose admissible [`ParetoBound`] is already strictly
+//! dominated by some member is skipped before any of its points are
+//! priced.
+//!
+//! Invariants (checked by the unit tests here and property-tested
+//! against `pareto::front` in `tests/dse_parallel.rs`):
+//!
+//! * `groups` is a staircase: energies strictly increasing, areas
+//!   strictly decreasing.  Each group holds every surviving point at
+//!   exactly its (energy, area) — equal duplicates do not dominate one
+//!   another, so all of them ride along, in insertion order.
+//! * A point with a NaN coordinate is (by IEEE comparison semantics)
+//!   never dominated and never dominates; it is parked off-staircase
+//!   and always survives, exactly as `pareto::front_naive` keeps it.
+//! * [`into_front`](Skyline::into_front) sorts members by
+//!   (energy under `total_cmp`, enumeration sequence) — the same order
+//!   `pareto::front` emits — so the final front is **independent of
+//!   insertion order** and bit-identical to the post-hoc filter.
+
+use std::cmp::Ordering;
+
+use crate::analysis::bounds::ParetoBound;
+
+use super::DesignPoint;
+
+/// One staircase step: every surviving point at exactly this
+/// (energy, area), in insertion order.
+#[derive(Debug, Clone)]
+struct Group {
+    energy: f64,
+    area: f64,
+    /// `(enumeration sequence, point)`; the sequence recovers the
+    /// sweep's canonical tie order in [`Skyline::into_front`].
+    members: Vec<(u64, DesignPoint)>,
+}
+
+/// Incremental 2D skyline under weak (energy, area) dominance.
+#[derive(Debug, Clone, Default)]
+pub struct Skyline {
+    /// The staircase (finite coordinates only): energy strictly
+    /// increasing, area strictly decreasing.
+    groups: Vec<Group>,
+    /// Points with a NaN coordinate — neither dominated nor
+    /// dominating, kept unconditionally.
+    odd: Vec<(u64, DesignPoint)>,
+}
+
+impl Skyline {
+    pub fn new() -> Skyline {
+        Skyline::default()
+    }
+
+    /// Surviving points so far (duplicates counted).
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|g| g.members.len()).sum::<usize>()
+            + self.odd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty() && self.odd.is_empty()
+    }
+
+    /// Offer a point; returns whether it survives (i.e. is not
+    /// dominated by a current member).  `seq` is the point's position
+    /// in the sweep's canonical enumeration — it only matters for the
+    /// tie order of [`into_front`](Self::into_front), which is what
+    /// makes the final front insertion-order independent.
+    pub fn insert(&mut self, seq: u64, point: DesignPoint) -> bool {
+        let e = point.onchip_energy_pj;
+        let a = point.area_mm2;
+        if e.is_nan() || a.is_nan() {
+            self.odd.push((seq, point));
+            return true;
+        }
+        // first step with energy >= e
+        let idx = self.groups.partition_point(|g| g.energy < e);
+        // dominated by the strictly-cheaper predecessor step?
+        if idx > 0 && self.groups[idx - 1].area <= a {
+            return false;
+        }
+        if idx < self.groups.len() && self.groups[idx].energy == e {
+            let g = &mut self.groups[idx];
+            if g.area < a {
+                // equal energy, strictly smaller incumbent area
+                return false;
+            }
+            if g.area == a {
+                // an exact duplicate is not dominated: both survive
+                g.members.push((seq, point));
+                return true;
+            }
+            // g.area > a: the new point strictly dominates this step
+            // (and possibly later ones) — fall through to eviction
+        }
+        // evict every step the point dominates: they sit at
+        // energy >= e with area >= a (the equal-(e, a) case was
+        // handled above), and by the staircase invariant they form a
+        // contiguous run starting at idx
+        let mut end = idx;
+        while end < self.groups.len() && self.groups[end].area >= a {
+            end += 1;
+        }
+        self.groups.splice(
+            idx..end,
+            std::iter::once(Group {
+                energy: e,
+                area: a,
+                members: vec![(seq, point)],
+            }),
+        );
+        true
+    }
+
+    /// Would every point above `bound` be strictly dominated by a
+    /// current member?  This is the branch-and-bound predicate: `true`
+    /// means the whole subtree can be skipped without changing the
+    /// final front.  Only *strict* dominance prunes — a member exactly
+    /// at the bound must not reject a potential equal duplicate.
+    pub fn prunes(&self, bound: &ParetoBound) -> bool {
+        if bound.energy_lb_pj.is_nan() || bound.area_lb_mm2.is_nan() {
+            return false;
+        }
+        // the best candidate dominator is the most expensive step with
+        // energy <= bound energy (it has the smallest area among them)
+        let idx = self
+            .groups
+            .partition_point(|g| g.energy <= bound.energy_lb_pj);
+        if idx == 0 {
+            return false;
+        }
+        let g = &self.groups[idx - 1];
+        bound.dominated_by(g.energy, g.area)
+    }
+
+    /// Consume the skyline into the final front: members sorted by
+    /// (energy under `total_cmp`, enumeration sequence) — exactly the
+    /// output contract of [`pareto::front`](crate::dse::pareto::front),
+    /// so the result does not depend on the order points were offered.
+    pub fn into_front(self) -> Vec<DesignPoint> {
+        let mut members: Vec<(u64, DesignPoint)> = self.odd;
+        for g in self.groups {
+            members.extend(g.members);
+        }
+        members.sort_by(|(sa, pa), (sb, pb)| {
+            pa.onchip_energy_pj
+                .total_cmp(&pb.onchip_energy_pj)
+                .then(sa.cmp(sb))
+        });
+        members.into_iter().map(|(_, p)| p).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::capstore::arch::Organization;
+    use crate::dse::pareto;
+
+    fn pt(e: f64, a: f64) -> DesignPoint {
+        DesignPoint {
+            organization: Organization::Sep { gated: true },
+            banks: 16,
+            sectors: 64,
+            dma: crate::timeline::DmaPolicy::default(),
+            onchip_energy_pj: e,
+            area_mm2: a,
+            capacity_bytes: 0,
+            latency_cycles: 0,
+        }
+    }
+
+    fn front_of(pts: &[DesignPoint]) -> Vec<DesignPoint> {
+        let mut sky = Skyline::new();
+        for (i, p) in pts.iter().enumerate() {
+            sky.insert(i as u64, p.clone());
+        }
+        sky.into_front()
+    }
+
+    fn same(a: &[DesignPoint], b: &[DesignPoint]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.bit_eq(y))
+    }
+
+    #[test]
+    fn matches_post_hoc_front_on_handwritten_batches() {
+        let batches: &[&[DesignPoint]] = &[
+            &[],
+            &[pt(1.0, 1.0)],
+            &[pt(1.0, 5.0), pt(2.0, 4.0), pt(3.0, 4.5), pt(4.0, 1.0)],
+            &[pt(1.0, 2.0), pt(1.0, 2.0), pt(1.0, 3.0)],
+            &[pt(2.0, 2.0), pt(1.0, 3.0), pt(3.0, 1.0), pt(2.0, 2.0)],
+            // eviction chain: a late cheap point wipes the staircase
+            &[pt(5.0, 5.0), pt(4.0, 6.0), pt(3.0, 7.0), pt(1.0, 1.0)],
+        ];
+        for pts in batches {
+            assert!(
+                same(&front_of(pts), &pareto::front(pts)),
+                "skyline diverged on {pts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicates_survive_in_enumeration_order() {
+        // insert the duplicate pair in reverse enumeration order
+        let a = pt(1.0, 2.0);
+        let b = pt(1.0, 2.0);
+        let mut sky = Skyline::new();
+        assert!(sky.insert(7, b.clone()));
+        assert!(sky.insert(3, a.clone()));
+        assert_eq!(sky.len(), 2);
+        let f = sky.into_front();
+        // seq order, not insertion order
+        assert_eq!(f.len(), 2);
+        assert!(f[0].bit_eq(&a) && f[1].bit_eq(&b));
+    }
+
+    #[test]
+    fn staircase_stays_sorted_under_eviction() {
+        let mut sky = Skyline::new();
+        for (i, p) in [
+            pt(3.0, 3.0),
+            pt(5.0, 1.0),
+            pt(1.0, 5.0),
+            pt(2.0, 2.0), // evicts (3,3)
+            pt(0.5, 0.5), // evicts everything
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            sky.insert(i as u64, p);
+        }
+        let f = sky.into_front();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].onchip_energy_pj, 0.5);
+    }
+
+    #[test]
+    fn prunes_requires_strict_dominance() {
+        let mut sky = Skyline::new();
+        sky.insert(0, pt(1.0, 2.0));
+        let b = |e, a| ParetoBound { energy_lb_pj: e, area_lb_mm2: a };
+        // a subtree bounded exactly at the incumbent may still hold an
+        // equal duplicate: never pruned
+        assert!(!sky.prunes(&b(1.0, 2.0)));
+        // strictly worse on one axis, no better on the other: pruned
+        assert!(sky.prunes(&b(1.5, 2.0)));
+        assert!(sky.prunes(&b(1.0, 2.5)));
+        assert!(sky.prunes(&b(9.0, 9.0)));
+        // could still beat the incumbent somewhere: kept
+        assert!(!sky.prunes(&b(0.5, 9.0)));
+        assert!(!sky.prunes(&b(9.0, 1.0)));
+        // NaN bounds never prune
+        assert!(!sky.prunes(&b(f64::NAN, 9.0)));
+    }
+
+    #[test]
+    fn nan_points_ride_along_unconditionally() {
+        let pts =
+            [pt(1.0, 1.0), pt(f64::NAN, 0.5), pt(2.0, 2.0), pt(0.5, f64::NAN)];
+        let f = front_of(&pts);
+        // (2,2) is dominated; the NaN points and (1,1) survive
+        assert!(same(&f, &pareto::front(&pts)));
+        assert_eq!(f.len(), 3);
+        // and a NaN member never causes pruning
+        let mut sky = Skyline::new();
+        sky.insert(0, pt(f64::NAN, 0.0));
+        assert!(!sky
+            .prunes(&ParetoBound { energy_lb_pj: 9.0, area_lb_mm2: 9.0 }));
+    }
+}

@@ -1,18 +1,26 @@
-//! Sweep execution: memoized SRAM costs, chunked multi-threaded point
-//! evaluation with deterministic ordering, and the enlarged
-//! multi-network / multi-technology "grand" sweep.
+//! Sweep execution: memoized SRAM costs, the deduplicated
+//! [`CostTable`] kernel with chunked multi-threaded pricing, streaming
+//! front maintenance with dominance-aware branch-and-bound, and the
+//! enlarged multi-network / multi-technology "grand" sweep.
 //!
 //! Design rules:
 //!
 //! * **Determinism** — the parallel path writes each design point into a
 //!   pre-allocated slot indexed by its enumeration position, so output
 //!   order (and every f64 bit) is identical to the serial path.  A test
-//!   in `tests/dse_parallel.rs` pins this.
+//!   in `tests/dse_parallel.rs` pins this.  The pruning round schedule
+//!   ([`PRUNE_ROUND_GEOMETRIES`]) is a fixed constant, never a function
+//!   of the worker count, so prune decisions (and the statistics) are
+//!   thread-count independent too.
 //! * **No new dependencies** — `std::thread::scope` only; no rayon.
 //! * **Memoization is exact** — [`CostCache`] keys on the full SRAM
 //!   geometry *and* every technology constant (by f64 bit pattern), and
 //!   `memsim::cacti::evaluate` is a pure function, so a cache hit returns
 //!   the exact floats a fresh evaluation would.
+//! * **No locks inside workers** — the hot path prices against the
+//!   immutable [`CostTable`]; the `Mutex` in [`CostCache`] is only
+//!   taken while *solving distinct geometries* (and on the
+//!   [`run_legacy`] baseline path kept for the `dse_scale` bench).
 
 use std::collections::HashMap; // lint:allow(determinism) value cache, never iterated
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,6 +31,8 @@ use crate::analysis::breakdown::EnergyModel;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::{CapStoreArch, Organization};
 use crate::dse::context::SweepContext;
+use crate::dse::skyline::Skyline;
+use crate::dse::table::CostTable;
 use crate::dse::{DesignPoint, SweepSpace};
 use crate::error::Result;
 use crate::memsim::cacti::{self, SramConfig, SramCosts, Technology};
@@ -208,19 +218,69 @@ pub fn evaluate_point(
 /// and never more workers than points.
 pub fn effective_threads(requested: usize, points: usize) -> usize {
     let t = if requested == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        // only the worker count (speed) depends on the machine: every
+        // sweep output is slot-indexed and bit-identical across thread
+        // counts (tests/dse_parallel.rs)
+        std::thread::available_parallelism() // lint:allow(determinism)
+            .map(|n| n.get())
+            .unwrap_or(1)
     } else {
         requested
     };
     t.max(1).min(points.max(1))
 }
 
-/// Run a sweep over `specs`.  `threads <= 1` runs inline; otherwise the
-/// spec list is split into contiguous chunks, one scoped worker per
-/// chunk, each writing into its own slice of the pre-allocated output —
-/// deterministic order.  The only shared mutable state is the cost
-/// cache's short-lived lock (a few hash lookups per point).
+/// Run a sweep over `specs` through the deduplicated [`CostTable`]
+/// kernel: distinct geometries are solved once (in parallel), then
+/// every point is priced lock-free into a pre-allocated slot indexed
+/// by its enumeration position — deterministic order, bit-identical to
+/// [`run_legacy`] and to the serial path.
 pub fn run(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    specs: &[PointSpec],
+    threads: usize,
+) -> Result<Vec<DesignPoint>> {
+    let table = CostTable::build(model, ctx, cache, specs, threads)?;
+    let n = specs.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 || n <= 1 {
+        return Ok(specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| table.price(i, s))
+            .collect());
+    }
+
+    let chunk = n.div_ceil(threads);
+    let mut slots: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (ci, (spec_chunk, out_chunk)) in
+            specs.chunks(chunk).zip(slots.chunks_mut(chunk)).enumerate()
+        {
+            let base = ci * chunk;
+            let table = &table;
+            scope.spawn(move || {
+                for (k, (spec, slot)) in
+                    spec_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(table.price(base + k, spec));
+                }
+            });
+        }
+    });
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("worker filled every slot"))
+        .collect())
+}
+
+/// The PR7 engine: per-point architecture rebuild + energy integration
+/// through the mutex-guarded [`CostCache`], chunked workers.  Kept as
+/// the speedup baseline for `benches/dse_scale.rs` and as an equality
+/// oracle — [`run`] must stay bit-identical to it.
+pub fn run_legacy(
     model: &EnergyModel,
     ctx: &SweepContext,
     cache: &CostCache,
@@ -256,6 +316,130 @@ pub fn run(
         .into_iter()
         .map(|s| s.expect("worker filled every slot"))
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// Streaming front + dominance-aware branch-and-bound
+// ---------------------------------------------------------------------
+
+/// Deterministic counters of one front-streaming sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Design points the space enumerated.
+    pub specs: u64,
+    /// Distinct (organization, banks, sectors) geometries solved.
+    pub geometries: u64,
+    /// Distinct DMA policies placed.
+    pub dma_policies: u64,
+    /// Geometry subtrees rejected against the incumbent front.
+    pub pruned_geometries: u64,
+    /// Points skipped by pruning (0 with pruning off).
+    pub pruned_points: u64,
+    /// Points actually priced; `pruned_points + priced_points == specs`.
+    pub priced_points: u64,
+    /// Size of the surviving Pareto front.
+    pub front_len: u64,
+}
+
+/// Geometries admitted per pruning round.  A fixed constant — NOT a
+/// function of the worker count — so the round schedule, the incumbent
+/// front at every admission test, and therefore the prune statistics
+/// are bit-identical across `--threads {1, 4, 0}` (pinned in
+/// `tests/dse_parallel.rs`).
+const PRUNE_ROUND_GEOMETRIES: usize = 64;
+
+/// Sweep `specs` but return only the Pareto front (plus statistics),
+/// maintained incrementally by the [`Skyline`] — never materializing
+/// the full point list, which is what lets the ≥1M-point huge space
+/// run in bounded memory.
+///
+/// With `prune_dominated`, whole geometry subtrees are rejected before
+/// pricing whenever the incumbent front strictly dominates their
+/// admissible [`CostTable::bound`].  Rounds of
+/// [`PRUNE_ROUND_GEOMETRIES`] geometries alternate a serial admission
+/// test, parallel pricing of the admitted subtrees, and serial skyline
+/// insertion; because a pruned subtree is strictly dominated by an
+/// already-inserted point, the final front is bit-identical — tie
+/// order included — to `pareto::front` over the exhaustive sweep,
+/// pruned or not.
+pub fn run_front(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    specs: &[PointSpec],
+    threads: usize,
+    prune_dominated: bool,
+) -> Result<(Vec<DesignPoint>, SweepStats)> {
+    let table = CostTable::build(model, ctx, cache, specs, threads)?;
+    let mut stats = SweepStats {
+        specs: specs.len() as u64,
+        geometries: table.num_geometries() as u64,
+        dma_policies: table.num_policies() as u64,
+        ..SweepStats::default()
+    };
+    let mut sky = Skyline::new();
+    let mut batch: Vec<u32> = Vec::new();
+    let mut priced: Vec<DesignPoint> = Vec::new();
+    let ngeoms = table.num_geometries();
+    let mut round_start = 0;
+    while round_start < ngeoms {
+        let round_end = (round_start + PRUNE_ROUND_GEOMETRIES).min(ngeoms);
+        batch.clear();
+        for gi in round_start..round_end {
+            let m = table.geometry_members(gi);
+            if prune_dominated && sky.prunes(&table.bound(gi)) {
+                stats.pruned_geometries += 1;
+                stats.pruned_points += m.len() as u64;
+            } else {
+                batch.extend_from_slice(m);
+            }
+        }
+        price_batch(&table, specs, &batch, threads, &mut priced);
+        stats.priced_points += priced.len() as u64;
+        for (&i, p) in batch.iter().zip(priced.drain(..)) {
+            sky.insert(i as u64, p);
+        }
+        round_start = round_end;
+    }
+    stats.front_len = sky.len() as u64;
+    Ok((sky.into_front(), stats))
+}
+
+/// Price one admission round's members in parallel, slot-indexed into
+/// `out` (cleared first) in batch order.
+fn price_batch(
+    table: &CostTable,
+    specs: &[PointSpec],
+    batch: &[u32],
+    threads: usize,
+    out: &mut Vec<DesignPoint>,
+) {
+    let n = batch.len();
+    out.clear();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 || n <= 1 {
+        out.extend(
+            batch.iter().map(|&i| table.price(i as usize, &specs[i as usize])),
+        );
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut slots: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (idx_chunk, out_chunk) in
+            batch.chunks(chunk).zip(slots.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for (&i, slot) in idx_chunk.iter().zip(out_chunk.iter_mut())
+                {
+                    *slot = Some(table.price(i as usize, &specs[i as usize]));
+                }
+            });
+        }
+    });
+    out.extend(
+        slots.into_iter().map(|s| s.expect("worker filled every slot")),
+    );
 }
 
 /// Filter `specs` through an admissible latency bound *before* pricing
@@ -320,6 +504,16 @@ pub struct MultiPoint {
     pub point: DesignPoint,
 }
 
+/// One (network, tech) pair's streamed Pareto front + statistics —
+/// what the grand sweep returns when it does not materialize points.
+#[derive(Debug, Clone)]
+pub struct MultiFront {
+    pub model: &'static str,
+    pub tech: &'static str,
+    pub front: Vec<DesignPoint>,
+    pub stats: SweepStats,
+}
+
 /// The enlarged exploration: every named network config x every
 /// technology node x the fine-grained [`SweepSpace::large`] axes —
 /// thousands of design points where the paper's Table 1 slice had ~72.
@@ -357,6 +551,22 @@ impl MultiSweep {
     /// cross-talk).
     pub fn run(&self) -> Result<Vec<MultiPoint>> {
         crate::scenario::Evaluator::new().multi_sweep(self)
+    }
+
+    /// Front-streaming exploration: one [`MultiFront`] per
+    /// (model, tech) pair, in enumeration order, without materializing
+    /// the grand point list — the only way the ≥1M-point
+    /// [`SweepSpace::huge`](crate::dse::SweepSpace::huge) space stays
+    /// in bounded memory.  Delegates to
+    /// [`crate::scenario::Evaluator::multi_sweep_front`].
+    pub fn run_front(&self, prune: bool) -> Result<Vec<MultiFront>> {
+        crate::scenario::Evaluator::new().multi_sweep_front(self, prune)
+    }
+
+    /// The PR7 lock-based per-point engine over the same axes — the
+    /// speedup baseline of `benches/dse_scale.rs`.
+    pub fn run_legacy(&self) -> Result<Vec<MultiPoint>> {
+        crate::scenario::Evaluator::new().multi_sweep_legacy(self)
     }
 }
 

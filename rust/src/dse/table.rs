@@ -1,0 +1,339 @@
+//! The contention-free cost kernel: a pre-enumerated, deduplicated
+//! geometry table solved once up front, then pure indexed lookups on
+//! the parallel hot path.
+//!
+//! The PR7 engine priced every [`PointSpec`] independently — each point
+//! rebuilt its architecture (taking the [`CostCache`] mutex per SRAM
+//! macro), re-integrated its energy and re-planned its gating, even
+//! though the whole DMA axis of a geometry shares all three.  At
+//! million-point scale that lock plus the redundant work dominates.
+//! [`CostTable::build`] splits the sweep differently:
+//!
+//! 1. **Dedup pass** (serial, deterministic): assign every spec a
+//!    geometry id — distinct (organization, banks, sectors), in
+//!    first-seen enumeration order, found by binary search over a
+//!    sorted key vector (never a hash map) — and a DMA-policy id.
+//! 2. **Solve pass** (parallel, slot-indexed): one architecture build +
+//!    energy integration + gating plan per *distinct geometry*.  This
+//!    is the only phase that touches the [`CostCache`]; with the huge
+//!    space's 37-policy DMA axis it runs ~37× fewer times than the
+//!    per-point engine did.
+//! 3. **Placement pass** (serial): one [`DmaPricer`] per distinct
+//!    policy — the `place()` schedule is architecture-free.
+//!
+//! After `build`, [`CostTable::price`] is infallible and lock-free:
+//! two array lookups plus the O(stalls × macros) leakage scan.  Every
+//! float operation happens in the same order as the per-point path, so
+//! the output is bit-identical to [`sweep::run_legacy`] — pinned by
+//! `tests/dse_parallel.rs`.
+
+use crate::analysis::bounds::ParetoBound;
+use crate::analysis::breakdown::{ArchitectureEnergy, EnergyModel};
+use crate::capstore::arch::{CapStoreArch, Organization};
+use crate::capstore::pmu::GatingSchedule;
+use crate::dse::context::SweepContext;
+use crate::dse::sweep::{effective_threads, CostCache, PointSpec};
+use crate::dse::DesignPoint;
+use crate::error::Result;
+use crate::timeline::{self, DmaPolicy, DmaPricer};
+
+/// One solved geometry: the architecture, its context-integrated
+/// energy, and its gating plan — shared by every DMA coordinate of the
+/// geometry.
+pub struct GeomEntry {
+    pub arch: CapStoreArch,
+    pub energy: ArchitectureEnergy,
+    pub plan: GatingSchedule,
+}
+
+/// Total order on the geometry coordinate, for the binary-searched
+/// dedup index ([`Organization`] itself deliberately has no `Ord`).
+fn geom_key(s: &PointSpec) -> (u8, u64, u64) {
+    let org = match s.organization {
+        Organization::Smp { gated: false } => 0,
+        Organization::Smp { gated: true } => 1,
+        Organization::Sep { gated: false } => 2,
+        Organization::Sep { gated: true } => 3,
+        Organization::Hy { gated: false } => 4,
+        Organization::Hy { gated: true } => 5,
+    };
+    (org, s.banks, s.sectors)
+}
+
+/// Structure-of-arrays cost table over one spec list.  Indices returned
+/// by the accessors refer to positions in the `specs` slice passed to
+/// [`build`](Self::build); callers must price against that same slice.
+pub struct CostTable {
+    /// Distinct geometries, in first-seen enumeration order.
+    geoms: Vec<GeomEntry>,
+    /// Distinct DMA policies, in first-seen enumeration order.
+    pricers: Vec<DmaPricer>,
+    /// spec index → geometry index.
+    spec_geom: Vec<u32>,
+    /// spec index → pricer index.
+    spec_dma: Vec<u32>,
+    /// geometry index → member spec indices, in enumeration order.
+    members: Vec<Vec<u32>>,
+}
+
+impl CostTable {
+    /// Dedup, solve (in parallel) and place the table for `specs`.
+    pub fn build(
+        model: &EnergyModel,
+        ctx: &SweepContext,
+        cache: &CostCache,
+        specs: &[PointSpec],
+        threads: usize,
+    ) -> Result<CostTable> {
+        let mut spec_geom = Vec::with_capacity(specs.len());
+        let mut spec_dma = Vec::with_capacity(specs.len());
+        let mut members: Vec<Vec<u32>> = Vec::new();
+        let mut geom_specs: Vec<PointSpec> = Vec::new();
+        // sorted (key, geometry id) index — binary search keeps the
+        // dedup pass O(n log g) without hash-order-dependent code
+        let mut seen: Vec<((u8, u64, u64), u32)> = Vec::new();
+        let mut policies: Vec<DmaPolicy> = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            let key = geom_key(s);
+            let gi = match seen.binary_search_by(|(k, _)| k.cmp(&key)) {
+                Ok(pos) => seen[pos].1,
+                Err(pos) => {
+                    let gi = geom_specs.len() as u32;
+                    seen.insert(pos, (key, gi));
+                    geom_specs.push(*s);
+                    members.push(Vec::new());
+                    gi
+                }
+            };
+            spec_geom.push(gi);
+            members[gi as usize].push(i as u32);
+            // the policy axis is tiny (≤ a few dozen): linear scan
+            let di = match policies.iter().position(|d| *d == s.dma) {
+                Some(pos) => pos as u32,
+                None => {
+                    policies.push(s.dma);
+                    (policies.len() - 1) as u32
+                }
+            };
+            spec_dma.push(di);
+        }
+
+        let geoms = solve_geoms(model, ctx, cache, &geom_specs, threads)?;
+        let pricers = policies
+            .iter()
+            .map(|dma| {
+                DmaPricer::new(
+                    &ctx.op_kinds,
+                    &ctx.op_cycles,
+                    &ctx.op_offchip,
+                    ctx.clock_hz,
+                    dma,
+                )
+            })
+            .collect();
+        Ok(CostTable { geoms, pricers, spec_geom, spec_dma, members })
+    }
+
+    pub fn num_geometries(&self) -> usize {
+        self.geoms.len()
+    }
+
+    pub fn num_policies(&self) -> usize {
+        self.pricers.len()
+    }
+
+    pub fn geometry(&self, gi: usize) -> &GeomEntry {
+        &self.geoms[gi]
+    }
+
+    /// Enumeration positions (into the build-time spec list) of the
+    /// geometry's DMA subtree.
+    pub fn geometry_members(&self, gi: usize) -> &[u32] {
+        &self.members[gi]
+    }
+
+    /// The admissible (energy, area) lower bound of a geometry's DMA
+    /// subtree: every coordinate prices to `base onchip_pj + stall`
+    /// with `stall >= 0`, and area is DMA-independent, so the
+    /// hidden-transfer point *is* the subtree's componentwise minimum —
+    /// the bound is tight as well as admissible.
+    pub fn bound(&self, gi: usize) -> ParetoBound {
+        let e = &self.geoms[gi].energy;
+        ParetoBound {
+            energy_lb_pj: e.onchip_pj,
+            area_lb_mm2: e.area_mm2,
+        }
+    }
+
+    /// Price one spec — infallible and lock-free: geometry + pricer
+    /// lookups and the O(stalls × macros) leakage scan.  `i` must be
+    /// `spec`'s position in the spec list the table was built from.
+    pub fn price(&self, i: usize, spec: &PointSpec) -> DesignPoint {
+        let g = &self.geoms[self.spec_geom[i] as usize];
+        let pricer = &self.pricers[self.spec_dma[i] as usize];
+        let (stall_pj, latency) = pricer.price(&g.arch, &g.plan);
+        DesignPoint {
+            organization: spec.organization,
+            banks: spec.banks,
+            sectors: spec.sectors,
+            dma: spec.dma,
+            onchip_energy_pj: timeline::priced_onchip_pj(
+                g.energy.onchip_pj,
+                stall_pj,
+            ),
+            area_mm2: g.energy.area_mm2,
+            capacity_bytes: g.energy.capacity_bytes,
+            latency_cycles: latency,
+        }
+    }
+}
+
+fn solve_one(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    spec: &PointSpec,
+) -> Result<GeomEntry> {
+    let arch = CapStoreArch::build_with(
+        spec.organization,
+        &model.req,
+        spec.banks,
+        spec.sectors,
+        &mut |sram| cache.evaluate(sram, &model.tech),
+    )?;
+    let energy = model.evaluate_arch_in(ctx, &arch);
+    let plan = GatingSchedule::plan_for(&arch, &model.req, &ctx.op_kinds);
+    Ok(GeomEntry { arch, energy, plan })
+}
+
+/// Solve the distinct geometries — the same chunked, slot-indexed
+/// scheduling as `sweep::run`, so results land in deterministic
+/// (first-seen) order regardless of worker count.
+fn solve_geoms(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    geom_specs: &[PointSpec],
+    threads: usize,
+) -> Result<Vec<GeomEntry>> {
+    let n = geom_specs.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 || n <= 1 {
+        return geom_specs
+            .iter()
+            .map(|s| solve_one(model, ctx, cache, s))
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut slots: Vec<Option<Result<GeomEntry>>> =
+        (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (spec_chunk, out_chunk) in
+            geom_specs.chunks(chunk).zip(slots.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for (spec, slot) in
+                    spec_chunk.iter().zip(out_chunk.iter_mut())
+                {
+                    *slot = Some(solve_one(model, ctx, cache, spec));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::capsnet::CapsNetConfig;
+    use crate::dse::{sweep, SweepSpace};
+    use crate::timeline::DmaModel;
+
+    fn space() -> SweepSpace {
+        SweepSpace {
+            banks: vec![8, 16],
+            sectors: vec![16, 64],
+            organizations: Organization::all().to_vec(),
+            dma: DmaPolicy::all_models(),
+        }
+    }
+
+    #[test]
+    fn dedup_counts_match_the_axes() {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let cache = CostCache::new();
+        let specs = sweep::enumerate(&space());
+        let table =
+            CostTable::build(&model, &ctx, &cache, &specs, 1).unwrap();
+        // gated: 3 orgs x 2 banks x 2 sectors = 12; ungated: 3 x 2 = 6
+        assert_eq!(table.num_geometries(), 18);
+        assert_eq!(table.num_policies(), 3);
+        assert_eq!(specs.len(), 54);
+        // members partition the spec list
+        let total: usize = (0..table.num_geometries())
+            .map(|gi| table.geometry_members(gi).len())
+            .sum();
+        assert_eq!(total, specs.len());
+        for gi in 0..table.num_geometries() {
+            for &i in table.geometry_members(gi) {
+                assert_eq!(table.spec_geom[i as usize], gi as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn table_pricing_is_bit_identical_to_the_per_point_path() {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let cache = CostCache::new();
+        let specs = sweep::enumerate(&space());
+        let table =
+            CostTable::build(&model, &ctx, &cache, &specs, 4).unwrap();
+        for (i, spec) in specs.iter().enumerate() {
+            let a = table.price(i, spec);
+            let b =
+                sweep::evaluate_point(&model, &ctx, &cache, spec).unwrap();
+            assert!(a.bit_eq(&b), "spec {i} diverged:\n {a:?}\n {b:?}");
+        }
+    }
+
+    #[test]
+    fn bound_is_admissible_and_tight() {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let cache = CostCache::new();
+        let specs = sweep::enumerate(&space());
+        let table =
+            CostTable::build(&model, &ctx, &cache, &specs, 1).unwrap();
+        for gi in 0..table.num_geometries() {
+            let b = table.bound(gi);
+            let mut tight_energy = false;
+            for &i in table.geometry_members(gi) {
+                let p = table.price(i as usize, &specs[i as usize]);
+                assert!(
+                    p.onchip_energy_pj >= b.energy_lb_pj,
+                    "energy bound not admissible"
+                );
+                assert_eq!(
+                    p.area_mm2.to_bits(),
+                    b.area_lb_mm2.to_bits(),
+                    "area is DMA-independent"
+                );
+                if specs[i as usize].dma.model == DmaModel::Instant {
+                    // hidden transfers price exactly at the bound
+                    assert_eq!(
+                        p.onchip_energy_pj.to_bits(),
+                        b.energy_lb_pj.to_bits()
+                    );
+                    tight_energy = true;
+                }
+            }
+            assert!(tight_energy, "every geometry crosses Instant here");
+        }
+    }
+}

@@ -25,7 +25,7 @@ use crate::analysis::context::SweepContext;
 use crate::capsnet::CapsNetConfig;
 use crate::capstore::arch::CapStoreArch;
 use crate::capstore::eventsim::{EventSim, EventSimResult};
-use crate::dse::sweep::{self, CostCache, MultiPoint, MultiSweep};
+use crate::dse::sweep::{self, CostCache, MultiFront, MultiPoint, MultiSweep};
 use crate::dse::{DesignPoint, SweepSpace};
 use crate::error::Result;
 use crate::memsim::model::{MemoryModel, SramMacroModel};
@@ -535,6 +535,94 @@ impl Evaluator {
                 model.tech = tech.clone();
                 let pts =
                     sweep::run(&model, &ctx, &self.cache, &specs, ms.threads)?;
+                out.extend(pts.into_iter().map(|point| MultiPoint {
+                    model: cfg.name,
+                    tech: tech_name,
+                    point,
+                }));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Streaming-front sweep (`Explorer::sweep_front` delegates here):
+    /// the Pareto front plus sweep statistics, without materializing
+    /// every design point.  With `prune_dominated` the dominance-aware
+    /// branch-and-bound skips geometry subtrees the incumbent front
+    /// already strictly dominates; the returned front is bit-identical
+    /// either way (see `sweep::run_front`).
+    pub fn sweep_model_front(
+        &self,
+        model: &EnergyModel,
+        space: &SweepSpace,
+        threads: usize,
+        prune_dominated: bool,
+    ) -> Result<(Vec<DesignPoint>, sweep::SweepStats)> {
+        let ctx = model.context();
+        let specs = sweep::enumerate(space);
+        sweep::run_front(
+            model,
+            &ctx,
+            &self.cache,
+            &specs,
+            threads,
+            prune_dominated,
+        )
+    }
+
+    /// Streaming-front grand sweep (`MultiSweep::run_front` delegates
+    /// here): one Pareto front + stats per (network, node) pair, never
+    /// materializing the full point set — the only way a ≥1M-point
+    /// huge sweep stays in memory.
+    pub fn multi_sweep_front(
+        &self,
+        ms: &MultiSweep,
+        prune_dominated: bool,
+    ) -> Result<Vec<MultiFront>> {
+        let specs = sweep::enumerate(&ms.space);
+        let mut out = Vec::with_capacity(ms.models.len() * ms.techs.len());
+        for cfg in &ms.models {
+            let mut model = EnergyModel::new(cfg.clone());
+            let ctx = model.context();
+            for &(tech_name, ref tech) in &ms.techs {
+                model.tech = tech.clone();
+                let (front, stats) = sweep::run_front(
+                    &model,
+                    &ctx,
+                    &self.cache,
+                    &specs,
+                    ms.threads,
+                    prune_dominated,
+                )?;
+                out.push(MultiFront {
+                    model: cfg.name,
+                    tech: tech_name,
+                    front,
+                    stats,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// [`multi_sweep`](Self::multi_sweep) through the retired per-point
+    /// engine (`sweep::run_legacy`) — the PR7 baseline the `dse_scale`
+    /// bench measures the table kernel against.
+    pub fn multi_sweep_legacy(&self, ms: &MultiSweep) -> Result<Vec<MultiPoint>> {
+        let specs = sweep::enumerate(&ms.space);
+        let mut out = Vec::with_capacity(ms.num_points());
+        for cfg in &ms.models {
+            let mut model = EnergyModel::new(cfg.clone());
+            let ctx = model.context();
+            for &(tech_name, ref tech) in &ms.techs {
+                model.tech = tech.clone();
+                let pts = sweep::run_legacy(
+                    &model,
+                    &ctx,
+                    &self.cache,
+                    &specs,
+                    ms.threads,
+                )?;
                 out.extend(pts.into_iter().map(|point| MultiPoint {
                     model: cfg.name,
                     tech: tech_name,

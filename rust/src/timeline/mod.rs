@@ -1077,6 +1077,10 @@ pub fn price_design_point(
 /// leakage (pJ) charged at the held gating configurations plus the
 /// stall-extended latency (cycles).  O(ops × macros) integer/float scan
 /// — deliberately does **not** build a [`Timeline`].
+///
+/// Thin shim over [`DmaPricer`] so there is exactly one definition of
+/// the stall-leakage accumulation; callers pricing many architectures
+/// under the same policy should build the pricer once instead.
 pub fn dma_overhead_pj(
     kinds: &[OpKind],
     op_cycles: &[u64],
@@ -1086,34 +1090,90 @@ pub fn dma_overhead_pj(
     plan: &GatingSchedule,
     dma: &DmaPolicy,
 ) -> (f64, u64) {
-    let p = place(kinds, op_cycles, op_offchip, dma, 1);
-    if p.stalls.is_empty() {
-        return (0.0, p.total_cycles);
-    }
-    let gated = arch.organization.gated();
-    let off = arch.pg_model.off_leakage_fraction;
-    let k = 1.0e-3 / clock_hz * 1.0e12;
-    let mut pj = 0.0;
-    for st in &p.stalls {
-        let cy = st.interval.cycles() as f64;
-        for (i, m) in arch.macros.iter().enumerate() {
-            let eff_mw = if !gated {
-                m.costs.leakage_mw
-            } else {
-                let on_f = match st.holds {
-                    Some(g) => {
-                        let step = p.ops[g].step;
-                        plan.steps[step].1[i] as f64
-                            / plan.total_sectors[i].max(1) as f64
-                    }
-                    None => 1.0,
-                };
-                m.costs.leakage_mw * (on_f + (1.0 - on_f) * off)
-            };
-            pj += eff_mw * cy * k;
+    DmaPricer::new(kinds, op_cycles, op_offchip, clock_hz, dma)
+        .price(arch, plan)
+}
+
+/// The architecture-independent half of DMA-axis pricing, computed once
+/// per [`DmaPolicy`] and reused across every architecture of a sweep.
+///
+/// The `place()` schedule (stall windows, held ops, total latency)
+/// depends only on the op schedule and the policy — never on the memory
+/// architecture — so the DSE cost table (`dse::table`) builds one
+/// pricer per distinct policy and prices thousands of geometries
+/// against it, lock-free.  [`price`](Self::price) performs the exact
+/// accumulation [`dma_overhead_pj`] historically inlined (same loop
+/// nesting, same operation order), so pricing through a pricer is
+/// bit-identical to [`price_design_point`] — the sweep-engine equality
+/// tests rest on that.
+pub struct DmaPricer {
+    /// `None` for hidden ([`DmaModel::Instant`]) transfers — that path
+    /// never places a schedule at all.
+    placement: Option<Placement>,
+    /// Σ `op_cycles`: the hidden-transfer latency short-circuit.
+    hidden_cycles: u64,
+    /// pJ per (cycle × mW) at the array clock, precomputed with the
+    /// same expression the inline path used.
+    k: f64,
+}
+
+impl DmaPricer {
+    pub fn new(
+        kinds: &[OpKind],
+        op_cycles: &[u64],
+        op_offchip: &[(u64, u64)],
+        clock_hz: f64,
+        dma: &DmaPolicy,
+    ) -> DmaPricer {
+        DmaPricer {
+            placement: (dma.model != DmaModel::Instant)
+                .then(|| place(kinds, op_cycles, op_offchip, dma, 1)),
+            hidden_cycles: op_cycles.iter().sum(),
+            k: 1.0e-3 / clock_hz * 1.0e12,
         }
     }
-    (pj, p.total_cycles)
+
+    /// `(stall leakage pJ, stall-extended latency cycles)` of one
+    /// inference on `arch` under this pricer's policy.  `plan` must be
+    /// the [`GatingSchedule::plan_for`] of the same `(arch, schedule)`
+    /// pair; hidden transfers return `(0.0, Σ op_cycles)` without
+    /// touching either.
+    pub fn price(
+        &self,
+        arch: &CapStoreArch,
+        plan: &GatingSchedule,
+    ) -> (f64, u64) {
+        let p = match &self.placement {
+            None => return (0.0, self.hidden_cycles),
+            Some(p) => p,
+        };
+        if p.stalls.is_empty() {
+            return (0.0, p.total_cycles);
+        }
+        let gated = arch.organization.gated();
+        let off = arch.pg_model.off_leakage_fraction;
+        let mut pj = 0.0;
+        for st in &p.stalls {
+            let cy = st.interval.cycles() as f64;
+            for (i, m) in arch.macros.iter().enumerate() {
+                let eff_mw = if !gated {
+                    m.costs.leakage_mw
+                } else {
+                    let on_f = match st.holds {
+                        Some(g) => {
+                            let step = p.ops[g].step;
+                            plan.steps[step].1[i] as f64
+                                / plan.total_sectors[i].max(1) as f64
+                        }
+                        None => 1.0,
+                    };
+                    m.costs.leakage_mw * (on_f + (1.0 - on_f) * off)
+                };
+                pj += eff_mw * cy * self.k;
+            }
+        }
+        (pj, p.total_cycles)
+    }
 }
 
 /// Statically computed latency (cycles) of one `batch`-deep inference

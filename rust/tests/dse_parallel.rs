@@ -5,11 +5,17 @@
 //!    to the serial sweep AND to the pre-refactor baseline path
 //!    (per-point context rebuild, uncached CACTI);
 //! 2. the O(n log n) sort-and-scan Pareto front equals the naive O(n²)
-//!    all-pairs front on arbitrary random point sets.
+//!    all-pairs front on arbitrary random point sets;
+//! 3. the streaming [`Skyline`] is **insertion-order independent** —
+//!    any permutation of the offers produces the same front as the
+//!    post-hoc filter — and the dominance-aware branch-and-bound prunes
+//!    without changing a single front bit, at any thread count.
 
 use capstore::capsnet::CapsNetConfig;
 use capstore::capstore::arch::Organization;
-use capstore::dse::{pareto, DesignPoint, Explorer, MultiSweep, SweepSpace};
+use capstore::dse::{
+    pareto, DesignPoint, Explorer, MultiSweep, SweepSpace, Skyline,
+};
 use capstore::memsim::cacti::Technology;
 use capstore::testing::{check, Config};
 use capstore::timeline::DmaPolicy;
@@ -147,6 +153,102 @@ fn prop_fast_pareto_matches_naive_on_random_sets() {
             );
         }
     });
+}
+
+#[test]
+fn prop_skyline_is_insertion_order_invariant() {
+    fn pt(e: f64, a: f64) -> DesignPoint {
+        DesignPoint {
+            organization: Organization::Smp { gated: false },
+            banks: 4,
+            sectors: 16,
+            dma: DmaPolicy::default(),
+            onchip_energy_pj: e,
+            area_mm2: a,
+            capacity_bytes: 1,
+            latency_cycles: 1,
+        }
+    }
+    check(Config::default().cases(60), |rng| {
+        let n = rng.range(1, 150) as usize;
+        // half the cases draw from a tiny coarse grid — the adversarial
+        // regime where equal-energy and equal-(energy, area) collisions
+        // are everywhere and tie order is all that distinguishes fronts
+        let grid_only = rng.chance(0.5);
+        let pts: Vec<DesignPoint> = (0..n)
+            .map(|_| {
+                if grid_only || rng.range(0, 2) == 0 {
+                    pt(rng.range(0, 4) as f64, rng.range(0, 4) as f64)
+                } else {
+                    pt(rng.f64() * 10.0, rng.f64() * 10.0)
+                }
+            })
+            .collect();
+        let expect = pareto::front(&pts);
+        // offer the same points in several random permutations: the
+        // front must not depend on insertion order, because the pruned
+        // sweep admits points round by round, not in enumeration order
+        for _ in 0..3 {
+            let mut order: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+            let mut sky = Skyline::new();
+            for &i in &order {
+                sky.insert(i as u64, pts[i].clone());
+            }
+            let got = sky.into_front();
+            assert_bit_identical(&got, &expect, "skyline vs pareto::front");
+        }
+    });
+}
+
+#[test]
+fn front_streaming_and_pruning_match_post_hoc_pareto_across_threads() {
+    let mut ex = Explorer::new(CapsNetConfig::mnist());
+    ex.space = SweepSpace::large();
+    let post_hoc = pareto::front(&ex.sweep().unwrap());
+    let specs = ex.space.num_points() as u64;
+
+    let mut stats_by_prune = [None, None];
+    for threads in [1usize, 4, 0] {
+        ex.threads = threads;
+        for prune in [false, true] {
+            let (front, stats) = ex.sweep_front(prune).unwrap();
+            assert_bit_identical(
+                &front,
+                &post_hoc,
+                &format!("streamed front (threads={threads}, prune={prune})"),
+            );
+            assert_eq!(stats.specs, specs);
+            assert_eq!(stats.front_len, front.len() as u64);
+            assert_eq!(
+                stats.pruned_points + stats.priced_points,
+                stats.specs,
+                "every spec is either pruned or priced"
+            );
+            if !prune {
+                assert_eq!(stats.pruned_geometries, 0);
+                assert_eq!(stats.priced_points, stats.specs);
+            }
+            // the counters themselves are part of the determinism
+            // contract: identical at 1, 4, and all-cores threads
+            let slot = &mut stats_by_prune[prune as usize];
+            match slot {
+                None => *slot = Some(stats),
+                Some(first) => assert_eq!(
+                    *first, stats,
+                    "stats diverged across thread counts (prune={prune})"
+                ),
+            }
+        }
+    }
+    let off = stats_by_prune[0].unwrap();
+    let on = stats_by_prune[1].unwrap();
+    assert!(
+        on.priced_points <= off.priced_points,
+        "pruning must never price more points than the exhaustive pass"
+    );
 }
 
 #[test]

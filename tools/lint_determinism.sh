@@ -10,6 +10,11 @@
 #   Instant::now / SystemTime   wall-clock reads
 #   thread_rng / rand::         ambient (non-seeded) randomness
 #   HashMap / HashSet           iteration order varies per process
+#   available_parallelism       machine-dependent core counts — results
+#                               must be identical across thread counts,
+#                               so any read of the machine's parallelism
+#                               needs an explicit exemption arguing that
+#                               only speed, never output, depends on it
 #
 # A hit can be exempted by putting `lint:allow(determinism)` in a
 # comment ON THE SAME LINE, ideally with a reason nearby — e.g. the DSE
@@ -38,6 +43,7 @@ patterns=(
   '\brand::'
   '\bHashMap\b'
   '\bHashSet\b'
+  '\bavailable_parallelism\b'
 )
 
 # ripgrep when available (fast, honors .gitignore), plain grep otherwise
