@@ -120,6 +120,43 @@ impl TileTracer {
         }
         totals
     }
+
+    /// [`replay_at`](Self::replay_at) rescaled to fit exactly inside a
+    /// timeline op slot: the naive weight-stationary schedule may take
+    /// *more* cycles than the analytical roofline the Timeline IR
+    /// placed the op with, so tile events are linearly mapped (integer
+    /// arithmetic, deterministic) from the tracer's local clock onto
+    /// `[interval_start, interval_start + interval_cycles)`.  When the
+    /// traced makespan already equals the slot length the mapping is
+    /// the identity and events match [`replay_at`](Self::replay_at)
+    /// bit-for-bit.  This is what nests tile spans under op spans in
+    /// `capstore trace` without overlapping the next op.
+    pub fn replay_fitted<F: FnMut(&TileEvent)>(
+        &self,
+        op: &Operation,
+        interval_start: u64,
+        interval_cycles: u64,
+        mut on_event: F,
+    ) -> TraceTotals {
+        // first pass: the local makespan (cheap — no allocation)
+        let local = self.replay(op, |_| {});
+        let span = local.cycles.max(1);
+        let fit = |local_cycle: u64| -> u64 {
+            // exact u128 scaling: no overflow, no float rounding
+            let scaled = (local_cycle as u128 * interval_cycles as u128
+                / span as u128) as u64;
+            interval_start + scaled.min(interval_cycles)
+        };
+        self.replay(op, |ev| {
+            let start = fit(ev.start_cycle);
+            let end = fit(ev.start_cycle + ev.cycles).max(start);
+            on_event(&TileEvent {
+                start_cycle: start,
+                cycles: end - start,
+                ..ev.clone()
+            });
+        })
+    }
 }
 
 #[cfg(test)]
@@ -228,5 +265,43 @@ mod tests {
         assert_eq!(first, Some(offset));
         // offsetting changes event positions, never the totals
         assert_eq!(local, global);
+    }
+
+    #[test]
+    fn fitted_replay_stays_inside_the_interval() {
+        let cfg = CapsNetConfig::mnist();
+        let mut op = Operation::new(OpKind::Conv1, &cfg);
+        op.m = 64;
+        op.k = 32;
+        op.n = 48;
+        let tracer = TileTracer::new(ArrayConfig::default());
+        let local = tracer.replay(&op, |_| {});
+
+        // squeeze into an interval shorter than the naive makespan
+        let (start, cycles) = (1000u64, local.cycles / 2);
+        let mut last_end = start;
+        let mut count = 0u64;
+        let fitted =
+            tracer.replay_fitted(&op, start, cycles, |ev| {
+                assert!(ev.start_cycle >= start);
+                assert!(ev.start_cycle + ev.cycles <= start + cycles);
+                // tiles stay ordered and contiguous after rescaling
+                assert_eq!(ev.start_cycle, last_end);
+                last_end = ev.start_cycle + ev.cycles;
+                count += 1;
+            });
+        assert_eq!(count, fitted.tiles);
+        assert_eq!(last_end, start + cycles);
+        // rescaling repositions events, never the traffic totals
+        assert_eq!(fitted, local);
+
+        // identity interval: bit-identical to replay_at
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        tracer.replay_fitted(&op, 7, local.cycles, |ev| {
+            a.push(ev.clone());
+        });
+        tracer.replay_at(&op, 7, |ev| b.push(ev.clone()));
+        assert_eq!(a, b);
     }
 }

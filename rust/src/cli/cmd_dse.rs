@@ -6,6 +6,8 @@
 use crate::capsnet::CapsNetConfig;
 use crate::dse::{Explorer, MultiSweep, SweepSpace, SweepStats};
 use crate::report::Table;
+use crate::telemetry::{CounterRegistry, SweepProfile};
+use crate::timeline::Timeline;
 use crate::util::json::Json;
 use crate::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
 use crate::{Error, Result};
@@ -27,7 +29,13 @@ impl Command for Dse {
     }
 
     fn groups(&self) -> &'static [&'static [FlagSpec]] {
-        &[spec::SCENARIO, spec::TECH_ONLY, spec::DSE, spec::PREFLIGHT]
+        &[
+            spec::SCENARIO,
+            spec::TECH_ONLY,
+            spec::DSE,
+            spec::PROFILE_ONLY,
+            spec::PREFLIGHT,
+        ]
     }
 
     fn long_help(&self) -> &'static str {
@@ -122,12 +130,16 @@ impl Command for Dse {
             return Err(Error::Config(d.render()));
         }
 
+        let profiling = ctx.flags.contains_key("profile");
+        let builds_before = Timeline::build_count();
+        let mut prof = SweepProfile::new();
         let t0 = std::time::Instant::now();
         // streaming front: the full point set is never materialized —
         // the only way the >=100k-point huge space stays cheap — and
         // with --prune on whole geometry subtrees the incumbent front
         // dominates are skipped before pricing (bit-identical front)
-        let (front, stats) = ex.sweep_front(prune)?;
+        let (front, stats) =
+            ex.sweep_front_profiled(prune, profiling.then_some(&mut prof))?;
         // wall-clock is progress feedback only: printed eagerly in
         // table mode, never part of the JSON document (which stays
         // bit-deterministic across runs)
@@ -200,6 +212,40 @@ impl Command for Dse {
             best.sectors,
             fmt_energy_uj(best.onchip_energy_pj)
         ));
+        if profiling {
+            // deterministic counters only: SweepStats + the
+            // timeline-build delta (provably 0 — the sweep hot path
+            // never constructs the IR).  CostCache hit/miss tallies
+            // are deliberately absent: they depend on thread
+            // interleaving and would break JSON byte-determinism.
+            let mut counters = CounterRegistry::from_sweep_stats(&stats);
+            counters.set(
+                "timeline.builds",
+                Timeline::build_count() - builds_before,
+            );
+            let snap = counters.snapshot();
+            if let Json::Obj(m) = &mut out.json {
+                m.insert(
+                    "profile".into(),
+                    Json::obj(vec![
+                        ("counters", snap.to_json()),
+                        ("phases", prof.to_json()),
+                    ]),
+                );
+            }
+            out.blank();
+            out.table(snap.table("profile — deterministic counters"));
+            let phases: Vec<String> = prof
+                .by_phase()
+                .iter()
+                .map(|(n, u)| format!("{n} {u}"))
+                .collect();
+            out.text(format!(
+                "phases (virtual work units): {} — total {}",
+                phases.join(", "),
+                prof.total_units(),
+            ));
+        }
         Ok(out)
     }
 }
@@ -253,6 +299,8 @@ fn run_full(
         ms.space.num_points(),
         ms.num_points()
     ));
+    let profiling = ctx.flags.contains_key("profile");
+    let builds_before = Timeline::build_count();
     let mut out = Output::new();
     let t0 = std::time::Instant::now();
     let fronts = ms.run_front(prune)?;
@@ -313,5 +361,21 @@ fn run_full(
         total.priced_points,
         total.front_len,
     ));
+    if profiling {
+        // grand-sweep profile: aggregated counters only (the per-pair
+        // phase breakdown would be per-front, not one clock)
+        let mut counters = CounterRegistry::from_sweep_stats(&total);
+        counters
+            .set("timeline.builds", Timeline::build_count() - builds_before);
+        let snap = counters.snapshot();
+        if let Json::Obj(m) = &mut out.json {
+            m.insert(
+                "profile".into(),
+                Json::obj(vec![("counters", snap.to_json())]),
+            );
+        }
+        out.blank();
+        out.table(snap.table("profile — deterministic counters"));
+    }
     Ok(out)
 }

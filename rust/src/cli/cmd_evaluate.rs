@@ -6,6 +6,8 @@ use crate::capstore::arch::{Organization, DEFAULT_BANKS, DEFAULT_SECTORS};
 use crate::report::paper::PaperReference;
 use crate::report::Table;
 use crate::scenario::{Evaluator, Geometry, Scenario};
+use crate::telemetry::CounterRegistry;
+use crate::timeline::Timeline;
 use crate::util::json::Json;
 use crate::util::units::{fmt_bytes, fmt_energy_uj, fmt_si};
 use crate::Result;
@@ -27,7 +29,13 @@ impl Command for Evaluate {
     }
 
     fn groups(&self) -> &'static [&'static [FlagSpec]] {
-        &[spec::SCENARIO, spec::MEMORY, spec::TIME, spec::PREFLIGHT]
+        &[
+            spec::SCENARIO,
+            spec::MEMORY,
+            spec::TIME,
+            spec::PROFILE_ONLY,
+            spec::PREFLIGHT,
+        ]
     }
 
     fn run(&self, ctx: &CommandContext) -> Result<Output> {
@@ -35,6 +43,8 @@ impl Command for Evaluate {
         // static pre-flight: error-severity diagnostics abort before
         // any evaluation work (--no-check skips)
         super::cmd_check::preflight(ctx, &sc, ctx.scenario_doc())?;
+        let profiling = ctx.flags.contains_key("profile");
+        let builds_before = Timeline::build_count();
         let ev = Evaluator::new();
         let paper = PaperReference::new();
 
@@ -200,6 +210,27 @@ impl Command for Evaluate {
                 event.transitions,
                 event.not_ready_cycles,
             ));
+        }
+        if profiling {
+            // deterministic counters: the evaluation path is serial,
+            // so the shared cost cache's hit/miss tallies are stable
+            // here (unlike a threaded sweep, where they are excluded)
+            let mut counters = CounterRegistry::new();
+            counters.set(
+                "timeline.builds",
+                Timeline::build_count() - builds_before,
+            );
+            counters.set("cache.hits", ev.cost_cache().hits());
+            counters.set("cache.misses", ev.cost_cache().misses());
+            let snap = counters.snapshot();
+            if let Json::Obj(m) = &mut out.json {
+                m.insert(
+                    "profile".into(),
+                    Json::obj(vec![("counters", snap.to_json())]),
+                );
+            }
+            out.blank();
+            out.table(snap.table("profile — deterministic counters"));
         }
         Ok(out)
     }

@@ -1,0 +1,280 @@
+//! `capstore trace [<net> [<org>]]` — export a deterministic
+//! Chrome-trace-event/Perfetto JSON trace (`--out trace.json`, open it
+//! at ui.perfetto.dev) of either one batch timeline (default) or a
+//! seeded serving run (`--traffic`).
+//!
+//! Every timestamp in the file is a simulated cycle and the bytes are
+//! a pure function of the scenario + seed: running the same invocation
+//! twice produces byte-identical output (CI's trace-smoke job and
+//! `tests/telemetry.rs` pin this).  Tracing reads results the
+//! evaluation already computed — it builds no extra `Timeline` IRs.
+
+use crate::accel::systolic::ArrayConfig;
+use crate::analysis::breakdown::EnergyModel;
+use crate::scenario::{Evaluator, Scenario};
+use crate::telemetry::{perfetto, trace_timeline, trace_tiles, TraceSink};
+use crate::traffic::{simulate_traced, ServiceModel};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct TraceCmd;
+
+impl Command for TraceCmd {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn about(&self) -> &'static str {
+        "export a Perfetto trace of a timeline or serving run"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[
+            spec::SCENARIO,
+            spec::MEMORY,
+            spec::TIME,
+            spec::TRAFFIC,
+            spec::FAULT_KNOBS,
+            spec::TRACE,
+            spec::PREFLIGHT,
+        ]
+    }
+
+    fn max_positionals(&self) -> usize {
+        2
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<net> [<org>]]"
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Default mode renders one batch timeline: an op track (with\n\
+         tile-level events nested inside each op span), DMA transfer\n\
+         and stall tracks, a per-macro ON-sector counter track, and one\n\
+         power track per gating domain whose spans carry the exact\n\
+         per-segment leakage attribution.  `--traffic` instead records\n\
+         a seeded serving run: request arrival→completion arcs, batch\n\
+         spans, queue-depth/backlog counters, cold/warm-start and\n\
+         fault-event instants, fault windows.  Timestamps are simulated\n\
+         cycles; the same invocation is byte-identical across runs.\n\
+         The serving-workload and fault flags apply to `--traffic`\n\
+         only; `--batch` applies to the default mode only (the traffic\n\
+         batcher decides its own batch sizes via --max-batch)."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario_with_positionals()?;
+        let traffic_mode = ctx.flags.contains_key("traffic");
+
+        // `--rates` re-ranks a whole Pareto front; a trace records one
+        // run — reject rather than silently trace only the first rate
+        if ctx.flags.contains_key("rates") {
+            return Err(Error::Config(
+                "`trace` records a single run: use --traffic --rate R \
+                 for one serving profile (--rates is the re-ranking \
+                 sweep, see `capstore traffic`)"
+                    .into(),
+            ));
+        }
+        if traffic_mode {
+            if ctx.flags.contains_key("batch") {
+                return Err(Error::Config(
+                    "--batch pins a pipelined batch size but the \
+                     traffic batcher decides actual batch sizes — use \
+                     --max-batch with --traffic"
+                        .into(),
+                ));
+            }
+        } else {
+            // serving knobs without --traffic would be silently inert,
+            // and this CLI rejects rather than ignores
+            for f in [
+                "rate",
+                "pattern",
+                "seed",
+                "duration",
+                "slo-ms",
+                "max-batch",
+                "max-wait-ms",
+                "faults",
+                "wake-fail-rate",
+                "queue-cap",
+                "retry-budget",
+                "timeout-ms",
+                "wake-fallback",
+            ] {
+                if ctx.flags.contains_key(f) {
+                    return Err(Error::Config(format!(
+                        "--{f} shapes a serving run: add --traffic to \
+                         trace one, or drop the flag to trace the batch \
+                         timeline"
+                    )));
+                }
+            }
+        }
+        let path = ctx.flag("out").unwrap_or("trace.json");
+
+        let ev = Evaluator::new();
+        let mut sink = TraceSink::new();
+        let mut summary: Vec<String> = Vec::new();
+
+        if traffic_mode {
+            let (profile, policy, faults, resilience) =
+                super::cmd_traffic::resolve_serving(ctx, &sc)?;
+            // static pre-flight on the fully resolved workload (flags
+            // already folded in — pass no doc), exactly like `traffic`
+            let checked = Scenario {
+                traffic: Some(profile.clone()),
+                faults: (!faults.is_identity()).then(|| faults.clone()),
+                ..sc.clone()
+            };
+            super::cmd_check::preflight(ctx, &checked, None)?;
+            let svc = ServiceModel::with_faults(
+                &ev,
+                &sc,
+                policy.max_batch,
+                Some(&faults),
+            )?;
+            let report = simulate_traced(
+                &svc,
+                &profile,
+                &policy,
+                &faults,
+                &resilience,
+                Some(&mut sink),
+            )?;
+            summary.push(format!("traffic:  {}", profile.label()));
+            summary.push(format!(
+                "recorded {} arrivals, {} served in {} batches over \
+                 {} cycles",
+                report.arrivals,
+                report.served,
+                report.batches,
+                report.horizon_cycles,
+            ));
+        } else {
+            super::cmd_check::preflight(ctx, &sc, ctx.scenario_doc())?;
+            let e = ev.evaluate(&sc)?;
+            let tl = e.timeline();
+            trace_timeline(&mut sink, tl);
+            // the tile nest replays the accel tracer's schedule fitted
+            // into the op slots it already has — no extra IR builds
+            let mut model = EnergyModel::new(sc.network.clone());
+            model.tech = sc.tech.technology();
+            let mctx = model.context();
+            trace_tiles(&mut sink, tl, &mctx.schedule, &ArrayConfig::default());
+            summary.push(format!(
+                "recorded {} ops over {} cycles ({} gating domains)",
+                tl.ops.len(),
+                tl.total_cycles,
+                tl.domains.len(),
+            ));
+        }
+
+        let rendered = perfetto::render(&sink);
+        std::fs::write(path, &rendered)?;
+
+        let mut out = Output::new();
+        out.json = Json::obj(vec![
+            ("scenario", Json::Str(sc.label())),
+            (
+                "mode",
+                Json::Str(
+                    if traffic_mode { "traffic" } else { "timeline" }
+                        .to_string(),
+                ),
+            ),
+            ("out", Json::Str(path.to_string())),
+            ("events", Json::Num(sink.len() as f64)),
+            ("tracks", Json::Num(sink.track_count() as f64)),
+            ("bytes", Json::Num(rendered.len() as f64)),
+        ]);
+        out.text(format!("scenario: {}", sc.label()));
+        for line in summary {
+            out.text(line);
+        }
+        out.text(format!(
+            "wrote {} ({} events on {} tracks, {} bytes) — open at \
+             ui.perfetto.dev",
+            path,
+            sink.len(),
+            sink.track_count(),
+            rendered.len(),
+        ));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Flags;
+    use super::*;
+
+    fn run_trace(
+        positionals: Vec<String>,
+        flags: Flags,
+    ) -> Result<Output> {
+        let ctx = CommandContext::new("trace", positionals, flags)?;
+        TraceCmd.run(&ctx)
+    }
+
+    #[test]
+    fn trace_flag_conflicts_are_rejected() {
+        // serving knobs without --traffic are inert — rejected
+        for (key, value) in [
+            ("rate", "100"),
+            ("seed", "7"),
+            ("wake-fail-rate", "0.1"),
+            ("queue-cap", "32"),
+        ] {
+            let mut flags = Flags::new();
+            flags.insert(key.into(), value.into());
+            assert!(
+                run_trace(Vec::new(), flags).is_err(),
+                "trace accepted --{key} without --traffic"
+            );
+        }
+        // --batch is the pipelined-batch pin; the traffic batcher
+        // decides its own sizes
+        let mut flags = Flags::new();
+        flags.insert("traffic".into(), String::new());
+        flags.insert("batch".into(), "4".into());
+        assert!(run_trace(Vec::new(), flags).is_err());
+        // --rates is the re-ranking sweep, never a single traced run
+        let mut flags = Flags::new();
+        flags.insert("traffic".into(), String::new());
+        flags.insert("rates".into(), "100,200".into());
+        assert!(run_trace(Vec::new(), flags).is_err());
+    }
+
+    #[test]
+    fn trace_writes_byte_identical_json() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("capstore_trace_test_1.json");
+        let p2 = dir.join("capstore_trace_test_2.json");
+        for p in [&p1, &p2] {
+            let mut flags = Flags::new();
+            flags.insert("out".into(), p.display().to_string());
+            flags.insert("format".into(), "json".into());
+            let out = run_trace(vec!["mnist".into()], flags).unwrap();
+            assert!(out.json.render().contains("\"events\""));
+        }
+        let a = std::fs::read(&p1).unwrap();
+        let b = std::fs::read(&p2).unwrap();
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same invocation must be byte-identical");
+        // and it parses as a JSON object with a traceEvents array
+        let doc =
+            crate::util::json::Json::parse(&String::from_utf8(a).unwrap())
+                .unwrap();
+        assert!(doc.get("traceEvents").is_some());
+    }
+}

@@ -8,6 +8,8 @@ use crate::dse::Explorer;
 use crate::faults::{FaultPlan, ResiliencePolicy};
 use crate::report::Table;
 use crate::scenario::{Evaluator, Scenario};
+use crate::telemetry::CounterRegistry;
+use crate::timeline::Timeline;
 use crate::traffic::{
     rank_for_traffic_under, simulate_with, ArrivalPattern, ServiceModel,
     TrafficProfile,
@@ -39,6 +41,7 @@ impl Command for TrafficCmd {
             spec::TIME_UNBATCHED,
             spec::TRAFFIC,
             spec::FAULT_KNOBS,
+            spec::PROFILE_ONLY,
             spec::PREFLIGHT,
         ]
     }
@@ -69,7 +72,6 @@ impl Command for TrafficCmd {
     }
 
     fn run(&self, ctx: &CommandContext) -> Result<Output> {
-        let rc = ctx.run_config();
         let sc = ctx.scenario_with_positionals()?;
 
         // `--rates` re-ranks a Pareto front, i.e. it explores the
@@ -77,6 +79,13 @@ impl Command for TrafficCmd {
         // would be silently overridden by the sweep, and this CLI
         // rejects rather than ignores (mirroring `capstore dse`).
         if ctx.flags.contains_key("rates") {
+            if ctx.flags.contains_key("profile") {
+                return Err(Error::Config(
+                    "--profile reports the counters of one serving run; \
+                     --rates runs a whole re-ranking sweep — drop one"
+                        .into(),
+                ));
+            }
             if ctx.positionals.get(1).is_some() {
                 return Err(Error::Config(
                     "`traffic <net> <org> --rates` pins an organization \
@@ -126,90 +135,8 @@ impl Command for TrafficCmd {
             }
         }
 
-        // workload: scenario [traffic] section (if any) under the flags
-        let mut profile = sc.traffic.clone().unwrap_or_default();
-        if let Some(v) = ctx.flag("pattern") {
-            profile.pattern = ArrivalPattern::by_name(v).ok_or_else(|| {
-                Error::Config(format!(
-                    "--pattern: want one of {}, got {v:?}",
-                    ArrivalPattern::names().join("|")
-                ))
-            })?;
-        }
-        if let Some(v) = ctx.parsed("rate")? {
-            profile.rate_per_sec = v;
-        }
-        if let Some(v) = ctx.parsed("seed")? {
-            profile.seed = v;
-        }
-        if let Some(v) = ctx.parsed("duration")? {
-            profile.duration_secs = v;
-        }
-        if let Some(v) = ctx.parsed("slo-ms")? {
-            profile.slo_ms = v;
-        }
-        profile.validate()?;
-
-        // batching triggers: run-config [server] knobs under the flags
-        let mut policy =
-            BatchPolicy { max_batch: rc.max_batch, max_wait: rc.max_wait };
-        if let Some(v) = ctx.parsed("max-batch")? {
-            policy.max_batch = v;
-            if policy.max_batch == 0 {
-                return Err(Error::Config(
-                    "--max-batch must be > 0".into(),
-                ));
-            }
-        }
-        if let Some(ms) = ctx.parsed::<f64>("max-wait-ms")? {
-            if !(ms.is_finite() && ms >= 0.0) {
-                return Err(Error::Config(
-                    "--max-wait-ms must be >= 0".into(),
-                ));
-            }
-            policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
-        }
-
-        // fault plan: scenario [faults] section, replaced by a --faults
-        // file, overridden field-wise by the dedicated flags
-        let mut faults =
-            sc.faults.clone().unwrap_or_else(FaultPlan::none);
-        if let Some(path) = ctx.flag("faults") {
-            faults = FaultPlan::load(path)?;
-        }
-        if let Some(v) = ctx.parsed::<f64>("wake-fail-rate")? {
-            faults.wake_fail_rate = v;
-        }
-        faults.validate()?;
-
-        // resilience policy: flags only (the policy is an operator
-        // choice, not a property of the design under test)
-        let mut resilience = ResiliencePolicy::none();
-        if let Some(v) = ctx.parsed::<u64>("queue-cap")? {
-            if v == 0 {
-                return Err(Error::Config(
-                    "--queue-cap must be > 0 (0 would shed everything)"
-                        .into(),
-                ));
-            }
-            resilience.queue_cap = Some(v);
-        }
-        if let Some(v) = ctx.parsed::<f64>("timeout-ms")? {
-            resilience.timeout_ms = Some(v);
-        }
-        if let Some(v) = ctx.parsed::<u32>("retry-budget")? {
-            resilience.retry_budget = v;
-            // a retry budget needs a timeout to act on; default to the
-            // SLO — a request that has already missed its deadline is
-            // the one worth re-queueing fresh
-            if v > 0 && resilience.timeout_ms.is_none() {
-                resilience.timeout_ms = Some(profile.slo_ms);
-            }
-        }
-        if let Some(v) = ctx.parsed::<f64>("wake-fallback")? {
-            resilience.wake_fail_fallback = Some(v);
-        }
-        resilience.validate()?;
+        let (profile, policy, faults, resilience) =
+            resolve_serving(ctx, &sc)?;
 
         // static pre-flight on the fully resolved workload (flags
         // already folded into profile/faults, so the scenario doc's
@@ -239,6 +166,8 @@ impl Command for TrafficCmd {
             );
         }
 
+        let profiling = ctx.flags.contains_key("profile");
+        let builds_before = Timeline::build_count();
         let svc = ServiceModel::with_faults(
             &ev,
             &sc,
@@ -275,6 +204,12 @@ impl Command for TrafficCmd {
                 "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  \
                  max {:.3}",
                 s.median, s.p95, s.p99, s.max
+            ));
+        }
+        if !report.latency_cycles_hist.is_empty() {
+            out.text(format!(
+                "latency cycles: {}",
+                report.latency_cycles_hist.render_line(),
             ));
         }
         out.text(format!(
@@ -336,8 +271,121 @@ impl Command for TrafficCmd {
                 None => out.text("all-on fallback: never engaged"),
             };
         }
+        if profiling {
+            // deterministic counters: the conservation-law buckets and
+            // fault tallies of this run, plus how many Timeline IRs the
+            // command built (service-model construction only — the
+            // event loop itself builds zero)
+            let mut counters =
+                CounterRegistry::from_traffic_report(&report);
+            counters.set(
+                "timeline.builds",
+                Timeline::build_count() - builds_before,
+            );
+            let snap = counters.snapshot();
+            if let Json::Obj(m) = &mut out.json {
+                m.insert(
+                    "profile".into(),
+                    Json::obj(vec![("counters", snap.to_json())]),
+                );
+            }
+            out.blank();
+            out.table(snap.table("profile — deterministic counters"));
+        }
         Ok(out)
     }
+}
+
+/// Resolve the four serving knobs — workload profile, batching
+/// triggers, fault plan, resilience policy — from the scenario under
+/// the flags, with validation.  Shared with `capstore trace --traffic`
+/// so a traced run resolves its inputs exactly like an untraced one.
+pub(super) fn resolve_serving(
+    ctx: &CommandContext,
+    sc: &Scenario,
+) -> Result<(TrafficProfile, BatchPolicy, FaultPlan, ResiliencePolicy)> {
+    let rc = ctx.run_config();
+
+    // workload: scenario [traffic] section (if any) under the flags
+    let mut profile = sc.traffic.clone().unwrap_or_default();
+    if let Some(v) = ctx.flag("pattern") {
+        profile.pattern = ArrivalPattern::by_name(v).ok_or_else(|| {
+            Error::Config(format!(
+                "--pattern: want one of {}, got {v:?}",
+                ArrivalPattern::names().join("|")
+            ))
+        })?;
+    }
+    if let Some(v) = ctx.parsed("rate")? {
+        profile.rate_per_sec = v;
+    }
+    if let Some(v) = ctx.parsed("seed")? {
+        profile.seed = v;
+    }
+    if let Some(v) = ctx.parsed("duration")? {
+        profile.duration_secs = v;
+    }
+    if let Some(v) = ctx.parsed("slo-ms")? {
+        profile.slo_ms = v;
+    }
+    profile.validate()?;
+
+    // batching triggers: run-config [server] knobs under the flags
+    let mut policy =
+        BatchPolicy { max_batch: rc.max_batch, max_wait: rc.max_wait };
+    if let Some(v) = ctx.parsed("max-batch")? {
+        policy.max_batch = v;
+        if policy.max_batch == 0 {
+            return Err(Error::Config("--max-batch must be > 0".into()));
+        }
+    }
+    if let Some(ms) = ctx.parsed::<f64>("max-wait-ms")? {
+        if !(ms.is_finite() && ms >= 0.0) {
+            return Err(Error::Config("--max-wait-ms must be >= 0".into()));
+        }
+        policy.max_wait = std::time::Duration::from_secs_f64(ms / 1.0e3);
+    }
+
+    // fault plan: scenario [faults] section, replaced by a --faults
+    // file, overridden field-wise by the dedicated flags
+    let mut faults = sc.faults.clone().unwrap_or_else(FaultPlan::none);
+    if let Some(path) = ctx.flag("faults") {
+        faults = FaultPlan::load(path)?;
+    }
+    if let Some(v) = ctx.parsed::<f64>("wake-fail-rate")? {
+        faults.wake_fail_rate = v;
+    }
+    faults.validate()?;
+
+    // resilience policy: flags only (the policy is an operator
+    // choice, not a property of the design under test)
+    let mut resilience = ResiliencePolicy::none();
+    if let Some(v) = ctx.parsed::<u64>("queue-cap")? {
+        if v == 0 {
+            return Err(Error::Config(
+                "--queue-cap must be > 0 (0 would shed everything)".into(),
+            ));
+        }
+        resilience.queue_cap = Some(v);
+    }
+    if let Some(v) = ctx.parsed::<f64>("timeout-ms")? {
+        resilience.timeout_ms = Some(v);
+    }
+    if let Some(v) = ctx.parsed::<u32>("retry-budget")? {
+        resilience.retry_budget = v;
+        // a retry budget needs a timeout to act on; default to the
+        // SLO — a request that has already missed its deadline is
+        // the one worth re-queueing fresh
+        if v > 0 && resilience.timeout_ms.is_none() {
+            resilience.timeout_ms = Some(profile.slo_ms);
+        }
+    }
+    if let Some(v) = ctx.parsed::<f64>("wake-fallback")? {
+        resilience.wake_fail_fallback = Some(v);
+    }
+    resilience.validate()?;
+
+    Ok((profile, policy, faults, resilience))
 }
 
 /// `capstore traffic --rates R1,R2,...`: the serving-aware DSE.  Sweep

@@ -37,6 +37,7 @@ mod cmd_help;
 mod cmd_info;
 mod cmd_serve;
 mod cmd_timeline;
+mod cmd_trace;
 mod cmd_traffic;
 
 use std::collections::BTreeMap;

@@ -12,6 +12,7 @@ use super::cmd_help::HelpCmd;
 use super::cmd_info::Info;
 use super::cmd_serve::Serve;
 use super::cmd_timeline::TimelineCmd;
+use super::cmd_trace::TraceCmd;
 use super::cmd_traffic::TrafficCmd;
 use super::completions::Completions;
 use super::Command;
@@ -23,6 +24,7 @@ pub fn commands() -> &'static [&'static dyn Command] {
         &Evaluate,
         &Check,
         &TimelineCmd,
+        &TraceCmd,
         &Dse,
         &TrafficCmd,
         &Serve,

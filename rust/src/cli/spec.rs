@@ -450,6 +450,36 @@ pub const NO_CHECK: FlagSpec = FlagSpec {
     group: FlagGroup::Scenario,
 };
 
+pub const OUT: FlagSpec = FlagSpec {
+    name: "out",
+    kind: ValueKind::Path,
+    hint: "<path.json>",
+    doc: "trace output path (Chrome trace-event JSON; open it at \
+          ui.perfetto.dev)",
+    default: "trace.json",
+    group: FlagGroup::Scenario,
+};
+
+pub const TRACE_TRAFFIC: FlagSpec = FlagSpec {
+    name: "traffic",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "trace a seeded serving run (request arcs, batches, queue \
+          depth, fault windows) instead of one batch timeline",
+    default: "",
+    group: FlagGroup::Traffic,
+};
+
+pub const PROFILE: FlagSpec = FlagSpec {
+    name: "profile",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "append the deterministic counters section (stable dotted \
+          names; see docs/USER_GUIDE.md for the reference table)",
+    default: "",
+    group: FlagGroup::Scenario,
+};
+
 pub const ALL_EXAMPLES: FlagSpec = FlagSpec {
     name: "all-examples",
     kind: ValueKind::Switch,
@@ -512,6 +542,12 @@ pub const INFO: &[FlagSpec] = &[CONFIG, FORMAT, ARTIFACTS];
 
 /// The static pre-flight opt-out shared by `evaluate`/`dse`/`traffic`.
 pub const PREFLIGHT: &[FlagSpec] = &[NO_CHECK];
+
+/// `trace`'s own flags.
+pub const TRACE: &[FlagSpec] = &[OUT, TRACE_TRAFFIC];
+
+/// The `--profile` opt-in shared by `evaluate`/`dse`/`traffic`.
+pub const PROFILE_ONLY: &[FlagSpec] = &[PROFILE];
 
 /// `check`'s own switches.
 pub const CHECK: &[FlagSpec] = &[ALL_EXAMPLES];

@@ -2,25 +2,82 @@
 
 use std::time::Duration;
 
-use crate::util::stats::Summary;
+use crate::util::stats::{LogHistogram, Summary};
+
+/// Retained-sample cap: once the raw vector reaches this size it is
+/// compacted by keeping every 2nd retained sample and the keep stride
+/// doubles, so memory stays O(1) over arbitrarily long serve runs.
+const MAX_RETAINED_SAMPLES: usize = 4096;
 
 /// Collects latency samples (milliseconds).
-#[derive(Debug, Default, Clone)]
+///
+/// Historically this grew an unbounded `Vec<f64>` — one entry per
+/// request, forever.  It now keeps (a) an exact [`LogHistogram`] over
+/// microseconds, which never loses a sample and never grows, and (b) a
+/// capped raw-sample vector for the percentile [`Summary`], thinned by
+/// deterministic keep-every-k downsampling (no RNG, no clock): when the
+/// vector hits [`MAX_RETAINED_SAMPLES`] every 2nd retained sample is
+/// dropped and the stride doubles, so the retained set is always
+/// "every k-th request since the start", an unbiased systematic sample.
+#[derive(Debug, Clone)]
 pub struct LatencyRecorder {
     samples_ms: Vec<f64>,
+    /// Keep every `stride`-th sample (1 = keep all).
+    stride: u64,
+    /// Samples ever recorded (≥ `samples_ms.len()`).
+    total: u64,
+    hist_us: LogHistogram,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        LatencyRecorder {
+            samples_ms: Vec::new(),
+            stride: 1,
+            total: 0,
+            hist_us: LogHistogram::new(),
+        }
+    }
 }
 
 impl LatencyRecorder {
     pub fn record(&mut self, d: Duration) {
-        self.samples_ms.push(d.as_secs_f64() * 1.0e3);
+        self.hist_us
+            .record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+        if self.total % self.stride == 0 {
+            self.samples_ms.push(d.as_secs_f64() * 1.0e3);
+        }
+        self.total += 1;
+        if self.samples_ms.len() >= MAX_RETAINED_SAMPLES {
+            let mut i = 0usize;
+            self.samples_ms.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
     }
 
+    /// Percentile summary over the retained (systematically thinned)
+    /// samples; exact until the cap is first hit.
     pub fn summary(&self) -> Option<Summary> {
         Summary::from_samples(&self.samples_ms)
     }
 
-    pub fn count(&self) -> usize {
+    /// Exact full-run latency distribution (microsecond domain).
+    pub fn histogram(&self) -> &LogHistogram {
+        &self.hist_us
+    }
+
+    /// Samples currently retained for the summary.
+    pub fn retained(&self) -> usize {
         self.samples_ms.len()
+    }
+
+    /// Samples ever recorded.
+    pub fn count(&self) -> usize {
+        self.total as usize
     }
 }
 
@@ -99,5 +156,31 @@ mod tests {
         // the serving reports read the tail percentiles off the same
         // summary; nearest-rank keeps them ordered and within range
         assert!(s.median <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn recorder_caps_retained_samples() {
+        let mut r = LatencyRecorder::default();
+        let n = 3 * MAX_RETAINED_SAMPLES;
+        for i in 0..n {
+            r.record(Duration::from_micros(1 + i as u64));
+        }
+        // every sample is counted and lands in the exact histogram...
+        assert_eq!(r.count(), n);
+        assert_eq!(r.histogram().total(), n as u64);
+        // ...while the raw vector stays bounded
+        assert!(r.retained() < MAX_RETAINED_SAMPLES);
+        assert!(r.retained() >= MAX_RETAINED_SAMPLES / 4);
+        let s = r.summary().unwrap();
+        // systematic thinning keeps the spread of a uniform ramp
+        assert!(s.min <= 0.01, "min {}", s.min);
+        assert!(s.max >= 0.9 * n as f64 / 1.0e3, "max {}", s.max);
+        // deterministic: same inputs, same retained set
+        let mut r2 = LatencyRecorder::default();
+        for i in 0..n {
+            r2.record(Duration::from_micros(1 + i as u64));
+        }
+        assert_eq!(r.samples_ms, r2.samples_ms);
+        assert_eq!(r.histogram(), r2.histogram());
     }
 }

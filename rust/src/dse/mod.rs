@@ -294,11 +294,23 @@ impl Explorer {
         &self,
         prune: bool,
     ) -> Result<(Vec<DesignPoint>, SweepStats)> {
-        crate::scenario::Evaluator::new().sweep_model_front(
+        self.sweep_front_profiled(prune, None)
+    }
+
+    /// [`sweep_front`](Self::sweep_front) with an optional per-phase
+    /// profile (`capstore dse --profile`); `None` is the zero-cost
+    /// default and the front/stats are bit-identical either way.
+    pub fn sweep_front_profiled(
+        &self,
+        prune: bool,
+        profile: Option<&mut crate::telemetry::SweepProfile>,
+    ) -> Result<(Vec<DesignPoint>, SweepStats)> {
+        crate::scenario::Evaluator::new().sweep_model_front_profiled(
             &self.model,
             &self.space,
             self.threads,
             prune,
+            profile,
         )
     }
 

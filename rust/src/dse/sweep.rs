@@ -370,7 +370,31 @@ pub fn run_front(
     threads: usize,
     prune_dominated: bool,
 ) -> Result<(Vec<DesignPoint>, SweepStats)> {
+    run_front_profiled(model, ctx, cache, specs, threads, prune_dominated, None)
+}
+
+/// [`run_front`] with optional per-phase profiling.  With
+/// `profile: None` this IS `run_front` — no extra work, bit-identical
+/// results.  With a [`SweepProfile`], each phase records its work units
+/// on the profile's virtual clock: `geometry solve` (distinct
+/// geometries solved into the [`CostTable`]), then per admission round
+/// `admission` (geometries tested against the incumbent front),
+/// `pricing` (points priced), and `skyline` (front insertions).  All
+/// counts are slot-indexed/deterministic, so the profile — unlike wall
+/// clock — is identical across machines and `--threads` values.
+pub fn run_front_profiled(
+    model: &EnergyModel,
+    ctx: &SweepContext,
+    cache: &CostCache,
+    specs: &[PointSpec],
+    threads: usize,
+    prune_dominated: bool,
+    mut profile: Option<&mut crate::telemetry::SweepProfile>,
+) -> Result<(Vec<DesignPoint>, SweepStats)> {
     let table = CostTable::build(model, ctx, cache, specs, threads)?;
+    if let Some(p) = profile.as_deref_mut() {
+        p.phase("geometry solve", 0, table.num_geometries() as u64);
+    }
     let mut stats = SweepStats {
         specs: specs.len() as u64,
         geometries: table.num_geometries() as u64,
@@ -382,7 +406,9 @@ pub fn run_front(
     let mut priced: Vec<DesignPoint> = Vec::new();
     let ngeoms = table.num_geometries();
     let mut round_start = 0;
+    let mut round = 0u64;
     while round_start < ngeoms {
+        round += 1;
         let round_end = (round_start + PRUNE_ROUND_GEOMETRIES).min(ngeoms);
         batch.clear();
         for gi in round_start..round_end {
@@ -394,8 +420,15 @@ pub fn run_front(
                 batch.extend_from_slice(m);
             }
         }
+        if let Some(p) = profile.as_deref_mut() {
+            p.phase("admission", round, (round_end - round_start) as u64);
+        }
         price_batch(&table, specs, &batch, threads, &mut priced);
         stats.priced_points += priced.len() as u64;
+        if let Some(p) = profile.as_deref_mut() {
+            p.phase("pricing", round, priced.len() as u64);
+            p.phase("skyline", round, batch.len() as u64);
+        }
         for (&i, p) in batch.iter().zip(priced.drain(..)) {
             sky.insert(i as u64, p);
         }
@@ -651,6 +684,55 @@ mod tests {
         assert_eq!(effective_threads(8, 3), 3);
         assert_eq!(effective_threads(1, 0), 1);
         assert!(effective_threads(0, 1000) >= 1);
+    }
+
+    #[test]
+    fn profiled_run_front_is_transparent_and_records_phases() {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let space = SweepSpace {
+            banks: vec![8, 16],
+            sectors: vec![16, 64],
+            organizations: Organization::all().to_vec(),
+            dma: vec![DmaPolicy::default()],
+        };
+        let specs = enumerate(&space);
+        let (front_a, stats_a) =
+            run_front(&model, &ctx, &CostCache::new(), &specs, 1, true)
+                .unwrap();
+        let mut prof = crate::telemetry::SweepProfile::new();
+        let (front_b, stats_b) = run_front_profiled(
+            &model,
+            &ctx,
+            &CostCache::new(),
+            &specs,
+            1,
+            true,
+            Some(&mut prof),
+        )
+        .unwrap();
+        // profiling must not perturb the sweep at all
+        assert_eq!(stats_a, stats_b);
+        assert_eq!(front_a.len(), front_b.len());
+        for (a, b) in front_a.iter().zip(&front_b) {
+            assert_eq!(
+                a.onchip_energy_pj.to_bits(),
+                b.onchip_energy_pj.to_bits()
+            );
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+        }
+        let by = prof.by_phase();
+        let names: Vec<&str> = by.iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            vec!["geometry solve", "admission", "pricing", "skyline"]
+        );
+        let priced = by.iter().find(|(n, _)| *n == "pricing").unwrap().1;
+        assert_eq!(priced, stats_b.priced_points);
+        assert_eq!(
+            by.iter().find(|(n, _)| *n == "geometry solve").unwrap().1,
+            stats_b.geometries
+        );
     }
 
     #[test]

@@ -629,6 +629,13 @@ impl FaultWindows {
     pub fn total_cycles(&self) -> u64 {
         self.windows.iter().map(|(s, e)| e - s).sum()
     }
+
+    /// The half-open `[start, end)` windows, ascending and disjoint —
+    /// read-only access for consumers that render the window process
+    /// (the telemetry exporter draws one span per window).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.windows.iter().copied()
+    }
 }
 
 #[cfg(test)]

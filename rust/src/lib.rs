@@ -54,6 +54,7 @@ pub mod config;
 pub mod scenario;
 pub mod faults;
 pub mod traffic;
+pub mod telemetry;
 pub mod report;
 pub mod runtime;
 pub mod coordinator;

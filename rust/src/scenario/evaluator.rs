@@ -558,15 +558,36 @@ impl Evaluator {
         threads: usize,
         prune_dominated: bool,
     ) -> Result<(Vec<DesignPoint>, sweep::SweepStats)> {
+        self.sweep_model_front_profiled(
+            model,
+            space,
+            threads,
+            prune_dominated,
+            None,
+        )
+    }
+
+    /// [`sweep_model_front`](Self::sweep_model_front) with an optional
+    /// per-phase profile (`capstore dse --profile`); `None` is the
+    /// zero-cost default.
+    pub fn sweep_model_front_profiled(
+        &self,
+        model: &EnergyModel,
+        space: &SweepSpace,
+        threads: usize,
+        prune_dominated: bool,
+        profile: Option<&mut crate::telemetry::SweepProfile>,
+    ) -> Result<(Vec<DesignPoint>, sweep::SweepStats)> {
         let ctx = model.context();
         let specs = sweep::enumerate(space);
-        sweep::run_front(
+        sweep::run_front_profiled(
             model,
             &ctx,
             &self.cache,
             &specs,
             threads,
             prune_dominated,
+            profile,
         )
     }
 

@@ -1,0 +1,193 @@
+//! The unified counter registry: stable dotted names over the ad-hoc
+//! counters the stack already keeps.
+//!
+//! `Timeline::build_count`, `dse::SweepStats`, and the
+//! `TrafficReport`/`ResilienceStats` tallies each grew their own shape;
+//! [`CounterRegistry`] puts them behind one `BTreeMap<String, u64>`
+//! (sorted — renders deterministically) with one snapshot type that
+//! both the `--profile` flag and the tests consume.  Names are dotted
+//! and stable: `timeline.builds`, `dse.priced_points`, `traffic.shed`,
+//! `faults.wake_retries`, `cache.hits` — the full reference table
+//! lives in `docs/USER_GUIDE.md`.
+
+use std::collections::BTreeMap;
+
+use crate::dse::SweepStats;
+use crate::report::Table;
+use crate::traffic::TrafficReport;
+use crate::util::json::Json;
+
+/// Mutable counter accumulator.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CounterRegistry {
+    counts: BTreeMap<String, u64>,
+}
+
+impl CounterRegistry {
+    pub fn new() -> CounterRegistry {
+        CounterRegistry::default()
+    }
+
+    /// Add `delta` to a counter (creating it at 0).
+    pub fn incr(&mut self, name: &str, delta: u64) {
+        *self.counts.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a counter to an absolute value.
+    pub fn set(&mut self, name: &str, value: u64) {
+        self.counts.insert(name.to_string(), value);
+    }
+
+    /// Fold another registry in (summing shared names).
+    pub fn merge(&mut self, other: &CounterRegistry) {
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    /// Freeze into a snapshot.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot { counts: self.counts.clone() }
+    }
+
+    /// The `dse.*` counters of one sweep.
+    pub fn from_sweep_stats(s: &SweepStats) -> CounterRegistry {
+        let mut r = CounterRegistry::new();
+        r.set("dse.specs", s.specs);
+        r.set("dse.geometries", s.geometries);
+        r.set("dse.dma_policies", s.dma_policies);
+        r.set("dse.pruned_geometries", s.pruned_geometries);
+        r.set("dse.pruned_points", s.pruned_points);
+        r.set("dse.priced_points", s.priced_points);
+        r.set("dse.front_len", s.front_len);
+        r
+    }
+
+    /// The `traffic.*` and `faults.*` counters of one serving run.
+    /// Covers exactly the conservation-law buckets plus the
+    /// fault/resilience tallies, so a snapshot can be checked against
+    /// `arrivals + duplicated + retried == served + queued + shed +
+    /// dropped + timed_out`.
+    pub fn from_traffic_report(rep: &TrafficReport) -> CounterRegistry {
+        let mut r = CounterRegistry::new();
+        r.set("traffic.arrivals", rep.arrivals);
+        r.set("traffic.served", rep.served);
+        r.set("traffic.queued", rep.queued);
+        r.set("traffic.batches", rep.batches);
+        r.set("traffic.cold_starts", rep.cold_starts);
+        r.set("traffic.warm_starts", rep.warm_starts);
+        r.set("traffic.slo_violations", rep.slo_violations);
+        r.set("traffic.peak_queue_depth", rep.peak_queue_depth);
+        let s = &rep.resilience;
+        r.set("traffic.shed", s.shed);
+        r.set("traffic.dropped", s.dropped);
+        r.set("traffic.duplicated", s.duplicated);
+        r.set("traffic.timed_out", s.timed_out);
+        r.set("traffic.retried", s.retried);
+        r.set("traffic.dma_degraded_batches", s.dma_degraded_batches);
+        r.set("traffic.throttled_batches", s.throttled_batches);
+        r.set("faults.wake_attempts", s.wake_attempts);
+        r.set("faults.wake_failures", s.wake_failures);
+        // every failed attempt costs one retry — the name the ISSUE's
+        // counter table standardizes on
+        r.set("faults.wake_retries", s.wake_failures);
+        r
+    }
+}
+
+/// Immutable, renderable view of a [`CounterRegistry`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    counts: BTreeMap<String, u64>,
+}
+
+impl CounterSnapshot {
+    /// Value of a counter; absent names read as 0.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// `(name, value)` pairs in sorted name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> + '_ {
+        self.counts.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Flat JSON object, sorted names (deterministic bytes).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.counts
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        )
+    }
+
+    /// Two-column table for `--format table`.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["counter", "value"]);
+        for (k, v) in self.iter() {
+            t.row(vec![k.to_string(), v.to_string()]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_accumulates_and_snapshots() {
+        let mut r = CounterRegistry::new();
+        r.incr("timeline.builds", 2);
+        r.incr("timeline.builds", 3);
+        r.set("cache.hits", 7);
+        let mut other = CounterRegistry::new();
+        other.incr("timeline.builds", 1);
+        other.set("cache.misses", 4);
+        r.merge(&other);
+        let s = r.snapshot();
+        assert_eq!(s.get("timeline.builds"), 6);
+        assert_eq!(s.get("cache.hits"), 7);
+        assert_eq!(s.get("cache.misses"), 4);
+        assert_eq!(s.get("not.there"), 0);
+        // sorted, deterministic renderings
+        assert_eq!(
+            s.to_json().render(),
+            r#"{"cache.hits":7,"cache.misses":4,"timeline.builds":6}"#
+        );
+        let names: Vec<&str> = s.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        let rendered = s.table("counters").render();
+        assert!(rendered.contains("timeline.builds"));
+        assert!(rendered.contains("6"));
+    }
+
+    #[test]
+    fn sweep_stats_map_to_dotted_names() {
+        let stats = SweepStats {
+            specs: 10,
+            geometries: 100,
+            dma_policies: 3,
+            pruned_geometries: 40,
+            pruned_points: 120,
+            priced_points: 180,
+            front_len: 12,
+        };
+        let s = CounterRegistry::from_sweep_stats(&stats).snapshot();
+        assert_eq!(s.get("dse.priced_points"), 180);
+        assert_eq!(s.get("dse.pruned_geometries"), 40);
+        assert_eq!(s.get("dse.front_len"), 12);
+        assert_eq!(s.len(), 7);
+    }
+}

@@ -1,0 +1,348 @@
+//! Exporters: walk existing simulation results into a [`TraceSink`].
+//!
+//! Nothing here re-simulates or rebuilds anything — [`trace_timeline`]
+//! reads an already-built [`Timeline`] (zero extra
+//! `Timeline::build_count`), [`trace_tiles`] replays the tile-level
+//! schedule the accel tracer already models, and [`TrafficTrace`] is
+//! the hook bundle `traffic::sim::simulate_traced` records through.
+//! Power spans carry the IR's own per-segment energy attribution
+//! ([`Timeline::segment_static_pj`]) so the trace reconciles bit-for-
+//! bit with `static_pj()` — `tests/telemetry.rs` pins that.
+
+use crate::accel::systolic::ArrayConfig;
+use crate::accel::trace::TileTracer;
+use crate::capsnet::Operation;
+use crate::faults::FaultWindows;
+use crate::timeline::{Timeline, TransferDir};
+
+use super::sink::{Arg, TraceSink, TrackId};
+
+/// Export a built [`Timeline`] as spans/counters:
+///
+/// * `timeline/ops` — one span per [`crate::timeline::OpSlot`];
+/// * `timeline/dma in|out` — transfer spans, `timeline/dma stalls` —
+///   array-stall spans;
+/// * `timeline/ON sectors: <macro>` — a step counter per macro from
+///   [`Timeline::macro_segments`] (the paper's Fig. 4 utilization
+///   rendered over time);
+/// * `power/<macro>[<sector>]` — one span per power-state segment,
+///   named `ON`/`WAKING`/`SLEEPING`/`OFF`, each carrying its exact
+///   leakage attribution in `energy_pj`.
+pub fn trace_timeline(sink: &mut TraceSink, tl: &Timeline) {
+    let ops = sink.track("timeline", "ops");
+    for op in &tl.ops {
+        sink.span(
+            ops,
+            op.kind.label(),
+            op.interval.start,
+            op.interval.end,
+            vec![
+                ("index", Arg::U64(op.index as u64)),
+                ("inference", Arg::U64(op.inference)),
+                ("step", Arg::U64(op.step as u64)),
+            ],
+        );
+    }
+
+    if !tl.transfers.is_empty() || !tl.stalls.is_empty() {
+        let dma_in = sink.track("timeline", "dma in");
+        let dma_out = sink.track("timeline", "dma out");
+        let dma_stalls = sink.track("timeline", "dma stalls");
+        for tr in &tl.transfers {
+            let (track, name) = match tr.dir {
+                TransferDir::In => (dma_in, "fetch"),
+                TransferDir::Out => (dma_out, "drain"),
+            };
+            sink.span(
+                track,
+                name,
+                tr.interval.start,
+                tr.interval.end,
+                vec![
+                    ("bytes", Arg::U64(tr.bytes)),
+                    ("op", Arg::U64(tr.op_index as u64)),
+                ],
+            );
+        }
+        for st in &tl.stalls {
+            let mut args = vec![];
+            if let Some(h) = st.holds {
+                args.push(("holds_op", Arg::U64(h as u64)));
+            }
+            sink.span(
+                dma_stalls,
+                "stall",
+                st.interval.start,
+                st.interval.end,
+                args,
+            );
+        }
+    }
+
+    for (mi, m) in tl.macros.iter().enumerate() {
+        let track =
+            sink.track("timeline", &format!("ON sectors: {}", m.label));
+        let segs = tl.macro_segments(mi);
+        for (iv, on) in &segs {
+            sink.counter(track, "on_sectors", iv.start, *on as f64);
+        }
+        if let Some((iv, on)) = segs.last() {
+            sink.counter(track, "on_sectors", iv.end, *on as f64);
+        }
+    }
+
+    for d in &tl.domains {
+        let m = &tl.macros[d.mac];
+        let track =
+            sink.track("power", &format!("{}[{}]", m.label, d.sector));
+        for seg in &d.segments {
+            sink.span(
+                track,
+                seg.state.label(),
+                seg.interval.start,
+                seg.interval.end,
+                vec![(
+                    "energy_pj",
+                    Arg::F64(tl.segment_static_pj(d, seg)),
+                )],
+            );
+        }
+    }
+}
+
+/// Nest tile-level events under each op span: replay the accel
+/// tracer's weight-stationary schedule fitted into every op slot
+/// (see [`TileTracer::replay_fitted`] — the naive schedule can outrun
+/// the roofline interval, so tiles are rescaled, never overlapping the
+/// next op).  Emitted on the same `timeline/ops` track so the viewer
+/// nests them under the containing op span.
+pub fn trace_tiles(
+    sink: &mut TraceSink,
+    tl: &Timeline,
+    schedule: &[Operation],
+    array: &ArrayConfig,
+) {
+    let ops = sink.track("timeline", "ops");
+    let tracer = TileTracer::new(array.clone());
+    for slot in &tl.ops {
+        let op = &schedule[slot.step];
+        tracer.replay_fitted(
+            op,
+            slot.interval.start,
+            slot.interval.cycles(),
+            |ev| {
+                sink.span(
+                    ops,
+                    &format!("tile k{} n{}", ev.kt, ev.nt),
+                    ev.start_cycle,
+                    ev.start_cycle + ev.cycles,
+                    vec![
+                        ("data_reads", Arg::U64(ev.data_reads)),
+                        ("weight_loads", Arg::U64(ev.weight_loads)),
+                        ("accum_writes", Arg::U64(ev.accum_writes)),
+                    ],
+                );
+            },
+        );
+    }
+}
+
+/// The traffic simulator's recording hooks: pre-created tracks plus
+/// terse methods so `traffic::sim`'s event loop stays readable.  Held
+/// as `Option<TrafficTrace>` by the loop — `None` is the zero-cost
+/// default.
+pub struct TrafficTrace<'a> {
+    sink: &'a mut TraceSink,
+    requests: TrackId,
+    batches: TrackId,
+    queue: TrackId,
+    marks: TrackId,
+    faults: TrackId,
+}
+
+impl<'a> TrafficTrace<'a> {
+    pub fn new(sink: &'a mut TraceSink) -> TrafficTrace<'a> {
+        let requests = sink.track("traffic", "requests");
+        let batches = sink.track("traffic", "batches");
+        let queue = sink.track("traffic", "queue");
+        let marks = sink.track("traffic", "events");
+        let faults = sink.track("traffic", "faults");
+        TrafficTrace { sink, requests, batches, queue, marks, faults }
+    }
+
+    /// One request's arrival→completion arc begins (async span).
+    pub fn arrival(&mut self, id: u64, t: u64) {
+        self.sink.async_begin(self.requests, "request", id, t, vec![]);
+    }
+
+    /// The request's batch finished serving; the arc closes.
+    pub fn complete(&mut self, id: u64, t: u64, wait_cycles: u64) {
+        self.sink.async_end(
+            self.requests,
+            "request",
+            id,
+            t,
+            vec![("latency_cycles", Arg::U64(wait_cycles))],
+        );
+    }
+
+    /// A dispatched batch occupies the accelerator `[t, done)`.
+    pub fn batch(
+        &mut self,
+        t: u64,
+        done: u64,
+        size: u64,
+        cold: bool,
+        pj: f64,
+    ) {
+        self.sink.span(
+            self.batches,
+            if cold { "batch (cold)" } else { "batch" },
+            t,
+            done,
+            vec![("size", Arg::U64(size)), ("energy_pj", Arg::F64(pj))],
+        );
+        self.sink.instant(
+            self.marks,
+            if cold { "cold-start" } else { "warm-start" },
+            t,
+            vec![],
+        );
+    }
+
+    /// Queue-depth + backlog-bytes counter samples at `t`.
+    pub fn queue_depth(&mut self, t: u64, depth: u64, backlog_bytes: u64) {
+        self.sink.counter(self.queue, "depth", t, depth as f64);
+        self.sink.counter(
+            self.queue,
+            "backlog_bytes",
+            t,
+            backlog_bytes as f64,
+        );
+    }
+
+    /// Admission-control shed, queue-fault drop/duplicate, timeout,
+    /// all-on fallback — instant markers on the events track.
+    pub fn mark(&mut self, name: &'static str, t: u64) {
+        self.sink.instant(self.marks, name, t, vec![]);
+    }
+
+    /// `n` failed wake attempts observed at a cold dispatch.
+    pub fn wake_failures(&mut self, t: u64, n: u64) {
+        self.sink.instant(
+            self.faults,
+            "wake-failure",
+            t,
+            vec![("attempts", Arg::U64(n))],
+        );
+    }
+
+    /// Render a fault-window process as spans on the faults track.
+    pub fn windows(&mut self, name: &'static str, w: &FaultWindows) {
+        for (s, e) in w.iter() {
+            self.sink.span(self.faults, name, s, e, vec![]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::breakdown::EnergyModel;
+    use crate::capsnet::CapsNetConfig;
+    use crate::capstore::arch::{CapStoreArch, Organization};
+    use crate::memsim::cacti::Technology;
+    use crate::timeline::{
+        DmaModel, DmaPolicy, PowerState, TimelinePolicy,
+    };
+
+    fn timeline(dma: DmaModel) -> (EnergyModel, Timeline) {
+        let model = EnergyModel::new(CapsNetConfig::mnist());
+        let ctx = model.context();
+        let arch = CapStoreArch::build_default(
+            Organization::Sep { gated: true },
+            &model.req,
+            &Technology::default(),
+        )
+        .unwrap();
+        let tl = Timeline::build(
+            &ctx,
+            &arch,
+            &model.req,
+            &TimelinePolicy {
+                dma: DmaPolicy { model: dma, ..DmaPolicy::default() },
+                ..TimelinePolicy::default()
+            },
+        );
+        (model, tl)
+    }
+
+    #[test]
+    fn timeline_export_covers_every_segment() {
+        let (_, tl) = timeline(DmaModel::Serial);
+        let mut sink = TraceSink::new();
+        trace_timeline(&mut sink, &tl);
+        let spans = sink
+            .events()
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    crate::telemetry::sink::EventKind::Span { .. }
+                )
+            })
+            .count();
+        let seg_total: usize =
+            tl.domains.iter().map(|d| d.segments.len()).sum();
+        assert_eq!(
+            spans,
+            tl.ops.len()
+                + tl.transfers.len()
+                + tl.stalls.len()
+                + seg_total
+        );
+        // every power state that occurs is named in the trace
+        let names: Vec<&str> = sink
+            .events()
+            .iter()
+            .map(|e| sink.name(e.name))
+            .collect();
+        for st in [PowerState::On, PowerState::Off] {
+            assert!(names.contains(&st.label()), "{:?}", st);
+        }
+    }
+
+    #[test]
+    fn tile_spans_stay_inside_their_op() {
+        let (model, tl) = timeline(DmaModel::Instant);
+        let ctx = model.context();
+        let mut sink = TraceSink::new();
+        trace_timeline(&mut sink, &tl);
+        trace_tiles(&mut sink, &tl, &ctx.schedule, &ArrayConfig::default());
+        // tiles land on the ops track and never cross an op boundary
+        let boundaries: Vec<(u64, u64)> = tl
+            .ops
+            .iter()
+            .map(|o| (o.interval.start, o.interval.end))
+            .collect();
+        let mut tiles = 0;
+        for e in sink.events() {
+            if !sink.name(e.name).starts_with("tile ") {
+                continue;
+            }
+            tiles += 1;
+            let dur = match e.kind {
+                crate::telemetry::sink::EventKind::Span { dur } => dur,
+                _ => panic!("tile must be a span"),
+            };
+            assert!(
+                boundaries
+                    .iter()
+                    .any(|&(s, t)| e.ts >= s && e.ts + dur <= t),
+                "tile at {} escapes every op slot",
+                e.ts
+            );
+        }
+        assert!(tiles > 0);
+    }
+}

@@ -1,0 +1,43 @@
+//! Deterministic telemetry: trace recording, Perfetto export, unified
+//! counters, and sweep profiling.
+//!
+//! The stack already *computes* everything a trace viewer wants — op
+//! intervals, power-state segments, DMA transfers, queue depths, fault
+//! windows — it just never wrote them anywhere.  This module is the
+//! missing observability layer, built on one hard rule: **every
+//! timestamp is a simulated cycle and every byte of output is a pure
+//! function of the inputs.**  No wall clock, no hash order, no thread
+//! scheduling can reach an exported trace; same seed → byte-identical
+//! `trace.json` (pinned by `tests/telemetry.rs` and CI's trace-smoke
+//! job).
+//!
+//! Pieces:
+//!
+//! * [`sink`] — the event model: [`TraceSink`], tracks, spans,
+//!   instants, counters, async request arcs; sorted deterministic
+//!   emission.
+//! * [`perfetto`] — Chrome-trace-event JSON rendering
+//!   (`ui.perfetto.dev` opens it directly).
+//! * [`export`] — walkers from existing results ([`trace_timeline`],
+//!   [`trace_tiles`]) and the traffic hook bundle ([`TrafficTrace`]).
+//! * [`counters`] — [`CounterRegistry`]/[`CounterSnapshot`]: stable
+//!   dotted counter names unifying `Timeline::build_count`,
+//!   `dse::SweepStats`, and the traffic resilience tallies.
+//! * [`profile`] — [`SweepProfile`]: per-phase DSE profiling on a
+//!   deterministic virtual work-unit clock.
+//!
+//! Everything is pay-for-use: instrumented code paths take
+//! `Option<&mut TraceSink>` (or `Option<&mut SweepProfile>`) and the
+//! `None` default does no work at all — zero extra `Timeline` builds,
+//! no allocation, no formatting.
+
+pub mod counters;
+pub mod export;
+pub mod perfetto;
+pub mod profile;
+pub mod sink;
+
+pub use counters::{CounterRegistry, CounterSnapshot};
+pub use export::{trace_timeline, trace_tiles, TrafficTrace};
+pub use profile::{PhaseSpan, SweepProfile};
+pub use sink::{Arg, Event, EventKind, TraceSink, TrackId};

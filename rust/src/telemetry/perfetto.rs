@@ -1,0 +1,223 @@
+//! Chrome-trace-event (Perfetto-loadable) JSON rendering of a
+//! [`TraceSink`].
+//!
+//! The output is the classic `{"traceEvents": [...]}` document that
+//! `ui.perfetto.dev` and `chrome://tracing` both open.  Mapping:
+//!
+//! | sink concept                  | Chrome event                       |
+//! |-------------------------------|------------------------------------|
+//! | track process / thread        | `pid` / `tid` + `M` metadata names |
+//! | [`EventKind::Span`]           | `ph: "X"` complete event           |
+//! | [`EventKind::Instant`]        | `ph: "i"`, thread-scoped           |
+//! | [`EventKind::Counter`]        | `ph: "C"`, series `value`          |
+//! | [`EventKind::AsyncBegin`]/`End` | `ph: "b"` / `"e"` with `id`      |
+//!
+//! **Timestamps are simulated cycles**, not microseconds: the `ts`
+//! axis is the array clock, so one display "µs" reads as one cycle.
+//! Cycle counts stay below 2^53 in every modeled scenario, so the f64
+//! JSON numbers are exact and two identical sinks render to
+//! byte-identical text ([`Json`] objects are `BTreeMap`s — key order
+//! is sorted, never hash-order).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::sink::{Arg, EventKind, TraceSink};
+
+fn arg_json(a: &Arg) -> Json {
+    match a {
+        Arg::U64(v) => Json::Num(*v as f64),
+        Arg::F64(v) => Json::Num(*v),
+        Arg::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+/// Render the sink as a Chrome trace-event JSON document.
+pub fn chrome_trace(sink: &TraceSink) -> Json {
+    // pid per distinct process label (first-appearance order), tid per
+    // track within its process (track-creation order); both 1-based —
+    // pid/tid 0 is reserved in the viewers.
+    let mut pids: Vec<u32> = Vec::new(); // StrId -> first-appearance pid
+    let mut pid_of_process: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut track_ids: Vec<(u64, u64)> = Vec::with_capacity(sink.tracks.len());
+    let mut threads_in: BTreeMap<u64, u64> = BTreeMap::new();
+    for t in &sink.tracks {
+        let pid = *pid_of_process.entry(t.process).or_insert_with(|| {
+            pids.push(t.process);
+            pids.len() as u64
+        });
+        let tid = threads_in.entry(pid).or_insert(0);
+        *tid += 1;
+        track_ids.push((pid, *tid));
+    }
+
+    let mut events: Vec<Json> = Vec::new();
+    // metadata: process names in pid order, then thread names in track
+    // order — the stable preamble every export starts with
+    for (i, &pstr) in pids.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num((i + 1) as f64)),
+            (
+                "args",
+                Json::obj(vec![(
+                    "name",
+                    Json::Str(sink.strings.resolve(pstr).into()),
+                )]),
+            ),
+        ]));
+    }
+    for (ti, t) in sink.tracks.iter().enumerate() {
+        let (pid, tid) = track_ids[ti];
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            (
+                "args",
+                Json::obj(vec![(
+                    "name",
+                    Json::Str(sink.strings.resolve(t.thread).into()),
+                )]),
+            ),
+        ]));
+    }
+
+    for e in sink.sorted_events() {
+        let (pid, tid) = track_ids[e.track.0];
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", Json::Str(sink.name(e.name).into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(e.ts as f64)),
+        ];
+        let mut args: Vec<(&str, Json)> = e
+            .args
+            .iter()
+            .map(|(k, v)| (sink.name(*k), arg_json(v)))
+            .collect();
+        match e.kind {
+            EventKind::Span { dur } => {
+                fields.push(("ph", Json::Str("X".into())));
+                fields.push(("cat", Json::Str("sim".into())));
+                fields.push(("dur", Json::Num(dur as f64)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", Json::Str("i".into())));
+                fields.push(("s", Json::Str("t".into())));
+            }
+            EventKind::Counter { value } => {
+                fields.push(("ph", Json::Str("C".into())));
+                args.push(("value", Json::Num(value)));
+            }
+            EventKind::AsyncBegin { id } => {
+                fields.push(("ph", Json::Str("b".into())));
+                fields.push(("cat", Json::Str("sim".into())));
+                fields.push(("id", Json::Num(id as f64)));
+            }
+            EventKind::AsyncEnd { id } => {
+                fields.push(("ph", Json::Str("e".into())));
+                fields.push(("cat", Json::Str("sim".into())));
+                fields.push(("id", Json::Num(id as f64)));
+            }
+        }
+        if !args.is_empty() {
+            fields.push(("args", Json::obj(args)));
+        }
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        // cycles masquerade as µs; ns display keeps sub-unit zoom sane
+        ("displayTimeUnit", Json::Str("ns".into())),
+    ])
+}
+
+/// [`chrome_trace`] rendered to compact JSON text (plus the trailing
+/// newline the CLI's writers all emit).
+pub fn render(sink: &TraceSink) -> String {
+    let mut s = chrome_trace(sink).render();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_json_shape_and_byte_identity() {
+        let rec = || {
+            let mut s = TraceSink::new();
+            let ops = s.track("timeline", "ops");
+            let pw = s.track("power", "Weight[0]");
+            s.span(ops, "C1", 0, 100, vec![("index", Arg::U64(0))]);
+            s.span(pw, "ON", 0, 64, vec![("energy_pj", Arg::F64(1.5))]);
+            s.instant(ops, "cold-start", 10, vec![]);
+            s.counter(ops, "depth", 5, 2.0);
+            s.async_begin(ops, "req", 1, 3, vec![]);
+            s.async_end(ops, "req", 1, 90, vec![]);
+            s
+        };
+        let text = render(&rec());
+        assert_eq!(text, render(&rec()), "double render not byte-identical");
+        let doc = Json::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process metadata + 2 thread metadata + 6 events
+        assert_eq!(evs.len(), 10);
+        // metadata first, with 1-based pids
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(evs[0].path(&["args", "name"]).unwrap().as_str(),
+            Some("timeline"));
+        // the span carries its phase, duration and args
+        let span = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("C1"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("dur").unwrap().as_u64(), Some(100));
+        assert_eq!(span.path(&["args", "index"]).unwrap().as_u64(), Some(0));
+        // counters put the value in args
+        let c = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .unwrap();
+        assert_eq!(c.path(&["args", "value"]).unwrap().as_f64(), Some(2.0));
+        // async pair shares an id and carries a cat
+        for ph in ["b", "e"] {
+            let ev = evs
+                .iter()
+                .find(|e| e.get("ph").and_then(Json::as_str) == Some(ph))
+                .unwrap();
+            assert_eq!(ev.get("id").unwrap().as_u64(), Some(1));
+            assert!(ev.get("cat").is_some());
+        }
+    }
+
+    #[test]
+    fn distinct_processes_get_distinct_pids() {
+        let mut s = TraceSink::new();
+        let a = s.track("alpha", "t");
+        let b = s.track("beta", "t");
+        s.span(a, "x", 0, 1, vec![]);
+        s.span(b, "y", 0, 1, vec![]);
+        let doc = chrome_trace(&s);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid_of = |name: &str| {
+            evs.iter()
+                .find(|e| {
+                    e.get("name").and_then(Json::as_str) == Some(name)
+                })
+                .unwrap()
+                .get("pid")
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        assert_ne!(pid_of("x"), pid_of("y"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic per-phase profiling for the DSE sweep engine.
+//!
+//! Wall-clock timing inside `dse::sweep` is forbidden (the determinism
+//! lint bans wall-clock reads there, and per the JSON-purity rule wall
+//! times may only ever reach the user through `ctx.progress` in table
+//! mode).  What CAN be reported deterministically is *work*: how many
+//! geometries each admission round examined, how many points each
+//! pricing pass priced, how many skyline inserts ran.  [`SweepProfile`]
+//! records those as spans on a virtual work-unit clock — every unit of
+//! work advances the clock by one — which makes the phase breakdown
+//! identical across machines and thread counts, exportable both as a
+//! table/JSON section (`capstore dse --profile`) and as trace spans.
+
+use crate::util::json::Json;
+
+use super::sink::TraceSink;
+
+/// One recorded phase span on the virtual work-unit clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseSpan {
+    /// Phase label: `geometry solve`, `admission`, `pricing`,
+    /// `skyline`.
+    pub name: &'static str,
+    /// Branch-and-bound round (0 for pre-round phases).
+    pub round: u64,
+    /// Work units consumed (`end - start` on the virtual clock).
+    pub units: u64,
+    /// Virtual-clock start.
+    pub start: u64,
+}
+
+/// The profile recorder handed to `dse::sweep::run_front_profiled`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SweepProfile {
+    clock: u64,
+    pub spans: Vec<PhaseSpan>,
+}
+
+impl SweepProfile {
+    pub fn new() -> SweepProfile {
+        SweepProfile::default()
+    }
+
+    /// Record a phase that consumed `units` work units; the virtual
+    /// clock advances past it.
+    pub fn phase(&mut self, name: &'static str, round: u64, units: u64) {
+        self.spans.push(PhaseSpan {
+            name,
+            round,
+            units,
+            start: self.clock,
+        });
+        self.clock += units;
+    }
+
+    /// Total work units across all phases.
+    pub fn total_units(&self) -> u64 {
+        self.clock
+    }
+
+    /// Units per phase name, aggregated over rounds, in
+    /// first-appearance order.
+    pub fn by_phase(&self) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = Vec::new();
+        for s in &self.spans {
+            match out.iter_mut().find(|(n, _)| *n == s.name) {
+                Some((_, u)) => *u += s.units,
+                None => out.push((s.name, s.units)),
+            }
+        }
+        out
+    }
+
+    /// Emit the spans onto a sink (`dse/phases` track, work-unit
+    /// timestamps).
+    pub fn export(&self, sink: &mut TraceSink) {
+        let track = sink.track("dse", "phases");
+        for s in &self.spans {
+            sink.span(
+                track,
+                s.name,
+                s.start,
+                s.start + s.units,
+                vec![(
+                    "round",
+                    super::sink::Arg::U64(s.round),
+                )],
+            );
+        }
+    }
+
+    /// Aggregated JSON: `{"<phase>": units, ...}` plus the total.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = self
+            .by_phase()
+            .into_iter()
+            .map(|(n, u)| (n, Json::Num(u as f64)))
+            .collect();
+        fields.push(("total_units", Json::Num(self.total_units() as f64)));
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_advance_the_virtual_clock() {
+        let mut p = SweepProfile::new();
+        p.phase("geometry solve", 0, 100);
+        p.phase("admission", 1, 10);
+        p.phase("pricing", 1, 50);
+        p.phase("admission", 2, 7);
+        assert_eq!(p.total_units(), 167);
+        assert_eq!(p.spans[2].start, 110);
+        assert_eq!(
+            p.by_phase(),
+            vec![
+                ("geometry solve", 100),
+                ("admission", 17),
+                ("pricing", 50)
+            ]
+        );
+        let j = p.to_json().render();
+        assert!(j.contains("\"admission\":17"));
+        assert!(j.contains("\"total_units\":167"));
+
+        let mut sink = TraceSink::new();
+        p.export(&mut sink);
+        assert_eq!(sink.len(), 4);
+    }
+}

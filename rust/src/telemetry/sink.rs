@@ -1,0 +1,316 @@
+//! The trace event model: tracks, spans, instants, counters, async
+//! request spans — recorded in memory, emitted sorted.
+//!
+//! Determinism contract (the whole point of this module): timestamps
+//! are **simulated cycles**, never wall-clock; string names are
+//! interned through a [`BTreeMap`] (no hash-order anywhere); events
+//! carry a monotone sequence number so [`TraceSink::sorted_events`]
+//! has a total, stable order `(track, ts, seq)`.  Two runs that make
+//! the same recording calls produce bit-identical sinks, and the
+//! Perfetto exporter ([`super::perfetto`]) renders them to
+//! byte-identical JSON.
+//!
+//! Recording is strictly pay-for-use: every instrumented code path
+//! takes `Option<&mut TraceSink>` and the `None` default is a no-op —
+//! no allocation, no formatting, no timeline builds
+//! (`tests/telemetry.rs` pins `Timeline::build_count` across a
+//! tracing-off run).
+
+use std::collections::BTreeMap;
+
+/// Interned string handle (index into [`Interner`]'s table).
+pub type StrId = u32;
+
+/// Stable string interner: first-come-first-numbered, lookup through a
+/// sorted map so no iteration order ever leaks into the output.
+#[derive(Debug, Clone, Default)]
+pub struct Interner {
+    ids: BTreeMap<String, StrId>,
+    strings: Vec<String>,
+}
+
+impl Interner {
+    pub fn intern(&mut self, s: &str) -> StrId {
+        if let Some(&id) = self.ids.get(s) {
+            return id;
+        }
+        let id = self.strings.len() as StrId;
+        self.ids.insert(s.to_string(), id);
+        self.strings.push(s.to_string());
+        id
+    }
+
+    pub fn resolve(&self, id: StrId) -> &str {
+        &self.strings[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.strings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.strings.is_empty()
+    }
+}
+
+/// Handle to one track: a named thread-like lane inside a named
+/// process-like group (Perfetto's pid/tid hierarchy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TrackId(pub(crate) usize);
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct Track {
+    pub process: StrId,
+    pub thread: StrId,
+}
+
+/// One event argument value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// Event payload kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Complete span `[ts, ts + dur)` (Chrome phase `X`).
+    Span { dur: u64 },
+    /// Instant marker (phase `i`).
+    Instant,
+    /// Counter sample (phase `C`).
+    Counter { value: f64 },
+    /// Async span begin (phase `b`); paired by `id` within the track.
+    AsyncBegin { id: u64 },
+    /// Async span end (phase `e`).
+    AsyncEnd { id: u64 },
+}
+
+/// One recorded event.  `ts` is in simulated cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub track: TrackId,
+    pub name: StrId,
+    pub ts: u64,
+    pub kind: EventKind,
+    /// Insertion sequence — the stable tiebreak of the sort order.
+    pub seq: u64,
+    pub args: Vec<(StrId, Arg)>,
+}
+
+/// The recording sink.  Create tracks, record events, export sorted.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    pub(crate) strings: Interner,
+    pub(crate) tracks: Vec<Track>,
+    events: Vec<Event>,
+    next_seq: u64,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Get-or-create the track `process/thread`.  Tracks are numbered
+    /// in first-appearance order, which is what orders them in the
+    /// exported trace.
+    pub fn track(&mut self, process: &str, thread: &str) -> TrackId {
+        let process = self.strings.intern(process);
+        let thread = self.strings.intern(thread);
+        let want = Track { process, thread };
+        if let Some(i) = self.tracks.iter().position(|t| *t == want) {
+            return TrackId(i);
+        }
+        self.tracks.push(want);
+        TrackId(self.tracks.len() - 1)
+    }
+
+    fn push(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        ts: u64,
+        kind: EventKind,
+        args: Vec<(&str, Arg)>,
+    ) {
+        let name = self.strings.intern(name);
+        let args = args
+            .into_iter()
+            .map(|(k, v)| (self.strings.intern(k), v))
+            .collect();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(Event { track, name, ts, kind, seq, args });
+    }
+
+    /// Complete span `[start, end)`; `end < start` is a caller bug.
+    pub fn span(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        start: u64,
+        end: u64,
+        args: Vec<(&str, Arg)>,
+    ) {
+        debug_assert!(end >= start, "span {name}: end {end} < start {start}");
+        let dur = end.saturating_sub(start);
+        self.push(track, name, start, EventKind::Span { dur }, args);
+    }
+
+    /// Instant marker at `ts`.
+    pub fn instant(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        ts: u64,
+        args: Vec<(&str, Arg)>,
+    ) {
+        self.push(track, name, ts, EventKind::Instant, args);
+    }
+
+    /// Counter sample: `name = value` at `ts`.
+    pub fn counter(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        ts: u64,
+        value: f64,
+    ) {
+        self.push(track, name, ts, EventKind::Counter { value }, vec![]);
+    }
+
+    /// Begin an async span (e.g. one request's arrival→completion arc);
+    /// pair with [`async_end`](Self::async_end) under the same `id`.
+    pub fn async_begin(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        id: u64,
+        ts: u64,
+        args: Vec<(&str, Arg)>,
+    ) {
+        self.push(track, name, ts, EventKind::AsyncBegin { id }, args);
+    }
+
+    /// End an async span.
+    pub fn async_end(
+        &mut self,
+        track: TrackId,
+        name: &str,
+        id: u64,
+        ts: u64,
+        args: Vec<(&str, Arg)>,
+    ) {
+        self.push(track, name, ts, EventKind::AsyncEnd { id }, args);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events in recording order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Events in the canonical emission order: `(track, ts, seq)`.
+    /// `seq` is unique, so the order is total — no unstable-sort
+    /// ambiguity can reach the exported bytes.
+    pub fn sorted_events(&self) -> Vec<&Event> {
+        let mut v: Vec<&Event> = self.events.iter().collect();
+        v.sort_by_key(|e| (e.track, e.ts, e.seq));
+        v
+    }
+
+    /// Resolve an interned string.
+    pub fn name(&self, id: StrId) -> &str {
+        self.strings.resolve(id)
+    }
+
+    /// The `(process, thread)` labels of a track.
+    pub fn track_labels(&self, track: TrackId) -> (&str, &str) {
+        let t = &self.tracks[track.0];
+        (self.strings.resolve(t.process), self.strings.resolve(t.thread))
+    }
+
+    /// Number of tracks created so far.
+    pub fn track_count(&self) -> usize {
+        self.tracks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interner_is_stable_and_dedups() {
+        let mut i = Interner::default();
+        let a = i.intern("alpha");
+        let b = i.intern("beta");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("alpha"), a);
+        assert_eq!(i.resolve(b), "beta");
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn tracks_dedup_by_labels() {
+        let mut s = TraceSink::new();
+        let t1 = s.track("power", "Weight[0]");
+        let t2 = s.track("power", "Weight[1]");
+        let t3 = s.track("power", "Weight[0]");
+        assert_ne!(t1, t2);
+        assert_eq!(t1, t3);
+        assert_eq!(s.track_count(), 2);
+        assert_eq!(s.track_labels(t2), ("power", "Weight[1]"));
+    }
+
+    #[test]
+    fn sorted_events_order_is_total() {
+        let mut s = TraceSink::new();
+        let a = s.track("p", "a");
+        let b = s.track("p", "b");
+        // recorded out of order on purpose
+        s.span(b, "late", 50, 60, vec![]);
+        s.instant(a, "x", 30, vec![]);
+        s.span(a, "y", 10, 20, vec![]);
+        s.counter(a, "depth", 10, 3.0);
+        let order: Vec<(usize, u64, u64)> = s
+            .sorted_events()
+            .iter()
+            .map(|e| (e.track.0, e.ts, e.seq))
+            .collect();
+        let mut expect = order.clone();
+        expect.sort();
+        assert_eq!(order, expect);
+        // same-ts events on one track keep insertion order (seq ties)
+        assert_eq!(order[0], (0, 10, 2));
+        assert_eq!(order[1], (0, 10, 3));
+    }
+
+    #[test]
+    fn identical_recordings_are_identical() {
+        let rec = || {
+            let mut s = TraceSink::new();
+            let t = s.track("traffic", "requests");
+            s.async_begin(t, "req", 7, 100, vec![]);
+            s.async_end(
+                t,
+                "req",
+                7,
+                250,
+                vec![("size", Arg::U64(2))],
+            );
+            s
+        };
+        let (a, b) = (rec(), rec());
+        assert_eq!(a.events(), b.events());
+    }
+}

@@ -888,22 +888,33 @@ impl Timeline {
     /// ([`crate::capstore::eventsim::EventSim::replay`]) reproduces this
     /// exactly — it interprets the same segments.
     pub fn static_pj(&self) -> f64 {
-        let k = self.pj_per_cycle_per_mw();
         let mut pj = 0.0;
         for d in &self.domains {
-            let m = &self.macros[d.mac];
-            let leak = m.leakage_mw / m.total_sectors as f64;
             for seg in &d.segments {
-                let mw = match seg.state {
-                    PowerState::Off => {
-                        leak * self.pg.off_leakage_fraction
-                    }
-                    _ => leak,
-                };
-                pj += mw * seg.interval.cycles() as f64 * k;
+                pj += self.segment_static_pj(d, seg);
             }
         }
         pj
+    }
+
+    /// Leakage energy of ONE power-state segment of `d`, pJ — the exact
+    /// per-segment term [`static_pj`](Self::static_pj) sums (same
+    /// expression, same operation order), exposed so the telemetry
+    /// exporter can attribute energy to each emitted power span
+    /// bit-identically to the IR's own accounting.
+    pub fn segment_static_pj(
+        &self,
+        d: &DomainTimeline,
+        seg: &PowerSegment,
+    ) -> f64 {
+        let k = self.pj_per_cycle_per_mw();
+        let m = &self.macros[d.mac];
+        let leak = m.leakage_mw / m.total_sectors as f64;
+        let mw = match seg.state {
+            PowerState::Off => leak * self.pg.off_leakage_fraction,
+            _ => leak,
+        };
+        mw * seg.interval.cycles() as f64 * k
     }
 
     /// Wakeup energy of every completed OFF→ON transition, pJ.

@@ -51,8 +51,8 @@ pub use rank::{
     SLO_MISS_BUDGET,
 };
 pub use sim::{
-    simulate, simulate_with, DispatchRecord, ResilienceStats,
-    ServiceModel, TrafficReport, FALLBACK_MIN_ATTEMPTS,
+    simulate, simulate_traced, simulate_with, DispatchRecord,
+    ResilienceStats, ServiceModel, TrafficReport, FALLBACK_MIN_ATTEMPTS,
 };
 
 /// One serving workload: the arrival process, its mean rate, the RNG

@@ -54,8 +54,9 @@ use crate::scenario::{DmaModel, DmaPolicy, Evaluation, Evaluator, Scenario};
 use crate::testing::SplitMix64;
 use crate::traffic::arrivals::ArrivalGen;
 use crate::traffic::TrafficProfile;
+use crate::telemetry::{TraceSink, TrafficTrace};
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{LogHistogram, Summary};
 
 /// Wake-failure observations required before the all-on fallback may
 /// trigger — a couple of unlucky first draws must not disable gating
@@ -366,6 +367,11 @@ pub struct TrafficReport {
     // -- latency / SLO -------------------------------------------------
     /// Per-request latency (arrival → batch completion), milliseconds.
     pub latency_ms: Option<Summary>,
+    /// The same latencies as a fixed-bucket log-spaced histogram in the
+    /// cycle domain: no data-dependent bucket edges, so two same-seed
+    /// runs histogram identically and reports can be diffed bucket by
+    /// bucket (empty when nothing was served).
+    pub latency_cycles_hist: LogHistogram,
     pub slo_violations: u64,
     // -- idle-gap power management ------------------------------------
     pub cold_starts: u64,
@@ -580,6 +586,10 @@ impl TrafficReport {
                     ("max", Json::Num(s.max)),
                 ]),
             ));
+            fields.push((
+                "latency_cycles_hist",
+                self.latency_cycles_hist.to_json(),
+            ));
         }
         Json::obj(fields)
     }
@@ -592,6 +602,9 @@ struct QReq {
     arrival: u64,
     /// Timeout retries already consumed by this request lineage.
     retries: u32,
+    /// Unique copy id: the async-span pairing key in an exported trace
+    /// (retry copies get fresh ids — each copy is its own arc).
+    id: u64,
 }
 
 /// Live state of one [`simulate_with`] run: the queue boundary, the
@@ -623,6 +636,10 @@ struct EventLoop<'a> {
     fallback: bool,
     report: TrafficReport,
     latencies_ms: Vec<f64>,
+    /// Trace hooks — `None` (the [`simulate_with`] default) records
+    /// nothing and costs nothing.
+    trace: Option<TrafficTrace<'a>>,
+    next_req_id: u64,
 }
 
 impl EventLoop<'_> {
@@ -630,10 +647,18 @@ impl EventLoop<'_> {
         self.fifo.len() as u64 + self.batcher.pending_len() as u64
     }
 
-    fn note_queue_depth(&mut self) {
+    fn next_id(&mut self) -> u64 {
+        self.next_req_id += 1;
+        self.next_req_id
+    }
+
+    fn note_queue_depth(&mut self, t: u64) {
         let d = self.pending_total();
         if d > self.report.peak_queue_depth {
             self.report.peak_queue_depth = d;
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.queue_depth(t, d, d * self.svc.request_bytes);
         }
     }
 
@@ -648,15 +673,21 @@ impl EventLoop<'_> {
     /// Queue-boundary faults for one raw arrival: how many copies reach
     /// admission (0 = dropped, 2 = duplicated).  Both draws always
     /// happen, so the stream position never depends on the outcomes.
-    fn arrival_copies(&mut self) -> u32 {
+    fn arrival_copies(&mut self, t: u64) -> u32 {
         let dropped = self.queue_rng.chance(self.faults.drop_rate);
         let duplicated =
             self.queue_rng.chance(self.faults.duplicate_rate);
         if dropped {
             self.report.resilience.dropped += 1;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.mark("drop", t);
+            }
             0
         } else if duplicated {
             self.report.resilience.duplicated += 1;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.mark("duplicate", t);
+            }
             2
         } else {
             1
@@ -671,15 +702,21 @@ impl EventLoop<'_> {
         if let Some(cap) = self.res.queue_cap {
             if self.pending_total() >= cap {
                 self.report.resilience.shed += 1;
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.mark("shed", t);
+                }
                 return;
             }
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.arrival(q.id, t);
         }
         if self.busy_until.is_some() {
             self.fifo.push_back(q);
         } else if let Some(batch) = self.batcher.push(q) {
             self.dispatch(batch, t);
         }
-        self.note_queue_depth();
+        self.note_queue_depth(t);
     }
 
     /// The DESCNet break-even rule extended with *observed*
@@ -701,6 +738,9 @@ impl EventLoop<'_> {
         {
             self.fallback = true;
             self.report.resilience.fallback_at_cycle = Some(t);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.mark("fallback", t);
+            }
         }
     }
 
@@ -711,15 +751,24 @@ impl EventLoop<'_> {
         let mut retries: Vec<QReq> = Vec::new();
         if let Some(tc) = self.timeout_cycles {
             let stats = &mut self.report.resilience;
+            let trace = &mut self.trace;
             let budget = self.res.retry_budget;
+            let mut next_id = self.next_req_id;
             batch.retain(|q| {
                 if t.saturating_sub(q.arrival) > tc {
                     stats.timed_out += 1;
+                    if let Some(tr) = trace.as_mut() {
+                        // the expired copy's arc closes here
+                        tr.complete(q.id, t, t.saturating_sub(q.arrival));
+                        tr.mark("timeout", t);
+                    }
                     if q.retries < budget {
                         stats.retried += 1;
+                        next_id += 1;
                         retries.push(QReq {
                             arrival: t,
                             retries: q.retries + 1,
+                            id: next_id,
                         });
                     }
                     false
@@ -727,6 +776,7 @@ impl EventLoop<'_> {
                     true
                 }
             });
+            self.next_req_id = next_id;
         }
         if !batch.is_empty() {
             if let Some(cap) = self.res.degraded_max_batch {
@@ -750,7 +800,7 @@ impl EventLoop<'_> {
         for q in retries {
             self.offer(q, t);
         }
-        self.note_queue_depth();
+        self.note_queue_depth(t);
     }
 
     /// Price and launch a non-empty batch at `t`; returns the
@@ -786,6 +836,9 @@ impl EventLoop<'_> {
                 self.report.resilience.wake_retry_pj += f as f64
                     * self.svc.cold_extra_pj
                     + self.svc.idle_on_mw * wake_delay as f64 * k;
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.wake_failures(t, u64::from(f));
+                }
             }
             self.maybe_fall_back(t);
         } else {
@@ -818,13 +871,21 @@ impl EventLoop<'_> {
         self.report.busy_cycles +=
             done.min(self.horizon).saturating_sub(t.min(self.horizon));
         self.report.batch_pj += be.total_pj();
+        if let Some(tr) = self.trace.as_mut() {
+            tr.batch(t, done, n as u64, cold, be.total_pj());
+        }
         for q in batch {
+            let lat_cycles = done - q.arrival;
             let lat_ms =
-                (done - q.arrival) as f64 / self.svc.clock_hz * 1.0e3;
+                lat_cycles as f64 / self.svc.clock_hz * 1.0e3;
             if lat_ms > self.profile.slo_ms {
                 self.report.slo_violations += 1;
             }
             self.latencies_ms.push(lat_ms);
+            self.report.latency_cycles_hist.record(lat_cycles);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.complete(q.id, done, lat_cycles);
+            }
         }
         self.report.dispatches.push(DispatchRecord {
             at_cycle: t,
@@ -846,8 +907,12 @@ impl EventLoop<'_> {
                 // while the accelerator is busy, copies wait in the queue
                 if let Some(a) = self.next_arrival {
                     if a < done {
-                        for _ in 0..self.arrival_copies() {
-                            self.offer(QReq { arrival: a, retries: 0 }, a);
+                        for _ in 0..self.arrival_copies(a) {
+                            let id = self.next_id();
+                            self.offer(
+                                QReq { arrival: a, retries: 0, id },
+                                a,
+                            );
                         }
                         self.next_arrival = self.pull();
                         continue;
@@ -891,8 +956,12 @@ impl EventLoop<'_> {
                 }
                 (Some(a), _) => {
                     self.clock.advance_to(a);
-                    for _ in 0..self.arrival_copies() {
-                        self.offer(QReq { arrival: a, retries: 0 }, a);
+                    for _ in 0..self.arrival_copies(a) {
+                        let id = self.next_id();
+                        self.offer(
+                            QReq { arrival: a, retries: 0, id },
+                            a,
+                        );
                     }
                     self.next_arrival = self.pull();
                 }
@@ -953,6 +1022,24 @@ pub fn simulate_with(
     faults: &FaultPlan,
     resilience: &ResiliencePolicy,
 ) -> Result<TrafficReport> {
+    simulate_traced(svc, profile, policy, faults, resilience, None)
+}
+
+/// [`simulate_with`] with optional trace recording.  `trace: None` IS
+/// `simulate_with` — same code path, no recording, nothing allocated.
+/// With a sink, the run records request arcs (arrival→completion,
+/// latency on the end event), batch spans with energy, queue-depth and
+/// backlog-bytes counters, cold/warm-start + fault instants, and the
+/// fault windows as spans — while the returned report stays
+/// bit-identical to the untraced run (`tests/telemetry.rs` pins it).
+pub fn simulate_traced(
+    svc: &ServiceModel,
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    faults: &FaultPlan,
+    resilience: &ResiliencePolicy,
+    trace: Option<&mut TraceSink>,
+) -> Result<TrafficReport> {
     faults.validate()?;
     resilience.validate()?;
     let clock = VirtualClock::new(svc.clock_hz);
@@ -995,6 +1082,15 @@ pub fn simulate_with(
         !faults.is_identity() || resilience.is_active();
     let break_even_eff = svc.break_even_cycles_under(faults);
 
+    // fault windows are known up front — render them before the run so
+    // the spans sit under the loop's events in recording order
+    let trace = trace.map(|sink| {
+        let mut tr = TrafficTrace::new(sink);
+        tr.windows("dma degraded", &dma_windows);
+        tr.windows("throttled", &slow_windows);
+        tr
+    });
+
     let report = TrafficReport {
         scenario_label: svc.scenario.label(),
         profile: profile.clone(),
@@ -1004,6 +1100,7 @@ pub fn simulate_with(
         queued: 0,
         batches: 0,
         latency_ms: None,
+        latency_cycles_hist: LogHistogram::new(),
         slo_violations: 0,
         cold_starts: 0,
         warm_starts: 0,
@@ -1049,6 +1146,8 @@ pub fn simulate_with(
         fallback: false,
         report,
         latencies_ms: Vec::new(),
+        trace,
+        next_req_id: 0,
     };
     Ok(el.run())
 }
@@ -1152,6 +1251,8 @@ mod tests {
         );
         assert_eq!(r.batches, r.dispatches.len() as u64);
         assert_eq!(r.cold_starts + r.warm_starts, r.batches);
+        // the cycle-domain histogram covers exactly the served requests
+        assert_eq!(r.latency_cycles_hist.total(), r.served);
         assert!(r.mean_occupancy() >= 1.0);
         assert!(r.total_pj() > 0.0);
         assert!(r.peak_queue_depth > 0, "3 kHz load never queued");
@@ -1186,6 +1287,47 @@ mod tests {
             injected.to_json(svc.clock_hz).render()
         );
         assert_eq!(plain.total_pj().to_bits(), injected.total_pj().to_bits());
+    }
+
+    #[test]
+    fn traced_run_is_bit_transparent() {
+        let svc = model(&Scenario::default());
+        let p = profile(3000.0);
+        let plain = simulate(&svc, &p, &default_policy(4)).unwrap();
+        let mut sink = TraceSink::new();
+        let traced = simulate_traced(
+            &svc,
+            &p,
+            &default_policy(4),
+            &FaultPlan::none(),
+            &ResiliencePolicy::none(),
+            Some(&mut sink),
+        )
+        .unwrap();
+        // recording must not perturb the simulation in any bit
+        assert_eq!(
+            plain.to_json(svc.clock_hz).render(),
+            traced.to_json(svc.clock_hz).render()
+        );
+        assert_eq!(plain.total_pj().to_bits(), traced.total_pj().to_bits());
+        assert!(!sink.is_empty());
+        // every served request closed its arc; every batch got a span
+        use crate::telemetry::EventKind;
+        let ends = sink
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::AsyncEnd { .. }))
+            .count() as u64;
+        assert_eq!(ends, traced.served);
+        let batch_spans = sink
+            .events()
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, EventKind::Span { .. })
+                    && sink.name(e.name).starts_with("batch")
+            })
+            .count() as u64;
+        assert_eq!(batch_spans, traced.batches);
     }
 
     #[test]

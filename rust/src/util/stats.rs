@@ -49,6 +49,151 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// Deterministic fixed-bucket histogram over a `u64` domain (cycles,
+/// microseconds — any integer unit).
+///
+/// Buckets are log2-spaced and *universal*: value `v` lands in bucket
+/// `floor(log2(max(v, 1)))`, so 64 buckets cover the whole `u64` range
+/// with no data-dependent edges, no reservoir sampling, and no
+/// allocation on the record path.  Two runs that observe the same
+/// values always produce the bit-identical histogram — which is what
+/// lets `TrafficReport` carry one next to its nearest-rank percentiles
+/// (a unimodal p50/p95 triple hides the bimodal cold-start tail this
+/// exposes) and what lets the coordinator's `LatencyRecorder` keep an
+/// exact distribution while downsampling its raw sample vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; 64],
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: [0; 64], total: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Bucket index of a value: `floor(log2(v))`, with 0 sharing
+    /// bucket 0 with 1.
+    pub fn bucket_index(v: u64) -> usize {
+        (63 - v.max(1).leading_zeros()) as usize
+    }
+
+    /// Inclusive lower bound of bucket `i` (bucket 0 also holds 0).
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << i
+        }
+    }
+
+    /// Exclusive upper bound of bucket `i`.
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i >= 63 {
+            u64::MAX
+        } else {
+            1u64 << (i + 1)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Fold another histogram into this one (same universal buckets).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Non-empty buckets, ascending: `(lo, hi, count)` with `lo`
+    /// inclusive and `hi` exclusive.
+    pub fn buckets(
+        &self,
+    ) -> impl Iterator<Item = (u64, u64, u64)> + '_ {
+        self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(
+            |(i, &c)| (Self::bucket_lo(i), Self::bucket_hi(i), c),
+        )
+    }
+
+    /// Nearest-rank quantile resolved at bucket granularity: the
+    /// exclusive upper bound of the bucket holding the rank-`pct`
+    /// sample (an upper bound on the true nearest-rank value).
+    pub fn quantile_upper(&self, pct: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank =
+            ((pct / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::bucket_hi(i));
+            }
+        }
+        Some(u64::MAX)
+    }
+
+    /// Sparse JSON rendering: an array of `{lo, hi, count}` objects,
+    /// ascending, non-empty buckets only.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.buckets()
+                .map(|(lo, hi, c)| {
+                    Json::obj(vec![
+                        ("lo", Json::Num(lo as f64)),
+                        ("hi", Json::Num(hi as f64)),
+                        ("count", Json::Num(c as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// One-line human rendering, e.g. `[4Ki,8Ki):37 [8Ki,16Ki):3`.
+    pub fn render_line(&self) -> String {
+        fn mag(v: u64) -> String {
+            const KI: u64 = 1 << 10;
+            const MI: u64 = 1 << 20;
+            const GI: u64 = 1 << 30;
+            if v == u64::MAX {
+                "max".to_string()
+            } else if v >= GI && v % GI == 0 {
+                format!("{}Gi", v / GI)
+            } else if v >= MI && v % MI == 0 {
+                format!("{}Mi", v / MI)
+            } else if v >= KI && v % KI == 0 {
+                format!("{}Ki", v / KI)
+            } else {
+                format!("{v}")
+            }
+        }
+        self.buckets()
+            .map(|(lo, hi, c)| format!("[{},{}):{c}", mag(lo), mag(hi)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +257,61 @@ mod tests {
             }
             assert!(s.median <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         });
+    }
+
+    #[test]
+    fn log_histogram_buckets_are_universal() {
+        assert_eq!(LogHistogram::bucket_index(0), 0);
+        assert_eq!(LogHistogram::bucket_index(1), 0);
+        assert_eq!(LogHistogram::bucket_index(2), 1);
+        assert_eq!(LogHistogram::bucket_index(3), 1);
+        assert_eq!(LogHistogram::bucket_index(4), 2);
+        assert_eq!(LogHistogram::bucket_index(u64::MAX), 63);
+        // every value lands in the bucket whose [lo, hi) contains it
+        for v in [0u64, 1, 2, 7, 1023, 1024, 1 << 40, u64::MAX - 1] {
+            let i = LogHistogram::bucket_index(v);
+            assert!(v >= LogHistogram::bucket_lo(i), "{v}");
+            assert!(v < LogHistogram::bucket_hi(i) || i == 63, "{v}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_records_and_merges() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_upper(50.0), None);
+        for v in [1u64, 1, 3, 5000, 6000, 7000] {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 6);
+        let buckets: Vec<_> = h.buckets().collect();
+        // bucket 0 [0,2): two ones; bucket 1 [2,4): the 3;
+        // bucket 12 [4096,8192): the three ~5-7k values
+        assert_eq!(
+            buckets,
+            vec![(0, 2, 2), (2, 4, 1), (4096, 8192, 3)]
+        );
+        // p50 rank 3 lands in bucket 1 → upper bound 4
+        assert_eq!(h.quantile_upper(50.0), Some(4));
+        assert_eq!(h.quantile_upper(100.0), Some(8192));
+
+        let mut other = LogHistogram::new();
+        other.record(3);
+        other.record(1 << 20);
+        h.merge(&other);
+        assert_eq!(h.total(), 8);
+        assert_eq!(
+            h.buckets().find(|&(lo, _, _)| lo == 2),
+            Some((2, 4, 2))
+        );
+
+        // deterministic renderings
+        assert_eq!(
+            other.render_line(),
+            "[2,4):1 [1Mi,2Mi):1"
+        );
+        let j = h.to_json().render();
+        assert!(j.starts_with("[{"));
+        assert!(j.contains("\"count\":3"));
     }
 }

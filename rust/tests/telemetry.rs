@@ -1,0 +1,347 @@
+//! End-to-end invariants of the deterministic telemetry layer:
+//!
+//! 1. **canonical order** — exported events are totally ordered and
+//!    spans never overlap within a track (the op track instead nests
+//!    properly: tiles sit strictly inside their op span);
+//! 2. **bit-for-bit reconciliation** — every power-state span matches
+//!    its `Timeline` segment in extent and energy, and the in-order
+//!    sum of span energies reproduces `Timeline::static_pj()` exactly;
+//! 3. **byte determinism** — the same scenario/seed renders the same
+//!    `trace.json` bytes, twice, for both the timeline and the traced
+//!    serving run (plus a blessable golden, CI's trace-smoke anchor);
+//! 4. **counter conservation** — a `CounterSnapshot` of a faulty run
+//!    satisfies the traffic conservation law;
+//! 5. **zero overhead** — tracing (on or off) builds zero extra
+//!    `Timeline` IRs in the serving event loop.
+
+use std::time::Duration;
+
+use capstore::accel::systolic::ArrayConfig;
+use capstore::analysis::breakdown::EnergyModel;
+use capstore::coordinator::BatchPolicy;
+use capstore::faults::{FaultPlan, ResiliencePolicy};
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::telemetry::{
+    perfetto, trace_timeline, trace_tiles, Arg, CounterRegistry,
+    EventKind, TraceSink,
+};
+use capstore::timeline::Timeline;
+use capstore::traffic::{
+    simulate, simulate_traced, ArrivalPattern, ServiceModel,
+    TrafficProfile,
+};
+
+fn policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy { max_batch, max_wait: Duration::from_millis(2) }
+}
+
+fn profile(seed: u64) -> TrafficProfile {
+    TrafficProfile {
+        pattern: ArrivalPattern::Bursty,
+        rate_per_sec: 4000.0,
+        seed,
+        duration_secs: 0.05,
+        slo_ms: 5.0,
+    }
+}
+
+fn faulty_plan() -> FaultPlan {
+    FaultPlan {
+        seed: 99,
+        wake_fail_rate: 0.3,
+        dma_degrade_rate: 0.3,
+        dma_degrade_dwell_secs: 0.005,
+        slowdown_rate: 0.3,
+        slowdown_dwell_secs: 0.005,
+        drop_rate: 0.05,
+        duplicate_rate: 0.05,
+        ..FaultPlan::none()
+    }
+}
+
+fn resilience() -> ResiliencePolicy {
+    ResiliencePolicy {
+        queue_cap: Some(64),
+        timeout_ms: Some(5.0),
+        retry_budget: 1,
+        ..ResiliencePolicy::none()
+    }
+}
+
+/// A full timeline trace (ops + tiles + DMA + power) of the default
+/// scenario, plus the timeline it was exported from.
+fn timeline_trace() -> (TraceSink, capstore::scenario::Evaluation) {
+    let sc = Scenario::default();
+    let e = Evaluator::new().evaluate(&sc).unwrap();
+    let mut sink = TraceSink::new();
+    trace_timeline(&mut sink, e.timeline());
+    let model = EnergyModel::new(sc.network.clone());
+    let ctx = model.context();
+    trace_tiles(
+        &mut sink,
+        e.timeline(),
+        &ctx.schedule,
+        &ArrayConfig::default(),
+    );
+    (sink, e)
+}
+
+#[test]
+fn exported_events_are_ordered_and_tracks_never_overlap() {
+    let (sink, _e) = timeline_trace();
+    let sorted = sink.sorted_events();
+    // total order: (track, ts, seq) strictly increases
+    for w in sorted.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        assert!(
+            (a.track, a.ts, a.seq) < (b.track, b.ts, b.seq),
+            "emission order is not total"
+        );
+    }
+    // spans on every track either stay disjoint or nest properly
+    // (tiles inside their op on the ops track); a stack catches both:
+    // each span must start after — or fit entirely inside — the
+    // innermost open span
+    let mut by_track: std::collections::BTreeMap<
+        usize,
+        Vec<(u64, u64)>,
+    > = std::collections::BTreeMap::new();
+    for e in &sorted {
+        if let EventKind::Span { dur } = e.kind {
+            by_track
+                .entry(e.track.0)
+                .or_default()
+                .push((e.ts, e.ts + dur));
+        }
+    }
+    for (track, spans) in by_track {
+        let mut stack: Vec<(u64, u64)> = Vec::new();
+        for (s, t) in spans {
+            while let Some(&(_, open_end)) = stack.last() {
+                if open_end <= s {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(open_start, open_end)) = stack.last() {
+                assert!(
+                    s >= open_start && t <= open_end,
+                    "track {track}: span [{s},{t}) straddles \
+                     [{open_start},{open_end})"
+                );
+            }
+            stack.push((s, t));
+        }
+    }
+}
+
+#[test]
+fn power_spans_reconcile_bit_for_bit_with_the_timeline() {
+    let (sink, e) = timeline_trace();
+    let tl = e.timeline();
+    // power-track span events in recording order mirror the IR's
+    // domain/segment nesting order exactly
+    let power: Vec<&capstore::telemetry::Event> = sink
+        .events()
+        .iter()
+        .filter(|ev| sink.track_labels(ev.track).0 == "power")
+        .collect();
+    let seg_total: usize =
+        tl.domains.iter().map(|d| d.segments.len()).sum();
+    assert_eq!(power.len(), seg_total, "a segment is missing its span");
+
+    let mut i = 0;
+    let mut span_sum = 0.0f64;
+    let mut seg_sum = 0.0f64;
+    for d in &tl.domains {
+        for seg in &d.segments {
+            let ev = power[i];
+            i += 1;
+            assert_eq!(ev.ts, seg.interval.start, "span start drifted");
+            match ev.kind {
+                EventKind::Span { dur } => {
+                    assert_eq!(
+                        dur,
+                        seg.interval.cycles(),
+                        "span extent drifted"
+                    );
+                }
+                _ => panic!("power event must be a span"),
+            }
+            assert_eq!(
+                sink.name(ev.name),
+                seg.state.label(),
+                "span power-state name drifted"
+            );
+            let pj = match ev.args.first() {
+                Some((_, Arg::F64(v))) => *v,
+                other => panic!("energy_pj arg missing: {other:?}"),
+            };
+            let want = tl.segment_static_pj(d, seg);
+            assert_eq!(
+                pj.to_bits(),
+                want.to_bits(),
+                "span energy attribution drifted"
+            );
+            span_sum += pj;
+            seg_sum += want;
+        }
+    }
+    // the in-order sum over spans IS the IR's static energy, exactly
+    assert_eq!(span_sum.to_bits(), seg_sum.to_bits());
+    assert_eq!(span_sum.to_bits(), tl.static_pj().to_bits());
+}
+
+#[test]
+fn timeline_trace_renders_byte_identical_json() {
+    let (a, _) = timeline_trace();
+    let (b, _) = timeline_trace();
+    let ra = perfetto::render(&a);
+    let rb = perfetto::render(&b);
+    assert!(!ra.is_empty());
+    assert_eq!(ra, rb, "timeline trace is not byte-deterministic");
+
+    // blessable golden — the in-process anchor of CI's trace-smoke
+    // job (tests/golden/README.md explains the bootstrap)
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/trace_timeline.json");
+    let bless = std::env::var_os("CAPSTORE_BLESS").is_some();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &ra).unwrap();
+        eprintln!("blessed {} — commit it to pin", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        ra,
+        want,
+        "trace drifted from {}; re-bless with CAPSTORE_BLESS=1 if \
+         intentional",
+        path.display()
+    );
+}
+
+#[test]
+fn traced_serving_run_renders_byte_identical_json() {
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let faults = faulty_plan();
+    let svc =
+        ServiceModel::with_faults(&ev, &sc, 4, Some(&faults)).unwrap();
+    let run = || {
+        let mut sink = TraceSink::new();
+        let report = simulate_traced(
+            &svc,
+            &profile(3),
+            &policy(4),
+            &faults,
+            &resilience(),
+            Some(&mut sink),
+        )
+        .unwrap();
+        (perfetto::render(&sink), report)
+    };
+    let (ra, report) = run();
+    let (rb, _) = run();
+    assert_eq!(ra, rb, "traced serving run is not byte-deterministic");
+    assert!(report.arrivals > 0);
+    // a different seed must not render the same bytes (the trace
+    // really is a function of the inputs, not a constant)
+    let mut sink = TraceSink::new();
+    simulate_traced(
+        &svc,
+        &profile(4),
+        &policy(4),
+        &faults,
+        &resilience(),
+        Some(&mut sink),
+    )
+    .unwrap();
+    assert_ne!(ra, perfetto::render(&sink));
+}
+
+#[test]
+fn counter_snapshot_satisfies_the_conservation_law() {
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let faults = faulty_plan();
+    let svc =
+        ServiceModel::with_faults(&ev, &sc, 4, Some(&faults)).unwrap();
+    let report = simulate_traced(
+        &svc,
+        &profile(3),
+        &policy(4),
+        &faults,
+        &resilience(),
+        None,
+    )
+    .unwrap();
+    let s = CounterRegistry::from_traffic_report(&report).snapshot();
+    // something actually went wrong in this run, so the law is not
+    // trivially 0 == 0
+    assert!(s.get("faults.wake_failures") > 0);
+    assert_eq!(
+        s.get("faults.wake_retries"),
+        s.get("faults.wake_failures")
+    );
+    assert_eq!(
+        s.get("traffic.arrivals")
+            + s.get("traffic.duplicated")
+            + s.get("traffic.retried"),
+        s.get("traffic.served")
+            + s.get("traffic.queued")
+            + s.get("traffic.shed")
+            + s.get("traffic.dropped")
+            + s.get("traffic.timed_out"),
+        "counter snapshot breaks the conservation law"
+    );
+    // and the snapshot agrees with the report it came from
+    assert_eq!(s.get("traffic.arrivals"), report.arrivals);
+    assert_eq!(s.get("traffic.served"), report.served);
+    assert_eq!(s.get("traffic.shed"), report.resilience.shed);
+}
+
+#[test]
+fn tracing_builds_zero_extra_timelines() {
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let svc = ServiceModel::new(&ev, &sc, 4).unwrap();
+    let p = profile(7);
+
+    // tracing OFF: the serving event loop builds no IRs (the bench
+    // contract), and the traced entry point with `None` is identical
+    let before = Timeline::build_count();
+    let plain = simulate(&svc, &p, &policy(4)).unwrap();
+    assert_eq!(
+        Timeline::build_count(),
+        before,
+        "untraced event loop built a Timeline"
+    );
+
+    // tracing ON: recording reads existing results only — still zero
+    let before = Timeline::build_count();
+    let mut sink = TraceSink::new();
+    let traced = simulate_traced(
+        &svc,
+        &p,
+        &policy(4),
+        &FaultPlan::none(),
+        &ResiliencePolicy::none(),
+        Some(&mut sink),
+    )
+    .unwrap();
+    assert_eq!(
+        Timeline::build_count(),
+        before,
+        "tracing built an extra Timeline"
+    );
+    assert!(!sink.is_empty());
+    // and the traced run's report is the plain run's report, exactly
+    assert_eq!(
+        plain.to_json(svc.clock_hz).render(),
+        traced.to_json(svc.clock_hz).render(),
+        "tracing perturbed the report"
+    );
+}

@@ -34,6 +34,7 @@ scope=(
   rust/src/dse
   rust/src/scenario
   rust/src/analysis
+  rust/src/telemetry
 )
 
 patterns=(
