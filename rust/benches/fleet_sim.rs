@@ -1,0 +1,141 @@
+//! Bench: the fleet-scale serving simulator — throughput of the
+//! sharded event loop, plus the contracts CI enforces in `--check`
+//! mode:
+//!
+//! * **determinism** — two runs of the same seeded profile produce
+//!   byte-identical `FleetReport` JSON for every dispatch policy;
+//! * **hot path** — the fleet loop builds zero `Timeline` IRs: every
+//!   per-batch cost comes from the per-instance `ServiceModel` tables
+//!   precomputed before the loop starts;
+//! * **conservation** — `arrivals == served + queued + shed` at the
+//!   horizon, saturated or not.
+//!
+//! Reports JSON on the last line:
+//!
+//! ```json
+//! {"bench":"fleet_sim","sim_ms":...,"hot_path_timeline_builds":0,...}
+//! ```
+
+use std::time::Duration;
+
+use capstore::bench;
+use capstore::coordinator::BatchPolicy;
+use capstore::fleet::{simulate_fleet, DispatchPolicy, FleetSpec};
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::timeline::Timeline;
+use capstore::traffic::{ArrivalPattern, ServiceModel, TrafficProfile};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+
+    let ev = Evaluator::new();
+    let sc = Scenario::default();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
+    let svc = ServiceModel::new(&ev, &sc, policy.max_batch).unwrap();
+    let models = vec![svc; 4];
+
+    let profile = TrafficProfile {
+        pattern: ArrivalPattern::Poisson,
+        rate_per_sec: 3000.0,
+        seed: 7,
+        duration_secs: 0.25,
+        slo_ms: 50.0,
+    };
+    let spec = FleetSpec {
+        instances: 4,
+        policy: DispatchPolicy::Packing,
+        elastic: true,
+        scale_up_depth: 4,
+        min_active: 1,
+    };
+
+    // ---- contracts ---------------------------------------------------
+    let before = Timeline::build_count();
+    let r1 = simulate_fleet(&models, &profile, &policy, &spec).unwrap();
+    let hot_builds = Timeline::build_count() - before;
+    let r2 = simulate_fleet(&models, &profile, &policy, &spec).unwrap();
+    let j1 = r1.to_json().render();
+    let deterministic = j1 == r2.to_json().render();
+    let mut all_policies_deterministic = true;
+    for dispatch in DispatchPolicy::all() {
+        let s = FleetSpec { policy: dispatch, ..spec.clone() };
+        let a = simulate_fleet(&models, &profile, &policy, &s)
+            .unwrap()
+            .to_json()
+            .render();
+        let b = simulate_fleet(&models, &profile, &policy, &s)
+            .unwrap()
+            .to_json()
+            .render();
+        all_policies_deterministic &= a == b;
+    }
+    let conserves = r1.conserves();
+
+    // ---- sharded event-loop throughput ------------------------------
+    let t_sim = bench::bench(
+        "fleet: simulate (poisson 3000/s x 0.25s, 4 inst, packing)",
+        2,
+        9,
+        || {
+            std::hint::black_box(
+                simulate_fleet(&models, &profile, &policy, &spec)
+                    .unwrap(),
+            );
+        },
+    );
+
+    println!(
+        "\n[fleet_sim] sim {:.3} ms for {} arrivals ({} served, {} \
+         batches, {} gated-off instances, peak {} active); \
+         {hot_builds} timeline builds in the fleet loop; \
+         deterministic={deterministic}",
+        t_sim.median,
+        r1.arrivals,
+        r1.served,
+        r1.batches,
+        r1.gated_off_instances,
+        r1.peak_active,
+    );
+
+    // machine-readable result (last line)
+    println!(
+        "{{\"bench\":\"fleet_sim\",\"sim_ms\":{:.4},\"arrivals\":{},\
+         \"served\":{},\"batches\":{},\"gated_off_instances\":{},\
+         \"scale_ups\":{},\"hot_path_timeline_builds\":{hot_builds},\
+         \"deterministic\":{deterministic}}}",
+        t_sim.median,
+        r1.arrivals,
+        r1.served,
+        r1.batches,
+        r1.gated_off_instances,
+        r1.scale_ups,
+    );
+
+    if check {
+        assert_eq!(
+            hot_builds, 0,
+            "check failed: the fleet loop built {hot_builds} Timelines \
+             — per-dispatch costs must come from the ServiceModel \
+             tables"
+        );
+        assert!(
+            deterministic && all_policies_deterministic,
+            "check failed: two runs of seed {} diverged",
+            profile.seed
+        );
+        assert!(
+            conserves,
+            "check failed: fleet conservation broke: {} != {} + {} + {}",
+            r1.arrivals, r1.served, r1.queued, r1.shed
+        );
+        println!(
+            "fleet_sim check OK (deterministic across every policy, \
+             0 IR builds across {} dispatched batches)",
+            r1.batches
+        );
+    }
+}

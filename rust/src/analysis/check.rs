@@ -204,9 +204,11 @@ pub fn check_scenario(
 
         // CAP004 — offered load beyond the pipelined service capacity:
         // the queue grows without bound (deliberate overload studies
-        // are legitimate, hence a warning).
+        // are legitimate, hence a warning).  When a fleet is declared
+        // the single-instance capacity is not the binding limit —
+        // CAP012 below compares against the whole fleet.
         let capacity = timing.capacity_per_sec();
-        if t.rate_per_sec > capacity {
+        if sc.fleet.is_none() && t.rate_per_sec > capacity {
             diags.push(Diagnostic::new(
                 "CAP004",
                 "[traffic] rate_per_sec",
@@ -253,6 +255,55 @@ pub fn check_scenario(
                     t.rate_per_sec * t.duration_secs,
                 ),
             ));
+        }
+    }
+
+    // Fleet rules: the declared workload against the *fleet-wide*
+    // static bounds.
+    if let (Some(t), Some(f)) = (&sc.traffic, &sc.fleet) {
+        // CAP012 — offered load beyond every instance serving flat
+        // out: no dispatch policy can route its way out of that, so
+        // unlike the single-instance CAP004 this is an error.
+        let fleet_capacity =
+            f.instances as f64 * timing.capacity_per_sec();
+        if t.rate_per_sec > fleet_capacity {
+            diags.push(Diagnostic::new(
+                "CAP012",
+                "[fleet] instances",
+                format!(
+                    "arrival rate {:.0}/s exceeds the fleet's static \
+                     service capacity {:.0}/s ({} x {:.0}/s) — no \
+                     dispatch policy can keep up; add instances or \
+                     shed load",
+                    t.rate_per_sec,
+                    fleet_capacity,
+                    f.instances,
+                    timing.capacity_per_sec(),
+                ),
+            ));
+        }
+
+        // CAP013 — elastic scaling whose cold premium cannot amortize:
+        // waking a parked instance costs `cold_extra`; if the whole
+        // simulated window is shorter than the fleet-wide break-even
+        // budget, every scale-up is a net energy loss.
+        if let (true, Some(be)) = (f.elastic, gb.break_even_cycles) {
+            let horizon = t.duration_secs * timing.clock_hz;
+            let budget = (be as f64) * f.instances as f64;
+            if horizon < budget {
+                diags.push(Diagnostic::new(
+                    "CAP013",
+                    "[fleet] elastic",
+                    format!(
+                        "simulated window ({:.0} cycles) is shorter \
+                         than the fleet-wide break-even budget \
+                         ({} instances x {} cycles = {:.0}): elastic \
+                         wake-ups cannot amortize their cold premium \
+                         — lengthen the window or pin the fleet size",
+                        horizon, f.instances, be, budget,
+                    ),
+                ));
+            }
         }
     }
 

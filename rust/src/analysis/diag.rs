@@ -187,6 +187,21 @@ pub const CODES: &[CodeSpec] = &[
         summary: "sweep space has an empty axis — zero design points \
                   to explore",
     },
+    CodeSpec {
+        code: "CAP012",
+        severity: Severity::Error,
+        scope: Scope::Scenario,
+        summary: "offered load exceeds the whole fleet's static \
+                  service capacity — no dispatch policy can keep up",
+    },
+    CodeSpec {
+        code: "CAP013",
+        severity: Severity::Warning,
+        scope: Scope::Scenario,
+        summary: "elastic scaling is net-negative: the fleet-wide \
+                  cold premium cannot amortize inside the simulated \
+                  window",
+    },
 ];
 
 /// Look up a code's registry row.

@@ -1,0 +1,516 @@
+//! `capstore fleet [<net> [<org>]]` — deterministic fleet-scale
+//! serving: shard one seeded request stream across N accelerator
+//! instances under a dispatch policy, or (`--rank`) run the
+//! fleet-level DSE that picks the design mix + policy off a Pareto
+//! front.
+
+use crate::dse::Explorer;
+use crate::fleet::{
+    simulate_fleet, DispatchPolicy, FleetSpec, InstanceReport,
+};
+use crate::report::Table;
+use crate::scenario::{Evaluator, Scenario};
+use crate::telemetry::CounterRegistry;
+use crate::timeline::Timeline;
+use crate::traffic::{rank_fleet, ServiceModel};
+use crate::util::json::Json;
+use crate::util::units::fmt_energy_uj;
+use crate::{Error, Result};
+
+use super::context::CommandContext;
+use super::output::Output;
+use super::spec::{self, FlagSpec};
+use super::Command;
+
+pub struct FleetCmd;
+
+impl Command for FleetCmd {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn about(&self) -> &'static str {
+        "fleet-scale serving across N instances, --rank fleet DSE"
+    }
+
+    fn groups(&self) -> &'static [&'static [FlagSpec]] {
+        &[
+            spec::SCENARIO,
+            spec::MEMORY,
+            spec::TIME_UNBATCHED,
+            spec::TRAFFIC_ONE,
+            spec::FLEET,
+            spec::PROFILE_ONLY,
+            spec::PREFLIGHT,
+        ]
+    }
+
+    fn max_positionals(&self) -> usize {
+        2
+    }
+
+    fn positional_usage(&self) -> &'static str {
+        "[<net> [<org>]]"
+    }
+
+    fn long_help(&self) -> &'static str {
+        "Shards the seeded serving simulation across --instances\n\
+         accelerator instances: requests route per --policy\n\
+         (round-robin spreads, jsq joins the shortest queue, packing\n\
+         bin-packs onto the fewest warm instances so the unloaded tail\n\
+         sleeps past its break-even point and whole accelerators gate\n\
+         off).  --elastic starts at --min-active instances and grows/\n\
+         shrinks the active set on queue depth; waking a parked\n\
+         instance pays the cold premium.  Same seed in, byte-identical\n\
+         report out — the fleet loop builds zero Timeline IRs.\n\
+         \n\
+         `--rank` is the fleet-level DSE: it sweeps the scenario's\n\
+         (network, tech) pair, takes the Pareto front, and picks the\n\
+         design mix (homogeneous fleets plus two-design prefix blends)\n\
+         and dispatch policy that minimize SLO-feasible energy per\n\
+         served inference, so it rejects any pinned design-point axis\n\
+         the ranking would override."
+    }
+
+    fn run(&self, ctx: &CommandContext) -> Result<Output> {
+        let sc = ctx.scenario_with_positionals()?;
+        let ranking = ctx.flags.contains_key("rank");
+
+        // `--rank` explores the organization/geometry/dma axes itself —
+        // a pinned design point would be silently overridden by the
+        // sweep, and this CLI rejects rather than ignores (mirroring
+        // `capstore traffic --rates`).
+        if ranking {
+            if ctx.flags.contains_key("profile") {
+                return Err(Error::Config(
+                    "--profile reports the counters of one fleet run; \
+                     --rank runs a whole ranking sweep — drop one"
+                        .into(),
+                ));
+            }
+            if ctx.positionals.get(1).is_some() {
+                return Err(Error::Config(
+                    "`fleet <net> <org> --rank` pins an organization \
+                     the ranking sweeps over — drop the organization \
+                     (the ranking tries every front point)"
+                        .into(),
+                ));
+            }
+            for pinned in ["org", "banks", "sectors", "dma", "dma-bw"] {
+                if ctx.flags.contains_key(pinned) {
+                    return Err(Error::Config(format!(
+                        "`--rank` explores the organization/geometry/\
+                         dma axes itself: --{pinned} would be silently \
+                         overridden — drop it to rank, or drop --rank \
+                         to simulate that single design point"
+                    )));
+                }
+            }
+            if let Some(doc) = ctx.config_doc() {
+                for key in ["organization", "banks", "sectors"] {
+                    if doc.get("memory", key).is_some() {
+                        return Err(Error::Config(format!(
+                            "`--rank` explores the organization/\
+                             geometry axes itself: the --config file \
+                             pins `[memory] {key}`, which the ranking \
+                             would override — drop it, or drop --rank"
+                        )));
+                    }
+                }
+            }
+            if ctx.scenario_doc().is_some() {
+                let without = ctx.scenario_without_doc()?;
+                if sc.organization != without.organization
+                    || sc.geometry != without.geometry
+                    || sc.dma != without.dma
+                {
+                    return Err(Error::Config(
+                        "`--rank` explores the organization/geometry/\
+                         dma axes itself: the scenario file pins \
+                         values the ranking would override — drop \
+                         those keys, or drop --rank"
+                            .into(),
+                    ));
+                }
+            }
+        }
+
+        // workload + batching resolve exactly like `capstore traffic`;
+        // the fleet loop injects no faults, so a scenario carrying a
+        // live [faults] section is rejected rather than ignored.
+        let (profile, policy, faults, _resilience) =
+            super::cmd_traffic::resolve_serving(ctx, &sc)?;
+        if !faults.is_identity() {
+            return Err(Error::Config(
+                "the fleet simulator does not inject faults — drop the \
+                 scenario's [faults] section (single-instance fault \
+                 studies live in `capstore traffic`)"
+                    .into(),
+            ));
+        }
+
+        let fleet = resolve_fleet(ctx, &sc)?;
+
+        // static pre-flight on the fully resolved workload + fleet
+        // shape (flags already folded in, so the scenario doc's
+        // key->location mapping no longer applies — pass no doc).  The
+        // --rank path skips it: the ranking sweeps design axes the
+        // single-scenario rules would mis-blame.
+        if !ranking {
+            let checked = Scenario {
+                traffic: Some(profile.clone()),
+                fleet: Some(fleet.clone()),
+                ..sc.clone()
+            };
+            super::cmd_check::preflight(ctx, &checked, None)?;
+        }
+
+        let ev = Evaluator::new();
+        if ranking {
+            return run_rank(&ev, &sc, &profile, &policy, &fleet);
+        }
+
+        let profiling = ctx.flags.contains_key("profile");
+        let builds_before = Timeline::build_count();
+        let svc = ServiceModel::new(&ev, &sc, policy.max_batch)?;
+        let models = vec![svc; fleet.instances];
+        let report = simulate_fleet(&models, &profile, &policy, &fleet)?;
+
+        let mut out = Output::new();
+        out.json = report.to_json();
+
+        out.text(format!(
+            "scenario: {} x {} instances",
+            sc.label(),
+            fleet.instances
+        ));
+        out.text(format!("traffic:  {}", profile.label()));
+        out.text(format!(
+            "fleet:    policy {}{}",
+            report.policy.label(),
+            if fleet.elastic {
+                format!(
+                    ", elastic (min {} active, scale-up depth {})",
+                    fleet.min_active, fleet.scale_up_depth
+                )
+            } else {
+                String::new()
+            },
+        ));
+        out.text(format!(
+            "\narrivals {}  served {}  queued {}  shed {}  in {} \
+             batches (mean occupancy {:.2})",
+            report.arrivals,
+            report.served,
+            report.queued,
+            report.shed,
+            report.batches,
+            report.mean_occupancy(),
+        ));
+        out.text(format!(
+            "throughput {:.1} inf/s over a {:.3}s window",
+            report.throughput_per_sec(),
+            profile.duration_secs,
+        ));
+        if let Some(s) = &report.latency_ms {
+            out.text(format!(
+                "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  \
+                 max {:.3}",
+                s.median, s.p95, s.p99, s.max
+            ));
+        }
+        out.text(format!(
+            "SLO {} ms: {} violations ({:.2}% of served)",
+            profile.slo_ms,
+            report.slo_violations,
+            100.0 * report.slo_violation_fraction(),
+        ));
+        out.text(format!(
+            "starts: {} cold, {} warm; elastic: {} scale-ups, {} \
+             scale-downs, peak {} active",
+            report.cold_starts,
+            report.warm_starts,
+            report.scale_ups,
+            report.scale_downs,
+            report.peak_active,
+        ));
+        out.text(format!(
+            "gated off whole: {} of {} instances slept past \
+             break-even end to end",
+            report.gated_off_instances, fleet.instances,
+        ));
+        out.text(format!(
+            "energy: batches {} + idle {} - warm saving {} = {} \
+             ({:.3} µJ/inference)",
+            fmt_energy_uj(report.batch_pj),
+            fmt_energy_uj(report.idle_pj),
+            fmt_energy_uj(report.warm_saving_pj),
+            fmt_energy_uj(report.total_pj()),
+            report.energy_uj_per_inference(),
+        ));
+        out.blank();
+        out.table(instance_table(
+            &report.per_instance,
+            report.horizon_cycles,
+        ));
+
+        if profiling {
+            // deterministic counters: the fleet conservation buckets
+            // and dispatch tallies of this run, plus how many Timeline
+            // IRs the command built (service-model construction only —
+            // the fleet loop itself builds zero)
+            let mut counters =
+                CounterRegistry::from_fleet_report(&report);
+            counters.set(
+                "timeline.builds",
+                Timeline::build_count() - builds_before,
+            );
+            let snap = counters.snapshot();
+            if let Json::Obj(m) = &mut out.json {
+                m.insert(
+                    "profile".into(),
+                    Json::obj(vec![("counters", snap.to_json())]),
+                );
+            }
+            out.blank();
+            out.table(snap.table("profile — deterministic counters"));
+        }
+        Ok(out)
+    }
+}
+
+/// Resolve the fleet shape: the scenario's `[fleet]` section (if any)
+/// under the flags, with validation.
+fn resolve_fleet(
+    ctx: &CommandContext,
+    sc: &Scenario,
+) -> Result<FleetSpec> {
+    let mut fleet = sc.fleet.clone().unwrap_or_default();
+    if let Some(v) = ctx.parsed("instances")? {
+        fleet.instances = v;
+    }
+    if let Some(v) = ctx.flag("policy") {
+        fleet.policy = DispatchPolicy::by_name(v).ok_or_else(|| {
+            Error::Config(format!(
+                "--policy: want one of {}, got {v:?}",
+                DispatchPolicy::names().join("|")
+            ))
+        })?;
+    }
+    if ctx.flags.contains_key("elastic") {
+        fleet.elastic = true;
+    }
+    if let Some(v) = ctx.parsed("scale-up-depth")? {
+        fleet.scale_up_depth = v;
+    }
+    if let Some(v) = ctx.parsed("min-active")? {
+        fleet.min_active = v;
+    }
+    fleet.validate()?;
+    Ok(fleet)
+}
+
+/// The per-instance decomposition table shared by both formats.
+fn instance_table(
+    instances: &[InstanceReport],
+    horizon: u64,
+) -> Table {
+    let mut t = Table::new(
+        "per-instance decomposition",
+        &["inst", "design", "arrivals", "served", "queued", "batches",
+          "occup", "cold", "warm", "µJ", "gated off"],
+    );
+    for (i, inst) in instances.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            inst.design_label.clone(),
+            inst.arrivals.to_string(),
+            inst.served.to_string(),
+            inst.queued.to_string(),
+            inst.batches.to_string(),
+            format!("{:.2}", inst.occupancy(horizon)),
+            inst.cold_starts.to_string(),
+            inst.warm_starts.to_string(),
+            format!("{:.1}", inst.total_pj() * 1.0e-6),
+            if inst.gated_off { "yes" } else { "-" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// `capstore fleet --rank`: sweep the scenario's (network, tech) pair,
+/// take the Pareto front, and pick the design mix + dispatch policy
+/// minimizing SLO-feasible energy per served inference.
+fn run_rank(
+    ev: &Evaluator,
+    sc: &Scenario,
+    profile: &crate::traffic::TrafficProfile,
+    policy: &crate::coordinator::BatchPolicy,
+    fleet: &FleetSpec,
+) -> Result<Output> {
+    let mut ex = Explorer::new(sc.network.clone());
+    ex.model.tech = sc.tech.technology();
+    let points = ex.sweep()?;
+    let front = Explorer::pareto(&points);
+    let winner = rank_fleet(ev, sc, &front, profile, policy, fleet)?;
+
+    let mut t = Table::new(
+        "fleet DSE — winning design mix",
+        &["inst", "org", "banks", "sectors", "dma"],
+    );
+    for (i, p) in winner.mix.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            p.organization.label().into(),
+            p.banks.to_string(),
+            p.sectors.to_string(),
+            p.dma.model.label().into(),
+        ]);
+    }
+
+    let rep = &winner.report;
+    let mut out = Output::new();
+    out.json = Json::obj(vec![
+        ("network", Json::Str(sc.network.name.to_string())),
+        ("tech", Json::Str(sc.tech.label().to_string())),
+        ("front_points", Json::Num(front.len() as f64)),
+        ("policy", Json::Str(winner.policy.label().into())),
+        ("feasible", Json::Bool(winner.feasible)),
+        ("mix", t.to_json()),
+        ("report", rep.to_json()),
+    ]);
+
+    out.text(format!(
+        "scenario: {} x {} instances | pattern {} seed {} duration \
+         {}s slo {}ms",
+        sc.label(),
+        fleet.instances,
+        profile.pattern.label(),
+        profile.seed,
+        profile.duration_secs,
+        profile.slo_ms,
+    ));
+    out.text(format!(
+        "front: {} Pareto points of a {}-point sweep\n",
+        front.len(),
+        points.len()
+    ));
+    out.table(t);
+    out.text(format!(
+        "\npolicy {}: {:.3} µJ/inference at {:.1} inf/s, {:.2}% SLO \
+         misses ({}), {} of {} instances gated off whole",
+        winner.policy.label(),
+        rep.energy_uj_per_inference(),
+        rep.throughput_per_sec(),
+        100.0 * rep.slo_violation_fraction(),
+        if winner.feasible { "ok" } else { "MISS" },
+        rep.gated_off_instances,
+        fleet.instances,
+    ));
+    let heterogeneous = winner
+        .mix
+        .windows(2)
+        .any(|w| !w[0].bit_eq(&w[1]));
+    if heterogeneous {
+        out.text(
+            "the winning fleet is heterogeneous — the low-index \
+             prefix absorbs traffic while low-leakage designs sleep \
+             in the tail",
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Flags;
+    use super::*;
+
+    fn run_fleet(
+        positionals: Vec<String>,
+        flags: Flags,
+    ) -> Result<Output> {
+        let ctx = CommandContext::new("fleet", positionals, flags)?;
+        FleetCmd.run(&ctx)
+    }
+
+    #[test]
+    fn unknown_policy_is_a_typed_error_naming_the_choices() {
+        let mut flags = Flags::new();
+        flags.insert("policy".into(), "freshest-first".into());
+        let err = run_fleet(Vec::new(), flags).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("round-robin"), "{msg}");
+        assert!(msg.contains("jsq"), "{msg}");
+        assert!(msg.contains("packing"), "{msg}");
+    }
+
+    #[test]
+    fn degenerate_fleet_shapes_are_rejected() {
+        for (key, value) in [
+            ("instances", "0"),
+            ("min-active", "0"),
+            ("scale-up-depth", "0"),
+        ] {
+            let mut flags = Flags::new();
+            flags.insert(key.into(), value.into());
+            assert!(
+                run_fleet(Vec::new(), flags).is_err(),
+                "accepted --{key} {value}"
+            );
+        }
+        // a floor above the fleet size is rejected too
+        let mut flags = Flags::new();
+        flags.insert("instances".into(), "2".into());
+        flags.insert("min-active".into(), "3".into());
+        assert!(run_fleet(Vec::new(), flags).is_err());
+    }
+
+    #[test]
+    fn rank_rejects_pinned_design_axes() {
+        for (key, value) in [
+            ("org", "SMP"),
+            ("banks", "4"),
+            ("sectors", "8"),
+            ("dma", "serial"),
+            ("dma-bw", "32"),
+        ] {
+            let mut flags = Flags::new();
+            flags.insert("rank".into(), String::new());
+            flags.insert(key.into(), value.into());
+            assert!(
+                run_fleet(Vec::new(), flags).is_err(),
+                "--rank accepted pinned --{key}"
+            );
+        }
+        let mut flags = Flags::new();
+        flags.insert("rank".into(), String::new());
+        assert!(run_fleet(
+            vec!["mnist".into(), "PG-SEP".into()],
+            flags
+        )
+        .is_err());
+        // --rank and --profile conflict
+        let mut flags = Flags::new();
+        flags.insert("rank".into(), String::new());
+        flags.insert("profile".into(), String::new());
+        assert!(run_fleet(Vec::new(), flags).is_err());
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic_and_conserves() {
+        let run = || {
+            let mut flags = Flags::new();
+            flags.insert("rate".into(), "2000".into());
+            flags.insert("duration".into(), "0.02".into());
+            flags.insert("instances".into(), "3".into());
+            flags.insert("policy".into(), "packing".into());
+            flags.insert("format".into(), "json".into());
+            run_fleet(Vec::new(), flags).unwrap().json.render()
+        };
+        let first = run();
+        assert_eq!(first, run(), "same seed must be byte-identical");
+        assert!(first.contains("\"instances\""));
+        assert!(first.contains("\"policy\":\"packing\""));
+    }
+}

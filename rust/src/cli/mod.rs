@@ -33,6 +33,7 @@ mod cmd_analyze;
 mod cmd_check;
 mod cmd_dse;
 mod cmd_evaluate;
+mod cmd_fleet;
 mod cmd_help;
 mod cmd_info;
 mod cmd_serve;

@@ -8,6 +8,7 @@ use super::cmd_analyze::Analyze;
 use super::cmd_check::Check;
 use super::cmd_dse::Dse;
 use super::cmd_evaluate::Evaluate;
+use super::cmd_fleet::FleetCmd;
 use super::cmd_help::HelpCmd;
 use super::cmd_info::Info;
 use super::cmd_serve::Serve;
@@ -27,6 +28,7 @@ pub fn commands() -> &'static [&'static dyn Command] {
         &TraceCmd,
         &Dse,
         &TrafficCmd,
+        &FleetCmd,
         &Serve,
         &Info,
         &Completions,

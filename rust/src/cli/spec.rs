@@ -64,6 +64,8 @@ pub enum FlagGroup {
     Time,
     /// The serving-simulation workload knobs.
     Traffic,
+    /// Fleet sharding knobs (instances, dispatch policy, elasticity).
+    Fleet,
     /// Fault injection and resilience policy knobs.
     Faults,
     /// Design-space exploration controls.
@@ -82,6 +84,7 @@ impl FlagGroup {
             FlagGroup::Memory => "memory axes",
             FlagGroup::Time => "time-policy axes",
             FlagGroup::Traffic => "serving workload",
+            FlagGroup::Fleet => "fleet sharding",
             FlagGroup::Faults => "faults & resilience",
             FlagGroup::Dse => "exploration",
             FlagGroup::Serve => "serving / artifacts",
@@ -127,6 +130,10 @@ fn org_names() -> Vec<&'static str> {
 
 fn dma_names() -> Vec<&'static str> {
     crate::timeline::DmaModel::names()
+}
+
+fn policy_names() -> Vec<&'static str> {
+    crate::fleet::DispatchPolicy::names()
 }
 
 // --- the flags -------------------------------------------------------
@@ -354,6 +361,66 @@ pub const MAX_WAIT_MS: FlagSpec = FlagSpec {
     group: FlagGroup::Traffic,
 };
 
+pub const INSTANCES: FlagSpec = FlagSpec {
+    name: "instances",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "fleet size (accelerator instances sharing the request stream)",
+    default: "2",
+    group: FlagGroup::Fleet,
+};
+
+pub const POLICY: FlagSpec = FlagSpec {
+    name: "policy",
+    kind: ValueKind::DynChoice(policy_names),
+    hint: "<round-robin|jsq|packing>",
+    doc: "dispatch policy (packing bin-packs load so idle instances \
+          gate off whole)",
+    default: "round-robin",
+    group: FlagGroup::Fleet,
+};
+
+pub const ELASTIC: FlagSpec = FlagSpec {
+    name: "elastic",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "elastic scaling: start at --min-active instances and grow/\
+          shrink the active set on queue depth (wakes pay the cold \
+          premium)",
+    default: "",
+    group: FlagGroup::Fleet,
+};
+
+pub const SCALE_UP_DEPTH: FlagSpec = FlagSpec {
+    name: "scale-up-depth",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "queued requests per active instance that trigger a scale-up",
+    default: "8",
+    group: FlagGroup::Fleet,
+};
+
+pub const MIN_ACTIVE: FlagSpec = FlagSpec {
+    name: "min-active",
+    kind: ValueKind::UInt,
+    hint: "N",
+    doc: "elastic floor: never park below this many active instances",
+    default: "1",
+    group: FlagGroup::Fleet,
+};
+
+pub const RANK_FLEET: FlagSpec = FlagSpec {
+    name: "rank",
+    kind: ValueKind::Switch,
+    hint: "",
+    doc: "fleet-level DSE: sweep the (network, tech) Pareto front and \
+          pick the design mix + dispatch policy minimizing SLO-feasible \
+          energy per served inference (conflicts with any pinned \
+          design-point axis)",
+    default: "",
+    group: FlagGroup::Fleet,
+};
+
 pub const FAULTS: FlagSpec = FlagSpec {
     name: "faults",
     kind: ValueKind::Path,
@@ -514,6 +581,17 @@ pub const TIME_UNBATCHED: &[FlagSpec] = &[LOOKAHEAD, DMA, DMA_BW];
 /// The serving-simulation workload knobs.
 pub const TRAFFIC: &[FlagSpec] = &[
     RATE, RATES, PATTERN, SEED, DURATION, SLO_MS, MAX_BATCH, MAX_WAIT_MS,
+];
+
+/// [`TRAFFIC`] minus `--rates`: `capstore fleet` has its own DSE
+/// switch (`--rank`), so a `--rates` list would be ambiguous there.
+pub const TRAFFIC_ONE: &[FlagSpec] = &[
+    RATE, PATTERN, SEED, DURATION, SLO_MS, MAX_BATCH, MAX_WAIT_MS,
+];
+
+/// Fleet sharding knobs (`capstore fleet`).
+pub const FLEET: &[FlagSpec] = &[
+    INSTANCES, POLICY, ELASTIC, SCALE_UP_DEPTH, MIN_ACTIVE, RANK_FLEET,
 ];
 
 /// Fault injection + resilience policy knobs (`capstore traffic`).

@@ -1,0 +1,182 @@
+//! Fleet-scale serving: shard the traffic simulator across a
+//! heterogeneous accelerator fleet.
+//!
+//! The paper's energy argument is per-accelerator; this module answers
+//! the deployment-scale question — *what does a request stream cost
+//! across N CapStore instances*, where the DESCNet break-even sleep
+//! rule (arXiv 2010.05754) suddenly operates at a much coarser
+//! granularity: a power-aware dispatcher can concentrate load so
+//! *entire idle accelerators* gate off, not just sectors.
+//!
+//! Three pieces, all pure functions of their inputs (the determinism
+//! contract of [`crate::traffic`] carries over unchanged: one seeded
+//! arrival stream, no wall clock, no hash-map iteration — same seed,
+//! byte-identical [`FleetReport`]):
+//!
+//! * [`FleetSpec`] / [`DispatchPolicy`] — the fleet shape: instance
+//!   count, dispatch policy, and the elastic-scaling knobs.  Serialized
+//!   as the strict `[fleet]` scenario TOML section.
+//! * [`sim`] — the discrete-event fleet loop over per-instance
+//!   [`crate::traffic::ServiceModel`]s (possibly *different*
+//!   Pareto-front designs in one fleet).  Requests route per policy;
+//!   each instance batches, serves from its precomputed
+//!   [`crate::scenario::evaluator::BatchEnergy`] table (zero `Timeline`
+//!   builds in the loop), and charges idle windows — including whole
+//!   parked accelerators — through
+//!   [`crate::traffic::ServiceModel::idle_window_pj`].
+//! * [`report`] — [`FleetReport`]: merged latency percentiles
+//!   (per-instance [`crate::util::stats::LogHistogram`]s merged, never
+//!   re-sorted raw samples), per-instance occupancy/energy
+//!   decomposition, and the conservation law
+//!   `arrivals == Σ served + queued + shed`.
+//!
+//! Fleet-level DSE lives in [`crate::traffic::rank::rank_fleet`]: it
+//! reuses `dse` Pareto fronts as the candidate pool and picks the
+//! design *mix* + dispatch policy that minimizes SLO-feasible energy
+//! per served inference.  Surfaced as `capstore fleet` and guarded by
+//! `benches/fleet_sim.rs --check` plus CI's fleet-smoke job.
+
+pub mod report;
+pub mod sim;
+
+pub use report::{FleetReport, InstanceReport};
+pub use sim::{simulate_fleet, simulate_fleet_traced};
+
+use crate::{Error, Result};
+
+/// How arriving requests are routed across the fleet's active
+/// instances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate through the active instances in index order.  The
+    /// baseline: spreads load evenly, keeps every instance lukewarm.
+    RoundRobin,
+    /// Join-shortest-queue: route to the instance with the fewest
+    /// requests in system (queued + in service), ties to the lowest
+    /// index.  Minimizes waiting, indifferent to energy.
+    Jsq,
+    /// Power-aware packing: bin-pack load onto the fewest warm
+    /// instances — route to the lowest-indexed instance still filling
+    /// its next batch, spilling to the next only when full.  The
+    /// unloaded tail of the fleet idles past its break-even point and
+    /// gates off whole accelerators.
+    Packing,
+}
+
+impl DispatchPolicy {
+    pub fn all() -> [DispatchPolicy; 3] {
+        [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::Jsq,
+            DispatchPolicy::Packing,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::Jsq => "jsq",
+            DispatchPolicy::Packing => "packing",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DispatchPolicy> {
+        Self::all().into_iter().find(|p| p.label() == name)
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|p| p.label()).collect()
+    }
+}
+
+/// The fleet shape: how many instances, how requests route, and
+/// whether the active set breathes with queue depth.
+///
+/// Serializes as the `[fleet]` section of a scenario TOML file
+/// (strict: unknown keys are rejected by the overlay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Fleet size (homogeneous fleets built from one scenario; the
+    /// library API also accepts heterogeneous model lists of this
+    /// length).
+    pub instances: usize,
+    /// Request routing policy.
+    pub policy: DispatchPolicy,
+    /// Elastic scaling: start with `min_active` instances and grow /
+    /// shrink the active set on queue depth.  Off = the whole fleet is
+    /// active for the whole window.
+    pub elastic: bool,
+    /// Scale-up trigger: total queued requests per active instance
+    /// beyond which one more instance is activated.
+    pub scale_up_depth: u64,
+    /// Elastic floor: never park below this many active instances.
+    pub min_active: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            instances: 2,
+            policy: DispatchPolicy::RoundRobin,
+            elastic: false,
+            scale_up_depth: 8,
+            min_active: 1,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Reject shapes the simulator cannot run.
+    pub fn validate(&self) -> Result<()> {
+        if self.instances == 0 {
+            return Err(Error::Config(
+                "fleet instances must be >= 1".into(),
+            ));
+        }
+        if self.min_active == 0 || self.min_active > self.instances {
+            return Err(Error::Config(format!(
+                "fleet min_active must be in 1..=instances \
+                 (got {} of {})",
+                self.min_active, self.instances,
+            )));
+        }
+        if self.scale_up_depth == 0 {
+            return Err(Error::Config(
+                "fleet scale_up_depth must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_registry_round_trips() {
+        for p in DispatchPolicy::all() {
+            assert_eq!(DispatchPolicy::by_name(p.label()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::by_name("frobnicate"), None);
+        assert_eq!(DispatchPolicy::names().len(), 3);
+    }
+
+    #[test]
+    fn spec_validation_rejects_degenerate_shapes() {
+        assert!(FleetSpec::default().validate().is_ok());
+        let zero = FleetSpec { instances: 0, ..FleetSpec::default() };
+        assert!(zero.validate().is_err());
+        let floor = FleetSpec {
+            instances: 2,
+            min_active: 3,
+            ..FleetSpec::default()
+        };
+        assert!(floor.validate().is_err());
+        let depth = FleetSpec {
+            scale_up_depth: 0,
+            ..FleetSpec::default()
+        };
+        assert!(depth.validate().is_err());
+    }
+}

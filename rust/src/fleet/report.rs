@@ -1,0 +1,320 @@
+//! The fleet run's result: per-instance decomposition plus merged
+//! fleet-level totals, with a JSON view that is byte-identical across
+//! runs of the same seed.
+
+use super::{DispatchPolicy, FleetSpec};
+use crate::traffic::TrafficProfile;
+use crate::util::json::Json;
+use crate::util::stats::{LogHistogram, Summary};
+
+/// One instance's share of the run: what it was routed, what it
+/// served, and the bit-for-bit energy decomposition of its window.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    /// The instance's design label (heterogeneous fleets differ here).
+    pub design_label: String,
+    /// Requests routed to this instance.
+    pub arrivals: u64,
+    pub served: u64,
+    /// Requests still queued on this instance at the horizon.
+    pub queued: u64,
+    pub batches: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub busy_cycles: u64,
+    pub peak_queue_depth: u64,
+    /// Active batch energy, pJ (precomputed `BatchEnergy` table).
+    pub batch_pj: f64,
+    /// Idle-window leakage under the break-even policy, pJ — for a
+    /// parked instance this is the whole horizon, mostly at the gated
+    /// retention floor.
+    pub idle_pj: f64,
+    /// Cold premium credited back on warm continuations, pJ.
+    pub warm_saving_pj: f64,
+    /// The power-aware payoff: this instance never dispatched a batch
+    /// and its single idle window slept past the break-even point —
+    /// the whole accelerator was gated off.
+    pub gated_off: bool,
+    /// Per-instance latency summary (this instance's own samples).
+    pub latency_ms: Option<Summary>,
+    /// Per-instance latency histogram, merged fleet-wide without
+    /// re-sorting raw samples.
+    pub latency_cycles_hist: LogHistogram,
+}
+
+impl InstanceReport {
+    /// Net energy of this instance's window, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.batch_pj - self.warm_saving_pj + self.idle_pj
+    }
+
+    /// Fraction of `horizon` this instance spent serving.
+    pub fn occupancy(&self, horizon: u64) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / horizon as f64
+        }
+    }
+
+    fn to_json(&self, horizon: u64) -> Json {
+        let mut fields = vec![
+            ("design", Json::Str(self.design_label.clone())),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("queued", Json::Num(self.queued as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("cold_starts", Json::Num(self.cold_starts as f64)),
+            ("warm_starts", Json::Num(self.warm_starts as f64)),
+            ("busy_cycles", Json::Num(self.busy_cycles as f64)),
+            ("occupancy", Json::Num(self.occupancy(horizon))),
+            (
+                "peak_queue_depth",
+                Json::Num(self.peak_queue_depth as f64),
+            ),
+            ("gated_off", Json::Bool(self.gated_off)),
+            (
+                "energy",
+                Json::obj(vec![
+                    ("batch_pj", Json::Num(self.batch_pj)),
+                    ("idle_pj", Json::Num(self.idle_pj)),
+                    ("warm_saving_pj", Json::Num(self.warm_saving_pj)),
+                    ("total_pj", Json::Num(self.total_pj())),
+                ]),
+            ),
+        ];
+        if let Some(l) = &self.latency_ms {
+            fields.push((
+                "latency_ms",
+                Json::obj(vec![
+                    ("mean", Json::Num(l.mean)),
+                    ("p50", Json::Num(l.median)),
+                    ("p95", Json::Num(l.p95)),
+                    ("p99", Json::Num(l.p99)),
+                    ("max", Json::Num(l.max)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The whole fleet run: merged totals + per-instance decomposition.
+///
+/// The conservation law `arrivals == Σ served + queued + shed` holds
+/// by construction and is re-checked by [`conserves`](Self::conserves)
+/// (pinned under saturation in `tests/fleet_sim.rs`).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub profile: TrafficProfile,
+    pub policy: DispatchPolicy,
+    pub spec: FleetSpec,
+    /// The fleet's shared clock (heterogeneous designs must agree).
+    pub clock_hz: f64,
+    pub horizon_cycles: u64,
+    pub arrivals: u64,
+    pub served: u64,
+    /// Requests still queued fleet-wide at the horizon.
+    pub queued: u64,
+    /// Requests the dispatcher refused (reserved; always 0 today —
+    /// the fleet loop queues everything it is offered).
+    pub shed: u64,
+    pub batches: u64,
+    pub slo_violations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    /// Elastic activations (cold wakes of parked instances).
+    pub scale_ups: u64,
+    /// Elastic parkings.
+    pub scale_downs: u64,
+    /// High-water mark of the active set.
+    pub peak_active: usize,
+    /// Instances whose whole window slept past break-even — entire
+    /// accelerators the dispatch policy gated off.
+    pub gated_off_instances: u64,
+    pub batch_pj: f64,
+    pub idle_pj: f64,
+    pub warm_saving_pj: f64,
+    /// Fleet latency summary, merged from per-instance summaries:
+    /// n/min/max/moments composed exactly, percentiles read off the
+    /// merged histogram's bucket upper bounds (never re-sorts raw
+    /// samples across instances).
+    pub latency_ms: Option<Summary>,
+    /// All instances' latency histograms merged.
+    pub latency_cycles_hist: LogHistogram,
+    pub per_instance: Vec<InstanceReport>,
+}
+
+impl FleetReport {
+    /// Net fleet energy, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.batch_pj - self.warm_saving_pj + self.idle_pj
+    }
+
+    /// Energy per *served* inference, µJ — the fleet DSE objective.
+    /// Infinite when nothing was served (worst possible rank).
+    pub fn energy_uj_per_inference(&self) -> f64 {
+        if self.served == 0 {
+            f64::INFINITY
+        } else {
+            self.total_pj() / self.served as f64 * 1.0e-6
+        }
+    }
+
+    /// Served inferences per second of simulated time.
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.horizon_cycles == 0 {
+            0.0
+        } else {
+            self.served as f64
+                / (self.horizon_cycles as f64 / self.clock_hz)
+        }
+    }
+
+    /// Fraction of served requests that missed the SLO.
+    pub fn slo_violation_fraction(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.slo_violations as f64 / self.served as f64
+        }
+    }
+
+    /// Mean occupancy across the fleet (serving cycles over
+    /// `instances x horizon`).
+    pub fn mean_occupancy(&self) -> f64 {
+        let cap =
+            self.horizon_cycles as f64 * self.per_instance.len() as f64;
+        if cap == 0.0 {
+            0.0
+        } else {
+            self.per_instance
+                .iter()
+                .map(|i| i.busy_cycles as f64)
+                .sum::<f64>()
+                / cap
+        }
+    }
+
+    /// The conservation law: every arrival is served, still queued,
+    /// or shed — nothing is lost, nothing is invented.
+    pub fn conserves(&self) -> bool {
+        self.arrivals == self.served + self.queued + self.shed
+            && self.served
+                == self.per_instance.iter().map(|i| i.served).sum()
+            && self.queued
+                == self.per_instance.iter().map(|i| i.queued).sum()
+    }
+
+    /// JSON view; byte-identical across runs of the same seed.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            (
+                "traffic",
+                Json::obj(vec![
+                    (
+                        "pattern",
+                        Json::Str(
+                            self.profile.pattern.label().to_string(),
+                        ),
+                    ),
+                    (
+                        "rate_per_sec",
+                        Json::Num(self.profile.rate_per_sec),
+                    ),
+                    ("seed", Json::Num(self.profile.seed as f64)),
+                    (
+                        "duration_secs",
+                        Json::Num(self.profile.duration_secs),
+                    ),
+                    ("slo_ms", Json::Num(self.profile.slo_ms)),
+                ]),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    (
+                        "instances",
+                        Json::Num(self.spec.instances as f64),
+                    ),
+                    ("policy", Json::Str(self.policy.label().into())),
+                    ("elastic", Json::Bool(self.spec.elastic)),
+                    (
+                        "scale_up_depth",
+                        Json::Num(self.spec.scale_up_depth as f64),
+                    ),
+                    (
+                        "min_active",
+                        Json::Num(self.spec.min_active as f64),
+                    ),
+                ]),
+            ),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("queued", Json::Num(self.queued as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_occupancy", Json::Num(self.mean_occupancy())),
+            (
+                "throughput_per_sec",
+                Json::Num(self.throughput_per_sec()),
+            ),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            (
+                "slo_violation_fraction",
+                Json::Num(self.slo_violation_fraction()),
+            ),
+            ("cold_starts", Json::Num(self.cold_starts as f64)),
+            ("warm_starts", Json::Num(self.warm_starts as f64)),
+            ("scale_ups", Json::Num(self.scale_ups as f64)),
+            ("scale_downs", Json::Num(self.scale_downs as f64)),
+            ("peak_active", Json::Num(self.peak_active as f64)),
+            (
+                "gated_off_instances",
+                Json::Num(self.gated_off_instances as f64),
+            ),
+            ("horizon_cycles", Json::Num(self.horizon_cycles as f64)),
+            (
+                "energy",
+                Json::obj(vec![
+                    ("batch_pj", Json::Num(self.batch_pj)),
+                    ("idle_pj", Json::Num(self.idle_pj)),
+                    ("warm_saving_pj", Json::Num(self.warm_saving_pj)),
+                    ("total_pj", Json::Num(self.total_pj())),
+                    (
+                        "uj_per_inference",
+                        Json::Num(self.energy_uj_per_inference()),
+                    ),
+                ]),
+            ),
+            (
+                "instances",
+                Json::Arr(
+                    self.per_instance
+                        .iter()
+                        .map(|i| i.to_json(self.horizon_cycles))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(l) = &self.latency_ms {
+            fields.push((
+                "latency_ms",
+                Json::obj(vec![
+                    ("mean", Json::Num(l.mean)),
+                    ("p50", Json::Num(l.median)),
+                    ("p95", Json::Num(l.p95)),
+                    ("p99", Json::Num(l.p99)),
+                    ("max", Json::Num(l.max)),
+                ]),
+            ));
+        }
+        if !self.latency_cycles_hist.is_empty() {
+            fields.push((
+                "latency_cycles_hist",
+                self.latency_cycles_hist.to_json(),
+            ));
+        }
+        Json::obj(fields)
+    }
+}

@@ -1,0 +1,492 @@
+//! The discrete-event fleet loop: one seeded arrival stream routed
+//! across N per-instance [`ServiceModel`]s.
+//!
+//! Reuses the single-instance machinery wholesale — each instance
+//! serves from its precomputed `BatchEnergy` table (zero `Timeline`
+//! builds inside the loop) and charges every idle window through
+//! [`ServiceModel::idle_window_pj`], so a parked accelerator's whole
+//! horizon goes through the same DESCNet break-even rule as a
+//! between-batch gap, and a cold wake after a long sleep pays the same
+//! cold premium.  The loop itself is a pure function of its inputs:
+//! arrivals, routing, batching, and completions all advance on the
+//! virtual cycle clock in a fixed total order (event time, then
+//! instance index), so the same seed always produces the
+//! byte-identical [`FleetReport`].
+
+use std::collections::VecDeque;
+
+use super::report::{FleetReport, InstanceReport};
+use super::{DispatchPolicy, FleetSpec};
+use crate::coordinator::BatchPolicy;
+use crate::telemetry::{FleetTrace, TraceSink};
+use crate::traffic::{ArrivalGen, ServiceModel, TrafficProfile};
+use crate::util::stats::{LogHistogram, Summary};
+use crate::{Error, Result};
+
+/// One queued request on an instance.
+struct FReq {
+    arrival: u64,
+    id: u64,
+}
+
+/// Per-instance running state + tallies.
+struct Instance {
+    queue: VecDeque<FReq>,
+    busy_until: Option<u64>,
+    /// Requests in the batch currently being served (JSQ load term).
+    in_service: usize,
+    idle_since: u64,
+    /// Effective batch cap: the policy's, clamped to the model table.
+    eff_batch: usize,
+    arrivals: u64,
+    served: u64,
+    batches: u64,
+    cold_starts: u64,
+    warm_starts: u64,
+    slo_violations: u64,
+    busy_cycles: u64,
+    peak_queue_depth: u64,
+    batch_pj: f64,
+    idle_pj: f64,
+    warm_saving_pj: f64,
+    latencies_ms: Vec<f64>,
+    hist: LogHistogram,
+    /// Whole-window sleep: set by the trailing-idle pass when the
+    /// instance never dispatched and its one idle window slept.
+    gated_off: bool,
+}
+
+struct FleetLoop<'a> {
+    models: &'a [ServiceModel],
+    profile: &'a TrafficProfile,
+    spec: &'a FleetSpec,
+    inst: Vec<Instance>,
+    gen: ArrivalGen,
+    next_arrival: Option<u64>,
+    horizon: u64,
+    clock_hz: f64,
+    max_wait_cycles: u64,
+    active: usize,
+    rr_cursor: usize,
+    arrivals: u64,
+    next_id: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    peak_active: usize,
+    trace: Option<FleetTrace<'a>>,
+}
+
+/// Run `profile`'s arrival stream against a fleet of `models` under
+/// the routing/elastic shape in `spec` and the per-instance batching
+/// `policy`.  Heterogeneous fleets are first-class: each instance
+/// brings its own [`ServiceModel`] (`models.len()` must equal
+/// `spec.instances`, and all models must share one clock so the fleet
+/// has a single coherent timebase).  Pure function of its arguments —
+/// same inputs, same report, bit for bit.
+pub fn simulate_fleet(
+    models: &[ServiceModel],
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    spec: &FleetSpec,
+) -> Result<FleetReport> {
+    simulate_fleet_traced(models, profile, policy, spec, None)
+}
+
+/// [`simulate_fleet`] with optional trace recording: request arcs on
+/// the fleet track, batch spans + queue-depth counters per instance,
+/// and the active-set counter at every elastic edge.  `trace: None`
+/// IS `simulate_fleet` — same code path, nothing allocated — and the
+/// returned report stays bit-identical to the untraced run.
+pub fn simulate_fleet_traced(
+    models: &[ServiceModel],
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    spec: &FleetSpec,
+    trace: Option<&mut TraceSink>,
+) -> Result<FleetReport> {
+    spec.validate()?;
+    if models.len() != spec.instances {
+        return Err(Error::Config(format!(
+            "fleet wants {} instances but got {} service models",
+            spec.instances,
+            models.len(),
+        )));
+    }
+    let clock_hz = models[0].clock_hz;
+    if models.iter().any(|m| m.clock_hz.to_bits() != clock_hz.to_bits())
+    {
+        return Err(Error::Config(
+            "fleet instances must share one clock — mixed-clock \
+             designs have no coherent fleet timebase"
+                .into(),
+        ));
+    }
+
+    let horizon = (profile.duration_secs * clock_hz).round() as u64;
+    let gen = ArrivalGen::new(profile, clock_hz)?;
+    let inst: Vec<Instance> = models
+        .iter()
+        .map(|m| Instance {
+            queue: VecDeque::new(),
+            busy_until: None,
+            in_service: 0,
+            idle_since: 0,
+            eff_batch: policy.max_batch.clamp(1, m.max_batch()),
+            arrivals: 0,
+            served: 0,
+            batches: 0,
+            cold_starts: 0,
+            warm_starts: 0,
+            slo_violations: 0,
+            busy_cycles: 0,
+            peak_queue_depth: 0,
+            batch_pj: 0.0,
+            idle_pj: 0.0,
+            warm_saving_pj: 0.0,
+            latencies_ms: Vec::new(),
+            hist: LogHistogram::new(),
+            gated_off: false,
+        })
+        .collect();
+    let active =
+        if spec.elastic { spec.min_active } else { spec.instances };
+
+    let fl = FleetLoop {
+        models,
+        profile,
+        spec,
+        inst,
+        gen,
+        next_arrival: None,
+        horizon,
+        clock_hz,
+        max_wait_cycles: (policy.max_wait.as_secs_f64() * clock_hz)
+            .round() as u64,
+        active,
+        rr_cursor: 0,
+        arrivals: 0,
+        next_id: 0,
+        scale_ups: 0,
+        scale_downs: 0,
+        peak_active: active,
+        trace: trace.map(|sink| FleetTrace::new(sink, models.len())),
+    };
+    Ok(fl.run())
+}
+
+impl FleetLoop<'_> {
+    fn total_queued(&self) -> u64 {
+        self.inst.iter().map(|i| i.queue.len() as u64).sum()
+    }
+
+    /// The earliest pending instance event `(t, i)`, in the fixed
+    /// total order (event time, then instance index).  A busy
+    /// instance's event is its completion; a free instance with a
+    /// backlog fires at the oldest request's wait deadline (clamped
+    /// forward to the moment the instance freed up, for deadlines
+    /// that expired while it was busy).  Wait deadlines at or past
+    /// the horizon are dropped — those requests stay queued, exactly
+    /// like the single-instance loop.
+    fn next_instance_event(&self) -> Option<(u64, usize)> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, ins) in self.inst.iter().enumerate() {
+            let cand = match ins.busy_until {
+                Some(done) => Some((done, i)),
+                None => ins
+                    .queue
+                    .front()
+                    .map(|q| {
+                        let t = (q.arrival + self.max_wait_cycles)
+                            .max(ins.idle_since);
+                        (t, i)
+                    })
+                    .filter(|&(t, _)| t < self.horizon),
+            };
+            if let Some((t, i)) = cand {
+                if best.is_none_or(|b| (t, i) < b) {
+                    best = Some((t, i));
+                }
+            }
+        }
+        best
+    }
+
+    /// Pick the routing target among the active prefix.
+    fn route_target(&mut self) -> usize {
+        let active = self.active;
+        match self.spec.policy {
+            DispatchPolicy::RoundRobin => {
+                let i = self.rr_cursor % active;
+                self.rr_cursor = (self.rr_cursor + 1) % active;
+                i
+            }
+            DispatchPolicy::Jsq => (0..active)
+                .min_by_key(|&i| {
+                    self.inst[i].queue.len() + self.inst[i].in_service
+                })
+                .expect("active >= 1"),
+            DispatchPolicy::Packing => (0..active)
+                .find(|&i| {
+                    self.inst[i].queue.len() < self.inst[i].eff_batch
+                })
+                .unwrap_or_else(|| {
+                    (0..active)
+                        .min_by_key(|&i| self.inst[i].queue.len())
+                        .expect("active >= 1")
+                }),
+        }
+    }
+
+    /// Admit one arrival at `a`: grow the active set if the backlog
+    /// calls for it, route per policy, and fire an immediate size
+    /// trigger on a free target.
+    fn route(&mut self, a: u64) {
+        self.arrivals += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+
+        if self.spec.elastic
+            && self.active < self.spec.instances
+            && self.total_queued()
+                >= self.spec.scale_up_depth * self.active as u64
+        {
+            self.active += 1;
+            self.scale_ups += 1;
+            self.peak_active = self.peak_active.max(self.active);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.active_set(a, self.active as u64);
+            }
+        }
+
+        let i = self.route_target();
+        let ins = &mut self.inst[i];
+        ins.arrivals += 1;
+        ins.queue.push_back(FReq { arrival: a, id });
+        ins.peak_queue_depth =
+            ins.peak_queue_depth.max(ins.queue.len() as u64);
+        let depth = ins.queue.len() as u64;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.arrival(id, a);
+            tr.queue_depth(i, a, depth);
+        }
+        if self.inst[i].busy_until.is_none()
+            && self.inst[i].queue.len() >= self.inst[i].eff_batch
+        {
+            self.dispatch(i, a);
+        }
+    }
+
+    /// Instance `i`'s batch completed at `t`: free it, let the
+    /// elastic active set breathe down, and chain the next dispatch
+    /// if a size or an already-expired wait trigger is pending.
+    fn complete(&mut self, i: usize, t: u64) {
+        self.inst[i].busy_until = None;
+        self.inst[i].in_service = 0;
+        self.inst[i].idle_since = t;
+
+        if self.spec.elastic && self.total_queued() == 0 {
+            let before = self.active;
+            while self.active > self.spec.min_active {
+                let last = &self.inst[self.active - 1];
+                if last.busy_until.is_some() || !last.queue.is_empty()
+                {
+                    break;
+                }
+                self.active -= 1;
+                self.scale_downs += 1;
+            }
+            if self.active != before {
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.active_set(t, self.active as u64);
+                }
+            }
+        }
+
+        if t < self.horizon {
+            let ins = &self.inst[i];
+            let size_trigger = ins.queue.len() >= ins.eff_batch;
+            let wait_trigger = ins
+                .queue
+                .front()
+                .is_some_and(|q| q.arrival + self.max_wait_cycles <= t);
+            if size_trigger || wait_trigger {
+                self.dispatch(i, t);
+            }
+        }
+    }
+
+    /// Price and launch a batch on instance `i` at `t` — the fleet
+    /// mirror of the single-instance `serve`: idle gap through the
+    /// break-even rule, cold premium or warm credit, service time and
+    /// energy from the precomputed table.
+    fn dispatch(&mut self, i: usize, t: u64) {
+        let svc = &self.models[i];
+        let ins = &mut self.inst[i];
+        let n = ins.queue.len().min(ins.eff_batch);
+        debug_assert!(n > 0, "dispatch on an empty queue");
+        let be = &svc.per_batch[n - 1];
+
+        let (gap_pj, cold) = svc.idle_window_pj(t - ins.idle_since);
+        ins.idle_pj += gap_pj;
+        if cold {
+            ins.cold_starts += 1;
+        } else {
+            ins.warm_starts += 1;
+            ins.warm_saving_pj += svc.cold_extra_pj;
+        }
+
+        let done = t + be.latency_cycles;
+        ins.batches += 1;
+        ins.served += n as u64;
+        ins.busy_cycles +=
+            done.min(self.horizon).saturating_sub(t.min(self.horizon));
+        ins.batch_pj += be.total_pj();
+        ins.busy_until = Some(done);
+        ins.in_service = n;
+
+        let slo_ms = self.profile.slo_ms;
+        let clock_hz = self.clock_hz;
+        for _ in 0..n {
+            let ins = &mut self.inst[i];
+            let q = ins.queue.pop_front().expect("n <= queue.len()");
+            let lat_cycles = done - q.arrival;
+            let lat_ms = lat_cycles as f64 / clock_hz * 1.0e3;
+            if lat_ms > slo_ms {
+                ins.slo_violations += 1;
+            }
+            ins.latencies_ms.push(lat_ms);
+            ins.hist.record(lat_cycles);
+            if let Some(tr) = self.trace.as_mut() {
+                tr.complete(q.id, done, lat_cycles);
+            }
+        }
+        let depth = self.inst[i].queue.len() as u64;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.batch(i, t, done, n as u64, cold, be.total_pj());
+            tr.queue_depth(i, t, depth);
+        }
+    }
+
+    fn run(mut self) -> FleetReport {
+        self.next_arrival = self.gen.next();
+        loop {
+            match (self.next_arrival, self.next_instance_event()) {
+                (Some(a), Some((t, i))) if t <= a => self.event(i, t),
+                (Some(a), _) => {
+                    self.route(a);
+                    self.next_arrival = self.gen.next();
+                }
+                (None, Some((t, i))) => self.event(i, t),
+                (None, None) => break,
+            }
+        }
+
+        // Trailing idle: every instance's window from its last
+        // completion (or cycle 0, for one that never served) to the
+        // horizon leaks under the same break-even policy.  An
+        // instance with zero batches whose single window slept is a
+        // whole accelerator the dispatch policy gated off.
+        for i in 0..self.inst.len() {
+            let tail =
+                self.horizon.saturating_sub(self.inst[i].idle_since);
+            if tail > 0 {
+                let (pj, slept) = self.models[i].idle_window_pj(tail);
+                let ins = &mut self.inst[i];
+                ins.idle_pj += pj;
+                ins.gated_off = ins.batches == 0 && slept;
+            }
+        }
+
+        let mut hist = LogHistogram::new();
+        let mut parts: Vec<Summary> = Vec::new();
+        let mut per_instance = Vec::with_capacity(self.inst.len());
+        for (ins, svc) in self.inst.iter().zip(self.models) {
+            hist.merge(&ins.hist);
+            let latency_ms = Summary::from_samples(&ins.latencies_ms);
+            if let Some(s) = &latency_ms {
+                parts.push(s.clone());
+            }
+            per_instance.push(InstanceReport {
+                design_label: svc.scenario.label(),
+                arrivals: ins.arrivals,
+                served: ins.served,
+                queued: ins.queue.len() as u64,
+                batches: ins.batches,
+                cold_starts: ins.cold_starts,
+                warm_starts: ins.warm_starts,
+                busy_cycles: ins.busy_cycles,
+                peak_queue_depth: ins.peak_queue_depth,
+                batch_pj: ins.batch_pj,
+                idle_pj: ins.idle_pj,
+                warm_saving_pj: ins.warm_saving_pj,
+                gated_off: ins.gated_off,
+                latency_ms,
+                latency_cycles_hist: ins.hist.clone(),
+            });
+        }
+        // Fleet percentiles off the merged histogram's bucket upper
+        // bounds — exact to within one log2 bucket, never re-sorting
+        // raw samples across instances.
+        let pct = |p: f64| {
+            hist.quantile_upper(p)
+                .map(|c| c as f64 / self.clock_hz * 1.0e3)
+                .unwrap_or(0.0)
+        };
+        let latency_ms =
+            Summary::merge(&parts, [pct(50.0), pct(95.0), pct(99.0)]);
+
+        let report = FleetReport {
+            profile: self.profile.clone(),
+            policy: self.spec.policy,
+            spec: self.spec.clone(),
+            clock_hz: self.clock_hz,
+            horizon_cycles: self.horizon,
+            arrivals: self.arrivals,
+            served: per_instance.iter().map(|i| i.served).sum(),
+            queued: per_instance.iter().map(|i| i.queued).sum(),
+            shed: 0,
+            batches: per_instance.iter().map(|i| i.batches).sum(),
+            slo_violations: self
+                .inst
+                .iter()
+                .map(|i| i.slo_violations)
+                .sum(),
+            cold_starts: per_instance
+                .iter()
+                .map(|i| i.cold_starts)
+                .sum(),
+            warm_starts: per_instance
+                .iter()
+                .map(|i| i.warm_starts)
+                .sum(),
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            peak_active: self.peak_active,
+            gated_off_instances: per_instance
+                .iter()
+                .filter(|i| i.gated_off)
+                .count() as u64,
+            batch_pj: per_instance.iter().map(|i| i.batch_pj).sum(),
+            idle_pj: per_instance.iter().map(|i| i.idle_pj).sum(),
+            warm_saving_pj: per_instance
+                .iter()
+                .map(|i| i.warm_saving_pj)
+                .sum(),
+            latency_ms,
+            latency_cycles_hist: hist,
+            per_instance,
+        };
+        debug_assert!(report.conserves(), "fleet conservation broke");
+        report
+    }
+
+    fn event(&mut self, i: usize, t: u64) {
+        match self.inst[i].busy_until {
+            Some(done) => {
+                debug_assert_eq!(done, t);
+                self.complete(i, t);
+            }
+            None => self.dispatch(i, t),
+        }
+    }
+}

@@ -20,7 +20,10 @@
 //!   On top of it, [`traffic`] is the deterministic serving simulator:
 //!   seeded arrival processes on a virtual cycle clock, break-even idle
 //!   power management, SLO-aware reports, and a serving-aware DSE
-//!   re-ranking pass.  The [`faults`] module injects seeded hardware
+//!   re-ranking pass; [`fleet`] shards that simulator across N
+//!   (possibly heterogeneous) accelerator instances with pluggable
+//!   dispatch policies and elastic scaling, where the break-even rule
+//!   gates whole accelerators off.  The [`faults`] module injects seeded hardware
 //!   misbehavior (wake failures, DMA degradation, thermal throttle,
 //!   queue drops/duplicates) into that stack and carries the
 //!   resilience policies — bounded queues, timeouts + retries, all-on
@@ -54,6 +57,7 @@ pub mod config;
 pub mod scenario;
 pub mod faults;
 pub mod traffic;
+pub mod fleet;
 pub mod telemetry;
 pub mod report;
 pub mod runtime;

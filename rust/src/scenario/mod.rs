@@ -39,6 +39,7 @@ use crate::config::toml::TomlDoc;
 use crate::error::{Error, Result};
 use crate::faults::FaultPlan;
 use crate::memsim::cacti::Technology;
+use crate::fleet::{DispatchPolicy, FleetSpec};
 use crate::traffic::{ArrivalPattern, TrafficProfile};
 
 // The time-policy value types live with the Timeline IR (the one place
@@ -145,6 +146,10 @@ pub struct Scenario {
     /// the fault-free evaluators ignore it).  `None` = no `[faults]`
     /// section in the TOML form.
     pub faults: Option<FaultPlan>,
+    /// Optional fleet shape (`capstore fleet` consumes it; everything
+    /// single-instance ignores it).  `None` = no `[fleet]` section in
+    /// the TOML form.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl Default for Scenario {
@@ -161,6 +166,7 @@ impl Default for Scenario {
             dma: DmaPolicy::default(),
             traffic: None,
             faults: None,
+            fleet: None,
         }
     }
 }
@@ -183,6 +189,7 @@ impl Scenario {
             dma: DmaChoice::Policy(self.dma),
             traffic: self.traffic,
             faults: self.faults,
+            fleet: self.fleet,
         }
     }
 
@@ -268,6 +275,22 @@ impl Scenario {
             out.push('\n');
             out.push_str(&f.to_toml_section());
         }
+        if let Some(f) = &self.fleet {
+            out.push_str(&format!(
+                "\n\
+                 [fleet]\n\
+                 instances = {}\n\
+                 policy = \"{}\"\n\
+                 elastic = {}\n\
+                 scale_up_depth = {}\n\
+                 min_active = {}\n",
+                f.instances,
+                f.policy.label(),
+                f.elastic,
+                f.scale_up_depth,
+                f.min_active
+            ));
+        }
         out
     }
 
@@ -317,6 +340,23 @@ pub(crate) fn want_u64(doc: &TomlDoc, section: &str, key: &str) -> Result<Option
             Error::Config(format!(
                 "scenario file: `[{section}] {key}` must be a \
                  non-negative integer, got {v:?}"
+            ))
+        }),
+    }
+}
+
+/// [`want_str`] for boolean keys.
+pub(crate) fn want_bool(
+    doc: &TomlDoc,
+    section: &str,
+    key: &str,
+) -> Result<Option<bool>> {
+    match doc.get(section, key) {
+        None => Ok(None),
+        Some(v) => v.as_bool().map(Some).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario file: `[{section}] {key}` must be a boolean, \
+                 got {v:?}"
             ))
         }),
     }
@@ -399,6 +439,7 @@ pub struct ScenarioBuilder {
     dma: DmaChoice,
     traffic: Option<TrafficProfile>,
     faults: Option<FaultPlan>,
+    fleet: Option<FleetSpec>,
 }
 
 impl Default for ScenarioBuilder {
@@ -504,6 +545,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach (or replace) the fleet shape — validated in
+    /// [`build`](Self::build).
+    pub fn fleet(mut self, spec: FleetSpec) -> Self {
+        self.fleet = Some(spec);
+        self
+    }
+
     /// Apply a scenario TOML document on top of the builder's current
     /// state: keys present in the document override, absent keys keep
     /// whatever the builder already holds.  This is what lets the CLI
@@ -529,6 +577,11 @@ impl ScenarioBuilder {
             ("traffic", "seed"),
             ("traffic", "duration_secs"),
             ("traffic", "slo_ms"),
+            ("fleet", "instances"),
+            ("fleet", "policy"),
+            ("fleet", "elastic"),
+            ("fleet", "scale_up_depth"),
+            ("fleet", "min_active"),
             // [faults] mirrors FaultPlan::KNOWN_KEYS; a sync test
             // below keeps the two lists from drifting apart
             ("faults", "seed"),
@@ -619,6 +672,33 @@ impl ScenarioBuilder {
             let base = self.faults.take().unwrap_or_default();
             self.faults = Some(base.overlay_toml(doc)?);
         }
+        if doc.sections.contains_key("fleet") {
+            // a present section activates the fleet; absent keys keep
+            // the builder's current spec (or the defaults)
+            let mut f = self.fleet.take().unwrap_or_default();
+            if let Some(v) = want_u64(doc, "fleet", "instances")? {
+                f.instances = v as usize;
+            }
+            if let Some(v) = want_str(doc, "fleet", "policy")? {
+                f.policy =
+                    DispatchPolicy::by_name(v).ok_or_else(|| {
+                        Error::Config(format!(
+                            "unknown fleet policy {v:?} (want one of {})",
+                            DispatchPolicy::names().join(", ")
+                        ))
+                    })?;
+            }
+            if let Some(v) = want_bool(doc, "fleet", "elastic")? {
+                f.elastic = v;
+            }
+            if let Some(v) = want_u64(doc, "fleet", "scale_up_depth")? {
+                f.scale_up_depth = v;
+            }
+            if let Some(v) = want_u64(doc, "fleet", "min_active")? {
+                f.min_active = v as usize;
+            }
+            self.fleet = Some(f);
+        }
         Ok(self)
     }
 
@@ -679,6 +759,9 @@ impl ScenarioBuilder {
         if let Some(f) = &self.faults {
             f.validate()?;
         }
+        if let Some(f) = &self.fleet {
+            f.validate()?;
+        }
         Ok(Scenario {
             network,
             tech,
@@ -689,6 +772,7 @@ impl ScenarioBuilder {
             dma,
             traffic: self.traffic,
             faults: self.faults,
+            fleet: self.fleet,
         })
     }
 }
@@ -901,6 +985,69 @@ mod tests {
         assert_eq!(t.seed, 3);
         assert_eq!(t.pattern, ArrivalPattern::Poisson); // default kept
         assert_eq!(t.slo_ms, TrafficProfile::default().slo_ms);
+    }
+
+    #[test]
+    fn fleet_section_round_trips() {
+        let sc = Scenario::builder()
+            .fleet(FleetSpec {
+                instances: 4,
+                policy: DispatchPolicy::Packing,
+                elastic: true,
+                scale_up_depth: 16,
+                min_active: 2,
+            })
+            .build()
+            .unwrap();
+        assert!(sc.to_toml().contains("[fleet]"));
+        assert!(sc.to_toml().contains("policy = \"packing\""));
+        let back = Scenario::parse(&sc.to_toml()).unwrap();
+        assert_eq!(back.fleet, sc.fleet);
+
+        // no [fleet] section => no spec, and no section emitted
+        let plain = Scenario::default();
+        assert!(plain.fleet.is_none());
+        assert!(!plain.to_toml().contains("[fleet]"));
+    }
+
+    #[test]
+    fn fleet_overlay_is_strict() {
+        // misspelled keys, wrong types, unknown policies, invalid
+        // shapes: every one is an error, never silently ignored
+        for bad in [
+            "[fleet]\ninstance = 4\n", // misspelled instances
+            "[fleet]\ninstances = \"four\"\n",
+            "[fleet]\npolicy = \"frobnicate\"\n",
+            "[fleet]\nelastic = 7\n",
+            "[fleet]\nscale_up_depth = 0\n",
+            "[fleet]\ninstances = 0\n",
+            "[fleet]\ninstances = 2\nmin_active = 3\nelastic = true\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            let got = Scenario::builder()
+                .overlay_toml(&doc)
+                .and_then(|b| b.build());
+            assert!(got.is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn fleet_overlay_keeps_unset_keys() {
+        // a bare [fleet] section activates the default shape; present
+        // keys override it field by field
+        let doc =
+            TomlDoc::parse("[fleet]\ninstances = 8\nelastic = true\n")
+                .unwrap();
+        let sc = Scenario::builder()
+            .overlay_toml(&doc)
+            .unwrap()
+            .build()
+            .unwrap();
+        let f = sc.fleet.expect("section present => spec set");
+        assert_eq!(f.instances, 8);
+        assert!(f.elastic);
+        assert_eq!(f.policy, FleetSpec::default().policy);
+        assert_eq!(f.scale_up_depth, FleetSpec::default().scale_up_depth);
     }
 
     #[test]

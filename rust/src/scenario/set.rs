@@ -106,6 +106,7 @@ impl ScenarioSet {
                                         dma,
                                         traffic: None,
                                         faults: None,
+                                        fleet: None,
                                     });
                                 }
                             }

@@ -7,12 +7,13 @@
 //! (sorted — renders deterministically) with one snapshot type that
 //! both the `--profile` flag and the tests consume.  Names are dotted
 //! and stable: `timeline.builds`, `dse.priced_points`, `traffic.shed`,
-//! `faults.wake_retries`, `cache.hits` — the full reference table
-//! lives in `docs/USER_GUIDE.md`.
+//! `faults.wake_retries`, `fleet.scale_ups`, `cache.hits` — the full
+//! reference table lives in `docs/USER_GUIDE.md`.
 
 use std::collections::BTreeMap;
 
 use crate::dse::SweepStats;
+use crate::fleet::FleetReport;
 use crate::report::Table;
 use crate::traffic::TrafficReport;
 use crate::util::json::Json;
@@ -91,6 +92,27 @@ impl CounterRegistry {
         // every failed attempt costs one retry — the name the ISSUE's
         // counter table standardizes on
         r.set("faults.wake_retries", s.wake_failures);
+        r
+    }
+
+    /// The `fleet.*` counters of one fleet run.  Covers the fleet
+    /// conservation buckets (`arrivals == served + queued + shed`) plus
+    /// the dispatch/elasticity tallies.
+    pub fn from_fleet_report(rep: &FleetReport) -> CounterRegistry {
+        let mut r = CounterRegistry::new();
+        r.set("fleet.instances", rep.spec.instances as u64);
+        r.set("fleet.arrivals", rep.arrivals);
+        r.set("fleet.served", rep.served);
+        r.set("fleet.queued", rep.queued);
+        r.set("fleet.shed", rep.shed);
+        r.set("fleet.batches", rep.batches);
+        r.set("fleet.cold_starts", rep.cold_starts);
+        r.set("fleet.warm_starts", rep.warm_starts);
+        r.set("fleet.slo_violations", rep.slo_violations);
+        r.set("fleet.scale_ups", rep.scale_ups);
+        r.set("fleet.scale_downs", rep.scale_downs);
+        r.set("fleet.peak_active", rep.peak_active as u64);
+        r.set("fleet.gated_off_instances", rep.gated_off_instances);
         r
     }
 }

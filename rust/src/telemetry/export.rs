@@ -245,6 +245,87 @@ impl<'a> TrafficTrace<'a> {
     }
 }
 
+/// The fleet simulator's recording hooks: a fleet-level track for the
+/// request arcs and the active-set counter, plus one track pair
+/// (batches + queue) *per instance*, so a heterogeneous fleet's load
+/// placement is visible at a glance in the trace viewer.  Held as
+/// `Option<FleetTrace>` by the fleet loop — `None` is the zero-cost
+/// default.
+pub struct FleetTrace<'a> {
+    sink: &'a mut TraceSink,
+    requests: TrackId,
+    active: TrackId,
+    /// `(batches, queue)` per instance, in instance order.
+    instances: Vec<(TrackId, TrackId)>,
+}
+
+impl<'a> FleetTrace<'a> {
+    pub fn new(sink: &'a mut TraceSink, n: usize) -> FleetTrace<'a> {
+        let requests = sink.track("fleet", "requests");
+        let active = sink.track("fleet", "active");
+        let instances = (0..n)
+            .map(|i| {
+                let process = format!("fleet:i{i}");
+                (
+                    sink.track(&process, "batches"),
+                    sink.track(&process, "queue"),
+                )
+            })
+            .collect();
+        FleetTrace { sink, requests, active, instances }
+    }
+
+    /// One request's arrival→completion arc begins (async span).
+    pub fn arrival(&mut self, id: u64, t: u64) {
+        self.sink.async_begin(self.requests, "request", id, t, vec![]);
+    }
+
+    /// The request's batch finished serving; the arc closes.
+    pub fn complete(&mut self, id: u64, t: u64, wait_cycles: u64) {
+        self.sink.async_end(
+            self.requests,
+            "request",
+            id,
+            t,
+            vec![("latency_cycles", Arg::U64(wait_cycles))],
+        );
+    }
+
+    /// Instance `i` serves a batch over `[t, done)`.
+    pub fn batch(
+        &mut self,
+        i: usize,
+        t: u64,
+        done: u64,
+        size: u64,
+        cold: bool,
+        pj: f64,
+    ) {
+        self.sink.span(
+            self.instances[i].0,
+            if cold { "batch (cold)" } else { "batch" },
+            t,
+            done,
+            vec![("size", Arg::U64(size)), ("energy_pj", Arg::F64(pj))],
+        );
+    }
+
+    /// Instance `i`'s queue-depth counter sample at `t`.
+    pub fn queue_depth(&mut self, i: usize, t: u64, depth: u64) {
+        self.sink.counter(
+            self.instances[i].1,
+            "depth",
+            t,
+            depth as f64,
+        );
+    }
+
+    /// Active-set counter sample (elastic scale-up/down edges).
+    pub fn active_set(&mut self, t: u64, n: u64) {
+        self.sink.counter(self.active, "instances", t, n as f64);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -38,6 +38,6 @@ pub mod profile;
 pub mod sink;
 
 pub use counters::{CounterRegistry, CounterSnapshot};
-pub use export::{trace_timeline, trace_tiles, TrafficTrace};
+pub use export::{trace_timeline, trace_tiles, FleetTrace, TrafficTrace};
 pub use profile::{PhaseSpan, SweepProfile};
 pub use sink::{Arg, Event, EventKind, TraceSink, TrackId};

@@ -47,8 +47,8 @@ pub mod sim;
 
 pub use arrivals::{ArrivalGen, ArrivalPattern};
 pub use rank::{
-    rank_for_traffic, rank_for_traffic_under, TrafficWinner,
-    SLO_MISS_BUDGET,
+    rank_fleet, rank_for_traffic, rank_for_traffic_under, FleetWinner,
+    TrafficWinner, SLO_MISS_BUDGET,
 };
 pub use sim::{
     simulate, simulate_traced, simulate_with, DispatchRecord,

@@ -15,8 +15,11 @@
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::dse::DesignPoint;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::faults::{FaultPlan, ResiliencePolicy};
+use crate::fleet::{
+    simulate_fleet, DispatchPolicy, FleetReport, FleetSpec,
+};
 use crate::scenario::{Evaluator, Scenario};
 use crate::traffic::sim::{simulate_with, ServiceModel, TrafficReport};
 use crate::traffic::TrafficProfile;
@@ -79,8 +82,14 @@ pub fn rank_for_traffic_under(
     resilience: &ResiliencePolicy,
 ) -> Result<Vec<TrafficWinner>> {
     if front.is_empty() {
-        return Err(crate::error::Error::Config(
+        return Err(Error::Config(
             "serving-aware ranking needs a non-empty Pareto front".into(),
+        ));
+    }
+    if profiles.is_empty() {
+        return Err(Error::Config(
+            "serving-aware ranking needs at least one traffic profile"
+                .into(),
         ));
     }
     // service models are profile-independent: build once per point
@@ -134,7 +143,16 @@ pub fn rank_for_traffic_under(
                 best = Some((i, report, feasible));
             }
         }
-        let (i, report, feasible) = best.expect("non-empty front");
+        // the front is non-empty (checked above), so a winner always
+        // exists — but a degenerate candidate set must surface as a
+        // typed error, never a panic
+        let (i, report, feasible) = best.ok_or_else(|| {
+            Error::Config(
+                "serving-aware ranking produced no candidate — \
+                 every front point failed to simulate"
+                    .into(),
+            )
+        })?;
         out.push(TrafficWinner {
             profile: profile.clone(),
             point: front[i].clone(),
@@ -143,6 +161,154 @@ pub fn rank_for_traffic_under(
         });
     }
     Ok(out)
+}
+
+/// The fleet-level re-ranking outcome: the chosen design *mix*, the
+/// dispatch policy, and the winning run.
+#[derive(Debug, Clone)]
+pub struct FleetWinner {
+    pub profile: TrafficProfile,
+    /// The chosen design per instance — `mix[i]` serves instance `i`.
+    /// Homogeneous winners repeat one front point; heterogeneous
+    /// winners blend two.
+    pub mix: Vec<DesignPoint>,
+    /// The winning dispatch policy.
+    pub policy: DispatchPolicy,
+    /// Its fleet simulation under the profile.
+    pub report: FleetReport,
+    /// Whether the winner met the SLO budget.
+    pub feasible: bool,
+}
+
+/// Fleet-level DSE: choose the design mix + dispatch policy that
+/// minimizes SLO-feasible energy per served inference for one
+/// profile, reusing a `dse` Pareto front as the candidate pool.
+///
+/// The candidate set is deliberately small and deterministic:
+///
+/// * every *homogeneous* fleet (`spec.instances` copies of each front
+///   point), and
+/// * when the front has two or more points, the *heterogeneous*
+///   prefix blends `k x A + (n-k) x B` of the two lowest-busy-energy
+///   points (k = 1..n) — under power-aware packing the low-index
+///   prefix carries the load, so blending lets a throughput design
+///   absorb traffic while a low-leakage design sleeps in the tail;
+///
+/// each crossed with every [`DispatchPolicy`].  Selection mirrors
+/// [`rank_for_traffic`]: SLO-feasible minimum energy per served
+/// inference, then the least-violating fallback; ties keep the
+/// earliest candidate, so the result is reproducible bit for bit.
+pub fn rank_fleet(
+    ev: &Evaluator,
+    base: &Scenario,
+    front: &[DesignPoint],
+    profile: &TrafficProfile,
+    policy: &BatchPolicy,
+    spec: &FleetSpec,
+) -> Result<FleetWinner> {
+    if front.is_empty() {
+        return Err(Error::Config(
+            "fleet ranking needs a non-empty Pareto front".into(),
+        ));
+    }
+    spec.validate()?;
+    let n = spec.instances;
+
+    // service models build once per front point, outside every loop
+    let mut models = Vec::with_capacity(front.len());
+    for p in front {
+        models.push(ServiceModel::new(
+            ev,
+            &p.scenario(base),
+            policy.max_batch,
+        )?);
+    }
+
+    // candidate mixes, as indices into `front`
+    let mut mixes: Vec<Vec<usize>> =
+        (0..front.len()).map(|i| vec![i; n]).collect();
+    if front.len() > 1 && n > 1 {
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            front[a]
+                .onchip_energy_pj
+                .partial_cmp(&front[b].onchip_energy_pj)
+                .expect("NaN-free front")
+                .then(a.cmp(&b))
+        });
+        let (a, b) = (order[0], order[1]);
+        for k in 1..n {
+            mixes.push(
+                (0..n).map(|j| if j < k { a } else { b }).collect(),
+            );
+        }
+    }
+
+    let mut best: Option<(
+        Vec<usize>,
+        DispatchPolicy,
+        FleetReport,
+        bool,
+    )> = None;
+    for mix in &mixes {
+        let fleet_models: Vec<ServiceModel> =
+            mix.iter().map(|&i| models[i].clone()).collect();
+        for dispatch in DispatchPolicy::all() {
+            let candidate =
+                FleetSpec { policy: dispatch, ..spec.clone() };
+            let report = simulate_fleet(
+                &fleet_models,
+                profile,
+                policy,
+                &candidate,
+            )?;
+            let feasible =
+                report.slo_violation_fraction() <= SLO_MISS_BUDGET
+                    && report.served > 0;
+            let better = match &best {
+                None => true,
+                Some((_, _, cur, cur_feasible)) => {
+                    match (feasible, *cur_feasible) {
+                        (true, false) => true,
+                        (false, true) => false,
+                        (true, true) => {
+                            report.energy_uj_per_inference()
+                                < cur.energy_uj_per_inference()
+                        }
+                        (false, false) => {
+                            (
+                                report.served == 0,
+                                report.slo_violation_fraction(),
+                                report.energy_uj_per_inference(),
+                            ) < (
+                                cur.served == 0,
+                                cur.slo_violation_fraction(),
+                                cur.energy_uj_per_inference(),
+                            )
+                        }
+                    }
+                }
+            };
+            if better {
+                best =
+                    Some((mix.clone(), dispatch, report, feasible));
+            }
+        }
+    }
+    let (mix, dispatch, report, feasible) = best.ok_or_else(|| {
+        Error::Config(
+            "fleet ranking produced no candidate — every mix failed \
+             to simulate"
+                .into(),
+        )
+    })?;
+    Ok(FleetWinner {
+        profile: profile.clone(),
+        mix: mix.iter().map(|&i| front[i].clone()).collect(),
+        policy: dispatch,
+        report,
+        feasible,
+    })
 }
 
 #[cfg(test)]
@@ -186,5 +352,68 @@ mod tests {
         assert!(w.feasible);
         assert!(front.iter().any(|p| p.bit_eq(&w.point)));
         assert!(w.report.served > 0);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_typed_errors_not_panics() {
+        let ev = Evaluator::new();
+        let base = Scenario::default();
+        let pol = default_policy(4);
+        let profile = TrafficProfile::default();
+
+        // empty front: typed error from both entry points
+        let e = rank_for_traffic(&ev, &base, &[], &[profile.clone()], &pol)
+            .unwrap_err();
+        assert!(e.to_string().contains("non-empty Pareto front"), "{e}");
+        let e = rank_fleet(
+            &ev,
+            &base,
+            &[],
+            &profile,
+            &pol,
+            &crate::fleet::FleetSpec::default(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("non-empty Pareto front"), "{e}");
+
+        // empty profile list: typed error, not an empty Ok
+        let ex = Explorer::new(CapsNetConfig::mnist());
+        let front = Explorer::pareto(&ex.sweep().unwrap());
+        let e = rank_for_traffic(&ev, &base, &front, &[], &pol)
+            .unwrap_err();
+        assert!(e.to_string().contains("traffic profile"), "{e}");
+    }
+
+    #[test]
+    fn zero_feasible_designs_fall_back_without_panicking() {
+        // an SLO no design can meet: every candidate violates, and the
+        // ranking returns the least-violating winner flagged
+        // infeasible instead of panicking
+        let ex = Explorer::new(CapsNetConfig::mnist());
+        let front = Explorer::pareto(&ex.sweep().unwrap());
+        let ev = Evaluator::new();
+        let base = Scenario::default();
+        let svc0 = ServiceModel::new(&ev, &base, 4).unwrap();
+        let rate = 0.5 * svc0.clock_hz
+            / svc0.per_batch[0].latency_cycles as f64;
+        let profile = TrafficProfile {
+            pattern: ArrivalPattern::Poisson,
+            rate_per_sec: rate,
+            seed: 7,
+            duration_secs: 50.0 / rate,
+            // far below any single-batch service time
+            slo_ms: 1.0e-9,
+        };
+        let winners = rank_for_traffic(
+            &ev,
+            &base,
+            &front,
+            &[profile],
+            &default_policy(4),
+        )
+        .unwrap();
+        assert_eq!(winners.len(), 1);
+        assert!(!winners[0].feasible);
+        assert!(winners[0].report.served > 0);
     }
 }

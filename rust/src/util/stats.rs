@@ -40,6 +40,60 @@ impl Summary {
             stddev: var.sqrt(),
         })
     }
+
+    /// Deterministically pool per-shard summaries of *disjoint*
+    /// samples — the fleet report's merge path, which never re-sorts
+    /// raw samples across instances.
+    ///
+    /// `n`, `min`, and `max` pool exactly; `mean` and `stddev` compose
+    /// through the shard moments (count-weighted mean, law of total
+    /// variance).  The order statistics (`median`, `p95`, `p99`) are
+    /// *not* recoverable from shard summaries alone, so the caller
+    /// supplies them — typically the bucket upper bounds of a merged
+    /// [`LogHistogram`], which are exact to within one log2 bucket.
+    /// Returns `None` when every shard is empty.
+    pub fn merge(
+        parts: &[Summary],
+        [median, p95, p99]: [f64; 3],
+    ) -> Option<Summary> {
+        let parts: Vec<&Summary> =
+            parts.iter().filter(|s| s.n > 0).collect();
+        let n: usize = parts.iter().map(|s| s.n).sum();
+        if n == 0 {
+            return None;
+        }
+        let min =
+            parts.iter().map(|s| s.min).fold(f64::INFINITY, f64::min);
+        let max = parts
+            .iter()
+            .map(|s| s.max)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mean = parts
+            .iter()
+            .map(|s| s.mean * s.n as f64)
+            .sum::<f64>()
+            / n as f64;
+        // E[Var] + Var[E]: each shard contributes its own variance
+        // plus its mean's squared distance from the pooled mean.
+        let var = parts
+            .iter()
+            .map(|s| {
+                let d = s.mean - mean;
+                (s.stddev * s.stddev + d * d) * s.n as f64
+            })
+            .sum::<f64>()
+            / n as f64;
+        Some(Summary {
+            n,
+            min,
+            max,
+            mean,
+            median,
+            p95,
+            p99,
+            stddev: var.sqrt(),
+        })
+    }
 }
 
 /// Nearest-rank percentile on a pre-sorted slice.
@@ -313,5 +367,53 @@ mod tests {
         let j = h.to_json().render();
         assert!(j.starts_with("[{"));
         assert!(j.contains("\"count\":3"));
+    }
+
+    #[test]
+    fn prop_merge_equals_pooled() {
+        // The fleet aggregation contract: splitting one sample into
+        // disjoint shards, summarizing each, and merging must agree
+        // with summarizing the pooled sample — exactly for n/min/max
+        // (and the merged histogram bit-for-bit), to float tolerance
+        // for the composed moments (mean, stddev).
+        use crate::testing::{check, Config};
+        check(Config::default().cases(64), |rng| {
+            let shards = rng.range(1, 6) as usize;
+            let mut all: Vec<f64> = Vec::new();
+            let mut parts: Vec<Summary> = Vec::new();
+            let mut merged_hist = LogHistogram::new();
+            let mut pooled_hist = LogHistogram::new();
+            for _ in 0..shards {
+                let n = rng.range(0, 60) as usize;
+                let samples: Vec<f64> =
+                    (0..n).map(|_| rng.f64_range(0.0, 5000.0)).collect();
+                let mut hist = LogHistogram::new();
+                for &s in &samples {
+                    hist.record(s as u64);
+                    pooled_hist.record(s as u64);
+                }
+                merged_hist.merge(&hist);
+                if let Some(s) = Summary::from_samples(&samples) {
+                    parts.push(s);
+                }
+                all.extend(samples);
+            }
+            let pooled = Summary::from_samples(&all);
+            let merged = Summary::merge(&parts, [0.0, 0.0, 0.0]);
+            assert_eq!(merged_hist, pooled_hist, "hist merge != pooled");
+            match (pooled, merged) {
+                (None, None) => {}
+                (Some(p), Some(m)) => {
+                    assert_eq!(m.n, p.n);
+                    assert_eq!(m.min.to_bits(), p.min.to_bits());
+                    assert_eq!(m.max.to_bits(), p.max.to_bits());
+                    let tol = 1.0e-9 * p.mean.abs().max(1.0);
+                    assert!((m.mean - p.mean).abs() <= tol);
+                    let tol = 1.0e-6 * p.stddev.abs().max(1.0);
+                    assert!((m.stddev - p.stddev).abs() <= tol);
+                }
+                (p, m) => panic!("pooled {p:?} vs merged {m:?}"),
+            }
+        });
     }
 }

@@ -4,9 +4,9 @@
 //! property (check-pass implies the evaluator succeeds).
 //!
 //! Each `capXXX_*.toml` fixture triggers exactly one diagnostic code;
-//! CAP005 has no static fixture because its trigger rate depends on
-//! the derived break-even point, so it is exercised programmatically
-//! from `analysis::check::scenario_bounds`.
+//! CAP005 and CAP013 have no static fixture because their triggers
+//! depend on the derived break-even point, so they are exercised
+//! programmatically from `analysis::check::scenario_bounds`.
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -16,6 +16,7 @@ use capstore::analysis::check::{check_scenario, scenario_bounds};
 use capstore::analysis::diag;
 use capstore::config::toml::TomlDoc;
 use capstore::dse::SweepSpace;
+use capstore::fleet::FleetSpec;
 use capstore::scenario::{Evaluator, Scenario};
 use capstore::timeline::Timeline;
 use capstore::traffic::TrafficProfile;
@@ -85,6 +86,7 @@ fn fixtures_emit_their_codes_with_the_right_exit_status() {
         ("cap008_empty_window.toml", "CAP008", false),
         ("cap009_short_lookahead.toml", "CAP009", false),
         ("cap010_wake_watchdog.toml", "CAP010", false),
+        ("cap012_fleet_overload.toml", "CAP012", true),
     ];
     for (file, code, is_error) in cases {
         let (ok, doc) = check_subprocess(&fixture_dir().join(file));
@@ -129,6 +131,78 @@ fn cap005_fires_when_the_idle_gap_is_below_break_even() {
     assert!(report.passed(), "CAP005 is a warning, not an error");
 }
 
+/// CAP013 trigger scenario: an elastic fleet whose simulated window is
+/// shorter than the fleet-wide break-even budget, sized from the
+/// derived bounds so no error-severity code co-fires.
+fn short_elastic_window() -> Scenario {
+    let base = Scenario::default();
+    let (timing, gb) = scenario_bounds(&base).unwrap();
+    let be = gb.break_even_cycles.expect("default organization is gated");
+    // instances^2 >= 4 * service / break_even keeps the arrival rate
+    // needed to dodge CAP008 below the fleet capacity (no CAP012).
+    let instances = 2
+        * ((timing.service_cycles as f64 / be as f64).sqrt().ceil()
+            as usize
+            + 1);
+    let budget = be as f64 * instances as f64;
+    let horizon = budget / 2.0; // cycles: strictly inside the budget
+    let duration_secs = horizon / timing.clock_hz;
+    Scenario {
+        traffic: Some(TrafficProfile {
+            rate_per_sec: 2.0 / duration_secs, // two expected arrivals
+            duration_secs,
+            slo_ms: 1.0e3,
+            ..Default::default()
+        }),
+        fleet: Some(FleetSpec {
+            instances,
+            elastic: true,
+            min_active: 1,
+            ..Default::default()
+        }),
+        ..base
+    }
+}
+
+#[test]
+fn cap013_fires_when_elastic_wakes_cannot_amortize() {
+    let report = check_scenario(&short_elastic_window(), None).unwrap();
+    let codes: Vec<&str> =
+        report.diagnostics.iter().map(|d| d.code).collect();
+    assert!(codes.contains(&"CAP013"), "{codes:?}");
+    assert!(report.passed(), "CAP013 is a warning, not an error");
+}
+
+#[test]
+fn fleet_scenarios_report_cap012_instead_of_cap004() {
+    // The same overload that fires CAP004 standalone must fire CAP012
+    // (and only CAP012) once a fleet is declared: the fleet-wide bound
+    // supersedes the single-instance one.
+    let overload = TrafficProfile {
+        rate_per_sec: 5.0e4,
+        slo_ms: 50.0,
+        ..Default::default()
+    };
+    let solo = Scenario {
+        traffic: Some(overload.clone()),
+        ..Scenario::default()
+    };
+    let report = check_scenario(&solo, None).unwrap();
+    assert!(report.diagnostics.iter().any(|d| d.code == "CAP004"));
+
+    let fleet = Scenario {
+        traffic: Some(overload),
+        fleet: Some(FleetSpec { instances: 4, ..Default::default() }),
+        ..Scenario::default()
+    };
+    let report = check_scenario(&fleet, None).unwrap();
+    let codes: Vec<&str> =
+        report.diagnostics.iter().map(|d| d.code).collect();
+    assert!(codes.contains(&"CAP012"), "{codes:?}");
+    assert!(!codes.contains(&"CAP004"), "{codes:?}");
+    assert!(!report.passed(), "CAP012 is an error");
+}
+
 #[test]
 fn every_registered_code_is_exercised() {
     let mut seen = BTreeSet::new();
@@ -166,6 +240,14 @@ fn every_registered_code_is_exercised() {
         ..base
     };
     for d in check_scenario(&sc, None).unwrap().diagnostics {
+        seen.insert(d.code.to_string());
+    }
+
+    // CAP013: programmatic (see cap013_fires_when_...)
+    for d in check_scenario(&short_elastic_window(), None)
+        .unwrap()
+        .diagnostics
+    {
         seen.insert(d.code.to_string());
     }
 

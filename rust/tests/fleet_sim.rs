@@ -1,0 +1,375 @@
+//! End-to-end invariants of the fleet layer:
+//!
+//! 1. **byte determinism** — the same seed renders the same
+//!    `FleetReport` JSON bytes, twice, from independently built
+//!    service models, for every dispatch policy;
+//! 2. **conservation under saturation** — `arrivals == served +
+//!    queued + shed` holds across arrival patterns even when the
+//!    offered load far exceeds the fleet's capacity;
+//! 3. **winner shift** — at a rate that saturates one instance but
+//!    not the fleet, power-aware packing gates whole instances off
+//!    and beats round-robin on energy per served inference, while JSQ
+//!    and packing genuinely disagree;
+//! 4. **fleet DSE acceptance** — `rank_fleet` strictly beats N copies
+//!    of the single-design `rank_for_traffic` winner under
+//!    round-robin, byte-identically across repeated seeded runs;
+//! 5. **zero overhead** — the fleet event loop builds no `Timeline`
+//!    IRs, traced or untraced, and tracing never perturbs the report.
+
+use std::time::Duration;
+
+use capstore::coordinator::BatchPolicy;
+use capstore::dse::Explorer;
+use capstore::fleet::{
+    simulate_fleet, simulate_fleet_traced, DispatchPolicy, FleetSpec,
+};
+use capstore::scenario::{Evaluator, Scenario};
+use capstore::telemetry::{perfetto, TraceSink};
+use capstore::timeline::Timeline;
+use capstore::traffic::{
+    rank_fleet, rank_for_traffic, ArrivalPattern, ServiceModel,
+    TrafficProfile,
+};
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+}
+
+fn profile(rate: f64, duration: f64) -> TrafficProfile {
+    TrafficProfile {
+        pattern: ArrivalPattern::Poisson,
+        rate_per_sec: rate,
+        seed: 7,
+        duration_secs: duration,
+        slo_ms: 50.0,
+    }
+}
+
+fn homogeneous(n: usize) -> Vec<ServiceModel> {
+    let svc = ServiceModel::new(
+        &Evaluator::new(),
+        &Scenario::default(),
+        policy().max_batch,
+    )
+    .unwrap();
+    vec![svc; n]
+}
+
+#[test]
+fn same_seed_is_byte_identical_for_every_policy() {
+    for dispatch in DispatchPolicy::all() {
+        let run = || {
+            // build everything from scratch: determinism must not
+            // depend on reusing a warm ServiceModel
+            let spec = FleetSpec {
+                instances: 3,
+                policy: dispatch,
+                elastic: true,
+                scale_up_depth: 4,
+                min_active: 1,
+            };
+            let report = simulate_fleet(
+                &homogeneous(3),
+                &profile(2000.0, 0.05),
+                &policy(),
+                &spec,
+            )
+            .unwrap();
+            assert!(report.conserves(), "{dispatch:?}");
+            report.to_json().render()
+        };
+        assert_eq!(run(), run(), "{dispatch:?} is not deterministic");
+    }
+}
+
+#[test]
+fn conservation_holds_under_saturation() {
+    // ~2.5x the whole fleet's capacity: queues must grow, yet every
+    // arrival is accounted for at the horizon.
+    for pattern in [
+        ArrivalPattern::Poisson,
+        ArrivalPattern::Bursty,
+        ArrivalPattern::Diurnal,
+    ] {
+        for dispatch in DispatchPolicy::all() {
+            let prof = TrafficProfile {
+                pattern,
+                ..profile(5000.0, 0.05)
+            };
+            let spec = FleetSpec {
+                instances: 2,
+                policy: dispatch,
+                ..FleetSpec::default()
+            };
+            let report =
+                simulate_fleet(&homogeneous(2), &prof, &policy(), &spec)
+                    .unwrap();
+            assert!(
+                report.conserves(),
+                "{pattern:?}/{dispatch:?}: {} != {} + {} + {}",
+                report.arrivals,
+                report.served,
+                report.queued,
+                report.shed,
+            );
+            assert!(report.arrivals > 0);
+            assert!(
+                report.queued > 0,
+                "{pattern:?}/{dispatch:?}: saturation left no backlog"
+            );
+        }
+    }
+}
+
+#[test]
+fn packing_gates_instances_off_and_beats_round_robin() {
+    // One instance saturates around ~1k inf/s; 1.5x that across a
+    // fleet of 4 leaves the fleet under-committed.  Round-robin keeps
+    // every instance lukewarm; packing concentrates the load so the
+    // tail sleeps whole windows past break-even.
+    let models = homogeneous(4);
+    let prof = profile(1500.0, 0.1);
+    let run = |dispatch| {
+        let spec = FleetSpec {
+            instances: 4,
+            policy: dispatch,
+            ..FleetSpec::default()
+        };
+        simulate_fleet(&models, &prof, &policy(), &spec).unwrap()
+    };
+    let rr = run(DispatchPolicy::RoundRobin);
+    let jsq = run(DispatchPolicy::Jsq);
+    let packing = run(DispatchPolicy::Packing);
+
+    assert!(
+        packing.gated_off_instances >= 1,
+        "packing gated off {} of 4 instances",
+        packing.gated_off_instances
+    );
+    assert_eq!(
+        rr.gated_off_instances, 0,
+        "round-robin should keep every instance lukewarm"
+    );
+    assert!(
+        packing.energy_uj_per_inference()
+            < rr.energy_uj_per_inference(),
+        "packing {} µJ/inf must beat round-robin {} µJ/inf",
+        packing.energy_uj_per_inference(),
+        rr.energy_uj_per_inference(),
+    );
+    // the policies are genuinely different strategies, not aliases
+    assert_ne!(
+        jsq.to_json().render(),
+        packing.to_json().render(),
+        "JSQ and packing produced identical runs"
+    );
+}
+
+#[test]
+fn rank_fleet_beats_the_homogeneous_round_robin_baseline() {
+    // The acceptance pin: for a profile that saturates one instance
+    // but not the fleet, the fleet DSE must find a mix and/or policy
+    // strictly better than N copies of the single-design winner
+    // under round-robin — and do so byte-identically, twice.
+    let ev = Evaluator::new();
+    let base = Scenario::default();
+    let mut ex = Explorer::new(base.network.clone());
+    ex.model.tech = base.tech.technology();
+    let points = ex.sweep().unwrap();
+    let front = Explorer::pareto(&points);
+    let prof = profile(1500.0, 0.1);
+    let spec = FleetSpec { instances: 4, ..FleetSpec::default() };
+
+    // baseline: the serving-aware single-instance winner, cloned
+    // across the fleet, dispatched round-robin
+    let single = rank_for_traffic(
+        &ev,
+        &base,
+        &front,
+        std::slice::from_ref(&prof),
+        &policy(),
+    )
+    .unwrap();
+    let svc = ServiceModel::new(
+        &ev,
+        &single[0].point.scenario(&base),
+        policy().max_batch,
+    )
+    .unwrap();
+    let baseline = simulate_fleet(
+        &vec![svc; 4],
+        &prof,
+        &policy(),
+        &FleetSpec {
+            policy: DispatchPolicy::RoundRobin,
+            ..spec.clone()
+        },
+    )
+    .unwrap();
+
+    let winner =
+        rank_fleet(&ev, &base, &front, &prof, &policy(), &spec)
+            .unwrap();
+    assert!(winner.feasible, "the fleet winner must meet the SLO");
+    assert!(
+        winner.report.energy_uj_per_inference()
+            < baseline.energy_uj_per_inference(),
+        "fleet DSE {} µJ/inf does not beat the homogeneous \
+         round-robin baseline {} µJ/inf",
+        winner.report.energy_uj_per_inference(),
+        baseline.energy_uj_per_inference(),
+    );
+    let heterogeneous =
+        winner.mix.windows(2).any(|w| !w[0].bit_eq(&w[1]));
+    assert!(
+        heterogeneous || winner.policy != DispatchPolicy::RoundRobin,
+        "the winner must differ from the baseline in mix or policy"
+    );
+
+    // byte-identical across a full re-run of the ranking
+    let again =
+        rank_fleet(&ev, &base, &front, &prof, &policy(), &spec)
+            .unwrap();
+    assert_eq!(
+        winner.report.to_json().render(),
+        again.report.to_json().render(),
+        "rank_fleet is not deterministic"
+    );
+    assert_eq!(winner.policy, again.policy);
+}
+
+#[test]
+fn heterogeneous_fleets_carry_their_own_designs() {
+    let ev = Evaluator::new();
+    let base = Scenario::default();
+    let other = base
+        .clone()
+        .into_builder()
+        .organization_named("SMP")
+        .build()
+        .unwrap();
+    let a = ServiceModel::new(&ev, &base, policy().max_batch).unwrap();
+    let b = ServiceModel::new(&ev, &other, policy().max_batch).unwrap();
+    let spec = FleetSpec { instances: 2, ..FleetSpec::default() };
+    let report = simulate_fleet(
+        &[a, b],
+        &profile(2000.0, 0.02),
+        &policy(),
+        &spec,
+    )
+    .unwrap();
+    assert!(report.conserves());
+    assert_ne!(
+        report.per_instance[0].design_label,
+        report.per_instance[1].design_label,
+        "per-instance design labels must reflect the mix"
+    );
+}
+
+#[test]
+fn shape_errors_are_typed_not_panics() {
+    let models = homogeneous(2);
+    let prof = profile(1000.0, 0.01);
+    // model count must match the spec
+    let spec = FleetSpec { instances: 3, ..FleetSpec::default() };
+    assert!(
+        simulate_fleet(&models, &prof, &policy(), &spec).is_err()
+    );
+    // degenerate shapes are rejected before the loop starts
+    for bad in [
+        FleetSpec { instances: 0, ..FleetSpec::default() },
+        FleetSpec { instances: 2, min_active: 0, ..FleetSpec::default() },
+        FleetSpec { instances: 2, min_active: 3, ..FleetSpec::default() },
+        FleetSpec { scale_up_depth: 0, ..FleetSpec::default() },
+    ] {
+        assert!(
+            simulate_fleet(&models, &prof, &policy(), &bad).is_err(),
+            "{bad:?}"
+        );
+    }
+}
+
+#[test]
+fn fleet_loop_builds_no_timelines_and_tracing_is_free() {
+    let models = homogeneous(3);
+    let prof = profile(2000.0, 0.05);
+    let spec = FleetSpec {
+        instances: 3,
+        policy: DispatchPolicy::Packing,
+        elastic: true,
+        scale_up_depth: 4,
+        min_active: 1,
+    };
+
+    let before = Timeline::build_count();
+    let plain =
+        simulate_fleet(&models, &prof, &policy(), &spec).unwrap();
+    assert_eq!(
+        Timeline::build_count(),
+        before,
+        "the fleet event loop built a Timeline"
+    );
+
+    let mut sink = TraceSink::new();
+    let traced = simulate_fleet_traced(
+        &models,
+        &prof,
+        &policy(),
+        &spec,
+        Some(&mut sink),
+    )
+    .unwrap();
+    assert_eq!(
+        Timeline::build_count(),
+        before,
+        "tracing the fleet loop built a Timeline"
+    );
+    assert_eq!(
+        plain.to_json().render(),
+        traced.to_json().render(),
+        "tracing perturbed the report"
+    );
+    // the trace itself is non-trivial and deterministic
+    let rendered = perfetto::render(&sink);
+    assert!(rendered.contains("fleet"), "no fleet tracks in trace");
+    let mut sink2 = TraceSink::new();
+    simulate_fleet_traced(
+        &models,
+        &prof,
+        &policy(),
+        &spec,
+        Some(&mut sink2),
+    )
+    .unwrap();
+    assert_eq!(rendered, perfetto::render(&sink2));
+}
+
+#[test]
+fn elastic_scaling_breathes_and_stays_conservative() {
+    // bursty load against an elastic fleet: the active set must grow
+    // past the floor, park again, and never lose a request
+    let prof = TrafficProfile {
+        pattern: ArrivalPattern::Bursty,
+        ..profile(3000.0, 0.1)
+    };
+    let spec = FleetSpec {
+        instances: 4,
+        policy: DispatchPolicy::Jsq,
+        elastic: true,
+        scale_up_depth: 2,
+        min_active: 1,
+    };
+    let report =
+        simulate_fleet(&homogeneous(4), &prof, &policy(), &spec)
+            .unwrap();
+    assert!(report.conserves());
+    assert!(report.scale_ups > 0, "elastic fleet never scaled up");
+    assert!(
+        report.peak_active > 1,
+        "peak active never left the floor"
+    );
+    assert!(
+        report.peak_active <= 4,
+        "active set exceeded the fleet size"
+    );
+}

@@ -46,7 +46,7 @@ else
 fi
 mkdir -p "$outdir"
 
-for bench in dse_throughput dse_scale timeline_build traffic_sim; do
+for bench in dse_throughput dse_scale timeline_build traffic_sim fleet_sim; do
   echo "== $bench" >&2
   json="$(cargo bench --manifest-path rust/Cargo.toml --bench "$bench" \
             2>/dev/null | grep '^{' | tail -1)"

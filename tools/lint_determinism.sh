@@ -30,6 +30,7 @@ cd "$(dirname "$0")/.."
 scope=(
   rust/src/timeline
   rust/src/traffic
+  rust/src/fleet
   rust/src/faults
   rust/src/dse
   rust/src/scenario
